@@ -1,0 +1,84 @@
+//! Coordinated FL (CO-FL): the paper's §6.1 extension, live.
+//!
+//! Demonstrates the developer programming model: CO-FL is *derived* from
+//! H-FL by TAG changes (coordinator role + channels + `replica`) and chain
+//! surgery on the inherited role workflows (Fig 9) — no core-library edits.
+//! Then runs the Fig 10 scenario: a straggling aggregator link congests
+//! from round 6; the coordinator detects it and excludes the straggler with
+//! binary backoff.
+//!
+//! ```bash
+//! cargo run --release --example coordinated_fl -- [rounds]
+//! ```
+
+use flame::metrics::fmt_vtime;
+use flame::roles::{aggregator, global};
+use flame::sim::{run_fig10, SimOptions};
+use flame::workflow::Tasklet;
+
+fn main() -> anyhow::Result<()> {
+    let rounds: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(36);
+
+    // ---- the chain surgery of Fig 9, shown explicitly -------------------
+    let mut chain = global::base_chain();
+    println!("H-FL global aggregator chain : {:?}", chain.aliases());
+    chain.insert_before(
+        "select",
+        Tasklet::new("get_coord_ends", |_c: &mut global::GlobalCtx| Ok(())),
+    )?;
+    chain.remove("end_of_train")?;
+    println!("CO-FL global (after surgery) : {:?}", chain.aliases());
+
+    let mut agg = aggregator::base_chain();
+    println!("H-FL aggregator chain        : {:?}", agg.aliases());
+    agg.insert_before(
+        "recv_global",
+        Tasklet::new("get_assignment", |_c: &mut aggregator::AggregatorCtx| Ok(())),
+    )?;
+    agg.insert_after(
+        "upload",
+        Tasklet::new("report", |_c: &mut aggregator::AggregatorCtx| Ok(())),
+    )?;
+    println!("CO-FL aggregator (surgery)   : {:?}\n", agg.aliases());
+
+    // ---- the Fig 10 experiment ------------------------------------------
+    println!("running Fig 10 scenario ({rounds} rounds, congestion from round 6)...");
+    let o = SimOptions::mock();
+    let (hfl, cofl) = run_fig10(rounds, &o)?;
+
+    println!("\nround  H-FL time  CO-FL time  CO-FL active aggs");
+    let h = hfl.metrics.series("round_time_s");
+    let c = cofl.metrics.series("round_time_s");
+    let a = cofl.metrics.series("active_aggregators");
+    for i in 0..h.len().min(c.len()) {
+        println!(
+            "{:>5}  {:>9}  {:>10}  {:>4}",
+            i,
+            fmt_vtime((h[i].1 * 1e6) as u64),
+            fmt_vtime((c[i].1 * 1e6) as u64),
+            a.get(i).map(|x| x.1 as u64).unwrap_or(0),
+        );
+    }
+
+    let mean = |s: &[(u64, f64)], lo: usize| -> f64 {
+        let xs = &s[lo..];
+        xs.iter().map(|(_, v)| v).sum::<f64>() / xs.len() as f64
+    };
+    let h_tail = mean(&h, 8);
+    let c_tail = mean(&c, 8);
+    println!(
+        "\npost-congestion mean round time: H-FL {:.2}s, CO-FL {:.2}s ({:.1}x better)",
+        h_tail,
+        c_tail,
+        h_tail / c_tail
+    );
+    println!(
+        "total virtual training time:     H-FL {:.1}s, CO-FL {:.1}s",
+        hfl.vtime_s, cofl.vtime_s
+    );
+    anyhow::ensure!(c_tail < h_tail, "CO-FL load balancing had no effect");
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! End-to-end driver: federated training over the REAL AOT artifacts.
+//!
+//! Proves all three layers compose: the Rust coordinator (L3) expands the
+//! TAG, deploys worker threads, and drives rounds whose numerics — trainer
+//! SGD steps, evaluation, and the Pallas aggregation kernel — execute
+//! through the PJRT runtime from `artifacts/*.hlo.txt` (L2/L1, lowered once
+//! by `make artifacts`). Python is not on this path.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example e2e_train -- [rounds] [trainers] [model]
+//! ```
+//!
+//! Writes the loss/accuracy curve to `bench_out/e2e_<model>.csv` and prints
+//! the table recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::Arc;
+
+use flame::channel::Backend;
+use flame::control::{Controller, JobOptions};
+use flame::data::Partition;
+use flame::json::Json;
+use flame::runtime::{ArtifactSpec, Compute, PjrtPool};
+use flame::store::Store;
+use flame::topo;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rounds: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(40);
+    let trainers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(10);
+    let model = args.get(2).cloned().unwrap_or_else(|| "mlp".to_string());
+
+    anyhow::ensure!(
+        ArtifactSpec::available(),
+        "artifacts/ not built — run `make artifacts` first"
+    );
+    let artifacts = ArtifactSpec::load(ArtifactSpec::default_dir())?;
+    let m = artifacts.model(&model)?;
+    println!(
+        "model '{model}': {} params ({} padded), batch {}, agg_k {}",
+        m.spec.d, m.spec.d_pad, artifacts.batch, artifacts.agg_k
+    );
+
+    let threads = std::thread::available_parallelism()?.get().clamp(2, 8);
+    let t0 = std::time::Instant::now();
+    let pool = PjrtPool::load(&artifacts, &model, threads)?;
+    println!(
+        "PJRT pool: {} service threads, {} entry points compiled in {:.2}s",
+        threads,
+        m.entries.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let init = m.spec.init(42);
+    let spec = topo::classical(trainers, Backend::P2p)
+        .name("e2e")
+        .model(&model)
+        .rounds(rounds)
+        .set("lr", Json::Num(0.2))
+        .set("local_steps", 4usize)
+        .set("seed", 42u64)
+        .build();
+
+    let opts = JobOptions::mock()
+        .with_compute(pool.clone() as Arc<dyn Compute>)
+        .with_init(init)
+        .with_time(flame::runtime::ComputeTimeModel::Measured)
+        .with_data(256, 512, Partition::Dirichlet(0.5), 42)
+        .with_sigma(5.0);
+
+    let mut controller = Controller::new(Arc::new(Store::in_memory()));
+    let report = controller.submit(spec, opts)?;
+
+    println!("\nround  loss    accuracy");
+    let loss = report.metrics.series("loss");
+    let acc = report.metrics.series("acc");
+    for ((r, l), (_, a)) in loss.iter().zip(acc.iter()) {
+        println!("{r:>5}  {l:<7.4} {a:.3}");
+    }
+    let (calls, exec_us) = pool.stats();
+    println!(
+        "\n{} PJRT executions, {:.1}ms mean; wall {:.1}s; final loss {:.4}, acc {:.3}",
+        calls,
+        exec_us as f64 / calls.max(1) as f64 / 1e3,
+        report.wall_s,
+        report.final_loss.unwrap_or(f64::NAN),
+        report.final_acc.unwrap_or(f64::NAN),
+    );
+    report
+        .metrics
+        .write_csv(format!("bench_out/e2e_{model}.csv"), &["loss", "acc", "round_time_s"])?;
+    println!("curve written to bench_out/e2e_{model}.csv");
+
+    anyhow::ensure!(
+        report.final_acc.unwrap_or(0.0) > 0.6,
+        "e2e training failed to learn"
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Hierarchical FL with realm-constrained placement (paper Fig 3 + §4.3).
+//!
+//! Reproduces the paper's running example: datasets A,B in a "west" group
+//! and C,D in "east", compute clusters registered independently per region,
+//! and the TAG expansion coupling them at deployment time — datasets only
+//! land on realm-compatible compute.
+//!
+//! ```bash
+//! cargo run --release --example hierarchical_fl
+//! ```
+
+use std::sync::Arc;
+
+use flame::channel::Backend;
+use flame::control::{Controller, JobOptions};
+use flame::json::Json;
+use flame::registry::{ComputeSpec, Registry};
+use flame::store::Store;
+use flame::tag;
+use flame::topo;
+
+fn main() -> anyhow::Result<()> {
+    // The Fig 3a job: 4 datasets in two groups, H-FL over a broker backend.
+    let mut spec = topo::hierarchical(4, 2, Backend::Broker)
+        .name("hfl-fig3")
+        .rounds(8)
+        .set("lr", Json::Num(0.5))
+        .set("local_steps", 2usize)
+        .build();
+    // name the datasets and realms like the paper's example
+    let names = ["A", "B", "C", "D"];
+    let realms = ["us/west", "us/west", "us/east", "us/east"];
+    for (i, d) in spec.datasets.iter_mut().enumerate() {
+        d.name = names[i].into();
+        d.realm = realms[i].into();
+    }
+
+    // Compute registration (§5.2 step 1): two clusters, one per region,
+    // owned by different admins — registered independently of the job.
+    let store = Arc::new(Store::in_memory());
+    let mut controller = Controller::new(store);
+    *controller.registry_mut() = Registry::new();
+    controller.register_compute(ComputeSpec::new("west-dc", "us/west", 16))?;
+    controller.register_compute(ComputeSpec::new("east-dc", "us/east", 16))?;
+    for d in &spec.datasets {
+        controller.register_dataset(d.clone())?;
+    }
+
+    // Show the expansion (Fig 3b-3d): who runs where.
+    let workers = tag::expand(&spec, {
+        // fresh registry with the same clusters for display purposes
+        let mut r = Registry::new();
+        r.register_compute(ComputeSpec::new("west-dc", "us/west", 16));
+        r.register_compute(ComputeSpec::new("east-dc", "us/east", 16));
+        Box::leak(Box::new(r))
+    })?;
+    println!("expanded topology ({} workers):", workers.len());
+    for w in &workers {
+        println!(
+            "  {:<22} on {:<8} groups={:?} dataset={:?}",
+            w.id, w.compute, w.channels, w.dataset
+        );
+    }
+    // realm guarantee: west datasets only on west compute
+    for w in &workers {
+        if let Some(ds) = &w.dataset {
+            let expect = if ["A", "B"].contains(&ds.as_str()) { "west-dc" } else { "east-dc" };
+            anyhow::ensure!(w.compute == expect, "{} placed on {}", w.id, w.compute);
+        }
+    }
+    println!("realm constraints verified: west data on west-dc, east data on east-dc\n");
+
+    // Run it.
+    let report = controller.submit(spec, JobOptions::mock())?;
+    println!(
+        "job {} finished: {} workers, final loss {:.4}, final acc {:.3}",
+        report.job,
+        report.workers,
+        report.final_loss.unwrap_or(f64::NAN),
+        report.final_acc.unwrap_or(f64::NAN)
+    );
+    anyhow::ensure!(report.final_acc.unwrap_or(0.0) > 0.4);
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Hybrid FL vs Classical FL — the paper's §6.2 flexible-backend study.
+//!
+//! 50 trainers in 5 co-location groups, one straggler at 1 Mbps. Classical
+//! FL pushes every model over the broker; Hybrid FL ring-allreduces each
+//! cluster over its fast p2p channel and uploads one copy per cluster. The
+//! per-channel `backend` attribute is the only thing that differs in the
+//! TAG (plus the ring channel) — that is the paper's point.
+//!
+//! ```bash
+//! cargo run --release --example hybrid_fl -- [rounds]
+//! ```
+
+use flame::sim::{run_fig11, time_to_accuracy, upload_mb_per_round, SimOptions};
+
+fn main() -> anyhow::Result<()> {
+    let rounds: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+
+    println!("running Fig 11 scenario ({rounds} rounds, 50 trainers, 5 clusters, 1 Mbps straggler)...");
+    let o = SimOptions::mock();
+    let (cfl, hybrid) = run_fig11(rounds, &o)?;
+
+    println!("\nround  C-FL vtime  C-FL acc  Hybrid vtime  Hybrid acc");
+    let (cv, ca) = (cfl.metrics.series("vtime_s"), cfl.metrics.series("acc"));
+    let (hv, ha) = (hybrid.metrics.series("vtime_s"), hybrid.metrics.series("acc"));
+    for i in 0..cv.len().max(hv.len()) {
+        let g = |s: &[(u64, f64)]| s.get(i).map(|x| format!("{:.2}", x.1)).unwrap_or_default();
+        println!(
+            "{:>5}  {:>10}  {:>8}  {:>12}  {:>10}",
+            i, g(&cv), g(&ca), g(&hv), g(&ha)
+        );
+    }
+
+    // the paper's two headline numbers for this figure
+    let target = 0.74;
+    let t_cfl = time_to_accuracy(&cfl, target);
+    let t_hybrid = time_to_accuracy(&hybrid, target);
+    println!("\ntime to {target} accuracy: C-FL {t_cfl:?}s, Hybrid {t_hybrid:?}s");
+    if let (Some(a), Some(b)) = (t_cfl, t_hybrid) {
+        println!("speedup: {:.2}x (paper reports 2.21x to its target)", a / b);
+    }
+    let cfl_mb = upload_mb_per_round(&cfl, rounds);
+    let hy_mb = upload_mb_per_round(&hybrid, rounds);
+    println!(
+        "upload per round: C-FL {:.1} MB, Hybrid {:.1} MB ({:.0}x less; paper: 250 vs 25 MB)",
+        cfl_mb,
+        hy_mb,
+        cfl_mb / hy_mb
+    );
+    anyhow::ensure!(hybrid.vtime_s < cfl.vtime_s);
+    anyhow::ensure!(hy_mb < cfl_mb);
+    Ok(())
+}

@@ -1,0 +1,124 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO text artifacts + spec.json.
+
+This is the only place Python touches the system: ``make artifacts`` runs it
+once; afterwards the Rust coordinator is self-contained.
+
+Interchange format is HLO **text**, not serialized HloModuleProto — jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the ``xla`` 0.1.6 crate) rejects; the text parser reassigns
+ids and round-trips cleanly.  Lowering goes stablehlo -> XlaComputation with
+``return_tuple=True``; the Rust side unwraps with ``to_tupleN``.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--model mlp] [--models mlp,transformer]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def entry_points(cfg: M.ModelConfig):
+    """(name, fn, example_args) for every artifact of one model config."""
+    B, D = M.BATCH, cfg.d_pad
+    x, y, s = f32(B, M.INPUT_DIM), i32(B), f32()
+    flat = f32(D)
+    return [
+        ("train_step", lambda p, xx, yy, lr: M.train_step(cfg, p, xx, yy, lr),
+         (flat, x, y, s)),
+        ("train_step_prox",
+         lambda p, gp, xx, yy, lr, mu: M.train_step_prox(cfg, p, gp, xx, yy, lr, mu),
+         (flat, flat, x, y, s, s)),
+        ("train_step_dyn",
+         lambda p, gp, h, xx, yy, lr, a: M.train_step_dyn(cfg, p, gp, h, xx, yy, lr, a),
+         (flat, flat, flat, x, y, s, s)),
+        ("grad_step", lambda p, xx, yy: M.grad_step(cfg, p, xx, yy), (flat, x, y)),
+        ("eval_step", lambda p, xx, yy: M.eval_step(cfg, p, xx, yy), (flat, x, y)),
+        # request-path aggregation: XLA-fused form (CPU perf; §Perf L1 #2)
+        ("aggregate", M.aggregate_xla, (f32(M.AGG_K, D), f32(M.AGG_K))),
+        # the Pallas kernel, kept as a validation artifact (TPU production path)
+        ("aggregate_pallas", M.aggregate, (f32(M.AGG_K, D), f32(M.AGG_K))),
+    ]
+
+
+def lower_model(cfg: M.ModelConfig, out_dir: str, spec: dict) -> None:
+    entries = {}
+    for name, fn, args in entry_points(cfg):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+        }
+        print(f"  {fname}: {len(text)} chars")
+    spec["models"][cfg.name] = {
+        "d": cfg.d,
+        "d_pad": cfg.d_pad,
+        "params": [
+            {"name": s.name, "shape": list(s.shape), "offset": s.offset, "size": s.size}
+            for s in cfg.specs
+        ],
+        "entries": entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="mlp",
+                    help="comma-separated: mlp,transformer")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    spec = {
+        "batch": M.BATCH,
+        "input_dim": M.INPUT_DIM,
+        "num_classes": M.NUM_CLASSES,
+        "agg_k": M.AGG_K,
+        "agg_block_d": __import__(
+            "compile.kernels.fedavg", fromlist=["AGG_BLOCK_D"]
+        ).AGG_BLOCK_D,
+        "models": {},
+    }
+    for name in args.models.split(","):
+        cfg = M.get_config(name.strip())
+        print(f"model {cfg.name}: d={cfg.d} d_pad={cfg.d_pad}")
+        lower_model(cfg, args.out, spec)
+
+    with open(os.path.join(args.out, "spec.json"), "w") as f:
+        json.dump(spec, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'spec.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel here is lowered with ``interpret=True`` so the emitted HLO runs
+on the CPU PJRT client that the Rust coordinator uses.  Real-TPU lowering
+would emit Mosaic custom-calls the CPU plugin cannot execute; the BlockSpec
+structure is nevertheless written for TPU (MXU tiles, VMEM-resident blocks) —
+see DESIGN.md section Hardware-Adaptation.
+"""
+
+from .fedavg import fedavg_aggregate, fedavg_aggregate_xla, pick_block, AGG_BLOCK_D
+from .matmul import matmul_pallas
+from .dense import dense, dense_pallas
+
+__all__ = [
+    "fedavg_aggregate",
+    "fedavg_aggregate_xla",
+    "pick_block",
+    "AGG_BLOCK_D",
+    "matmul_pallas",
+    "dense",
+    "dense_pallas",
+]

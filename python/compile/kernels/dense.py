@@ -1,0 +1,58 @@
+"""Fused dense layer on the Pallas matmul, differentiable via custom VJP.
+
+``dense(x, w, b, relu=...)`` computes ``act(x @ w + b)`` where the
+contraction runs on :mod:`matmul`'s tiled Pallas kernel.  ``pallas_call`` has
+no automatic transpose rule, so the backward pass is supplied explicitly —
+and it, too, routes its two contractions (``dx = g @ w.T``,
+``dw = x.T @ g``) through the same Pallas kernel.  The bias-add and
+activation are fused element-wise epilogues that XLA keeps in-register after
+the matmul block; on TPU they would run in-VMEM before the tile is written
+back to HBM, which is the fusion the docstring of :mod:`matmul` budgets for.
+
+Numerics (fwd and grads) are verified against pure-jnp oracles in
+``python/tests/test_kernels.py`` using hypothesis shape sweeps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_pallas
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense_pallas(x, w, b, relu):
+    return _dense_fwd_value(x, w, b, relu)
+
+
+def _dense_fwd_value(x, w, b, relu):
+    y = matmul_pallas(x, w) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def _dense_fwd(x, w, b, relu):
+    y = _dense_fwd_value(x, w, b, relu)
+    # Save the mask rather than the pre-activation: smaller residual.
+    mask = (y > 0.0) if relu else None
+    return y, (x, w, mask)
+
+
+def _dense_bwd(relu, res, g):
+    x, w, mask = res
+    if relu:
+        g = jnp.where(mask, g, 0.0)
+    dx = matmul_pallas(g, w.T)
+    dw = matmul_pallas(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense_pallas.defvjp(_dense_fwd, _dense_bwd)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """Differentiable fused dense layer ``act(x @ w + b)`` on Pallas tiles."""
+    return dense_pallas(x, w, b, relu)

@@ -1,0 +1,100 @@
+"""Weighted FedAvg aggregation as a Pallas kernel (the aggregator hot-spot).
+
+Computes ``out[d] = sum_k w[k] * updates[k, d]`` over a stacked ``[K, D]``
+matrix of client model updates and a ``[K]`` weight vector.  Every aggregator
+role in the Rust coordinator calls the AOT-compiled version of this kernel
+once per round (through ``model.aggregate``), so this is the paper-system's
+single hottest numeric path on the server side.
+
+TPU design (see DESIGN.md section Hardware-Adaptation):
+
+* The grid walks the model dimension ``D`` in ``AGG_BLOCK_D``-wide blocks, so
+  HBM->VMEM traffic is exactly one streaming pass over the update matrix —
+  the op is memory-bandwidth-bound and this schedule is its roofline.
+* Each grid step holds a ``[K, AGG_BLOCK_D]`` f32 tile in VMEM
+  (K=16, AGG_BLOCK_D=2048 -> 128 KiB, far inside ~16 MiB VMEM; double
+  buffering by the pipeline still fits >60 blocks).
+* The per-block compute is a ``[1,K] x [K,block]`` contraction which maps
+  directly onto the MXU systolic array.
+
+Lowered with ``interpret=True`` for CPU PJRT execution; numerics are verified
+against the pure-jnp oracle in ``ref.py`` by ``python/tests/test_kernels.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Padding quantum (in f32 elements) for the model dimension. The Rust side
+# pads flattened model vectors to a multiple of this (spec.json carries the
+# padded size), so no edge-block masking is ever needed.
+AGG_BLOCK_D = 2048
+
+# Largest per-grid-step block (f32 elements). K=16 rows of 49152 f32 is a
+# 3 MiB VMEM tile — comfortably double-bufferable within ~16 MiB VMEM while
+# keeping the grid short (perf log: EXPERIMENTS.md §Perf, L1 change #1).
+MAX_BLOCK_D = 49152
+
+
+def pick_block(d: int) -> int:
+    """Largest multiple of ``AGG_BLOCK_D`` that divides ``d`` and fits the
+    VMEM tile budget. Fewer, larger grid steps = less pipeline overhead on
+    TPU and far less interpret-mode overhead on CPU."""
+    best = AGG_BLOCK_D
+    m = AGG_BLOCK_D
+    while m <= MAX_BLOCK_D:
+        if d % m == 0:
+            best = m
+        m += AGG_BLOCK_D
+    return best
+
+
+def _fedavg_kernel(u_ref, w_ref, o_ref):
+    """One grid step: o[block] = w @ u[:, block]."""
+    u = u_ref[...]  # [K, block]
+    w = w_ref[...]  # [K]
+    # [K] x [K, block] contraction -> [block]; preferred MXU path on TPU.
+    o_ref[...] = jnp.dot(w, u, preferred_element_type=jnp.float32)
+
+
+def fedavg_aggregate(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted sum of ``K`` stacked flat model updates (Pallas kernel).
+
+    Args:
+      updates: ``[K, D]`` f32, ``D`` a multiple of ``AGG_BLOCK_D``.
+      weights: ``[K]`` f32 aggregation weights (the caller normalizes; rows
+        beyond the live client count carry weight 0 so padding is free).
+
+    Returns:
+      ``[D]`` f32 aggregated update.
+    """
+    k, d = updates.shape
+    if d % AGG_BLOCK_D != 0:
+        raise ValueError(
+            f"model dim {d} must be padded to a multiple of {AGG_BLOCK_D}"
+        )
+    block = pick_block(d)
+    grid = (d // block,)
+    return pl.pallas_call(
+        _fedavg_kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, block), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=True,
+    )(updates, weights)
+
+
+def fedavg_aggregate_xla(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """The same contraction expressed directly for XLA fusion.
+
+    Used for the **CPU request-path artifact**: interpret-mode Pallas
+    carries per-grid-step overhead the CPU backend cannot elide, while this
+    form fuses to a single memory-bound pass (~200x faster on CPU; see
+    EXPERIMENTS.md §Perf, L1 change #2). On a real TPU the Mosaic-lowered
+    Pallas kernel above is the production path; both are cross-verified to
+    the same oracle."""
+    return jnp.einsum("k,kd->d", weights, updates)

@@ -1,0 +1,77 @@
+"""Tiled Pallas matmul — the shared contraction primitive for dense layers.
+
+The trainer-side model (Layer 2) routes every dense contraction — forward,
+input-gradient and weight-gradient — through this one kernel, so the whole
+training step's FLOPs land on a single MXU-shaped code path.
+
+TPU design (DESIGN.md section Hardware-Adaptation):
+
+* Tiles are ``(BM, BN) = (128, 128)`` output blocks — the MXU systolic array
+  shape — with the contraction dimension ``K`` held VMEM-resident per block
+  ("K-resident" schedule).  For the model sizes in this repo
+  (K <= 1024) a block set costs ``(BM*K + K*BN + BM*BN) * 4`` bytes
+  <= 1.1 MiB, comfortably inside VMEM with double buffering.
+* Because K is resident there is no accumulation carry between grid steps,
+  so the pipeline is a pure read->MXU->write stream; HBM traffic is
+  ``M*K + (M/BM)*K*N + M*N`` words (x is re-read once per N-block), the
+  minimum for a K-resident schedule.
+* Callers pad M/N to tile multiples (zero padding is exact for matmul), so
+  no masking is required in the kernel body.
+
+``interpret=True`` keeps the lowering executable on the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped output tile.
+BM = 128
+BN = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...]  # [BM, K]
+    w = w_ref[...]  # [K, BN]
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul_pallas(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``x @ w`` via the tiled Pallas kernel.
+
+    ``x``: [M, K] f32, ``w``: [K, N] f32 -> [M, N] f32.  M and N are padded
+    to the 128-tile internally (zero padding, exact); K is taken as-is and
+    kept VMEM-resident.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    xp = _pad_to(x, 0, BM)
+    wp = _pad_to(w, 1, BN)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    grid = (mp // BM, np_ // BN)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]

@@ -1,0 +1,23 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the ground truth the test suite (and the Rust cross-checks) compare
+against.  They deliberately use the most literal jnp expression of each op —
+no tiling, no padding, no fusion — so a mismatch always implicates the kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_aggregate_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """``out[d] = sum_k w[k] * updates[k, d]`` — literal einsum."""
+    return jnp.einsum("k,kd->d", weights, updates)
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.matmul(x, w)
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    y = jnp.matmul(x, w) + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y

@@ -1,0 +1,302 @@
+"""Layer-2 JAX compute graphs: trainer-side model steps + server aggregation.
+
+Everything a Flame worker executes numerically is defined here as a pure JAX
+function over a *flat* f32 parameter vector, then AOT-lowered by ``aot.py``.
+The flat-vector calling convention is the L2/L3 contract:
+
+* the Rust coordinator owns model state as one ``Vec<f32>`` (padded to a
+  multiple of ``kernels.fedavg.AGG_BLOCK_D``),
+* channels move that vector between roles,
+* aggregators feed stacks of those vectors straight into the Pallas
+  aggregation kernel.
+
+Entry points (each becomes one ``artifacts/<name>.hlo.txt``):
+
+========================  =====================================================
+``train_step``            one SGD step: ``(flat, x, y, lr) -> (flat', loss)``
+``train_step_prox``       FedProx: + ``mu/2 * ||w - w_global||^2`` proximal term
+``train_step_dyn``        FedDyn client step with drift-correction state ``h``
+``eval_step``             ``(flat, x, y) -> (sum_loss, num_correct)``
+``grad_step``             bare gradient (for SCAFFOLD-style extensions/tests)
+``aggregate``             Pallas weighted aggregation over ``[K, D]`` updates
+========================  =====================================================
+
+Two model bodies are provided: ``mlp`` (the default, used by all experiments —
+its dense layers run fwd+bwd on the Pallas matmul kernel) and a small
+``transformer`` classifier (pure-jnp attention; patch-embedded 28x28 input)
+to show the TAG machinery is model-agnostic.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense
+from .kernels.fedavg import AGG_BLOCK_D, fedavg_aggregate, fedavg_aggregate_xla
+
+# Default batch size baked into the AOT artifacts (static HLO shapes).
+BATCH = 32
+# Max clients aggregated per kernel call; Rust folds larger cohorts by
+# chunking (weighted sums are associative).
+AGG_K = 16
+INPUT_DIM = 784
+NUM_CLASSES = 10
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    offset: int
+    size: int
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    specs: tuple  # tuple[ParamSpec, ...]
+    d: int        # true parameter count
+    d_pad: int    # padded to AGG_BLOCK_D multiple
+    forward: Callable  # (params: dict, x: [B, INPUT_DIM]) -> logits [B, C]
+
+
+def _layout(shapes):
+    """Assign flat-vector offsets to a list of (name, shape) pairs."""
+    specs, off = [], 0
+    for name, shape in shapes:
+        size = 1
+        for s in shape:
+            size *= s
+        specs.append(ParamSpec(name, tuple(shape), off, size))
+        off += size
+    d = off
+    d_pad = ((d + AGG_BLOCK_D - 1) // AGG_BLOCK_D) * AGG_BLOCK_D
+    return tuple(specs), d, d_pad
+
+
+def unflatten(flat: jax.Array, specs) -> dict:
+    """Slice a flat [D_pad] vector into named parameter arrays (static slices,
+    hence differentiable and fusion-friendly)."""
+    return {
+        s.name: jax.lax.slice(flat, (s.offset,), (s.offset + s.size,)).reshape(s.shape)
+        for s in specs
+    }
+
+
+def flatten(params: dict, cfg: "ModelConfig") -> jax.Array:
+    flat = jnp.concatenate([params[s.name].reshape(-1) for s in cfg.specs])
+    return jnp.pad(flat, (0, cfg.d_pad - cfg.d))
+
+
+# --------------------------------------------------------------------------
+# MLP body (Pallas dense layers)
+# --------------------------------------------------------------------------
+
+MLP_HIDDEN = (256, 128)
+
+
+def _mlp_shapes(hidden=MLP_HIDDEN):
+    dims = (INPUT_DIM,) + tuple(hidden) + (NUM_CLASSES,)
+    shapes = []
+    for i in range(len(dims) - 1):
+        shapes.append((f"w{i}", (dims[i], dims[i + 1])))
+        shapes.append((f"b{i}", (dims[i + 1],)))
+    return shapes
+
+
+def _mlp_forward(params: dict, x: jax.Array) -> jax.Array:
+    n_layers = len(MLP_HIDDEN) + 1
+    h = x
+    for i in range(n_layers):
+        last = i == n_layers - 1
+        h = dense(h, params[f"w{i}"], params[f"b{i}"], relu=not last)
+    return h
+
+
+# --------------------------------------------------------------------------
+# Tiny transformer body (patch embedding + self-attention blocks)
+# --------------------------------------------------------------------------
+
+TFM_PATCH = 16      # 49 patches of 16 pixels from the 784-dim input
+TFM_SEQ = INPUT_DIM // TFM_PATCH
+TFM_DIM = 64
+TFM_HEADS = 4
+TFM_LAYERS = 2
+TFM_FF = 128
+
+
+def _tfm_shapes():
+    shapes = [
+        ("embed", (TFM_PATCH, TFM_DIM)),
+        ("pos", (TFM_SEQ, TFM_DIM)),
+    ]
+    for l in range(TFM_LAYERS):
+        shapes += [
+            (f"l{l}_wq", (TFM_DIM, TFM_DIM)),
+            (f"l{l}_wk", (TFM_DIM, TFM_DIM)),
+            (f"l{l}_wv", (TFM_DIM, TFM_DIM)),
+            (f"l{l}_wo", (TFM_DIM, TFM_DIM)),
+            (f"l{l}_ln1_g", (TFM_DIM,)),
+            (f"l{l}_ln1_b", (TFM_DIM,)),
+            (f"l{l}_ff1_w", (TFM_DIM, TFM_FF)),
+            (f"l{l}_ff1_b", (TFM_FF,)),
+            (f"l{l}_ff2_w", (TFM_FF, TFM_DIM)),
+            (f"l{l}_ff2_b", (TFM_DIM,)),
+            (f"l{l}_ln2_g", (TFM_DIM,)),
+            (f"l{l}_ln2_b", (TFM_DIM,)),
+        ]
+    shapes += [("head_w", (TFM_DIM, NUM_CLASSES)), ("head_b", (NUM_CLASSES,))]
+    return shapes
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, wq, wk, wv, wo):
+    b, s, d = x.shape
+    hd = d // TFM_HEADS
+
+    def split(h):
+        return h.reshape(b, s, TFM_HEADS, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(x @ wq), split(x @ wk), split(x @ wv)
+    att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(hd), axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ wo
+
+
+def _tfm_forward(params: dict, x: jax.Array) -> jax.Array:
+    b = x.shape[0]
+    h = x.reshape(b, TFM_SEQ, TFM_PATCH) @ params["embed"] + params["pos"]
+    for l in range(TFM_LAYERS):
+        p = lambda k: params[f"l{l}_{k}"]
+        a = _attention(
+            _layer_norm(h, p("ln1_g"), p("ln1_b")),
+            p("wq"), p("wk"), p("wv"), p("wo"),
+        )
+        h = h + a
+        ff_in = _layer_norm(h, p("ln2_g"), p("ln2_b"))
+        ff = jnp.maximum(ff_in @ p("ff1_w") + p("ff1_b"), 0.0) @ p("ff2_w") + p("ff2_b")
+        h = h + ff
+    pooled = jnp.mean(h, axis=1)
+    return pooled @ params["head_w"] + params["head_b"]
+
+
+# --------------------------------------------------------------------------
+# Config registry
+# --------------------------------------------------------------------------
+
+
+def _make_config(name):
+    if name == "mlp":
+        specs, d, d_pad = _layout(_mlp_shapes())
+        return ModelConfig("mlp", specs, d, d_pad, _mlp_forward)
+    if name == "transformer":
+        specs, d, d_pad = _layout(_tfm_shapes())
+        return ModelConfig("transformer", specs, d, d_pad, _tfm_forward)
+    raise ValueError(f"unknown model {name!r}")
+
+
+_CONFIGS = {}
+
+
+def get_config(name: str = "mlp") -> ModelConfig:
+    if name not in _CONFIGS:
+        _CONFIGS[name] = _make_config(name)
+    return _CONFIGS[name]
+
+
+def init_params(cfg: ModelConfig, key) -> jax.Array:
+    """He-initialised flat parameter vector (python-side use: tests, oracle
+    runs).  The Rust coordinator performs its own equivalent init from
+    spec.json — only the *distribution* needs to match, not the draws."""
+    parts = []
+    for s in cfg.specs:
+        key, sub = jax.random.split(key)
+        if len(s.shape) >= 2:
+            fan_in = s.shape[0]
+            parts.append(
+                jax.random.normal(sub, s.shape) * jnp.sqrt(2.0 / fan_in)
+            )
+        elif s.name.endswith(("_g", "pos")) or s.name.startswith("pos"):
+            parts.append(jnp.ones(s.shape) if s.name.endswith("_g") else jnp.zeros(s.shape))
+        else:
+            parts.append(jnp.zeros(s.shape))
+    flat = jnp.concatenate([p.reshape(-1) for p in parts])
+    return jnp.pad(flat, (0, cfg.d_pad - cfg.d))
+
+
+# --------------------------------------------------------------------------
+# Loss / steps
+# --------------------------------------------------------------------------
+
+
+def _loss(cfg: ModelConfig, flat, x, y):
+    """Mean softmax cross-entropy over the batch."""
+    logits = cfg.forward(unflatten(flat, cfg.specs), x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, NUM_CLASSES)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def train_step(cfg: ModelConfig, flat, x, y, lr):
+    """Plain SGD step. Returns ``(new_flat, loss)``."""
+    loss, g = jax.value_and_grad(lambda f: _loss(cfg, f, x, y))(flat)
+    return flat - lr * g, loss
+
+
+def train_step_prox(cfg: ModelConfig, flat, gflat, x, y, lr, mu):
+    """FedProx client step: adds ``mu * (w - w_global)`` to the gradient."""
+    loss, g = jax.value_and_grad(lambda f: _loss(cfg, f, x, y))(flat)
+    g = g + mu * (flat - gflat)
+    return flat - lr * g, loss
+
+
+def train_step_dyn(cfg: ModelConfig, flat, gflat, h, x, y, lr, alpha):
+    """FedDyn client step with per-client drift state ``h``:
+    grad' = grad - h + alpha*(w - w_global);  h' = h - alpha*(w' - w_global).
+    Returns ``(new_flat, new_h, loss)``."""
+    loss, g = jax.value_and_grad(lambda f: _loss(cfg, f, x, y))(flat)
+    g = g - h + alpha * (flat - gflat)
+    new_flat = flat - lr * g
+    new_h = h - alpha * (new_flat - gflat)
+    return new_flat, new_h, loss
+
+
+def grad_step(cfg: ModelConfig, flat, x, y):
+    """Bare mean-batch gradient (SCAFFOLD-style control-variate building
+    block and a finite-difference test target)."""
+    loss, g = jax.value_and_grad(lambda f: _loss(cfg, f, x, y))(flat)
+    return g, loss
+
+
+def eval_step(cfg: ModelConfig, flat, x, y):
+    """Returns ``(sum_loss, num_correct)`` over one batch (f32 scalars so the
+    caller can accumulate across batches)."""
+    logits = cfg.forward(unflatten(flat, cfg.specs), x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, NUM_CLASSES)
+    sum_loss = -jnp.sum(jnp.sum(onehot * logp, axis=-1))
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return sum_loss, correct
+
+
+def aggregate(updates, weights):
+    """Server-side weighted aggregation (Pallas kernel; see kernels.fedavg)."""
+    return fedavg_aggregate(updates, weights)
+
+
+def aggregate_xla(updates, weights):
+    """XLA-fused aggregation — the CPU request-path artifact (perf; see
+    kernels.fedavg.fedavg_aggregate_xla)."""
+    return fedavg_aggregate_xla(updates, weights)

@@ -1,0 +1,74 @@
+"""AOT path: lowering produces loadable HLO text + a consistent spec."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def mlp():
+    return M.get_config("mlp")
+
+
+class TestLowering:
+    def test_every_entry_lowers_to_clean_hlo(self, mlp):
+        for name, fn, args in aot.entry_points(mlp):
+            text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+            assert text.startswith("HloModule"), name
+            assert "custom-call" not in text, f"{name} has a custom-call (CPU PJRT cannot run it)"
+
+    def test_lowered_aggregate_matches_eager(self, mlp):
+        # Round-trip the same computation the Rust side will execute.
+        k = M.AGG_K
+        u = jax.random.normal(jax.random.PRNGKey(0), (k, mlp.d_pad))
+        w = jnp.ones((k,)) / k
+        eager = M.aggregate(u, w)
+        compiled = jax.jit(M.aggregate)(u, w)
+        np.testing.assert_allclose(eager, compiled, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "spec.json")),
+    reason="artifacts/ not built (run `make artifacts`)",
+)
+class TestArtifacts:
+    def test_spec_matches_model_config(self, mlp):
+        spec = json.load(open(os.path.join(ART, "spec.json")))
+        assert spec["batch"] == M.BATCH
+        assert spec["input_dim"] == M.INPUT_DIM
+        assert spec["agg_k"] == M.AGG_K
+        m = spec["models"]["mlp"]
+        assert m["d"] == mlp.d
+        assert m["d_pad"] == mlp.d_pad
+        assert len(m["params"]) == len(mlp.specs)
+        for got, want in zip(m["params"], mlp.specs):
+            assert got["name"] == want.name
+            assert tuple(got["shape"]) == want.shape
+            assert got["offset"] == want.offset
+
+    def test_artifact_files_exist_and_are_hlo(self):
+        spec = json.load(open(os.path.join(ART, "spec.json")))
+        for model in spec["models"].values():
+            for entry in model["entries"].values():
+                path = os.path.join(ART, entry["file"])
+                assert os.path.exists(path), path
+                with open(path) as f:
+                    head = f.read(16)
+                assert head.startswith("HloModule")
+
+    def test_entry_input_shapes_recorded(self):
+        spec = json.load(open(os.path.join(ART, "spec.json")))
+        m = spec["models"]["mlp"]
+        ts = m["entries"]["train_step"]["inputs"]
+        assert ts[0]["shape"] == [m["d_pad"]]
+        assert ts[1]["shape"] == [spec["batch"], spec["input_dim"]]
+        agg = m["entries"]["aggregate"]["inputs"]
+        assert agg[0]["shape"] == [spec["agg_k"], m["d_pad"]]

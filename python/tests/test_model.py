@@ -1,0 +1,211 @@
+"""L2 model-step semantics: layout, training dynamics, FL step variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.fedavg import AGG_BLOCK_D
+
+
+@pytest.fixture(scope="module")
+def mlp():
+    return M.get_config("mlp")
+
+
+@pytest.fixture(scope="module")
+def tfm():
+    return M.get_config("transformer")
+
+
+def _batch(seed, cfg=None):
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (M.BATCH, M.INPUT_DIM))
+    y = jax.random.randint(ky, (M.BATCH,), 0, M.NUM_CLASSES)
+    return x, y
+
+
+# ---------------------------------------------------------------- layout ---
+
+
+class TestLayout:
+    def test_mlp_param_count(self, mlp):
+        # 784*256+256 + 256*128+128 + 128*10+10
+        assert mlp.d == 235146
+        assert mlp.d_pad % AGG_BLOCK_D == 0
+        assert mlp.d_pad >= mlp.d
+
+    def test_offsets_are_contiguous(self, mlp, tfm):
+        for cfg in (mlp, tfm):
+            off = 0
+            for s in cfg.specs:
+                assert s.offset == off
+                assert s.size == int(np.prod(s.shape))
+                off += s.size
+            assert off == cfg.d
+
+    def test_flatten_unflatten_roundtrip(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(0))
+        params = M.unflatten(flat, mlp.specs)
+        back = M.flatten(params, mlp)
+        np.testing.assert_allclose(flat, back)
+
+    def test_unflatten_shapes(self, mlp):
+        params = M.unflatten(jnp.zeros(mlp.d_pad), mlp.specs)
+        assert params["w0"].shape == (784, 256)
+        assert params["b2"].shape == (10,)
+
+
+# -------------------------------------------------------------- training ---
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("name", ["mlp", "transformer"])
+    def test_loss_decreases_on_fixed_batch(self, name):
+        cfg = M.get_config(name)
+        flat = M.init_params(cfg, jax.random.PRNGKey(0))
+        x, y = _batch(0)
+        step = jax.jit(lambda f: M.train_step(cfg, f, x, y, jnp.float32(0.1)))
+        _, loss0 = step(flat)
+        for _ in range(20):
+            flat, loss = step(flat)
+        assert float(loss) < float(loss0) * 0.7, (float(loss0), float(loss))
+
+    def test_initial_loss_near_uniform(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(1))
+        x, y = _batch(1)
+        _, loss = M.train_step(mlp, flat, x, y, jnp.float32(0.0))
+        # He-init logits over std-normal input have O(1) spread, so the loss
+        # sits near (within a couple nats of) the uniform-prediction loss.
+        assert abs(float(loss) - np.log(M.NUM_CLASSES)) < 2.0
+
+    def test_zero_lr_is_identity(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(2))
+        x, y = _batch(2)
+        new, _ = M.train_step(mlp, flat, x, y, jnp.float32(0.0))
+        np.testing.assert_allclose(new, flat)
+
+    def test_update_matches_grad_step(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(3))
+        x, y = _batch(3)
+        lr = jnp.float32(0.05)
+        new, loss_a = M.train_step(mlp, flat, x, y, lr)
+        g, loss_b = M.grad_step(mlp, flat, x, y)
+        np.testing.assert_allclose(new, flat - lr * g, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(loss_a, loss_b, rtol=1e-6)
+
+    def test_grad_vs_finite_difference_random_coords(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(4))
+        x, y = _batch(4)
+        g, _ = M.grad_step(mlp, flat, x, y)
+        f = lambda fl: M.grad_step(mlp, fl, x, y)[1]
+        eps = 1e-2
+        rng = np.random.default_rng(0)
+        checked = 0
+        for idx in rng.integers(0, mlp.d, size=6):
+            basis = jnp.zeros(mlp.d_pad).at[int(idx)].set(eps)
+            fd = (f(flat + basis) - f(flat - basis)) / (2 * eps)
+            if abs(float(fd)) < 1e-4:
+                continue  # flat direction, fd noise dominates
+            np.testing.assert_allclose(g[int(idx)], fd, rtol=0.1, atol=1e-3)
+            checked += 1
+        assert checked >= 1
+
+    def test_padding_tail_untouched(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(5))
+        x, y = _batch(5)
+        new, _ = M.train_step(mlp, flat, x, y, jnp.float32(0.1))
+        np.testing.assert_allclose(new[mlp.d:], jnp.zeros(mlp.d_pad - mlp.d))
+
+
+class TestProxAndDyn:
+    def test_prox_mu_zero_equals_sgd(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(6))
+        g = M.init_params(mlp, jax.random.PRNGKey(7))
+        x, y = _batch(6)
+        lr = jnp.float32(0.05)
+        a, la = M.train_step(mlp, flat, x, y, lr)
+        b, lb = M.train_step_prox(mlp, flat, g, x, y, lr, jnp.float32(0.0))
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+        np.testing.assert_allclose(la, lb)
+
+    def test_prox_pulls_toward_global(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(8))
+        gflat = jnp.zeros(mlp.d_pad)
+        x, y = _batch(8)
+        lr = jnp.float32(0.05)
+        no_prox, _ = M.train_step_prox(mlp, flat, gflat, x, y, lr, jnp.float32(0.0))
+        prox, _ = M.train_step_prox(mlp, flat, gflat, x, y, lr, jnp.float32(10.0))
+        assert float(jnp.linalg.norm(prox)) < float(jnp.linalg.norm(no_prox))
+
+    def test_dyn_alpha_zero_h_zero_equals_sgd(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(9))
+        gflat = M.init_params(mlp, jax.random.PRNGKey(10))
+        h = jnp.zeros(mlp.d_pad)
+        x, y = _batch(9)
+        lr = jnp.float32(0.05)
+        a, _ = M.train_step(mlp, flat, x, y, lr)
+        b, new_h, _ = M.train_step_dyn(mlp, flat, gflat, h, x, y, lr, jnp.float32(0.0))
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+        np.testing.assert_allclose(new_h, h)
+
+    def test_dyn_h_update_rule(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(11))
+        gflat = M.init_params(mlp, jax.random.PRNGKey(12))
+        h = M.init_params(mlp, jax.random.PRNGKey(13)) * 0.01
+        x, y = _batch(11)
+        lr, alpha = jnp.float32(0.05), jnp.float32(0.1)
+        new_flat, new_h, _ = M.train_step_dyn(mlp, flat, gflat, h, x, y, lr, alpha)
+        np.testing.assert_allclose(
+            new_h, h - alpha * (new_flat - gflat), rtol=1e-5, atol=1e-6
+        )
+
+
+# ------------------------------------------------------------------ eval ---
+
+
+class TestEvalStep:
+    def test_counts_bounded_by_batch(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(14))
+        x, y = _batch(14)
+        sum_loss, correct = M.eval_step(mlp, flat, x, y)
+        assert 0.0 <= float(correct) <= M.BATCH
+        assert float(sum_loss) > 0.0
+
+    def test_perfect_model_counts_all(self, mlp):
+        # Train to near-memorisation of one batch, expect most correct.
+        flat = M.init_params(mlp, jax.random.PRNGKey(15))
+        x, y = _batch(15)
+        step = jax.jit(lambda f: M.train_step(mlp, f, x, y, jnp.float32(0.2)))
+        for _ in range(60):
+            flat, _ = step(flat)
+        _, correct = M.eval_step(mlp, flat, x, y)
+        assert float(correct) >= 0.9 * M.BATCH
+
+    def test_sum_loss_is_batch_times_mean(self, mlp):
+        flat = M.init_params(mlp, jax.random.PRNGKey(16))
+        x, y = _batch(16)
+        sum_loss, _ = M.eval_step(mlp, flat, x, y)
+        _, mean_loss = M.train_step(mlp, flat, x, y, jnp.float32(0.0))
+        np.testing.assert_allclose(
+            float(sum_loss), float(mean_loss) * M.BATCH, rtol=1e-4
+        )
+
+
+# ------------------------------------------------------------- aggregate ---
+
+
+class TestAggregate:
+    def test_uniform_mean(self, mlp):
+        k = M.AGG_K
+        u = jax.random.normal(jax.random.PRNGKey(17), (k, mlp.d_pad))
+        out = M.aggregate(u, jnp.ones((k,)) / k)
+        np.testing.assert_allclose(out, jnp.mean(u, axis=0), rtol=1e-4, atol=1e-5)
+
+    def test_weighted_by_sample_counts(self, mlp):
+        u = jnp.stack([jnp.ones(mlp.d_pad), 3 * jnp.ones(mlp.d_pad)])
+        n = jnp.array([10.0, 30.0])
+        out = M.aggregate(u, n / n.sum())
+        np.testing.assert_allclose(out, 2.5 * jnp.ones(mlp.d_pad), rtol=1e-5)

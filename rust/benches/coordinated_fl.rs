@@ -1,0 +1,66 @@
+//! Figure 10 reproduction: CO-FL load balancing vs H-FL under a straggling
+//! aggregator (paper §6.1).
+//!
+//! 10 trainers, 2 aggregators, congestion on one aggregator's link to the
+//! global aggregator starting at round 6. Regenerates the per-round-time
+//! series of the figure and checks the binary-backoff exclusion timeline.
+//!
+//! ```bash
+//! cargo bench --bench coordinated_fl
+//! ```
+//!
+//! Writes `bench_out/fig10.csv`.
+
+use flame::sim::{run_fig10, SimOptions};
+
+fn main() {
+    let rounds = 36;
+    let o = SimOptions::mock();
+    let t0 = std::time::Instant::now();
+    let (hfl, cofl) = run_fig10(rounds, &o).expect("fig10 scenario failed");
+    println!(
+        "Fig 10 — per-round time under a straggling aggregator ({} rounds, wall {:.1}s)\n",
+        rounds,
+        t0.elapsed().as_secs_f64()
+    );
+
+    let h = hfl.metrics.series("round_time_s");
+    let c = cofl.metrics.series("round_time_s");
+    let a = cofl.metrics.series("active_aggregators");
+
+    let mut csv = String::from("round,hfl_round_time_s,cofl_round_time_s,cofl_active_aggs\n");
+    println!("round  H-FL(s)  CO-FL(s)  active");
+    let mut excluded_rounds = Vec::new();
+    for i in 0..h.len().min(c.len()) {
+        let act = a.get(i).map(|x| x.1).unwrap_or(f64::NAN);
+        if act < 2.0 {
+            excluded_rounds.push(i as u64);
+        }
+        println!("{:>5}  {:>7.2}  {:>8.2}  {:>6}", i, h[i].1, c[i].1, act);
+        csv.push_str(&format!("{},{},{},{}\n", i, h[i].1, c[i].1, act));
+    }
+    std::fs::create_dir_all("bench_out").unwrap();
+    std::fs::write("bench_out/fig10.csv", csv).unwrap();
+
+    let mean = |s: &[(u64, f64)], range: std::ops::Range<usize>| -> f64 {
+        let xs = &s[range.clone()];
+        xs.iter().map(|(_, v)| v).sum::<f64>() / xs.len() as f64
+    };
+    println!("\npre-congestion  mean round: H-FL {:.2}s  CO-FL {:.2}s", mean(&h, 0..6), mean(&c, 0..6));
+    println!(
+        "post-congestion mean round: H-FL {:.2}s  CO-FL {:.2}s  ({:.1}x improvement)",
+        mean(&h, 8..h.len()),
+        mean(&c, 8..c.len()),
+        mean(&h, 8..h.len()) / mean(&c, 8..c.len())
+    );
+    println!("exclusion rounds (binary backoff): {excluded_rounds:?}");
+    println!("paper timeline: detect 6-8, exclude 9, probe 10, exclude 11-12, probe 13, 14-17, 18, 19-26, 27, 28-...");
+    println!("total vtime: H-FL {:.1}s vs CO-FL {:.1}s", hfl.vtime_s, cofl.vtime_s);
+    println!("\nwrote bench_out/fig10.csv");
+
+    assert!(
+        mean(&c, 8..c.len()) < 0.6 * mean(&h, 8..h.len()),
+        "CO-FL did not mitigate the straggler"
+    );
+    assert!(!excluded_rounds.is_empty());
+}

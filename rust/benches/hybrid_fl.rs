@@ -1,0 +1,73 @@
+//! Figure 11 reproduction: Hybrid FL vs Classical FL, accuracy over
+//! wall-clock (paper §6.2).
+//!
+//! 50 trainers, 5 co-location clusters, one straggler at 1 Mbps toward the
+//! broker, 100 Mbps p2p LAN inside clusters. The paper reports a 2.21x
+//! speedup to its target accuracy and 25 vs 250 MB uploaded per round.
+//!
+//! ```bash
+//! cargo bench --bench hybrid_fl
+//! ```
+//!
+//! Writes `bench_out/fig11.csv`.
+
+use flame::sim::{run_fig11, time_to_accuracy, upload_mb_per_round, SimOptions};
+
+fn main() {
+    let rounds = 20;
+    let o = SimOptions::mock();
+    let t0 = std::time::Instant::now();
+    let (cfl, hybrid) = run_fig11(rounds, &o).expect("fig11 scenario failed");
+    println!(
+        "Fig 11 — accuracy over virtual wall-clock ({} rounds, wall {:.1}s)\n",
+        rounds,
+        t0.elapsed().as_secs_f64()
+    );
+
+    let (cv, ca) = (cfl.metrics.series("vtime_s"), cfl.metrics.series("acc"));
+    let (hv, ha) = (hybrid.metrics.series("vtime_s"), hybrid.metrics.series("acc"));
+    let mut csv = String::from("round,cfl_vtime_s,cfl_acc,hybrid_vtime_s,hybrid_acc\n");
+    println!("round  C-FL t(s)  C-FL acc  Hyb t(s)  Hyb acc");
+    for i in 0..cv.len().max(hv.len()) {
+        let g = |s: &[(u64, f64)]| s.get(i).map(|x| x.1);
+        println!(
+            "{:>5}  {:>9.1}  {:>8.3}  {:>8.1}  {:>7.3}",
+            i,
+            g(&cv).unwrap_or(f64::NAN),
+            g(&ca).unwrap_or(f64::NAN),
+            g(&hv).unwrap_or(f64::NAN),
+            g(&ha).unwrap_or(f64::NAN)
+        );
+        csv.push_str(&format!(
+            "{},{},{},{},{}\n",
+            i,
+            g(&cv).unwrap_or(f64::NAN),
+            g(&ca).unwrap_or(f64::NAN),
+            g(&hv).unwrap_or(f64::NAN),
+            g(&ha).unwrap_or(f64::NAN)
+        ));
+    }
+    std::fs::create_dir_all("bench_out").unwrap();
+    std::fs::write("bench_out/fig11.csv", csv).unwrap();
+
+    // headline numbers (paper: 2.21x speedup; 25 vs 250 MB/round)
+    let target = 0.74;
+    let t_c = time_to_accuracy(&cfl, target);
+    let t_h = time_to_accuracy(&hybrid, target);
+    println!("\ntime to accuracy {target}: C-FL {t_c:?}  Hybrid {t_h:?}");
+    let speedup = match (t_c, t_h) {
+        (Some(a), Some(b)) => a / b,
+        _ => cfl.vtime_s / hybrid.vtime_s, // fall back to total-time ratio
+    };
+    println!("speedup: {speedup:.2}x  (paper: 2.21x)");
+    let cfl_mb = upload_mb_per_round(&cfl, rounds);
+    let hy_mb = upload_mb_per_round(&hybrid, rounds);
+    println!(
+        "upload per round: C-FL {cfl_mb:.1} MB vs Hybrid {hy_mb:.1} MB = {:.1}x less (paper: 250 vs 25 = 10x)",
+        cfl_mb / hy_mb
+    );
+    println!("\nwrote bench_out/fig11.csv");
+
+    assert!(speedup > 1.5, "hybrid speedup {speedup} too small");
+    assert!(cfl_mb / hy_mb > 5.0, "upload saving too small");
+}

@@ -1,0 +1,110 @@
+//! Runtime micro-benchmarks: PJRT execution overhead + aggregation
+//! throughput (the L3 hot path feeding the L1 kernel).
+//!
+//! Measures, per entry point: mean latency over the PJRT pool vs the
+//! pure-Rust mock; aggregation bandwidth (GB/s of update data reduced) for
+//! the Pallas artifact vs the Rust `weighted_sum` oracle; and artifact
+//! load+compile time (paid once, never on the request path).
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench runtime
+//! ```
+
+use std::time::Instant;
+
+use flame::data::{make_federated, Partition};
+use flame::model::weighted_sum;
+use flame::runtime::{ArtifactSpec, Compute, MockCompute, PjrtPool};
+
+fn timeit<R>(n: usize, mut f: impl FnMut() -> R) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..n {
+        std::hint::black_box(f());
+    }
+    t0.elapsed().as_secs_f64() / n as f64
+}
+
+fn bench_compute(name: &str, c: &dyn Compute, flat: &[f32], x: &[f32], y: &[i32]) {
+    let reps = 20;
+    let t_train = timeit(reps, || c.train_step(flat, x, y, 0.1).unwrap());
+    let t_eval = timeit(reps, || c.eval_step(flat, x, y).unwrap());
+    let t_grad = timeit(reps, || c.grad_step(flat, x, y).unwrap());
+    let k = c.agg_k();
+    let rows: Vec<Vec<f32>> = (0..k).map(|_| flat.to_vec()).collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let w = vec![1.0 / k as f32; k];
+    let t_agg = timeit(reps, || c.aggregate_k(&refs, &w).unwrap());
+    let agg_gb = (k * flat.len() * 4) as f64 / 1e9;
+    println!(
+        "{:<6} {:>12.2} {:>12.2} {:>12.2} {:>12.2} {:>12.2}",
+        name,
+        t_train * 1e3,
+        t_grad * 1e3,
+        t_eval * 1e3,
+        t_agg * 1e3,
+        agg_gb / t_agg
+    );
+}
+
+fn main() {
+    let (shards, _) = make_federated(3, 1, 64, 64, Partition::Iid, 2.0);
+    let idx: Vec<usize> = (0..32).collect();
+    let (x, y) = shards[0].gather_batch(&idx, 32);
+
+    println!(
+        "{:<6} {:>12} {:>12} {:>12} {:>12} {:>12}",
+        "impl", "train(ms)", "grad(ms)", "eval(ms)", "agg(ms)", "agg GB/s"
+    );
+
+    let mock = MockCompute::default_mlp();
+    let flat = vec![0.01f32; mock.d_pad()];
+    bench_compute("mock", &mock, &flat, &x, &y);
+
+    if !ArtifactSpec::available() {
+        println!("(artifacts/ not built — skipping PJRT rows; run `make artifacts`)");
+        return;
+    }
+    let spec = ArtifactSpec::load(ArtifactSpec::default_dir()).unwrap();
+    for threads in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let pool = PjrtPool::load(&spec, "mlp", threads).unwrap();
+        let load_s = t0.elapsed().as_secs_f64();
+        let flat = spec.model("mlp").unwrap().spec.init(0);
+        bench_compute(&format!("pjrt{threads}"), pool.as_ref(), &flat, &x, &y);
+        if threads == 1 {
+            println!("  (pool load+compile: {load_s:.2}s for 6 entry points — one-time cost)");
+        }
+        // concurrent callers: scaling of the pool
+        let callers = 4;
+        let reps = 8;
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..callers {
+                let pool = pool.clone();
+                let flat = &flat;
+                let x = &x;
+                let y = &y;
+                s.spawn(move || {
+                    for _ in 0..reps {
+                        pool.train_step(flat, x, y, 0.1).unwrap();
+                    }
+                });
+            }
+        });
+        let per = t0.elapsed().as_secs_f64() / (callers * reps) as f64;
+        println!("  ({callers} concurrent callers: {:.2} ms/step effective)", per * 1e3);
+    }
+
+    // Rust weighted-sum oracle bandwidth for comparison with the kernel path
+    let d = 235_520usize;
+    let k = 16;
+    let rows: Vec<Vec<f32>> = (0..k).map(|_| vec![0.5f32; d]).collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let w = vec![1.0 / k as f32; k];
+    let t = timeit(50, || weighted_sum(&refs, &w));
+    println!(
+        "\nrust weighted_sum oracle: {:.2} ms, {:.2} GB/s (memory-bound reference)",
+        t * 1e3,
+        (k * d * 4) as f64 / 1e9 / t
+    );
+}

@@ -1,0 +1,92 @@
+//! Agent — the per-worker thin client (paper §5.1).
+//!
+//! Each pod runs one agent. The agent fetches the worker's task
+//! configuration (here: the [`WorkerConfig`] the deployer hands it), builds
+//! the role's program over a fresh [`crate::roles::WorkerEnv`], executes it
+//! as a supervised task, and reports status transitions to the management
+//! plane through the notifier. It also provides the paper's sandbox
+//! boundary: a panicking or erroring worker is contained and surfaced as a
+//! `Failed` status instead of taking the plane down.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::json::Json;
+use crate::notify::{EventKind, Notifier};
+use crate::roles::{build_program, WorkerEnv};
+
+fn status_event(notifier: &Notifier, job: &str, worker: &str, state: &str, detail: &str) {
+    let mut payload = Json::obj();
+    payload.insert("worker", worker);
+    payload.insert("state", state);
+    if !detail.is_empty() {
+        payload.insert("detail", detail);
+    }
+    notifier.emit(EventKind::WorkerStatus, job, Json::Obj(payload));
+}
+
+/// Run one worker to completion under agent supervision.
+///
+/// The environment (channel joins) is built by the controller *before* any
+/// worker starts, so every role observes complete channel membership — the
+/// deployment equivalent of the paper's step-7/8 ordering (agents fetch
+/// their full task configuration before the worker process starts).
+pub fn run_worker(env: WorkerEnv, notifier: Arc<Notifier>) -> Result<()> {
+    let job_name = env.job.spec.name.clone();
+    let worker_id = env.cfg.id.clone();
+    status_event(&notifier, &job_name, &worker_id, "starting", "");
+
+    let result: Result<()> = (|| {
+        let mut program = build_program(env)?;
+        // sandbox: contain panics from role code
+        match std::panic::catch_unwind(AssertUnwindSafe(|| program.run())) {
+            Ok(r) => r,
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "worker panicked".into());
+                Err(anyhow!("worker panic: {msg}"))
+            }
+        }
+    })();
+
+    match &result {
+        Ok(()) => status_event(&notifier, &job_name, &worker_id, "completed", ""),
+        Err(e) => status_event(&notifier, &job_name, &worker_id, "failed", &format!("{e:#}")),
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roles::tests_support::tiny_job_runtime;
+
+    #[test]
+    fn bad_role_fails_cleanly_with_status_events() {
+        let (job, cfgs) = tiny_job_runtime();
+        let notifier = Arc::new(Notifier::new());
+        let rx = notifier.subscribe(Some(EventKind::WorkerStatus), None);
+        let mut bad = cfgs[0].clone();
+        bad.role = "bogus".into();
+        let env = WorkerEnv::new(bad, job).unwrap();
+        let res = run_worker(env, notifier);
+        assert!(res.is_err());
+        let events: Vec<_> = rx.try_iter().collect();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].payload.get("state").as_str(), Some("starting"));
+        assert_eq!(events[1].payload.get("state").as_str(), Some("failed"));
+    }
+
+    #[test]
+    fn unknown_channel_in_config_fails_at_env_build() {
+        let (job, cfgs) = tiny_job_runtime();
+        let mut bad = cfgs[0].clone();
+        bad.channels.insert("ghost-channel".into(), "default".into());
+        assert!(WorkerEnv::new(bad, job).is_err());
+    }
+}

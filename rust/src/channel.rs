@@ -1,0 +1,762 @@
+//! The `channel` primitive + Channel API (paper §4.1, Table 2).
+//!
+//! A channel links a pair of roles and abstracts the communication backend;
+//! workers use the same API regardless of backend. This module provides:
+//!
+//! * [`Message`] / [`Payload`] — what roles exchange (model vectors ride as
+//!   shared `Arc<Vec<f32>>` so fan-out broadcasts don't copy weights),
+//! * [`Backend`] — per-channel backend selection (the paper's headline
+//!   flexibility, §6.2): `P2p` direct links, `Broker` store-and-forward via
+//!   a hub (MQTT-like), `InProc` zero-cost local (tests),
+//! * [`ChannelManager`] — membership per `(channel, group)` pair as created
+//!   by TAG expansion's `groupBy`,
+//! * [`ChannelHandle`] — the worker-side **Table 2 API**: `join`, `leave`,
+//!   `send`, `recv`, `recv_fifo`, `peek`, `broadcast`, `ends`, `empty`.
+//!
+//! Transfers account virtual time through [`crate::net::VirtualNet`]; each
+//! worker's [`VClock`] merges message arrival times on receive, so critical
+//! -path round times fall out of normal channel use (see `net` docs).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+use crate::net::{VClock, VTime, VirtualNet};
+
+/// How long a blocking `recv` waits before reporting a stall.
+pub const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Communication backend for one channel (TAG `backend` attribute).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Zero-virtual-cost local queue (unit tests, intra-process glue).
+    InProc,
+    /// Direct point-to-point link: one hop on the virtual net.
+    P2p,
+    /// MQTT-like pub/sub broker: two hops via the channel's hub node. Works
+    /// when peers can't reach each other directly (NAT/firewall), at the
+    /// price of WAN traffic through the broker — exactly the §6.2 trade-off.
+    Broker,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "inproc" | "local" => Backend::InProc,
+            "p2p" | "grpc" => Backend::P2p,
+            "broker" | "mqtt" | "kafka" => Backend::Broker,
+            other => bail!("unknown backend '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::InProc => "inproc",
+            Backend::P2p => "p2p",
+            Backend::Broker => "broker",
+        }
+    }
+}
+
+/// Message payload. Model weights/updates are `Arc`-shared: broadcast to N
+/// peers moves a pointer, not N vector copies.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    Empty,
+    Floats(Arc<Vec<f32>>),
+    Json(Json),
+}
+
+impl Payload {
+    /// Wire size used for virtual-time accounting.
+    pub fn size_bytes(&self) -> u64 {
+        match self {
+            Payload::Empty => 0,
+            Payload::Floats(v) => (v.len() * 4) as u64,
+            Payload::Json(j) => j.dump().len() as u64,
+        }
+    }
+}
+
+/// A typed message between roles. `kind` disambiguates the function the
+/// receiver dispatches to (the paper's `funcTags`).
+#[derive(Debug, Clone)]
+pub struct Message {
+    pub kind: String,
+    pub round: u64,
+    pub payload: Payload,
+    pub meta: Json,
+}
+
+impl Message {
+    pub fn new(kind: impl Into<String>, round: u64, payload: Payload) -> Self {
+        Self {
+            kind: kind.into(),
+            round,
+            payload,
+            meta: Json::Null,
+        }
+    }
+
+    pub fn with_meta(mut self, meta: Json) -> Self {
+        self.meta = meta;
+        self
+    }
+
+    pub fn floats(kind: impl Into<String>, round: u64, data: Arc<Vec<f32>>) -> Self {
+        Self::new(kind, round, Payload::Floats(data))
+    }
+
+    pub fn control(kind: impl Into<String>, round: u64) -> Self {
+        Self::new(kind, round, Payload::Empty)
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        // kind/round/meta overhead + payload
+        64 + self.payload.size_bytes() + if self.meta.is_null() { 0 } else { self.meta.dump().len() as u64 }
+    }
+}
+
+#[derive(Debug)]
+struct Envelope {
+    from: String,
+    msg: Message,
+    arrival: VTime,
+    seq: u64,
+}
+
+type Mailbox = Arc<(Mutex<VecDeque<Envelope>>, Condvar)>;
+
+struct Member {
+    mailbox: Mailbox,
+    role: String,
+}
+
+struct ChannelState {
+    backend: Backend,
+    members: HashMap<String, Member>,
+}
+
+/// Shared channel fabric. One per deployment; handles are created per
+/// worker+channel by `join`.
+pub struct ChannelManager {
+    net: Arc<VirtualNet>,
+    chans: Mutex<HashMap<(String, String), ChannelState>>,
+    seq: AtomicU64,
+}
+
+impl ChannelManager {
+    pub fn new(net: Arc<VirtualNet>) -> Arc<Self> {
+        Arc::new(Self {
+            net,
+            chans: Mutex::new(HashMap::new()),
+            seq: AtomicU64::new(0),
+        })
+    }
+
+    pub fn net(&self) -> &Arc<VirtualNet> {
+        &self.net
+    }
+
+    /// Join `(channel, group)` as `worker` acting as `role`, sharing the
+    /// worker's virtual clock across all its channels. Returns the
+    /// worker-side handle. `role` determines what `ends()` yields: peers of
+    /// the *other* endpoint role (or all other members on self-pair
+    /// channels like the distributed trainer ring).
+    pub fn join(
+        self: &Arc<Self>,
+        channel: &str,
+        group: &str,
+        worker: &str,
+        role: &str,
+        backend: Backend,
+        clock: Arc<Mutex<VClock>>,
+    ) -> Result<ChannelHandle> {
+        let key = (channel.to_string(), group.to_string());
+        let mut g = self.chans.lock().unwrap();
+        let state = g.entry(key).or_insert_with(|| ChannelState {
+            backend,
+            members: HashMap::new(),
+        });
+        if state.backend != backend {
+            bail!(
+                "channel '{channel}' group '{group}' already uses backend {:?}",
+                state.backend
+            );
+        }
+        let mailbox: Mailbox = match state.members.get(worker) {
+            Some(m) => m.mailbox.clone(), // re-join keeps pending mail
+            None => Arc::new((Mutex::new(VecDeque::new()), Condvar::new())),
+        };
+        state.members.insert(
+            worker.to_string(),
+            Member {
+                mailbox: mailbox.clone(),
+                role: role.to_string(),
+            },
+        );
+        Ok(ChannelHandle {
+            mgr: self.clone(),
+            channel: channel.to_string(),
+            group: group.to_string(),
+            me: worker.to_string(),
+            role: role.to_string(),
+            backend,
+            mailbox,
+            clock,
+        })
+    }
+
+    fn leave(&self, channel: &str, group: &str, worker: &str) {
+        let mut g = self.chans.lock().unwrap();
+        if let Some(state) = g.get_mut(&(channel.to_string(), group.to_string())) {
+            state.members.remove(worker);
+        }
+    }
+
+    /// Peers at the other end: members of a different role, or — when every
+    /// member shares one role (self-pair channel) — all other members.
+    fn peers(&self, channel: &str, group: &str, me: &str, my_role: &str) -> Vec<String> {
+        let g = self.chans.lock().unwrap();
+        let mut peers: Vec<String> = match g.get(&(channel.to_string(), group.to_string())) {
+            None => Vec::new(),
+            Some(s) => {
+                let other_role: Vec<String> = s
+                    .members
+                    .iter()
+                    .filter(|(k, m)| *k != me && m.role != my_role)
+                    .map(|(k, _)| k.clone())
+                    .collect();
+                if other_role.is_empty() {
+                    s.members.keys().filter(|k| *k != me).cloned().collect()
+                } else {
+                    other_role
+                }
+            }
+        };
+        peers.sort();
+        peers
+    }
+
+    /// All members of `(channel, group)` (sorted), regardless of role.
+    pub fn members(&self, channel: &str, group: &str) -> Vec<String> {
+        let g = self.chans.lock().unwrap();
+        let mut m: Vec<String> = g
+            .get(&(channel.to_string(), group.to_string()))
+            .map(|s| s.members.keys().cloned().collect())
+            .unwrap_or_default();
+        m.sort();
+        m
+    }
+
+    /// Deliver `msg` from `from` to `to` on `(channel, group)`; computes the
+    /// virtual arrival time from the backend's route. `queue_delay` models
+    /// store-and-forward serialisation at the broker (fan-out copies leave
+    /// the hub one after another).
+    fn deliver(
+        &self,
+        channel: &str,
+        group: &str,
+        backend: Backend,
+        from: &str,
+        from_clock: VTime,
+        to: &str,
+        msg: Message,
+        queue_delay: VTime,
+    ) -> Result<VTime> {
+        let bytes = msg.size_bytes();
+        let arrival = match backend {
+            Backend::InProc => from_clock,
+            Backend::P2p => from_clock + self.net.transfer_at_us(from, to, bytes, from_clock),
+            Backend::Broker => {
+                let hub = format!("hub:{channel}");
+                from_clock
+                    + queue_delay
+                    + self.net.transfer_via_at_us(from, &hub, to, bytes, from_clock)
+            }
+        };
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let g = self.chans.lock().unwrap();
+        let state = g
+            .get(&(channel.to_string(), group.to_string()))
+            .with_context(|| format!("channel '{channel}' group '{group}' does not exist"))?;
+        let member = state
+            .members
+            .get(to)
+            .with_context(|| format!("peer '{to}' not joined on '{channel}/{group}'"))?;
+        let (q, cv) = &*member.mailbox;
+        q.lock().unwrap().push_back(Envelope {
+            from: from.to_string(),
+            msg,
+            arrival,
+            seq,
+        });
+        cv.notify_all();
+        Ok(arrival)
+    }
+}
+
+/// Worker-side endpoint implementing the paper's Table 2 API.
+pub struct ChannelHandle {
+    mgr: Arc<ChannelManager>,
+    channel: String,
+    group: String,
+    me: String,
+    role: String,
+    backend: Backend,
+    mailbox: Mailbox,
+    clock: Arc<Mutex<VClock>>,
+}
+
+impl ChannelHandle {
+    pub fn name(&self) -> &str {
+        &self.channel
+    }
+
+    pub fn group(&self) -> &str {
+        &self.group
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    pub fn worker_id(&self) -> &str {
+        &self.me
+    }
+
+    /// Current virtual time at this worker.
+    pub fn now(&self) -> VTime {
+        self.clock.lock().unwrap().now()
+    }
+
+    /// Leave the channel and deallocate its resources (Table 2 `leave`).
+    pub fn leave(self) {
+        self.mgr.leave(&self.channel, &self.group, &self.me);
+    }
+
+    /// Peers at the other end of the channel (Table 2 `ends`), sorted for
+    /// determinism. Group-scoped: only members of this worker's group, and
+    /// role-scoped: only the *other* endpoint role (all other members on
+    /// self-pair channels).
+    pub fn ends(&self) -> Vec<String> {
+        self.mgr.peers(&self.channel, &self.group, &self.me, &self.role)
+    }
+
+    /// Check if peers exist at the other end (Table 2 `empty`).
+    pub fn empty(&self) -> bool {
+        self.ends().is_empty()
+    }
+
+    /// Send `msg` to `end` (Table 2 `send`).
+    pub fn send(&self, end: &str, msg: Message) -> Result<()> {
+        let now = self.clock.lock().unwrap().now();
+        self.mgr
+            .deliver(&self.channel, &self.group, self.backend, &self.me, now, end, msg, 0)?;
+        Ok(())
+    }
+
+    /// Fan a batch of per-peer messages out in one shot.
+    ///
+    /// On broker channels the copies serialise through the hub
+    /// (store-and-forward): message `i` queues behind the hub legs of all
+    /// earlier ones — the broker contention that makes broadcast-heavy
+    /// rounds expensive in the paper's §6.2 MQTT setup.
+    pub fn send_fanout(&self, items: Vec<(String, Message)>) -> Result<usize> {
+        let now = self.clock.lock().unwrap().now();
+        let n = items.len();
+        let hub = format!("hub:{}", self.channel);
+        let mut queued: VTime = 0;
+        for (to, msg) in items {
+            let extra = queued;
+            if self.backend == Backend::Broker {
+                queued += self.mgr.net.transfer_at_us(&hub, &to, msg.size_bytes(), now);
+            }
+            self.mgr.deliver(
+                &self.channel,
+                &self.group,
+                self.backend,
+                &self.me,
+                now,
+                &to,
+                msg,
+                extra,
+            )?;
+        }
+        Ok(n)
+    }
+
+    /// Broadcast `msg` to all peers (Table 2 `broadcast`). The payload is
+    /// `Arc`-shared, so this is O(peers) pointer pushes, not copies; broker
+    /// fan-out serialises at the hub (see [`Self::send_fanout`]).
+    pub fn broadcast(&self, msg: Message) -> Result<usize> {
+        let items: Vec<(String, Message)> =
+            self.ends().into_iter().map(|p| (p, msg.clone())).collect();
+        self.send_fanout(items)
+    }
+
+    /// Receive the earliest message from `end` (Table 2 `recv`); blocks.
+    /// Merges the worker clock with the message's virtual arrival time.
+    pub fn recv(&self, end: &str) -> Result<Message> {
+        self.recv_where(|e| e.from == end)
+    }
+
+    /// Receive the earliest message from `end` with the given kind.
+    pub fn recv_kind(&self, end: &str, kind: &str) -> Result<Message> {
+        self.recv_where(|e| e.from == end && e.msg.kind == kind)
+    }
+
+    /// Receive the earliest message from *any* peer; returns `(from, msg)`.
+    pub fn recv_any(&self) -> Result<(String, Message)> {
+        let e = self.take_where(|_| true)?;
+        Ok((e.from, e.msg))
+    }
+
+    /// Receive the earliest message of `kind` from any peer.
+    pub fn recv_any_kind(&self, kind: &str) -> Result<(String, Message)> {
+        let e = self.take_where(|e| e.msg.kind == kind)?;
+        Ok((e.from, e.msg))
+    }
+
+    /// Like [`recv_any_kind`] but also returns the message's virtual
+    /// arrival time (needed when the receiver must attribute per-sender
+    /// timing independent of its own merged clock, e.g. CO-FL acks).
+    pub fn recv_any_kind_timed(&self, kind: &str) -> Result<(String, Message, VTime)> {
+        let e = self.take_where(|e| e.msg.kind == kind)?;
+        Ok((e.from, e.msg, e.arrival))
+    }
+
+    fn recv_where(&self, pred: impl Fn(&Envelope) -> bool) -> Result<Message> {
+        Ok(self.take_where(pred)?.msg)
+    }
+
+    fn take_where(&self, pred: impl Fn(&Envelope) -> bool) -> Result<Envelope> {
+        let (q, cv) = &*self.mailbox;
+        let mut g = q.lock().unwrap();
+        loop {
+            // earliest matching by (arrival, seq) for determinism
+            let best = g
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| pred(e))
+                .min_by_key(|(_, e)| (e.arrival, e.seq))
+                .map(|(i, _)| i);
+            if let Some(i) = best {
+                let env = g.remove(i).unwrap();
+                self.clock.lock().unwrap().merge(env.arrival);
+                return Ok(env);
+            }
+            let (ng, timeout) = cv.wait_timeout(g, RECV_TIMEOUT).unwrap();
+            g = ng;
+            if timeout.timed_out() {
+                bail!(
+                    "recv timeout on channel '{}' group '{}' at worker '{}'",
+                    self.channel,
+                    self.group,
+                    self.me
+                );
+            }
+        }
+    }
+
+    /// Receive one message from each of `ends`, yielded in FIFO order of
+    /// virtual arrival (Table 2 `recv_fifo`). Blocks until all have arrived;
+    /// the worker clock ends at the latest arrival (the aggregation barrier).
+    pub fn recv_fifo(&self, ends: &[String]) -> Result<Vec<(String, Message)>> {
+        let mut got: Vec<Envelope> = Vec::with_capacity(ends.len());
+        let mut pending: Vec<&String> = ends.iter().collect();
+        while !pending.is_empty() {
+            let env = self.take_where(|e| pending.iter().any(|p| **p == e.from))?;
+            pending.retain(|p| **p != env.from);
+            got.push(env);
+        }
+        got.sort_by_key(|e| (e.arrival, e.seq));
+        Ok(got.into_iter().map(|e| (e.from, e.msg)).collect())
+    }
+
+    /// Peek (without consuming) the earliest message from `end`
+    /// (Table 2 `peek`). Does not advance the clock.
+    pub fn peek(&self, end: &str) -> Option<Message> {
+        let (q, _) = &*self.mailbox;
+        let g = q.lock().unwrap();
+        g.iter()
+            .filter(|e| e.from == end)
+            .min_by_key(|e| (e.arrival, e.seq))
+            .map(|e| e.msg.clone())
+    }
+
+    /// Non-blocking: is any message from `end` available?
+    pub fn has_message(&self, end: &str) -> bool {
+        self.peek(end).is_some()
+    }
+
+    /// Advance this worker's virtual clock (compute time accounting).
+    pub fn advance_clock(&self, dt: VTime) {
+        self.clock.lock().unwrap().advance(dt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::LinkSpec;
+
+    fn setup(backend: Backend) -> (Arc<ChannelManager>, ChannelHandle, ChannelHandle) {
+        let net = Arc::new(VirtualNet::new(LinkSpec::mbps(8.0, 100)));
+        let mgr = ChannelManager::new(net);
+        let ca = Arc::new(Mutex::new(VClock::default()));
+        let cb = Arc::new(Mutex::new(VClock::default()));
+        let a = mgr.join("param", "default", "a", "trainer", backend, ca).unwrap();
+        let b = mgr.join("param", "default", "b", "aggregator", backend, cb).unwrap();
+        (mgr, a, b)
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let (_m, a, b) = setup(Backend::P2p);
+        a.send("b", Message::control("hello", 1)).unwrap();
+        let msg = b.recv("a").unwrap();
+        assert_eq!(msg.kind, "hello");
+        assert_eq!(msg.round, 1);
+    }
+
+    #[test]
+    fn virtual_time_advances_on_recv() {
+        let (_m, a, b) = setup(Backend::P2p);
+        // 1 MB over 8 Mbps = 1s + 100us
+        let w = Arc::new(vec![0f32; 250_000]);
+        a.send("b", Message::floats("weights", 0, w)).unwrap();
+        b.recv("a").unwrap();
+        assert!(b.now() >= 1_000_000, "clock={}", b.now());
+        assert_eq!(a.now(), 0, "sender clock unaffected by send");
+    }
+
+    #[test]
+    fn broker_costs_two_hops() {
+        let (_m, a, b) = setup(Backend::Broker);
+        let w = Arc::new(vec![0f32; 250_000]);
+        a.send("b", Message::floats("weights", 0, w.clone())).unwrap();
+        b.recv("a").unwrap();
+        let broker_t = b.now();
+
+        let (_m2, a2, b2) = setup(Backend::P2p);
+        a2.send("b", Message::floats("weights", 0, w)).unwrap();
+        b2.recv("a").unwrap();
+        assert!(
+            broker_t > b2.now() && broker_t <= 2 * b2.now() + 1000,
+            "broker {} vs p2p {}",
+            broker_t,
+            b2.now()
+        );
+    }
+
+    #[test]
+    fn inproc_is_free() {
+        let (_m, a, b) = setup(Backend::InProc);
+        a.send("b", Message::floats("w", 0, Arc::new(vec![0f32; 1_000_000])))
+            .unwrap();
+        b.recv("a").unwrap();
+        assert_eq!(b.now(), 0);
+    }
+
+    #[test]
+    fn ends_and_empty() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let a = mk("agg", "aggregator");
+        assert!(a.empty());
+        let _t1 = mk("t1", "trainer");
+        let _t2 = mk("t2", "trainer");
+        assert_eq!(a.ends(), vec!["t1".to_string(), "t2".into()]);
+        assert!(!a.empty());
+    }
+
+    #[test]
+    fn group_isolation() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, g: &str, role: &str| {
+            mgr.join(
+                "param",
+                g,
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let w = mk("west-agg", "west", "aggregator");
+        let _w1 = mk("w1", "west", "trainer");
+        let _e1 = mk("e1", "east", "trainer");
+        assert_eq!(w.ends(), vec!["w1".to_string()]);
+    }
+
+    #[test]
+    fn leave_removes_membership() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let a = mk("a", "trainer");
+        let b = mk("b", "aggregator");
+        b.leave();
+        assert!(a.empty());
+    }
+
+    #[test]
+    fn broadcast_reaches_all_peers() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let agg = mk("agg", "aggregator");
+        let t1 = mk("t1", "trainer");
+        let t2 = mk("t2", "trainer");
+        let n = agg.broadcast(Message::control("start", 3)).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(t1.recv("agg").unwrap().round, 3);
+        assert_eq!(t2.recv("agg").unwrap().round, 3);
+    }
+
+    #[test]
+    fn recv_fifo_orders_by_virtual_arrival() {
+        let net = Arc::new(VirtualNet::new(LinkSpec::mbps(100.0, 0)));
+        net.set_uplink("slow", LinkSpec::mbps(1.0, 0));
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::P2p,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let agg = mk("agg", "aggregator");
+        let slow = mk("slow", "trainer");
+        let fast = mk("fast", "trainer");
+        let w = Arc::new(vec![0f32; 100_000]);
+        // slow sends FIRST in real time, but arrives later in virtual time.
+        slow.send("agg", Message::floats("u", 0, w.clone())).unwrap();
+        fast.send("agg", Message::floats("u", 0, w)).unwrap();
+        let got = agg
+            .recv_fifo(&["slow".to_string(), "fast".to_string()])
+            .unwrap();
+        assert_eq!(got[0].0, "fast");
+        assert_eq!(got[1].0, "slow");
+        // barrier clock = slowest arrival
+        assert!(agg.now() >= 3_000_000, "clock={}", agg.now());
+    }
+
+    #[test]
+    fn peek_does_not_consume_or_advance_clock() {
+        let (_m, a, b) = setup(Backend::P2p);
+        a.send("b", Message::control("x", 7)).unwrap();
+        // wait for delivery (delivery is synchronous in-process)
+        assert!(b.peek("a").is_some());
+        assert_eq!(b.now(), 0);
+        assert_eq!(b.recv("a").unwrap().round, 7);
+        assert!(b.peek("a").is_none());
+    }
+
+    #[test]
+    fn recv_kind_filters() {
+        let (_m, a, b) = setup(Backend::InProc);
+        a.send("b", Message::control("report", 1)).unwrap();
+        a.send("b", Message::control("weights", 2)).unwrap();
+        let m = b.recv_kind("a", "weights").unwrap();
+        assert_eq!(m.round, 2);
+        let m = b.recv("a").unwrap();
+        assert_eq!(m.kind, "report");
+    }
+
+    #[test]
+    fn send_to_unjoined_peer_errors() {
+        let (_m, a, _b) = setup(Backend::InProc);
+        assert!(a.send("ghost", Message::control("x", 0)).is_err());
+    }
+
+    #[test]
+    fn cross_thread_send_recv() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let agg = mgr
+            .join(
+                "c",
+                "g",
+                "agg",
+                "aggregator",
+                Backend::P2p,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap();
+        let mut handles = vec![];
+        for i in 0..4 {
+            let mgr = mgr.clone();
+            handles.push(std::thread::spawn(move || {
+                let t = mgr
+                    .join(
+                        "c",
+                        "g",
+                        &format!("t{i}"),
+                        "trainer",
+                        Backend::P2p,
+                        Arc::new(Mutex::new(VClock::default())),
+                    )
+                    .unwrap();
+                t.send("agg", Message::control("u", i)).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let ends: Vec<String> = (0..4).map(|i| format!("t{i}")).collect();
+        let got = agg.recv_fifo(&ends).unwrap();
+        assert_eq!(got.len(), 4);
+    }
+
+    #[test]
+    fn backend_mismatch_on_join_errors() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let c = Arc::new(Mutex::new(VClock::default()));
+        mgr.join("c", "g", "a", "trainer", Backend::P2p, c.clone()).unwrap();
+        assert!(mgr.join("c", "g", "b", "aggregator", Backend::Broker, c).is_err());
+    }
+}

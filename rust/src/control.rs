@@ -1,0 +1,384 @@
+//! Controller — the core of the management plane (paper §5.1, §5.2).
+//!
+//! Responsibilities, exactly as the paper lists them: (i) process
+//! submissions and manage state via the journaling store; (ii) expand the
+//! TAG into a physical topology and drive worker deployment through the
+//! per-orchestrator deployers; (iii) monitor progress (worker status
+//! events) and finish the job, revoking deployments.
+//!
+//! `submit` is the full §5.2 workflow in one call: store spec → expand →
+//! store workers → deploy-event → pods/agents → run → collect → revoke.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algos::TrainingConfig;
+use crate::channel::ChannelManager;
+use crate::data::{make_federated, Partition};
+use crate::deploy::{DeployerSet, PodStatus};
+use crate::json::Json;
+use crate::metrics::MetricsHub;
+use crate::net::VirtualNet;
+use crate::notify::{EventKind, Notifier};
+use crate::registry::Registry;
+use crate::roles::JobRuntime;
+use crate::runtime::{Compute, ComputeTimeModel};
+use crate::store::Store;
+use crate::tag::{expand, JobSpec};
+
+/// Per-job execution options (what the paper's job configuration carries
+/// beyond the TAG itself).
+pub struct JobOptions {
+    pub compute: Arc<dyn Compute>,
+    /// He-init seed for the global model (None = zeros, fine for the mock).
+    pub init_flat: Option<Vec<f32>>,
+    pub time_model: ComputeTimeModel,
+    /// Samples per trainer shard / held-out test size.
+    pub per_shard: usize,
+    pub test_n: usize,
+    pub partition: Partition,
+    pub noise_sigma: f32,
+    pub data_seed: u64,
+    /// Hook to shape the virtual network before workers start (straggler
+    /// links etc. — the `tc` stand-in).
+    pub configure_net: Option<Box<dyn FnOnce(&VirtualNet) + Send>>,
+}
+
+impl JobOptions {
+    pub fn mock() -> Self {
+        let compute: Arc<dyn Compute> = Arc::new(crate::runtime::MockCompute::default_mlp());
+        Self {
+            compute,
+            init_flat: None,
+            time_model: ComputeTimeModel::FixedPerStep(2_000),
+            per_shard: 128,
+            test_n: 256,
+            partition: Partition::Iid,
+            noise_sigma: 0.5,
+            data_seed: 0,
+            configure_net: None,
+        }
+    }
+
+    pub fn with_compute(mut self, c: Arc<dyn Compute>) -> Self {
+        self.compute = c;
+        self
+    }
+
+    pub fn with_net(mut self, f: impl FnOnce(&VirtualNet) + Send + 'static) -> Self {
+        self.configure_net = Some(Box::new(f));
+        self
+    }
+
+    pub fn with_time(mut self, tm: ComputeTimeModel) -> Self {
+        self.time_model = tm;
+        self
+    }
+
+    pub fn with_data(
+        mut self,
+        per_shard: usize,
+        test_n: usize,
+        partition: Partition,
+        seed: u64,
+    ) -> Self {
+        self.per_shard = per_shard;
+        self.test_n = test_n;
+        self.partition = partition;
+        self.data_seed = seed;
+        self
+    }
+
+    pub fn with_init(mut self, flat: Vec<f32>) -> Self {
+        self.init_flat = Some(flat);
+        self
+    }
+
+    pub fn with_sigma(mut self, sigma: f32) -> Self {
+        self.noise_sigma = sigma;
+        self
+    }
+}
+
+/// What a finished job returns to the caller.
+#[derive(Debug)]
+pub struct JobReport {
+    pub job: String,
+    pub workers: usize,
+    pub metrics: Arc<MetricsHub>,
+    pub final_loss: Option<f64>,
+    pub final_acc: Option<f64>,
+    pub total_bytes: u64,
+    /// Largest virtual time reached by any recorded series.
+    pub vtime_s: f64,
+    pub wall_s: f64,
+    /// Timing breakdown of the submission path (Table 6's measurements).
+    pub expansion_s: f64,
+    pub db_write_s: f64,
+}
+
+/// The management-plane controller.
+pub struct Controller {
+    store: Arc<Store>,
+    notifier: Arc<Notifier>,
+    registry: Registry,
+    deployers: DeployerSet,
+    job_counter: u64,
+}
+
+impl Controller {
+    pub fn new(store: Arc<Store>) -> Self {
+        Self {
+            store,
+            notifier: Arc::new(Notifier::new()),
+            registry: Registry::single_box(),
+            deployers: DeployerSet::with_sim(),
+            job_counter: 0,
+        }
+    }
+
+    pub fn notifier(&self) -> Arc<Notifier> {
+        self.notifier.clone()
+    }
+
+    pub fn registry_mut(&mut self) -> &mut Registry {
+        &mut self.registry
+    }
+
+    /// Replace the default single-box registry (compute registration,
+    /// §5.2 step 1). Also journals the registration.
+    pub fn register_compute(&mut self, c: crate::registry::ComputeSpec) -> Result<()> {
+        self.store.put("computes", &c.name, c.to_json())?;
+        self.registry.register_compute(c);
+        Ok(())
+    }
+
+    /// Dataset metadata registration (§4.3): the system stores metadata
+    /// only, never raw data.
+    pub fn register_dataset(&mut self, d: crate::tag::DatasetRef) -> Result<()> {
+        let mut o = Json::obj();
+        o.insert("name", d.name.as_str());
+        o.insert("group", d.group.as_str());
+        o.insert("realm", d.realm.as_str());
+        o.insert("url", d.url.as_str());
+        self.store.put("datasets", &d.name, Json::Obj(o))?;
+        self.registry.register_dataset(d);
+        Ok(())
+    }
+
+    /// Submit a job and run it to completion (the §5.2 workflow).
+    pub fn submit(&mut self, spec: JobSpec, opts: JobOptions) -> Result<JobReport> {
+        let wall0 = Instant::now();
+        self.job_counter += 1;
+        let job_id = format!("{}-{}", spec.name, self.job_counter);
+
+        // (step 3/4) record the job configuration
+        self.store.put("jobs", &job_id, spec.to_json())?;
+
+        // TAG expansion (+ Table 6 timings)
+        let t_exp = Instant::now();
+        let workers = expand(&spec, &self.registry).context("TAG expansion failed")?;
+        let expansion_s = t_exp.elapsed().as_secs_f64();
+        let t_db = Instant::now();
+        self.store.put_batch(
+            "workers",
+            workers
+                .iter()
+                .map(|w| (format!("{job_id}/{}", w.id), w.to_json())),
+        )?;
+        let db_write_s = t_db.elapsed().as_secs_f64();
+
+        // materialise the job runtime
+        let tcfg = TrainingConfig::from_hyper(&spec.hyper)?;
+        if spec.role("coordinator").is_some()
+            && matches!(
+                tcfg.aggregation,
+                crate::algos::AggregationPolicy::Asynchronous { .. }
+            )
+        {
+            bail!(
+                "asynchronous aggregation with a coordinator role is not supported: \
+                 the coordinator's per-round assignment protocol is synchronous \
+                 (use async on C-FL/H-FL, or sync CO-FL)"
+            );
+        }
+        let net = Arc::new(VirtualNet::default());
+        let mut opts = opts;
+        if let Some(f) = opts.configure_net.take() {
+            f(&net);
+        }
+        let n_shards = spec.datasets.len();
+        let (shards, test) = make_federated(
+            opts.data_seed,
+            n_shards.max(1),
+            opts.per_shard,
+            opts.test_n,
+            opts.partition,
+            opts.noise_sigma,
+        );
+        let mut shard_map = HashMap::new();
+        for (d, s) in spec.datasets.iter().zip(shards) {
+            shard_map.insert(d.name.clone(), Arc::new(s));
+        }
+        let init_flat = Arc::new(
+            opts.init_flat
+                .unwrap_or_else(|| vec![0f32; opts.compute.d_pad()]),
+        );
+        let job = Arc::new(JobRuntime {
+            spec,
+            chan_mgr: ChannelManager::new(net),
+            compute: opts.compute,
+            tcfg,
+            metrics: Arc::new(MetricsHub::new()),
+            shards: shard_map,
+            test_set: Arc::new(test),
+            time_model: opts.time_model,
+            init_flat,
+        });
+
+        // (step 5/6) deploy-event -> deployers create pods
+        self.notifier.emit(
+            EventKind::Deploy,
+            &job_id,
+            Json::from(workers.len()),
+        );
+        // Build every worker environment (joining channels) BEFORE any pod
+        // starts: roles then observe complete channel membership, the
+        // equivalent of the paper's agents fetching full task configuration
+        // before starting the worker process.
+        let mut envs = Vec::with_capacity(workers.len());
+        for w in &workers {
+            envs.push(crate::roles::WorkerEnv::new(w.clone(), job.clone())?);
+        }
+        let mut pods = Vec::with_capacity(workers.len());
+        for (w, env) in workers.iter().zip(envs) {
+            let orchestrator = self
+                .registry
+                .computes()
+                .iter()
+                .find(|c| c.name == w.compute)
+                .map(|c| c.orchestrator.clone())
+                .unwrap_or_else(|| "sim".into());
+            let deployer = self.deployers.get(&orchestrator)?;
+            pods.push(deployer.deploy(env, self.notifier.clone())?);
+        }
+
+        // (monitoring) wait for completion; fail the job on any failed pod
+        let mut failures = Vec::new();
+        for pod in &mut pods {
+            if let PodStatus::Failed(e) = pod.wait() {
+                failures.push(format!("{}: {e}", pod.worker_id));
+            }
+        }
+
+        // (teardown) revoke-deploy event + final state
+        self.notifier
+            .emit(EventKind::Revoke, &job_id, Json::from(pods.len()));
+        let status = if failures.is_empty() { "done" } else { "failed" };
+        self.store.put("job_status", &job_id, Json::from(status))?;
+        self.store.flush()?;
+        self.notifier
+            .emit(EventKind::JobDone, &job_id, Json::from(status));
+
+        if !failures.is_empty() {
+            bail!("job {job_id} failed:\n  {}", failures.join("\n  "));
+        }
+
+        let metrics = job.metrics.clone();
+        let vtime_s = metrics.last("vtime_s").unwrap_or(0.0);
+        Ok(JobReport {
+            job: job_id,
+            workers: workers.len(),
+            final_loss: metrics.last("loss"),
+            final_acc: metrics.last("acc"),
+            total_bytes: metrics.total_bytes(),
+            vtime_s,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            expansion_s,
+            db_write_s,
+            metrics,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Backend;
+    use crate::topo;
+
+    fn controller() -> Controller {
+        Controller::new(Arc::new(Store::in_memory()))
+    }
+
+    #[test]
+    fn cfl_job_runs_to_completion_and_learns() {
+        let mut c = controller();
+        let spec = topo::classical(4, Backend::P2p)
+            .rounds(8)
+            .set("lr", Json::Num(0.5))
+            .set("local_steps", 2usize)
+            .build();
+        let report = c.submit(spec, JobOptions::mock()).unwrap();
+        assert_eq!(report.workers, 5);
+        let acc = report.final_acc.unwrap();
+        let loss = report.final_loss.unwrap();
+        assert!(acc > 0.5, "acc={acc}");
+        assert!(loss < 1.5, "loss={loss}");
+        assert!(report.total_bytes > 0);
+        assert!(report.vtime_s > 0.0);
+    }
+
+    #[test]
+    fn hfl_job_runs_with_two_tiers() {
+        let mut c = controller();
+        let spec = topo::hierarchical(6, 2, Backend::Broker)
+            .rounds(5)
+            .set("lr", Json::Num(0.5))
+            .build();
+        let report = c.submit(spec, JobOptions::mock()).unwrap();
+        assert_eq!(report.workers, 9);
+        assert!(report.final_acc.unwrap() > 0.4);
+    }
+
+    #[test]
+    fn store_records_job_and_workers() {
+        let store = Arc::new(Store::in_memory());
+        let mut c = Controller::new(store.clone());
+        let spec = topo::classical(3, Backend::P2p).rounds(2).build();
+        let report = c.submit(spec, JobOptions::mock()).unwrap();
+        assert!(store.get("jobs", &report.job).is_some());
+        assert_eq!(store.count("workers"), 4);
+        assert_eq!(
+            store.get("job_status", &report.job).unwrap().as_str(),
+            Some("done")
+        );
+    }
+
+    #[test]
+    fn notifier_sees_lifecycle_events() {
+        let mut c = controller();
+        let deploy_rx = c.notifier().subscribe(Some(EventKind::Deploy), None);
+        let done_rx = c.notifier().subscribe(Some(EventKind::JobDone), None);
+        let spec = topo::classical(2, Backend::P2p).rounds(2).build();
+        c.submit(spec, JobOptions::mock()).unwrap();
+        assert_eq!(deploy_rx.try_iter().count(), 1);
+        assert_eq!(done_rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn realm_mismatch_fails_expansion_cleanly() {
+        let store = Arc::new(Store::in_memory());
+        let mut c = Controller::new(store);
+        // replace the single-box registry with a constrained one
+        *c.registry_mut() = Registry::new();
+        c.register_compute(crate::registry::ComputeSpec::new("eu", "eu", 10))
+            .unwrap();
+        let mut spec = topo::classical(1, Backend::P2p).rounds(1).build();
+        spec.datasets[0].realm = "us/east".into();
+        assert!(c.submit(spec, JobOptions::mock()).is_err());
+    }
+}

@@ -1,0 +1,55 @@
+//! # Flame — Federated Learning Operations Made Simple (reproduction)
+//!
+//! A from-scratch reproduction of the Flame FLOps system (Daga et al., 2023)
+//! as the Layer-3 Rust coordinator of a three-layer Rust + JAX + Pallas
+//! stack. The crate contains:
+//!
+//! * the **TAG** abstraction — roles, channels, `groupBy` /
+//!   `groupAssociation` / `replica` / `isDataConsumer` attributes — and the
+//!   paper's Algorithm 1 expansion ([`tag`]),
+//! * the **management plane** — controller, notifier, deployer, agent,
+//!   journaling store, compute/dataset registries with realms
+//!   ([`control`], [`notify`], [`deploy`], [`agent`], [`store`],
+//!   [`registry`]),
+//! * the **channel** primitive with the paper's Table-2 API and pluggable
+//!   communication backends over a virtual-time network model ([`channel`],
+//!   [`net`]),
+//! * the **tasklet/composer** developer programming model (Table 1 surgery
+//!   API) and the built-in role workflows ([`workflow`], [`roles`]),
+//! * FL **algorithms** and **selection** policies from the paper's feature
+//!   matrix (Table 7) ([`algos`], [`select`]),
+//! * the PJRT **runtime** that loads the AOT-lowered JAX/Pallas artifacts
+//!   and executes them on the request path with no Python ([`runtime`],
+//!   [`model`]),
+//! * synthetic **data** with non-IID partitioning, **metrics**, and the
+//!   **sim**ulation harness that regenerates the paper's figures ([`data`],
+//!   [`metrics`], [`sim`]).
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+
+pub mod agent;
+pub mod algos;
+pub mod channel;
+pub mod control;
+pub mod data;
+pub mod deploy;
+pub mod json;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod notify;
+pub mod prng;
+pub mod proputil;
+pub mod registry;
+pub mod roles;
+pub mod runtime;
+pub mod select;
+pub mod sim;
+pub mod store;
+pub mod tag;
+pub mod topo;
+pub mod workflow;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,239 @@
+//! `flame` — the leader entrypoint / CLI.
+//!
+//! Subcommands (hand-rolled parser; the offline vendor set has no clap):
+//!
+//! ```text
+//! flame expand  --topo hfl --trainers 12 --groups 3       # print workers
+//! flame run     --topo cfl --trainers 8 --rounds 10 \
+//!               [--runtime mock|pjrt] [--algorithm fedavg|fedprox|feddyn]
+//!               [--server-opt avg|adam|yogi|adagrad] [--selection all|random|oort]
+//! flame fig10   [--rounds 36]                             # §6.1 scenario
+//! flame fig11   [--rounds 20]                             # §6.2 scenario
+//! flame spec    --topo hybrid --trainers 50 --groups 5    # print TAG JSON
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use flame::channel::Backend;
+use flame::control::{Controller, JobOptions};
+use flame::json::Json;
+use flame::registry::Registry;
+use flame::runtime::{ArtifactSpec, Compute, MockCompute, PjrtPool};
+use flame::store::Store;
+use flame::{sim, tag, topo};
+
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv.get(i + 1).cloned().unwrap_or_default();
+                if val.starts_with("--") || val.is_empty() {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                } else {
+                    flags.insert(key.to_string(), val);
+                    i += 2;
+                }
+            } else {
+                bail!("unexpected argument '{a}'");
+            }
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        self.get(key, &default.to_string())
+            .parse()
+            .with_context(|| format!("--{key} must be an integer"))
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u64(key, default as u64)? as usize)
+    }
+}
+
+fn build_spec(args: &Args) -> Result<tag::JobSpec> {
+    let trainers = args.get_usize("trainers", 8)?;
+    let groups = args.get_usize("groups", 2)?;
+    let rounds = args.get_u64("rounds", 10)?;
+    let backend = Backend::parse(&args.get("backend", "p2p"))?;
+    let builder = match args.get("topo", "cfl").as_str() {
+        "cfl" | "classical" => topo::classical(trainers, backend),
+        "hfl" | "hierarchical" => topo::hierarchical(trainers, groups, backend),
+        "cofl" | "coordinated" => topo::coordinated(trainers, groups.max(2), backend),
+        "hybrid" => topo::hybrid(trainers, groups, backend, Backend::P2p),
+        "distributed" => topo::distributed(trainers, Backend::P2p),
+        other => bail!("unknown topology '{other}'"),
+    };
+    let mut builder = builder
+        .rounds(rounds)
+        .set("lr", Json::Num(args.get("lr", "0.5").parse()?))
+        .set("local_steps", args.get_usize("local-steps", 2)?)
+        .set("algorithm", args.get("algorithm", "fedavg").as_str())
+        .set("server_opt", args.get("server-opt", "avg").as_str())
+        .set("selection", args.get("selection", "all").as_str())
+        .set("seed", args.get_u64("seed", 7)?);
+    if args.flags.contains_key("select-frac") {
+        builder = builder.set(
+            "select_frac",
+            Json::Num(args.get("select-frac", "1.0").parse()?),
+        );
+    }
+    if args.get("aggregation", "sync") != "sync" {
+        builder = builder
+            .set("aggregation", args.get("aggregation", "sync").as_str())
+            .set("buffer_k", args.get_usize("buffer-k", 3)?);
+    }
+    Ok(builder.model(&args.get("model", "mlp")).build())
+}
+
+fn make_compute(args: &Args) -> Result<(Arc<dyn Compute>, Option<Vec<f32>>)> {
+    match args.get("runtime", "mock").as_str() {
+        "mock" => Ok((Arc::new(MockCompute::default_mlp()), None)),
+        "pjrt" => {
+            let spec = ArtifactSpec::load(ArtifactSpec::default_dir())?;
+            let model = args.get("model", "mlp");
+            let threads = args.get_usize("runtime-threads", 2)?;
+            let pool = PjrtPool::load(&spec, &model, threads)?;
+            let init = spec.model(&model)?.spec.init(args.get_u64("seed", 7)?);
+            Ok((pool, Some(init)))
+        }
+        other => bail!("unknown runtime '{other}' (mock|pjrt)"),
+    }
+}
+
+fn cmd_expand(args: &Args) -> Result<()> {
+    let spec = build_spec(args)?;
+    let workers = tag::expand(&spec, &Registry::single_box())?;
+    println!("# {} workers", workers.len());
+    for w in &workers {
+        println!("{}", w.to_json().dump());
+    }
+    Ok(())
+}
+
+fn cmd_spec(args: &Args) -> Result<()> {
+    println!("{}", build_spec(args)?.to_json().pretty());
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let spec = build_spec(args)?;
+    let (compute, init) = make_compute(args)?;
+    let mut opts = JobOptions::mock().with_compute(compute).with_data(
+        args.get_usize("per-shard", 128)?,
+        args.get_usize("test-n", 256)?,
+        if args.flags.contains_key("dirichlet") {
+            flame::data::Partition::Dirichlet(args.get("dirichlet", "0.5").parse()?)
+        } else {
+            flame::data::Partition::Iid
+        },
+        args.get_u64("seed", 7)?,
+    );
+    if let Some(init) = init {
+        opts = opts.with_init(init);
+    }
+    let mut ctl = Controller::new(Arc::new(Store::in_memory()));
+    let report = ctl.submit(spec, opts)?;
+    println!(
+        "job {} done: workers={} wall={:.2}s vtime={:.2}s bytes={}",
+        report.job, report.workers, report.wall_s, report.vtime_s, report.total_bytes
+    );
+    for (series, label) in [
+        ("loss", "loss"),
+        ("acc", "accuracy"),
+        ("round_time_s", "round time (s)"),
+    ] {
+        let s = report.metrics.series(series);
+        if !s.is_empty() {
+            let line: Vec<String> = s.iter().map(|(r, v)| format!("{r}:{v:.4}")).collect();
+            println!("{label}: {}", line.join(" "));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fig10(args: &Args) -> Result<()> {
+    let rounds = args.get_u64("rounds", 36)?;
+    let o = sim::SimOptions::mock();
+    let (hfl, cofl) = sim::run_fig10(rounds, &o)?;
+    println!("round,hfl_round_time_s,cofl_round_time_s,cofl_active_aggs");
+    let h = hfl.metrics.series("round_time_s");
+    let c = cofl.metrics.series("round_time_s");
+    let a = cofl.metrics.series("active_aggregators");
+    for i in 0..h.len().min(c.len()) {
+        println!(
+            "{},{:.3},{:.3},{}",
+            i,
+            h[i].1,
+            c[i].1,
+            a.get(i).map(|x| x.1).unwrap_or(f64::NAN)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig11(args: &Args) -> Result<()> {
+    let rounds = args.get_u64("rounds", 20)?;
+    let o = sim::SimOptions::mock();
+    let (cfl, hybrid) = sim::run_fig11(rounds, &o)?;
+    println!(
+        "# C-FL:    final acc {:.3} at vtime {:.1}s, {:.1} MB/round uploaded",
+        cfl.final_acc.unwrap_or(0.0),
+        cfl.vtime_s,
+        sim::upload_mb_per_round(&cfl, rounds)
+    );
+    println!(
+        "# Hybrid:  final acc {:.3} at vtime {:.1}s, {:.1} MB/round uploaded",
+        hybrid.final_acc.unwrap_or(0.0),
+        hybrid.vtime_s,
+        sim::upload_mb_per_round(&hybrid, rounds)
+    );
+    println!("round,cfl_vtime_s,cfl_acc,hybrid_vtime_s,hybrid_acc");
+    let (cv, ca) = (cfl.metrics.series("vtime_s"), cfl.metrics.series("acc"));
+    let (hv, ha) = (hybrid.metrics.series("vtime_s"), hybrid.metrics.series("acc"));
+    for i in 0..cv.len().max(hv.len()) {
+        let f = |s: &[(u64, f64)], i: usize| {
+            s.get(i).map(|x| format!("{:.4}", x.1)).unwrap_or_default()
+        };
+        println!("{},{},{},{},{}", i, f(&cv, i), f(&ca, i), f(&hv, i), f(&ha, i));
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.clone(), r.to_vec()),
+        None => {
+            eprintln!("usage: flame <expand|spec|run|fig10|fig11> [--flags]");
+            std::process::exit(2);
+        }
+    };
+    let result = Args::parse(&rest).and_then(|args| match cmd.as_str() {
+        "expand" => cmd_expand(&args),
+        "spec" => cmd_spec(&args),
+        "run" => cmd_run(&args),
+        "fig10" => cmd_fig10(&args),
+        "fig11" => cmd_fig11(&args),
+        other => bail!("unknown command '{other}'"),
+    });
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,196 @@
+//! Metrics collection: per-round series, traffic counters and CSV emission.
+//!
+//! The controller hands every worker a [`MetricsHub`] handle; roles record
+//! round events (loss, accuracy, per-round virtual time, bytes moved) and
+//! the bench harnesses dump the series as the CSV rows behind each paper
+//! figure (`bench_out/figNN.csv`).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::net::VTime;
+
+/// One recorded sample: `(series, round, value)` plus the emitting worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub worker: String,
+    pub series: String,
+    pub round: u64,
+    pub value: f64,
+}
+
+/// Thread-safe metrics sink shared by all workers of a job.
+#[derive(Default, Debug)]
+pub struct MetricsHub {
+    samples: Mutex<Vec<Sample>>,
+    bytes_sent: AtomicU64,
+    messages: AtomicU64,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, worker: &str, series: &str, round: u64, value: f64) {
+        self.samples.lock().unwrap().push(Sample {
+            worker: worker.to_string(),
+            series: series.to_string(),
+            round,
+            value,
+        });
+    }
+
+    pub fn add_traffic(&self, bytes: u64) {
+        self.bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    /// All samples of one series, sorted by round.
+    pub fn series(&self, name: &str) -> Vec<(u64, f64)> {
+        let mut out: Vec<(u64, f64)> = self
+            .samples
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.series == name)
+            .map(|s| (s.round, s.value))
+            .collect();
+        out.sort_by_key(|(r, _)| *r);
+        out
+    }
+
+    /// Last value of a series, if any.
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.series(name).last().map(|(_, v)| *v)
+    }
+
+    pub fn all(&self) -> Vec<Sample> {
+        self.samples.lock().unwrap().clone()
+    }
+
+    /// Merge several series into one CSV: `round,<series...>` (missing cells
+    /// empty). Returns the CSV text.
+    pub fn to_csv(&self, series: &[&str]) -> String {
+        let mut rows: BTreeMap<u64, BTreeMap<&str, f64>> = BTreeMap::new();
+        for name in series {
+            for (round, v) in self.series(name) {
+                rows.entry(round).or_default().insert(name, v);
+            }
+        }
+        let mut out = String::from("round");
+        for name in series {
+            out.push(',');
+            out.push_str(name);
+        }
+        out.push('\n');
+        for (round, cells) in rows {
+            out.push_str(&round.to_string());
+            for name in series {
+                out.push(',');
+                if let Some(v) = cells.get(name) {
+                    out.push_str(&format!("{v}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>, series: &[&str]) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_csv(series))?;
+        Ok(())
+    }
+}
+
+/// Format a virtual duration for logs.
+pub fn fmt_vtime(us: VTime) -> String {
+    if us >= 1_000_000 {
+        format!("{:.2}s", us as f64 / 1e6)
+    } else if us >= 1000 {
+        format!("{:.1}ms", us as f64 / 1e3)
+    } else {
+        format!("{us}us")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_series() {
+        let m = MetricsHub::new();
+        m.record("w0", "loss", 2, 0.5);
+        m.record("w0", "loss", 1, 0.9);
+        m.record("w1", "acc", 1, 0.4);
+        assert_eq!(m.series("loss"), vec![(1, 0.9), (2, 0.5)]);
+        assert_eq!(m.last("loss"), Some(0.5));
+        assert_eq!(m.last("nope"), None);
+    }
+
+    #[test]
+    fn traffic_counters() {
+        let m = MetricsHub::new();
+        m.add_traffic(100);
+        m.add_traffic(250);
+        assert_eq!(m.total_bytes(), 350);
+        assert_eq!(m.total_messages(), 2);
+    }
+
+    #[test]
+    fn csv_layout() {
+        let m = MetricsHub::new();
+        m.record("g", "loss", 1, 0.5);
+        m.record("g", "acc", 1, 0.9);
+        m.record("g", "loss", 2, 0.25);
+        let csv = m.to_csv(&["loss", "acc"]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "round,loss,acc");
+        assert_eq!(lines[1], "1,0.5,0.9");
+        assert_eq!(lines[2], "2,0.25,");
+    }
+
+    #[test]
+    fn vtime_formatting() {
+        assert_eq!(fmt_vtime(10), "10us");
+        assert_eq!(fmt_vtime(1_500), "1.5ms");
+        assert_eq!(fmt_vtime(2_500_000), "2.50s");
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        use std::sync::Arc;
+        let m = Arc::new(MetricsHub::new());
+        let hs: Vec<_> = (0..4)
+            .map(|t| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        m.record(&format!("w{t}"), "x", i, i as f64);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.all().len(), 400);
+    }
+}

@@ -1,0 +1,315 @@
+//! Model parameter container: flat-vector layout, init, and vector math.
+//!
+//! The L2/L3 contract is a flat `f32` parameter vector (see
+//! `python/compile/model.py`); this module mirrors the layout recorded in
+//! `artifacts/spec.json`, performs the Rust-side He initialisation, and
+//! provides the small vector-math kernel set (axpy/scale/norm/sub) the
+//! server-side algorithms in [`crate::algos`] are built from.
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+use crate::prng::Rng;
+
+/// Shape/offset of one named parameter in the flat vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One model's layout as lowered by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub d: usize,
+    pub d_pad: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+impl ModelSpec {
+    pub fn from_json(name: &str, j: &Json) -> Result<Self> {
+        let d = j.get("d").as_usize().context("model spec missing d")?;
+        let d_pad = j
+            .get("d_pad")
+            .as_usize()
+            .context("model spec missing d_pad")?;
+        let mut params = Vec::new();
+        for p in j.get("params").as_arr().context("missing params")? {
+            let shape: Vec<usize> = p
+                .get("shape")
+                .as_arr()
+                .context("param missing shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            params.push(ParamSpec {
+                name: p
+                    .get("name")
+                    .as_str()
+                    .context("param missing name")?
+                    .to_string(),
+                shape,
+                offset: p.get("offset").as_usize().context("param offset")?,
+                size: p.get("size").as_usize().context("param size")?,
+            });
+        }
+        let spec = Self {
+            name: name.to_string(),
+            d,
+            d_pad,
+            params,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let mut off = 0;
+        for p in &self.params {
+            if p.offset != off {
+                bail!("param '{}' offset {} != expected {off}", p.name, p.offset);
+            }
+            let size: usize = p.shape.iter().product();
+            if size != p.size {
+                bail!("param '{}' size mismatch", p.name);
+            }
+            off += p.size;
+        }
+        if off != self.d {
+            bail!("param sizes sum to {off}, spec says d={}", self.d);
+        }
+        if self.d_pad < self.d {
+            bail!("d_pad < d");
+        }
+        Ok(())
+    }
+
+    /// He-initialised flat parameter vector (matrices ~ N(0, 2/fan_in);
+    /// biases zero; layer-norm gains one) — the same *distribution* as the
+    /// python-side init, as required by DESIGN.md.
+    pub fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut flat = vec![0f32; self.d_pad];
+        for p in &self.params {
+            let dst = &mut flat[p.offset..p.offset + p.size];
+            if p.shape.len() >= 2 {
+                let fan_in = p.shape[0] as f64;
+                let std = (2.0 / fan_in).sqrt();
+                for v in dst.iter_mut() {
+                    *v = (rng.normal() * std) as f32;
+                }
+            } else if p.name.ends_with("_g") {
+                dst.fill(1.0);
+            } // biases & others stay zero
+        }
+        flat
+    }
+}
+
+// ------------------------------------------------------------ vector math
+
+/// `y += a * x` (lengths must match).
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `y *= a`.
+pub fn scale(y: &mut [f32], a: f32) {
+    for yi in y.iter_mut() {
+        *yi *= a;
+    }
+}
+
+/// `out = a - b`.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Euclidean norm.
+pub fn l2_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Weighted sum of rows: `out[d] = Σ_k w[k]·rows[k][d]` — the Rust oracle
+/// for the Pallas aggregation kernel (cross-checked in integration tests).
+pub fn weighted_sum(rows: &[&[f32]], weights: &[f32]) -> Vec<f32> {
+    assert_eq!(rows.len(), weights.len());
+    assert!(!rows.is_empty());
+    let d = rows[0].len();
+    let mut out = vec![0f32; d];
+    for (row, &w) in rows.iter().zip(weights) {
+        axpy(&mut out, w, row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{check, ensure, ensure_close};
+
+    fn toy_spec() -> ModelSpec {
+        ModelSpec {
+            name: "toy".into(),
+            d: 10,
+            d_pad: 12,
+            params: vec![
+                ParamSpec {
+                    name: "w0".into(),
+                    shape: vec![2, 4],
+                    offset: 0,
+                    size: 8,
+                },
+                ParamSpec {
+                    name: "b0".into(),
+                    shape: vec![2],
+                    offset: 8,
+                    size: 2,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn parses_spec_json() {
+        let text = r#"{
+            "d": 10, "d_pad": 12,
+            "params": [
+                {"name": "w0", "shape": [2, 4], "offset": 0, "size": 8},
+                {"name": "b0", "shape": [2], "offset": 8, "size": 2}
+            ]
+        }"#;
+        let spec = ModelSpec::from_json("toy", &Json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.d, 10);
+        assert_eq!(spec.params[1].name, "b0");
+    }
+
+    #[test]
+    fn rejects_inconsistent_layout() {
+        let bad = r#"{
+            "d": 10, "d_pad": 12,
+            "params": [
+                {"name": "w0", "shape": [2, 4], "offset": 0, "size": 8},
+                {"name": "b0", "shape": [2], "offset": 9, "size": 2}
+            ]
+        }"#;
+        assert!(ModelSpec::from_json("toy", &Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn init_statistics() {
+        let spec = ModelSpec {
+            name: "big".into(),
+            d: 256 * 128,
+            d_pad: 256 * 128,
+            params: vec![ParamSpec {
+                name: "w".into(),
+                shape: vec![256, 128],
+                offset: 0,
+                size: 256 * 128,
+            }],
+        };
+        let flat = spec.init(0);
+        let mean: f64 = flat.iter().map(|&x| x as f64).sum::<f64>() / flat.len() as f64;
+        let var: f64 =
+            flat.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / flat.len() as f64;
+        assert!(mean.abs() < 0.01);
+        let expect = 2.0 / 256.0;
+        assert!((var - expect).abs() < 0.1 * expect, "var={var} expect={expect}");
+    }
+
+    #[test]
+    fn init_biases_zero_padding_zero() {
+        let spec = toy_spec();
+        let flat = spec.init(1);
+        assert!(flat[8..10].iter().all(|&b| b == 0.0)); // biases
+        assert!(flat[10..].iter().all(|&p| p == 0.0)); // padding
+        assert!(flat[..8].iter().any(|&w| w != 0.0)); // weights random
+    }
+
+    #[test]
+    fn init_deterministic_in_seed() {
+        let spec = toy_spec();
+        assert_eq!(spec.init(5), spec.init(5));
+        assert_ne!(spec.init(5), spec.init(6));
+    }
+
+    #[test]
+    fn vector_math() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![1.5, 2.0, 2.5]);
+        assert_eq!(sub(&[3.0, 3.0], &[1.0, 2.0]), vec![2.0, 1.0]);
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_sum_is_convex_combination_property() {
+        check(
+            "weighted-sum-envelope",
+            11,
+            200,
+            |r| {
+                let k = 1 + r.below(6) as usize;
+                let d = 1 + r.below(32) as usize;
+                let rows: Vec<Vec<f32>> = (0..k)
+                    .map(|_| (0..d).map(|_| r.normal() as f32).collect())
+                    .collect();
+                (rows, d)
+            },
+            |(rows, d)| {
+                let k = rows.len();
+                let w = vec![1.0 / k as f32; k];
+                let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+                let out = weighted_sum(&refs, &w);
+                for j in 0..*d {
+                    let mx = rows.iter().map(|r| r[j]).fold(f32::MIN, f32::max);
+                    let mn = rows.iter().map(|r| r[j]).fold(f32::MAX, f32::min);
+                    ensure(
+                        out[j] <= mx + 1e-5 && out[j] >= mn - 1e-5,
+                        format!("coordinate {j} outside envelope"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn weighted_sum_linearity_property() {
+        check(
+            "weighted-sum-linearity",
+            12,
+            100,
+            |r| {
+                let d = 1 + r.below(16) as usize;
+                let a: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+                let b: Vec<f32> = (0..d).map(|_| r.normal() as f32).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let both = weighted_sum(&[a, b], &[1.0, 1.0]);
+                let sep_a = weighted_sum(&[a], &[1.0]);
+                let sep_b = weighted_sum(&[b], &[1.0]);
+                for j in 0..a.len() {
+                    ensure_close(
+                        both[j] as f64,
+                        (sep_a[j] + sep_b[j]) as f64,
+                        1e-5,
+                        "linearity",
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,395 @@
+//! Virtual-time network model (the paper's `tc`-shaped testbed stand-in).
+//!
+//! The paper's §6.1/§6.2 experiments emulate heterogeneous links (a 1 Mbps
+//! straggler uplink vs 100 Mbps peer links) with Linux `tc` and measure
+//! wall-clock effects. Re-running that in real time would cost hours of
+//! sleeping, so Flame's channels instead account *virtual* time: every
+//! message transfer costs `latency + bytes * 8 / bandwidth` on each hop, and
+//! each worker carries a [`VClock`] that advances on compute and merges on
+//! receive (`recv_clock = max(recv_clock, send_clock + transfer)`). Round
+//! times reported by the benches are therefore critical-path times over the
+//! communication DAG — exactly what `tc` + wall clock measures, but
+//! deterministic and fast.
+//!
+//! Topology knobs mirror `tc` usage: a default link, per-node uplink /
+//! downlink shaping, and per-pair overrides. Broker-backed channels route
+//! via a hub node (two hops); p2p channels use the direct link.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+/// Virtual time in microseconds.
+pub type VTime = u64;
+
+/// A monotone per-worker virtual clock.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct VClock(pub VTime);
+
+impl VClock {
+    pub fn advance(&mut self, dt: VTime) -> VTime {
+        self.0 += dt;
+        self.0
+    }
+
+    /// Merge an incoming event timestamp (message arrival): clocks never go
+    /// backwards, which is the causality invariant property-tested below.
+    pub fn merge(&mut self, t: VTime) -> VTime {
+        self.0 = self.0.max(t);
+        self.0
+    }
+
+    pub fn now(&self) -> VTime {
+        self.0
+    }
+}
+
+/// Directed link shape: bits/second + one-way latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    pub bandwidth_bps: f64,
+    pub latency_us: VTime,
+}
+
+impl LinkSpec {
+    pub fn new(bandwidth_bps: f64, latency_us: VTime) -> Self {
+        assert!(bandwidth_bps > 0.0, "bandwidth must be positive");
+        Self {
+            bandwidth_bps,
+            latency_us,
+        }
+    }
+
+    pub fn mbps(mbps: f64, latency_us: VTime) -> Self {
+        Self::new(mbps * 1e6, latency_us)
+    }
+
+    /// Transfer cost of `bytes` over this link, in virtual microseconds.
+    pub fn transfer_us(&self, bytes: u64) -> VTime {
+        let secs = (bytes as f64 * 8.0) / self.bandwidth_bps;
+        self.latency_us + (secs * 1e6).round() as VTime
+    }
+}
+
+impl Default for LinkSpec {
+    /// 1 Gbps, 200 µs one-way — a LAN-ish default.
+    fn default() -> Self {
+        Self::new(1e9, 200)
+    }
+}
+
+/// A shaping rule active during a virtual-time window (`tc` scripts change
+/// shaping over the course of an experiment; this is the virtual-time
+/// equivalent — e.g. Fig 10's congestion that starts at round 6).
+#[derive(Debug, Clone, Copy)]
+struct TimedSpec {
+    spec: LinkSpec,
+    from: VTime,
+    until: VTime,
+}
+
+impl TimedSpec {
+    fn active_at(&self, t: VTime) -> bool {
+        t >= self.from && t < self.until
+    }
+}
+
+fn lookup(rules: &[TimedSpec], t: VTime) -> Option<LinkSpec> {
+    // latest-added active rule wins
+    rules.iter().rev().find(|r| r.active_at(t)).map(|r| r.spec)
+}
+
+#[derive(Default)]
+struct Shaping {
+    default: LinkSpec,
+    /// tc-style per-node egress shaping (applies to the sending side).
+    uplink: HashMap<String, Vec<TimedSpec>>,
+    /// per-node ingress shaping (applies to the receiving side).
+    downlink: HashMap<String, Vec<TimedSpec>>,
+    /// exact (from, to) overrides — strongest precedence.
+    pair: HashMap<(String, String), Vec<TimedSpec>>,
+}
+
+/// The shared virtual network. Cheap to clone handles around via `Arc`.
+pub struct VirtualNet {
+    shaping: RwLock<Shaping>,
+}
+
+impl Default for VirtualNet {
+    fn default() -> Self {
+        Self::new(LinkSpec::default())
+    }
+}
+
+impl VirtualNet {
+    pub fn new(default: LinkSpec) -> Self {
+        Self {
+            shaping: RwLock::new(Shaping {
+                default,
+                ..Default::default()
+            }),
+        }
+    }
+
+    /// Replace the default (unshaped) link of the whole fabric.
+    pub fn set_default(&self, spec: LinkSpec) {
+        self.shaping.write().unwrap().default = spec;
+    }
+
+    /// Shape a node's egress (like `tc qdisc ... dev eth0 egress`).
+    pub fn set_uplink(&self, node: &str, spec: LinkSpec) {
+        self.set_uplink_window(node, spec, 0, VTime::MAX);
+    }
+
+    /// Egress shaping active only during `[from, until)` virtual time.
+    pub fn set_uplink_window(&self, node: &str, spec: LinkSpec, from: VTime, until: VTime) {
+        self.shaping
+            .write()
+            .unwrap()
+            .uplink
+            .entry(node.to_string())
+            .or_default()
+            .push(TimedSpec { spec, from, until });
+    }
+
+    pub fn clear_uplink(&self, node: &str) {
+        self.shaping.write().unwrap().uplink.remove(node);
+    }
+
+    pub fn set_downlink(&self, node: &str, spec: LinkSpec) {
+        self.shaping
+            .write()
+            .unwrap()
+            .downlink
+            .entry(node.to_string())
+            .or_default()
+            .push(TimedSpec {
+                spec,
+                from: 0,
+                until: VTime::MAX,
+            });
+    }
+
+    /// Exact-pair override (highest precedence).
+    pub fn set_pair(&self, from: &str, to: &str, spec: LinkSpec) {
+        self.set_pair_window(from, to, spec, 0, VTime::MAX);
+    }
+
+    /// Pair override active only during `[from_t, until_t)` virtual time.
+    pub fn set_pair_window(
+        &self,
+        from: &str,
+        to: &str,
+        spec: LinkSpec,
+        from_t: VTime,
+        until_t: VTime,
+    ) {
+        self.shaping
+            .write()
+            .unwrap()
+            .pair
+            .entry((from.to_string(), to.to_string()))
+            .or_default()
+            .push(TimedSpec {
+                spec,
+                from: from_t,
+                until: until_t,
+            });
+    }
+
+    /// Effective link for one hop at virtual time `at`: pair override, else
+    /// the *slowest* of (sender uplink, receiver downlink, default) —
+    /// matching how serial `tc` shapers compose on a path (bottleneck
+    /// bandwidth; latency approximated by the max of the shapers').
+    fn hop(&self, from: &str, to: &str, at: VTime) -> LinkSpec {
+        let g = self.shaping.read().unwrap();
+        if let Some(s) = g
+            .pair
+            .get(&(from.to_string(), to.to_string()))
+            .and_then(|r| lookup(r, at))
+        {
+            return s;
+        }
+        let mut bw = g.default.bandwidth_bps;
+        let mut lat = g.default.latency_us;
+        if let Some(u) = g.uplink.get(from).and_then(|r| lookup(r, at)) {
+            bw = bw.min(u.bandwidth_bps);
+            lat = lat.max(u.latency_us);
+        }
+        if let Some(d) = g.downlink.get(to).and_then(|r| lookup(r, at)) {
+            bw = bw.min(d.bandwidth_bps);
+            lat = lat.max(d.latency_us);
+        }
+        LinkSpec::new(bw, lat)
+    }
+
+    /// Direct (p2p) transfer cost for a send occurring at virtual time `at`.
+    pub fn transfer_at_us(&self, from: &str, to: &str, bytes: u64, at: VTime) -> VTime {
+        self.hop(from, to, at).transfer_us(bytes)
+    }
+
+    /// Direct (p2p) transfer cost (time-independent shaping).
+    pub fn transfer_us(&self, from: &str, to: &str, bytes: u64) -> VTime {
+        self.transfer_at_us(from, to, bytes, 0)
+    }
+
+    /// Broker-routed transfer cost: `from -> hub` + `hub -> to`.
+    pub fn transfer_via_at_us(
+        &self,
+        from: &str,
+        hub: &str,
+        to: &str,
+        bytes: u64,
+        at: VTime,
+    ) -> VTime {
+        let first = self.hop(from, hub, at).transfer_us(bytes);
+        self.hop(hub, to, at + first).transfer_us(bytes) + first
+    }
+
+    /// Broker-routed transfer cost (time-independent shaping).
+    pub fn transfer_via_us(&self, from: &str, hub: &str, to: &str, bytes: u64) -> VTime {
+        self.transfer_via_at_us(from, hub, to, bytes, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proputil::{check, ensure};
+
+    #[test]
+    fn transfer_math() {
+        // 1 MB over 8 Mbps = 1 s = 1e6 us, plus 100 us latency.
+        let l = LinkSpec::new(8e6, 100);
+        assert_eq!(l.transfer_us(1_000_000), 1_000_100);
+        // zero bytes costs just latency
+        assert_eq!(l.transfer_us(0), 100);
+    }
+
+    #[test]
+    fn default_is_symmetric() {
+        let net = VirtualNet::default();
+        assert_eq!(net.transfer_us("a", "b", 1000), net.transfer_us("b", "a", 1000));
+    }
+
+    #[test]
+    fn uplink_shaping_slows_sender_only() {
+        let net = VirtualNet::new(LinkSpec::mbps(100.0, 0));
+        net.set_uplink("straggler", LinkSpec::mbps(1.0, 0));
+        let fast = net.transfer_us("peer", "agg", 1_000_000);
+        let slow = net.transfer_us("straggler", "agg", 1_000_000);
+        assert_eq!(fast, 80_000); // 8 Mbit over 100 Mbps = 80 ms
+        assert_eq!(slow, 8_000_000); // 8 Mbit over 1 Mbps = 8 s
+        // Receiving at the straggler is NOT shaped by its uplink.
+        assert_eq!(net.transfer_us("agg", "straggler", 1_000_000), 80_000);
+    }
+
+    #[test]
+    fn pair_override_wins() {
+        let net = VirtualNet::new(LinkSpec::mbps(100.0, 10));
+        net.set_uplink("a", LinkSpec::mbps(1.0, 10));
+        net.set_pair("a", "b", LinkSpec::mbps(50.0, 5));
+        assert_eq!(
+            net.transfer_us("a", "b", 1_000_000),
+            LinkSpec::mbps(50.0, 5).transfer_us(1_000_000)
+        );
+        // other destinations still see the uplink shaping
+        assert!(net.transfer_us("a", "c", 1_000_000) > 1_000_000);
+    }
+
+    #[test]
+    fn broker_route_is_two_hops() {
+        let net = VirtualNet::new(LinkSpec::mbps(10.0, 100));
+        let direct = net.transfer_us("a", "b", 500_000);
+        let via = net.transfer_via_us("a", "hub", "b", 500_000);
+        assert_eq!(via, 2 * direct);
+    }
+
+    #[test]
+    fn bottleneck_composition() {
+        let net = VirtualNet::new(LinkSpec::mbps(1000.0, 1));
+        net.set_uplink("a", LinkSpec::mbps(10.0, 1));
+        net.set_downlink("b", LinkSpec::mbps(5.0, 1));
+        // path bottleneck = 5 Mbps
+        assert_eq!(
+            net.transfer_us("a", "b", 1_000_000),
+            LinkSpec::mbps(5.0, 1).transfer_us(1_000_000)
+        );
+    }
+
+    #[test]
+    fn windowed_shaping_applies_only_in_window() {
+        let net = VirtualNet::new(LinkSpec::mbps(100.0, 0));
+        net.set_uplink_window("s", LinkSpec::mbps(1.0, 0), 1_000_000, 2_000_000);
+        let fast = LinkSpec::mbps(100.0, 0).transfer_us(1_000_000);
+        let slow = LinkSpec::mbps(1.0, 0).transfer_us(1_000_000);
+        assert_eq!(net.transfer_at_us("s", "a", 1_000_000, 0), fast);
+        assert_eq!(net.transfer_at_us("s", "a", 1_000_000, 1_500_000), slow);
+        assert_eq!(net.transfer_at_us("s", "a", 1_000_000, 2_000_000), fast);
+    }
+
+    #[test]
+    fn later_rules_override_earlier() {
+        let net = VirtualNet::new(LinkSpec::mbps(100.0, 0));
+        net.set_uplink("s", LinkSpec::mbps(10.0, 0));
+        net.set_uplink("s", LinkSpec::mbps(1.0, 0));
+        assert_eq!(
+            net.transfer_us("s", "a", 1_000_000),
+            LinkSpec::mbps(1.0, 0).transfer_us(1_000_000)
+        );
+    }
+
+    #[test]
+    fn broker_second_hop_evaluated_after_first_hop_elapses() {
+        // a window that opens between the two hops of a broker route must
+        // affect only the second hop
+        let net = VirtualNet::new(LinkSpec::mbps(8.0, 0));
+        // 1 MB at 8 Mbps = 1s per hop; congest hub->b from t=1s on
+        net.set_pair_window("hub", "b", LinkSpec::mbps(0.8, 0), 1_000_000, VTime::MAX);
+        let t = net.transfer_via_at_us("a", "hub", "b", 1_000_000, 0);
+        // first hop 1s (uncongested), second hop starts at t=1s -> 10s
+        assert_eq!(t, 11_000_000);
+        // sending before the window with a fast second hop
+        let t0 = net.transfer_via_at_us("a", "hub", "b", 100, 0);
+        assert!(t0 < 1_000);
+    }
+
+    #[test]
+    fn clock_merge_is_monotone_property() {
+        check(
+            "vclock-monotone",
+            42,
+            500,
+            |r| {
+                let ops: Vec<(bool, u64)> = (0..20)
+                    .map(|_| (r.f64() < 0.5, r.below(1_000_000)))
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut c = VClock::default();
+                let mut last = 0;
+                for (is_advance, v) in ops {
+                    let now = if *is_advance { c.advance(*v) } else { c.merge(*v) };
+                    ensure(now >= last, format!("clock went backwards: {now} < {last}"))?;
+                    last = now;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn arrival_never_precedes_send_property() {
+        check(
+            "causality",
+            43,
+            500,
+            |r| (r.below(1 << 30), r.below(10_000_000) as u64, r.below(1 << 20)),
+            |(send_t, _bw_sel, bytes)| {
+                let net = VirtualNet::default();
+                let arrival = send_t + net.transfer_us("a", "b", *bytes);
+                ensure(arrival >= *send_t, "arrival precedes send")
+            },
+        );
+    }
+}

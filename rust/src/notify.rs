@@ -1,0 +1,152 @@
+//! Notifier — the management plane's event service (paper §5.1).
+//!
+//! The controller pushes event signals; agents and deployers subscribe and
+//! react (e.g. fetch job info on a deploy event, stop workers on revoke).
+//! Implemented as a fan-out pub/sub bus over std mpsc channels with
+//! per-subscriber topic filters.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Mutex;
+
+use crate::json::Json;
+
+/// Event kinds the management plane emits (§5.2 workflow).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A compute-creation request for deployers (step 5/6).
+    Deploy,
+    /// Tear a job's resources down (revoke deploy).
+    Revoke,
+    /// A worker reported a status change.
+    WorkerStatus,
+    /// Job finished (success or failure).
+    JobDone,
+}
+
+/// One event on the bus.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub kind: EventKind,
+    pub job: String,
+    pub payload: Json,
+}
+
+struct Subscriber {
+    kind: Option<EventKind>,
+    job: Option<String>,
+    tx: Sender<Event>,
+}
+
+/// The notification service.
+#[derive(Default)]
+pub struct Notifier {
+    subs: Mutex<Vec<Subscriber>>,
+}
+
+impl Notifier {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Subscribe with optional kind/job filters (None = wildcard).
+    pub fn subscribe(&self, kind: Option<EventKind>, job: Option<&str>) -> Receiver<Event> {
+        let (tx, rx) = mpsc::channel();
+        self.subs.lock().unwrap().push(Subscriber {
+            kind,
+            job: job.map(str::to_string),
+            tx,
+        });
+        rx
+    }
+
+    /// Publish an event; returns how many subscribers received it. Dead
+    /// subscribers (dropped receivers) are pruned.
+    pub fn publish(&self, event: Event) -> usize {
+        let mut subs = self.subs.lock().unwrap();
+        let mut delivered = 0;
+        subs.retain(|s| {
+            let matches = s.kind.map_or(true, |k| k == event.kind)
+                && s.job.as_deref().map_or(true, |j| j == event.job);
+            if !matches {
+                return true;
+            }
+            match s.tx.send(event.clone()) {
+                Ok(()) => {
+                    delivered += 1;
+                    true
+                }
+                Err(_) => false, // receiver dropped: prune
+            }
+        });
+        delivered
+    }
+
+    pub fn emit(&self, kind: EventKind, job: &str, payload: Json) -> usize {
+        self.publish(Event {
+            kind,
+            job: job.to_string(),
+            payload,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wildcard_subscriber_sees_everything() {
+        let n = Notifier::new();
+        let rx = n.subscribe(None, None);
+        n.emit(EventKind::Deploy, "j1", Json::Null);
+        n.emit(EventKind::JobDone, "j2", Json::Null);
+        assert_eq!(rx.try_iter().count(), 2);
+    }
+
+    #[test]
+    fn kind_filter() {
+        let n = Notifier::new();
+        let rx = n.subscribe(Some(EventKind::Revoke), None);
+        n.emit(EventKind::Deploy, "j1", Json::Null);
+        assert_eq!(n.emit(EventKind::Revoke, "j1", Json::Null), 1);
+        let events: Vec<Event> = rx.try_iter().collect();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].kind, EventKind::Revoke);
+    }
+
+    #[test]
+    fn job_filter() {
+        let n = Notifier::new();
+        let rx = n.subscribe(None, Some("j2"));
+        n.emit(EventKind::Deploy, "j1", Json::Null);
+        n.emit(EventKind::Deploy, "j2", Json::from("payload"));
+        let events: Vec<Event> = rx.try_iter().collect();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].payload.as_str(), Some("payload"));
+    }
+
+    #[test]
+    fn dead_subscribers_are_pruned() {
+        let n = Notifier::new();
+        let rx = n.subscribe(None, None);
+        drop(rx);
+        assert_eq!(n.emit(EventKind::Deploy, "j", Json::Null), 0);
+        // second publish confirms the dead sub was removed
+        assert_eq!(n.emit(EventKind::Deploy, "j", Json::Null), 0);
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        use std::sync::Arc;
+        let n = Arc::new(Notifier::new());
+        let rx = n.subscribe(Some(EventKind::WorkerStatus), None);
+        let n2 = n.clone();
+        let h = std::thread::spawn(move || {
+            for i in 0..10 {
+                n2.emit(EventKind::WorkerStatus, &format!("j{i}"), Json::Null);
+            }
+        });
+        h.join().unwrap();
+        assert_eq!(rx.try_iter().count(), 10);
+    }
+}

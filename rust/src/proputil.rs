@@ -1,0 +1,75 @@
+//! Minimal property-testing helper (substrate; no `proptest` offline).
+//!
+//! [`check`] runs a property over `n` generated cases from a seeded [`Rng`]
+//! and, on failure, reports the case index and the seed that reproduces it.
+//! Generators are plain closures over the RNG, which keeps shrinking out of
+//! scope but makes every failure a one-line repro (`seed`, `case`).
+
+use crate::prng::Rng;
+
+/// Run `prop` over `cases` generated inputs. Panics with a reproducible
+/// seed/case report on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork(case as u64);
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers usable inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let denom = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() / denom <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        check(
+            "square-nonneg",
+            1,
+            200,
+            |r| r.normal(),
+            |x| ensure(x * x >= 0.0, "square must be non-negative"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failing_case() {
+        check("always-fails", 2, 10, |r| r.f64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn ensure_close_tolerates() {
+        assert!(ensure_close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-6, "x").is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Compute & dataset registries with realm-scoped matching (paper §4.3).
+//!
+//! Flame decouples infrastructure from learning jobs: cluster admins
+//! register compute independently of data owners registering dataset
+//! metadata, and the controller couples them **at deployment time**. The
+//! `realm` attribute defines hierarchical accessibility boundaries (e.g.
+//! GDPR regions): a dataset with realm `eu/west` may only be trained on
+//! compute whose realm lies inside (or above) `eu/west`.
+//!
+//! Realms are `/`-separated paths; `*` is the wildcard. Compatibility is
+//! prefix containment in either direction: `eu` compute can host `eu/west`
+//! data (the cluster spans the region) and `eu/west/dc1` compute can host
+//! `eu/west` data (the cluster lies inside the boundary).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::json::Json;
+use crate::tag::DatasetRef;
+
+/// A registered compute cluster (the deployer registers these — §5.2 step 1).
+#[derive(Debug, Clone)]
+pub struct ComputeSpec {
+    pub name: String,
+    pub realm: String,
+    /// Advisory worker capacity used for least-loaded placement.
+    pub capacity: usize,
+    /// Which orchestrator backs this cluster ("sim", "k8s", ...); resolved
+    /// by the deployer layer.
+    pub orchestrator: String,
+}
+
+impl ComputeSpec {
+    pub fn new(name: impl Into<String>, realm: impl Into<String>, capacity: usize) -> Self {
+        Self {
+            name: name.into(),
+            realm: realm.into(),
+            capacity,
+            orchestrator: "sim".into(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("name", self.name.as_str());
+        o.insert("realm", self.realm.as_str());
+        o.insert("capacity", self.capacity);
+        o.insert("orchestrator", self.orchestrator.as_str());
+        Json::Obj(o)
+    }
+}
+
+/// Are two realms mutually accessible (prefix containment either way)?
+pub fn realm_compatible(a: &str, b: &str) -> bool {
+    if a == "*" || b == "*" {
+        return true;
+    }
+    let ap: Vec<&str> = a.split('/').collect();
+    let bp: Vec<&str> = b.split('/').collect();
+    let n = ap.len().min(bp.len());
+    ap[..n] == bp[..n]
+}
+
+#[derive(Default)]
+struct Load {
+    assigned: HashMap<String, usize>,
+    rr: usize,
+}
+
+/// The management-plane registry of computes and datasets.
+#[derive(Default)]
+pub struct Registry {
+    computes: Vec<ComputeSpec>,
+    datasets: Vec<DatasetRef>,
+    load: Mutex<Load>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A registry with one unconstrained compute — the fiab-style single-box
+    /// emulation default.
+    pub fn single_box() -> Self {
+        let mut r = Self::new();
+        r.register_compute(ComputeSpec::new("box", "*", usize::MAX));
+        r
+    }
+
+    pub fn register_compute(&mut self, c: ComputeSpec) {
+        self.computes.push(c);
+    }
+
+    pub fn register_dataset(&mut self, d: DatasetRef) {
+        self.datasets.push(d);
+    }
+
+    pub fn computes(&self) -> &[ComputeSpec] {
+        &self.computes
+    }
+
+    pub fn datasets(&self) -> &[DatasetRef] {
+        &self.datasets
+    }
+
+    pub fn dataset(&self, name: &str) -> Option<&DatasetRef> {
+        self.datasets.iter().find(|d| d.name == name)
+    }
+
+    /// Algorithm 1's `GetComputeId(d)`: least-loaded compute whose realm is
+    /// compatible with the dataset's realm.
+    pub fn compute_for_realm(&self, realm: &str) -> Result<String> {
+        let mut load = self.load.lock().unwrap();
+        let candidate = self
+            .computes
+            .iter()
+            .filter(|c| realm_compatible(&c.realm, realm))
+            .min_by_key(|c| load.assigned.get(&c.name).copied().unwrap_or(0));
+        match candidate {
+            Some(c) => {
+                *load.assigned.entry(c.name.clone()).or_insert(0) += 1;
+                Ok(c.name.clone())
+            }
+            None => bail!("no registered compute matches realm '{realm}'"),
+        }
+    }
+
+    /// Algorithm 1's `DecideComputeId(a)`: round-robin placement for
+    /// non-data-consumer workers (no realm constraint).
+    pub fn decide_compute(&self) -> Result<String> {
+        if self.computes.is_empty() {
+            bail!("no compute registered");
+        }
+        let mut load = self.load.lock().unwrap();
+        let i = load.rr % self.computes.len();
+        load.rr += 1;
+        let name = self.computes[i].name.clone();
+        *load.assigned.entry(name.clone()).or_insert(0) += 1;
+        Ok(name)
+    }
+
+    /// Reset placement counters (between expansions).
+    pub fn reset_load(&self) {
+        let mut load = self.load.lock().unwrap();
+        load.assigned.clear();
+        load.rr = 0;
+    }
+
+    pub fn assigned(&self, compute: &str) -> usize {
+        self.load
+            .lock()
+            .unwrap()
+            .assigned
+            .get(compute)
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn realm_prefix_containment() {
+        assert!(realm_compatible("eu", "eu/west"));
+        assert!(realm_compatible("eu/west/dc1", "eu/west"));
+        assert!(realm_compatible("eu", "eu"));
+        assert!(!realm_compatible("eu/west", "eu/east"));
+        assert!(!realm_compatible("us", "eu"));
+        assert!(realm_compatible("*", "eu/west"));
+        assert!(realm_compatible("eu/west", "*"));
+    }
+
+    #[test]
+    fn compute_for_realm_respects_boundary() {
+        let mut r = Registry::new();
+        r.register_compute(ComputeSpec::new("eu-dc", "eu/west", 100));
+        r.register_compute(ComputeSpec::new("us-dc", "us/east", 100));
+        assert_eq!(r.compute_for_realm("eu/west").unwrap(), "eu-dc");
+        assert_eq!(r.compute_for_realm("us/east/zone1").unwrap(), "us-dc");
+        assert!(r.compute_for_realm("ap/south").is_err());
+    }
+
+    #[test]
+    fn least_loaded_placement() {
+        let mut r = Registry::new();
+        r.register_compute(ComputeSpec::new("a", "*", 100));
+        r.register_compute(ComputeSpec::new("b", "*", 100));
+        for _ in 0..10 {
+            r.compute_for_realm("*").unwrap();
+        }
+        assert_eq!(r.assigned("a"), 5);
+        assert_eq!(r.assigned("b"), 5);
+    }
+
+    #[test]
+    fn round_robin_decide() {
+        let mut r = Registry::new();
+        r.register_compute(ComputeSpec::new("a", "*", 100));
+        r.register_compute(ComputeSpec::new("b", "*", 100));
+        let seq: Vec<String> = (0..4).map(|_| r.decide_compute().unwrap()).collect();
+        assert_eq!(seq, vec!["a", "b", "a", "b"]);
+    }
+
+    #[test]
+    fn empty_registry_errors() {
+        let r = Registry::new();
+        assert!(r.decide_compute().is_err());
+        assert!(r.compute_for_realm("*").is_err());
+    }
+
+    #[test]
+    fn reset_load_clears_counters() {
+        let mut r = Registry::new();
+        r.register_compute(ComputeSpec::new("a", "*", 100));
+        r.decide_compute().unwrap();
+        r.reset_load();
+        assert_eq!(r.assigned("a"), 0);
+    }
+}

@@ -1,0 +1,288 @@
+//! Intermediate aggregator role — the H-FL middle tier (paper Fig 3).
+//!
+//! This is exactly the role FedML's client/server dichotomy cannot express
+//! (§2.3): it acts as a server toward its trainers and a client toward the
+//! global aggregator. Base chain:
+//! `Loop(recv_global >> distribute >> collect >> aggregate >> upload)`.
+//!
+//! CO-FL variant via surgery (§6.1): `get_assignment` before `recv_global`
+//! (per-round trainer set + active flag from the coordinator) and `report`
+//! after `upload` (upload-delay feedback that drives the coordinator's
+//! load-balancing scheme).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::channel::{Message, Payload};
+use crate::json::Json;
+use crate::workflow::{Composer, Tasklet};
+
+use super::{program, Program, WorkerEnv};
+
+pub struct AggregatorCtx {
+    pub env: WorkerEnv,
+    weights: Arc<Vec<f32>>,
+    round: u64,
+    /// CO-FL: trainers assigned this round (None = use channel ends).
+    assigned: Option<Vec<String>>,
+    /// CO-FL: excluded aggregators sit out the round.
+    active: bool,
+    /// Set when the global skipped this aggregator for a round (selection).
+    skip: bool,
+    total_samples: f64,
+    /// Mean trainer loss this round (forwarded upstream).
+    mean_loss: f64,
+    /// Virtual send time of the last upload (for delay reporting).
+    upload_sent_at: u64,
+    pub done: bool,
+}
+
+impl AggregatorCtx {
+    fn new(env: WorkerEnv) -> Self {
+        Self {
+            env,
+            weights: Arc::new(Vec::new()),
+            round: 0,
+            assigned: None,
+            active: true,
+            skip: false,
+            total_samples: 0.0,
+            mean_loss: f64::NAN,
+            upload_sent_at: 0,
+            done: false,
+        }
+    }
+
+    fn trainers(&self) -> Result<Vec<String>> {
+        match &self.assigned {
+            Some(t) => Ok(t.clone()),
+            None => Ok(self.env.chan("param-channel")?.ends()),
+        }
+    }
+
+    fn global_parent(&self) -> Result<String> {
+        self.env
+            .chan("agg-channel")?
+            .ends()
+            .first()
+            .cloned()
+            .context("no global aggregator on agg-channel")
+    }
+}
+
+// ------------------------------------------------------------- tasklets
+
+fn recv_global(c: &mut AggregatorCtx) -> Result<()> {
+    if c.done || !c.active {
+        return Ok(());
+    }
+    c.skip = false;
+    let parent = c.global_parent()?;
+    let msg = c.env.chan("agg-channel")?.recv(&parent)?;
+    match msg.kind.as_str() {
+        "weights" => {
+            let Payload::Floats(w) = msg.payload else {
+                bail!("weights without floats");
+            };
+            c.weights = w;
+            c.round = msg.round;
+        }
+        "skip" => {
+            // not selected this round: idle, and idle our trainers too
+            c.skip = true;
+            c.round = msg.round;
+            let param = c.env.chan("param-channel")?;
+            for t in c.trainers()? {
+                param.send(&t, Message::control("skip", msg.round))?;
+            }
+        }
+        "done" => {
+            // H-FL: propagate termination downstream.
+            let param = c.env.chan("param-channel")?;
+            param.broadcast(Message::control("done", msg.round))?;
+            c.done = true;
+        }
+        other => bail!("aggregator got unexpected '{other}' from global"),
+    }
+    Ok(())
+}
+
+fn distribute(c: &mut AggregatorCtx) -> Result<()> {
+    if c.done || !c.active || c.skip {
+        return Ok(());
+    }
+    let trainers = c.trainers()?;
+    let param = c.env.chan("param-channel")?;
+    let msg = Message::floats("weights", c.round, c.weights.clone());
+    let mut items = Vec::with_capacity(trainers.len());
+    for t in trainers {
+        c.env.job.metrics.add_traffic(msg.size_bytes());
+        items.push((t, msg.clone()));
+    }
+    param.send_fanout(items)?;
+    Ok(())
+}
+
+fn collect_and_aggregate(c: &mut AggregatorCtx) -> Result<()> {
+    if c.done || !c.active || c.skip {
+        return Ok(());
+    }
+    let trainers = c.trainers()?;
+    if trainers.is_empty() {
+        bail!("aggregator '{}' has no trainers", c.env.cfg.id);
+    }
+    let param = c.env.chan("param-channel")?;
+    let got = param.recv_fifo(&trainers)?;
+    let mut updates: Vec<Arc<Vec<f32>>> = Vec::with_capacity(got.len());
+    let mut samples: Vec<f64> = Vec::with_capacity(got.len());
+    let mut losses = 0.0;
+    for (_, msg) in &got {
+        let Payload::Floats(w) = &msg.payload else {
+            bail!("update without floats");
+        };
+        updates.push(w.clone());
+        samples.push(msg.meta.get("samples").as_f64().unwrap_or(1.0));
+        losses += msg.meta.get("loss").as_f64().unwrap_or(0.0);
+    }
+    c.total_samples = samples.iter().sum();
+    c.mean_loss = losses / got.len() as f64;
+    let weights: Vec<f32> = samples
+        .iter()
+        .map(|&s| (s / c.total_samples) as f32)
+        .collect();
+    let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+    let t0 = std::time::Instant::now();
+    let agg = crate::runtime::aggregate_any(c.env.job.compute.as_ref(), &refs, &weights)?;
+    c.env.charge(t0);
+    c.weights = Arc::new(agg);
+    Ok(())
+}
+
+fn upload(c: &mut AggregatorCtx) -> Result<()> {
+    if c.done || !c.active || c.skip {
+        return Ok(());
+    }
+    let parent = c.global_parent()?;
+    let chan = c.env.chan("agg-channel")?;
+    let mut meta = Json::obj();
+    meta.insert("samples", Json::Num(c.total_samples));
+    meta.insert("loss", Json::Num(c.mean_loss));
+    meta.insert("worker", c.env.cfg.id.as_str());
+    let msg =
+        Message::floats("update", c.round, c.weights.clone()).with_meta(Json::Obj(meta));
+    c.env.job.metrics.add_traffic(msg.size_bytes());
+    c.upload_sent_at = chan.now();
+    chan.send(&parent, msg)?;
+    Ok(())
+}
+
+/// CO-FL only: coordinator's per-round assignment (trainer set + active).
+fn get_assignment(c: &mut AggregatorCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let chan = c.env.chan("coord-a-channel")?;
+    let coord = chan
+        .ends()
+        .first()
+        .cloned()
+        .context("no coordinator on coord-a-channel")?;
+    let msg = chan.recv(&coord)?;
+    match msg.kind.as_str() {
+        "assign" => {
+            c.active = msg.meta.get("active").as_bool().unwrap_or(true);
+            c.assigned = msg.meta.get("trainers").as_arr().map(|a| {
+                a.iter()
+                    .filter_map(|t| t.as_str().map(str::to_string))
+                    .collect()
+            });
+            c.round = msg.round;
+        }
+        "done" => c.done = true,
+        other => bail!("unexpected coordinator message '{other}'"),
+    }
+    Ok(())
+}
+
+/// CO-FL only: wait for the global's ack and report the observed upload
+/// delay to the coordinator (feeds the load-balancing scheme of §6.1).
+fn report(c: &mut AggregatorCtx) -> Result<()> {
+    if c.done || !c.active || c.skip {
+        return Ok(());
+    }
+    let agg_chan = c.env.chan("agg-channel")?;
+    let parent = c.global_parent()?;
+    let ack = agg_chan.recv_kind(&parent, "ack")?;
+    // delay = when the global saw OUR upload, minus when we sent it
+    let seen_at = ack.meta.get("arrival_us").as_f64().unwrap_or(0.0) as u64;
+    let delay = seen_at.saturating_sub(c.upload_sent_at);
+    let coord_chan = c.env.chan("coord-a-channel")?;
+    let coord = coord_chan
+        .ends()
+        .first()
+        .cloned()
+        .context("no coordinator")?;
+    let mut meta = Json::obj();
+    meta.insert("delay_us", delay);
+    meta.insert("worker", c.env.cfg.id.as_str());
+    coord_chan.send(
+        &coord,
+        Message::control("report", c.round).with_meta(Json::Obj(meta)),
+    )?;
+    Ok(())
+}
+
+/// The base (H-FL) aggregator chain.
+pub fn base_chain() -> Composer<AggregatorCtx> {
+    Composer::new().loop_until(
+        |c: &AggregatorCtx| c.done,
+        Composer::new()
+            .task("recv_global", recv_global)
+            .task("distribute", distribute)
+            .task("collect", collect_and_aggregate)
+            .task("upload", upload),
+    )
+}
+
+pub fn build(env: WorkerEnv, coordinated: bool) -> Result<Box<dyn Program>> {
+    let ctx = AggregatorCtx::new(env);
+    let mut chain = base_chain();
+    if coordinated {
+        chain.insert_before("recv_global", Tasklet::new("get_assignment", get_assignment))?;
+        chain.insert_after("upload", Tasklet::new("report", report))?;
+    }
+    Ok(program(chain, ctx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_chain_shape() {
+        assert_eq!(
+            base_chain().aliases(),
+            vec!["recv_global", "distribute", "collect", "upload"]
+        );
+    }
+
+    #[test]
+    fn cofl_surgery_shape() {
+        let mut c = base_chain();
+        c.insert_before("recv_global", Tasklet::new("get_assignment", get_assignment))
+            .unwrap();
+        c.insert_after("upload", Tasklet::new("report", report)).unwrap();
+        assert_eq!(
+            c.aliases(),
+            vec![
+                "get_assignment",
+                "recv_global",
+                "distribute",
+                "collect",
+                "upload",
+                "report"
+            ]
+        );
+    }
+}

@@ -1,0 +1,258 @@
+//! Distributed-learning collectives over the Channel API.
+//!
+//! The paper's distributed topology (Fig 1a) uses mechanisms like
+//! all-reduce; Hybrid FL (§6.2) aggregates each co-located cluster with
+//! ring-allreduce before one delegate uploads. This module implements the
+//! bandwidth-optimal **ring all-reduce** (Patarasuk & Yuan) directly on the
+//! Table-2 channel API: k-1 scatter-reduce steps + k-1 all-gather steps of
+//! `D/k`-sized chunks, so each member moves `2·(k-1)/k·D` data — the cost
+//! the virtual clocks then account for.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::channel::{ChannelHandle, Message, Payload};
+
+/// Weighted mean all-reduce over the members of `chan`'s group.
+///
+/// Each member contributes `(weights, weight_scalar)`; everyone ends with
+/// the identical weighted mean `Σ w_i·x_i / Σ w_i`. Deterministic: the ring
+/// order is the sorted member list.
+pub fn ring_allreduce_mean(
+    chan: &ChannelHandle,
+    values: &mut [f32],
+    weight: f32,
+) -> Result<()> {
+    // contribution vector: [x * w ..., w]
+    let mut buf: Vec<f32> = values.iter().map(|v| v * weight).collect();
+    buf.push(weight);
+    ring_allreduce_sum(chan, &mut buf)?;
+    let wsum = *buf.last().unwrap();
+    if wsum <= 0.0 {
+        bail!("ring allreduce: total weight is zero");
+    }
+    for (dst, src) in values.iter_mut().zip(&buf) {
+        *dst = src / wsum;
+    }
+    Ok(())
+}
+
+/// In-place sum all-reduce via ring scatter-reduce + all-gather.
+pub fn ring_allreduce_sum(chan: &ChannelHandle, buf: &mut [f32]) -> Result<()> {
+    let me = chan.worker_id().to_string();
+    let mut members = chan.ends();
+    members.push(me.clone());
+    members.sort();
+    let k = members.len();
+    if k == 1 {
+        return Ok(());
+    }
+    let my_idx = members.iter().position(|m| *m == me).unwrap();
+    let right = &members[(my_idx + 1) % k];
+    let left = &members[(my_idx + k - 1) % k];
+
+    // chunk boundaries (first chunks take the remainder)
+    let n = buf.len();
+    let bounds: Vec<(usize, usize)> = (0..k)
+        .map(|c| {
+            let base = n / k;
+            let extra = n % k;
+            let start = c * base + c.min(extra);
+            let len = base + usize::from(c < extra);
+            (start, start + len)
+        })
+        .collect();
+
+    // scatter-reduce: after step s, chunk (i - s - 1) mod k holds partials
+    for step in 0..k - 1 {
+        let send_c = (my_idx + k - step) % k;
+        let recv_c = (my_idx + k - step - 1) % k;
+        let (s0, s1) = bounds[send_c];
+        let msg = Message::floats("ar_sr", step as u64, Arc::new(buf[s0..s1].to_vec()));
+        chan.send(right, msg)?;
+        let got = chan.recv_kind(left, "ar_sr")?;
+        let Payload::Floats(chunk) = got.payload else {
+            bail!("allreduce chunk without floats");
+        };
+        let (r0, r1) = bounds[recv_c];
+        for (dst, src) in buf[r0..r1].iter_mut().zip(chunk.iter()) {
+            *dst += src;
+        }
+    }
+    // all-gather: circulate the completed chunks
+    for step in 0..k - 1 {
+        let send_c = (my_idx + 1 + k - step) % k;
+        let recv_c = (my_idx + k - step) % k;
+        let (s0, s1) = bounds[send_c];
+        let msg = Message::floats("ar_ag", step as u64, Arc::new(buf[s0..s1].to_vec()));
+        chan.send(right, msg)?;
+        let got = chan.recv_kind(left, "ar_ag")?;
+        let Payload::Floats(chunk) = got.payload else {
+            bail!("allreduce chunk without floats");
+        };
+        let (r0, r1) = bounds[recv_c];
+        buf[r0..r1].copy_from_slice(&chunk);
+    }
+    Ok(())
+}
+
+/// The cluster delegate: the lexically-first member of the group uploads on
+/// behalf of the cluster (Hybrid FL's "single copy of the cluster model").
+pub fn is_delegate(chan: &ChannelHandle) -> bool {
+    let me = chan.worker_id().to_string();
+    let mut members = chan.ends();
+    members.push(me.clone());
+    members.sort();
+    members[0] == me
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::{Backend, ChannelManager};
+    use crate::net::{LinkSpec, VClock, VirtualNet};
+    use std::sync::Mutex;
+
+    fn run_ring(k: usize, n: usize) -> Vec<Vec<f32>> {
+        let net = Arc::new(VirtualNet::new(LinkSpec::mbps(100.0, 10)));
+        let mgr = ChannelManager::new(net);
+        let mut handles = vec![];
+        for i in 0..k {
+            let mgr = mgr.clone();
+            handles.push(std::thread::spawn(move || {
+                let chan = mgr
+                    .join(
+                        "ring",
+                        "g",
+                        &format!("t{i}"),
+                        "trainer",
+                        Backend::P2p,
+                        Arc::new(Mutex::new(VClock::default())),
+                    )
+                    .unwrap();
+                // wait for all members to join
+                while chan.ends().len() < k - 1 {
+                    std::thread::yield_now();
+                }
+                let mut buf: Vec<f32> = (0..n).map(|j| (i * n + j) as f32).collect();
+                ring_allreduce_sum(&chan, &mut buf).unwrap();
+                buf
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn allreduce_sum_matches_oracle() {
+        for (k, n) in [(2, 10), (3, 7), (4, 16), (5, 23)] {
+            let results = run_ring(k, n);
+            let want: Vec<f32> = (0..n)
+                .map(|j| (0..k).map(|i| (i * n + j) as f32).sum())
+                .collect();
+            for (i, r) in results.iter().enumerate() {
+                assert_eq!(r, &want, "member {i} of k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_mean_weighted() {
+        let k = 3;
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mut handles = vec![];
+        for i in 0..k {
+            let mgr = mgr.clone();
+            handles.push(std::thread::spawn(move || {
+                let chan = mgr
+                    .join(
+                        "ring",
+                        "g",
+                        &format!("t{i}"),
+                        "trainer",
+                        Backend::InProc,
+                        Arc::new(Mutex::new(VClock::default())),
+                    )
+                    .unwrap();
+                while chan.ends().len() < k - 1 {
+                    std::thread::yield_now();
+                }
+                let mut v = vec![(i + 1) as f32; 5];
+                // weights 1, 2, 3 -> mean = (1*1+2*2+3*3)/6 = 14/6
+                ring_allreduce_mean(&chan, &mut v, (i + 1) as f32).unwrap();
+                v
+            }));
+        }
+        for h in handles {
+            let v = h.join().unwrap();
+            for x in v {
+                assert!((x - 14.0 / 6.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn single_member_is_identity() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let chan = mgr
+            .join(
+                "ring",
+                "g",
+                "solo",
+                "trainer",
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap();
+        let mut v = vec![1.0, 2.0, 3.0];
+        ring_allreduce_sum(&chan, &mut v).unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0]);
+        assert!(is_delegate(&chan));
+    }
+
+    #[test]
+    fn virtual_time_reflects_ring_cost() {
+        // k members, D floats each at 100 Mbps: ring moves 2*(k-1)/k*D per
+        // member; clock must advance accordingly (and far less than k*D).
+        let k = 4;
+        let n = 100_000;
+        let net = Arc::new(VirtualNet::new(LinkSpec::mbps(100.0, 0)));
+        let mgr = ChannelManager::new(net);
+        let mut handles = vec![];
+        for i in 0..k {
+            let mgr = mgr.clone();
+            handles.push(std::thread::spawn(move || {
+                let clock = Arc::new(Mutex::new(VClock::default()));
+                let chan = mgr
+                    .join(
+                        "ring",
+                        "g",
+                        &format!("t{i}"),
+                        "trainer",
+                        Backend::P2p,
+                        clock.clone(),
+                    )
+                    .unwrap();
+                while chan.ends().len() < k - 1 {
+                    std::thread::yield_now();
+                }
+                let mut buf = vec![1.0f32; n];
+                ring_allreduce_sum(&chan, &mut buf).unwrap();
+                let now = clock.lock().unwrap().now();
+                now
+            }));
+        }
+        let times: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // ideal: 2*(k-1)/k * n * 4 bytes over 100 Mbps
+        let ideal_us = 2.0 * (k as f64 - 1.0) / k as f64 * (n * 4) as f64 * 8.0 / 100e6 * 1e6;
+        for t in times {
+            let t = t as f64;
+            assert!(t > 0.8 * ideal_us, "t={t} ideal={ideal_us}");
+            // steps serialize: allow pipeline slack but far below k*D cost
+            let naive_us = (k as f64 - 1.0) * (n * 4) as f64 * 8.0 / 100e6 * 1e6;
+            assert!(t < 1.5 * naive_us, "t={t} naive={naive_us}");
+        }
+    }
+}

@@ -1,0 +1,380 @@
+//! Coordinator role — the CO-FL extension of §6.1.
+//!
+//! Each round the coordinator (1) assigns every trainer to an active
+//! aggregator (bipartite rebalancing over the replica-expanded aggregator
+//! tier), (2) tells the global aggregator which aggregators participate,
+//! (3) collects per-aggregator upload-delay reports, and (4) runs the
+//! paper's **load-balancing scheme**: an aggregator whose upload delay is a
+//! large multiple of the round's median for three consecutive rounds is
+//! excluded with *binary backoff* (1, 2, 4, 8, 16 rounds), with a one-round
+//! probe between exclusions — reproducing the round-6→round-28 timeline of
+//! the paper's Fig 10.
+//!
+//! The coordinator also owns termination: after the last round it
+//! broadcasts `done` on all coordinator channels (which is why CO-FL
+//! removes the global aggregator's `end_of_train`, Fig 9).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::channel::Message;
+use crate::json::Json;
+use crate::workflow::Composer;
+
+use super::{program, Program, WorkerEnv};
+
+/// Straggler-tracking state per aggregator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AggState {
+    /// Healthy; counts consecutive slow rounds.
+    Normal { consecutive_slow: u32 },
+    /// Sitting out `remaining` rounds; next exclusion will last
+    /// `next_backoff`.
+    Excluded { remaining: u64, next_backoff: u64 },
+    /// One-round probe after an exclusion window.
+    Probing { next_backoff: u64 },
+}
+
+/// The detection + binary-backoff policy (paper §6.1), isolated from
+/// channel plumbing so it is unit-testable round by round.
+pub struct LoadBalancer {
+    state: HashMap<String, AggState>,
+    /// "slow" means delay > `factor` x median of this round's delays.
+    pub factor: f64,
+    /// consecutive slow rounds before the first exclusion.
+    pub patience: u32,
+}
+
+impl LoadBalancer {
+    pub fn new() -> Self {
+        Self {
+            state: HashMap::new(),
+            factor: 3.0,
+            patience: 3,
+        }
+    }
+
+    /// Aggregators that participate this round (excluded ones sit out),
+    /// advancing exclusion windows.
+    pub fn active(&mut self, aggregators: &[String]) -> Vec<String> {
+        let mut active = Vec::new();
+        for a in aggregators {
+            let st = self
+                .state
+                .entry(a.clone())
+                .or_insert(AggState::Normal { consecutive_slow: 0 });
+            match st {
+                AggState::Excluded {
+                    remaining,
+                    next_backoff,
+                } => {
+                    *remaining -= 1;
+                    if *remaining == 0 {
+                        *st = AggState::Probing {
+                            next_backoff: *next_backoff,
+                        };
+                    }
+                    // sits out this round
+                }
+                _ => active.push(a.clone()),
+            }
+        }
+        // never exclude everyone
+        if active.is_empty() {
+            active.push(aggregators[0].clone());
+        }
+        active
+    }
+
+    /// Feed this round's upload delays (active aggregators only); updates
+    /// detection state.
+    pub fn observe(&mut self, delays: &HashMap<String, u64>) {
+        if delays.is_empty() {
+            return;
+        }
+        let mut ds: Vec<u64> = delays.values().copied().collect();
+        ds.sort();
+        // lower median: with one straggler among k reporters the median
+        // must land on a healthy sample (k=2 included).
+        let median = ds[(ds.len() - 1) / 2] as f64;
+        for (agg, &delay) in delays {
+            let slow = ds.len() >= 2 && delay as f64 > self.factor * median.max(1.0);
+            let st = self
+                .state
+                .entry(agg.clone())
+                .or_insert(AggState::Normal { consecutive_slow: 0 });
+            *st = match st.clone() {
+                AggState::Normal { consecutive_slow } => {
+                    let n = if slow { consecutive_slow + 1 } else { 0 };
+                    if n >= self.patience {
+                        AggState::Excluded {
+                            remaining: 1,
+                            next_backoff: 2,
+                        }
+                    } else {
+                        AggState::Normal { consecutive_slow: n }
+                    }
+                }
+                AggState::Probing { next_backoff } => {
+                    if slow {
+                        AggState::Excluded {
+                            remaining: next_backoff,
+                            next_backoff: next_backoff * 2,
+                        }
+                    } else {
+                        AggState::Normal { consecutive_slow: 0 }
+                    }
+                }
+                // an excluded aggregator shouldn't report; keep state
+                s @ AggState::Excluded { .. } => s,
+            };
+        }
+    }
+
+    pub fn state_of(&self, agg: &str) -> Option<&AggState> {
+        self.state.get(agg)
+    }
+}
+
+impl Default for LoadBalancer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub struct CoordinatorCtx {
+    env: WorkerEnv,
+    lb: LoadBalancer,
+    round: u64,
+    active: Vec<String>,
+    pub done: bool,
+}
+
+// ------------------------------------------------------------- tasklets
+
+fn assign(c: &mut CoordinatorCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let aggs = c.env.chan("coord-a-channel")?.ends();
+    let trainers = c.env.chan("coord-t-channel")?.ends();
+    if aggs.is_empty() || trainers.is_empty() {
+        bail!("coordinator sees no aggregators or trainers");
+    }
+    c.active = c.lb.active(&aggs);
+
+    // trainer -> aggregator round-robin over the active set
+    let mut assignment: HashMap<String, Vec<String>> =
+        c.active.iter().map(|a| (a.clone(), Vec::new())).collect();
+    let tchan = c.env.chan("coord-t-channel")?;
+    for (i, t) in trainers.iter().enumerate() {
+        let agg = &c.active[i % c.active.len()];
+        assignment.get_mut(agg).unwrap().push(t.clone());
+        let mut meta = Json::obj();
+        meta.insert("parent", agg.as_str());
+        tchan.send(t, Message::control("assign", c.round).with_meta(Json::Obj(meta)))?;
+    }
+
+    // aggregators: trainer set + active flag
+    let achan = c.env.chan("coord-a-channel")?;
+    for a in &aggs {
+        let mut meta = Json::obj();
+        let is_active = c.active.contains(a);
+        meta.insert("active", is_active);
+        let ts = assignment.get(a).cloned().unwrap_or_default();
+        meta.insert(
+            "trainers",
+            Json::Arr(ts.into_iter().map(Json::Str).collect()),
+        );
+        achan.send(a, Message::control("assign", c.round).with_meta(Json::Obj(meta)))?;
+    }
+
+    // global: the active aggregator list
+    let gchan = c.env.chan("coord-g-channel")?;
+    let global = gchan.ends();
+    let mut meta = Json::obj();
+    meta.insert(
+        "aggregators",
+        Json::Arr(c.active.iter().cloned().map(Json::Str).collect()),
+    );
+    for g in &global {
+        gchan.send(
+            g,
+            Message::control("assign", c.round).with_meta(Json::Obj(meta.clone())),
+        )?;
+    }
+    Ok(())
+}
+
+fn collect_reports(c: &mut CoordinatorCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let achan = c.env.chan("coord-a-channel")?;
+    let got = achan.recv_fifo(&c.active)?;
+    let mut delays = HashMap::new();
+    for (from, msg) in got {
+        if msg.kind != "report" {
+            bail!("coordinator expected 'report', got '{}'", msg.kind);
+        }
+        let delay = msg.meta.get("delay_us").as_f64().unwrap_or(0.0) as u64;
+        c.env
+            .job
+            .metrics
+            .record(&from, "upload_delay_s", c.round, delay as f64 / 1e6);
+        delays.insert(from, delay);
+    }
+    c.lb.observe(&delays);
+    c.env.job.metrics.record(
+        &c.env.cfg.id,
+        "active_aggregators",
+        c.round,
+        c.active.len() as f64,
+    );
+    c.round += 1;
+    if c.round >= c.env.job.rounds() {
+        c.done = true;
+    }
+    Ok(())
+}
+
+fn end_of_train(c: &mut CoordinatorCtx) -> Result<()> {
+    // The coordinator owns termination in CO-FL.
+    for ch in ["coord-t-channel", "coord-a-channel", "coord-g-channel"] {
+        c.env.chan(ch)?.broadcast(Message::control("done", c.round))?;
+    }
+    Ok(())
+}
+
+pub fn chain() -> Composer<CoordinatorCtx> {
+    Composer::new()
+        .loop_until(
+            |c: &CoordinatorCtx| c.done,
+            Composer::new()
+                .task("assign", assign)
+                .task("collect_reports", collect_reports),
+        )
+        .task("end_of_train", end_of_train)
+}
+
+pub fn build(env: WorkerEnv) -> Result<Box<dyn Program>> {
+    let ctx = CoordinatorCtx {
+        env,
+        lb: LoadBalancer::new(),
+        round: 0,
+        active: Vec::new(),
+        done: false,
+    };
+    Ok(program(chain(), ctx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn aggs() -> Vec<String> {
+        vec!["a0".to_string(), "a1".to_string()]
+    }
+
+    fn round(lb: &mut LoadBalancer, slow_delay: u64) -> Vec<String> {
+        let active = lb.active(&aggs());
+        let mut delays = HashMap::new();
+        for a in &active {
+            delays.insert(a.clone(), if a == "a1" { slow_delay } else { 1_000 });
+        }
+        lb.observe(&delays);
+        active
+    }
+
+    #[test]
+    fn no_exclusion_when_healthy() {
+        let mut lb = LoadBalancer::new();
+        for _ in 0..10 {
+            assert_eq!(round(&mut lb, 1_000).len(), 2);
+        }
+    }
+
+    #[test]
+    fn paper_fig10_backoff_timeline() {
+        // Straggler from "round 6" on; detection after 3 consecutive slow
+        // rounds; then exclusions of 1, 2, 4, 8 rounds with probes between.
+        let mut lb = LoadBalancer::new();
+        let mut excluded_rounds = Vec::new();
+        for r in 0..30u64 {
+            let slow = r >= 6; // congestion starts at round 6
+            let active = round(&mut lb, if slow { 100_000 } else { 1_000 });
+            if !active.contains(&"a1".to_string()) {
+                excluded_rounds.push(r);
+            }
+        }
+        // slow observed at 6,7,8 -> excluded at 9; probe 10 (slow);
+        // excluded 11-12; probe 13; excluded 14-17; probe 18; excluded 19-26;
+        // probe 27; excluded 28... (16 rounds)
+        assert_eq!(
+            excluded_rounds,
+            vec![9, 11, 12, 14, 15, 16, 17, 19, 20, 21, 22, 23, 24, 25, 26, 28, 29]
+        );
+    }
+
+    #[test]
+    fn recovery_resets_state() {
+        let mut lb = LoadBalancer::new();
+        for _ in 0..6 {
+            round(&mut lb, 100_000); // slow: rounds 0,1,2 detect; 3 excluded; 4 probe(slow); 5.. excluded
+        }
+        // congestion clears; after the current exclusion + probe the
+        // aggregator must return to Normal and stay active.
+        let mut consecutive_active = 0;
+        for _ in 0..12 {
+            let active = round(&mut lb, 1_000);
+            if active.len() == 2 {
+                consecutive_active += 1;
+            } else {
+                consecutive_active = 0;
+            }
+        }
+        assert!(consecutive_active >= 6, "straggler did not recover");
+        assert_eq!(
+            lb.state_of("a1"),
+            Some(&AggState::Normal { consecutive_slow: 0 })
+        );
+    }
+
+    #[test]
+    fn never_excludes_everyone() {
+        let mut lb = LoadBalancer::new();
+        lb.state.insert(
+            "a0".into(),
+            AggState::Excluded { remaining: 5, next_backoff: 2 },
+        );
+        lb.state.insert(
+            "a1".into(),
+            AggState::Excluded { remaining: 5, next_backoff: 2 },
+        );
+        let active = lb.active(&aggs());
+        assert!(!active.is_empty());
+    }
+
+    #[test]
+    fn single_aggregator_is_never_slow() {
+        // With one reporter there is no discrepancy to detect.
+        let mut lb = LoadBalancer::new();
+        let one = vec!["a0".to_string()];
+        for _ in 0..10 {
+            let active = lb.active(&one);
+            let mut d = HashMap::new();
+            d.insert("a0".to_string(), 1_000_000u64);
+            lb.observe(&d);
+            assert_eq!(active, one);
+        }
+    }
+
+    #[test]
+    fn chain_shape() {
+        assert_eq!(
+            chain().aliases(),
+            vec!["assign", "collect_reports", "end_of_train"]
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! Distributed-learning trainer (paper Fig 1a/2b): no aggregator at all.
+//!
+//! Trainers share model weights among themselves directly via ring
+//! all-reduce every round — the "distributed" end of the paper's topology
+//! spectrum, used by the C-FL→Distributed transformation of Table 4.
+//! From the user's perspective this is the base-class swap the paper
+//! describes: same `load/init/train` core functions, different chain.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::workflow::Composer;
+
+use super::collective::{is_delegate, ring_allreduce_mean};
+use super::{program, Program, WorkerEnv};
+
+pub struct DistributedCtx {
+    env: WorkerEnv,
+    data: Arc<crate::data::Dataset>,
+    flat: Vec<f32>,
+    batches: Vec<Vec<usize>>,
+    plan: Vec<usize>,
+    batch_pos: usize,
+    round: u64,
+    last_loss: f64,
+    done: bool,
+}
+
+fn load(c: &mut DistributedCtx) -> Result<()> {
+    let b = c.env.job.compute.batch();
+    c.batches = crate::data::batch_plan(&mut c.env.rng, c.data.len(), b);
+    Ok(())
+}
+
+fn init(c: &mut DistributedCtx) -> Result<()> {
+    // All members start from the shared init (same seed via job runtime).
+    c.flat = c.env.job.init_flat.as_ref().clone();
+    Ok(())
+}
+
+fn train(c: &mut DistributedCtx) -> Result<()> {
+    let tcfg = c.env.job.tcfg.clone();
+    let compute = c.env.job.compute.clone();
+    let b = compute.batch();
+    let mut loss_sum = 0.0;
+    for _ in 0..tcfg.local_steps {
+        if c.plan.is_empty() || c.batch_pos >= c.plan.len() {
+            let mut p: Vec<usize> = (0..c.batches.len()).collect();
+            c.env.rng.shuffle(&mut p);
+            c.plan = p;
+            c.batch_pos = 0;
+        }
+        let bi = c.plan[c.batch_pos];
+        c.batch_pos += 1;
+        let (x, y) = c.data.gather_batch(&c.batches[bi], b);
+        let t0 = Instant::now();
+        let (nf, loss) = compute.train_step(&c.flat, &x, &y, tcfg.lr)?;
+        c.env.charge(t0);
+        c.flat = nf;
+        loss_sum += loss as f64;
+    }
+    c.last_loss = loss_sum / tcfg.local_steps as f64;
+    Ok(())
+}
+
+fn allreduce(c: &mut DistributedCtx) -> Result<()> {
+    let ring = c.env.chan("ring-channel")?;
+    let samples = c.data.len() as f32;
+    let mut flat = std::mem::take(&mut c.flat);
+    ring_allreduce_mean(ring, &mut flat, samples)?;
+    c.flat = flat;
+    // one member records the job-level series
+    if is_delegate(ring) {
+        let now = c.env.now();
+        let m = &c.env.job.metrics;
+        m.record(&c.env.cfg.id, "loss", c.round, c.last_loss);
+        m.record(&c.env.cfg.id, "vtime_s", c.round, now as f64 / 1e6);
+    }
+    c.round += 1;
+    if c.round >= c.env.job.rounds() {
+        c.done = true;
+    }
+    Ok(())
+}
+
+pub fn chain() -> Composer<DistributedCtx> {
+    Composer::new()
+        .task("load", load)
+        .task("init", init)
+        .loop_until(
+            |c: &DistributedCtx| c.done,
+            Composer::new().task("train", train).task("allreduce", allreduce),
+        )
+}
+
+pub fn build(env: WorkerEnv) -> Result<Box<dyn Program>> {
+    let ctx = DistributedCtx {
+        data: env.shard()?,
+        env,
+        flat: Vec::new(),
+        batches: Vec::new(),
+        plan: Vec::new(),
+        batch_pos: 0,
+        round: 0,
+        last_loss: f64::NAN,
+        done: false,
+    };
+    Ok(program(chain(), ctx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_shape() {
+        assert_eq!(
+            chain().aliases(),
+            vec!["load", "init", "train", "allreduce"]
+        );
+    }
+}

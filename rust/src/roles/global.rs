@@ -1,0 +1,419 @@
+//! Global aggregator role: owns the global model, drives rounds, evaluates.
+//!
+//! Base (synchronous) chain:
+//! `init >> Loop(select >> distribute >> collect >> optimize >> eval) >>
+//! end_of_train`.
+//!
+//! * **Selection** plugs any [`crate::select::Selector`] (Select-All /
+//!   Random / Oort) over this node's direct children.
+//! * **optimize** applies the configured server optimizer (FedAvg /
+//!   FedAdam / FedAdagrad / FedYogi / FedDyn server state).
+//! * With `aggregation: "fedbuff"` the loop body is replaced by the
+//!   asynchronous buffered path (one chain, different tasklets — the
+//!   composer makes the swap explicit and inspectable).
+//!
+//! CO-FL variant (paper Fig 9, §6.1): `get_coord_ends` inserted before
+//! `distribute` (the coordinator decides which aggregators participate) and
+//! `end_of_train` **removed** — the coordinator owns termination.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algos::{AggregationPolicy, FedBuff, ServerOpt};
+use crate::channel::{Message, Payload};
+use crate::json::Json;
+use crate::select::{make_selector, ClientStats, Selector};
+use crate::workflow::{Composer, Tasklet};
+
+use super::{program, Program, WorkerEnv};
+
+pub struct GlobalCtx {
+    pub env: WorkerEnv,
+    pub flat: Vec<f32>,
+    opt: ServerOpt,
+    selector: Box<dyn Selector>,
+    fedbuff: Option<FedBuff>,
+    /// CO-FL: aggregator set for this round (None = all channel ends).
+    active_children: Option<Vec<String>>,
+    selected: Vec<String>,
+    /// Per-child stats fed back to the selector.
+    child_stats: HashMap<String, ClientStats>,
+    round: u64,
+    round_start: u64,
+    /// Send acks on collect (CO-FL delay reporting).
+    ack_updates: bool,
+    /// Hybrid FL: number of clusters expected to upload (delegates only);
+    /// None for non-hybrid topologies.
+    hybrid_clusters: Option<usize>,
+    pub done: bool,
+}
+
+impl GlobalCtx {
+    fn new(env: WorkerEnv, coordinated: bool) -> Self {
+        let tcfg = &env.job.tcfg;
+        let d = env.job.compute.d_pad();
+        let opt = ServerOpt::new(tcfg.server, d)
+            .with_eta(tcfg.eta)
+            .with_alpha(tcfg.alpha);
+        let selector = make_selector(&tcfg.selection, tcfg.select_frac, tcfg.seed ^ 0x5E1);
+        let fedbuff = match tcfg.aggregation {
+            AggregationPolicy::Asynchronous { buffer_k } => {
+                Some(FedBuff::new(buffer_k, tcfg.eta))
+            }
+            AggregationPolicy::Synchronous => None,
+        };
+        // Hybrid: a trainer ring channel the global is not part of means
+        // only cluster delegates upload.
+        let hybrid_clusters = env
+            .job
+            .spec
+            .channel("ring-channel")
+            .filter(|ch| ch.pair.0 != "global-aggregator" && ch.pair.1 != "global-aggregator")
+            .filter(|_| env.job.spec.role("global-aggregator").is_some())
+            .map(|ch| ch.group_by.len().max(1));
+        Self {
+            env,
+            flat: Vec::new(),
+            opt,
+            selector,
+            fedbuff,
+            active_children: None,
+            selected: Vec::new(),
+            child_stats: HashMap::new(),
+            round: 0,
+            round_start: 0,
+            ack_updates: coordinated,
+            hybrid_clusters,
+            done: false,
+        }
+    }
+
+    fn children_channel(&self) -> &'static str {
+        // C-FL/Hybrid: trainers sit on param-channel; H-FL/CO-FL: the
+        // aggregator tier sits on agg-channel.
+        if self.env.chans.contains_key("agg-channel") {
+            "agg-channel"
+        } else {
+            "param-channel"
+        }
+    }
+
+    fn children(&self) -> Result<Vec<String>> {
+        match &self.active_children {
+            Some(c) => Ok(c.clone()),
+            None => Ok(self.env.chan(self.children_channel())?.ends()),
+        }
+    }
+}
+
+// ------------------------------------------------------------- tasklets
+
+fn init(c: &mut GlobalCtx) -> Result<()> {
+    c.flat = c.env.job.init_flat.as_ref().clone();
+    assert_eq!(c.flat.len(), c.env.job.compute.d_pad());
+    Ok(())
+}
+
+fn select(c: &mut GlobalCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let children = c.children()?;
+    if children.is_empty() {
+        bail!("global aggregator has no children");
+    }
+    c.selected = c.selector.select(c.round, &children);
+    Ok(())
+}
+
+fn distribute(c: &mut GlobalCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let chan_name = c.children_channel();
+    let chan = c.env.chan(chan_name)?;
+    c.round_start = chan.now();
+    let w = Arc::new(c.flat.clone());
+    let all = c.children()?;
+    let mut items = Vec::with_capacity(all.len());
+    for child in all {
+        let msg = if c.selected.contains(&child) {
+            Message::floats("weights", c.round, w.clone())
+        } else {
+            Message::control("skip", c.round)
+        };
+        c.env.job.metrics.add_traffic(msg.size_bytes());
+        items.push((child, msg));
+    }
+    chan.send_fanout(items)?;
+    Ok(())
+}
+
+fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let chan_name = c.children_channel();
+    // Collect message-by-message in arrival order (not as a barrier) so
+    // that CO-FL acks reflect each child's *own* upload delay rather than
+    // the round's straggler barrier.
+    let got = {
+        let chan = c.env.chan(chan_name)?;
+        let expected = match c.hybrid_clusters {
+            // Hybrid: one update per cluster, from whichever delegate.
+            Some(k) => k,
+            None => c.selected.len(),
+        };
+        let mut got = Vec::with_capacity(expected);
+        for _ in 0..expected {
+            let (from, msg, arrival) = chan.recv_any_kind_timed("update")?;
+            if c.hybrid_clusters.is_none() && !c.selected.contains(&from) {
+                anyhow::bail!("unexpected update from unselected child '{from}'");
+            }
+            if c.ack_updates {
+                // the ack carries the update's own virtual arrival time so
+                // the sender's delay measurement is independent of this
+                // node's (straggler-merged) clock
+                let mut meta = Json::obj();
+                meta.insert("arrival_us", arrival);
+                chan.send(&from, Message::control("ack", c.round).with_meta(Json::Obj(meta)))?;
+            }
+            got.push((from, msg));
+        }
+        got
+    };
+    let mut updates = Vec::with_capacity(got.len());
+    let mut samples = Vec::with_capacity(got.len());
+    for (from, msg) in &got {
+        let Payload::Floats(w) = &msg.payload else {
+            bail!("update without floats");
+        };
+        updates.push(w.clone());
+        samples.push(msg.meta.get("samples").as_f64().unwrap_or(1.0));
+        // stats for the selector
+        let now = c.env.now();
+        c.child_stats.insert(
+            from.clone(),
+            ClientStats {
+                loss: msg.meta.get("loss").as_f64().unwrap_or(0.0),
+                round_time: now.saturating_sub(c.round_start),
+                participation: 0,
+            },
+        );
+    }
+    let total: f64 = samples.iter().sum();
+    let weights: Vec<f32> = samples.iter().map(|&s| (s / total) as f32).collect();
+    let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+    let t0 = Instant::now();
+    let mean = crate::runtime::aggregate_any(c.env.job.compute.as_ref(), &refs, &weights)?;
+    c.opt.apply(&mut c.flat, &mean);
+    c.env.charge(t0);
+    for (client, stats) in c.child_stats.drain() {
+        c.selector.report(&client, stats);
+    }
+    Ok(())
+}
+
+fn eval(c: &mut GlobalCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let t0 = Instant::now();
+    let (loss, acc) =
+        crate::runtime::evaluate(c.env.job.compute.as_ref(), &c.flat, &c.env.job.test_set)?;
+    c.env.charge(t0);
+    let me = c.env.cfg.id.clone();
+    let now = c.env.now();
+    let round_time = now.saturating_sub(c.round_start);
+    let m = &c.env.job.metrics;
+    m.record(&me, "loss", c.round, loss);
+    m.record(&me, "acc", c.round, acc);
+    m.record(&me, "round_time_s", c.round, round_time as f64 / 1e6);
+    m.record(&me, "vtime_s", c.round, now as f64 / 1e6);
+    m.record(&me, "bytes_total", c.round, m.total_bytes() as f64);
+    c.round += 1;
+    if c.round >= c.env.job.rounds() {
+        c.done = true;
+    }
+    Ok(())
+}
+
+fn end_of_train(c: &mut GlobalCtx) -> Result<()> {
+    let chan = c.env.chan(c.children_channel())?;
+    chan.broadcast(Message::control("done", c.round))?;
+    Ok(())
+}
+
+/// CO-FL only: the coordinator names the aggregators for this round (or
+/// signals termination — `end_of_train` is removed in CO-FL).
+fn get_coord_ends(c: &mut GlobalCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let chan = c.env.chan("coord-g-channel")?;
+    let coord = chan
+        .ends()
+        .first()
+        .cloned()
+        .context("no coordinator on coord-g-channel")?;
+    let msg = chan.recv(&coord)?;
+    match msg.kind.as_str() {
+        "assign" => {
+            c.active_children = msg.meta.get("aggregators").as_arr().map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect()
+            });
+            // `select` ran against the previous round's membership; the
+            // coordinator's word is final for this round.
+            if let Some(active) = &c.active_children {
+                c.selected.retain(|s| active.contains(s));
+                if c.selected.is_empty() {
+                    c.selected = active.clone();
+                }
+            }
+        }
+        "done" => c.done = true,
+        other => bail!("unexpected coordinator message '{other}'"),
+    }
+    Ok(())
+}
+
+// --------------------------------------------------- async (FedBuff) path
+
+fn async_serve(c: &mut GlobalCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let chan_name = c.children_channel();
+    let target_versions = c.env.job.rounds();
+    let (from, msg) = {
+        let chan = c.env.chan(chan_name)?;
+        chan.recv_any()?
+    };
+    if msg.kind != "update" {
+        bail!("async global expected 'update', got '{}'", msg.kind);
+    }
+    let Payload::Floats(delta) = msg.payload else {
+        bail!("update without floats");
+    };
+    let fb = c.fedbuff.as_mut().expect("async path requires fedbuff");
+    if let Some(agg_delta) = fb.push(delta.as_ref().clone(), msg.round) {
+        crate::model::axpy(&mut c.flat, 1.0, &agg_delta);
+        let version = fb.version();
+        // evaluate on every version bump
+        let t0 = Instant::now();
+        let (loss, acc) =
+            crate::runtime::evaluate(c.env.job.compute.as_ref(), &c.flat, &c.env.job.test_set)?;
+        c.env.charge(t0);
+        let me = c.env.cfg.id.clone();
+        let now = c.env.now();
+        let m = &c.env.job.metrics;
+        m.record(&me, "loss", version, loss);
+        m.record(&me, "acc", version, acc);
+        m.record(&me, "vtime_s", version, now as f64 / 1e6);
+        if version >= target_versions {
+            c.done = true;
+            let chan = c.env.chan(chan_name)?;
+            chan.broadcast(Message::control("done", version))?;
+            return Ok(());
+        }
+    }
+    // keep the client training on the freshest model
+    let version = c.fedbuff.as_ref().unwrap().version();
+    let chan = c.env.chan(chan_name)?;
+    let reply = Message::floats("weights", version, Arc::new(c.flat.clone()));
+    c.env.job.metrics.add_traffic(reply.size_bytes());
+    chan.send(&from, reply)?;
+    Ok(())
+}
+
+fn async_kickoff(c: &mut GlobalCtx) -> Result<()> {
+    // seed every client with version-0 weights
+    let chan = c.env.chan(c.children_channel())?;
+    let msg = Message::floats("weights", 0, Arc::new(c.flat.clone()));
+    for _ in 0..chan.ends().len() {
+        c.env.job.metrics.add_traffic(msg.size_bytes());
+    }
+    chan.broadcast(msg)?;
+    c.round_start = chan.now();
+    Ok(())
+}
+
+/// The base synchronous chain.
+pub fn base_chain() -> Composer<GlobalCtx> {
+    Composer::new()
+        .task("init", init)
+        .loop_until(
+            |c: &GlobalCtx| c.done,
+            Composer::new()
+                .task("select", select)
+                .task("distribute", distribute)
+                .task("collect", collect_and_optimize)
+                .task("eval", eval),
+        )
+        .task("end_of_train", end_of_train)
+}
+
+/// The asynchronous (FedBuff) chain.
+pub fn async_chain() -> Composer<GlobalCtx> {
+    Composer::new()
+        .task("init", init)
+        .task("kickoff", async_kickoff)
+        .loop_until(|c: &GlobalCtx| c.done, Composer::new().task("serve", async_serve))
+}
+
+pub fn build(env: WorkerEnv, coordinated: bool) -> Result<Box<dyn Program>> {
+    let asynchronous = matches!(
+        env.job.tcfg.aggregation,
+        AggregationPolicy::Asynchronous { .. }
+    );
+    let ctx = GlobalCtx::new(env, coordinated);
+    let chain = if asynchronous {
+        async_chain()
+    } else {
+        let mut chain = base_chain();
+        if coordinated {
+            // paper Fig 9: insert get_coord_ends ahead of the distribution
+            // path (here: before selection, which feeds distribute), and
+            // remove end_of_train (the coordinator owns termination).
+            chain.insert_before("select", Tasklet::new("get_coord_ends", get_coord_ends))?;
+            chain.remove("end_of_train")?;
+        }
+        chain
+    };
+    Ok(program(chain, ctx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_chain_shape() {
+        assert_eq!(
+            base_chain().aliases(),
+            vec!["init", "select", "distribute", "collect", "eval", "end_of_train"]
+        );
+    }
+
+    #[test]
+    fn cofl_surgery_matches_fig9() {
+        let mut c = base_chain();
+        c.insert_before("select", Tasklet::new("get_coord_ends", get_coord_ends))
+            .unwrap();
+        c.remove("end_of_train").unwrap();
+        assert_eq!(
+            c.aliases(),
+            vec!["init", "get_coord_ends", "select", "distribute", "collect", "eval"]
+        );
+    }
+
+    #[test]
+    fn async_chain_shape() {
+        assert_eq!(async_chain().aliases(), vec!["init", "kickoff", "serve"]);
+    }
+}

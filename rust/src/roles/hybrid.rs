@@ -1,0 +1,195 @@
+//! Hybrid-FL trainer (paper §6.2, Fig 1e/2e).
+//!
+//! Co-located trainers form a cluster on the fast `ring-channel` (p2p
+//! backend); each round every trainer trains locally, the cluster
+//! ring-allreduces a weighted cluster model, and the **delegate** (one
+//! member) uploads a single copy over the slow `param-channel` (broker
+//! backend). This is what cuts per-round upload from `N×model` to
+//! `clusters×model` (250 MB -> 25 MB in the paper's Fig 11 setup).
+//!
+//! The chain reuses the base trainer's fetch tasklet alias scheme:
+//! `load >> init >> Loop(fetch >> train >> cluster_agg >> upload)` — from a
+//! user's perspective, switching C-FL -> Hybrid is a base-class swap plus
+//! TAG changes (Table 4 column "C-FL→Hybrid").
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::channel::{Message, Payload};
+use crate::json::Json;
+use crate::workflow::Composer;
+
+use super::collective::{is_delegate, ring_allreduce_mean};
+use super::{program, Program, WorkerEnv};
+
+pub struct HybridCtx {
+    env: WorkerEnv,
+    data: Arc<crate::data::Dataset>,
+    flat: Vec<f32>,
+    global: Vec<f32>,
+    batches: Vec<Vec<usize>>,
+    plan: Vec<usize>,
+    batch_pos: usize,
+    parent: Option<String>,
+    round: u64,
+    cluster_samples: f32,
+    last_loss: f64,
+    done: bool,
+}
+
+fn load(c: &mut HybridCtx) -> Result<()> {
+    let b = c.env.job.compute.batch();
+    c.batches = crate::data::batch_plan(&mut c.env.rng, c.data.len(), b);
+    Ok(())
+}
+
+fn init(c: &mut HybridCtx) -> Result<()> {
+    let d = c.env.job.compute.d_pad();
+    c.flat = vec![0.0; d];
+    c.global = vec![0.0; d];
+    Ok(())
+}
+
+fn fetch(c: &mut HybridCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let param = c.env.chan("param-channel")?;
+    if c.parent.is_none() {
+        c.parent = param.ends().first().cloned();
+    }
+    let parent = c.parent.clone().context("no global aggregator visible")?;
+    let msg = param.recv(&parent)?;
+    match msg.kind.as_str() {
+        "weights" => {
+            let Payload::Floats(w) = msg.payload else {
+                bail!("weights without floats");
+            };
+            c.global.copy_from_slice(&w);
+            c.flat.copy_from_slice(&w);
+            c.round = msg.round;
+        }
+        "done" => c.done = true,
+        other => bail!("hybrid trainer got '{other}'"),
+    }
+    Ok(())
+}
+
+fn train(c: &mut HybridCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let tcfg = c.env.job.tcfg.clone();
+    let compute = c.env.job.compute.clone();
+    let b = compute.batch();
+    let mut loss_sum = 0.0;
+    for _ in 0..tcfg.local_steps {
+        if c.plan.is_empty() || c.batch_pos >= c.plan.len() {
+            c.plan = {
+                let mut p: Vec<usize> = (0..c.batches.len()).collect();
+                c.env.rng.shuffle(&mut p);
+                p
+            };
+            c.batch_pos = 0;
+        }
+        let bi = c.plan[c.batch_pos];
+        c.batch_pos += 1;
+        let (x, y) = c.data.gather_batch(&c.batches[bi], b);
+        let t0 = Instant::now();
+        let (nf, loss) = compute.train_step(&c.flat, &x, &y, tcfg.lr)?;
+        c.env.charge(t0);
+        c.flat = nf;
+        loss_sum += loss as f64;
+    }
+    c.last_loss = loss_sum / tcfg.local_steps as f64;
+    Ok(())
+}
+
+/// Ring-allreduce the cluster model over the fast p2p channel.
+fn cluster_agg(c: &mut HybridCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let ring = c.env.chan("ring-channel")?;
+    let my_samples = c.data.len() as f32;
+    let mut flat = std::mem::take(&mut c.flat);
+    ring_allreduce_mean(ring, &mut flat, my_samples)?;
+    c.flat = flat;
+    // cluster sample total for upstream weighting
+    let k = ring.ends().len() + 1;
+    c.cluster_samples = my_samples * k as f32; // shards are equal-sized by construction
+    Ok(())
+}
+
+/// Only the cluster delegate uploads — the bandwidth saving of Hybrid FL.
+fn upload(c: &mut HybridCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let ring = c.env.chan("ring-channel")?;
+    if !is_delegate(ring) {
+        return Ok(());
+    }
+    let parent = c.parent.clone().context("no parent")?;
+    let mut meta = Json::obj();
+    meta.insert("samples", Json::Num(c.cluster_samples as f64));
+    meta.insert("loss", Json::Num(c.last_loss));
+    meta.insert("cluster", ring.group());
+    let msg = Message::floats("update", c.round, Arc::new(c.flat.clone()))
+        .with_meta(Json::Obj(meta));
+    let param = c.env.chan("param-channel")?;
+    c.env.job.metrics.add_traffic(msg.size_bytes());
+    c.env
+        .job
+        .metrics
+        .record(&c.env.cfg.id, "upload_bytes", c.round, msg.size_bytes() as f64);
+    param.send(&parent, msg)?;
+    Ok(())
+}
+
+pub fn chain() -> Composer<HybridCtx> {
+    Composer::new()
+        .task("load", load)
+        .task("init", init)
+        .loop_until(
+            |c: &HybridCtx| c.done,
+            Composer::new()
+                .task("fetch", fetch)
+                .task("train", train)
+                .task("cluster_agg", cluster_agg)
+                .task("upload", upload),
+        )
+}
+
+pub fn build(env: WorkerEnv) -> Result<Box<dyn Program>> {
+    let ctx = HybridCtx {
+        data: env.shard()?,
+        env,
+        flat: Vec::new(),
+        global: Vec::new(),
+        batches: Vec::new(),
+        plan: Vec::new(),
+        batch_pos: 0,
+        parent: None,
+        round: 0,
+        cluster_samples: 0.0,
+        last_loss: f64::NAN,
+        done: false,
+    };
+    Ok(program(chain(), ctx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_shape() {
+        assert_eq!(
+            chain().aliases(),
+            vec!["load", "init", "fetch", "train", "cluster_agg", "upload"]
+        );
+    }
+}

@@ -1,0 +1,259 @@
+//! Built-in role programs (paper §4.4) and the worker execution
+//! environment.
+//!
+//! Every role — trainer, aggregator, global aggregator, coordinator, hybrid
+//! trainer, distributed trainer — is a [`crate::workflow::Composer`] tasklet
+//! chain over a role-specific context, mirroring the Python SDK's base
+//! classes. Derived mechanisms (the CO-FL roles of §6.1) are produced by
+//! **chain surgery** on the base chains (Table 1 API), exactly like the
+//! paper's Fig 9 — not by re-implementation.
+//!
+//! [`WorkerEnv`] is what the agent hands a role at start: the expanded
+//! worker config, joined channel handles (per the TAG), the shared job
+//! runtime (compute pool, datasets, metrics), and the worker's virtual
+//! clock.
+
+pub mod aggregator;
+pub mod collective;
+pub mod coordinator;
+pub mod distributed;
+pub mod global;
+pub mod hybrid;
+pub mod trainer;
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algos::TrainingConfig;
+use crate::channel::{ChannelHandle, ChannelManager};
+use crate::data::Dataset;
+use crate::metrics::MetricsHub;
+use crate::net::{VClock, VTime};
+use crate::prng::Rng;
+use crate::runtime::{Compute, ComputeTimeModel};
+use crate::tag::{JobSpec, WorkerConfig};
+
+/// Everything shared by all workers of one job deployment.
+pub struct JobRuntime {
+    pub spec: JobSpec,
+    pub chan_mgr: Arc<ChannelManager>,
+    pub compute: Arc<dyn Compute>,
+    pub tcfg: TrainingConfig,
+    pub metrics: Arc<MetricsHub>,
+    /// dataset name -> shard.
+    pub shards: HashMap<String, Arc<Dataset>>,
+    /// Held-out set evaluated by the global aggregator.
+    pub test_set: Arc<Dataset>,
+    pub time_model: ComputeTimeModel,
+    /// Initial global model (He-init from the artifact spec, or zeros for
+    /// the mock runtime).
+    pub init_flat: Arc<Vec<f32>>,
+}
+
+impl JobRuntime {
+    pub fn rounds(&self) -> u64 {
+        self.spec.rounds
+    }
+}
+
+/// Per-worker execution environment: config + joined channels + clock.
+pub struct WorkerEnv {
+    pub cfg: WorkerConfig,
+    pub job: Arc<JobRuntime>,
+    pub clock: Arc<Mutex<VClock>>,
+    pub chans: BTreeMap<String, ChannelHandle>,
+    pub rng: Rng,
+}
+
+impl WorkerEnv {
+    /// Join all channels listed in the worker config and build the env.
+    pub fn new(cfg: WorkerConfig, job: Arc<JobRuntime>) -> Result<Self> {
+        let clock = Arc::new(Mutex::new(VClock::default()));
+        let mut chans = BTreeMap::new();
+        for (ch_name, group) in &cfg.channels {
+            let chan = job
+                .spec
+                .channel(ch_name)
+                .with_context(|| format!("worker '{}' references unknown channel '{ch_name}'", cfg.id))?;
+            let handle = job.chan_mgr.join(
+                ch_name,
+                group,
+                &cfg.id,
+                &cfg.role,
+                chan.backend,
+                clock.clone(),
+            )?;
+            chans.insert(ch_name.clone(), handle);
+        }
+        let mut seed_rng = Rng::new(job.tcfg.seed ^ 0x5EED_CAFE);
+        let tag = cfg.id.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64));
+        let rng = seed_rng.fork(tag);
+        Ok(Self {
+            cfg,
+            job,
+            clock,
+            chans,
+            rng,
+        })
+    }
+
+    pub fn chan(&self, name: &str) -> Result<&ChannelHandle> {
+        self.chans
+            .get(name)
+            .with_context(|| format!("worker '{}' has no channel '{name}'", self.cfg.id))
+    }
+
+    pub fn now(&self) -> VTime {
+        self.clock.lock().unwrap().now()
+    }
+
+    /// Charge local compute against the virtual clock per the job's time
+    /// model; returns the charged virtual duration.
+    pub fn charge(&self, measured: Instant) -> VTime {
+        let dt = self.job.time_model.charge(measured.elapsed().as_micros());
+        self.clock.lock().unwrap().advance(dt);
+        dt
+    }
+
+    /// This worker's dataset shard (data consumers only).
+    pub fn shard(&self) -> Result<Arc<Dataset>> {
+        let name = self
+            .cfg
+            .dataset
+            .as_ref()
+            .with_context(|| format!("worker '{}' has no dataset", self.cfg.id))?;
+        self.job
+            .shards
+            .get(name)
+            .cloned()
+            .with_context(|| format!("dataset '{name}' not materialised"))
+    }
+}
+
+/// A runnable role program (a tasklet chain bound to its context).
+pub trait Program: Send {
+    fn run(&mut self) -> Result<()>;
+}
+
+struct ChainProgram<C: Send> {
+    composer: crate::workflow::Composer<C>,
+    ctx: C,
+}
+
+impl<C: Send> Program for ChainProgram<C> {
+    fn run(&mut self) -> Result<()> {
+        self.composer.run(&mut self.ctx)
+    }
+}
+
+pub(crate) fn program<C: Send + 'static>(
+    composer: crate::workflow::Composer<C>,
+    ctx: C,
+) -> Box<dyn Program> {
+    Box::new(ChainProgram { composer, ctx })
+}
+
+/// Build the program for a worker, dispatching on its role name and the
+/// job's topology flavour. This is the role/program binding of §4.1 ("the
+/// flexible binding between role and program").
+pub fn build_program(env: WorkerEnv) -> Result<Box<dyn Program>> {
+    let coordinated = env.job.spec.role("coordinator").is_some();
+    let hybrid = env.job.spec.channel("ring-channel").is_some()
+        && env.job.spec.role("global-aggregator").is_some();
+    match env.cfg.role.as_str() {
+        "trainer" if hybrid => hybrid::build(env),
+        "trainer" if env.job.spec.roles.len() == 1 => distributed::build(env),
+        "trainer" => trainer::build(env, coordinated),
+        "aggregator" => aggregator::build(env, coordinated),
+        "global-aggregator" => global::build(env, coordinated),
+        "coordinator" => coordinator::build(env),
+        other => bail!(
+            "no built-in program for role '{other}' (register a custom one)"
+        ),
+    }
+}
+
+/// Test fixtures shared by unit tests across modules.
+#[cfg(test)]
+pub mod tests_support {
+    use super::*;
+    use crate::channel::Backend;
+    use crate::net::VirtualNet;
+    use crate::registry::Registry;
+    use crate::runtime::MockCompute;
+    use crate::tag::expand;
+    use crate::topo;
+
+    /// A tiny C-FL job runtime over the mock compute (2 trainers).
+    pub fn tiny_job_runtime() -> (Arc<JobRuntime>, Vec<WorkerConfig>) {
+        let spec = topo::classical(2, Backend::InProc).build().to_json();
+        let spec = JobSpec::from_json(&spec).unwrap();
+        let cfgs = expand(&spec, &Registry::single_box()).unwrap();
+        let (shards, test) =
+            crate::data::make_federated(0, 2, 64, 32, crate::data::Partition::Iid, 0.5);
+        let mut shard_map = HashMap::new();
+        for (d, s) in spec.datasets.iter().zip(shards) {
+            shard_map.insert(d.name.clone(), Arc::new(s));
+        }
+        let compute: Arc<dyn Compute> = Arc::new(MockCompute::default_mlp());
+        let init_flat = Arc::new(vec![0f32; compute.d_pad()]);
+        let job = Arc::new(JobRuntime {
+            spec,
+            chan_mgr: ChannelManager::new(Arc::new(VirtualNet::default())),
+            compute,
+            tcfg: TrainingConfig::default(),
+            metrics: Arc::new(MetricsHub::new()),
+            shards: shard_map,
+            test_set: Arc::new(test),
+            time_model: ComputeTimeModel::Free,
+            init_flat,
+        });
+        (job, cfgs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::tiny_job_runtime as mini_job;
+    use super::*;
+
+    #[test]
+    fn env_joins_declared_channels() {
+        let (job, cfgs) = mini_job();
+        let trainer_cfg = cfgs.iter().find(|c| c.role == "trainer").unwrap().clone();
+        let env = WorkerEnv::new(trainer_cfg, job).unwrap();
+        assert!(env.chan("param-channel").is_ok());
+        assert!(env.chan("nope").is_err());
+        assert!(env.shard().is_ok());
+    }
+
+    #[test]
+    fn env_rngs_differ_per_worker() {
+        let (job, cfgs) = mini_job();
+        let mut a = WorkerEnv::new(cfgs[0].clone(), job.clone()).unwrap();
+        let mut b = WorkerEnv::new(cfgs[1].clone(), job).unwrap();
+        assert_ne!(a.rng.next_u64(), b.rng.next_u64());
+    }
+
+    #[test]
+    fn build_program_dispatch() {
+        let (job, cfgs) = mini_job();
+        for cfg in cfgs {
+            let env = WorkerEnv::new(cfg, job.clone()).unwrap();
+            assert!(build_program(env).is_ok());
+        }
+    }
+
+    #[test]
+    fn unknown_role_rejected() {
+        let (job, cfgs) = mini_job();
+        let mut cfg = cfgs[0].clone();
+        cfg.role = "mystery".into();
+        // need matching channels; reuse trainer's
+        let env = WorkerEnv::new(cfg, job).unwrap();
+        assert!(build_program(env).is_err());
+    }
+}

@@ -1,0 +1,296 @@
+//! Trainer role: the data-consuming worker (paper Fig 5's `MNistTrainer`).
+//!
+//! Base chain (H-FL/C-FL): `load >> init >> Loop(fetch >> train >> upload)`.
+//! The CO-FL variant (§6.1) is derived purely by chain surgery: a
+//! `get_assignment` tasklet inserted before `fetch` reads the coordinator's
+//! per-round aggregator assignment (and the end-of-training signal, since
+//! the coordinator owns termination in CO-FL).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::channel::Message;
+use crate::algos::ClientAlgo;
+use crate::data::batch_plan;
+use crate::json::Json;
+use crate::select::FedBalancer;
+use crate::workflow::{Composer, Tasklet};
+
+use super::{program, Program, WorkerEnv};
+
+/// Trainer state threaded through the tasklet chain.
+pub struct TrainerCtx {
+    pub env: WorkerEnv,
+    data: Arc<crate::data::Dataset>,
+    /// Local model (flat).
+    flat: Vec<f32>,
+    /// Last received global model (FedProx/FedDyn anchor, delta base).
+    global: Vec<f32>,
+    /// FedDyn drift state.
+    h: Vec<f32>,
+    batches: Vec<Vec<usize>>,
+    /// Current epoch's batch visit order (balancer-driven when enabled).
+    plan: Vec<usize>,
+    batch_pos: usize,
+    balancer: Option<FedBalancer>,
+    /// Current upstream aggregator (fixed in H-FL, per-round in CO-FL).
+    pub parent: Option<String>,
+    pub round: u64,
+    /// True when this round was a non-participation round ("skip").
+    skip: bool,
+    pub done: bool,
+    last_loss: f64,
+}
+
+impl TrainerCtx {
+    fn new(env: WorkerEnv) -> Result<Self> {
+        Ok(Self {
+            data: env.shard()?,
+            env,
+            flat: Vec::new(),
+            global: Vec::new(),
+            h: Vec::new(),
+            batches: Vec::new(),
+            plan: Vec::new(),
+            batch_pos: 0,
+            balancer: None,
+            parent: None,
+            round: 0,
+            skip: false,
+            done: false,
+            last_loss: f64::NAN,
+        })
+    }
+
+    fn next_batch(&mut self) -> (usize, Vec<f32>, Vec<i32>) {
+        if self.plan.is_empty() || self.batch_pos >= self.plan.len() {
+            // new epoch: balancer plan, or a fresh shuffle of all batches
+            self.plan = match &mut self.balancer {
+                Some(fb) => fb.plan(),
+                None => {
+                    let mut p: Vec<usize> = (0..self.batches.len()).collect();
+                    self.env.rng.shuffle(&mut p);
+                    p
+                }
+            };
+            self.batch_pos = 0;
+        }
+        let b = self.env.job.compute.batch();
+        let batch_idx = self.plan[self.batch_pos];
+        let (x, y) = self.data.gather_batch(&self.batches[batch_idx], b);
+        self.batch_pos += 1;
+        (batch_idx, x, y)
+    }
+}
+
+// ------------------------------------------------------------- tasklets
+
+fn load(c: &mut TrainerCtx) -> Result<()> {
+    let b = c.env.job.compute.batch();
+    c.batches = batch_plan(&mut c.env.rng, c.data.len(), b);
+    if c.env.job.tcfg.fedbalancer {
+        let seed = c.env.job.tcfg.seed ^ 0xFB;
+        c.balancer = Some(FedBalancer::new(c.batches.len(), 0.5, seed));
+    }
+    Ok(())
+}
+
+fn init(c: &mut TrainerCtx) -> Result<()> {
+    let d = c.env.job.compute.d_pad();
+    c.flat = vec![0.0; d];
+    c.global = vec![0.0; d];
+    c.h = vec![0.0; d];
+    Ok(())
+}
+
+fn fetch(c: &mut TrainerCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let param = c.env.chan("param-channel")?;
+    if c.parent.is_none() {
+        let ends = param.ends();
+        if ends.len() == 1 {
+            c.parent = Some(ends[0].clone());
+        }
+    }
+    let (from, msg) = match &c.parent {
+        Some(p) => (p.clone(), param.recv(p)?),
+        None => param.recv_any()?,
+    };
+    match msg.kind.as_str() {
+        "weights" => {
+            let crate::channel::Payload::Floats(w) = &msg.payload else {
+                bail!("weights message without float payload");
+            };
+            c.global.copy_from_slice(w);
+            c.flat.copy_from_slice(w);
+            c.round = msg.round;
+            c.skip = false;
+            c.parent = Some(from);
+        }
+        "skip" => {
+            c.round = msg.round;
+            c.skip = true;
+        }
+        "done" => c.done = true,
+        other => bail!("trainer got unexpected message kind '{other}'"),
+    }
+    Ok(())
+}
+
+fn train(c: &mut TrainerCtx) -> Result<()> {
+    if c.done || c.skip {
+        return Ok(());
+    }
+    let tcfg = c.env.job.tcfg.clone();
+    let compute = c.env.job.compute.clone();
+    let mut loss_sum = 0.0;
+    for _ in 0..tcfg.local_steps {
+        let (batch_idx, x, y) = c.next_batch();
+        let t0 = Instant::now();
+        let loss = match tcfg.client {
+            ClientAlgo::Sgd => {
+                let (nf, loss) = compute.train_step(&c.flat, &x, &y, tcfg.lr)?;
+                c.flat = nf;
+                loss
+            }
+            ClientAlgo::Prox => {
+                let (nf, loss) =
+                    compute.train_step_prox(&c.flat, &c.global, &x, &y, tcfg.lr, tcfg.mu)?;
+                c.flat = nf;
+                loss
+            }
+            ClientAlgo::Dyn => {
+                let (nf, nh, loss) = compute
+                    .train_step_dyn(&c.flat, &c.global, &c.h, &x, &y, tcfg.lr, tcfg.alpha)?;
+                c.flat = nf;
+                c.h = nh;
+                loss
+            }
+        };
+        c.env.charge(t0);
+        if let Some(fb) = &mut c.balancer {
+            fb.record(batch_idx, loss as f64);
+        }
+        loss_sum += loss as f64;
+    }
+    c.last_loss = loss_sum / tcfg.local_steps as f64;
+    c.env
+        .job
+        .metrics
+        .record(&c.env.cfg.id, "trainer_loss", c.round, c.last_loss);
+    Ok(())
+}
+
+fn upload(c: &mut TrainerCtx) -> Result<()> {
+    if c.done || c.skip {
+        return Ok(());
+    }
+    let tcfg = &c.env.job.tcfg;
+    let asynchronous = matches!(
+        tcfg.aggregation,
+        crate::algos::AggregationPolicy::Asynchronous { .. }
+    );
+    // DP sanitisation operates on the delta.
+    let mut delta = crate::model::sub(&c.flat, &c.global);
+    if tcfg.dp_clip > 0.0 {
+        crate::algos::dp_sanitize(&mut delta, tcfg.dp_clip, tcfg.dp_sigma, &mut c.env.rng);
+    }
+    let payload: Vec<f32> = if asynchronous {
+        delta // FedBuff consumes deltas
+    } else {
+        let mut w = c.global.clone();
+        crate::model::axpy(&mut w, 1.0, &delta);
+        w
+    };
+    let mut meta = Json::obj();
+    meta.insert("samples", c.data.len());
+    meta.insert("loss", Json::Num(c.last_loss));
+    meta.insert("worker", c.env.cfg.id.as_str());
+    let msg = Message::floats("update", c.round, Arc::new(payload)).with_meta(Json::Obj(meta));
+    let parent = c.parent.clone().context("no parent to upload to")?;
+    let param = c.env.chan("param-channel")?;
+    c.env.job.metrics.add_traffic(msg.size_bytes());
+    c.env
+        .job
+        .metrics
+        .record(&c.env.cfg.id, "upload_bytes", c.round, msg.size_bytes() as f64);
+    param.send(&parent, msg)?;
+    Ok(())
+}
+
+/// CO-FL only (inserted by surgery): per-round assignment from the
+/// coordinator — which aggregator to work with, or end-of-training.
+fn get_assignment(c: &mut TrainerCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let coord_chan = c.env.chan("coord-t-channel")?;
+    let coord = coord_chan
+        .ends()
+        .first()
+        .cloned()
+        .context("no coordinator on coord-t-channel")?;
+    let msg = coord_chan.recv(&coord)?;
+    match msg.kind.as_str() {
+        "assign" => {
+            c.parent = msg.meta.get("parent").as_str().map(str::to_string);
+        }
+        "done" => c.done = true,
+        other => bail!("unexpected coordinator message '{other}'"),
+    }
+    Ok(())
+}
+
+/// The base trainer chain.
+pub fn base_chain() -> Composer<TrainerCtx> {
+    Composer::new()
+        .task("load", load)
+        .task("init", init)
+        .loop_until(
+            |c: &TrainerCtx| c.done,
+            Composer::new()
+                .task("fetch", fetch)
+                .task("train", train)
+                .task("upload", upload),
+        )
+}
+
+/// Build the trainer program; `coordinated` derives the CO-FL variant by
+/// chain surgery (paper Fig 9 style).
+pub fn build(env: WorkerEnv, coordinated: bool) -> Result<Box<dyn Program>> {
+    let ctx = TrainerCtx::new(env)?;
+    let mut chain = base_chain();
+    if coordinated {
+        chain.insert_before("fetch", Tasklet::new("get_assignment", get_assignment))?;
+    }
+    Ok(program(chain, ctx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_chain_shape() {
+        let c = base_chain();
+        assert_eq!(
+            c.aliases(),
+            vec!["load", "init", "fetch", "train", "upload"]
+        );
+    }
+
+    #[test]
+    fn coordinated_surgery_inserts_assignment() {
+        let mut c = base_chain();
+        c.insert_before("fetch", Tasklet::new("get_assignment", get_assignment))
+            .unwrap();
+        assert_eq!(
+            c.aliases(),
+            vec!["load", "init", "get_assignment", "fetch", "train", "upload"]
+        );
+    }
+}

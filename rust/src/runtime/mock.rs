@@ -1,0 +1,295 @@
+//! Pure-Rust [`Compute`] stand-in: multinomial logistic regression.
+//!
+//! Implements the same trait as the PJRT pool so every coordination test,
+//! property test and bench that doesn't care about the exact model can run
+//! without artifacts and in microseconds. The model *really learns*: the
+//! first `784*10 + 10` coordinates of the flat vector are a softmax
+//! classifier over the synthetic data; the rest of the vector is carried
+//! through untouched (mirroring padding semantics of the real layout).
+
+use anyhow::Result;
+
+use super::Compute;
+use crate::model::weighted_sum;
+
+const IN: usize = crate::data::INPUT_DIM;
+const C: usize = crate::data::NUM_CLASSES;
+const USED: usize = IN * C + C;
+
+/// Logistic-regression mock with the real flat-vector calling convention.
+pub struct MockCompute {
+    d_pad: usize,
+    batch: usize,
+    agg_k: usize,
+}
+
+impl MockCompute {
+    pub fn new(d_pad: usize, batch: usize, agg_k: usize) -> Self {
+        Self {
+            d_pad,
+            batch,
+            agg_k,
+        }
+    }
+
+    /// Same envelope as the real MLP artifacts (d_pad, batch 32, K 16) so a
+    /// mock can be swapped for a PjrtPool in any test.
+    pub fn default_mlp() -> Self {
+        Self::new(235_520, 32, 16)
+    }
+
+    /// Forward pass: logits for each batch row.
+    fn logits(&self, flat: &[f32], x: &[f32]) -> Vec<f32> {
+        let b = x.len() / IN;
+        let w = &flat[..IN * C];
+        let bias = &flat[IN * C..USED.min(flat.len())];
+        let mut out = vec![0f32; b * C];
+        for r in 0..b {
+            let row = &x[r * IN..(r + 1) * IN];
+            for c in 0..C {
+                let mut acc = if bias.len() == C { bias[c] } else { 0.0 };
+                // column-major-ish access kept simple; mock is not perf-critical
+                for i in 0..IN {
+                    acc += row[i] * w[i * C + c];
+                }
+                out[r * C + c] = acc;
+            }
+        }
+        out
+    }
+
+    /// Returns (grad over flat, mean loss).
+    fn grad_loss(&self, flat: &[f32], x: &[f32], y: &[i32]) -> (Vec<f32>, f32) {
+        let b = y.len();
+        let logits = self.logits(flat, x);
+        let mut grad = vec![0f32; self.d_pad];
+        let mut loss = 0f64;
+        for r in 0..b {
+            let lg = &logits[r * C..(r + 1) * C];
+            let mx = lg.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = lg.iter().map(|v| (v - mx).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            let target = y[r] as usize;
+            loss -= ((exps[target] / z).max(1e-12) as f64).ln();
+            let row = &x[r * IN..(r + 1) * IN];
+            for c in 0..C {
+                let p = exps[c] / z;
+                let g = p - if c == target { 1.0 } else { 0.0 };
+                for i in 0..IN {
+                    grad[i * C + c] += row[i] * g / b as f32;
+                }
+                grad[IN * C + c] += g / b as f32;
+            }
+        }
+        (grad, (loss / b as f64) as f32)
+    }
+}
+
+impl Compute for MockCompute {
+    fn d_pad(&self) -> usize {
+        self.d_pad
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn agg_k(&self) -> usize {
+        self.agg_k
+    }
+
+    fn train_step(&self, flat: &[f32], x: &[f32], y: &[i32], lr: f32) -> Result<(Vec<f32>, f32)> {
+        let (grad, loss) = self.grad_loss(flat, x, y);
+        let mut new = flat.to_vec();
+        crate::model::axpy(&mut new, -lr, &grad);
+        Ok((new, loss))
+    }
+
+    fn train_step_prox(
+        &self,
+        flat: &[f32],
+        gflat: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let (mut grad, loss) = self.grad_loss(flat, x, y);
+        for i in 0..self.d_pad {
+            grad[i] += mu * (flat[i] - gflat[i]);
+        }
+        let mut new = flat.to_vec();
+        crate::model::axpy(&mut new, -lr, &grad);
+        Ok((new, loss))
+    }
+
+    fn train_step_dyn(
+        &self,
+        flat: &[f32],
+        gflat: &[f32],
+        h: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        alpha: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let (mut grad, loss) = self.grad_loss(flat, x, y);
+        for i in 0..self.d_pad {
+            grad[i] = grad[i] - h[i] + alpha * (flat[i] - gflat[i]);
+        }
+        let mut new = flat.to_vec();
+        crate::model::axpy(&mut new, -lr, &grad);
+        let mut new_h = h.to_vec();
+        for i in 0..self.d_pad {
+            new_h[i] -= alpha * (new[i] - gflat[i]);
+        }
+        Ok((new, new_h, loss))
+    }
+
+    fn grad_step(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let (g, l) = self.grad_loss(flat, x, y);
+        Ok((g, l))
+    }
+
+    fn eval_step(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let b = y.len();
+        let logits = self.logits(flat, x);
+        let mut sum_loss = 0f64;
+        let mut correct = 0f32;
+        for r in 0..b {
+            let lg = &logits[r * C..(r + 1) * C];
+            let mx = lg.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = lg.iter().map(|v| (v - mx).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            let target = y[r] as usize;
+            sum_loss -= ((exps[target] / z).max(1e-12) as f64).ln();
+            let argmax = lg
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax == target {
+                correct += 1.0;
+            }
+        }
+        Ok((sum_loss as f32, correct))
+    }
+
+    fn aggregate_k(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        assert!(updates.len() <= self.agg_k);
+        Ok(weighted_sum(updates, weights))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{make_federated, Partition};
+
+    fn batch(seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let (shards, _) = make_federated(seed, 1, 64, 32, Partition::Iid, 0.5);
+        let idx: Vec<usize> = (0..32).collect();
+        shards[0].gather_batch(&idx, 32)
+    }
+
+    #[test]
+    fn learns_on_fixed_batch() {
+        let c = MockCompute::default_mlp();
+        let mut flat = vec![0f32; c.d_pad()];
+        let (x, y) = batch(0);
+        let (_, l0) = c.train_step(&flat, &x, &y, 0.0).unwrap();
+        assert!((l0 - (10f32).ln()).abs() < 1e-3);
+        let mut last = l0;
+        for _ in 0..15 {
+            let (nf, l) = c.train_step(&flat, &x, &y, 0.5).unwrap();
+            flat = nf;
+            last = l;
+        }
+        assert!(last < 0.5 * l0, "{l0} -> {last}");
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let c = MockCompute::new(USED, 8, 4);
+        let (shards, _) = make_federated(3, 1, 8, 8, Partition::Iid, 0.5);
+        let idx: Vec<usize> = (0..8).collect();
+        let (x, y) = shards[0].gather_batch(&idx, 8);
+        let mut flat = vec![0f32; c.d_pad()];
+        // non-trivial point
+        for (i, v) in flat.iter_mut().enumerate() {
+            *v = ((i % 23) as f32 - 11.0) * 0.001;
+        }
+        let (g, _) = c.grad_step(&flat, &x, &y).unwrap();
+        let eps = 1e-3;
+        for &i in &[0usize, 777, 4001, 7845] {
+            let mut p = flat.clone();
+            p[i] += eps;
+            let (_, lp) = c.train_step(&p, &x, &y, 0.0).unwrap();
+            p[i] -= 2.0 * eps;
+            let (_, lm) = c.train_step(&p, &x, &y, 0.0).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (g[i] - fd).abs() < 0.02 * (1.0 + fd.abs()),
+                "coord {i}: grad {} vs fd {}",
+                g[i],
+                fd
+            );
+        }
+    }
+
+    #[test]
+    fn prox_mu_zero_equals_sgd() {
+        let c = MockCompute::new(USED, 8, 4);
+        let (x, y) = batch(1);
+        let flat = vec![0.01f32; c.d_pad()];
+        let g = vec![0f32; c.d_pad()];
+        let (a, _) = c.train_step(&flat, &x[..8 * IN], &y[..8], 0.1).unwrap();
+        let (b, _) = c
+            .train_step_prox(&flat, &g, &x[..8 * IN], &y[..8], 0.1, 0.0)
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prox_pulls_toward_global() {
+        let c = MockCompute::new(USED, 8, 4);
+        let (x, y) = batch(2);
+        let flat = vec![0.05f32; c.d_pad()];
+        let g = vec![0f32; c.d_pad()];
+        let (a, _) = c
+            .train_step_prox(&flat, &g, &x[..8 * IN], &y[..8], 0.1, 0.0)
+            .unwrap();
+        let (b, _) = c
+            .train_step_prox(&flat, &g, &x[..8 * IN], &y[..8], 0.1, 10.0)
+            .unwrap();
+        assert!(crate::model::l2_norm(&b) < crate::model::l2_norm(&a));
+    }
+
+    #[test]
+    fn dyn_h_update_rule() {
+        let c = MockCompute::new(USED, 8, 4);
+        let (x, y) = batch(3);
+        let flat = vec![0.02f32; c.d_pad()];
+        let g = vec![0.01f32; c.d_pad()];
+        let h = vec![0.001f32; c.d_pad()];
+        let alpha = 0.1f32;
+        let (nf, nh, _) = c
+            .train_step_dyn(&flat, &g, &h, &x[..8 * IN], &y[..8], 0.05, alpha)
+            .unwrap();
+        for i in (0..c.d_pad()).step_by(997) {
+            let want = h[i] - alpha * (nf[i] - g[i]);
+            assert!((nh[i] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn untouched_tail_preserved() {
+        let c = MockCompute::default_mlp();
+        let (x, y) = batch(4);
+        let mut flat = vec![0f32; c.d_pad()];
+        flat[USED + 5] = 42.0;
+        let (nf, _) = c.train_step(&flat, &x, &y, 0.1).unwrap();
+        assert_eq!(nf[USED + 5], 42.0);
+    }
+}

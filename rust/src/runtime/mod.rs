@@ -1,0 +1,180 @@
+//! Runtime layer: executing the AOT-lowered JAX/Pallas artifacts from Rust.
+//!
+//! Python runs once (`make artifacts`); afterwards this module is the only
+//! place numerics happen. It exposes the [`Compute`] trait — the exact set
+//! of entry points lowered by `python/compile/aot.py` — with two
+//! implementations:
+//!
+//! * [`pjrt::PjrtPool`] — the real thing: a pool of service threads, each
+//!   owning a `PjRtClient` (the `xla` crate's client is `Rc`-based and not
+//!   `Send`, so executables cannot cross threads) and the compiled
+//!   executables for every entry point; worker threads submit requests over
+//!   an mpsc queue.
+//! * [`mock::MockCompute`] — a pure-Rust logistic-regression stand-in with
+//!   the same trait, so the entire coordination stack is testable without
+//!   artifacts (and so coordinator tests stay fast).
+//!
+//! [`aggregate_any`] folds arbitrarily many client updates through the
+//! fixed-`K` Pallas aggregation entry point (weighted sums are associative).
+
+pub mod mock;
+pub mod pjrt;
+pub mod spec;
+
+use anyhow::Result;
+
+pub use mock::MockCompute;
+pub use pjrt::PjrtPool;
+pub use spec::ArtifactSpec;
+
+use crate::net::VTime;
+
+/// The L2 entry points, as seen from the coordinator.
+///
+/// All vectors are flat `f32` model parameters of length `d_pad()`;
+/// `x`/`y` are one fixed-size batch (`batch()` rows).
+pub trait Compute: Send + Sync {
+    fn d_pad(&self) -> usize;
+    fn batch(&self) -> usize;
+    /// Max rows per aggregation call (the Pallas kernel's K).
+    fn agg_k(&self) -> usize;
+
+    /// One SGD step: returns `(new_flat, mean_loss)`.
+    fn train_step(&self, flat: &[f32], x: &[f32], y: &[i32], lr: f32)
+        -> Result<(Vec<f32>, f32)>;
+
+    /// FedProx step with proximal pull toward `gflat`.
+    fn train_step_prox(
+        &self,
+        flat: &[f32],
+        gflat: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, f32)>;
+
+    /// FedDyn step with drift state `h`; returns `(new_flat, new_h, loss)`.
+    fn train_step_dyn(
+        &self,
+        flat: &[f32],
+        gflat: &[f32],
+        h: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        alpha: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)>;
+
+    /// Bare batch gradient: `(grad, loss)`.
+    fn grad_step(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<(Vec<f32>, f32)>;
+
+    /// Eval over one batch: `(sum_loss, num_correct)`.
+    fn eval_step(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+
+    /// Weighted sum of up to `agg_k()` updates (the Pallas kernel).
+    fn aggregate_k(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// Aggregate arbitrarily many updates by folding through `aggregate_k` in
+/// chunks (weighted sums are associative; callers pass final weights).
+pub fn aggregate_any(c: &dyn Compute, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+    assert_eq!(updates.len(), weights.len());
+    assert!(!updates.is_empty());
+    let k = c.agg_k();
+    let mut total: Option<Vec<f32>> = None;
+    for (chunk_u, chunk_w) in updates.chunks(k).zip(weights.chunks(k)) {
+        let part = c.aggregate_k(chunk_u, chunk_w)?;
+        total = Some(match total {
+            None => part,
+            Some(mut acc) => {
+                crate::model::axpy(&mut acc, 1.0, &part);
+                acc
+            }
+        });
+    }
+    Ok(total.unwrap())
+}
+
+/// Evaluate `flat` over a whole dataset (looping fixed-size batches);
+/// returns `(mean_loss, accuracy)`.
+pub fn evaluate(
+    c: &dyn Compute,
+    flat: &[f32],
+    ds: &crate::data::Dataset,
+) -> Result<(f64, f64)> {
+    let b = c.batch();
+    let n_batches = ds.len() / b;
+    assert!(n_batches > 0, "eval set smaller than one batch");
+    let mut loss = 0.0;
+    let mut correct = 0.0;
+    for i in 0..n_batches {
+        let idx: Vec<usize> = (i * b..(i + 1) * b).collect();
+        let (x, y) = ds.gather_batch(&idx, b);
+        let (l, cr) = c.eval_step(flat, &x, &y)?;
+        loss += l as f64;
+        correct += cr as f64;
+    }
+    let n = (n_batches * b) as f64;
+    Ok((loss / n, correct / n))
+}
+
+/// How a worker charges local compute against its virtual clock.
+#[derive(Debug, Clone, Copy)]
+pub enum ComputeTimeModel {
+    /// Charge measured wall time of the runtime call.
+    Measured,
+    /// Charge a fixed virtual cost per training step (deterministic sims).
+    FixedPerStep(VTime),
+    /// Charge nothing (pure-communication studies).
+    Free,
+}
+
+impl ComputeTimeModel {
+    pub fn charge(&self, measured_us: u128) -> VTime {
+        match self {
+            ComputeTimeModel::Measured => measured_us as VTime,
+            ComputeTimeModel::FixedPerStep(v) => *v,
+            ComputeTimeModel::Free => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{make_federated, Partition};
+
+    #[test]
+    fn aggregate_any_chunks_match_direct_sum() {
+        let c = MockCompute::new(64, 8, 4); // d_pad 64, batch 8, agg_k 4
+        let rows: Vec<Vec<f32>> = (0..10)
+            .map(|i| (0..64).map(|j| (i * j) as f32 * 0.01).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let w: Vec<f32> = (0..10).map(|i| (i + 1) as f32 * 0.1).collect();
+        let got = aggregate_any(&c, &refs, &w).unwrap();
+        let want = crate::model::weighted_sum(&refs, &w);
+        for (g, w_) in got.iter().zip(&want) {
+            assert!((g - w_).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn evaluate_over_dataset() {
+        let c = MockCompute::default_mlp();
+        let (_, test) = make_federated(1, 1, 32, 96, Partition::Iid, 0.3);
+        let flat = vec![0f32; c.d_pad()];
+        let (loss, acc) = evaluate(&c, &flat, &test).unwrap();
+        // zero weights -> uniform prediction: loss = ln 10, acc ~ 10%
+        assert!((loss - (10f64).ln()).abs() < 1e-3, "loss={loss}");
+        assert!((0.0..=0.35).contains(&acc));
+    }
+
+    #[test]
+    fn compute_time_models() {
+        assert_eq!(ComputeTimeModel::Measured.charge(123), 123);
+        assert_eq!(ComputeTimeModel::FixedPerStep(500).charge(123), 500);
+        assert_eq!(ComputeTimeModel::Free.charge(123), 0);
+    }
+}

@@ -1,0 +1,472 @@
+//! PJRT-backed [`Compute`]: a pool of service threads, each owning a CPU
+//! PJRT client and the compiled executables for one model's entry points.
+//!
+//! The `xla` crate's `PjRtClient` wraps an `Rc`, so clients and executables
+//! cannot move between threads. Worker threads therefore submit requests to
+//! a shared mpsc queue; each service thread loops `recv -> execute -> reply`
+//! on its own client. Compilation happens once per service thread at pool
+//! construction (the executable cache), never on the request path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`), matching
+//! `aot.py` — see /opt/xla-example/README.md for why serialized protos fail
+//! against xla_extension 0.5.1.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::spec::{ArtifactSpec, EntryInfo};
+use super::Compute;
+
+/// One request argument (host-side).
+enum Arg {
+    F32s(Vec<f32>),
+    I32s(Vec<i32>),
+    Scalar(f32),
+}
+
+/// One result value (host-side).
+#[derive(Debug)]
+enum Out {
+    F32s(Vec<f32>),
+    Scalar(f32),
+}
+
+struct Req {
+    entry: String,
+    args: Vec<Arg>,
+    reply: SyncSender<Result<Vec<Out>>>,
+}
+
+/// Pool of PJRT service threads implementing [`Compute`] for one model.
+pub struct PjrtPool {
+    tx: Sender<Req>,
+    d_pad: usize,
+    batch: usize,
+    agg_k: usize,
+    calls: AtomicU64,
+    exec_us: AtomicU64,
+}
+
+impl PjrtPool {
+    /// Load `model` from the artifact directory with `threads` service
+    /// threads. Each thread compiles every entry point on its own client.
+    pub fn load(spec: &ArtifactSpec, model: &str, threads: usize) -> Result<Arc<Self>> {
+        assert!(threads >= 1);
+        let m = spec.model(model)?;
+        let entries: Vec<(String, String, EntryInfo)> = m
+            .entries
+            .iter()
+            .map(|(name, e)| {
+                (
+                    name.clone(),
+                    spec.dir.join(&e.file).to_string_lossy().into_owned(),
+                    e.clone(),
+                )
+            })
+            .collect();
+
+        let (tx, rx) = mpsc::channel::<Req>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for t in 0..threads {
+            let rx = rx.clone();
+            let entries = entries.clone();
+            let ready = ready_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("pjrt-{t}"))
+                .spawn(move || service_thread(rx, entries, ready))
+                .expect("spawn pjrt service thread");
+        }
+        drop(ready_tx);
+        for _ in 0..threads {
+            ready_rx
+                .recv()
+                .context("pjrt service thread died during startup")??;
+        }
+        Ok(Arc::new(Self {
+            tx,
+            d_pad: m.spec.d_pad,
+            batch: spec.batch,
+            agg_k: spec.agg_k,
+            calls: AtomicU64::new(0),
+            exec_us: AtomicU64::new(0),
+        }))
+    }
+
+    /// Convenience: load from the default artifacts dir.
+    pub fn load_default(model: &str, threads: usize) -> Result<Arc<Self>> {
+        let spec = ArtifactSpec::load(ArtifactSpec::default_dir())?;
+        Self::load(&spec, model, threads)
+    }
+
+    fn call(&self, entry: &str, args: Vec<Arg>) -> Result<Vec<Out>> {
+        let t0 = Instant::now();
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Req {
+                entry: entry.to_string(),
+                args,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("pjrt pool is shut down"))?;
+        let out = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt service thread dropped the request"))??;
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.exec_us
+            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// (total calls, total microseconds) spent in runtime execution.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.calls.load(Ordering::Relaxed),
+            self.exec_us.load(Ordering::Relaxed),
+        )
+    }
+
+    fn floats(out: Out) -> Result<Vec<f32>> {
+        match out {
+            Out::F32s(v) => Ok(v),
+            Out::Scalar(s) => Ok(vec![s]),
+        }
+    }
+
+    fn scalar(out: Out) -> Result<f32> {
+        match out {
+            Out::Scalar(s) => Ok(s),
+            Out::F32s(v) if v.len() == 1 => Ok(v[0]),
+            Out::F32s(v) => bail!("expected scalar, got vector of {}", v.len()),
+        }
+    }
+}
+
+fn service_thread(
+    rx: Arc<Mutex<Receiver<Req>>>,
+    entries: Vec<(String, String, EntryInfo)>,
+    ready: Sender<Result<()>>,
+) {
+    // Build client + compile all entries; report readiness.
+    let built = (|| -> Result<_> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut exes = std::collections::HashMap::new();
+        for (name, path, info) in &entries {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parse HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile entry '{name}'"))?;
+            exes.insert(name.clone(), (exe, info.clone()));
+        }
+        Ok(exes)
+    })();
+    let exes = match built {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(r) => r,
+                Err(_) => return, // pool dropped
+            }
+        };
+        let result = execute_one(&exes, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn execute_one(
+    exes: &std::collections::HashMap<String, (xla::PjRtLoadedExecutable, EntryInfo)>,
+    req: &Req,
+) -> Result<Vec<Out>> {
+    let (exe, info) = exes
+        .get(&req.entry)
+        .with_context(|| format!("unknown entry '{}'", req.entry))?;
+    if req.args.len() != info.input_shapes.len() {
+        bail!(
+            "entry '{}' expects {} inputs, got {}",
+            req.entry,
+            info.input_shapes.len(),
+            req.args.len()
+        );
+    }
+    let mut literals = Vec::with_capacity(req.args.len());
+    for (arg, shape) in req.args.iter().zip(&info.input_shapes) {
+        let lit = match arg {
+            Arg::Scalar(s) => xla::Literal::scalar(*s),
+            Arg::F32s(v) => {
+                let expected: usize = shape.iter().product();
+                if v.len() != expected {
+                    bail!(
+                        "entry '{}': f32 input length {} != shape {:?}",
+                        req.entry,
+                        v.len(),
+                        shape
+                    );
+                }
+                if shape.len() > 1 {
+                    // one host copy straight into the shaped literal —
+                    // `vec1(..).reshape(..)` would copy twice (§Perf L3 #1)
+                    let bytes = unsafe {
+                        std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                    };
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        shape,
+                        bytes,
+                    )?
+                } else {
+                    xla::Literal::vec1(v)
+                }
+            }
+            Arg::I32s(v) => xla::Literal::vec1(v),
+        };
+        literals.push(lit);
+    }
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: the single output is a tuple.
+    let parts = result.to_tuple()?;
+    let mut outs = Vec::with_capacity(parts.len());
+    for p in parts {
+        let n = p.element_count();
+        if n == 1 {
+            outs.push(Out::Scalar(p.get_first_element::<f32>()?));
+        } else {
+            outs.push(Out::F32s(p.to_vec::<f32>()?));
+        }
+    }
+    Ok(outs)
+}
+
+impl Compute for PjrtPool {
+    fn d_pad(&self) -> usize {
+        self.d_pad
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn agg_k(&self) -> usize {
+        self.agg_k
+    }
+
+    fn train_step(&self, flat: &[f32], x: &[f32], y: &[i32], lr: f32) -> Result<(Vec<f32>, f32)> {
+        let mut out = self.call(
+            "train_step",
+            vec![
+                Arg::F32s(flat.to_vec()),
+                Arg::F32s(x.to_vec()),
+                Arg::I32s(y.to_vec()),
+                Arg::Scalar(lr),
+            ],
+        )?;
+        let loss = Self::scalar(out.pop().unwrap())?;
+        let new_flat = Self::floats(out.pop().unwrap())?;
+        Ok((new_flat, loss))
+    }
+
+    fn train_step_prox(
+        &self,
+        flat: &[f32],
+        gflat: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let mut out = self.call(
+            "train_step_prox",
+            vec![
+                Arg::F32s(flat.to_vec()),
+                Arg::F32s(gflat.to_vec()),
+                Arg::F32s(x.to_vec()),
+                Arg::I32s(y.to_vec()),
+                Arg::Scalar(lr),
+                Arg::Scalar(mu),
+            ],
+        )?;
+        let loss = Self::scalar(out.pop().unwrap())?;
+        let new_flat = Self::floats(out.pop().unwrap())?;
+        Ok((new_flat, loss))
+    }
+
+    fn train_step_dyn(
+        &self,
+        flat: &[f32],
+        gflat: &[f32],
+        h: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        alpha: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let mut out = self.call(
+            "train_step_dyn",
+            vec![
+                Arg::F32s(flat.to_vec()),
+                Arg::F32s(gflat.to_vec()),
+                Arg::F32s(h.to_vec()),
+                Arg::F32s(x.to_vec()),
+                Arg::I32s(y.to_vec()),
+                Arg::Scalar(lr),
+                Arg::Scalar(alpha),
+            ],
+        )?;
+        let loss = Self::scalar(out.pop().unwrap())?;
+        let new_h = Self::floats(out.pop().unwrap())?;
+        let new_flat = Self::floats(out.pop().unwrap())?;
+        Ok((new_flat, new_h, loss))
+    }
+
+    fn grad_step(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let mut out = self.call(
+            "grad_step",
+            vec![
+                Arg::F32s(flat.to_vec()),
+                Arg::F32s(x.to_vec()),
+                Arg::I32s(y.to_vec()),
+            ],
+        )?;
+        let loss = Self::scalar(out.pop().unwrap())?;
+        let grad = Self::floats(out.pop().unwrap())?;
+        Ok((grad, loss))
+    }
+
+    fn eval_step(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let mut out = self.call(
+            "eval_step",
+            vec![
+                Arg::F32s(flat.to_vec()),
+                Arg::F32s(x.to_vec()),
+                Arg::I32s(y.to_vec()),
+            ],
+        )?;
+        let correct = Self::scalar(out.pop().unwrap())?;
+        let sum_loss = Self::scalar(out.pop().unwrap())?;
+        Ok((sum_loss, correct))
+    }
+
+    fn aggregate_k(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(updates.len(), weights.len());
+        assert!(!updates.is_empty() && updates.len() <= self.agg_k);
+        // Pack [K, D] with zero-weight padding rows (free: w=0). Built by
+        // appending (no zero-init pass over 15 MB — §Perf L3 #2).
+        let mut stacked = Vec::with_capacity(self.agg_k * self.d_pad);
+        let mut w = vec![0f32; self.agg_k];
+        for (i, (u, wi)) in updates.iter().zip(weights).enumerate() {
+            assert_eq!(u.len(), self.d_pad);
+            stacked.extend_from_slice(u);
+            w[i] = *wi;
+        }
+        stacked.resize(self.agg_k * self.d_pad, 0.0);
+        let mut out = self.call("aggregate", vec![Arg::F32s(stacked), Arg::F32s(w)])?;
+        Self::floats(out.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{make_federated, Partition};
+
+    fn pool() -> Option<Arc<PjrtPool>> {
+        if !ArtifactSpec::available() {
+            eprintln!("skipping: artifacts/ not built");
+            return None;
+        }
+        Some(PjrtPool::load_default("mlp", 1).unwrap())
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_fixed_batch() {
+        let Some(p) = pool() else { return };
+        let spec = ArtifactSpec::load(ArtifactSpec::default_dir()).unwrap();
+        let mut flat = spec.model("mlp").unwrap().spec.init(0);
+        let (shards, _) = make_federated(0, 1, 64, 32, Partition::Iid, 0.5);
+        let idx: Vec<usize> = (0..32).collect();
+        let (x, y) = shards[0].gather_batch(&idx, 32);
+        let (_, first_loss) = p.train_step(&flat, &x, &y, 0.0).unwrap();
+        let mut last = first_loss;
+        for _ in 0..10 {
+            let (nf, l) = p.train_step(&flat, &x, &y, 0.1).unwrap();
+            flat = nf;
+            last = l;
+        }
+        assert!(
+            last < first_loss * 0.8,
+            "loss did not decrease: {first_loss} -> {last}"
+        );
+    }
+
+    #[test]
+    fn aggregate_matches_rust_oracle() {
+        let Some(p) = pool() else { return };
+        let d = p.d_pad();
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..d).map(|j| ((i + j) % 13) as f32 * 0.1).collect())
+            .collect();
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let w = [0.1f32, 0.2, 0.3, 0.4];
+        let got = p.aggregate_k(&refs, &w).unwrap();
+        let want = crate::model::weighted_sum(&refs, &w);
+        let mut max_err = 0f32;
+        for (g, ww) in got.iter().zip(&want) {
+            max_err = max_err.max((g - ww).abs());
+        }
+        assert!(max_err < 1e-3, "max_err={max_err}");
+    }
+
+    #[test]
+    fn eval_step_counts_sensibly() {
+        let Some(p) = pool() else { return };
+        let spec = ArtifactSpec::load(ArtifactSpec::default_dir()).unwrap();
+        let flat = spec.model("mlp").unwrap().spec.init(1);
+        let (shards, _) = make_federated(1, 1, 32, 32, Partition::Iid, 0.5);
+        let idx: Vec<usize> = (0..32).collect();
+        let (x, y) = shards[0].gather_batch(&idx, 32);
+        let (sum_loss, correct) = p.eval_step(&flat, &x, &y).unwrap();
+        assert!(sum_loss > 0.0);
+        assert!((0.0..=32.0).contains(&correct));
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        let Some(p) = pool() else { return };
+        let spec = ArtifactSpec::load(ArtifactSpec::default_dir()).unwrap();
+        let flat = Arc::new(spec.model("mlp").unwrap().spec.init(2));
+        let (shards, _) = make_federated(2, 4, 32, 32, Partition::Iid, 0.5);
+        let mut handles = vec![];
+        for (t, shard) in shards.into_iter().enumerate() {
+            let p = p.clone();
+            let flat = flat.clone();
+            handles.push(std::thread::spawn(move || {
+                let idx: Vec<usize> = (0..32).collect();
+                let (x, y) = shard.gather_batch(&idx, 32);
+                let (nf, loss) = p.train_step(&flat, &x, &y, 0.05).unwrap();
+                assert_eq!(nf.len(), flat.len());
+                assert!(loss.is_finite(), "thread {t} got bad loss");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (calls, _) = p.stats();
+        assert_eq!(calls, 4);
+    }
+}

@@ -1,0 +1,153 @@
+//! Parsing of `artifacts/spec.json` — the contract emitted by `aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+use crate::model::ModelSpec;
+
+/// Shapes of one lowered entry point's inputs.
+#[derive(Debug, Clone)]
+pub struct EntryInfo {
+    pub file: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub input_dtypes: Vec<String>,
+}
+
+/// One model's artifacts: layout + entry table.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub spec: ModelSpec,
+    pub entries: BTreeMap<String, EntryInfo>,
+}
+
+/// The whole `artifacts/` directory, parsed.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub agg_k: usize,
+    pub agg_block_d: usize,
+    pub models: BTreeMap<String, ModelArtifacts>,
+}
+
+impl ArtifactSpec {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("spec.json"))
+            .with_context(|| format!("reading {}/spec.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).context("spec.json is not valid JSON")?;
+        let mut models = BTreeMap::new();
+        let model_obj = j.get("models").as_obj().context("spec missing models")?;
+        for (name, m) in model_obj.iter() {
+            let spec = ModelSpec::from_json(name, m)?;
+            let mut entries = BTreeMap::new();
+            for (entry, e) in m.get("entries").as_obj().context("missing entries")?.iter() {
+                let mut input_shapes = Vec::new();
+                let mut input_dtypes = Vec::new();
+                for inp in e.get("inputs").as_arr().context("entry missing inputs")? {
+                    input_shapes.push(
+                        inp.get("shape")
+                            .as_arr()
+                            .context("input missing shape")?
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                    );
+                    input_dtypes.push(
+                        inp.get("dtype").as_str().unwrap_or("float32").to_string(),
+                    );
+                }
+                entries.insert(
+                    entry.clone(),
+                    EntryInfo {
+                        file: e
+                            .get("file")
+                            .as_str()
+                            .context("entry missing file")?
+                            .to_string(),
+                        input_shapes,
+                        input_dtypes,
+                    },
+                );
+            }
+            models.insert(name.clone(), ModelArtifacts { spec, entries });
+        }
+        Ok(Self {
+            dir,
+            batch: j.get("batch").as_usize().context("spec missing batch")?,
+            input_dim: j.get("input_dim").as_usize().context("missing input_dim")?,
+            num_classes: j
+                .get("num_classes")
+                .as_usize()
+                .context("missing num_classes")?,
+            agg_k: j.get("agg_k").as_usize().context("missing agg_k")?,
+            agg_block_d: j
+                .get("agg_block_d")
+                .as_usize()
+                .context("missing agg_block_d")?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in artifacts (rebuild with --models)"))
+    }
+
+    /// Default artifact dir: `$FLAME_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FLAME_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Are artifacts present (so PJRT-dependent tests can self-skip)?
+    pub fn available() -> bool {
+        Self::default_dir().join("spec.json").exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_present() -> bool {
+        ArtifactSpec::available()
+    }
+
+    #[test]
+    fn loads_real_spec_when_present() {
+        if !artifacts_present() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let spec = ArtifactSpec::load(ArtifactSpec::default_dir()).unwrap();
+        assert_eq!(spec.batch, 32);
+        assert_eq!(spec.input_dim, 784);
+        let mlp = spec.model("mlp").unwrap();
+        assert_eq!(mlp.spec.d, 235146);
+        assert_eq!(mlp.spec.d_pad % spec.agg_block_d, 0);
+        for entry in ["train_step", "train_step_prox", "train_step_dyn", "grad_step", "eval_step", "aggregate"] {
+            let e = mlp.entries.get(entry).unwrap_or_else(|| panic!("missing {entry}"));
+            assert!(spec.dir.join(&e.file).exists(), "{} missing", e.file);
+        }
+        // shape sanity: train_step inputs are [flat, x, y, lr]
+        let ts = &mlp.entries["train_step"];
+        assert_eq!(ts.input_shapes[0], vec![mlp.spec.d_pad]);
+        assert_eq!(ts.input_shapes[1], vec![spec.batch, spec.input_dim]);
+        assert_eq!(ts.input_dtypes[2], "int32");
+        assert!(ts.input_shapes[3].is_empty()); // scalar lr
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = ArtifactSpec::load("/nonexistent/artifacts").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

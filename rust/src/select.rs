@@ -1,0 +1,371 @@
+//! Client & sample selection policies (paper Table 7).
+//!
+//! Client selection decides which trainers participate each round:
+//! `Select All`, `Random` (McMahan et al.) and `Oort` (Lai et al.) —
+//! utility-based selection combining statistical utility (root of mean
+//! squared loss) with a system-speed penalty over the trainer's observed
+//! round latency, plus epsilon-greedy exploration.
+//!
+//! Sample selection implements a FedBalancer-style policy (Shin et al.): a
+//! trainer keeps per-batch loss estimates and preferentially trains on the
+//! highest-loss fraction of its data, with a floor of random exploration.
+
+use std::collections::HashMap;
+
+use crate::net::VTime;
+use crate::prng::Rng;
+
+/// Per-client state the selector learns from round reports.
+#[derive(Debug, Clone, Default)]
+pub struct ClientStats {
+    /// Last reported mean training loss.
+    pub loss: f64,
+    /// Last observed round duration (virtual us).
+    pub round_time: VTime,
+    /// Rounds participated.
+    pub participation: u64,
+}
+
+/// Client selection policy.
+pub trait Selector: Send {
+    /// Choose the participating subset for `round` out of `candidates`
+    /// (sorted worker ids). Must return a non-empty subset when
+    /// `candidates` is non-empty.
+    fn select(&mut self, round: u64, candidates: &[String]) -> Vec<String>;
+
+    /// Feed back a client's round report.
+    fn report(&mut self, client: &str, stats: ClientStats);
+}
+
+/// Everyone participates every round.
+pub struct SelectAll;
+
+impl Selector for SelectAll {
+    fn select(&mut self, _round: u64, candidates: &[String]) -> Vec<String> {
+        candidates.to_vec()
+    }
+
+    fn report(&mut self, _client: &str, _stats: ClientStats) {}
+}
+
+/// Uniformly random fraction per round.
+pub struct RandomSelect {
+    frac: f64,
+    rng: Rng,
+}
+
+impl RandomSelect {
+    pub fn new(frac: f64, seed: u64) -> Self {
+        Self {
+            frac: frac.clamp(0.0, 1.0),
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+fn target_count(frac: f64, n: usize) -> usize {
+    ((frac * n as f64).round() as usize).clamp(1, n)
+}
+
+impl Selector for RandomSelect {
+    fn select(&mut self, _round: u64, candidates: &[String]) -> Vec<String> {
+        if candidates.is_empty() {
+            return vec![];
+        }
+        let k = target_count(self.frac, candidates.len());
+        let idx = self.rng.sample_indices(candidates.len(), k);
+        let mut out: Vec<String> = idx.into_iter().map(|i| candidates[i].clone()).collect();
+        out.sort();
+        out
+    }
+
+    fn report(&mut self, _client: &str, _stats: ClientStats) {}
+}
+
+/// Oort-style utility selection.
+///
+/// Utility of client i: `stat_i * sys_i` with `stat_i = sqrt(mean loss^2)`
+/// (we use reported mean loss as the proxy) and
+/// `sys_i = (T/t_i)^alpha if t_i > T else 1` — a penalty for clients slower
+/// than the round-time target `T` (set adaptively to the median observed).
+/// An epsilon fraction of each cohort is random exploration of unseen
+/// clients.
+pub struct OortSelect {
+    frac: f64,
+    epsilon: f64,
+    alpha: f64,
+    stats: HashMap<String, ClientStats>,
+    rng: Rng,
+}
+
+impl OortSelect {
+    pub fn new(frac: f64, seed: u64) -> Self {
+        Self {
+            frac: frac.clamp(0.0, 1.0),
+            epsilon: 0.2,
+            alpha: 2.0,
+            stats: HashMap::new(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn utility(&self, client: &str, median_t: f64) -> f64 {
+        match self.stats.get(client) {
+            None => 0.0,
+            Some(s) => {
+                let stat = s.loss.max(1e-6);
+                let sys = if median_t > 0.0 && (s.round_time as f64) > median_t {
+                    (median_t / s.round_time as f64).powf(self.alpha)
+                } else {
+                    1.0
+                };
+                stat * sys
+            }
+        }
+    }
+}
+
+impl Selector for OortSelect {
+    fn select(&mut self, _round: u64, candidates: &[String]) -> Vec<String> {
+        if candidates.is_empty() {
+            return vec![];
+        }
+        let k = target_count(self.frac, candidates.len());
+        // adaptive round-time target: median of observed times
+        let mut times: Vec<f64> = candidates
+            .iter()
+            .filter_map(|c| self.stats.get(c))
+            .filter(|s| s.round_time > 0)
+            .map(|s| s.round_time as f64)
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median_t = if times.is_empty() {
+            0.0
+        } else {
+            times[times.len() / 2]
+        };
+
+        let n_explore = ((k as f64 * self.epsilon).ceil() as usize).min(k);
+        let n_exploit = k - n_explore;
+
+        // exploit: top-utility explored clients
+        let mut scored: Vec<(&String, f64)> = candidates
+            .iter()
+            .filter(|c| self.stats.contains_key(*c))
+            .map(|c| (c, self.utility(c, median_t)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(b.0)));
+        let mut chosen: Vec<String> = scored
+            .iter()
+            .take(n_exploit)
+            .map(|(c, _)| (*c).clone())
+            .collect();
+
+        // explore: random among the rest (prefer never-seen clients)
+        let mut rest: Vec<&String> = candidates.iter().filter(|c| !chosen.contains(c)).collect();
+        rest.sort_by_key(|c| self.stats.contains_key(*c) as u8); // unseen first
+        let unseen = rest.iter().filter(|c| !self.stats.contains_key(**c)).count();
+        let pool = unseen.max(rest.len().min(k));
+        while chosen.len() < k && !rest.is_empty() {
+            let j = self.rng.below(pool.min(rest.len()) as u64) as usize;
+            chosen.push(rest.remove(j).clone());
+        }
+        chosen.sort();
+        chosen
+    }
+
+    fn report(&mut self, client: &str, stats: ClientStats) {
+        let e = self.stats.entry(client.to_string()).or_default();
+        e.loss = stats.loss;
+        e.round_time = stats.round_time;
+        e.participation += 1;
+    }
+}
+
+/// Build a selector from the config string ("all" | "random" | "oort").
+pub fn make_selector(name: &str, frac: f64, seed: u64) -> Box<dyn Selector> {
+    match name {
+        "random" => Box::new(RandomSelect::new(frac, seed)),
+        "oort" => Box::new(OortSelect::new(frac, seed)),
+        _ => Box::new(SelectAll),
+    }
+}
+
+// ------------------------------------------------------------------------
+// Sample selection (FedBalancer-style)
+// ------------------------------------------------------------------------
+
+/// Trainer-side batch-granular loss-based sample selection.
+///
+/// Tracks an exponential moving average of each batch's loss; `plan` keeps
+/// the top `keep_frac` loss batches plus an exploration floor so estimates
+/// stay fresh. (The original FedBalancer works per-sample with deadline
+/// control; batch granularity preserves the mechanism under our fixed-shape
+/// artifacts — see DESIGN.md.)
+pub struct FedBalancer {
+    keep_frac: f64,
+    explore: f64,
+    ema: Vec<f64>,
+    rng: Rng,
+}
+
+impl FedBalancer {
+    pub fn new(n_batches: usize, keep_frac: f64, seed: u64) -> Self {
+        Self {
+            keep_frac: keep_frac.clamp(0.1, 1.0),
+            explore: 0.2,
+            ema: vec![f64::MAX; n_batches], // unseen batches = max priority
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn record(&mut self, batch: usize, loss: f64) {
+        let e = &mut self.ema[batch];
+        *e = if *e == f64::MAX { loss } else { 0.7 * *e + 0.3 * loss };
+    }
+
+    /// Batch indices to train on this epoch, highest-loss first.
+    pub fn plan(&mut self) -> Vec<usize> {
+        let n = self.ema.len();
+        let keep = target_count(self.keep_frac, n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| self.ema[b].partial_cmp(&self.ema[a]).unwrap());
+        let mut chosen: Vec<usize> = idx[..keep].to_vec();
+        // exploration: swap a fraction for random non-chosen batches
+        let n_explore = ((keep as f64 * self.explore).floor() as usize).min(n - keep);
+        for e in 0..n_explore {
+            let j = keep + self.rng.below((n - keep) as u64) as usize;
+            chosen[keep - 1 - e] = idx[j];
+        }
+        chosen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clients(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("t{i:02}")).collect()
+    }
+
+    #[test]
+    fn select_all_returns_everyone() {
+        let mut s = SelectAll;
+        assert_eq!(s.select(0, &clients(5)).len(), 5);
+        assert!(s.select(0, &[]).is_empty());
+    }
+
+    #[test]
+    fn random_respects_fraction_and_distinct() {
+        let mut s = RandomSelect::new(0.4, 1);
+        let c = clients(10);
+        for round in 0..20 {
+            let sel = s.select(round, &c);
+            assert_eq!(sel.len(), 4);
+            let mut d = sel.clone();
+            d.dedup();
+            assert_eq!(d.len(), 4);
+        }
+    }
+
+    #[test]
+    fn random_minimum_one() {
+        let mut s = RandomSelect::new(0.01, 2);
+        assert_eq!(s.select(0, &clients(10)).len(), 1);
+    }
+
+    #[test]
+    fn oort_prefers_high_loss_clients() {
+        let mut s = OortSelect::new(0.3, 3);
+        s.epsilon = 0.0; // pure exploitation for the test
+        let c = clients(10);
+        for (i, id) in c.iter().enumerate() {
+            s.report(
+                id,
+                ClientStats {
+                    loss: if i < 3 { 5.0 } else { 0.1 },
+                    round_time: 1000,
+                    participation: 1,
+                },
+            );
+        }
+        let sel = s.select(1, &c);
+        assert_eq!(sel, vec!["t00", "t01", "t02"]);
+    }
+
+    #[test]
+    fn oort_penalizes_stragglers() {
+        let mut s = OortSelect::new(0.2, 4);
+        s.epsilon = 0.0;
+        let c = clients(10);
+        for (i, id) in c.iter().enumerate() {
+            s.report(
+                id,
+                ClientStats {
+                    loss: 1.0,
+                    // t00 is 100x slower than the rest
+                    round_time: if i == 0 { 100_000_000 } else { 1_000_000 },
+                    participation: 1,
+                },
+            );
+        }
+        let sel = s.select(1, &c);
+        assert!(!sel.contains(&"t00".to_string()), "straggler selected: {sel:?}");
+    }
+
+    #[test]
+    fn oort_explores_unseen_clients() {
+        let mut s = OortSelect::new(0.5, 5);
+        let c = clients(10);
+        // only first 2 have stats; cohort of 5 must include unseen ones
+        for id in &c[..2] {
+            s.report(id, ClientStats { loss: 1.0, round_time: 1000, participation: 1 });
+        }
+        let sel = s.select(1, &c);
+        assert_eq!(sel.len(), 5);
+        assert!(sel.iter().any(|x| !["t00", "t01"].contains(&x.as_str())));
+    }
+
+    #[test]
+    fn make_selector_dispatch() {
+        let mut s = make_selector("all", 0.1, 0);
+        assert_eq!(s.select(0, &clients(4)).len(), 4);
+        let mut s = make_selector("random", 0.5, 0);
+        assert_eq!(s.select(0, &clients(4)).len(), 2);
+        let mut s = make_selector("oort", 0.5, 0);
+        assert_eq!(s.select(0, &clients(4)).len(), 2);
+    }
+
+    #[test]
+    fn fedbalancer_prefers_high_loss_batches() {
+        let mut fb = FedBalancer::new(10, 0.3, 6);
+        fb.explore = 0.0;
+        for b in 0..10 {
+            fb.record(b, if b >= 7 { 9.0 } else { 0.1 });
+        }
+        let mut plan = fb.plan();
+        plan.sort();
+        assert_eq!(plan, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn fedbalancer_unseen_batches_first() {
+        let mut fb = FedBalancer::new(5, 0.4, 7);
+        fb.explore = 0.0;
+        fb.record(0, 100.0);
+        fb.record(1, 100.0);
+        fb.record(2, 100.0);
+        // batches 3,4 never seen -> max priority
+        let plan = fb.plan();
+        assert!(plan.contains(&3) && plan.contains(&4), "{plan:?}");
+    }
+
+    #[test]
+    fn fedbalancer_ema_updates() {
+        let mut fb = FedBalancer::new(2, 1.0, 8);
+        fb.record(0, 1.0);
+        fb.record(0, 0.0);
+        assert!((fb.ema[0] - 0.7).abs() < 1e-9);
+    }
+}

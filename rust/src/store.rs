@@ -1,0 +1,399 @@
+//! Journaling state store (the paper's MongoDB stand-in).
+//!
+//! The controller persists job specs, expanded worker configurations and
+//! status transitions here. The store is an append-only JSON-lines journal
+//! with an in-memory collection index — enough durability machinery that the
+//! "DB write" column of the paper's Table 6 measures a real serialization +
+//! write path, while staying embeddable and dependency-free.
+//!
+//! Layout: each record is one line `{"c": <collection>, "k": <key>,
+//! "v": <value|null>}`; a `null` value is a tombstone. Recovery replays the
+//! journal in order. `Store::in_memory()` skips the file for tests/benches
+//! that only need the index (Table 6 reports both modes).
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::json::{Json, Obj};
+
+struct Inner {
+    /// collection -> key -> value
+    index: HashMap<String, HashMap<String, Json>>,
+    writer: Option<BufWriter<File>>,
+    path: Option<PathBuf>,
+    writes: u64,
+}
+
+/// Embedded journaling document store.
+pub struct Store {
+    inner: Mutex<Inner>,
+}
+
+impl Store {
+    /// Open (or create) a journal-backed store at `path`, replaying any
+    /// existing journal into the index.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let mut index: HashMap<String, HashMap<String, Json>> = HashMap::new();
+        if path.exists() {
+            let f = File::open(&path).context("open journal")?;
+            for (lineno, line) in BufReader::new(f).lines().enumerate() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let rec = Json::parse(&line)
+                    .with_context(|| format!("corrupt journal line {}", lineno + 1))?;
+                Self::apply(&mut index, &rec)?;
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(Self {
+            inner: Mutex::new(Inner {
+                index,
+                writer: Some(BufWriter::new(file)),
+                path: Some(path),
+                writes: 0,
+            }),
+        })
+    }
+
+    /// Index-only store (no journal file); used by tests and to separate
+    /// expansion cost from write cost in the Table 6 bench.
+    pub fn in_memory() -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                index: HashMap::new(),
+                writer: None,
+                path: None,
+                writes: 0,
+            }),
+        }
+    }
+
+    fn apply(
+        index: &mut HashMap<String, HashMap<String, Json>>,
+        rec: &Json,
+    ) -> Result<()> {
+        let c = rec
+            .get("c")
+            .as_str()
+            .context("journal record missing collection")?
+            .to_string();
+        let k = rec
+            .get("k")
+            .as_str()
+            .context("journal record missing key")?
+            .to_string();
+        let v = rec.get("v");
+        let coll = index.entry(c).or_default();
+        if v.is_null() {
+            coll.remove(&k);
+        } else {
+            coll.insert(k, v.clone());
+        }
+        Ok(())
+    }
+
+    /// Insert or replace `collection/key`.
+    pub fn put(&self, collection: &str, key: &str, value: Json) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.writer.is_some() {
+            let mut rec = Obj::new();
+            rec.insert("c", collection);
+            rec.insert("k", key);
+            rec.insert("v", value.clone());
+            let line = Json::Obj(rec).dump();
+            let w = g.writer.as_mut().unwrap();
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+        }
+        g.index
+            .entry(collection.to_string())
+            .or_default()
+            .insert(key.to_string(), value);
+        g.writes += 1;
+        Ok(())
+    }
+
+    /// Batched put: one journal flush for `items` records. This is the path
+    /// the controller uses to persist an expansion result (Table 6).
+    pub fn put_batch(
+        &self,
+        collection: &str,
+        items: impl IntoIterator<Item = (String, Json)>,
+    ) -> Result<usize> {
+        let mut g = self.inner.lock().unwrap();
+        let mut n = 0;
+        for (key, value) in items {
+            if g.writer.is_some() {
+                let mut rec = Obj::new();
+                rec.insert("c", collection);
+                rec.insert("k", key.as_str());
+                rec.insert("v", value.clone());
+                let line = Json::Obj(rec).dump();
+                let w = g.writer.as_mut().unwrap();
+                w.write_all(line.as_bytes())?;
+                w.write_all(b"\n")?;
+            }
+            g.index
+                .entry(collection.to_string())
+                .or_default()
+                .insert(key, value);
+            n += 1;
+        }
+        g.writes += n as u64;
+        if let Some(w) = g.writer.as_mut() {
+            w.flush()?;
+        }
+        Ok(n)
+    }
+
+    pub fn get(&self, collection: &str, key: &str) -> Option<Json> {
+        let g = self.inner.lock().unwrap();
+        g.index.get(collection).and_then(|c| c.get(key)).cloned()
+    }
+
+    pub fn delete(&self, collection: &str, key: &str) -> Result<bool> {
+        let mut g = self.inner.lock().unwrap();
+        if g.writer.is_some() {
+            let mut rec = Obj::new();
+            rec.insert("c", collection);
+            rec.insert("k", key);
+            rec.insert("v", Json::Null);
+            let line = Json::Obj(rec).dump();
+            let w = g.writer.as_mut().unwrap();
+            w.write_all(line.as_bytes())?;
+            w.write_all(b"\n")?;
+        }
+        let existed = g
+            .index
+            .get_mut(collection)
+            .map(|c| c.remove(key).is_some())
+            .unwrap_or(false);
+        Ok(existed)
+    }
+
+    /// All keys in a collection (unordered).
+    pub fn keys(&self, collection: &str) -> Vec<String> {
+        let g = self.inner.lock().unwrap();
+        g.index
+            .get(collection)
+            .map(|c| c.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn count(&self, collection: &str) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.index.get(collection).map(|c| c.len()).unwrap_or(0)
+    }
+
+    /// Flush buffered journal writes to the OS.
+    pub fn flush(&self) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(w) = g.writer.as_mut() {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    /// fsync the journal (full durability point).
+    pub fn sync(&self) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(w) = g.writer.as_mut() {
+            w.flush()?;
+            w.get_ref().sync_data()?;
+        }
+        Ok(())
+    }
+
+    pub fn total_writes(&self) -> u64 {
+        self.inner.lock().unwrap().writes
+    }
+
+    pub fn journal_path(&self) -> Option<PathBuf> {
+        self.inner.lock().unwrap().path.clone()
+    }
+
+    /// Compact the journal: rewrite it as exactly the live index (drops
+    /// overwritten versions and tombstones). Atomic via rename. Returns the
+    /// number of live records written; no-op for in-memory stores.
+    pub fn compact(&self) -> Result<usize> {
+        let mut g = self.inner.lock().unwrap();
+        let Some(path) = g.path.clone() else {
+            return Ok(0);
+        };
+        if let Some(w) = g.writer.as_mut() {
+            w.flush()?;
+        }
+        let tmp = path.with_extension("compact");
+        let mut n = 0;
+        {
+            let mut w = BufWriter::new(File::create(&tmp)?);
+            for (c, coll) in &g.index {
+                for (k, v) in coll {
+                    let mut rec = Obj::new();
+                    rec.insert("c", c.as_str());
+                    rec.insert("k", k.as_str());
+                    rec.insert("v", v.clone());
+                    w.write_all(Json::Obj(rec).dump().as_bytes())?;
+                    w.write_all(b"\n")?;
+                    n += 1;
+                }
+            }
+            w.flush()?;
+            w.get_ref().sync_data()?;
+        }
+        std::fs::rename(&tmp, &path)?;
+        let file = OpenOptions::new().append(true).open(&path)?;
+        g.writer = Some(BufWriter::new(file));
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("flame-store-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("{name}-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = Store::in_memory();
+        s.put("jobs", "j1", Json::from("spec")).unwrap();
+        assert_eq!(s.get("jobs", "j1").unwrap().as_str(), Some("spec"));
+        assert!(s.get("jobs", "nope").is_none());
+        assert!(s.get("other", "j1").is_none());
+    }
+
+    #[test]
+    fn delete_and_tombstone() {
+        let s = Store::in_memory();
+        s.put("c", "k", Json::from(1i64)).unwrap();
+        assert!(s.delete("c", "k").unwrap());
+        assert!(!s.delete("c", "k").unwrap());
+        assert!(s.get("c", "k").is_none());
+    }
+
+    #[test]
+    fn journal_recovery_replays_state() {
+        let p = tmp("recovery");
+        {
+            let s = Store::open(&p).unwrap();
+            s.put("jobs", "a", Json::from(1i64)).unwrap();
+            s.put("jobs", "b", Json::from(2i64)).unwrap();
+            s.put("jobs", "a", Json::from(3i64)).unwrap(); // overwrite
+            s.delete("jobs", "b").unwrap(); // tombstone
+            s.flush().unwrap();
+        }
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.get("jobs", "a").unwrap().as_i64(), Some(3));
+        assert!(s.get("jobs", "b").is_none());
+        assert_eq!(s.count("jobs"), 1);
+    }
+
+    #[test]
+    fn batch_put_counts() {
+        let p = tmp("batch");
+        let s = Store::open(&p).unwrap();
+        let n = s
+            .put_batch(
+                "workers",
+                (0..100).map(|i| (format!("w{i}"), Json::from(i as i64))),
+            )
+            .unwrap();
+        assert_eq!(n, 100);
+        assert_eq!(s.count("workers"), 100);
+        drop(s);
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.count("workers"), 100);
+        assert_eq!(s.get("workers", "w42").unwrap().as_i64(), Some(42));
+    }
+
+    #[test]
+    fn corrupt_journal_is_an_error() {
+        let p = tmp("corrupt");
+        std::fs::write(&p, "{\"c\":\"x\",\"k\":\"k\",\"v\":1}\nnot-json\n").unwrap();
+        assert!(Store::open(&p).is_err());
+    }
+
+    #[test]
+    fn keys_and_counts() {
+        let s = Store::in_memory();
+        for i in 0..5 {
+            s.put("c", &format!("k{i}"), Json::from(i as i64)).unwrap();
+        }
+        let mut ks = s.keys("c");
+        ks.sort();
+        assert_eq!(ks, vec!["k0", "k1", "k2", "k3", "k4"]);
+        assert_eq!(s.count("c"), 5);
+        assert_eq!(s.total_writes(), 5);
+    }
+
+    #[test]
+    fn compaction_shrinks_journal_and_preserves_state() {
+        let p = tmp("compact");
+        let s = Store::open(&p).unwrap();
+        for i in 0..50 {
+            s.put("c", "hot", Json::from(i as i64)).unwrap(); // 50 versions
+        }
+        s.put("c", "dead", Json::from(1i64)).unwrap();
+        s.delete("c", "dead").unwrap();
+        s.put("c", "live", Json::from(7i64)).unwrap();
+        s.flush().unwrap();
+        let before = std::fs::metadata(&p).unwrap().len();
+        let n = s.compact().unwrap();
+        assert_eq!(n, 2); // hot + live
+        let after = std::fs::metadata(&p).unwrap().len();
+        assert!(after < before / 5, "{before} -> {after}");
+        // state intact, and the store still accepts writes after compaction
+        assert_eq!(s.get("c", "hot").unwrap().as_i64(), Some(49));
+        assert!(s.get("c", "dead").is_none());
+        s.put("c", "post", Json::from(2i64)).unwrap();
+        s.flush().unwrap();
+        drop(s);
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.get("c", "hot").unwrap().as_i64(), Some(49));
+        assert_eq!(s.get("c", "post").unwrap().as_i64(), Some(2));
+        assert_eq!(s.count("c"), 3);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn compact_on_memory_store_is_noop() {
+        let s = Store::in_memory();
+        s.put("c", "k", Json::from(1i64)).unwrap();
+        assert_eq!(s.compact().unwrap(), 0);
+        assert_eq!(s.get("c", "k").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn concurrent_writers_do_not_lose_records() {
+        use std::sync::Arc;
+        let s = Arc::new(Store::in_memory());
+        let mut handles = vec![];
+        for t in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    s.put("c", &format!("t{t}-{i}"), Json::from(i as i64)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.count("c"), 800);
+    }
+}

@@ -1,0 +1,303 @@
+//! TAG expansion — the paper's Algorithm 1 (§4.2).
+//!
+//! `Expand(J)` walks the roles of a job spec and builds one
+//! [`WorkerConfig`] per physical worker:
+//!
+//! * **data consumers** (line 14-22): one worker per dataset; the worker's
+//!   compute comes from realm matching ([`crate::registry`]) and its channel
+//!   groups from the `groupAssociation` entry matching the dataset's group,
+//! * **other roles** (line 24-30): one worker per `groupAssociation` entry,
+//!   times `replica`, placed round-robin.
+//!
+//! Roles are self-contained, so expansion order doesn't matter (§4.2); we
+//! iterate in spec order for deterministic worker ids. `PreCheck` /
+//! `PostCheck` live in [`super::validate`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+use crate::registry::Registry;
+
+use super::validate::{post_check, pre_check};
+use super::{JobSpec, Role};
+
+/// The physical instantiation of one role instance — everything an agent
+/// needs to start a worker (§5.2 "task configuration").
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerConfig {
+    /// Globally unique worker id: `<job>-<role>-<n>`.
+    pub id: String,
+    pub role: String,
+    /// Compute cluster this worker is placed on.
+    pub compute: String,
+    /// `channel name -> group` memberships for this worker.
+    pub channels: BTreeMap<String, String>,
+    /// Dataset bound to this worker (data consumers only).
+    pub dataset: Option<String>,
+    /// Which replica of its groupAssociation entry this worker is.
+    pub replica_idx: usize,
+}
+
+impl WorkerConfig {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("id", self.id.as_str());
+        o.insert("role", self.role.as_str());
+        o.insert("compute", self.compute.as_str());
+        let mut ch = Json::obj();
+        for (k, v) in &self.channels {
+            ch.insert(k.as_str(), v.as_str());
+        }
+        o.insert("channels", ch);
+        match &self.dataset {
+            Some(d) => o.insert("dataset", d.as_str()),
+            None => o.insert("dataset", Json::Null),
+        }
+        o.insert("replicaIdx", self.replica_idx);
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut channels = BTreeMap::new();
+        if let Some(o) = j.get("channels").as_obj() {
+            for (k, v) in o.iter() {
+                channels.insert(
+                    k.clone(),
+                    v.as_str().context("channel group must be string")?.to_string(),
+                );
+            }
+        }
+        Ok(WorkerConfig {
+            id: j.get("id").as_str().context("missing id")?.to_string(),
+            role: j.get("role").as_str().context("missing role")?.to_string(),
+            compute: j.get("compute").as_str().unwrap_or("box").to_string(),
+            channels,
+            dataset: j.get("dataset").as_str().map(str::to_string),
+            replica_idx: j.get("replicaIdx").as_usize().unwrap_or(0),
+        })
+    }
+}
+
+/// Algorithm 1, `Expand(J)`: returns the full worker list, or an error when
+/// pre/post validation fails.
+pub fn expand(spec: &JobSpec, registry: &Registry) -> Result<Vec<WorkerConfig>> {
+    pre_check(spec)?;
+    registry.reset_load();
+    let mut workers = Vec::new();
+    for role in &spec.roles {
+        let xs = build_workers(role, spec, registry)
+            .with_context(|| format!("expanding role '{}'", role.name))?;
+        workers.extend(xs);
+    }
+    post_check(spec, &workers)?;
+    Ok(workers)
+}
+
+/// Resolve a role's `groupAssociation` entry to concrete channel groups,
+/// filling in `"default"` for channels of the role not named by the entry.
+fn resolve_channels(role: &Role, entry: &BTreeMap<String, String>, spec: &JobSpec) -> BTreeMap<String, String> {
+    let mut channels = BTreeMap::new();
+    for c in spec.channels_of(&role.name) {
+        let group = entry
+            .get(&c.name)
+            .cloned()
+            .unwrap_or_else(|| "default".to_string());
+        channels.insert(c.name.clone(), group);
+    }
+    channels
+}
+
+/// Algorithm 1, `BuildWorkers(r, J)`.
+fn build_workers(role: &Role, spec: &JobSpec, registry: &Registry) -> Result<Vec<WorkerConfig>> {
+    let mut out = Vec::new();
+    let mut n = 0usize;
+    if role.is_data_consumer {
+        // lines 14-22: iterate dataset groups, one worker per dataset.
+        for group in spec.dataset_groups() {
+            let assoc = group_assoc_by_group_name(role, &group).with_context(|| {
+                format!(
+                    "role '{}' has no groupAssociation entry for dataset group '{group}'",
+                    role.name
+                )
+            })?;
+            for d in spec.datasets.iter().filter(|d| d.group == group) {
+                let compute = registry.compute_for_realm(&d.realm)?;
+                out.push(WorkerConfig {
+                    id: format!("{}-{}-{}", spec.name, role.name, n),
+                    role: role.name.clone(),
+                    compute,
+                    channels: resolve_channels(role, assoc, spec),
+                    dataset: Some(d.name.clone()),
+                    replica_idx: 0,
+                });
+                n += 1;
+            }
+        }
+    } else {
+        // lines 24-30: one worker per association entry, times replica.
+        for assoc in &role.group_association {
+            for i in 0..role.replica {
+                let compute = registry.decide_compute()?;
+                out.push(WorkerConfig {
+                    id: format!("{}-{}-{}", spec.name, role.name, n),
+                    role: role.name.clone(),
+                    compute,
+                    channels: resolve_channels(role, assoc, spec),
+                    dataset: None,
+                    replica_idx: i,
+                });
+                n += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Algorithm 1's `GetGroupAssocByGroupName(r, g)`: the association entry
+/// that places the worker in group `g` on some channel.
+fn group_assoc_by_group_name<'a>(
+    role: &'a Role,
+    group: &str,
+) -> Result<&'a BTreeMap<String, String>> {
+    let hit = role
+        .group_association
+        .iter()
+        .find(|m| m.values().any(|v| v == group));
+    match hit {
+        Some(m) => Ok(m),
+        None => {
+            // Convention: a lone empty entry means "default everywhere".
+            if group == "default"
+                && role.group_association.len() == 1
+                && role.group_association[0].is_empty()
+            {
+                Ok(&role.group_association[0])
+            } else {
+                bail!("no entry for group '{group}'")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Backend;
+    use crate::registry::{ComputeSpec, Registry};
+    use crate::topo;
+
+    fn single_box() -> Registry {
+        Registry::single_box()
+    }
+
+    #[test]
+    fn expands_paper_figure3_example() {
+        // Fig 3: H-FL with datasets A,B in "west" and C,D in "east" ->
+        // 4 trainers, 2 aggregators (one per group), 1 global aggregator.
+        let spec = topo::hierarchical(4, 2, Backend::Broker).build();
+        let w = expand(&spec, &single_box()).unwrap();
+        let trainers: Vec<_> = w.iter().filter(|x| x.role == "trainer").collect();
+        let aggs: Vec<_> = w.iter().filter(|x| x.role == "aggregator").collect();
+        let globals: Vec<_> = w.iter().filter(|x| x.role == "global-aggregator").collect();
+        assert_eq!(trainers.len(), 4);
+        assert_eq!(aggs.len(), 2);
+        assert_eq!(globals.len(), 1);
+        // trainers' param-channel groups follow their dataset groups
+        let g0 = &trainers[0].channels["param-channel"];
+        assert_eq!(g0, "group0");
+        // both aggregators share the default agg-channel group
+        assert!(aggs.iter().all(|a| a.channels["agg-channel"] == "default"));
+        // and sit in different param-channel groups
+        assert_ne!(
+            aggs[0].channels["param-channel"],
+            aggs[1].channels["param-channel"]
+        );
+    }
+
+    #[test]
+    fn replica_creates_copies_sharing_properties() {
+        // CO-FL-style: aggregator role with replica=3 in a single group.
+        let spec = topo::coordinated(10, 3, Backend::Broker).build();
+        let w = expand(&spec, &single_box()).unwrap();
+        let aggs: Vec<_> = w.iter().filter(|x| x.role == "aggregator").collect();
+        assert_eq!(aggs.len(), 3);
+        // replicas share channel groups (paper: copies share properties)
+        assert!(aggs
+            .windows(2)
+            .all(|p| p[0].channels == p[1].channels));
+        let idx: Vec<_> = aggs.iter().map(|a| a.replica_idx).collect();
+        assert_eq!(idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn worker_ids_unique_and_deterministic() {
+        let spec = topo::classical(5, Backend::Broker).build();
+        let a = expand(&spec, &single_box()).unwrap();
+        let b = expand(&spec, &single_box()).unwrap();
+        assert_eq!(a, b);
+        let mut ids: Vec<_> = a.iter().map(|w| w.id.clone()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), a.len());
+    }
+
+    #[test]
+    fn data_consumer_gets_one_worker_per_dataset() {
+        let spec = topo::classical(7, Backend::P2p).build();
+        let w = expand(&spec, &single_box()).unwrap();
+        let trainers: Vec<_> = w.iter().filter(|x| x.role == "trainer").collect();
+        assert_eq!(trainers.len(), 7);
+        let mut ds: Vec<_> = trainers.iter().map(|t| t.dataset.clone().unwrap()).collect();
+        ds.sort();
+        ds.dedup();
+        assert_eq!(ds.len(), 7, "each trainer bound to a distinct dataset");
+    }
+
+    #[test]
+    fn realm_constraints_drive_placement() {
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.datasets[0].realm = "eu/west".into();
+        spec.datasets[1].realm = "us/east".into();
+        let mut reg = Registry::new();
+        reg.register_compute(ComputeSpec::new("eu-dc", "eu", 10));
+        reg.register_compute(ComputeSpec::new("us-dc", "us", 10));
+        let w = expand(&spec, &reg).unwrap();
+        let t: Vec<_> = w.iter().filter(|x| x.role == "trainer").collect();
+        assert_eq!(t[0].compute, "eu-dc");
+        assert_eq!(t[1].compute, "us-dc");
+    }
+
+    #[test]
+    fn unmatchable_realm_fails_expansion() {
+        let mut spec = topo::classical(1, Backend::P2p).build();
+        spec.datasets[0].realm = "mars".into();
+        let mut reg = Registry::new();
+        reg.register_compute(ComputeSpec::new("earth", "eu", 10));
+        assert!(expand(&spec, &reg).is_err());
+    }
+
+    #[test]
+    fn missing_group_association_for_dataset_group_fails() {
+        let mut spec = topo::hierarchical(4, 2, Backend::Broker).build();
+        // orphan a dataset group not covered by trainer's associations
+        spec.datasets.push(crate::tag::DatasetRef {
+            name: "orphan".into(),
+            group: "nowhere".into(),
+            realm: "*".into(),
+            url: "synth://x".into(),
+        });
+        assert!(expand(&spec, &single_box()).is_err());
+    }
+
+    #[test]
+    fn worker_config_json_roundtrip() {
+        let spec = topo::hierarchical(4, 2, Backend::Broker).build();
+        let w = expand(&spec, &single_box()).unwrap();
+        for cfg in &w {
+            let back = WorkerConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(&back, cfg);
+        }
+    }
+}

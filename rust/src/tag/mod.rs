@@ -1,0 +1,448 @@
+//! Topology Abstraction Graph — the paper's central abstraction (§4.1).
+//!
+//! A TAG is a logical graph: **roles** are vertices (worker behaviour),
+//! **channels** are undirected edges (communication backends). Role
+//! attributes `replica`, `isDataConsumer` and `groupAssociation`, plus
+//! channel attributes `groupBy`, `funcTags` and `backend`, drive the
+//! expansion of the condensed logical graph into the physical deployment
+//! topology (Algorithm 1, [`expand`]).
+//!
+//! Specs are JSON (the paper uses YAML; semantics are identical — see
+//! DESIGN.md substitutions). [`JobSpec::parse`] accepts the schema shown in
+//! `examples/specs/hfl.json`, which mirrors the paper's Figure 3a.
+
+pub mod expand;
+pub mod validate;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::channel::Backend;
+use crate::json::Json;
+
+pub use expand::{expand, WorkerConfig};
+
+/// One vertex of the TAG: an executable worker unit bound to a program.
+#[derive(Debug, Clone)]
+pub struct Role {
+    pub name: String,
+    /// Number of replicated workers per groupAssociation entry (§4.1); used
+    /// e.g. to build the CO-FL bipartite aggregator tier (§6.1).
+    pub replica: usize,
+    /// Does this role consume a dataset? Data consumers are expanded one
+    /// worker per dataset (Algorithm 1 lines 14-22).
+    pub is_data_consumer: bool,
+    /// List of `{channel -> group}` sets; one worker (times `replica`) is
+    /// created per entry for non-consumers, and entries are matched by
+    /// dataset group for consumers.
+    pub group_association: Vec<BTreeMap<String, String>>,
+}
+
+/// One edge of the TAG: links a pair of roles over a communication backend.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub name: String,
+    /// The two roles this channel links (may be the same role for
+    /// distributed/p2p topologies).
+    pub pair: (String, String),
+    /// Label-based grouping (§4.1): the allowed group labels on this
+    /// channel. Empty means the single implicit group `"default"`.
+    pub group_by: Vec<String>,
+    /// Maps each endpoint role to the function tags it serves on this
+    /// channel — used by roles to dispatch, and by validation.
+    pub func_tags: BTreeMap<String, Vec<String>>,
+    /// Per-channel communication backend (§6.2 flexibility).
+    pub backend: Backend,
+}
+
+/// A dataset registration (metadata only — the system never holds raw data;
+/// §4.3). `group` realizes the paper's `datasetGroups` attribute.
+#[derive(Debug, Clone)]
+pub struct DatasetRef {
+    pub name: String,
+    pub group: String,
+    pub realm: String,
+    pub url: String,
+}
+
+/// A complete job specification: TAG + datasets + job-level settings.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub model: String,
+    pub rounds: u64,
+    pub roles: Vec<Role>,
+    pub channels: Vec<Channel>,
+    pub datasets: Vec<DatasetRef>,
+    /// Hyper-parameters forwarded verbatim to role programs.
+    pub hyper: Json,
+}
+
+impl JobSpec {
+    /// Parse a JSON job spec (see `examples/specs/*.json`).
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("job spec is not valid JSON")?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let name = j
+            .get("name")
+            .as_str()
+            .context("job spec missing 'name'")?
+            .to_string();
+        let model = j
+            .get("model")
+            .as_str()
+            .unwrap_or("mlp")
+            .to_string();
+        let rounds = j.get("rounds").as_i64().unwrap_or(10) as u64;
+
+        let tag = j.get("tag");
+        let mut roles = Vec::new();
+        for (i, r) in tag
+            .get("roles")
+            .as_arr()
+            .context("tag missing 'roles' array")?
+            .iter()
+            .enumerate()
+        {
+            roles.push(parse_role(r).with_context(|| format!("role #{i}"))?);
+        }
+        let mut channels = Vec::new();
+        for (i, c) in tag
+            .get("channels")
+            .as_arr()
+            .context("tag missing 'channels' array")?
+            .iter()
+            .enumerate()
+        {
+            channels.push(parse_channel(c).with_context(|| format!("channel #{i}"))?);
+        }
+
+        let mut datasets = Vec::new();
+        if let Some(arr) = j.get("datasets").as_arr() {
+            for (i, d) in arr.iter().enumerate() {
+                datasets.push(parse_dataset(d).with_context(|| format!("dataset #{i}"))?);
+            }
+        }
+
+        Ok(JobSpec {
+            name,
+            model,
+            rounds,
+            roles,
+            channels,
+            datasets,
+            hyper: j.get("hyper").clone(),
+        })
+    }
+
+    pub fn role(&self, name: &str) -> Option<&Role> {
+        self.roles.iter().find(|r| r.name == name)
+    }
+
+    pub fn channel(&self, name: &str) -> Option<&Channel> {
+        self.channels.iter().find(|c| c.name == name)
+    }
+
+    /// Channels that `role` participates in.
+    pub fn channels_of(&self, role: &str) -> Vec<&Channel> {
+        self.channels
+            .iter()
+            .filter(|c| c.pair.0 == role || c.pair.1 == role)
+            .collect()
+    }
+
+    /// Dataset groups in first-appearance order (the paper's datasetGroups).
+    pub fn dataset_groups(&self) -> Vec<String> {
+        let mut groups = Vec::new();
+        for d in &self.datasets {
+            if !groups.contains(&d.group) {
+                groups.push(d.group.clone());
+            }
+        }
+        groups
+    }
+
+    /// Serialize back to JSON (used by the store and the transform demos).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("name", self.name.as_str());
+        o.insert("model", self.model.as_str());
+        o.insert("rounds", self.rounds);
+        let mut tag = Json::obj();
+        tag.insert(
+            "roles",
+            Json::Arr(self.roles.iter().map(role_to_json).collect()),
+        );
+        tag.insert(
+            "channels",
+            Json::Arr(self.channels.iter().map(channel_to_json).collect()),
+        );
+        o.insert("tag", tag);
+        o.insert(
+            "datasets",
+            Json::Arr(self.datasets.iter().map(dataset_to_json).collect()),
+        );
+        if !self.hyper.is_null() {
+            o.insert("hyper", self.hyper.clone());
+        }
+        Json::Obj(o)
+    }
+}
+
+fn parse_role(j: &Json) -> Result<Role> {
+    let name = j
+        .get("name")
+        .as_str()
+        .context("role missing 'name'")?
+        .to_string();
+    let replica = j.get("replica").as_usize().unwrap_or(1);
+    if replica == 0 {
+        bail!("role '{name}': replica must be >= 1");
+    }
+    let is_data_consumer = j.get("isDataConsumer").as_bool().unwrap_or(false);
+    let mut group_association = Vec::new();
+    if let Some(arr) = j.get("groupAssociation").as_arr() {
+        for entry in arr {
+            let o = entry
+                .as_obj()
+                .context("groupAssociation entries must be objects")?;
+            let mut m = BTreeMap::new();
+            for (k, v) in o.iter() {
+                m.insert(
+                    k.clone(),
+                    v.as_str()
+                        .context("groupAssociation values must be strings")?
+                        .to_string(),
+                );
+            }
+            group_association.push(m);
+        }
+    }
+    if group_association.is_empty() {
+        // Convention: a role with no explicit association gets one worker in
+        // the "default" group of each of its channels (resolved later).
+        group_association.push(BTreeMap::new());
+    }
+    Ok(Role {
+        name,
+        replica,
+        is_data_consumer,
+        group_association,
+    })
+}
+
+fn parse_channel(j: &Json) -> Result<Channel> {
+    let name = j
+        .get("name")
+        .as_str()
+        .context("channel missing 'name'")?
+        .to_string();
+    let pair = j.get("pair").as_arr().context("channel missing 'pair'")?;
+    if pair.len() != 2 {
+        bail!("channel '{name}': pair must have exactly 2 roles");
+    }
+    let pair = (
+        pair[0].as_str().context("pair[0] must be a string")?.to_string(),
+        pair[1].as_str().context("pair[1] must be a string")?.to_string(),
+    );
+    let group_by = j
+        .get("groupBy")
+        .as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|g| g.as_str().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default();
+    let mut func_tags = BTreeMap::new();
+    if let Some(o) = j.get("funcTags").as_obj() {
+        for (role, tags) in o.iter() {
+            let tags = tags
+                .as_arr()
+                .context("funcTags values must be arrays")?
+                .iter()
+                .filter_map(|t| t.as_str().map(str::to_string))
+                .collect();
+            func_tags.insert(role.clone(), tags);
+        }
+    }
+    let backend = Backend::parse(j.get("backend").as_str().unwrap_or("p2p"))?;
+    Ok(Channel {
+        name,
+        pair,
+        group_by,
+        func_tags,
+        backend,
+    })
+}
+
+fn parse_dataset(j: &Json) -> Result<DatasetRef> {
+    Ok(DatasetRef {
+        name: j
+            .get("name")
+            .as_str()
+            .context("dataset missing 'name'")?
+            .to_string(),
+        group: j.get("group").as_str().unwrap_or("default").to_string(),
+        realm: j.get("realm").as_str().unwrap_or("*").to_string(),
+        url: j.get("url").as_str().unwrap_or("synth://default").to_string(),
+    })
+}
+
+fn role_to_json(r: &Role) -> Json {
+    let mut o = Json::obj();
+    o.insert("name", r.name.as_str());
+    if r.replica != 1 {
+        o.insert("replica", r.replica);
+    }
+    if r.is_data_consumer {
+        o.insert("isDataConsumer", true);
+    }
+    let ga: Vec<Json> = r
+        .group_association
+        .iter()
+        .map(|m| {
+            let mut o = Json::obj();
+            for (k, v) in m {
+                o.insert(k.as_str(), v.as_str());
+            }
+            Json::Obj(o)
+        })
+        .collect();
+    o.insert("groupAssociation", Json::Arr(ga));
+    Json::Obj(o)
+}
+
+fn channel_to_json(c: &Channel) -> Json {
+    let mut o = Json::obj();
+    o.insert("name", c.name.as_str());
+    o.insert(
+        "pair",
+        Json::Arr(vec![
+            Json::Str(c.pair.0.clone()),
+            Json::Str(c.pair.1.clone()),
+        ]),
+    );
+    if !c.group_by.is_empty() {
+        o.insert(
+            "groupBy",
+            Json::Arr(c.group_by.iter().map(|g| Json::Str(g.clone())).collect()),
+        );
+    }
+    if !c.func_tags.is_empty() {
+        let mut ft = Json::obj();
+        for (role, tags) in &c.func_tags {
+            ft.insert(
+                role.as_str(),
+                Json::Arr(tags.iter().map(|t| Json::Str(t.clone())).collect()),
+            );
+        }
+        o.insert("funcTags", ft);
+    }
+    o.insert("backend", c.backend.name());
+    Json::Obj(o)
+}
+
+fn dataset_to_json(d: &DatasetRef) -> Json {
+    let mut o = Json::obj();
+    o.insert("name", d.name.as_str());
+    o.insert("group", d.group.as_str());
+    o.insert("realm", d.realm.as_str());
+    o.insert("url", d.url.as_str());
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topo;
+
+    #[test]
+    fn parses_hfl_spec() {
+        let spec = topo::hierarchical(4, 2, Backend::Broker).build();
+        assert_eq!(spec.roles.len(), 3);
+        assert_eq!(spec.channels.len(), 2);
+        let trainer = spec.role("trainer").unwrap();
+        assert!(trainer.is_data_consumer);
+        let agg = spec.role("aggregator").unwrap();
+        assert_eq!(agg.group_association.len(), 2);
+    }
+
+    #[test]
+    fn roundtrips_via_json() {
+        let spec = topo::hierarchical(4, 2, Backend::Broker).build();
+        let text = spec.to_json().pretty();
+        let back = JobSpec::parse(&text).unwrap();
+        assert_eq!(back.roles.len(), spec.roles.len());
+        assert_eq!(back.channels.len(), spec.channels.len());
+        assert_eq!(back.datasets.len(), spec.datasets.len());
+        assert_eq!(
+            back.role("aggregator").unwrap().group_association,
+            spec.role("aggregator").unwrap().group_association
+        );
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(JobSpec::parse("{").is_err());
+        assert!(JobSpec::parse("{}").is_err()); // no name
+        assert!(JobSpec::parse(r#"{"name":"x"}"#).is_err()); // no tag
+        assert!(JobSpec::parse(
+            r#"{"name":"x","tag":{"roles":[{"name":"r","replica":0}],"channels":[]}}"#
+        )
+        .is_err()); // replica 0
+        assert!(JobSpec::parse(
+            r#"{"name":"x","tag":{"roles":[],"channels":[{"name":"c","pair":["a"]}]}}"#
+        )
+        .is_err()); // pair len 1
+    }
+
+    #[test]
+    fn dataset_groups_in_order() {
+        let spec = topo::hierarchical(6, 3, Backend::Broker).build();
+        assert_eq!(spec.dataset_groups().len(), 3);
+    }
+
+    #[test]
+    fn channels_of_role() {
+        let spec = topo::hierarchical(4, 2, Backend::Broker).build();
+        let chans = spec.channels_of("aggregator");
+        assert_eq!(chans.len(), 2);
+        assert_eq!(spec.channels_of("trainer").len(), 1);
+    }
+}
+
+#[cfg(test)]
+mod spec_file_tests {
+    use super::*;
+    use crate::registry::Registry;
+
+    /// The shipped example specs (examples/specs/*.json) must stay valid.
+    #[test]
+    fn example_spec_files_parse_and_expand() {
+        let dir = std::path::Path::new("examples/specs");
+        if !dir.exists() {
+            eprintln!("skipping: examples/specs not present");
+            return;
+        }
+        let mut checked = 0;
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            let text = std::fs::read_to_string(&path).unwrap();
+            let spec = JobSpec::parse(&text)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            let workers = expand(&spec, &Registry::single_box())
+                .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            assert!(!workers.is_empty());
+            checked += 1;
+        }
+        assert!(checked >= 4, "expected >=4 example specs, found {checked}");
+    }
+}

@@ -1,0 +1,252 @@
+//! TAG validation: the `PreCheck` / `PostCheck` of Algorithm 1.
+//!
+//! `PreCheck` validates the logical graph before expansion (structural
+//! sanity of roles/channels/attributes); `PostCheck` validates the expanded
+//! physical deployment (connectivity of every channel group, id uniqueness,
+//! dataset binding).
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+
+use anyhow::{bail, Result};
+
+use super::{JobSpec, WorkerConfig};
+
+/// Structural validation of the logical TAG (Algorithm 1 line 3).
+pub fn pre_check(spec: &JobSpec) -> Result<()> {
+    if spec.roles.is_empty() {
+        bail!("TAG has no roles");
+    }
+    // unique names
+    let mut seen = HashSet::new();
+    for r in &spec.roles {
+        if !seen.insert(&r.name) {
+            bail!("duplicate role '{}'", r.name);
+        }
+    }
+    let mut seen = HashSet::new();
+    for c in &spec.channels {
+        if !seen.insert(&c.name) {
+            bail!("duplicate channel '{}'", c.name);
+        }
+    }
+    // channel endpoints must exist
+    for c in &spec.channels {
+        for endpoint in [&c.pair.0, &c.pair.1] {
+            if spec.role(endpoint).is_none() {
+                bail!("channel '{}' references unknown role '{endpoint}'", c.name);
+            }
+        }
+    }
+    // every role must sit on at least one channel
+    for r in &spec.roles {
+        if spec.channels_of(&r.name).is_empty() {
+            bail!("role '{}' is not connected to any channel", r.name);
+        }
+    }
+    // groupAssociation keys must be channels of the role; group values must
+    // be allowed by the channel's groupBy (when declared)
+    for r in &spec.roles {
+        let my_channels: BTreeSet<&str> = spec
+            .channels_of(&r.name)
+            .iter()
+            .map(|c| c.name.as_str())
+            .collect();
+        for (i, entry) in r.group_association.iter().enumerate() {
+            for (ch, group) in entry {
+                if !my_channels.contains(ch.as_str()) {
+                    bail!(
+                        "role '{}' groupAssociation[{i}] names channel '{ch}' the role is not an endpoint of",
+                        r.name
+                    );
+                }
+                let chan = spec.channel(ch).unwrap();
+                if !chan.group_by.is_empty() && !chan.group_by.contains(group) {
+                    bail!(
+                        "role '{}' groupAssociation[{i}]: group '{group}' not in channel '{ch}' groupBy {:?}",
+                        r.name,
+                        chan.group_by
+                    );
+                }
+            }
+        }
+        // replica only meaningful for non-consumers (consumers scale by datasets)
+        if r.is_data_consumer && r.replica != 1 {
+            bail!(
+                "role '{}' is a data consumer; scale it with datasets, not replica",
+                r.name
+            );
+        }
+    }
+    // a data consumer must exist iff datasets are declared
+    let has_consumer = spec.roles.iter().any(|r| r.is_data_consumer);
+    if has_consumer && spec.datasets.is_empty() {
+        bail!("TAG has a data-consumer role but the job declares no datasets");
+    }
+    // dataset names unique
+    let mut seen = HashSet::new();
+    for d in &spec.datasets {
+        if !seen.insert(&d.name) {
+            bail!("duplicate dataset '{}'", d.name);
+        }
+    }
+    Ok(())
+}
+
+/// Validation of the expanded physical topology (Algorithm 1 line 9).
+pub fn post_check(spec: &JobSpec, workers: &[WorkerConfig]) -> Result<()> {
+    if workers.is_empty() {
+        bail!("expansion produced no workers");
+    }
+    // unique ids
+    let mut ids = HashSet::new();
+    for w in workers {
+        if !ids.insert(&w.id) {
+            bail!("duplicate worker id '{}'", w.id);
+        }
+    }
+    // data consumers carry datasets; others don't
+    for w in workers {
+        let role = spec.role(&w.role).unwrap();
+        if role.is_data_consumer && w.dataset.is_none() {
+            bail!("data-consumer worker '{}' has no dataset", w.id);
+        }
+        if !role.is_data_consumer && w.dataset.is_some() {
+            bail!("worker '{}' of non-consumer role carries a dataset", w.id);
+        }
+    }
+    // channel-group connectivity: every (channel, group) that has members
+    // must include both endpoint roles (or >=2 members for self-pairs).
+    let mut membership: HashMap<(String, String), BTreeMap<String, usize>> = HashMap::new();
+    for w in workers {
+        for (ch, group) in &w.channels {
+            *membership
+                .entry((ch.clone(), group.clone()))
+                .or_default()
+                .entry(w.role.clone())
+                .or_insert(0) += 1;
+        }
+    }
+    for ((ch, group), roles) in &membership {
+        let chan = spec
+            .channel(ch)
+            .ok_or_else(|| anyhow::anyhow!("worker references unknown channel '{ch}'"))?;
+        let (a, b) = (&chan.pair.0, &chan.pair.1);
+        if a == b {
+            let n = roles.get(a).copied().unwrap_or(0);
+            if n < 2 {
+                bail!(
+                    "channel '{ch}' group '{group}' is a self-pair of '{a}' but has {n} member(s); need >= 2"
+                );
+            }
+        } else {
+            for endpoint in [a, b] {
+                if roles.get(endpoint).copied().unwrap_or(0) == 0 {
+                    bail!(
+                        "channel '{ch}' group '{group}' has no worker of endpoint role '{endpoint}'"
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Backend;
+    use crate::registry::Registry;
+    use crate::tag::expand;
+    use crate::topo;
+
+    #[test]
+    fn valid_templates_pass_both_checks() {
+        for spec in [
+            topo::classical(5, Backend::Broker).build(),
+            topo::hierarchical(6, 2, Backend::Broker).build(),
+            topo::coordinated(10, 2, Backend::Broker).build(),
+            topo::hybrid(10, 5, Backend::Broker, Backend::P2p).build(),
+            topo::distributed(4, Backend::P2p).build(),
+        ] {
+            let w = expand(&spec, &Registry::single_box())
+                .unwrap_or_else(|e| panic!("{}: {e:#}", spec.name));
+            assert!(!w.is_empty());
+        }
+    }
+
+    #[test]
+    fn duplicate_role_rejected() {
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        let dup = spec.roles[0].clone();
+        spec.roles.push(dup);
+        assert!(pre_check(&spec).is_err());
+    }
+
+    #[test]
+    fn unknown_channel_endpoint_rejected() {
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.channels[0].pair.1 = "ghost".into();
+        assert!(pre_check(&spec).is_err());
+    }
+
+    #[test]
+    fn disconnected_role_rejected() {
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.channels.clear();
+        assert!(pre_check(&spec).is_err());
+    }
+
+    #[test]
+    fn group_outside_groupby_rejected() {
+        let mut spec = topo::hierarchical(4, 2, Backend::Broker).build();
+        // channel declares groupBy [group0, group1]; claim "group9"
+        spec.roles[0].group_association[0]
+            .insert("param-channel".into(), "group9".into());
+        assert!(pre_check(&spec).is_err());
+    }
+
+    #[test]
+    fn consumer_with_replica_rejected() {
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.roles
+            .iter_mut()
+            .find(|r| r.is_data_consumer)
+            .unwrap()
+            .replica = 3;
+        assert!(pre_check(&spec).is_err());
+    }
+
+    #[test]
+    fn consumer_without_datasets_rejected() {
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.datasets.clear();
+        assert!(pre_check(&spec).is_err());
+    }
+
+    #[test]
+    fn post_check_catches_empty_group() {
+        let spec = topo::hierarchical(4, 2, Backend::Broker).build();
+        let mut w = expand(&spec, &Registry::single_box()).unwrap();
+        // delete all trainers of group1 -> aggregator of group1 is orphaned
+        w.retain(|x| {
+            !(x.role == "trainer" && x.channels["param-channel"] == "group1")
+        });
+        assert!(post_check(&spec, &w).is_err());
+    }
+
+    #[test]
+    fn post_check_catches_duplicate_ids() {
+        let spec = topo::classical(2, Backend::P2p).build();
+        let w = expand(&spec, &Registry::single_box()).unwrap();
+        let mut dup = w.clone();
+        dup.push(w[0].clone());
+        assert!(post_check(&spec, &dup).is_err());
+    }
+
+    #[test]
+    fn post_check_self_pair_needs_two() {
+        let spec = topo::distributed(1, Backend::P2p).build();
+        // one trainer on a trainer-trainer channel cannot form a topology
+        assert!(expand(&spec, &Registry::single_box()).is_err());
+    }
+}

@@ -1,0 +1,490 @@
+//! Topology templates (paper §6.3: "topologies introduced in this paper are
+//! provided as templates in Flame").
+//!
+//! Each builder returns the TAG + dataset spec for one of the paper's
+//! Figure 1/2 topologies; users pick one, adjust sizes/backends, and submit.
+//! The §6.3 transformation walkthrough (Table 4) is reproduced in
+//! `examples/topology_transform.rs` by diffing these templates' JSON.
+
+use std::collections::BTreeMap;
+
+use crate::channel::Backend;
+use crate::json::Json;
+use crate::tag::{Channel, DatasetRef, JobSpec, Role};
+
+/// Fluent builder over a prepared [`JobSpec`].
+pub struct TopoBuilder {
+    spec: JobSpec,
+}
+
+impl TopoBuilder {
+    pub fn rounds(mut self, r: u64) -> Self {
+        self.spec.rounds = r;
+        self
+    }
+
+    pub fn model(mut self, m: &str) -> Self {
+        self.spec.model = m.to_string();
+        self
+    }
+
+    pub fn name(mut self, n: &str) -> Self {
+        self.spec.name = n.to_string();
+        self
+    }
+
+    pub fn hyper(mut self, h: Json) -> Self {
+        self.spec.hyper = h;
+        self
+    }
+
+    /// Merge one hyper-parameter into the job's hyper object.
+    pub fn set(mut self, key: &str, value: impl Into<Json>) -> Self {
+        let mut o = match std::mem::replace(&mut self.spec.hyper, Json::Null) {
+            Json::Obj(o) => o,
+            _ => Json::obj(),
+        };
+        o.insert(key, value);
+        self.spec.hyper = Json::Obj(o);
+        self
+    }
+
+    pub fn build(self) -> JobSpec {
+        self.spec
+    }
+}
+
+fn ga(entries: &[&[(&str, &str)]]) -> Vec<BTreeMap<String, String>> {
+    entries
+        .iter()
+        .map(|e| {
+            e.iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect()
+        })
+        .collect()
+}
+
+fn datasets(n: usize, group_of: impl Fn(usize) -> String) -> Vec<DatasetRef> {
+    (0..n)
+        .map(|i| DatasetRef {
+            name: format!("d{i}"),
+            group: group_of(i),
+            realm: "*".to_string(),
+            url: format!("synth://shard/{i}"),
+        })
+        .collect()
+}
+
+fn channel(
+    name: &str,
+    pair: (&str, &str),
+    group_by: &[String],
+    backend: Backend,
+    func_tags: &[(&str, &[&str])],
+) -> Channel {
+    Channel {
+        name: name.to_string(),
+        pair: (pair.0.to_string(), pair.1.to_string()),
+        group_by: group_by.to_vec(),
+        func_tags: func_tags
+            .iter()
+            .map(|(r, ts)| (r.to_string(), ts.iter().map(|t| t.to_string()).collect()))
+            .collect(),
+        backend,
+    }
+}
+
+fn groups(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("group{i}")).collect()
+}
+
+/// Classical FL (Fig 1b / 2c): trainers <-> one global aggregator.
+pub fn classical(n_trainers: usize, backend: Backend) -> TopoBuilder {
+    let spec = JobSpec {
+        name: "cfl".into(),
+        model: "mlp".into(),
+        rounds: 10,
+        roles: vec![
+            Role {
+                name: "trainer".into(),
+                replica: 1,
+                is_data_consumer: true,
+                group_association: ga(&[&[("param-channel", "default")]]),
+            },
+            Role {
+                name: "global-aggregator".into(),
+                replica: 1,
+                is_data_consumer: false,
+                group_association: ga(&[&[("param-channel", "default")]]),
+            },
+        ],
+        channels: vec![channel(
+            "param-channel",
+            ("trainer", "global-aggregator"),
+            &["default".to_string()],
+            backend,
+            &[
+                ("trainer", &["fetch", "upload"]),
+                ("global-aggregator", &["distribute", "aggregate"]),
+            ],
+        )],
+        datasets: datasets(n_trainers, |_| "default".into()),
+        hyper: Json::Null,
+    };
+    TopoBuilder { spec }
+}
+
+/// Hierarchical FL (Fig 1c / 2d, and the paper's Fig 3a example):
+/// trainers -> per-group aggregators -> global aggregator.
+pub fn hierarchical(n_trainers: usize, n_groups: usize, backend: Backend) -> TopoBuilder {
+    let gs = groups(n_groups);
+    let trainer_ga: Vec<BTreeMap<String, String>> = gs
+        .iter()
+        .map(|g| {
+            [("param-channel".to_string(), g.clone())]
+                .into_iter()
+                .collect()
+        })
+        .collect();
+    let agg_ga: Vec<BTreeMap<String, String>> = gs
+        .iter()
+        .map(|g| {
+            [
+                ("param-channel".to_string(), g.clone()),
+                ("agg-channel".to_string(), "default".to_string()),
+            ]
+            .into_iter()
+            .collect()
+        })
+        .collect();
+    let spec = JobSpec {
+        name: "hfl".into(),
+        model: "mlp".into(),
+        rounds: 10,
+        roles: vec![
+            Role {
+                name: "trainer".into(),
+                replica: 1,
+                is_data_consumer: true,
+                group_association: trainer_ga,
+            },
+            Role {
+                name: "aggregator".into(),
+                replica: 1,
+                is_data_consumer: false,
+                group_association: agg_ga,
+            },
+            Role {
+                name: "global-aggregator".into(),
+                replica: 1,
+                is_data_consumer: false,
+                group_association: ga(&[&[("agg-channel", "default")]]),
+            },
+        ],
+        channels: vec![
+            channel(
+                "param-channel",
+                ("trainer", "aggregator"),
+                &gs,
+                backend,
+                &[
+                    ("trainer", &["fetch", "upload"]),
+                    ("aggregator", &["distribute", "aggregate"]),
+                ],
+            ),
+            channel(
+                "agg-channel",
+                ("aggregator", "global-aggregator"),
+                &["default".to_string()],
+                backend,
+                &[
+                    ("aggregator", &["fetch", "upload"]),
+                    ("global-aggregator", &["distribute", "aggregate"]),
+                ],
+            ),
+        ],
+        datasets: datasets(n_trainers, |i| format!("group{}", i % n_groups)),
+        hyper: Json::Null,
+    };
+    TopoBuilder { spec }
+}
+
+/// Coordinated FL (Fig 1d, §6.1 "CO-FL"): H-FL with a single trainer group,
+/// a replicated aggregator tier (bipartite links via `replica`), and a
+/// coordinator connected to every other role.
+pub fn coordinated(n_trainers: usize, n_aggregators: usize, backend: Backend) -> TopoBuilder {
+    let spec = JobSpec {
+        name: "cofl".into(),
+        model: "mlp".into(),
+        rounds: 10,
+        roles: vec![
+            Role {
+                name: "trainer".into(),
+                replica: 1,
+                is_data_consumer: true,
+                group_association: ga(&[&[
+                    ("param-channel", "default"),
+                    ("coord-t-channel", "default"),
+                ]]),
+            },
+            Role {
+                name: "aggregator".into(),
+                replica: n_aggregators,
+                is_data_consumer: false,
+                group_association: ga(&[&[
+                    ("param-channel", "default"),
+                    ("agg-channel", "default"),
+                    ("coord-a-channel", "default"),
+                ]]),
+            },
+            Role {
+                name: "global-aggregator".into(),
+                replica: 1,
+                is_data_consumer: false,
+                group_association: ga(&[&[
+                    ("agg-channel", "default"),
+                    ("coord-g-channel", "default"),
+                ]]),
+            },
+            Role {
+                name: "coordinator".into(),
+                replica: 1,
+                is_data_consumer: false,
+                group_association: ga(&[&[
+                    ("coord-t-channel", "default"),
+                    ("coord-a-channel", "default"),
+                    ("coord-g-channel", "default"),
+                ]]),
+            },
+        ],
+        channels: vec![
+            channel(
+                "param-channel",
+                ("trainer", "aggregator"),
+                &["default".to_string()],
+                backend,
+                &[
+                    ("trainer", &["fetch", "upload"]),
+                    ("aggregator", &["distribute", "aggregate"]),
+                ],
+            ),
+            channel(
+                "agg-channel",
+                ("aggregator", "global-aggregator"),
+                &["default".to_string()],
+                backend,
+                &[
+                    ("aggregator", &["fetch", "upload"]),
+                    ("global-aggregator", &["distribute", "aggregate"]),
+                ],
+            ),
+            channel(
+                "coord-t-channel",
+                ("trainer", "coordinator"),
+                &["default".to_string()],
+                backend,
+                &[("trainer", &["coordinate"]), ("coordinator", &["assign"])],
+            ),
+            channel(
+                "coord-a-channel",
+                ("aggregator", "coordinator"),
+                &["default".to_string()],
+                backend,
+                &[("aggregator", &["coordinate"]), ("coordinator", &["assign"])],
+            ),
+            channel(
+                "coord-g-channel",
+                ("global-aggregator", "coordinator"),
+                &["default".to_string()],
+                backend,
+                &[
+                    ("global-aggregator", &["coordinate"]),
+                    ("coordinator", &["assign"]),
+                ],
+            ),
+        ],
+        datasets: datasets(n_trainers, |_| "default".into()),
+        hyper: Json::Null,
+    };
+    TopoBuilder { spec }
+}
+
+/// Hybrid FL (Fig 1e / 2e, §6.2): co-located trainer clusters aggregate
+/// internally over a fast p2p ring channel; one delegate per cluster
+/// uploads to the global aggregator over the (slow) upload backend.
+pub fn hybrid(
+    n_trainers: usize,
+    n_groups: usize,
+    upload_backend: Backend,
+    ring_backend: Backend,
+) -> TopoBuilder {
+    let gs = groups(n_groups);
+    let trainer_ga: Vec<BTreeMap<String, String>> = gs
+        .iter()
+        .map(|g| {
+            [
+                ("param-channel".to_string(), "default".to_string()),
+                ("ring-channel".to_string(), g.clone()),
+            ]
+            .into_iter()
+            .collect()
+        })
+        .collect();
+    let spec = JobSpec {
+        name: "hybrid".into(),
+        model: "mlp".into(),
+        rounds: 10,
+        roles: vec![
+            Role {
+                name: "trainer".into(),
+                replica: 1,
+                is_data_consumer: true,
+                group_association: trainer_ga,
+            },
+            Role {
+                name: "global-aggregator".into(),
+                replica: 1,
+                is_data_consumer: false,
+                group_association: ga(&[&[("param-channel", "default")]]),
+            },
+        ],
+        channels: vec![
+            channel(
+                "param-channel",
+                ("trainer", "global-aggregator"),
+                &["default".to_string()],
+                upload_backend,
+                &[
+                    ("trainer", &["fetch", "upload"]),
+                    ("global-aggregator", &["distribute", "aggregate"]),
+                ],
+            ),
+            channel(
+                "ring-channel",
+                ("trainer", "trainer"),
+                &gs,
+                ring_backend,
+                &[("trainer", &["allreduce"])],
+            ),
+        ],
+        datasets: datasets(n_trainers, |i| format!("group{}", i % n_groups)),
+        hyper: Json::Null,
+    };
+    TopoBuilder { spec }
+}
+
+/// Distributed learning (Fig 1a / 2b): no aggregator; trainers all-reduce
+/// among themselves each round.
+pub fn distributed(n_trainers: usize, backend: Backend) -> TopoBuilder {
+    let spec = JobSpec {
+        name: "distributed".into(),
+        model: "mlp".into(),
+        rounds: 10,
+        roles: vec![Role {
+            name: "trainer".into(),
+            replica: 1,
+            is_data_consumer: true,
+            group_association: ga(&[&[("ring-channel", "default")]]),
+        }],
+        channels: vec![channel(
+            "ring-channel",
+            ("trainer", "trainer"),
+            &["default".to_string()],
+            backend,
+            &[("trainer", &["allreduce"])],
+        )],
+        datasets: datasets(n_trainers, |_| "default".into()),
+        hyper: Json::Null,
+    };
+    TopoBuilder { spec }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::Registry;
+    use crate::tag::expand;
+
+    #[test]
+    fn classical_sizes() {
+        let w = expand(&classical(8, Backend::Broker).build(), &Registry::single_box()).unwrap();
+        assert_eq!(w.len(), 9);
+    }
+
+    #[test]
+    fn hierarchical_sizes() {
+        let w = expand(
+            &hierarchical(12, 3, Backend::Broker).build(),
+            &Registry::single_box(),
+        )
+        .unwrap();
+        // 12 trainers + 3 aggregators + 1 global
+        assert_eq!(w.len(), 16);
+    }
+
+    #[test]
+    fn coordinated_sizes_match_paper_fig10_setup() {
+        // §6.1 toy scenario: 10 trainers, 2 aggregators (+global+coordinator)
+        let w = expand(
+            &coordinated(10, 2, Backend::Broker).build(),
+            &Registry::single_box(),
+        )
+        .unwrap();
+        assert_eq!(w.len(), 14);
+        assert_eq!(w.iter().filter(|x| x.role == "coordinator").count(), 1);
+    }
+
+    #[test]
+    fn hybrid_sizes_match_paper_fig11_setup() {
+        // §6.2: 50 trainers in 5 groups + 1 aggregator
+        let w = expand(
+            &hybrid(50, 5, Backend::Broker, Backend::P2p).build(),
+            &Registry::single_box(),
+        )
+        .unwrap();
+        assert_eq!(w.len(), 51);
+        // ring channel groups hold 10 trainers each
+        for g in 0..5 {
+            let n = w
+                .iter()
+                .filter(|x| {
+                    x.channels.get("ring-channel").map(String::as_str)
+                        == Some(&format!("group{g}"))
+                })
+                .count();
+            assert_eq!(n, 10);
+        }
+    }
+
+    #[test]
+    fn hybrid_channels_use_distinct_backends() {
+        let spec = hybrid(10, 2, Backend::Broker, Backend::P2p).build();
+        assert_eq!(spec.channel("param-channel").unwrap().backend, Backend::Broker);
+        assert_eq!(spec.channel("ring-channel").unwrap().backend, Backend::P2p);
+    }
+
+    #[test]
+    fn distributed_is_single_role() {
+        let spec = distributed(4, Backend::P2p).build();
+        assert_eq!(spec.roles.len(), 1);
+        let w = expand(&spec, &Registry::single_box()).unwrap();
+        assert_eq!(w.len(), 4);
+    }
+
+    #[test]
+    fn builder_setters() {
+        let spec = classical(2, Backend::P2p)
+            .rounds(42)
+            .model("transformer")
+            .name("custom")
+            .set("lr", Json::Num(0.05))
+            .set("algorithm", "fedprox")
+            .build();
+        assert_eq!(spec.rounds, 42);
+        assert_eq!(spec.model, "transformer");
+        assert_eq!(spec.name, "custom");
+        assert_eq!(spec.hyper.get("lr").as_f64(), Some(0.05));
+        assert_eq!(spec.hyper.get("algorithm").as_str(), Some("fedprox"));
+    }
+}

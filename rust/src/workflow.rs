@@ -1,0 +1,415 @@
+//! Tasklet / Composer workflow engine — the paper's developer programming
+//! model (§4.4, Fig 6, Table 1).
+//!
+//! A role's work is structured as a chain of [`Tasklet`]s plus a [`Loop`]
+//! primitive that repeats a sub-chain until an exit condition holds. The
+//! paper's Python SDK overloads `>>` to chain tasklets; here the same shape
+//! is a builder API (`seq`, `task`, `loop_until`). Crucially, the **surgery
+//! API of Table 1** is reproduced verbatim so that derived roles (e.g. the
+//! CO-FL global aggregator of Fig 9) can extend an inherited chain without
+//! touching the base implementation:
+//!
+//! | paper (Table 1)          | here                                 |
+//! |--------------------------|--------------------------------------|
+//! | `get_tasklet(alias)`     | [`Composer::get_tasklet`]            |
+//! | `t.insert_before(x)`     | [`Composer::insert_before`]          |
+//! | `t.insert_after(x)`      | [`Composer::insert_after`]           |
+//! | `t.replace_with(x)`      | [`Composer::replace_with`]           |
+//! | `t.remove()`             | [`Composer::remove`]                 |
+//!
+//! The chain is generic over a context type `C` (the role's state), so the
+//! same engine drives trainers, aggregators and coordinators.
+
+use anyhow::{bail, Result};
+
+/// A named unit of work over role state `C`.
+pub struct Tasklet<C> {
+    pub alias: String,
+    f: Box<dyn FnMut(&mut C) -> Result<()> + Send>,
+}
+
+impl<C> Tasklet<C> {
+    pub fn new(alias: impl Into<String>, f: impl FnMut(&mut C) -> Result<()> + Send + 'static) -> Self {
+        Self {
+            alias: alias.into(),
+            f: Box::new(f),
+        }
+    }
+}
+
+/// Chain node: a tasklet or a loop over a sub-chain.
+pub enum Node<C> {
+    Task(Tasklet<C>),
+    Loop {
+        /// Exit condition — the loop repeats its body **until** this returns
+        /// true (the paper's `loop_check_fn`).
+        check: Box<dyn FnMut(&C) -> bool + Send>,
+        body: Vec<Node<C>>,
+    },
+}
+
+/// An ordered tasklet chain with loop structure and surgery operations.
+pub struct Composer<C> {
+    nodes: Vec<Node<C>>,
+}
+
+impl<C> Default for Composer<C> {
+    fn default() -> Self {
+        Self { nodes: Vec::new() }
+    }
+}
+
+impl<C> Composer<C> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a tasklet (the `>>` of the Python SDK).
+    pub fn task(
+        mut self,
+        alias: impl Into<String>,
+        f: impl FnMut(&mut C) -> Result<()> + Send + 'static,
+    ) -> Self {
+        self.nodes.push(Node::Task(Tasklet::new(alias, f)));
+        self
+    }
+
+    /// Append a loop that repeats `body` until `check` returns true.
+    pub fn loop_until(
+        mut self,
+        check: impl FnMut(&C) -> bool + Send + 'static,
+        body: Composer<C>,
+    ) -> Self {
+        self.nodes.push(Node::Loop {
+            check: Box::new(check),
+            body: body.nodes,
+        });
+        self
+    }
+
+    /// Execute the chain to completion.
+    pub fn run(&mut self, ctx: &mut C) -> Result<()> {
+        Self::run_nodes(&mut self.nodes, ctx)
+    }
+
+    fn run_nodes(nodes: &mut [Node<C>], ctx: &mut C) -> Result<()> {
+        for node in nodes.iter_mut() {
+            match node {
+                Node::Task(t) => (t.f)(ctx)?,
+                Node::Loop { check, body } => {
+                    while !(check)(ctx) {
+                        Self::run_nodes(body, ctx)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ surgery
+
+    /// Aliases in execution order (loops flattened), for inspection/tests.
+    pub fn aliases(&self) -> Vec<String> {
+        fn walk<C>(nodes: &[Node<C>], out: &mut Vec<String>) {
+            for n in nodes {
+                match n {
+                    Node::Task(t) => out.push(t.alias.clone()),
+                    Node::Loop { body, .. } => walk(body, out),
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.nodes, &mut out);
+        out
+    }
+
+    /// Does a tasklet with this alias exist anywhere in the chain?
+    pub fn get_tasklet(&self, alias: &str) -> bool {
+        self.aliases().iter().any(|a| a == alias)
+    }
+
+    /// Insert `t` immediately before the tasklet with `alias`.
+    pub fn insert_before(&mut self, alias: &str, t: Tasklet<C>) -> Result<()> {
+        if !Self::edit(&mut self.nodes, alias, Edit::Before(t)) {
+            bail!("tasklet alias '{alias}' not found");
+        }
+        Ok(())
+    }
+
+    /// Insert `t` immediately after the tasklet with `alias`.
+    pub fn insert_after(&mut self, alias: &str, t: Tasklet<C>) -> Result<()> {
+        if !Self::edit(&mut self.nodes, alias, Edit::After(t)) {
+            bail!("tasklet alias '{alias}' not found");
+        }
+        Ok(())
+    }
+
+    /// Replace the tasklet with `alias` by `t`.
+    pub fn replace_with(&mut self, alias: &str, t: Tasklet<C>) -> Result<()> {
+        if !Self::edit(&mut self.nodes, alias, Edit::Replace(t)) {
+            bail!("tasklet alias '{alias}' not found");
+        }
+        Ok(())
+    }
+
+    /// Remove the tasklet with `alias` from the chain.
+    pub fn remove(&mut self, alias: &str) -> Result<()> {
+        if !Self::edit(&mut self.nodes, alias, Edit::Remove) {
+            bail!("tasklet alias '{alias}' not found");
+        }
+        Ok(())
+    }
+
+    fn edit(nodes: &mut Vec<Node<C>>, alias: &str, op: Edit<C>) -> bool {
+        let mut op = Some(op);
+        Self::edit_inner(nodes, alias, &mut op)
+    }
+
+    fn edit_inner(nodes: &mut Vec<Node<C>>, alias: &str, op: &mut Option<Edit<C>>) -> bool {
+        let mut i = 0;
+        while i < nodes.len() {
+            let hit = match &nodes[i] {
+                Node::Task(t) => t.alias == alias,
+                Node::Loop { .. } => false,
+            };
+            if hit {
+                match op.take().unwrap() {
+                    Edit::Before(t) => nodes.insert(i, Node::Task(t)),
+                    Edit::After(t) => nodes.insert(i + 1, Node::Task(t)),
+                    Edit::Replace(t) => nodes[i] = Node::Task(t),
+                    Edit::Remove => {
+                        nodes.remove(i);
+                    }
+                }
+                return true;
+            }
+            if let Node::Loop { body, .. } = &mut nodes[i] {
+                if Self::edit_inner(body, alias, op) {
+                    return true;
+                }
+            }
+            i += 1;
+        }
+        false
+    }
+}
+
+enum Edit<C> {
+    Before(Tasklet<C>),
+    After(Tasklet<C>),
+    Replace(Tasklet<C>),
+    Remove,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct Ctx {
+        log: Vec<&'static str>,
+        rounds: usize,
+    }
+
+    fn rec(name: &'static str) -> impl FnMut(&mut Ctx) -> Result<()> {
+        move |c: &mut Ctx| {
+            c.log.push(name);
+            Ok(())
+        }
+    }
+
+    fn trainer_like_chain() -> Composer<Ctx> {
+        Composer::new()
+            .task("load", rec("load"))
+            .task("init", rec("init"))
+            .loop_until(
+                |c: &Ctx| c.rounds >= 3,
+                Composer::new()
+                    .task("get", rec("get"))
+                    .task("train", rec("train"))
+                    .task("put", |c: &mut Ctx| {
+                        c.log.push("put");
+                        c.rounds += 1;
+                        Ok(())
+                    }),
+            )
+            .task("end_of_train", rec("end_of_train"))
+    }
+
+    #[test]
+    fn chain_executes_in_order() {
+        let mut ch = Composer::new().task("a", rec("a")).task("b", rec("b"));
+        let mut ctx = Ctx::default();
+        ch.run(&mut ctx).unwrap();
+        assert_eq!(ctx.log, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn loop_repeats_until_exit_condition() {
+        let mut ch = trainer_like_chain();
+        let mut ctx = Ctx::default();
+        ch.run(&mut ctx).unwrap();
+        assert_eq!(
+            ctx.log,
+            vec![
+                "load", "init", "get", "train", "put", "get", "train", "put", "get",
+                "train", "put", "end_of_train"
+            ]
+        );
+    }
+
+    #[test]
+    fn loop_skipped_if_condition_initially_true() {
+        let mut ch = Composer::new().loop_until(|_: &Ctx| true, Composer::new().task("x", rec("x")));
+        let mut ctx = Ctx::default();
+        ch.run(&mut ctx).unwrap();
+        assert!(ctx.log.is_empty());
+    }
+
+    #[test]
+    fn insert_before_inside_loop() {
+        // Fig 9: insert get_coord_ends before 'distribute' — here before 'put'.
+        let mut ch = trainer_like_chain();
+        ch.insert_before("put", Tasklet::new("coord", rec("coord"))).unwrap();
+        let mut ctx = Ctx::default();
+        ch.run(&mut ctx).unwrap();
+        let first_cycle: Vec<_> = ctx.log[2..6].to_vec();
+        assert_eq!(first_cycle, vec!["get", "train", "coord", "put"]);
+    }
+
+    #[test]
+    fn insert_after_top_level() {
+        let mut ch = trainer_like_chain();
+        ch.insert_after("init", Tasklet::new("snapshot", rec("snapshot"))).unwrap();
+        assert_eq!(
+            ch.aliases()[..3],
+            ["load".to_string(), "init".into(), "snapshot".into()]
+        );
+    }
+
+    #[test]
+    fn remove_tasklet() {
+        // Fig 9: remove 'end_of_train' because the coordinator owns termination.
+        let mut ch = trainer_like_chain();
+        ch.remove("end_of_train").unwrap();
+        let mut ctx = Ctx::default();
+        ch.run(&mut ctx).unwrap();
+        assert!(!ctx.log.contains(&"end_of_train"));
+    }
+
+    #[test]
+    fn replace_with_swaps_behaviour() {
+        let mut ch = trainer_like_chain();
+        ch.replace_with("train", Tasklet::new("train2", rec("train2"))).unwrap();
+        let mut ctx = Ctx::default();
+        ch.run(&mut ctx).unwrap();
+        assert!(ctx.log.contains(&"train2"));
+        assert!(!ctx.log.contains(&"train"));
+    }
+
+    #[test]
+    fn surgery_on_missing_alias_errors() {
+        let mut ch = trainer_like_chain();
+        assert!(ch.remove("nope").is_err());
+        assert!(ch
+            .insert_before("nope", Tasklet::new("x", rec("x")))
+            .is_err());
+        assert!(ch.get_tasklet("train"));
+        assert!(!ch.get_tasklet("nope"));
+    }
+
+    #[test]
+    fn tasklet_error_aborts_run() {
+        let mut ch = Composer::new()
+            .task("ok", rec("ok"))
+            .task("boom", |_: &mut Ctx| anyhow::bail!("boom"))
+            .task("unreached", rec("unreached"));
+        let mut ctx = Ctx::default();
+        assert!(ch.run(&mut ctx).is_err());
+        assert_eq!(ctx.log, vec!["ok"]);
+    }
+
+    #[test]
+    fn nested_loops_execute_inner_per_outer_iteration() {
+        // epochs x batches — the shape of a local-training loop
+        #[derive(Default)]
+        struct C {
+            epochs: usize,
+            batches: usize,
+            log: Vec<(usize, usize)>,
+        }
+        let mut ch: Composer<C> = Composer::new().loop_until(
+            |c: &C| c.epochs >= 3,
+            Composer::new()
+                .task("reset", |c: &mut C| {
+                    c.batches = 0;
+                    Ok(())
+                })
+                .loop_until(
+                    |c: &C| c.batches >= 2,
+                    Composer::new().task("batch", |c: &mut C| {
+                        c.log.push((c.epochs, c.batches));
+                        c.batches += 1;
+                        Ok(())
+                    }),
+                )
+                .task("end_epoch", |c: &mut C| {
+                    c.epochs += 1;
+                    Ok(())
+                }),
+        );
+        let mut ctx = C::default();
+        ch.run(&mut ctx).unwrap();
+        assert_eq!(
+            ctx.log,
+            vec![(0, 0), (0, 1), (1, 0), (1, 1), (2, 0), (2, 1)]
+        );
+    }
+
+    #[test]
+    fn surgery_inside_nested_loop() {
+        #[derive(Default)]
+        struct C {
+            n: usize,
+            hits: usize,
+        }
+        let mut ch: Composer<C> = Composer::new().loop_until(
+            |c: &C| c.n >= 2,
+            Composer::new().loop_until(
+                |c: &C| c.n >= 2,
+                Composer::new().task("tick", |c: &mut C| {
+                    c.n += 1;
+                    Ok(())
+                }),
+            ),
+        );
+        ch.insert_after(
+            "tick",
+            Tasklet::new("count", |c: &mut C| {
+                c.hits += 1;
+                Ok(())
+            }),
+        )
+        .unwrap();
+        let mut ctx = C::default();
+        ch.run(&mut ctx).unwrap();
+        assert_eq!(ctx.hits, 2);
+        assert_eq!(ch.aliases(), vec!["tick", "count"]);
+    }
+
+    #[test]
+    fn stateful_tasklets_keep_state_across_loop_iterations() {
+        let mut counter = 0usize;
+        let mut ch: Composer<Ctx> = Composer::new().loop_until(
+            |c: &Ctx| c.rounds >= 5,
+            Composer::new().task("tick", move |c: &mut Ctx| {
+                counter += 1;
+                c.rounds = counter;
+                Ok(())
+            }),
+        );
+        let mut ctx = Ctx::default();
+        ch.run(&mut ctx).unwrap();
+        assert_eq!(ctx.rounds, 5);
+    }
+}

@@ -1,0 +1,69 @@
+//! CLI integration: the `flame` binary's subcommands end to end.
+
+use std::process::Command;
+
+fn flame(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_flame"))
+        .args(args)
+        .output()
+        .expect("spawn flame binary");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn spec_emits_valid_tag_json() {
+    let (ok, stdout, _) = flame(&["spec", "--topo", "hybrid", "--trainers", "10", "--groups", "2"]);
+    assert!(ok);
+    let spec = flame::tag::JobSpec::parse(&stdout).expect("CLI spec must parse");
+    assert_eq!(spec.roles.len(), 2);
+    assert_eq!(spec.channels.len(), 2);
+}
+
+#[test]
+fn expand_prints_worker_lines() {
+    let (ok, stdout, _) = flame(&["expand", "--topo", "hfl", "--trainers", "6", "--groups", "3"]);
+    assert!(ok);
+    assert!(stdout.contains("# 10 workers"), "{stdout}");
+    // each worker line is parseable JSON
+    let workers = stdout.lines().filter(|l| l.starts_with('{')).count();
+    assert_eq!(workers, 10);
+}
+
+#[test]
+fn run_mock_job_reports_metrics() {
+    let (ok, stdout, stderr) = flame(&[
+        "run", "--topo", "cfl", "--trainers", "3", "--rounds", "3", "--per-shard", "48",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("done: workers=4"), "{stdout}");
+    assert!(stdout.contains("accuracy:"), "{stdout}");
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let (ok, _, stderr) = flame(&["teleport"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown command"), "{stderr}");
+}
+
+#[test]
+fn bad_flag_value_fails_cleanly() {
+    let (ok, _, stderr) = flame(&["run", "--rounds", "banana"]);
+    assert!(!ok);
+    assert!(stderr.contains("--rounds"), "{stderr}");
+}
+
+#[test]
+fn run_all_topologies_small() {
+    for topo in ["cfl", "hfl", "cofl", "hybrid", "distributed"] {
+        let (ok, _, stderr) = flame(&[
+            "run", "--topo", topo, "--trainers", "4", "--groups", "2", "--rounds", "2",
+            "--per-shard", "32", "--test-n", "64",
+        ]);
+        assert!(ok, "topo {topo} failed: {stderr}");
+    }
+}

@@ -1,0 +1,172 @@
+//! End-to-end integration over the REAL PJRT artifacts: the full L3 stack
+//! (TAG → controller → agents → roles → channels) with L2/L1 numerics.
+//! Self-skips when `artifacts/` is absent (run `make artifacts`).
+
+use std::sync::Arc;
+
+use flame::channel::Backend;
+use flame::control::{Controller, JobOptions};
+use flame::data::Partition;
+use flame::json::Json;
+use flame::runtime::{ArtifactSpec, Compute, ComputeTimeModel, PjrtPool};
+use flame::store::Store;
+use flame::topo;
+
+fn pool() -> Option<(ArtifactSpec, Arc<PjrtPool>)> {
+    if !ArtifactSpec::available() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    let spec = ArtifactSpec::load(ArtifactSpec::default_dir()).unwrap();
+    let pool = PjrtPool::load(&spec, "mlp", 2).unwrap();
+    Some((spec, pool))
+}
+
+#[test]
+fn cfl_over_pjrt_learns() {
+    let Some((artifacts, pool)) = pool() else { return };
+    let init = artifacts.model("mlp").unwrap().spec.init(7);
+    let spec = topo::classical(4, Backend::P2p)
+        .rounds(6)
+        .set("lr", Json::Num(0.3))
+        .set("local_steps", 3usize)
+        .set("seed", 7u64)
+        .build();
+    let opts = JobOptions::mock()
+        .with_compute(pool as Arc<dyn Compute>)
+        .with_init(init)
+        .with_time(ComputeTimeModel::Measured)
+        .with_data(96, 128, Partition::Iid, 7)
+        .with_sigma(2.0);
+    let report = Controller::new(Arc::new(Store::in_memory()))
+        .submit(spec, opts)
+        .unwrap();
+    let acc = report.final_acc.unwrap();
+    let first_loss = report.metrics.series("loss")[0].1;
+    let last_loss = report.final_loss.unwrap();
+    assert!(acc > 0.8, "acc={acc}");
+    assert!(last_loss < 0.5 * first_loss, "{first_loss} -> {last_loss}");
+}
+
+#[test]
+fn hfl_over_pjrt_with_prox() {
+    let Some((artifacts, pool)) = pool() else { return };
+    let init = artifacts.model("mlp").unwrap().spec.init(8);
+    let spec = topo::hierarchical(4, 2, Backend::P2p)
+        .rounds(4)
+        .set("lr", Json::Num(0.3))
+        .set("local_steps", 2usize)
+        .set("algorithm", "fedprox")
+        .set("mu", Json::Num(0.01))
+        .set("seed", 8u64)
+        .build();
+    let opts = JobOptions::mock()
+        .with_compute(pool as Arc<dyn Compute>)
+        .with_init(init)
+        .with_time(ComputeTimeModel::Measured)
+        .with_data(64, 128, Partition::Dirichlet(0.5), 8)
+        .with_sigma(2.0);
+    let report = Controller::new(Arc::new(Store::in_memory()))
+        .submit(spec, opts)
+        .unwrap();
+    assert!(report.final_acc.unwrap() > 0.6);
+}
+
+#[test]
+fn transformer_artifacts_run_too() {
+    // the TAG machinery is model-agnostic: same topology, transformer body
+    if !ArtifactSpec::available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let artifacts = ArtifactSpec::load(ArtifactSpec::default_dir()).unwrap();
+    if !artifacts.models.contains_key("transformer") {
+        eprintln!("skipping: transformer artifacts not lowered");
+        return;
+    }
+    let pool = PjrtPool::load(&artifacts, "transformer", 2).unwrap();
+    let init = artifacts.model("transformer").unwrap().spec.init(9);
+    let spec = topo::classical(2, Backend::P2p)
+        .model("transformer")
+        .rounds(3)
+        .set("lr", Json::Num(0.1))
+        .set("local_steps", 2usize)
+        .set("seed", 9u64)
+        .build();
+    let opts = JobOptions::mock()
+        .with_compute(pool as Arc<dyn Compute>)
+        .with_init(init)
+        .with_time(ComputeTimeModel::Measured)
+        .with_data(64, 64, Partition::Iid, 9)
+        .with_sigma(2.0);
+    let report = Controller::new(Arc::new(Store::in_memory()))
+        .submit(spec, opts)
+        .unwrap();
+    let losses = report.metrics.series("loss");
+    assert_eq!(losses.len(), 3);
+    assert!(losses.last().unwrap().1 < losses[0].1, "{losses:?}");
+}
+
+#[test]
+fn pallas_validation_artifact_matches_request_path_artifact() {
+    // §Perf L1 #2 safety: 'aggregate' (XLA-fused) and 'aggregate_pallas'
+    // (the kernel) must agree when executed through PJRT.
+    if !ArtifactSpec::available() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let artifacts = ArtifactSpec::load(ArtifactSpec::default_dir()).unwrap();
+    let m = artifacts.model("mlp").unwrap();
+    if !m.entries.contains_key("aggregate_pallas") {
+        eprintln!("skipping: aggregate_pallas not lowered");
+        return;
+    }
+    let client = xla::PjRtClient::cpu().unwrap();
+    let run = |file: &str, stacked: &[f32], w: &[f32]| -> Vec<f32> {
+        let proto =
+            xla::HloModuleProto::from_text_file(artifacts.dir.join(file).to_str().unwrap())
+                .unwrap();
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+        let k = artifacts.agg_k;
+        let d = m.spec.d_pad;
+        let bytes = unsafe {
+            std::slice::from_raw_parts(stacked.as_ptr() as *const u8, stacked.len() * 4)
+        };
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[k, d],
+            bytes,
+        )
+        .unwrap();
+        let wl = xla::Literal::vec1(w);
+        let out = exe.execute::<xla::Literal>(&[lit, wl]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        out.to_tuple1().unwrap().to_vec::<f32>().unwrap()
+    };
+    let k = artifacts.agg_k;
+    let d = m.spec.d_pad;
+    let stacked: Vec<f32> = (0..k * d).map(|i| ((i % 97) as f32) * 0.01).collect();
+    let w: Vec<f32> = (0..k).map(|i| (i + 1) as f32 / 136.0).collect();
+    let a = run(&m.entries["aggregate"].file, &stacked, &w);
+    let b = run(&m.entries["aggregate_pallas"].file, &stacked, &w);
+    let mut max_err = 0f32;
+    for (x, y) in a.iter().zip(&b) {
+        max_err = max_err.max((x - y).abs());
+    }
+    assert!(max_err < 1e-4, "artifacts disagree: max_err={max_err}");
+}
+
+#[test]
+fn pjrt_aggregation_matches_rust_oracle_through_job() {
+    // the aggregate entry point (Pallas kernel) is cross-checked directly
+    // in unit tests; here we only need the job-level plumbing to be finite
+    let Some((artifacts, pool)) = pool() else { return };
+    let d = pool.d_pad();
+    assert_eq!(d, artifacts.model("mlp").unwrap().spec.d_pad);
+    let rows: Vec<Vec<f32>> = (0..3).map(|i| vec![i as f32; d]).collect();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let out = pool.aggregate_k(&refs, &[0.25, 0.5, 0.25]).unwrap();
+    assert!((out[0] - 1.0).abs() < 1e-5);
+    assert!(out.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,270 @@
+//! Cross-module property tests over randomized topologies/configurations:
+//! TAG expansion invariants, channel-fabric determinism, JSON round-trips,
+//! and aggregation associativity — the invariants DESIGN.md calls out.
+
+use flame::channel::Backend;
+use flame::json::{Json, Obj};
+use flame::prng::Rng;
+use flame::proputil::{check, ensure};
+use flame::registry::Registry;
+use flame::runtime::{aggregate_any, Compute, MockCompute};
+use flame::tag::expand;
+use flame::topo;
+
+// ------------------------------------------------------------ expansion
+
+#[test]
+fn expansion_worker_count_formula_holds_for_random_topologies() {
+    check(
+        "expansion-count",
+        101,
+        120,
+        |r: &mut Rng| {
+            let kind = r.below(5);
+            let trainers = 1 + r.below(40) as usize;
+            let groups = 1 + r.below(5) as usize;
+            (kind, trainers, groups.min(trainers))
+        },
+        |&(kind, trainers, groups)| {
+            let reg = Registry::single_box();
+            let (spec, expected) = match kind {
+                0 => (topo::classical(trainers, Backend::P2p).build(), trainers + 1),
+                1 => (
+                    topo::hierarchical(trainers, groups, Backend::P2p).build(),
+                    trainers + groups + 1,
+                ),
+                2 => (
+                    topo::coordinated(trainers, 1 + groups, Backend::P2p).build(),
+                    trainers + (1 + groups) + 2,
+                ),
+                3 => {
+                    if trainers < 2 * groups {
+                        // a singleton cluster leaves a 1-member ring channel,
+                        // which PostCheck correctly rejects (self-pair < 2)
+                        return Ok(());
+                    }
+                    (
+                        topo::hybrid(trainers, groups, Backend::Broker, Backend::P2p).build(),
+                        trainers + 1,
+                    )
+                }
+                _ => {
+                    if trainers < 2 {
+                        return Ok(()); // self-pair channels need >= 2
+                    }
+                    (topo::distributed(trainers, Backend::P2p).build(), trainers)
+                }
+            };
+            let workers = expand(&spec, &reg).map_err(|e| format!("{e:#}"))?;
+            ensure(
+                workers.len() == expected,
+                format!("kind {kind}: {} workers != {expected}", workers.len()),
+            )?;
+            // ids unique (PostCheck re-verified as a property)
+            let mut ids: Vec<_> = workers.iter().map(|w| &w.id).collect();
+            ids.sort();
+            ids.dedup();
+            ensure(ids.len() == workers.len(), "duplicate ids")?;
+            // every data consumer holds a distinct dataset
+            let mut ds: Vec<_> = workers.iter().filter_map(|w| w.dataset.clone()).collect();
+            let n_ds = ds.len();
+            ds.sort();
+            ds.dedup();
+            ensure(ds.len() == n_ds, "dataset bound twice")
+        },
+    );
+}
+
+#[test]
+fn expansion_is_deterministic_property() {
+    check(
+        "expansion-deterministic",
+        102,
+        60,
+        |r: &mut Rng| (1 + r.below(30) as usize, 1 + r.below(4) as usize),
+        |&(t, g)| {
+            let spec = topo::hierarchical(t, g.min(t), Backend::Broker).build();
+            let a = expand(&spec, &Registry::single_box()).map_err(|e| e.to_string())?;
+            let b = expand(&spec, &Registry::single_box()).map_err(|e| e.to_string())?;
+            ensure(a == b, "expansion differed between runs")
+        },
+    );
+}
+
+// ------------------------------------------------------------------ json
+
+fn random_json(r: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { r.below(4) } else { r.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(r.f64() < 0.5),
+        2 => Json::Num((r.normal() * 1e3).round()),
+        3 => {
+            let n = r.below(12) as usize;
+            Json::Str((0..n).map(|_| char::from(32 + r.below(94) as u8)).collect())
+        }
+        4 => {
+            let n = r.below(5) as usize;
+            Json::Arr((0..n).map(|_| random_json(r, depth - 1)).collect())
+        }
+        _ => {
+            let n = r.below(5) as usize;
+            let mut o = Obj::new();
+            for i in 0..n {
+                o.insert(format!("k{i}"), random_json(r, depth - 1));
+            }
+            Json::Obj(o)
+        }
+    }
+}
+
+#[test]
+fn json_roundtrip_property() {
+    check(
+        "json-roundtrip",
+        103,
+        400,
+        |r: &mut Rng| random_json(r, 3),
+        |j| {
+            let compact = Json::parse(&j.dump()).map_err(|e| e.to_string())?;
+            ensure(&compact == j, "compact roundtrip mismatch")?;
+            let pretty = Json::parse(&j.pretty()).map_err(|e| e.to_string())?;
+            ensure(&pretty == j, "pretty roundtrip mismatch")
+        },
+    );
+}
+
+#[test]
+fn worker_config_json_roundtrip_property() {
+    check(
+        "workerconfig-roundtrip",
+        104,
+        100,
+        |r: &mut Rng| {
+            let t = 1 + r.below(20) as usize;
+            let g = 1 + r.below(3) as usize;
+            (t, g.min(t))
+        },
+        |&(t, g)| {
+            let spec = topo::hierarchical(t, g, Backend::Broker).build();
+            let workers = expand(&spec, &Registry::single_box()).map_err(|e| e.to_string())?;
+            for w in &workers {
+                let back = flame::tag::WorkerConfig::from_json(&w.to_json())
+                    .map_err(|e| e.to_string())?;
+                ensure(&back == w, "worker config roundtrip mismatch")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------ aggregation
+
+#[test]
+fn aggregation_chunking_invariant_property() {
+    // folding through agg_k-sized chunks must equal the direct weighted sum
+    // for any K (associativity the runtime relies on)
+    check(
+        "aggregate-chunking",
+        105,
+        60,
+        |r: &mut Rng| {
+            let k = 1 + r.below(40) as usize;
+            let d = 8 * (1 + r.below(8) as usize);
+            let rows: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..d).map(|_| r.normal() as f32).collect())
+                .collect();
+            let weights: Vec<f32> = (0..k).map(|_| r.f32() + 0.01).collect();
+            (rows, weights)
+        },
+        |(rows, weights)| {
+            let d = rows[0].len();
+            let c = MockCompute::new(d, 8, 4); // agg_k = 4 forces chunking
+            let refs: Vec<&[f32]> = rows.iter().map(|x| x.as_slice()).collect();
+            let got = aggregate_any(&c, &refs, weights).map_err(|e| e.to_string())?;
+            let want = flame::model::weighted_sum(&refs, weights);
+            for (a, b) in got.iter().zip(&want) {
+                let scale = 1f32.max(b.abs());
+                ensure(
+                    (a - b).abs() / scale < 1e-4,
+                    format!("chunked {a} != direct {b}"),
+                )?;
+            }
+            ensure(got.len() == c.d_pad(), "length mismatch")
+        },
+    );
+}
+
+// ---------------------------------------------------------------- realms
+
+#[test]
+fn realm_compatibility_is_symmetric_and_prefix_transitive() {
+    check(
+        "realm-symmetry",
+        106,
+        300,
+        |r: &mut Rng| {
+            let seg = |r: &mut Rng| ["eu", "us", "ap"][r.below(3) as usize].to_string();
+            let depth_a = 1 + r.below(3) as usize;
+            let depth_b = 1 + r.below(3) as usize;
+            let a: Vec<String> = (0..depth_a).map(|_| seg(r)).collect();
+            let b: Vec<String> = (0..depth_b).map(|_| seg(r)).collect();
+            (a.join("/"), b.join("/"))
+        },
+        |(a, b)| {
+            use flame::registry::realm_compatible;
+            ensure(
+                realm_compatible(a, b) == realm_compatible(b, a),
+                "symmetry violated",
+            )?;
+            // a realm always contains itself and is contained by its parent
+            ensure(realm_compatible(a, a), "reflexivity violated")?;
+            if let Some(idx) = a.rfind('/') {
+                ensure(
+                    realm_compatible(&a[..idx], a),
+                    "parent containment violated",
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------------------- job-level
+
+#[test]
+fn random_hyper_configs_never_hang() {
+    // fuzz the TrainingConfig surface across jobs: any valid combination
+    // must terminate (bounded rounds + recv timeouts guard liveness)
+    check(
+        "job-fuzz",
+        107,
+        8,
+        |r: &mut Rng| {
+            let algo = ["fedavg", "fedprox", "feddyn"][r.below(3) as usize];
+            let server = ["avg", "adam", "yogi", "adagrad"][r.below(4) as usize];
+            let selection = ["all", "random", "oort"][r.below(3) as usize];
+            let trainers = 2 + r.below(5) as usize;
+            (algo, server, selection, trainers, r.next_u64())
+        },
+        |&(algo, server, selection, trainers, seed)| {
+            let spec = topo::classical(trainers, Backend::P2p)
+                .rounds(2)
+                .set("lr", Json::Num(0.2))
+                .set("algorithm", algo)
+                .set("server_opt", server)
+                .set("selection", selection)
+                .set("select_frac", Json::Num(0.6))
+                .set("seed", seed)
+                .build();
+            let opts = flame::control::JobOptions::mock()
+                .with_time(flame::runtime::ComputeTimeModel::Free)
+                .with_data(32, 64, flame::data::Partition::Iid, seed);
+            let report = flame::control::Controller::new(std::sync::Arc::new(
+                flame::store::Store::in_memory(),
+            ))
+            .submit(spec, opts)
+            .map_err(|e| format!("{e:#}"))?;
+            ensure(report.final_acc.is_some(), "no accuracy recorded")
+        },
+    );
+}
