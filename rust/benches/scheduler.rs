@@ -1,0 +1,77 @@
+//! Worker-fabric sweep: thread-per-worker vs cooperative execution as the
+//! deployment grows from 100 to 10,000 trainers.
+//!
+//! Each cell runs a short 3-tier hierarchical FL job (trainers →
+//! per-group aggregators → global, 2 rounds, tiny mock model) and
+//! measures wall-clock time. The threaded executor is swept only up to
+//! 1,000 trainers — beyond that, thread-per-worker either exhausts OS
+//! limits or thrashes, which is exactly the scaling wall the cooperative
+//! fabric removes.
+//!
+//! ```bash
+//! cargo bench --bench scheduler
+//! ```
+//!
+//! Prints the table and writes `BENCH_scheduler.json` in the working
+//! directory.
+
+use std::time::Instant;
+
+use flame::control::Executor;
+use flame::sim::{run_scale, SimOptions};
+
+fn run_once(trainers: usize, executor: Executor) -> anyhow::Result<(f64, f64, usize)> {
+    let groups = (trainers / 100).max(1);
+    let mut o = SimOptions::scale();
+    o.executor = executor;
+    let t0 = Instant::now();
+    let report = run_scale(trainers, groups, 2, &o)?;
+    Ok((t0.elapsed().as_secs_f64(), report.vtime_s, report.workers))
+}
+
+fn main() {
+    let sweep = [100usize, 300, 1_000, 3_000, 10_000];
+    // thread-per-worker is not attempted past this point: the sweep is
+    // about the wall the cooperative fabric removes, not about finding the
+    // exact OS thread limit of one machine.
+    let threaded_cap = 1_000;
+
+    println!(
+        "{:>9} {:>9} {:>16} {:>16} {:>9}",
+        "trainers", "workers", "cooperative (s)", "threaded (s)", "speedup"
+    );
+    let mut rows = Vec::new();
+    for &trainers in &sweep {
+        let (coop_s, vtime_s, workers) =
+            run_once(trainers, Executor::Cooperative { runners: 0 }).expect("cooperative run");
+        let threaded = if trainers <= threaded_cap {
+            Some(run_once(trainers, Executor::ThreadPerWorker).expect("threaded run").0)
+        } else {
+            None
+        };
+        let threaded_str = threaded
+            .map(|t| format!("{t:.3}"))
+            .unwrap_or_else(|| "-".into());
+        let speedup = threaded
+            .map(|t| format!("{:.2}x", t / coop_s))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{trainers:>9} {workers:>9} {coop_s:>16.3} {threaded_str:>16} {speedup:>9}"
+        );
+        rows.push(format!(
+            "    {{\"trainers\": {trainers}, \"workers\": {workers}, \"rounds\": 2, \
+             \"cooperative_wall_s\": {coop_s:.4}, \"threaded_wall_s\": {}, \
+             \"vtime_s\": {vtime_s:.4}}}",
+            threaded.map(|t| format!("{t:.4}")).unwrap_or_else(|| "null".into())
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"scheduler\",\n  \"scenario\": \"hierarchical 3-tier, 2 rounds, \
+         mock d=7850, trainers/100 groups\",\n  \"threaded_cap\": {threaded_cap},\n  \
+         \"sweep\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_scheduler.json", &json).expect("write BENCH_scheduler.json");
+    println!("\nwrote BENCH_scheduler.json");
+}

@@ -1,21 +1,33 @@
 //! Agent — the per-worker thin client (paper §5.1).
 //!
 //! Each pod runs one agent. The agent fetches the worker's task
-//! configuration (here: the [`WorkerConfig`] the deployer hands it), builds
-//! the role's program over a fresh [`crate::roles::WorkerEnv`], executes it
-//! as a supervised task, and reports status transitions to the management
-//! plane through the notifier. It also provides the paper's sandbox
-//! boundary: a panicking or erroring worker is contained and surfaced as a
-//! `Failed` status instead of taking the plane down.
+//! configuration (here: the [`WorkerConfig`](crate::tag::WorkerConfig) the
+//! deployer hands it), builds the role's program over a fresh
+//! [`crate::roles::WorkerEnv`], executes it as a supervised task, and
+//! reports status transitions to the management plane through the
+//! notifier. It also provides the paper's sandbox boundary: a panicking or
+//! erroring worker is contained and surfaced as a `Failed` status instead
+//! of taking the plane down.
+//!
+//! Two execution shapes share the same supervision logic:
+//!
+//! * [`run_worker`] — the blocking form: one OS thread drives the worker
+//!   to completion (thread-per-worker deployment, direct tests).
+//! * [`WorkerTask`] — the cooperative form: a [`crate::sched::RunnableTask`]
+//!   the worker fabric polls; each poll drives the program until it
+//!   completes or yields at a blocking receive.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
+use crate::deploy::{PodStatus, StatusCell};
 use crate::json::Json;
 use crate::notify::{EventKind, Notifier};
-use crate::roles::{build_program, WorkerEnv};
+use crate::roles::{build_program, Program, WorkerEnv};
+use crate::sched::{is_pending, PollOutcome, RunnableTask};
+use crate::workflow::StepStatus;
 
 fn status_event(notifier: &Notifier, job: &str, worker: &str, state: &str, detail: &str) {
     let mut payload = Json::obj();
@@ -27,7 +39,15 @@ fn status_event(notifier: &Notifier, job: &str, worker: &str, state: &str, detai
     notifier.emit(EventKind::WorkerStatus, job, Json::Obj(payload));
 }
 
-/// Run one worker to completion under agent supervision.
+fn panic_msg(panic: Box<dyn std::any::Any + Send>) -> String {
+    panic
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "worker panicked".into())
+}
+
+/// Run one worker to completion under agent supervision (blocking mode).
 ///
 /// The environment (channel joins) is built by the controller *before* any
 /// worker starts, so every role observes complete channel membership — the
@@ -43,14 +63,7 @@ pub fn run_worker(env: WorkerEnv, notifier: Arc<Notifier>) -> Result<()> {
         // sandbox: contain panics from role code
         match std::panic::catch_unwind(AssertUnwindSafe(|| program.run())) {
             Ok(r) => r,
-            Err(panic) => {
-                let msg = panic
-                    .downcast_ref::<&str>()
-                    .map(|s| s.to_string())
-                    .or_else(|| panic.downcast_ref::<String>().cloned())
-                    .unwrap_or_else(|| "worker panicked".into());
-                Err(anyhow!("worker panic: {msg}"))
-            }
+            Err(panic) => Err(anyhow!("worker panic: {}", panic_msg(panic))),
         }
     })();
 
@@ -59,6 +72,88 @@ pub fn run_worker(env: WorkerEnv, notifier: Arc<Notifier>) -> Result<()> {
         Err(e) => status_event(&notifier, &job_name, &worker_id, "failed", &format!("{e:#}")),
     }
     result
+}
+
+/// The cooperative agent: one worker as a schedulable task.
+///
+/// The program is built lazily on the first poll (so build errors surface
+/// through the same status pipeline as runtime errors), then stepped; a
+/// step that yields parks the task until the channel fabric wakes it.
+pub struct WorkerTask {
+    job: String,
+    worker: String,
+    env: Option<WorkerEnv>,
+    program: Option<Box<dyn Program>>,
+    notifier: Arc<Notifier>,
+    status: Arc<StatusCell>,
+}
+
+impl WorkerTask {
+    pub fn new(env: WorkerEnv, notifier: Arc<Notifier>, status: Arc<StatusCell>) -> Self {
+        Self {
+            job: env.job.spec.name.clone(),
+            worker: env.cfg.id.clone(),
+            env: Some(env),
+            program: None,
+            notifier,
+            status,
+        }
+    }
+
+    fn finish(&mut self, result: Result<()>) -> PollOutcome {
+        match result {
+            Ok(()) => {
+                self.status.set(PodStatus::Completed);
+                status_event(&self.notifier, &self.job, &self.worker, "completed", "");
+            }
+            Err(e) => {
+                let detail = format!("{e:#}");
+                self.status.set(PodStatus::Failed(detail.clone()));
+                status_event(&self.notifier, &self.job, &self.worker, "failed", &detail);
+            }
+        }
+        self.program = None; // release role state eagerly
+        PollOutcome::Done
+    }
+}
+
+impl RunnableTask for WorkerTask {
+    fn name(&self) -> &str {
+        &self.worker
+    }
+
+    fn poll(&mut self) -> PollOutcome {
+        if let Some(env) = self.env.take() {
+            self.status.set(PodStatus::Running);
+            status_event(&self.notifier, &self.job, &self.worker, "starting", "");
+            match std::panic::catch_unwind(AssertUnwindSafe(|| build_program(env))) {
+                Ok(Ok(p)) => self.program = Some(p),
+                Ok(Err(e)) => return self.finish(Err(e)),
+                Err(panic) => {
+                    return self.finish(Err(anyhow!("worker panic: {}", panic_msg(panic))))
+                }
+            }
+        }
+        let program = self.program.as_mut().expect("program built on first poll");
+        match std::panic::catch_unwind(AssertUnwindSafe(|| program.step())) {
+            Ok(Ok(StepStatus::Pending)) => PollOutcome::Parked,
+            Ok(Ok(StepStatus::Done)) => self.finish(Ok(())),
+            // A raw Pending escaping as Err means the chain executor lost
+            // its resume cursor; parking would restart the chain from the
+            // top on resume (duplicating sends). Fail loudly instead.
+            Ok(Err(e)) if is_pending(&e) => self.finish(Err(anyhow!(
+                "pending signal escaped the chain executor (lost resume cursor)"
+            ))),
+            Ok(Err(e)) => self.finish(Err(e)),
+            Err(panic) => self.finish(Err(anyhow!("worker panic: {}", panic_msg(panic)))),
+        }
+    }
+
+    fn fail(&mut self, reason: &str) {
+        self.status.set(PodStatus::Failed(reason.to_string()));
+        status_event(&self.notifier, &self.job, &self.worker, "failed", reason);
+        self.program = None;
+    }
 }
 
 #[cfg(test)]
@@ -88,5 +183,20 @@ mod tests {
         let mut bad = cfgs[0].clone();
         bad.channels.insert("ghost-channel".into(), "default".into());
         assert!(WorkerEnv::new(bad, job).is_err());
+    }
+
+    #[test]
+    fn worker_task_surfaces_build_failure_as_failed_status() {
+        let (job, cfgs) = tiny_job_runtime();
+        let notifier = Arc::new(Notifier::new());
+        let rx = notifier.subscribe(Some(EventKind::WorkerStatus), None);
+        let mut bad = cfgs[0].clone();
+        bad.role = "bogus".into();
+        let env = WorkerEnv::new(bad, job).unwrap();
+        let status = StatusCell::new();
+        let mut task = WorkerTask::new(env, notifier, status.clone());
+        assert!(matches!(task.poll(), PollOutcome::Done));
+        assert!(matches!(status.get(), PodStatus::Failed(_)));
+        assert_eq!(rx.try_iter().count(), 2); // starting + failed
     }
 }

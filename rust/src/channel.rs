@@ -9,26 +9,51 @@
 //!   flexibility, §6.2): `P2p` direct links, `Broker` store-and-forward via
 //!   a hub (MQTT-like), `InProc` zero-cost local (tests),
 //! * [`ChannelManager`] — membership per `(channel, group)` pair as created
-//!   by TAG expansion's `groupBy`,
+//!   by TAG expansion's `groupBy`. The membership map is **sharded** so a
+//!   10k-worker fabric does not serialise on one global mutex; delivery
+//!   touches only the target mailbox's own lock.
 //! * [`ChannelHandle`] — the worker-side **Table 2 API**: `join`, `leave`,
 //!   `send`, `recv`, `recv_fifo`, `peek`, `broadcast`, `ends`, `empty`.
 //!
 //! Transfers account virtual time through [`crate::net::VirtualNet`]; each
 //! worker's [`VClock`] merges message arrival times on receive, so critical
 //! -path round times fall out of normal channel use (see `net` docs).
+//!
+//! ## Blocking vs cooperative receives
+//!
+//! Every handle carries its worker's [`WorkerPark`]. In blocking mode
+//! (direct use, thread-per-worker execution) an unsatisfied receive waits
+//! on the mailbox condvar up to the park's timeout. In cooperative mode
+//! (the [`crate::sched`] worker fabric) the receive registers its wait
+//! condition on the mailbox and yields [`crate::sched::Pending`]; delivery
+//! of a matching message wakes the parked worker through its
+//! [`crate::sched::Waker`] at the message's virtual arrival time.
+//!
+//! Message selection is deterministic in both modes: the earliest match by
+//! `(virtual arrival, sender, sequence)` wins, so the same job produces
+//! bit-identical results under threaded and cooperative execution.
 
 use std::collections::{HashMap, VecDeque};
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::json::Json;
 use crate::net::{VClock, VTime, VirtualNet};
+use crate::sched::{pending_err, Waker, WorkerPark};
 
-/// How long a blocking `recv` waits before reporting a stall.
+/// Default wall-clock stall guard for *blocking* receives. Deployments
+/// override it via `JobOptions::recv_timeout` (auto-scaled with worker
+/// count); cooperative execution needs no timeout at all — stalls are
+/// detected instantly as virtual-time deadlocks.
 pub const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Membership shards: keyed by `(channel, group)` hash so join/lookup load
+/// spreads instead of serialising on a single map lock.
+const N_SHARDS: usize = 64;
 
 /// Communication backend for one channel (TAG `backend` attribute).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -129,7 +154,79 @@ struct Envelope {
     seq: u64,
 }
 
-type Mailbox = Arc<(Mutex<VecDeque<Envelope>>, Condvar)>;
+/// What a parked receive is waiting for.
+#[derive(Debug, Clone)]
+enum MatchSpec {
+    /// Any message from this sender.
+    From(String),
+    /// A message from this sender with this kind.
+    FromKind(String, String),
+    /// Any message at all.
+    Any,
+    /// Any message with this kind.
+    AnyKind(String),
+}
+
+impl MatchSpec {
+    fn matches_parts(&self, from: &str, kind: &str) -> bool {
+        match self {
+            MatchSpec::From(f) => f == from,
+            MatchSpec::FromKind(f, k) => f == from && k == kind,
+            MatchSpec::Any => true,
+            MatchSpec::AnyKind(k) => k == kind,
+        }
+    }
+
+    fn matches(&self, e: &Envelope) -> bool {
+        self.matches_parts(&e.from, &e.msg.kind)
+    }
+}
+
+/// Wait condition parked on a mailbox by a cooperative receive.
+#[derive(Debug)]
+enum WaitSpec {
+    /// Wake as soon as one matching envelope is delivered.
+    Match(MatchSpec),
+    /// Wake once mail from *every* listed sender is present (`recv_fifo`'s
+    /// aggregation barrier). Delivery removes senders in place, so the
+    /// check is O(1) per message instead of a queue scan.
+    AllOf(Vec<String>),
+}
+
+struct MailboxInner {
+    queue: VecDeque<Envelope>,
+    waiting: Option<(WaitSpec, Waker)>,
+}
+
+struct MailboxCore {
+    inner: Mutex<MailboxInner>,
+    cv: Condvar,
+}
+
+impl MailboxCore {
+    fn new() -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(MailboxInner {
+                queue: VecDeque::new(),
+                waiting: None,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+}
+
+type Mailbox = Arc<MailboxCore>;
+
+/// Earliest matching envelope by `(arrival, sender, seq)` — deterministic
+/// across executors (the global `seq` counter only breaks exact ties from
+/// the *same* sender, where it reflects the sender's program order).
+fn best_index(q: &VecDeque<Envelope>, spec: &MatchSpec) -> Option<usize> {
+    q.iter()
+        .enumerate()
+        .filter(|(_, e)| spec.matches(e))
+        .min_by(|(_, a), (_, b)| (a.arrival, &a.from, a.seq).cmp(&(b.arrival, &b.from, b.seq)))
+        .map(|(i, _)| i)
+}
 
 struct Member {
     mailbox: Mailbox,
@@ -141,11 +238,13 @@ struct ChannelState {
     members: HashMap<String, Member>,
 }
 
+type ShardMap = HashMap<(String, String), ChannelState>;
+
 /// Shared channel fabric. One per deployment; handles are created per
 /// worker+channel by `join`.
 pub struct ChannelManager {
     net: Arc<VirtualNet>,
-    chans: Mutex<HashMap<(String, String), ChannelState>>,
+    shards: Vec<RwLock<ShardMap>>,
     seq: AtomicU64,
 }
 
@@ -153,7 +252,7 @@ impl ChannelManager {
     pub fn new(net: Arc<VirtualNet>) -> Arc<Self> {
         Arc::new(Self {
             net,
-            chans: Mutex::new(HashMap::new()),
+            shards: (0..N_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
             seq: AtomicU64::new(0),
         })
     }
@@ -162,11 +261,16 @@ impl ChannelManager {
         &self.net
     }
 
-    /// Join `(channel, group)` as `worker` acting as `role`, sharing the
-    /// worker's virtual clock across all its channels. Returns the
-    /// worker-side handle. `role` determines what `ends()` yields: peers of
-    /// the *other* endpoint role (or all other members on self-pair
-    /// channels like the distributed trainer ring).
+    fn shard(&self, channel: &str, group: &str) -> &RwLock<ShardMap> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        channel.hash(&mut h);
+        group.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Join `(channel, group)` as `worker` acting as `role` in blocking
+    /// mode (direct use / thread-per-worker execution). See
+    /// [`Self::join_with_park`] for the full form.
     pub fn join(
         self: &Arc<Self>,
         channel: &str,
@@ -176,8 +280,35 @@ impl ChannelManager {
         backend: Backend,
         clock: Arc<Mutex<VClock>>,
     ) -> Result<ChannelHandle> {
+        self.join_with_park(
+            channel,
+            group,
+            worker,
+            role,
+            backend,
+            clock,
+            WorkerPark::blocking(RECV_TIMEOUT),
+        )
+    }
+
+    /// Join `(channel, group)` as `worker` acting as `role`, sharing the
+    /// worker's virtual clock and execution mode across all its channels.
+    /// Returns the worker-side handle. `role` determines what `ends()`
+    /// yields: peers of the *other* endpoint role (or all other members on
+    /// self-pair channels like the distributed trainer ring).
+    #[allow(clippy::too_many_arguments)]
+    pub fn join_with_park(
+        self: &Arc<Self>,
+        channel: &str,
+        group: &str,
+        worker: &str,
+        role: &str,
+        backend: Backend,
+        clock: Arc<Mutex<VClock>>,
+        park: Arc<WorkerPark>,
+    ) -> Result<ChannelHandle> {
         let key = (channel.to_string(), group.to_string());
-        let mut g = self.chans.lock().unwrap();
+        let mut g = self.shard(channel, group).write().unwrap();
         let state = g.entry(key).or_insert_with(|| ChannelState {
             backend,
             members: HashMap::new(),
@@ -190,7 +321,7 @@ impl ChannelManager {
         }
         let mailbox: Mailbox = match state.members.get(worker) {
             Some(m) => m.mailbox.clone(), // re-join keeps pending mail
-            None => Arc::new((Mutex::new(VecDeque::new()), Condvar::new())),
+            None => MailboxCore::new(),
         };
         state.members.insert(
             worker.to_string(),
@@ -208,11 +339,12 @@ impl ChannelManager {
             backend,
             mailbox,
             clock,
+            park,
         })
     }
 
     fn leave(&self, channel: &str, group: &str, worker: &str) {
-        let mut g = self.chans.lock().unwrap();
+        let mut g = self.shard(channel, group).write().unwrap();
         if let Some(state) = g.get_mut(&(channel.to_string(), group.to_string())) {
             state.members.remove(worker);
         }
@@ -221,7 +353,7 @@ impl ChannelManager {
     /// Peers at the other end: members of a different role, or — when every
     /// member shares one role (self-pair channel) — all other members.
     fn peers(&self, channel: &str, group: &str, me: &str, my_role: &str) -> Vec<String> {
-        let g = self.chans.lock().unwrap();
+        let g = self.shard(channel, group).read().unwrap();
         let mut peers: Vec<String> = match g.get(&(channel.to_string(), group.to_string())) {
             None => Vec::new(),
             Some(s) => {
@@ -244,7 +376,7 @@ impl ChannelManager {
 
     /// All members of `(channel, group)` (sorted), regardless of role.
     pub fn members(&self, channel: &str, group: &str) -> Vec<String> {
-        let g = self.chans.lock().unwrap();
+        let g = self.shard(channel, group).read().unwrap();
         let mut m: Vec<String> = g
             .get(&(channel.to_string(), group.to_string()))
             .map(|s| s.members.keys().cloned().collect())
@@ -257,6 +389,12 @@ impl ChannelManager {
     /// virtual arrival time from the backend's route. `queue_delay` models
     /// store-and-forward serialisation at the broker (fan-out copies leave
     /// the hub one after another).
+    ///
+    /// Only the target mailbox's own lock is taken for the enqueue; the
+    /// membership shard is held read-only just long enough to resolve the
+    /// mailbox, so concurrent deliveries on different channels (or
+    /// different workers of one channel) do not serialise.
+    #[allow(clippy::too_many_arguments)]
     fn deliver(
         &self,
         channel: &str,
@@ -280,22 +418,44 @@ impl ChannelManager {
             }
         };
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-        let g = self.chans.lock().unwrap();
-        let state = g
-            .get(&(channel.to_string(), group.to_string()))
-            .with_context(|| format!("channel '{channel}' group '{group}' does not exist"))?;
-        let member = state
-            .members
-            .get(to)
-            .with_context(|| format!("peer '{to}' not joined on '{channel}/{group}'"))?;
-        let (q, cv) = &*member.mailbox;
-        q.lock().unwrap().push_back(Envelope {
-            from: from.to_string(),
-            msg,
-            arrival,
-            seq,
-        });
-        cv.notify_all();
+        let mailbox = {
+            let g = self.shard(channel, group).read().unwrap();
+            let state = g
+                .get(&(channel.to_string(), group.to_string()))
+                .with_context(|| format!("channel '{channel}' group '{group}' does not exist"))?;
+            state
+                .members
+                .get(to)
+                .with_context(|| format!("peer '{to}' not joined on '{channel}/{group}'"))?
+                .mailbox
+                .clone()
+        };
+        let waker = {
+            let mut g = mailbox.inner.lock().unwrap();
+            let satisfied = match &mut g.waiting {
+                Some((WaitSpec::Match(spec), _)) => spec.matches_parts(from, &msg.kind),
+                Some((WaitSpec::AllOf(missing), _)) => {
+                    missing.retain(|m| m != from);
+                    missing.is_empty()
+                }
+                None => false,
+            };
+            g.queue.push_back(Envelope {
+                from: from.to_string(),
+                msg,
+                arrival,
+                seq,
+            });
+            if satisfied {
+                g.waiting.take().map(|(_, w)| w)
+            } else {
+                None
+            }
+        };
+        mailbox.cv.notify_all();
+        if let Some(w) = waker {
+            w.wake(arrival);
+        }
         Ok(arrival)
     }
 }
@@ -310,6 +470,7 @@ pub struct ChannelHandle {
     backend: Backend,
     mailbox: Mailbox,
     clock: Arc<Mutex<VClock>>,
+    park: Arc<WorkerPark>,
 }
 
 impl ChannelHandle {
@@ -399,58 +560,62 @@ impl ChannelHandle {
         self.send_fanout(items)
     }
 
-    /// Receive the earliest message from `end` (Table 2 `recv`); blocks.
+    /// Receive the earliest message from `end` (Table 2 `recv`). Blocks in
+    /// blocking mode; yields [`crate::sched::Pending`] in cooperative mode.
     /// Merges the worker clock with the message's virtual arrival time.
     pub fn recv(&self, end: &str) -> Result<Message> {
-        self.recv_where(|e| e.from == end)
+        Ok(self.take_match(&MatchSpec::From(end.to_string()))?.msg)
     }
 
     /// Receive the earliest message from `end` with the given kind.
     pub fn recv_kind(&self, end: &str, kind: &str) -> Result<Message> {
-        self.recv_where(|e| e.from == end && e.msg.kind == kind)
+        Ok(self
+            .take_match(&MatchSpec::FromKind(end.to_string(), kind.to_string()))?
+            .msg)
     }
 
     /// Receive the earliest message from *any* peer; returns `(from, msg)`.
     pub fn recv_any(&self) -> Result<(String, Message)> {
-        let e = self.take_where(|_| true)?;
+        let e = self.take_match(&MatchSpec::Any)?;
         Ok((e.from, e.msg))
     }
 
     /// Receive the earliest message of `kind` from any peer.
     pub fn recv_any_kind(&self, kind: &str) -> Result<(String, Message)> {
-        let e = self.take_where(|e| e.msg.kind == kind)?;
+        let e = self.take_match(&MatchSpec::AnyKind(kind.to_string()))?;
         Ok((e.from, e.msg))
     }
 
-    /// Like [`recv_any_kind`] but also returns the message's virtual
+    /// Like [`Self::recv_any_kind`] but also returns the message's virtual
     /// arrival time (needed when the receiver must attribute per-sender
     /// timing independent of its own merged clock, e.g. CO-FL acks).
     pub fn recv_any_kind_timed(&self, kind: &str) -> Result<(String, Message, VTime)> {
-        let e = self.take_where(|e| e.msg.kind == kind)?;
+        let e = self.take_match(&MatchSpec::AnyKind(kind.to_string()))?;
         Ok((e.from, e.msg, e.arrival))
     }
 
-    fn recv_where(&self, pred: impl Fn(&Envelope) -> bool) -> Result<Message> {
-        Ok(self.take_where(pred)?.msg)
-    }
-
-    fn take_where(&self, pred: impl Fn(&Envelope) -> bool) -> Result<Envelope> {
-        let (q, cv) = &*self.mailbox;
-        let mut g = q.lock().unwrap();
+    /// Consume the earliest envelope matching `spec`, or park. Cooperative
+    /// parking registers `spec` on the mailbox *under the mailbox lock*, so
+    /// a concurrent delivery either sees the registration (and wakes us) or
+    /// happened before it (and is found by the scan) — no lost wakeups.
+    fn take_match(&self, spec: &MatchSpec) -> Result<Envelope> {
+        let core = &*self.mailbox;
+        let mut g = core.inner.lock().unwrap();
         loop {
-            // earliest matching by (arrival, seq) for determinism
-            let best = g
-                .iter()
-                .enumerate()
-                .filter(|(_, e)| pred(e))
-                .min_by_key(|(_, e)| (e.arrival, e.seq))
-                .map(|(i, _)| i);
-            if let Some(i) = best {
-                let env = g.remove(i).unwrap();
+            if let Some(i) = best_index(&g.queue, spec) {
+                let env = g.queue.remove(i).unwrap();
+                drop(g);
                 self.clock.lock().unwrap().merge(env.arrival);
                 return Ok(env);
             }
-            let (ng, timeout) = cv.wait_timeout(g, RECV_TIMEOUT).unwrap();
+            if self.park.is_cooperative() {
+                let waker = self.park.waker().ok_or_else(|| {
+                    anyhow!("cooperative worker '{}' has no scheduler waker", self.me)
+                })?;
+                g.waiting = Some((WaitSpec::Match(spec.clone()), waker));
+                return Err(pending_err());
+            }
+            let (ng, timeout) = core.cv.wait_timeout(g, self.park.timeout()).unwrap();
             g = ng;
             if timeout.timed_out() {
                 bail!(
@@ -464,29 +629,74 @@ impl ChannelHandle {
     }
 
     /// Receive one message from each of `ends`, yielded in FIFO order of
-    /// virtual arrival (Table 2 `recv_fifo`). Blocks until all have arrived;
-    /// the worker clock ends at the latest arrival (the aggregation barrier).
+    /// virtual arrival (Table 2 `recv_fifo`). Waits until all have arrived
+    /// (the aggregation barrier) and only then consumes — an atomic
+    /// all-or-nothing take, so a cooperative yield leaves the mailbox
+    /// untouched and the calling tasklet safely re-runnable. The worker
+    /// clock ends at the latest arrival.
     pub fn recv_fifo(&self, ends: &[String]) -> Result<Vec<(String, Message)>> {
-        let mut got: Vec<Envelope> = Vec::with_capacity(ends.len());
-        let mut pending: Vec<&String> = ends.iter().collect();
-        while !pending.is_empty() {
-            let env = self.take_where(|e| pending.iter().any(|p| **p == e.from))?;
-            pending.retain(|p| **p != env.from);
-            got.push(env);
+        // one message per *unique* end (duplicate entries collapse, as in
+        // the pending-set semantics of the original implementation)
+        let mut unique: Vec<&String> = Vec::with_capacity(ends.len());
+        for end in ends {
+            if !unique.contains(&end) {
+                unique.push(end);
+            }
         }
-        got.sort_by_key(|e| (e.arrival, e.seq));
+        let core = &*self.mailbox;
+        let mut g = core.inner.lock().unwrap();
+        loop {
+            let missing: Vec<String> = unique
+                .iter()
+                .filter(|end| !g.queue.iter().any(|e| e.from.as_str() == end.as_str()))
+                .map(|e| (*e).clone())
+                .collect();
+            if missing.is_empty() {
+                break;
+            }
+            if self.park.is_cooperative() {
+                let waker = self.park.waker().ok_or_else(|| {
+                    anyhow!("cooperative worker '{}' has no scheduler waker", self.me)
+                })?;
+                g.waiting = Some((WaitSpec::AllOf(missing), waker));
+                return Err(pending_err());
+            }
+            let (ng, timeout) = core.cv.wait_timeout(g, self.park.timeout()).unwrap();
+            g = ng;
+            if timeout.timed_out() {
+                bail!(
+                    "recv_fifo timeout on channel '{}' group '{}' at worker '{}' \
+                     (missing {} of {} peers)",
+                    self.channel,
+                    self.group,
+                    self.me,
+                    missing.len(),
+                    unique.len()
+                );
+            }
+        }
+        let mut got: Vec<Envelope> = Vec::with_capacity(unique.len());
+        for end in &unique {
+            let spec = MatchSpec::From((*end).clone());
+            let i = best_index(&g.queue, &spec).expect("presence checked above");
+            got.push(g.queue.remove(i).unwrap());
+        }
+        drop(g);
+        {
+            let mut clk = self.clock.lock().unwrap();
+            for e in &got {
+                clk.merge(e.arrival);
+            }
+        }
+        got.sort_by(|a, b| (a.arrival, &a.from).cmp(&(b.arrival, &b.from)));
         Ok(got.into_iter().map(|e| (e.from, e.msg)).collect())
     }
 
     /// Peek (without consuming) the earliest message from `end`
     /// (Table 2 `peek`). Does not advance the clock.
     pub fn peek(&self, end: &str) -> Option<Message> {
-        let (q, _) = &*self.mailbox;
-        let g = q.lock().unwrap();
-        g.iter()
-            .filter(|e| e.from == end)
-            .min_by_key(|e| (e.arrival, e.seq))
-            .map(|e| e.msg.clone())
+        let g = self.mailbox.inner.lock().unwrap();
+        best_index(&g.queue, &MatchSpec::From(end.to_string())).map(|i| g.queue[i].msg.clone())
     }
 
     /// Non-blocking: is any message from `end` available?
@@ -758,5 +968,114 @@ mod tests {
         let c = Arc::new(Mutex::new(VClock::default()));
         mgr.join("c", "g", "a", "trainer", Backend::P2p, c.clone()).unwrap();
         assert!(mgr.join("c", "g", "b", "aggregator", Backend::Broker, c).is_err());
+    }
+
+    #[test]
+    fn recv_fifo_collapses_duplicate_ends() {
+        let (_m, a, b) = setup(Backend::InProc);
+        a.send("b", Message::control("u", 1)).unwrap();
+        let got = b
+            .recv_fifo(&["a".to_string(), "a".to_string()])
+            .unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, "a");
+    }
+
+    #[test]
+    fn backend_parse_roundtrips_and_aliases() {
+        for b in [Backend::InProc, Backend::P2p, Backend::Broker] {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+        assert_eq!(Backend::parse("local").unwrap(), Backend::InProc);
+        assert_eq!(Backend::parse("grpc").unwrap(), Backend::P2p);
+        assert_eq!(Backend::parse("mqtt").unwrap(), Backend::Broker);
+        assert_eq!(Backend::parse("kafka").unwrap(), Backend::Broker);
+        assert!(Backend::parse("carrier-pigeon").is_err());
+    }
+
+    #[test]
+    fn rejoin_keeps_pending_mail() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let clock = Arc::new(Mutex::new(VClock::default()));
+        let a = mgr
+            .join("c", "g", "a", "trainer", Backend::InProc, clock.clone())
+            .unwrap();
+        let _b = mgr
+            .join("c", "g", "b", "aggregator", Backend::InProc, clock.clone())
+            .unwrap();
+        a.send("b", Message::control("kept", 9)).unwrap();
+        // b re-joins (e.g. worker restart): its mailbox must survive
+        let b2 = mgr
+            .join("c", "g", "b", "aggregator", Backend::InProc, clock)
+            .unwrap();
+        assert_eq!(b2.recv("a").unwrap().kind, "kept");
+    }
+
+    #[test]
+    fn self_pair_channel_peers_are_all_other_members() {
+        // a distributed ring: every member has the same role, so ends()
+        // must yield all *other* members, per member.
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str| {
+            mgr.join(
+                "ring",
+                "g",
+                id,
+                "trainer",
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let t0 = mk("t0");
+        let t1 = mk("t1");
+        let t2 = mk("t2");
+        assert_eq!(t0.ends(), vec!["t1".to_string(), "t2".into()]);
+        assert_eq!(t1.ends(), vec!["t0".to_string(), "t2".into()]);
+        assert_eq!(t2.ends(), vec!["t0".to_string(), "t1".into()]);
+        assert_eq!(mgr.members("ring", "g").len(), 3);
+        // single member: no peers, still a valid (empty) channel end set
+        let solo = mgr
+            .join(
+                "ring2",
+                "g",
+                "solo",
+                "trainer",
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap();
+        assert!(solo.ends().is_empty());
+        assert!(solo.empty());
+    }
+
+    #[test]
+    fn deterministic_tie_break_orders_by_sender() {
+        // two same-arrival-time messages (InProc, clocks at 0) must come
+        // out ordered by sender name regardless of send interleaving
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let agg = mk("agg", "aggregator");
+        let z = mk("z", "trainer");
+        let a = mk("a", "trainer");
+        z.send("agg", Message::control("u", 0)).unwrap();
+        a.send("agg", Message::control("u", 0)).unwrap();
+        let (from1, _) = agg.recv_any().unwrap();
+        let (from2, _) = agg.recv_any().unwrap();
+        assert_eq!(from1, "a");
+        assert_eq!(from2, "z");
     }
 }

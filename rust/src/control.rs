@@ -11,14 +11,14 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::algos::TrainingConfig;
-use crate::channel::ChannelManager;
+use crate::channel::{ChannelManager, RECV_TIMEOUT};
 use crate::data::{make_federated, Partition};
-use crate::deploy::{DeployerSet, PodStatus};
+use crate::deploy::{Deployer, DeployerSet, PodStatus, SimDeployer, ThreadDeployer};
 use crate::json::Json;
 use crate::metrics::MetricsHub;
 use crate::net::VirtualNet;
@@ -28,6 +28,34 @@ use crate::roles::JobRuntime;
 use crate::runtime::{Compute, ComputeTimeModel};
 use crate::store::Store;
 use crate::tag::{expand, JobSpec};
+
+/// How the sim orchestrator executes a job's workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Executor {
+    /// The cooperative worker fabric: all workers multiplexed over a
+    /// bounded runner pool (`runners == 0` means one per CPU core). The
+    /// default — scales to tens of thousands of workers.
+    Cooperative { runners: usize },
+    /// One OS thread per worker (the seed's execution model). Kept for
+    /// parity testing and preemptive isolation; capped by the OS thread
+    /// limit.
+    ThreadPerWorker,
+}
+
+impl Default for Executor {
+    fn default() -> Self {
+        Executor::Cooperative { runners: 0 }
+    }
+}
+
+/// Blocking-receive stall guard scaled with deployment size: big fan-ins
+/// legitimately wait a long wall-clock time for their slowest peer, and a
+/// 10k-worker run must not false-stall on the seed's fixed 60 s.
+/// (Cooperative execution ignores this — stalls there are detected
+/// instantly as virtual-time deadlocks.)
+fn auto_recv_timeout(workers: usize) -> Duration {
+    RECV_TIMEOUT.max(Duration::from_millis(10 * workers as u64))
+}
 
 /// Per-job execution options (what the paper's job configuration carries
 /// beyond the TAG itself).
@@ -45,6 +73,10 @@ pub struct JobOptions {
     /// Hook to shape the virtual network before workers start (straggler
     /// links etc. — the `tc` stand-in).
     pub configure_net: Option<Box<dyn FnOnce(&VirtualNet) + Send>>,
+    /// Worker execution model for the sim orchestrator.
+    pub executor: Executor,
+    /// Blocking-receive stall guard; `None` auto-scales with worker count.
+    pub recv_timeout: Option<Duration>,
 }
 
 impl JobOptions {
@@ -60,7 +92,19 @@ impl JobOptions {
             noise_sigma: 0.5,
             data_seed: 0,
             configure_net: None,
+            executor: Executor::default(),
+            recv_timeout: None,
         }
+    }
+
+    pub fn with_executor(mut self, e: Executor) -> Self {
+        self.executor = e;
+        self
+    }
+
+    pub fn with_recv_timeout(mut self, t: Duration) -> Self {
+        self.recv_timeout = Some(t);
+        self
     }
 
     pub fn with_compute(mut self, c: Arc<dyn Compute>) -> Self {
@@ -245,16 +289,21 @@ impl Controller {
             &job_id,
             Json::from(workers.len()),
         );
-        // Build every worker environment (joining channels) BEFORE any pod
-        // starts: roles then observe complete channel membership, the
-        // equivalent of the paper's agents fetching full task configuration
-        // before starting the worker process.
-        let mut envs = Vec::with_capacity(workers.len());
-        for w in &workers {
-            envs.push(crate::roles::WorkerEnv::new(w.clone(), job.clone())?);
-        }
+        // Two-phase deployment: `deploy` builds every worker environment
+        // (joining channels) BEFORE `start` launches anything, so roles
+        // observe complete channel membership — the equivalent of the
+        // paper's agents fetching full task configuration before starting
+        // the worker process.
+        let recv_timeout = opts
+            .recv_timeout
+            .unwrap_or_else(|| auto_recv_timeout(workers.len()));
+        let sim: Arc<dyn Deployer> = match opts.executor {
+            Executor::Cooperative { runners } => Arc::new(SimDeployer::new(runners)),
+            Executor::ThreadPerWorker => Arc::new(ThreadDeployer::new(recv_timeout)),
+        };
         let mut pods = Vec::with_capacity(workers.len());
-        for (w, env) in workers.iter().zip(envs) {
+        let mut custom_orchestrators: Vec<String> = Vec::new();
+        for w in &workers {
             let orchestrator = self
                 .registry
                 .computes()
@@ -262,13 +311,26 @@ impl Controller {
                 .find(|c| c.name == w.compute)
                 .map(|c| c.orchestrator.clone())
                 .unwrap_or_else(|| "sim".into());
-            let deployer = self.deployers.get(&orchestrator)?;
-            pods.push(deployer.deploy(env, self.notifier.clone())?);
+            let deployer: Arc<dyn Deployer> = if orchestrator == "sim" {
+                sim.clone()
+            } else {
+                if !custom_orchestrators.contains(&orchestrator) {
+                    custom_orchestrators.push(orchestrator.clone());
+                }
+                self.deployers.get(&orchestrator)?.clone()
+            };
+            pods.push(deployer.deploy(w.clone(), &job, self.notifier.clone())?);
         }
+        // Launch. For the cooperative fabric this drives the whole
+        // deployment to completion on the runner pool.
+        for orch in &custom_orchestrators {
+            self.deployers.get(orch)?.start()?;
+        }
+        sim.start()?;
 
         // (monitoring) wait for completion; fail the job on any failed pod
         let mut failures = Vec::new();
-        for pod in &mut pods {
+        for pod in &pods {
             if let PodStatus::Failed(e) = pod.wait() {
                 failures.push(format!("{}: {e}", pod.worker_id));
             }
@@ -367,6 +429,40 @@ mod tests {
         c.submit(spec, JobOptions::mock()).unwrap();
         assert_eq!(deploy_rx.try_iter().count(), 1);
         assert_eq!(done_rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn thread_per_worker_executor_still_supported() {
+        let mut c = controller();
+        let spec = topo::classical(3, Backend::P2p)
+            .rounds(3)
+            .set("lr", Json::Num(0.5))
+            .build();
+        let report = c
+            .submit(
+                spec,
+                JobOptions::mock().with_executor(Executor::ThreadPerWorker),
+            )
+            .unwrap();
+        assert_eq!(report.workers, 4);
+        assert!(report.final_acc.unwrap() > 0.4);
+    }
+
+    #[test]
+    fn single_runner_cooperative_executor_works() {
+        let mut c = controller();
+        let spec = topo::hierarchical(4, 2, Backend::P2p)
+            .rounds(2)
+            .set("lr", Json::Num(0.5))
+            .build();
+        let report = c
+            .submit(
+                spec,
+                JobOptions::mock().with_executor(Executor::Cooperative { runners: 1 }),
+            )
+            .unwrap();
+        assert_eq!(report.workers, 7);
+        assert!(report.final_acc.is_some());
     }
 
     #[test]

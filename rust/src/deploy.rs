@@ -2,21 +2,35 @@
 //!
 //! The paper's deployer abstracts Kubernetes / Docker Swarm / Mesos behind
 //! one interface; any orchestrator that can create and destroy worker
-//! instances plugs in. Here the interface is the [`Deployer`] trait and the
-//! default implementation is [`SimDeployer`]: "pods" are OS threads with a
-//! full lifecycle (`Creating -> Running -> Completed|Failed`), registered
-//! per compute cluster exactly like the paper's per-cluster deployer
-//! instances (§5.2 step 1).
+//! instances plugs in. Here the interface is the [`Deployer`] trait with a
+//! **two-phase** contract: `deploy` prepares one worker instance (building
+//! its environment joins its channels), `start` launches everything that
+//! was deployed. The split guarantees every role observes complete channel
+//! membership before any worker runs — the paper's step-7/8 ordering
+//! (agents fetch their full task configuration before the worker process
+//! starts).
+//!
+//! Two single-box orchestrators ship:
+//!
+//! * [`SimDeployer`] — the default **cooperative worker fabric**: every
+//!   pod is a task on a [`crate::sched::Scheduler`], multiplexed over a
+//!   bounded M:N runner pool (default: one runner per CPU core). This is
+//!   what lets a laptop hold a 10,000-trainer hierarchical deployment.
+//! * [`ThreadDeployer`] — the legacy fiab-style emulation: one named OS
+//!   thread per pod. Kept for parity testing (cooperative execution must
+//!   reproduce its results bit-for-bit) and for workloads that want
+//!   preemptive isolation; it does not scale past a few thousand workers.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{bail, Result};
 
-use crate::agent;
+use crate::agent::{self, WorkerTask};
 use crate::notify::Notifier;
-use crate::roles::WorkerEnv;
+use crate::roles::{JobRuntime, WorkerEnv};
+use crate::sched::{Scheduler, WorkerPark};
+use crate::tag::WorkerConfig;
 
 /// Pod lifecycle states.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -27,69 +41,226 @@ pub enum PodStatus {
     Failed(String),
 }
 
+impl PodStatus {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, PodStatus::Completed | PodStatus::Failed(_))
+    }
+}
+
+/// Shared pod status slot: written by the executing agent (thread or
+/// scheduler task), waited on by the controller.
+pub struct StatusCell {
+    state: Mutex<PodStatus>,
+    cv: Condvar,
+}
+
+impl StatusCell {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(PodStatus::Creating),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn set(&self, s: PodStatus) {
+        *self.state.lock().unwrap() = s;
+        self.cv.notify_all();
+    }
+
+    pub fn get(&self) -> PodStatus {
+        self.state.lock().unwrap().clone()
+    }
+
+    /// Block until the pod reaches a terminal state.
+    pub fn wait_terminal(&self) -> PodStatus {
+        let mut g = self.state.lock().unwrap();
+        while !g.is_terminal() {
+            g = self.cv.wait(g).unwrap();
+        }
+        g.clone()
+    }
+}
+
 /// Handle to one deployed worker instance.
 pub struct PodHandle {
     pub worker_id: String,
     pub compute: String,
-    status: Arc<Mutex<PodStatus>>,
-    join: Option<JoinHandle<()>>,
+    status: Arc<StatusCell>,
 }
 
 impl PodHandle {
     pub fn status(&self) -> PodStatus {
-        self.status.lock().unwrap().clone()
+        self.status.get()
     }
 
     /// Block until the pod's worker exits; returns the terminal status.
-    pub fn wait(&mut self) -> PodStatus {
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-        self.status()
+    /// Call the deployer's [`Deployer::start`] first — before `start`, pods
+    /// are deployed but not launched.
+    pub fn wait(&self) -> PodStatus {
+        self.status.wait_terminal()
     }
 }
 
-/// The resource-orchestrator integration interface.
+/// The resource-orchestrator integration interface (two-phase).
 pub trait Deployer: Send + Sync {
-    /// Orchestrator kind this deployer backs ("sim", "k8s", ...).
+    /// Orchestrator kind this deployer backs ("sim", "sim-threads",
+    /// "k8s", ...).
     fn orchestrator(&self) -> &str;
 
-    /// Create a worker instance (pod) that runs an agent over the
-    /// pre-built environment (channels already joined by the controller).
-    fn deploy(&self, env: WorkerEnv, notifier: Arc<Notifier>) -> Result<PodHandle>;
+    /// Prepare a worker instance (pod): build its environment — joining
+    /// its channels — and register it for launch. The worker does not run
+    /// until [`start`](Self::start).
+    fn deploy(
+        &self,
+        cfg: WorkerConfig,
+        job: &Arc<JobRuntime>,
+        notifier: Arc<Notifier>,
+    ) -> Result<PodHandle>;
+
+    /// Launch every deployed-but-not-started worker. For the cooperative
+    /// fabric this call *drives the whole deployment to completion* on the
+    /// runner pool and returns when all pods are terminal.
+    fn start(&self) -> Result<()> {
+        Ok(())
+    }
 }
 
-/// Thread-backed orchestrator: each pod is a named OS thread running the
-/// Flame agent (fiab-style single-box emulation).
-#[derive(Default)]
-pub struct SimDeployer;
+// ------------------------------------------------- cooperative (default)
+
+/// Cooperative orchestrator: each pod is a task on the virtual-time
+/// scheduler; `start` runs the M:N pool to completion.
+pub struct SimDeployer {
+    /// Runner threads; 0 = one per available CPU core.
+    runners: usize,
+    sched: Mutex<Option<Scheduler>>,
+}
+
+impl SimDeployer {
+    pub fn new(runners: usize) -> Self {
+        Self {
+            runners,
+            sched: Mutex::new(None),
+        }
+    }
+}
+
+impl Default for SimDeployer {
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
 
 impl Deployer for SimDeployer {
     fn orchestrator(&self) -> &str {
         "sim"
     }
 
-    fn deploy(&self, env: WorkerEnv, notifier: Arc<Notifier>) -> Result<PodHandle> {
-        let status = Arc::new(Mutex::new(PodStatus::Creating));
+    fn deploy(
+        &self,
+        cfg: WorkerConfig,
+        job: &Arc<JobRuntime>,
+        notifier: Arc<Notifier>,
+    ) -> Result<PodHandle> {
+        let park = WorkerPark::cooperative();
+        let env = WorkerEnv::with_park(cfg, job.clone(), park.clone())?;
         let worker_id = env.cfg.id.clone();
         let compute = env.cfg.compute.clone();
-        let status2 = status.clone();
-        let join = std::thread::Builder::new()
-            .name(format!("pod-{worker_id}"))
-            .spawn(move || {
-                *status2.lock().unwrap() = PodStatus::Running;
-                let outcome = agent::run_worker(env, notifier);
-                *status2.lock().unwrap() = match outcome {
-                    Ok(()) => PodStatus::Completed,
-                    Err(e) => PodStatus::Failed(format!("{e:#}")),
-                };
-            })?;
+        let status = StatusCell::new();
+        let task = WorkerTask::new(env, notifier, status.clone());
+        let mut g = self.sched.lock().unwrap();
+        let sched = g.get_or_insert_with(Scheduler::new);
+        let id = sched.spawn(Box::new(task));
+        park.set_waker(sched.waker(id));
         Ok(PodHandle {
             worker_id,
             compute,
             status,
-            join: Some(join),
         })
+    }
+
+    fn start(&self) -> Result<()> {
+        let sched = self.sched.lock().unwrap().take();
+        if let Some(sched) = sched {
+            let runners = if self.runners == 0 {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4)
+            } else {
+                self.runners
+            };
+            sched.run(runners);
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------ thread-per-worker (legacy)
+
+/// Thread-backed orchestrator: each pod is a named OS thread running the
+/// blocking Flame agent (fiab-style single-box emulation).
+pub struct ThreadDeployer {
+    recv_timeout: std::time::Duration,
+    pending: Mutex<Vec<(WorkerEnv, Arc<Notifier>, Arc<StatusCell>)>>,
+}
+
+impl ThreadDeployer {
+    pub fn new(recv_timeout: std::time::Duration) -> Self {
+        Self {
+            recv_timeout,
+            pending: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl Default for ThreadDeployer {
+    fn default() -> Self {
+        Self::new(crate::channel::RECV_TIMEOUT)
+    }
+}
+
+impl Deployer for ThreadDeployer {
+    fn orchestrator(&self) -> &str {
+        "sim-threads"
+    }
+
+    fn deploy(
+        &self,
+        cfg: WorkerConfig,
+        job: &Arc<JobRuntime>,
+        notifier: Arc<Notifier>,
+    ) -> Result<PodHandle> {
+        let park = WorkerPark::blocking(self.recv_timeout);
+        let env = WorkerEnv::with_park(cfg, job.clone(), park)?;
+        let worker_id = env.cfg.id.clone();
+        let compute = env.cfg.compute.clone();
+        let status = StatusCell::new();
+        self.pending
+            .lock()
+            .unwrap()
+            .push((env, notifier, status.clone()));
+        Ok(PodHandle {
+            worker_id,
+            compute,
+            status,
+        })
+    }
+
+    fn start(&self) -> Result<()> {
+        let pending = std::mem::take(&mut *self.pending.lock().unwrap());
+        for (env, notifier, status) in pending {
+            let worker_id = env.cfg.id.clone();
+            std::thread::Builder::new()
+                .name(format!("pod-{worker_id}"))
+                .spawn(move || {
+                    status.set(PodStatus::Running);
+                    let outcome = agent::run_worker(env, notifier);
+                    status.set(match outcome {
+                        Ok(()) => PodStatus::Completed,
+                        Err(e) => PodStatus::Failed(format!("{e:#}")),
+                    });
+                })?;
+        }
+        Ok(())
     }
 }
 
@@ -104,10 +275,14 @@ impl DeployerSet {
         Self::default()
     }
 
-    /// A set with the sim orchestrator pre-registered.
+    /// A set with the sim orchestrator (cooperative fabric) pre-registered.
+    /// Note: `Controller::submit` routes "sim" pods through a fresh
+    /// per-job deployer configured from `JobOptions::executor`; this entry
+    /// marks the orchestrator as known (lookups, custom-orchestrator
+    /// error paths) rather than executing jobs itself.
     pub fn with_sim() -> Self {
         let mut s = Self::new();
-        s.register(Arc::new(SimDeployer));
+        s.register(Arc::new(SimDeployer::default()));
         s
     }
 
@@ -136,20 +311,35 @@ mod tests {
     }
 
     // Pod lifecycle end-to-end is covered by controller integration tests;
-    // here we check the failure path surfaces through the status.
+    // here we check the failure path surfaces through the status for both
+    // orchestrators.
     #[test]
-    fn failed_worker_reports_failed_status() {
+    fn failed_worker_reports_failed_status_cooperative() {
         use crate::roles::tests_support::tiny_job_runtime;
         let (job, cfgs) = tiny_job_runtime();
         let mut bad = cfgs[0].clone();
         bad.role = "no-such-role".into();
-        let env = WorkerEnv::new(bad, job).unwrap();
-        let d = SimDeployer;
+        let d = SimDeployer::new(1);
         let notifier = Arc::new(Notifier::new());
         let rx = notifier.subscribe(Some(EventKind::WorkerStatus), None);
-        let mut pod = d.deploy(env, notifier).unwrap();
+        let pod = d.deploy(bad, &job, notifier).unwrap();
+        d.start().unwrap();
         let status = pod.wait();
         assert!(matches!(status, PodStatus::Failed(_)), "{status:?}");
         assert!(rx.try_iter().count() >= 1);
+    }
+
+    #[test]
+    fn failed_worker_reports_failed_status_threaded() {
+        use crate::roles::tests_support::tiny_job_runtime;
+        let (job, cfgs) = tiny_job_runtime();
+        let mut bad = cfgs[0].clone();
+        bad.role = "no-such-role".into();
+        let d = ThreadDeployer::default();
+        let notifier = Arc::new(Notifier::new());
+        let pod = d.deploy(bad, &job, notifier).unwrap();
+        d.start().unwrap();
+        let status = pod.wait();
+        assert!(matches!(status, PodStatus::Failed(_)), "{status:?}");
     }
 }

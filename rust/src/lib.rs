@@ -14,6 +14,11 @@
 //! * the **channel** primitive with the paper's Table-2 API and pluggable
 //!   communication backends over a virtual-time network model ([`channel`],
 //!   [`net`]),
+//! * the **cooperative worker fabric** — a discrete-event, virtual-time
+//!   scheduler that multiplexes thousands of logical workers over a
+//!   bounded runner pool ([`sched`]), replacing thread-per-worker
+//!   deployment and unlocking the 10,000-trainer `sim::run_scale`
+//!   scenario,
 //! * the **tasklet/composer** developer programming model (Table 1 surgery
 //!   API) and the built-in role workflows ([`workflow`], [`roles`]),
 //! * FL **algorithms** and **selection** policies from the paper's feature
@@ -44,6 +49,7 @@ pub mod proputil;
 pub mod registry;
 pub mod roles;
 pub mod runtime;
+pub mod sched;
 pub mod select;
 pub mod sim;
 pub mod store;

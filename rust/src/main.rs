@@ -9,6 +9,8 @@
 //!               [--server-opt avg|adam|yogi|adagrad] [--selection all|random|oort]
 //! flame fig10   [--rounds 36]                             # §6.1 scenario
 //! flame fig11   [--rounds 20]                             # §6.2 scenario
+//! flame scale   [--trainers 10000 --groups 100 --rounds 3] \
+//!               [--executor coop|threads] [--runners N]   # 10k-worker fabric demo
 //! flame spec    --topo hybrid --trainers 50 --groups 5    # print TAG JSON
 //! ```
 
@@ -215,12 +217,37 @@ fn cmd_fig11(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_scale(args: &Args) -> Result<()> {
+    let trainers = args.get_usize("trainers", 10_000)?;
+    let groups = args.get_usize("groups", 100)?;
+    let rounds = args.get_u64("rounds", 3)?;
+    let mut o = sim::SimOptions::scale();
+    o.executor = match args.get("executor", "coop").as_str() {
+        "coop" | "cooperative" => flame::control::Executor::Cooperative {
+            runners: args.get_usize("runners", 0)?,
+        },
+        "threads" | "thread-per-worker" => flame::control::Executor::ThreadPerWorker,
+        other => bail!("unknown executor '{other}' (coop|threads)"),
+    };
+    let t0 = std::time::Instant::now();
+    let report = sim::run_scale(trainers, groups, rounds, &o)?;
+    println!(
+        "scale: workers={} rounds={rounds} wall={:.2}s vtime={:.2}s acc={:.3} bytes={}",
+        report.workers,
+        t0.elapsed().as_secs_f64(),
+        report.vtime_s,
+        report.final_acc.unwrap_or(f64::NAN),
+        report.total_bytes
+    );
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: flame <expand|spec|run|fig10|fig11> [--flags]");
+            eprintln!("usage: flame <expand|spec|run|fig10|fig11|scale> [--flags]");
             std::process::exit(2);
         }
     };
@@ -230,6 +257,7 @@ fn main() {
         "run" => cmd_run(&args),
         "fig10" => cmd_fig10(&args),
         "fig11" => cmd_fig11(&args),
+        "scale" => cmd_scale(&args),
         other => bail!("unknown command '{other}'"),
     });
     if let Err(e) = result {

@@ -105,8 +105,18 @@ struct Shaping {
     uplink: HashMap<String, Vec<TimedSpec>>,
     /// per-node ingress shaping (applies to the receiving side).
     downlink: HashMap<String, Vec<TimedSpec>>,
-    /// exact (from, to) overrides — strongest precedence.
-    pair: HashMap<(String, String), Vec<TimedSpec>>,
+    /// exact (from -> to) overrides — strongest precedence. Nested so the
+    /// hot path can look up by `&str` without allocating a key pair.
+    pair: HashMap<String, HashMap<String, Vec<TimedSpec>>>,
+}
+
+impl Shaping {
+    /// No rules at all: every hop is the default link. This is the common
+    /// case for large-scale runs, where per-message allocation-free lookup
+    /// matters (a 10k-worker round is hundreds of thousands of hops).
+    fn is_trivial(&self) -> bool {
+        self.uplink.is_empty() && self.downlink.is_empty() && self.pair.is_empty()
+    }
 }
 
 /// The shared virtual network. Cheap to clone handles around via `Arc`.
@@ -187,7 +197,9 @@ impl VirtualNet {
             .write()
             .unwrap()
             .pair
-            .entry((from.to_string(), to.to_string()))
+            .entry(from.to_string())
+            .or_default()
+            .entry(to.to_string())
             .or_default()
             .push(TimedSpec {
                 spec,
@@ -202,9 +214,13 @@ impl VirtualNet {
     /// bandwidth; latency approximated by the max of the shapers').
     fn hop(&self, from: &str, to: &str, at: VTime) -> LinkSpec {
         let g = self.shaping.read().unwrap();
+        if g.is_trivial() {
+            return g.default;
+        }
         if let Some(s) = g
             .pair
-            .get(&(from.to_string(), to.to_string()))
+            .get(from)
+            .and_then(|m| m.get(to))
             .and_then(|r| lookup(r, at))
         {
             return s;

@@ -10,11 +10,174 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::channel::{ChannelHandle, Message, Payload};
 
-/// Weighted mean all-reduce over the members of `chan`'s group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RingPhase {
+    Scatter,
+    Gather,
+    Done,
+}
+
+/// Resumable ring all-reduce: the collective as an explicit state machine.
+///
+/// The ring protocol interleaves `k-1` send/receive pairs per phase; under
+/// the cooperative worker fabric any of those receives can yield
+/// [`crate::sched::Pending`] out of the calling tasklet. Holding the
+/// protocol state (phase, step, whether this step's chunk was already
+/// sent) in a value the role context owns makes the enclosing tasklet
+/// re-entrant: on resume, [`poll`](Self::poll) continues exactly where the
+/// collective left off and never duplicates a send.
+pub struct RingAllReduce {
+    buf: Vec<f32>,
+    bounds: Vec<(usize, usize)>,
+    left: String,
+    right: String,
+    my_idx: usize,
+    k: usize,
+    phase: RingPhase,
+    step: usize,
+    sent: bool,
+    mean: bool,
+}
+
+impl RingAllReduce {
+    /// Sum all-reduce over `buf`.
+    pub fn sum(chan: &ChannelHandle, buf: Vec<f32>) -> Self {
+        Self::new(chan, buf, false)
+    }
+
+    /// Weighted-mean all-reduce: each member contributes
+    /// `(values, weight)`; everyone ends with `Σ w_i·x_i / Σ w_i`.
+    pub fn mean(chan: &ChannelHandle, values: &[f32], weight: f32) -> Self {
+        let mut buf: Vec<f32> = values.iter().map(|v| v * weight).collect();
+        buf.push(weight);
+        Self::new(chan, buf, true)
+    }
+
+    fn new(chan: &ChannelHandle, buf: Vec<f32>, mean: bool) -> Self {
+        let me = chan.worker_id().to_string();
+        let mut members = chan.ends();
+        members.push(me.clone());
+        members.sort();
+        let k = members.len();
+        let my_idx = members.iter().position(|m| *m == me).unwrap();
+        let right = members[(my_idx + 1) % k].clone();
+        let left = members[(my_idx + k - 1) % k].clone();
+        // chunk boundaries (first chunks take the remainder)
+        let n = buf.len();
+        let bounds: Vec<(usize, usize)> = (0..k)
+            .map(|c| {
+                let base = n / k;
+                let extra = n % k;
+                let start = c * base + c.min(extra);
+                let len = base + usize::from(c < extra);
+                (start, start + len)
+            })
+            .collect();
+        Self {
+            buf,
+            bounds,
+            left,
+            right,
+            my_idx,
+            k,
+            phase: if k == 1 { RingPhase::Done } else { RingPhase::Scatter },
+            step: 0,
+            sent: false,
+            mean,
+        }
+    }
+
+    /// Drive the collective to completion. A blocking receive inside waits;
+    /// a cooperative one yields [`crate::sched::Pending`] out of this call
+    /// with all protocol state retained — call `poll` again on resume.
+    pub fn poll(&mut self, chan: &ChannelHandle) -> Result<()> {
+        loop {
+            let kind = match self.phase {
+                RingPhase::Done => return Ok(()),
+                RingPhase::Scatter => "ar_sr",
+                RingPhase::Gather => "ar_ag",
+            };
+            let (send_c, recv_c) = match self.phase {
+                // scatter-reduce: after step s, chunk (i-s-1) mod k holds partials
+                RingPhase::Scatter => (
+                    (self.my_idx + self.k - self.step) % self.k,
+                    (self.my_idx + self.k - self.step - 1) % self.k,
+                ),
+                // all-gather: circulate the completed chunks
+                RingPhase::Gather => (
+                    (self.my_idx + 1 + self.k - self.step) % self.k,
+                    (self.my_idx + self.k - self.step) % self.k,
+                ),
+                RingPhase::Done => unreachable!(),
+            };
+            if !self.sent {
+                let (s0, s1) = self.bounds[send_c];
+                let msg =
+                    Message::floats(kind, self.step as u64, Arc::new(self.buf[s0..s1].to_vec()));
+                chan.send(&self.right, msg)?;
+                self.sent = true;
+            }
+            let got = chan.recv_kind(&self.left, kind)?; // may yield Pending
+            let Payload::Floats(chunk) = got.payload else {
+                bail!("allreduce chunk without floats");
+            };
+            let (r0, r1) = self.bounds[recv_c];
+            match self.phase {
+                RingPhase::Scatter => {
+                    for (dst, src) in self.buf[r0..r1].iter_mut().zip(chunk.iter()) {
+                        *dst += src;
+                    }
+                }
+                RingPhase::Gather => self.buf[r0..r1].copy_from_slice(&chunk),
+                RingPhase::Done => unreachable!(),
+            }
+            self.sent = false;
+            self.step += 1;
+            if self.step == self.k - 1 {
+                self.step = 0;
+                self.phase = match self.phase {
+                    RingPhase::Scatter => RingPhase::Gather,
+                    RingPhase::Gather => RingPhase::Done,
+                    RingPhase::Done => unreachable!(),
+                };
+            }
+        }
+    }
+
+    /// Consume a completed sum all-reduce.
+    pub fn into_sum(self) -> Result<Vec<f32>> {
+        if self.phase != RingPhase::Done {
+            bail!("ring allreduce consumed before completion");
+        }
+        Ok(self.buf)
+    }
+
+    /// Consume a completed mean all-reduce (divides by the total weight).
+    pub fn into_mean(self) -> Result<Vec<f32>> {
+        if self.phase != RingPhase::Done {
+            bail!("ring allreduce consumed before completion");
+        }
+        if !self.mean {
+            bail!("into_mean on a sum all-reduce");
+        }
+        let mut buf = self.buf;
+        let wsum = buf.pop().context("mean all-reduce buffer empty")?;
+        if wsum <= 0.0 {
+            bail!("ring allreduce: total weight is zero");
+        }
+        for v in buf.iter_mut() {
+            *v /= wsum;
+        }
+        Ok(buf)
+    }
+}
+
+/// Weighted mean all-reduce over the members of `chan`'s group (blocking
+/// convenience over [`RingAllReduce`]).
 ///
 /// Each member contributes `(weights, weight_scalar)`; everyone ends with
 /// the identical weighted mean `Σ w_i·x_i / Σ w_i`. Deterministic: the ring
@@ -24,76 +187,20 @@ pub fn ring_allreduce_mean(
     values: &mut [f32],
     weight: f32,
 ) -> Result<()> {
-    // contribution vector: [x * w ..., w]
-    let mut buf: Vec<f32> = values.iter().map(|v| v * weight).collect();
-    buf.push(weight);
-    ring_allreduce_sum(chan, &mut buf)?;
-    let wsum = *buf.last().unwrap();
-    if wsum <= 0.0 {
-        bail!("ring allreduce: total weight is zero");
-    }
-    for (dst, src) in values.iter_mut().zip(&buf) {
-        *dst = src / wsum;
-    }
+    let mut op = RingAllReduce::mean(chan, values, weight);
+    op.poll(chan)?;
+    let out = op.into_mean()?;
+    values.copy_from_slice(&out);
     Ok(())
 }
 
-/// In-place sum all-reduce via ring scatter-reduce + all-gather.
+/// In-place sum all-reduce via ring scatter-reduce + all-gather (blocking
+/// convenience over [`RingAllReduce`]).
 pub fn ring_allreduce_sum(chan: &ChannelHandle, buf: &mut [f32]) -> Result<()> {
-    let me = chan.worker_id().to_string();
-    let mut members = chan.ends();
-    members.push(me.clone());
-    members.sort();
-    let k = members.len();
-    if k == 1 {
-        return Ok(());
-    }
-    let my_idx = members.iter().position(|m| *m == me).unwrap();
-    let right = &members[(my_idx + 1) % k];
-    let left = &members[(my_idx + k - 1) % k];
-
-    // chunk boundaries (first chunks take the remainder)
-    let n = buf.len();
-    let bounds: Vec<(usize, usize)> = (0..k)
-        .map(|c| {
-            let base = n / k;
-            let extra = n % k;
-            let start = c * base + c.min(extra);
-            let len = base + usize::from(c < extra);
-            (start, start + len)
-        })
-        .collect();
-
-    // scatter-reduce: after step s, chunk (i - s - 1) mod k holds partials
-    for step in 0..k - 1 {
-        let send_c = (my_idx + k - step) % k;
-        let recv_c = (my_idx + k - step - 1) % k;
-        let (s0, s1) = bounds[send_c];
-        let msg = Message::floats("ar_sr", step as u64, Arc::new(buf[s0..s1].to_vec()));
-        chan.send(right, msg)?;
-        let got = chan.recv_kind(left, "ar_sr")?;
-        let Payload::Floats(chunk) = got.payload else {
-            bail!("allreduce chunk without floats");
-        };
-        let (r0, r1) = bounds[recv_c];
-        for (dst, src) in buf[r0..r1].iter_mut().zip(chunk.iter()) {
-            *dst += src;
-        }
-    }
-    // all-gather: circulate the completed chunks
-    for step in 0..k - 1 {
-        let send_c = (my_idx + 1 + k - step) % k;
-        let recv_c = (my_idx + k - step) % k;
-        let (s0, s1) = bounds[send_c];
-        let msg = Message::floats("ar_ag", step as u64, Arc::new(buf[s0..s1].to_vec()));
-        chan.send(right, msg)?;
-        let got = chan.recv_kind(left, "ar_ag")?;
-        let Payload::Floats(chunk) = got.payload else {
-            bail!("allreduce chunk without floats");
-        };
-        let (r0, r1) = bounds[recv_c];
-        buf[r0..r1].copy_from_slice(&chunk);
-    }
+    let mut op = RingAllReduce::sum(chan, buf.to_vec());
+    op.poll(chan)?;
+    let out = op.into_sum()?;
+    buf.copy_from_slice(&out);
     Ok(())
 }
 

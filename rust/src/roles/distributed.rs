@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use crate::workflow::Composer;
 
-use super::collective::{is_delegate, ring_allreduce_mean};
+use super::collective::{is_delegate, RingAllReduce};
 use super::{program, Program, WorkerEnv};
 
 pub struct DistributedCtx {
@@ -25,6 +25,9 @@ pub struct DistributedCtx {
     batch_pos: usize,
     round: u64,
     last_loss: f64,
+    /// In-flight ring all-reduce; persisted so `allreduce` is re-entrant
+    /// across cooperative yields.
+    ring_op: Option<RingAllReduce>,
     done: bool,
 }
 
@@ -66,11 +69,18 @@ fn train(c: &mut DistributedCtx) -> Result<()> {
 }
 
 fn allreduce(c: &mut DistributedCtx) -> Result<()> {
-    let ring = c.env.chan("ring-channel")?;
     let samples = c.data.len() as f32;
-    let mut flat = std::mem::take(&mut c.flat);
-    ring_allreduce_mean(ring, &mut flat, samples)?;
-    c.flat = flat;
+    if c.ring_op.is_none() {
+        let ring = c.env.chan("ring-channel")?;
+        c.ring_op = Some(RingAllReduce::mean(ring, &c.flat, samples));
+    }
+    {
+        let ring = c.env.chan("ring-channel")?;
+        c.ring_op.as_mut().unwrap().poll(ring)?; // Pending propagates, op retained
+    }
+    let op = c.ring_op.take().unwrap();
+    c.flat = op.into_mean()?;
+    let ring = c.env.chan("ring-channel")?;
     // one member records the job-level series
     if is_delegate(ring) {
         let now = c.env.now();
@@ -105,6 +115,7 @@ pub fn build(env: WorkerEnv) -> Result<Box<dyn Program>> {
         batch_pos: 0,
         round: 0,
         last_loss: f64::NAN,
+        ring_op: None,
         done: false,
     };
     Ok(program(chain(), ctx))

@@ -25,6 +25,7 @@ use anyhow::{bail, Context, Result};
 use crate::algos::{AggregationPolicy, FedBuff, ServerOpt};
 use crate::channel::{Message, Payload};
 use crate::json::Json;
+use crate::net::VTime;
 use crate::select::{make_selector, ClientStats, Selector};
 use crate::workflow::{Composer, Tasklet};
 
@@ -48,6 +49,10 @@ pub struct GlobalCtx {
     /// Hybrid FL: number of clusters expected to upload (delegates only);
     /// None for non-hybrid topologies.
     hybrid_clusters: Option<usize>,
+    /// Updates received so far this round. Persisted in the context so the
+    /// collect tasklet is re-entrant: a cooperative yield mid-collection
+    /// keeps what already arrived and resumes the receive loop.
+    pending_updates: Vec<(String, Message, VTime)>,
     pub done: bool,
 }
 
@@ -87,6 +92,7 @@ impl GlobalCtx {
             round_start: 0,
             ack_updates: coordinated,
             hybrid_clusters,
+            pending_updates: Vec::new(),
             done: false,
         }
     }
@@ -157,34 +163,43 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
         return Ok(());
     }
     let chan_name = c.children_channel();
-    // Collect message-by-message in arrival order (not as a barrier) so
-    // that CO-FL acks reflect each child's *own* upload delay rather than
-    // the round's straggler barrier.
-    let got = {
-        let chan = c.env.chan(chan_name)?;
-        let expected = match c.hybrid_clusters {
-            // Hybrid: one update per cluster, from whichever delegate.
-            Some(k) => k,
-            None => c.selected.len(),
-        };
-        let mut got = Vec::with_capacity(expected);
-        for _ in 0..expected {
-            let (from, msg, arrival) = chan.recv_any_kind_timed("update")?;
-            if c.hybrid_clusters.is_none() && !c.selected.contains(&from) {
-                anyhow::bail!("unexpected update from unselected child '{from}'");
-            }
-            if c.ack_updates {
-                // the ack carries the update's own virtual arrival time so
-                // the sender's delay measurement is independent of this
-                // node's (straggler-merged) clock
-                let mut meta = Json::obj();
-                meta.insert("arrival_us", arrival);
-                chan.send(&from, Message::control("ack", c.round).with_meta(Json::Obj(meta)))?;
-            }
-            got.push((from, msg));
-        }
-        got
+    // Collect message-by-message; partial progress lives in
+    // `c.pending_updates`, making this tasklet re-entrant across
+    // cooperative yields (nothing is re-received, no ack is duplicated).
+    let expected = match c.hybrid_clusters {
+        // Hybrid: one update per cluster, from whichever delegate.
+        Some(k) => k,
+        None => c.selected.len(),
     };
+    while c.pending_updates.len() < expected {
+        let (from, msg, arrival) = {
+            let chan = c.env.chan(chan_name)?;
+            chan.recv_any_kind_timed("update")?
+        };
+        if c.hybrid_clusters.is_none() && !c.selected.contains(&from) {
+            anyhow::bail!("unexpected update from unselected child '{from}'");
+        }
+        c.pending_updates.push((from, msg, arrival));
+    }
+    let mut got = std::mem::take(&mut c.pending_updates);
+    // Aggregate in virtual-arrival order with a deterministic sender
+    // tie-break, so threaded and cooperative execution produce
+    // bit-identical weighted sums.
+    got.sort_by(|a, b| (a.2, &a.0).cmp(&(b.2, &b.0)));
+    if c.ack_updates {
+        // Acks go out after the collection barrier (send time = the
+        // round's merged clock, independent of consumption order — the
+        // same on every executor). Each ack carries the update's own
+        // virtual arrival time, so the sender's delay measurement is
+        // independent of this node's (straggler-merged) clock.
+        let chan = c.env.chan(chan_name)?;
+        for (from, _, arrival) in &got {
+            let mut meta = Json::obj();
+            meta.insert("arrival_us", *arrival);
+            chan.send(from, Message::control("ack", c.round).with_meta(Json::Obj(meta)))?;
+        }
+    }
+    let got: Vec<(String, Message)> = got.into_iter().map(|(f, m, _)| (f, m)).collect();
     let mut updates = Vec::with_capacity(got.len());
     let mut samples = Vec::with_capacity(got.len());
     for (from, msg) in &got {

@@ -21,7 +21,7 @@ use crate::channel::{Message, Payload};
 use crate::json::Json;
 use crate::workflow::Composer;
 
-use super::collective::{is_delegate, ring_allreduce_mean};
+use super::collective::{is_delegate, RingAllReduce};
 use super::{program, Program, WorkerEnv};
 
 pub struct HybridCtx {
@@ -36,6 +36,9 @@ pub struct HybridCtx {
     round: u64,
     cluster_samples: f32,
     last_loss: f64,
+    /// In-flight ring all-reduce; persisted so `cluster_agg` is re-entrant
+    /// across cooperative yields.
+    ring_op: Option<RingAllReduce>,
     done: bool,
 }
 
@@ -107,17 +110,27 @@ fn train(c: &mut HybridCtx) -> Result<()> {
     Ok(())
 }
 
-/// Ring-allreduce the cluster model over the fast p2p channel.
+/// Ring-allreduce the cluster model over the fast p2p channel. The
+/// collective's state machine lives in the context, so a cooperative yield
+/// mid-ring resumes the protocol instead of restarting (and duplicating
+/// sends).
 fn cluster_agg(c: &mut HybridCtx) -> Result<()> {
     if c.done {
         return Ok(());
     }
-    let ring = c.env.chan("ring-channel")?;
     let my_samples = c.data.len() as f32;
-    let mut flat = std::mem::take(&mut c.flat);
-    ring_allreduce_mean(ring, &mut flat, my_samples)?;
-    c.flat = flat;
+    if c.ring_op.is_none() {
+        let ring = c.env.chan("ring-channel")?;
+        c.ring_op = Some(RingAllReduce::mean(ring, &c.flat, my_samples));
+    }
+    {
+        let ring = c.env.chan("ring-channel")?;
+        c.ring_op.as_mut().unwrap().poll(ring)?; // Pending propagates, op retained
+    }
+    let op = c.ring_op.take().unwrap();
+    c.flat = op.into_mean()?;
     // cluster sample total for upstream weighting
+    let ring = c.env.chan("ring-channel")?;
     let k = ring.ends().len() + 1;
     c.cluster_samples = my_samples * k as f32; // shards are equal-sized by construction
     Ok(())
@@ -176,6 +189,7 @@ pub fn build(env: WorkerEnv) -> Result<Box<dyn Program>> {
         round: 0,
         cluster_samples: 0.0,
         last_loss: f64::NAN,
+        ring_op: None,
         done: false,
     };
     Ok(program(chain(), ctx))

@@ -28,13 +28,15 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::algos::TrainingConfig;
-use crate::channel::{ChannelHandle, ChannelManager};
+use crate::channel::{ChannelHandle, ChannelManager, RECV_TIMEOUT};
 use crate::data::Dataset;
 use crate::metrics::MetricsHub;
 use crate::net::{VClock, VTime};
 use crate::prng::Rng;
 use crate::runtime::{Compute, ComputeTimeModel};
+use crate::sched::WorkerPark;
 use crate::tag::{JobSpec, WorkerConfig};
+use crate::workflow::StepStatus;
 
 /// Everything shared by all workers of one job deployment.
 pub struct JobRuntime {
@@ -69,8 +71,21 @@ pub struct WorkerEnv {
 }
 
 impl WorkerEnv {
-    /// Join all channels listed in the worker config and build the env.
+    /// Join all channels listed in the worker config and build the env in
+    /// blocking mode (thread-per-worker execution, direct tests).
     pub fn new(cfg: WorkerConfig, job: Arc<JobRuntime>) -> Result<Self> {
+        Self::with_park(cfg, job, WorkerPark::blocking(RECV_TIMEOUT))
+    }
+
+    /// Join all channels listed in the worker config and build the env.
+    /// The park decides how this worker's receives wait: blocking Condvar
+    /// (with a configurable timeout) or cooperative yield to the
+    /// [`crate::sched`] worker fabric.
+    pub fn with_park(
+        cfg: WorkerConfig,
+        job: Arc<JobRuntime>,
+        park: Arc<WorkerPark>,
+    ) -> Result<Self> {
         let clock = Arc::new(Mutex::new(VClock::default()));
         let mut chans = BTreeMap::new();
         for (ch_name, group) in &cfg.channels {
@@ -78,13 +93,14 @@ impl WorkerEnv {
                 .spec
                 .channel(ch_name)
                 .with_context(|| format!("worker '{}' references unknown channel '{ch_name}'", cfg.id))?;
-            let handle = job.chan_mgr.join(
+            let handle = job.chan_mgr.join_with_park(
                 ch_name,
                 group,
                 &cfg.id,
                 &cfg.role,
                 chan.backend,
                 clock.clone(),
+                park.clone(),
             )?;
             chans.insert(ch_name.clone(), handle);
         }
@@ -134,18 +150,41 @@ impl WorkerEnv {
 }
 
 /// A runnable role program (a tasklet chain bound to its context).
+///
+/// Programs are *steppable*: [`step`](Program::step) drives the chain
+/// until it completes or suspends at a yielding receive, which is what the
+/// cooperative worker fabric polls. [`run`](Program::run) is the blocking
+/// convenience (a worker whose receives block never suspends).
 pub trait Program: Send {
-    fn run(&mut self) -> Result<()>;
+    /// Drive the program until completion or a cooperative yield.
+    fn step(&mut self) -> Result<StepStatus>;
+
+    /// Run to completion (blocking execution mode).
+    fn run(&mut self) -> Result<()> {
+        match self.step()? {
+            StepStatus::Done => Ok(()),
+            StepStatus::Pending => {
+                bail!("worker program yielded outside a cooperative scheduler")
+            }
+        }
+    }
 }
 
 struct ChainProgram<C: Send> {
     composer: crate::workflow::Composer<C>,
     ctx: C,
+    /// Resume path of the suspended tasklet (empty = start of chain).
+    cursor: Vec<usize>,
 }
 
 impl<C: Send> Program for ChainProgram<C> {
-    fn run(&mut self) -> Result<()> {
-        self.composer.run(&mut self.ctx)
+    fn step(&mut self) -> Result<StepStatus> {
+        let resume = std::mem::take(&mut self.cursor);
+        let (status, pend) = self.composer.step_from(&resume, &mut self.ctx)?;
+        if status == StepStatus::Pending {
+            self.cursor = pend;
+        }
+        Ok(status)
     }
 }
 
@@ -153,7 +192,11 @@ pub(crate) fn program<C: Send + 'static>(
     composer: crate::workflow::Composer<C>,
     ctx: C,
 ) -> Box<dyn Program> {
-    Box::new(ChainProgram { composer, ctx })
+    Box::new(ChainProgram {
+        composer,
+        ctx,
+        cursor: Vec::new(),
+    })
 }
 
 /// Build the program for a worker, dispatching on its role name and the

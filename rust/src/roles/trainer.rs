@@ -101,7 +101,13 @@ fn init(c: &mut TrainerCtx) -> Result<()> {
     let d = c.env.job.compute.d_pad();
     c.flat = vec![0.0; d];
     c.global = vec![0.0; d];
-    c.h = vec![0.0; d];
+    // FedDyn drift state only when the algorithm needs it: at 10k trainers
+    // an unused third model vector per worker is hundreds of MB of RSS.
+    c.h = if matches!(c.env.job.tcfg.client, ClientAlgo::Dyn) {
+        vec![0.0; d]
+    } else {
+        Vec::new()
+    };
     Ok(())
 }
 

@@ -1,0 +1,503 @@
+//! Discrete-event, virtual-time cooperative scheduler — the worker fabric.
+//!
+//! The seed deployed one OS thread per expanded worker and blocked each on
+//! a `Condvar` mailbox, which caps every topology at the OS-thread limit
+//! (~50 trainers in practice). This module replaces that with the
+//! timely-dataflow idiom: a *small* set of runner threads drives *many*
+//! logical workers cooperatively. A worker runs until its next blocking
+//! receive; if the mail is not there yet, the receive registers a wait
+//! condition on the mailbox and yields a [`Pending`] signal back through
+//! the tasklet chain. The scheduler parks the worker and resumes it — in
+//! **virtual-arrival order** — once a matching message is delivered.
+//!
+//! Pieces:
+//!
+//! * [`Pending`] — the yield signal. It travels as an `anyhow` error so
+//!   role tasklets need no new plumbing; the chain executor
+//!   ([`crate::workflow::Composer`]) recognises it and suspends the chain
+//!   at the yielding tasklet (tasklets are re-entrant up to their first
+//!   blocking receive — see the workflow docs).
+//! * [`WorkerPark`] — per-worker execution mode shared by all of the
+//!   worker's channel handles: `blocking` (legacy Condvar waits, used by
+//!   direct channel tests and the thread-per-worker deployer) or
+//!   `cooperative` (yield to the scheduler).
+//! * [`Waker`] — handed to mailboxes; delivery calls `wake(arrival)` when
+//!   the parked worker's wait condition is satisfied.
+//! * [`Scheduler`] — the ready heap (ordered by `(virtual time, task id)`)
+//!   plus an M:N pool of runner threads ([`Scheduler::run`]). When no task
+//!   is ready and none is running but live tasks remain, the fabric has a
+//!   *virtual-time deadlock*; the scheduler fails the stuck workers
+//!   immediately instead of burning a wall-clock timeout.
+//!
+//! Deadlock detection assumes every message producer for cooperative
+//! workers is itself a task on this scheduler. A job that mixes
+//! cooperative workers with workers on external threads (a custom
+//! orchestrator) could trip the detector while an external producer is
+//! still about to send; such mixed deployments should run the sim side
+//! with `Executor::ThreadPerWorker`.
+//!
+//! The scheduler knows nothing about channels or roles: it drives
+//! [`RunnableTask`] objects. The worker-side task lives in
+//! [`crate::agent::WorkerTask`]; mail delivery lives in
+//! [`crate::channel::ChannelManager`].
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::net::VTime;
+
+// ------------------------------------------------------------ yield signal
+
+/// Marker error: the worker cannot progress until new mail arrives.
+///
+/// Raised by channel receives in cooperative mode; recognised by the chain
+/// executor, which suspends the chain instead of failing the worker.
+#[derive(Debug, Clone, Copy)]
+pub struct Pending;
+
+impl fmt::Display for Pending {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "worker is pending on mail (cooperative yield)")
+    }
+}
+
+impl std::error::Error for Pending {}
+
+/// Build the yield signal as an `anyhow` error.
+pub fn pending_err() -> anyhow::Error {
+    anyhow::Error::new(Pending)
+}
+
+/// Is this error the cooperative yield signal (possibly wrapped in
+/// context)?
+pub fn is_pending(err: &anyhow::Error) -> bool {
+    err.downcast_ref::<Pending>().is_some()
+}
+
+// ------------------------------------------------------------- worker park
+
+/// Per-worker execution mode, shared by every channel handle of the worker.
+pub struct WorkerPark {
+    cooperative: bool,
+    timeout: Duration,
+    waker: Mutex<Option<Waker>>,
+}
+
+impl WorkerPark {
+    /// Legacy blocking mode: receives wait on the mailbox Condvar up to
+    /// `timeout` (the configurable `RECV_TIMEOUT`).
+    pub fn blocking(timeout: Duration) -> Arc<Self> {
+        Arc::new(Self {
+            cooperative: false,
+            timeout,
+            waker: Mutex::new(None),
+        })
+    }
+
+    /// Cooperative mode: receives yield [`Pending`] to the scheduler. No
+    /// wall-clock timeout is needed — a stuck deployment is detected as a
+    /// virtual-time deadlock the moment the fabric goes idle.
+    pub fn cooperative() -> Arc<Self> {
+        Arc::new(Self {
+            cooperative: true,
+            timeout: Duration::ZERO,
+            waker: Mutex::new(None),
+        })
+    }
+
+    pub fn is_cooperative(&self) -> bool {
+        self.cooperative
+    }
+
+    /// Blocking-mode receive timeout.
+    pub fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// Bind the scheduler-side waker (after the task is spawned).
+    pub fn set_waker(&self, w: Waker) {
+        *self.waker.lock().unwrap() = Some(w);
+    }
+
+    pub fn waker(&self) -> Option<Waker> {
+        self.waker.lock().unwrap().clone()
+    }
+}
+
+// --------------------------------------------------------------- the tasks
+
+/// Outcome of driving a task once.
+pub enum PollOutcome {
+    /// The task finished (successfully or not — the task records its own
+    /// terminal status).
+    Done,
+    /// The task yielded; it parked a wait condition on some mailbox and
+    /// will be woken through its [`Waker`].
+    Parked,
+}
+
+/// A cooperatively scheduled unit (one worker).
+pub trait RunnableTask: Send {
+    /// Stable name for diagnostics (the worker id).
+    fn name(&self) -> &str;
+
+    /// Drive the task until it completes or yields.
+    fn poll(&mut self) -> PollOutcome;
+
+    /// Terminate a parked task that can never resume (virtual-time
+    /// deadlock). The task records the failure as its terminal status.
+    fn fail(&mut self, reason: &str);
+}
+
+// --------------------------------------------------------------- scheduler
+
+pub type TaskId = usize;
+
+#[derive(Clone, Copy)]
+enum TaskState {
+    Ready,
+    Running { wake_pending: Option<VTime> },
+    Waiting,
+    Done,
+}
+
+struct TaskSlot {
+    state: TaskState,
+    task: Option<Box<dyn RunnableTask>>,
+}
+
+struct SchedState {
+    tasks: Vec<TaskSlot>,
+    /// Min-heap of `(virtual wake time, task id)` — virtual-arrival order.
+    ready: BinaryHeap<Reverse<(VTime, TaskId)>>,
+    /// Tasks not yet Done.
+    live: usize,
+    /// Tasks currently being polled by a runner.
+    running: usize,
+}
+
+/// Shared scheduler core (referenced by [`Waker`]s inside mailboxes).
+pub struct SchedShared {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+}
+
+/// Wakes one parked task; cheap to clone into mailbox wait slots.
+#[derive(Clone)]
+pub struct Waker {
+    shared: Arc<SchedShared>,
+    task: TaskId,
+}
+
+impl Waker {
+    /// Mark the task runnable at virtual time `at` (the matching message's
+    /// arrival). Safe to call at any time: a wake racing the task's own
+    /// park is latched and applied when the poll returns.
+    pub fn wake(&self, at: VTime) {
+        let mut g = self.shared.state.lock().unwrap();
+        let push = {
+            let slot = &mut g.tasks[self.task];
+            match slot.state {
+                TaskState::Running { wake_pending } => {
+                    let at = wake_pending.map_or(at, |p| p.min(at));
+                    slot.state = TaskState::Running {
+                        wake_pending: Some(at),
+                    };
+                    false
+                }
+                TaskState::Waiting => {
+                    slot.state = TaskState::Ready;
+                    true
+                }
+                TaskState::Ready | TaskState::Done => false,
+            }
+        };
+        if push {
+            g.ready.push(Reverse((at, self.task)));
+            drop(g);
+            self.shared.cv.notify_all();
+        }
+    }
+}
+
+/// The worker fabric: spawn tasks, then [`run`](Self::run) the pool.
+pub struct Scheduler {
+    shared: Arc<SchedShared>,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler {
+    pub fn new() -> Self {
+        Self {
+            shared: Arc::new(SchedShared {
+                state: Mutex::new(SchedState {
+                    tasks: Vec::new(),
+                    ready: BinaryHeap::new(),
+                    live: 0,
+                    running: 0,
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Register a task; it becomes ready at virtual time 0. Tasks do not
+    /// run until [`run`](Self::run).
+    pub fn spawn(&self, task: Box<dyn RunnableTask>) -> TaskId {
+        let mut g = self.shared.state.lock().unwrap();
+        let id = g.tasks.len();
+        g.tasks.push(TaskSlot {
+            state: TaskState::Ready,
+            task: Some(task),
+        });
+        g.live += 1;
+        g.ready.push(Reverse((0, id)));
+        id
+    }
+
+    /// A waker for `id`, to be bound into the task's [`WorkerPark`].
+    pub fn waker(&self, id: TaskId) -> Waker {
+        Waker {
+            shared: self.shared.clone(),
+            task: id,
+        }
+    }
+
+    /// Tasks not yet finished.
+    pub fn live(&self) -> usize {
+        self.shared.state.lock().unwrap().live
+    }
+
+    /// Drive all tasks to completion on `runners` threads (the calling
+    /// thread counts as one). Returns when every task is Done; stalled
+    /// tasks are failed via [`RunnableTask::fail`] rather than hanging.
+    pub fn run(&self, runners: usize) {
+        let n = runners.max(1);
+        if n == 1 {
+            Self::runner(&self.shared);
+            return;
+        }
+        std::thread::scope(|s| {
+            for _ in 1..n {
+                let shared = &self.shared;
+                s.spawn(move || Self::runner(shared));
+            }
+            Self::runner(&self.shared);
+        });
+    }
+
+    fn runner(shared: &SchedShared) {
+        loop {
+            let (id, mut task) = {
+                let mut g = shared.state.lock().unwrap();
+                loop {
+                    if g.live == 0 {
+                        drop(g);
+                        shared.cv.notify_all();
+                        return;
+                    }
+                    if let Some(Reverse((_, id))) = g.ready.pop() {
+                        let slot = &mut g.tasks[id];
+                        slot.state = TaskState::Running { wake_pending: None };
+                        let task = slot.task.take().expect("ready task has a runnable");
+                        g.running += 1;
+                        break (id, task);
+                    }
+                    if g.running == 0 {
+                        // Nothing ready, nothing running, live tasks remain:
+                        // no delivery can ever wake them again.
+                        Self::fail_stalled(&mut g);
+                        continue;
+                    }
+                    g = shared.cv.wait(g).unwrap();
+                }
+            };
+
+            let outcome = task.poll();
+
+            let mut g = shared.state.lock().unwrap();
+            g.running -= 1;
+            match outcome {
+                PollOutcome::Done => {
+                    g.tasks[id].state = TaskState::Done;
+                    // drop the runnable now so finished workers release
+                    // their model state immediately (peak-RSS matters at
+                    // 10k workers)
+                    drop(task);
+                    g.live -= 1;
+                }
+                PollOutcome::Parked => {
+                    let wake = match g.tasks[id].state {
+                        TaskState::Running { wake_pending } => wake_pending,
+                        _ => None,
+                    };
+                    g.tasks[id].task = Some(task);
+                    if let Some(at) = wake {
+                        g.tasks[id].state = TaskState::Ready;
+                        g.ready.push(Reverse((at, id)));
+                    } else {
+                        g.tasks[id].state = TaskState::Waiting;
+                    }
+                }
+            }
+            drop(g);
+            shared.cv.notify_all();
+        }
+    }
+
+    fn fail_stalled(g: &mut std::sync::MutexGuard<'_, SchedState>) {
+        let st: &mut SchedState = g;
+        let names: Vec<String> = st
+            .tasks
+            .iter()
+            .filter(|t| matches!(t.state, TaskState::Waiting))
+            .filter_map(|t| t.task.as_ref().map(|x| x.name().to_string()))
+            .collect();
+        let shown: Vec<String> = names.iter().take(5).cloned().collect();
+        let reason = format!(
+            "virtual-time deadlock: {} worker(s) waiting on mail that can never arrive ({}{})",
+            names.len(),
+            shown.join(", "),
+            if names.len() > 5 { ", ..." } else { "" }
+        );
+        let mut failed = 0usize;
+        for slot in st.tasks.iter_mut() {
+            if matches!(slot.state, TaskState::Waiting) {
+                if let Some(task) = slot.task.as_mut() {
+                    task.fail(&reason);
+                }
+                slot.state = TaskState::Done;
+                failed += 1;
+            }
+        }
+        st.live -= failed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// A task that yields `yields` times (waking itself eagerly via the
+    /// waker it is given after spawn), then completes.
+    struct YieldTask {
+        name: String,
+        yields: usize,
+        park: Arc<WorkerPark>,
+        polls: Arc<AtomicUsize>,
+        failed: Arc<Mutex<Option<String>>>,
+        wake_self: bool,
+    }
+
+    impl RunnableTask for YieldTask {
+        fn name(&self) -> &str {
+            &self.name
+        }
+
+        fn poll(&mut self) -> PollOutcome {
+            self.polls.fetch_add(1, Ordering::SeqCst);
+            if self.yields == 0 {
+                return PollOutcome::Done;
+            }
+            self.yields -= 1;
+            if self.wake_self {
+                // simulate a delivery that races the park
+                self.park.waker().unwrap().wake(self.yields as u64);
+            }
+            PollOutcome::Parked
+        }
+
+        fn fail(&mut self, reason: &str) {
+            *self.failed.lock().unwrap() = Some(reason.to_string());
+        }
+    }
+
+    fn task(
+        name: &str,
+        yields: usize,
+        wake_self: bool,
+    ) -> (YieldTask, Arc<WorkerPark>, Arc<AtomicUsize>, Arc<Mutex<Option<String>>>) {
+        let park = WorkerPark::cooperative();
+        let polls = Arc::new(AtomicUsize::new(0));
+        let failed = Arc::new(Mutex::new(None));
+        (
+            YieldTask {
+                name: name.into(),
+                yields,
+                park: park.clone(),
+                polls: polls.clone(),
+                failed: failed.clone(),
+                wake_self,
+            },
+            park,
+            polls,
+            failed,
+        )
+    }
+
+    #[test]
+    fn runs_tasks_to_completion() {
+        let sched = Scheduler::new();
+        let (t, park, polls, _) = task("w0", 3, true);
+        let id = sched.spawn(Box::new(t));
+        park.set_waker(sched.waker(id));
+        sched.run(2);
+        assert_eq!(polls.load(Ordering::SeqCst), 4);
+        assert_eq!(sched.live(), 0);
+    }
+
+    #[test]
+    fn stalled_task_is_failed_not_hung() {
+        let sched = Scheduler::new();
+        // parks once and is never woken
+        let (t, park, polls, failed) = task("stuck", 1, false);
+        let id = sched.spawn(Box::new(t));
+        park.set_waker(sched.waker(id));
+        sched.run(1);
+        assert_eq!(polls.load(Ordering::SeqCst), 1);
+        let msg = failed.lock().unwrap().clone().expect("task must be failed");
+        assert!(msg.contains("deadlock"), "{msg}");
+        assert!(msg.contains("stuck"), "{msg}");
+    }
+
+    #[test]
+    fn many_tasks_on_few_runners() {
+        let sched = Scheduler::new();
+        let mut handles = Vec::new();
+        for i in 0..200 {
+            let (t, park, polls, _) = task(&format!("w{i}"), 2, true);
+            let id = sched.spawn(Box::new(t));
+            park.set_waker(sched.waker(id));
+            handles.push(polls);
+        }
+        sched.run(4);
+        for polls in handles {
+            assert_eq!(polls.load(Ordering::SeqCst), 3);
+        }
+    }
+
+    #[test]
+    fn pending_signal_roundtrip() {
+        let err = pending_err();
+        assert!(is_pending(&err));
+        let wrapped = err.context("while receiving");
+        assert!(is_pending(&wrapped));
+        assert!(!is_pending(&anyhow::anyhow!("boom")));
+    }
+
+    #[test]
+    fn empty_scheduler_returns_immediately() {
+        let sched = Scheduler::new();
+        sched.run(3);
+        assert_eq!(sched.live(), 0);
+    }
+}

@@ -19,8 +19,35 @@
 //!
 //! The chain is generic over a context type `C` (the role's state), so the
 //! same engine drives trainers, aggregators and coordinators.
+//!
+//! ## Cooperative execution
+//!
+//! Chains are *step-structured*, which is what lets the worker fabric
+//! ([`crate::sched`]) multiplex thousands of workers over a few runner
+//! threads: when a tasklet's blocking receive finds no mail it raises the
+//! [`crate::sched::Pending`] signal, and [`Composer::step_from`] suspends
+//! the chain at that tasklet, returning a resume path (the index path into
+//! the possibly-nested node tree). The next step re-enters exactly there.
+//!
+//! **Re-entrancy contract:** a suspended tasklet is *re-run from its
+//! start* on resume, so role tasklets must be idempotent up to their first
+//! blocking receive — do not send or mutate non-idempotent state before a
+//! receive that can yield. Multi-message receives either use the atomic
+//! `recv_fifo` barrier (nothing is consumed until everything arrived) or
+//! persist partial progress in the role context (see the global
+//! aggregator's collect and the ring all-reduce state machine).
 
 use anyhow::{bail, Result};
+
+use crate::sched::is_pending;
+
+/// Result of driving a chain one step: ran to completion, or suspended at
+/// a yielding tasklet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepStatus {
+    Done,
+    Pending,
+}
 
 /// A named unit of work over role state `C`.
 pub struct Tasklet<C> {
@@ -87,23 +114,85 @@ impl<C> Composer<C> {
         self
     }
 
-    /// Execute the chain to completion.
+    /// Execute the chain to completion (blocking mode: receives wait, so
+    /// the chain never suspends).
     pub fn run(&mut self, ctx: &mut C) -> Result<()> {
-        Self::run_nodes(&mut self.nodes, ctx)
+        match self.step_from(&[], ctx)? {
+            (StepStatus::Done, _) => Ok(()),
+            (StepStatus::Pending, _) => {
+                bail!("tasklet chain yielded outside a cooperative scheduler")
+            }
+        }
     }
 
-    fn run_nodes(nodes: &mut [Node<C>], ctx: &mut C) -> Result<()> {
-        for node in nodes.iter_mut() {
-            match node {
-                Node::Task(t) => (t.f)(ctx)?,
+    /// Drive the chain from `resume` (empty = from the top) until it
+    /// completes or a tasklet yields [`crate::sched::Pending`]. On
+    /// `Pending`, the returned path locates the suspended tasklet; pass it
+    /// back as `resume` to continue. Loop iterations that were in flight
+    /// when the chain suspended are finished before their exit condition is
+    /// re-checked, exactly as uninterrupted execution would.
+    pub fn step_from(
+        &mut self,
+        resume: &[usize],
+        ctx: &mut C,
+    ) -> Result<(StepStatus, Vec<usize>)> {
+        let mut pend = Vec::new();
+        let status = Self::exec_nodes(&mut self.nodes, ctx, resume, &mut pend)?;
+        Ok((status, pend))
+    }
+
+    fn exec_nodes(
+        nodes: &mut [Node<C>],
+        ctx: &mut C,
+        resume: &[usize],
+        pend: &mut Vec<usize>,
+    ) -> Result<StepStatus> {
+        let (start, deeper): (usize, &[usize]) = match resume.split_first() {
+            Some((&s, rest)) => (s, rest),
+            None => (0, &[]),
+        };
+        let mut at_resume_node = !resume.is_empty();
+        let mut i = start;
+        while i < nodes.len() {
+            let node_resume: &[usize] = if at_resume_node { deeper } else { &[] };
+            at_resume_node = false;
+            match &mut nodes[i] {
+                Node::Task(t) => {
+                    if let Err(e) = (t.f)(ctx) {
+                        if is_pending(&e) {
+                            pend.push(i);
+                            return Ok(StepStatus::Pending);
+                        }
+                        return Err(e);
+                    }
+                }
                 Node::Loop { check, body } => {
+                    // Finish the iteration that was suspended inside this
+                    // loop's body (resume paths always end at a Task, so a
+                    // non-empty node_resume means "we were inside").
+                    if !node_resume.is_empty() {
+                        pend.push(i);
+                        match Self::exec_nodes(body, ctx, node_resume, pend)? {
+                            StepStatus::Pending => return Ok(StepStatus::Pending),
+                            StepStatus::Done => {
+                                pend.pop();
+                            }
+                        }
+                    }
                     while !(check)(ctx) {
-                        Self::run_nodes(body, ctx)?;
+                        pend.push(i);
+                        match Self::exec_nodes(body, ctx, &[], pend)? {
+                            StepStatus::Pending => return Ok(StepStatus::Pending),
+                            StepStatus::Done => {
+                                pend.pop();
+                            }
+                        }
                     }
                 }
             }
+            i += 1;
         }
-        Ok(())
+        Ok(StepStatus::Done)
     }
 
     // ------------------------------------------------------------ surgery
@@ -395,6 +484,100 @@ mod tests {
         ch.run(&mut ctx).unwrap();
         assert_eq!(ctx.hits, 2);
         assert_eq!(ch.aliases(), vec!["tick", "count"]);
+    }
+
+    #[test]
+    fn step_from_resumes_at_yielding_tasklet_inside_loop() {
+        // A "recv"-like tasklet that yields Pending twice per round before
+        // succeeding; stepping the chain must interleave exactly like an
+        // uninterrupted run, re-running only the yielding tasklet.
+        #[derive(Default)]
+        struct C {
+            rounds: usize,
+            tries: usize,
+            log: Vec<String>,
+        }
+        let mut ch: Composer<C> = Composer::new()
+            .task("init", |c: &mut C| {
+                c.log.push("init".into());
+                Ok(())
+            })
+            .loop_until(
+                |c: &C| c.rounds >= 2,
+                Composer::new()
+                    .task("recv", |c: &mut C| {
+                        c.tries += 1;
+                        if c.tries % 3 != 0 {
+                            return Err(crate::sched::pending_err());
+                        }
+                        c.log.push(format!("recv{}", c.rounds));
+                        Ok(())
+                    })
+                    .task("put", |c: &mut C| {
+                        c.log.push(format!("put{}", c.rounds));
+                        c.rounds += 1;
+                        Ok(())
+                    }),
+            )
+            .task("end", |c: &mut C| {
+                c.log.push("end".into());
+                Ok(())
+            });
+        let mut ctx = C::default();
+        let mut resume: Vec<usize> = Vec::new();
+        let mut steps = 0;
+        loop {
+            let (st, pend) = ch.step_from(&resume, &mut ctx).unwrap();
+            steps += 1;
+            match st {
+                StepStatus::Done => break,
+                StepStatus::Pending => resume = pend,
+            }
+        }
+        // two yields per round, two rounds -> 4 pending steps + final
+        assert_eq!(steps, 5);
+        assert_eq!(ctx.log, vec!["init", "recv0", "put0", "recv1", "put1", "end"]);
+    }
+
+    #[test]
+    fn step_from_finishes_suspended_iteration_before_loop_recheck() {
+        // The exit condition flips *during* a suspended iteration; the
+        // iteration must still run to completion (put executes) before the
+        // loop exits — identical to uninterrupted semantics.
+        struct C {
+            flip: bool,
+            yielded: bool,
+            log: Vec<&'static str>,
+        }
+        let mut ch: Composer<C> = Composer::new().loop_until(
+            |c: &C| c.flip,
+            Composer::new()
+                .task("recv", |c: &mut C| {
+                    if !c.yielded {
+                        c.yielded = true;
+                        return Err(crate::sched::pending_err());
+                    }
+                    c.log.push("recv");
+                    Ok(())
+                })
+                .task("put", |c: &mut C| {
+                    c.log.push("put");
+                    Ok(())
+                }),
+        );
+        let mut ctx = C {
+            flip: false,
+            yielded: false,
+            log: vec![],
+        };
+        let (st, pend) = ch.step_from(&[], &mut ctx).unwrap();
+        assert_eq!(st, StepStatus::Pending);
+        // condition flips while suspended (e.g. a 'done' flag set by the
+        // message the resumed recv will consume)
+        ctx.flip = true;
+        let (st, _) = ch.step_from(&pend, &mut ctx).unwrap();
+        assert_eq!(st, StepStatus::Done);
+        assert_eq!(ctx.log, vec!["recv", "put"]);
     }
 
     #[test]

@@ -67,3 +67,12 @@ fn run_all_topologies_small() {
         assert!(ok, "topo {topo} failed: {stderr}");
     }
 }
+
+#[test]
+fn scale_smoke_on_the_cooperative_fabric() {
+    let (ok, stdout, stderr) = flame(&[
+        "scale", "--trainers", "60", "--groups", "6", "--rounds", "2",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("workers=67"), "{stdout}");
+}

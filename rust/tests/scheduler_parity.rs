@@ -1,0 +1,132 @@
+//! Executor parity: the cooperative virtual-time worker fabric must
+//! reproduce the thread-per-worker seed execution **bit for bit**.
+//!
+//! Determinism rests on virtual time: message selection is ordered by
+//! `(virtual arrival, sender, sequence)` and aggregation barriers sort the
+//! same way, so neither OS scheduling (threads) nor runner-pool
+//! interleaving (cooperative) can leak into results.
+
+use std::sync::Arc;
+
+use flame::channel::Backend;
+use flame::control::{Controller, Executor, JobOptions, JobReport};
+use flame::data::Partition;
+use flame::json::Json;
+use flame::runtime::ComputeTimeModel;
+use flame::sim::{self, SimOptions};
+use flame::store::Store;
+use flame::topo::TopoBuilder;
+
+const SERIES: &[&str] = &["acc", "loss", "vtime_s", "round_time_s"];
+
+fn run_with(builder: TopoBuilder, rounds: u64, executor: Executor) -> JobReport {
+    let spec = builder
+        .rounds(rounds)
+        .set("lr", Json::Num(0.5))
+        .set("local_steps", 2usize)
+        .set("seed", 11u64)
+        .build();
+    let opts = JobOptions::mock()
+        .with_time(ComputeTimeModel::FixedPerStep(2_000))
+        .with_data(48, 96, Partition::Dirichlet(0.3), 11)
+        .with_executor(executor);
+    Controller::new(Arc::new(Store::in_memory()))
+        .submit(spec, opts)
+        .expect("job failed")
+}
+
+fn assert_reports_identical(a: &JobReport, b: &JobReport, what: &str) {
+    for s in SERIES {
+        assert_eq!(
+            a.metrics.series(s),
+            b.metrics.series(s),
+            "{what}: series '{s}' diverges across executors"
+        );
+    }
+    assert_eq!(a.total_bytes, b.total_bytes, "{what}: traffic diverges");
+    assert_eq!(a.workers, b.workers, "{what}: worker count diverges");
+}
+
+#[test]
+fn classical_fl_cooperative_matches_threads() {
+    let coop = run_with(
+        flame::topo::classical(6, Backend::P2p),
+        4,
+        Executor::Cooperative { runners: 0 },
+    );
+    let threads = run_with(
+        flame::topo::classical(6, Backend::P2p),
+        4,
+        Executor::ThreadPerWorker,
+    );
+    assert_reports_identical(&coop, &threads, "classical");
+    assert!(coop.final_acc.unwrap() > 0.4);
+}
+
+#[test]
+fn hierarchical_fl_cooperative_matches_threads() {
+    let coop = run_with(
+        flame::topo::hierarchical(8, 2, Backend::Broker),
+        4,
+        Executor::Cooperative { runners: 0 },
+    );
+    let threads = run_with(
+        flame::topo::hierarchical(8, 2, Backend::Broker),
+        4,
+        Executor::ThreadPerWorker,
+    );
+    assert_reports_identical(&coop, &threads, "hierarchical");
+}
+
+#[test]
+fn runner_pool_size_does_not_change_results() {
+    let one = run_with(
+        flame::topo::hierarchical(8, 2, Backend::P2p),
+        4,
+        Executor::Cooperative { runners: 1 },
+    );
+    let many = run_with(
+        flame::topo::hierarchical(8, 2, Backend::P2p),
+        4,
+        Executor::Cooperative { runners: 4 },
+    );
+    assert_reports_identical(&one, &many, "pool-size");
+}
+
+fn small_sim(executor: Executor) -> SimOptions {
+    let mut o = SimOptions::mock();
+    o.per_shard = 32;
+    o.test_n = 64;
+    o.local_steps = 1;
+    o.executor = executor;
+    o
+}
+
+/// The acceptance criterion: fig10 and fig11 JobReport series are
+/// identical under the new scheduler and the seed's thread-per-worker
+/// execution.
+#[test]
+fn fig11_series_identical_across_executors() {
+    let rounds = 4;
+    let (cfl_c, hy_c) =
+        sim::run_fig11(rounds, &small_sim(Executor::Cooperative { runners: 0 })).unwrap();
+    let (cfl_t, hy_t) = sim::run_fig11(rounds, &small_sim(Executor::ThreadPerWorker)).unwrap();
+    assert_reports_identical(&cfl_c, &cfl_t, "fig11/cfl");
+    assert_reports_identical(&hy_c, &hy_t, "fig11/hybrid");
+}
+
+#[test]
+fn fig10_series_identical_across_executors() {
+    let rounds = 8;
+    let (hfl_c, cofl_c) =
+        sim::run_fig10(rounds, &small_sim(Executor::Cooperative { runners: 0 })).unwrap();
+    let (hfl_t, cofl_t) = sim::run_fig10(rounds, &small_sim(Executor::ThreadPerWorker)).unwrap();
+    assert_reports_identical(&hfl_c, &hfl_t, "fig10/hfl");
+    assert_reports_identical(&cofl_c, &cofl_t, "fig10/cofl");
+    // the CO-FL exclusion trace must match too
+    assert_eq!(
+        cofl_c.metrics.series("active_aggregators"),
+        cofl_t.metrics.series("active_aggregators"),
+        "fig10: exclusion trace diverges"
+    );
+}
