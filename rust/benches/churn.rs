@@ -1,0 +1,87 @@
+//! Churn sweep: round time and accuracy of the live-extension scenario as
+//! trainer churn grows from 0% to 30%, at full quorum and at quorum 0.8.
+//!
+//! Each cell runs `sim::run_churn` (a 2-tier job that grows a middle tier
+//! mid-run while trainers depart) and reports the mean post-extension
+//! round time plus final accuracy — the "accuracy/round-time under churn"
+//! table of EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo bench --bench churn
+//! ```
+//!
+//! Prints the table and writes `BENCH_churn.json` in the working
+//! directory.
+
+use std::time::Instant;
+
+use flame::control::Executor;
+use flame::sim::{run_churn, SimOptions};
+
+struct Cell {
+    churn: f64,
+    quorum: f64,
+    acc: f64,
+    mean_round_s: f64,
+    workers: usize,
+    wall_s: f64,
+}
+
+fn run_cell(trainers: usize, churn: f64, quorum: f64) -> anyhow::Result<Cell> {
+    let mut o = SimOptions::mock();
+    o.per_shard = 32;
+    o.test_n = 96;
+    o.local_steps = 1;
+    o.executor = Executor::Cooperative { runners: 0 };
+    let rounds = 12;
+    let t0 = Instant::now();
+    let report = run_churn(trainers, 2, rounds, churn, quorum, &o)?;
+    let rt = report.metrics.series("round_time_s");
+    let tail = &rt[rt.len() / 2..];
+    let mean_round_s = tail.iter().map(|(_, v)| v).sum::<f64>() / tail.len().max(1) as f64;
+    Ok(Cell {
+        churn,
+        quorum,
+        acc: report.final_acc.unwrap_or(f64::NAN),
+        mean_round_s,
+        workers: report.workers,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+fn main() {
+    let trainers = 40;
+    println!(
+        "{:>7} {:>7} {:>9} {:>16} {:>9} {:>9}",
+        "churn", "quorum", "acc", "round (vtime s)", "workers", "wall (s)"
+    );
+    let mut cells = Vec::new();
+    for &churn in &[0.0, 0.1, 0.2, 0.3] {
+        for &quorum in &[1.0, 0.8] {
+            let c = run_cell(trainers, churn, quorum).expect("churn cell");
+            println!(
+                "{:>7.2} {:>7.2} {:>9.3} {:>16.3} {:>9} {:>9.2}",
+                c.churn, c.quorum, c.acc, c.mean_round_s, c.workers, c.wall_s
+            );
+            cells.push(c);
+        }
+    }
+    let rows: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                "{{\"churn\": {}, \"quorum\": {}, \"acc\": {:.4}, \"mean_round_s\": {:.4}, \
+                 \"workers\": {}, \"wall_s\": {:.3}}}",
+                c.churn, c.quorum, c.acc, c.mean_round_s, c.workers, c.wall_s
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"churn\",\n  \"scenario\": \"2-tier -> 3-tier live extension, \
+         {trainers} trainers, 12 rounds, mock compute\",\n  \"status\": \"regenerate with \
+         `cargo bench --bench churn` — this file is overwritten in place\",\n  \"sweep\": [\n    {}\n  ]\n}}\n",
+        rows.join(",\n    ")
+    );
+    std::fs::write("BENCH_churn.json", json).expect("write BENCH_churn.json");
+    println!("\nwrote BENCH_churn.json");
+}

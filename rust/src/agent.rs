@@ -66,6 +66,15 @@ pub fn run_worker(env: WorkerEnv, notifier: Arc<Notifier>) -> Result<()> {
             Err(panic) => Err(anyhow!("worker panic: {}", panic_msg(panic))),
         }
     })();
+    // membership revocation is clean retirement, not failure — journal it
+    // as "departed" (then "completed"), exactly like the cooperative path
+    let result = match result {
+        Err(e) if crate::channel::is_departed(&e) => {
+            status_event(&notifier, &job_name, &worker_id, "departed", "");
+            Ok(())
+        }
+        other => other,
+    };
 
     match &result {
         Ok(()) => status_event(&notifier, &job_name, &worker_id, "completed", ""),
@@ -144,6 +153,12 @@ impl RunnableTask for WorkerTask {
             Ok(Err(e)) if is_pending(&e) => self.finish(Err(anyhow!(
                 "pending signal escaped the chain executor (lost resume cursor)"
             ))),
+            // Retired by a `leave` event: the membership revocation is the
+            // worker's termination signal, not a failure.
+            Ok(Err(e)) if crate::channel::is_departed(&e) => {
+                status_event(&self.notifier, &self.job, &self.worker, "departed", "");
+                self.finish(Ok(()))
+            }
             Ok(Err(e)) => self.finish(Err(e)),
             Err(panic) => self.finish(Err(anyhow!("worker panic: {}", panic_msg(panic)))),
         }

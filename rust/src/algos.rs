@@ -229,6 +229,11 @@ pub struct TrainingConfig {
     pub select_frac: f64,
     /// FedBalancer-style sample selection on/off.
     pub fedbalancer: bool,
+    /// Aggregation quorum fraction in `(0, 1]`: a collect proceeds once
+    /// `ceil(quorum * alive_children)` updates for the current round have
+    /// arrived, against *current* channel membership. 1.0 (default) is the
+    /// classic full barrier; fractions tolerate stragglers and churn.
+    pub quorum: f64,
     pub seed: u64,
 }
 
@@ -248,6 +253,7 @@ impl Default for TrainingConfig {
             selection: "all".into(),
             select_frac: 1.0,
             fedbalancer: false,
+            quorum: 1.0,
             seed: 0,
         }
     }
@@ -316,6 +322,12 @@ impl TrainingConfig {
         }
         if let Some(b) = hyper.get("fedbalancer").as_bool() {
             cfg.fedbalancer = b;
+        }
+        if let Some(v) = hyper.get("quorum").as_f64() {
+            if !(v > 0.0 && v <= 1.0) {
+                bail!("quorum must be in (0, 1], got {v}");
+            }
+            cfg.quorum = v;
         }
         if let Some(v) = hyper.get("seed").as_i64() {
             cfg.seed = v as u64;
@@ -460,6 +472,17 @@ mod tests {
             r#"{"server_opt": "sgdm"}"#,
             r#"{"aggregation": "psychic"}"#,
         ] {
+            assert!(TrainingConfig::from_hyper(&Json::parse(bad).unwrap()).is_err());
+        }
+    }
+
+    #[test]
+    fn quorum_parses_and_validates() {
+        let cfg =
+            TrainingConfig::from_hyper(&Json::parse(r#"{"quorum": 0.75}"#).unwrap()).unwrap();
+        assert_eq!(cfg.quorum, 0.75);
+        assert_eq!(TrainingConfig::default().quorum, 1.0);
+        for bad in [r#"{"quorum": 0.0}"#, r#"{"quorum": 1.5}"#, r#"{"quorum": -1}"#] {
             assert!(TrainingConfig::from_hyper(&Json::parse(bad).unwrap()).is_err());
         }
     }

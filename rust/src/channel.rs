@@ -32,6 +32,26 @@
 //! Message selection is deterministic in both modes: the earliest match by
 //! `(virtual arrival, sender, sequence)` wins, so the same job produces
 //! bit-identical results under threaded and cooperative execution.
+//!
+//! ## Churn: departures and eviction
+//!
+//! Live topology extension (see [`crate::tag::delta`]) makes membership
+//! dynamic, which channels support with two mechanisms:
+//!
+//! * **Departure notices.** [`ChannelHandle::leave`] and
+//!   [`ChannelManager::evict`] record the departed worker on every
+//!   remaining member's mailbox and *cancel* parked waits that can no
+//!   longer be satisfied: a `recv` waiting on the leaver, or a
+//!   `recv_fifo` barrier still missing the leaver's message, wakes and
+//!   fails promptly with a "peer left" error instead of stranding until
+//!   the deadlock detector (cooperative) or the wall-clock timeout
+//!   (blocking) fires. Mail the leaver sent *before* departing stays
+//!   consumable.
+//! * **Eviction.** [`ChannelManager::evict`] retires a worker from every
+//!   channel it joined: its own mailboxes close (its next receive raises
+//!   the [`Departed`] signal, which the agent treats as clean
+//!   retirement), and every parked peer in the affected groups is woken
+//!   conservatively so quorum-style collects re-evaluate membership.
 
 use std::collections::{HashMap, VecDeque};
 use std::hash::{Hash, Hasher};
@@ -66,6 +86,30 @@ pub enum Backend {
     /// when peers can't reach each other directly (NAT/firewall), at the
     /// price of WAN traffic through the broker — exactly the §6.2 trade-off.
     Broker,
+}
+
+/// Marker error: this worker was retired from the deployment (evicted by
+/// a `leave` event). Raised by receives on a closed mailbox; the agent
+/// recognises it and completes the worker cleanly instead of failing it.
+#[derive(Debug, Clone, Copy)]
+pub struct Departed;
+
+impl std::fmt::Display for Departed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker departed the deployment (membership revoked)")
+    }
+}
+
+impl std::error::Error for Departed {}
+
+/// Build the departure signal as an `anyhow` error.
+pub fn departed_err() -> anyhow::Error {
+    anyhow::Error::new(Departed)
+}
+
+/// Is this error the departure signal (possibly wrapped in context)?
+pub fn is_departed(err: &anyhow::Error) -> bool {
+    err.downcast_ref::<Departed>().is_some()
 }
 
 impl Backend {
@@ -193,9 +237,27 @@ enum WaitSpec {
     AllOf(Vec<String>),
 }
 
+impl MatchSpec {
+    /// Does this wait depend on a specific sender? (`Any*` waits can be
+    /// satisfied by whoever remains, so a single departure never dooms
+    /// them.)
+    fn depends_on(&self, worker: &str) -> bool {
+        match self {
+            MatchSpec::From(f) | MatchSpec::FromKind(f, _) => f == worker,
+            MatchSpec::Any | MatchSpec::AnyKind(_) => false,
+        }
+    }
+}
+
 struct MailboxInner {
     queue: VecDeque<Envelope>,
     waiting: Option<(WaitSpec, Waker)>,
+    /// Peers that left this (channel, group) while we were a member —
+    /// consulted by strict waits so a departure cannot strand us.
+    departed: Vec<String>,
+    /// Set when this member itself was evicted: further receives raise
+    /// [`Departed`].
+    closed: bool,
 }
 
 struct MailboxCore {
@@ -209,6 +271,8 @@ impl MailboxCore {
             inner: Mutex::new(MailboxInner {
                 queue: VecDeque::new(),
                 waiting: None,
+                departed: Vec::new(),
+                closed: false,
             }),
             cv: Condvar::new(),
         })
@@ -330,6 +394,15 @@ impl ChannelManager {
                 role: role.to_string(),
             },
         );
+        // a (re)join supersedes any earlier departure: reopen the member's
+        // own mailbox and clear its name from peers' departure notices so
+        // strict receives on the returned worker work again
+        mailbox.inner.lock().unwrap().closed = false;
+        for (k, m) in state.members.iter() {
+            if k != worker {
+                m.mailbox.inner.lock().unwrap().departed.retain(|d| d != worker);
+            }
+        }
         Ok(ChannelHandle {
             mgr: self.clone(),
             channel: channel.to_string(),
@@ -343,10 +416,88 @@ impl ChannelManager {
         })
     }
 
-    fn leave(&self, channel: &str, group: &str, worker: &str) {
-        let mut g = self.shard(channel, group).write().unwrap();
-        if let Some(state) = g.get_mut(&(channel.to_string(), group.to_string())) {
-            state.members.remove(worker);
+    /// Remove `worker` from `(channel, group)` and post departure notices:
+    /// remaining members learn the name, and a parked wait that *depends*
+    /// on the leaver (a strict `recv` from it, or a `recv_fifo` barrier
+    /// still missing it) is woken at virtual time `at` so it can fail
+    /// promptly instead of stranding.
+    fn leave(&self, channel: &str, group: &str, worker: &str, at: VTime) {
+        let peers: Vec<Mailbox> = {
+            let mut g = self.shard(channel, group).write().unwrap();
+            match g.get_mut(&(channel.to_string(), group.to_string())) {
+                Some(state) if state.members.remove(worker).is_some() => {
+                    state.members.values().map(|m| m.mailbox.clone()).collect()
+                }
+                _ => return,
+            }
+        };
+        for mb in peers {
+            Self::post_departure(&mb, worker, at, false);
+        }
+    }
+
+    /// Retire `worker` from every channel group it joined (a `leave`
+    /// event / device dropout). Its own mailboxes close — the worker's
+    /// next receive raises [`Departed`] and the agent completes it — and
+    /// every parked peer in the affected groups is woken conservatively so
+    /// membership-aware collects re-evaluate their quorum target. Returns
+    /// the number of memberships revoked.
+    pub fn evict(&self, worker: &str, at: VTime) -> usize {
+        let mut revoked = 0;
+        for shard in &self.shards {
+            let mut own: Vec<Mailbox> = Vec::new();
+            let mut peers: Vec<Mailbox> = Vec::new();
+            {
+                let mut g = shard.write().unwrap();
+                for state in g.values_mut() {
+                    if let Some(me) = state.members.remove(worker) {
+                        revoked += 1;
+                        own.push(me.mailbox);
+                        peers.extend(state.members.values().map(|m| m.mailbox.clone()));
+                    }
+                }
+            }
+            for mb in own {
+                let waker = {
+                    let mut mg = mb.inner.lock().unwrap();
+                    mg.closed = true;
+                    mg.waiting.take().map(|(_, w)| w)
+                };
+                mb.cv.notify_all();
+                if let Some(w) = waker {
+                    w.wake(at);
+                }
+            }
+            for mb in peers {
+                Self::post_departure(&mb, worker, at, true);
+            }
+        }
+        revoked
+    }
+
+    /// Record `worker`'s departure on a peer mailbox; wake its parked wait
+    /// if the wait depends on the leaver, or unconditionally when
+    /// `conservative` (membership changed under a quorum collect).
+    fn post_departure(mb: &Mailbox, worker: &str, at: VTime, conservative: bool) {
+        let waker = {
+            let mut mg = mb.inner.lock().unwrap();
+            if !mg.departed.iter().any(|d| d == worker) {
+                mg.departed.push(worker.to_string());
+            }
+            let depends = match &mg.waiting {
+                Some((WaitSpec::Match(spec), _)) => spec.depends_on(worker),
+                Some((WaitSpec::AllOf(missing), _)) => missing.iter().any(|m| m == worker),
+                None => false,
+            };
+            if depends || (conservative && mg.waiting.is_some()) {
+                mg.waiting.take().map(|(_, w)| w)
+            } else {
+                None
+            }
+        };
+        mb.cv.notify_all();
+        if let Some(w) = waker {
+            w.wake(at);
         }
     }
 
@@ -372,6 +523,32 @@ impl ChannelManager {
         };
         peers.sort();
         peers
+    }
+
+    /// Members of `(channel, group)` acting as `role`, excluding
+    /// `exclude`, sorted. The membership view quorum-style collects use:
+    /// "the trainers currently on this channel", robust to other roles
+    /// (e.g. a legacy parent) sharing the group after a live extension.
+    pub fn members_of_role(
+        &self,
+        channel: &str,
+        group: &str,
+        exclude: &str,
+        role: &str,
+    ) -> Vec<String> {
+        let g = self.shard(channel, group).read().unwrap();
+        let mut m: Vec<String> = g
+            .get(&(channel.to_string(), group.to_string()))
+            .map(|s| {
+                s.members
+                    .iter()
+                    .filter(|(k, mem)| *k != exclude && mem.role == role)
+                    .map(|(k, _)| k.clone())
+                    .collect()
+            })
+            .unwrap_or_default();
+        m.sort();
+        m
     }
 
     /// All members of `(channel, group)` (sorted), regardless of role.
@@ -496,8 +673,12 @@ impl ChannelHandle {
     }
 
     /// Leave the channel and deallocate its resources (Table 2 `leave`).
+    /// Remaining members get a departure notice, and any peer parked on
+    /// mail only this worker could send is cancelled promptly (it errors
+    /// instead of stranding until a timeout or the deadlock detector).
     pub fn leave(self) {
-        self.mgr.leave(&self.channel, &self.group, &self.me);
+        let at = self.now();
+        self.mgr.leave(&self.channel, &self.group, &self.me, at);
     }
 
     /// Peers at the other end of the channel (Table 2 `ends`), sorted for
@@ -511,6 +692,15 @@ impl ChannelHandle {
     /// Check if peers exist at the other end (Table 2 `empty`).
     pub fn empty(&self) -> bool {
         self.ends().is_empty()
+    }
+
+    /// Current members of this worker's group acting as `role` (excluding
+    /// this worker), sorted. Unlike [`Self::ends`], which yields *all*
+    /// other-role peers, this scopes to one role — the membership view
+    /// churn-safe collects intersect their peer list against.
+    pub fn ends_of_role(&self, role: &str) -> Vec<String> {
+        self.mgr
+            .members_of_role(&self.channel, &self.group, &self.me, role)
     }
 
     /// Send `msg` to `end` (Table 2 `send`).
@@ -602,11 +792,24 @@ impl ChannelHandle {
         let core = &*self.mailbox;
         let mut g = core.inner.lock().unwrap();
         loop {
+            if g.closed {
+                return Err(departed_err());
+            }
             if let Some(i) = best_index(&g.queue, spec) {
                 let env = g.queue.remove(i).unwrap();
                 drop(g);
                 self.clock.lock().unwrap().merge(env.arrival);
                 return Ok(env);
+            }
+            // no mail, and the only peer that could send it has left:
+            // fail promptly rather than strand
+            if let Some(gone) = g.departed.iter().find(|d| spec.depends_on(d.as_str())) {
+                bail!(
+                    "peer '{gone}' left channel '{}' group '{}' while '{}' was waiting for its mail",
+                    self.channel,
+                    self.group,
+                    self.me
+                );
             }
             if self.park.is_cooperative() {
                 let waker = self.park.waker().ok_or_else(|| {
@@ -646,6 +849,9 @@ impl ChannelHandle {
         let core = &*self.mailbox;
         let mut g = core.inner.lock().unwrap();
         loop {
+            if g.closed {
+                return Err(departed_err());
+            }
             let missing: Vec<String> = unique
                 .iter()
                 .filter(|end| !g.queue.iter().any(|e| e.from.as_str() == end.as_str()))
@@ -653,6 +859,15 @@ impl ChannelHandle {
                 .collect();
             if missing.is_empty() {
                 break;
+            }
+            // a still-missing sender has left: the barrier can never close
+            if let Some(gone) = missing.iter().find(|m| g.departed.contains(*m)) {
+                bail!(
+                    "peer '{gone}' left channel '{}' group '{}' during a recv_fifo barrier at '{}'",
+                    self.channel,
+                    self.group,
+                    self.me
+                );
             }
             if self.park.is_cooperative() {
                 let waker = self.park.waker().ok_or_else(|| {
@@ -1049,6 +1264,178 @@ mod tests {
             .unwrap();
         assert!(solo.ends().is_empty());
         assert!(solo.empty());
+    }
+
+    #[test]
+    fn leave_cancels_dependent_blocking_recv() {
+        // regression: a parked recv waiting on a leaver must be cancelled
+        // promptly — not strand until the wall-clock timeout fires.
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let a = mk("a", "trainer");
+        let b = mk("b", "aggregator");
+        let t0 = std::time::Instant::now();
+        let waiter = std::thread::spawn(move || a.recv("b"));
+        std::thread::sleep(Duration::from_millis(50));
+        b.leave();
+        let err = waiter.join().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("left channel"), "{err:#}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "recv stranded for {:?} instead of being cancelled",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn leave_fails_cooperative_wait_without_stranding() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join_with_park(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+                WorkerPark::cooperative(),
+            )
+            .unwrap()
+        };
+        let a = mk("a", "trainer");
+        let b = mk("b", "aggregator");
+        b.leave();
+        // the departure notice fires before the park, so no waker is needed
+        let err = a.recv("b").unwrap_err();
+        assert!(!crate::sched::is_pending(&err));
+        assert!(format!("{err:#}").contains("left channel"), "{err:#}");
+        // barriers fail the same way
+        let err = a.recv_fifo(&["b".to_string()]).unwrap_err();
+        assert!(format!("{err:#}").contains("recv_fifo barrier"), "{err:#}");
+    }
+
+    #[test]
+    fn mail_sent_before_leave_stays_consumable() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join_with_park(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+                WorkerPark::cooperative(),
+            )
+            .unwrap()
+        };
+        let a = mk("a", "trainer");
+        let b = mk("b", "aggregator");
+        b.send("a", Message::control("parting-gift", 3)).unwrap();
+        b.leave();
+        assert_eq!(a.recv("b").unwrap().round, 3);
+        assert!(a.recv("b").is_err());
+    }
+
+    #[test]
+    fn rejoin_supersedes_departure_notice() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join_with_park(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+                WorkerPark::cooperative(),
+            )
+            .unwrap()
+        };
+        let a = mk("a", "trainer");
+        let b = mk("b", "aggregator");
+        b.leave();
+        assert!(a.recv("b").is_err());
+        // b comes back: strict receives on it must work again
+        let b2 = mk("b", "aggregator");
+        b2.send("a", Message::control("back", 4)).unwrap();
+        assert_eq!(a.recv("b").unwrap().round, 4);
+        // and an evicted-then-rejoined worker's mailbox reopens
+        mgr.evict("b", 1);
+        let b3 = mk("b", "aggregator");
+        a.send("b", Message::control("hi", 5)).unwrap();
+        assert_eq!(b3.recv("a").unwrap().round, 5);
+    }
+
+    #[test]
+    fn evict_closes_worker_and_notifies_peers() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join_with_park(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+                WorkerPark::cooperative(),
+            )
+            .unwrap()
+        };
+        let a = mk("agg", "aggregator");
+        let b = mk("t1", "trainer");
+        let _c = mk("t2", "trainer");
+        assert_eq!(mgr.evict("t1", 5), 1);
+        // the evictee's own receive raises the clean-retirement signal
+        let err = b.recv("agg").unwrap_err();
+        assert!(is_departed(&err), "{err:#}");
+        // peers see the departure and updated membership
+        let err = a.recv("t1").unwrap_err();
+        assert!(format!("{err:#}").contains("left channel"), "{err:#}");
+        assert_eq!(a.ends(), vec!["t2".to_string()]);
+        // evicting an unknown worker is a no-op
+        assert_eq!(mgr.evict("ghost", 5), 0);
+    }
+
+    #[test]
+    fn ends_of_role_scopes_membership() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let agg = mk("agg", "aggregator");
+        let _t1 = mk("t1", "trainer");
+        let _t2 = mk("t2", "trainer");
+        let _g = mk("global", "global-aggregator");
+        // ends() mixes every other role; ends_of_role scopes to one
+        assert_eq!(agg.ends().len(), 3);
+        assert_eq!(agg.ends_of_role("trainer"), vec!["t1".to_string(), "t2".into()]);
+        assert_eq!(agg.ends_of_role("global-aggregator"), vec!["global".to_string()]);
+        assert!(agg.ends_of_role("coordinator").is_empty());
     }
 
     #[test]

@@ -18,7 +18,10 @@ use anyhow::{bail, Context, Result};
 use crate::algos::TrainingConfig;
 use crate::channel::{ChannelManager, RECV_TIMEOUT};
 use crate::data::{make_federated, Partition};
-use crate::deploy::{Deployer, DeployerSet, PodStatus, SimDeployer, ThreadDeployer};
+use crate::deploy::{
+    Deployer, DeployerSet, PodStatus, ScheduledAction, SimDeployer, ThreadDeployer,
+    TimelineEntry, TopologyTimeline,
+};
 use crate::json::Json;
 use crate::metrics::MetricsHub;
 use crate::net::VirtualNet;
@@ -27,7 +30,8 @@ use crate::registry::Registry;
 use crate::roles::JobRuntime;
 use crate::runtime::{Compute, ComputeTimeModel};
 use crate::store::Store;
-use crate::tag::{expand, JobSpec};
+use crate::tag::delta::diff_workers;
+use crate::tag::{expand, JobSpec, TopologyEvent, WorkerConfig};
 
 /// How the sim orchestrator executes a job's workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,6 +49,32 @@ pub enum Executor {
 impl Default for Executor {
     fn default() -> Self {
         Executor::Cooperative { runners: 0 }
+    }
+}
+
+/// Fold one extension phase's TAG into the runtime union spec: latest
+/// definition of each role/channel/dataset name wins, names the new phase
+/// dropped are retained. Initially deployed workers resolve their
+/// channels against this union even after an event removes or replaces
+/// them, and late joiners find everything their phase introduced.
+fn merge_spec_union(union: &mut JobSpec, next: &JobSpec) {
+    for r in &next.roles {
+        match union.roles.iter_mut().find(|x| x.name == r.name) {
+            Some(slot) => *slot = r.clone(),
+            None => union.roles.push(r.clone()),
+        }
+    }
+    for c in &next.channels {
+        match union.channels.iter_mut().find(|x| x.name == c.name) {
+            Some(slot) => *slot = c.clone(),
+            None => union.channels.push(c.clone()),
+        }
+    }
+    for d in &next.datasets {
+        match union.datasets.iter_mut().find(|x| x.name == d.name) {
+            Some(slot) => *slot = d.clone(),
+            None => union.datasets.push(d.clone()),
+        }
     }
 }
 
@@ -77,6 +107,10 @@ pub struct JobOptions {
     pub executor: Executor,
     /// Blocking-receive stall guard; `None` auto-scales with worker count.
     pub recv_timeout: Option<Duration>,
+    /// Scripted live-extension timeline (join/leave/extend-tier events at
+    /// virtual timestamps), merged with any events the spec itself
+    /// declares. Requires the cooperative executor.
+    pub events: Vec<TopologyEvent>,
 }
 
 impl JobOptions {
@@ -94,11 +128,17 @@ impl JobOptions {
             configure_net: None,
             executor: Executor::default(),
             recv_timeout: None,
+            events: Vec::new(),
         }
     }
 
     pub fn with_executor(mut self, e: Executor) -> Self {
         self.executor = e;
+        self
+    }
+
+    pub fn with_events(mut self, events: Vec<TopologyEvent>) -> Self {
+        self.events = events;
         self
     }
 
@@ -236,6 +276,7 @@ impl Controller {
         let db_write_s = t_db.elapsed().as_secs_f64();
 
         // materialise the job runtime
+        let mut opts = opts;
         let tcfg = TrainingConfig::from_hyper(&spec.hyper)?;
         if spec.role("coordinator").is_some()
             && matches!(
@@ -249,12 +290,147 @@ impl Controller {
                  (use async on C-FL/H-FL, or sync CO-FL)"
             );
         }
+        if spec.role("coordinator").is_some() && tcfg.quorum < 1.0 {
+            bail!(
+                "quorum fractions are not supported with a coordinator role: CO-FL's \
+                 ack/report round-trip is a full barrier (an unacked straggler would \
+                 strand in report); use quorum on C-FL/H-FL"
+            );
+        }
+
+        // Live topology extension: merge spec-declared and option-supplied
+        // events, then resolve each into a concrete worker patch *now* —
+        // the running fabric only executes precomputed work lists. The
+        // runtime spec becomes the final (union) TAG so late-joining
+        // channels and roles resolve, while the initial deployment stays
+        // the pre-extension expansion.
+        let mut events: Vec<TopologyEvent> = spec.events.clone();
+        events.append(&mut opts.events);
+        events.sort_by_key(|e| e.at_us());
+        // The runtime spec is the *union across phases*: every event folds
+        // its roles/channels/datasets in by name (latest definition wins,
+        // dropped names are retained), so both the initial expansion's
+        // workers and late joiners resolve their channels and shards.
+        let mut runtime_spec = spec.clone();
+        runtime_spec.events.clear();
+        let mut entries: Vec<TimelineEntry> = Vec::new();
+        if !events.is_empty() {
+            if spec.role("coordinator").is_some() {
+                bail!(
+                    "live topology events are not supported with a coordinator role \
+                     (CO-FL runs its own membership protocol)"
+                );
+            }
+            if matches!(
+                tcfg.aggregation,
+                crate::algos::AggregationPolicy::Asynchronous { .. }
+            ) {
+                bail!("live topology events require synchronous aggregation");
+            }
+            if matches!(opts.executor, Executor::ThreadPerWorker) {
+                bail!(
+                    "live topology events require the cooperative executor \
+                     (thread-per-worker cannot spawn or retire pods mid-run)"
+                );
+            }
+            if spec.role("global-aggregator").is_none() {
+                bail!(
+                    "live topology events need a 'global-aggregator' round sequencer \
+                     to drain the timeline (distributed/all-reduce topologies have none)"
+                );
+            }
+            if spec.channels.iter().any(|c| c.pair.0 == c.pair.1) {
+                bail!(
+                    "live topology events are not supported on ring/all-reduce \
+                     topologies (ring membership is frozen at build)"
+                );
+            }
+            let mut cur = spec.clone();
+            let mut cur_workers = workers.clone();
+            for ev in &events {
+                match ev {
+                    TopologyEvent::Extend { at_us, delta } => {
+                        let next = delta.apply(&cur).context("applying topology delta")?;
+                        merge_spec_union(&mut runtime_spec, &next);
+                        let next_workers = expand(&next, &self.registry)
+                            .context("expanding extended TAG")?;
+                        let wd = diff_workers(&cur_workers, &next_workers);
+                        // a worker re-expanded under the same id merely
+                        // *mutates* (e.g. the global gaining the new tier's
+                        // uplink): the live worker adapts by joining the
+                        // channel — it is neither evicted nor re-deployed.
+                        // Only the round sequencer knows how to adapt, so
+                        // mutations of any other worker are rejected here
+                        // rather than silently diverging from the spec.
+                        let mutated: Vec<&String> = wd
+                            .remove
+                            .iter()
+                            .filter(|id| wd.add.iter().any(|(_, w)| w.id == **id))
+                            .collect();
+                        for id in &mutated {
+                            let role = cur_workers
+                                .iter()
+                                .find(|w| w.id == ***id)
+                                .map(|w| w.role.as_str())
+                                .unwrap_or("");
+                            if role != "global-aggregator" {
+                                bail!(
+                                    "extend event changes worker '{id}' ({role}) in \
+                                     place, which only the sequencer supports; express \
+                                     the change as distinct remove+add worker ids"
+                                );
+                            }
+                        }
+                        let deploys: Vec<WorkerConfig> = wd
+                            .add
+                            .iter()
+                            .filter(|(_, w)| !mutated.contains(&&w.id))
+                            .map(|(_, w)| w.clone())
+                            .collect();
+                        let evicts: Vec<String> = wd
+                            .remove
+                            .iter()
+                            .filter(|id| !mutated.contains(id))
+                            .cloned()
+                            .collect();
+                        if !evicts.is_empty() {
+                            entries.push(TimelineEntry {
+                                at: *at_us,
+                                action: ScheduledAction::Evict(evicts),
+                            });
+                        }
+                        if !deploys.is_empty() {
+                            entries.push(TimelineEntry {
+                                at: *at_us,
+                                action: ScheduledAction::Deploy(deploys),
+                            });
+                        }
+                        cur = next;
+                        cur_workers = next_workers;
+                    }
+                    TopologyEvent::Leave { at_us, workers: leavers } => {
+                        for id in leavers {
+                            if !cur_workers.iter().any(|w| w.id == *id) {
+                                bail!("leave event names unknown worker '{id}'");
+                            }
+                        }
+                        entries.push(TimelineEntry {
+                            at: *at_us,
+                            action: ScheduledAction::Evict(leavers.clone()),
+                        });
+                    }
+                }
+            }
+        }
+        let timeline = TopologyTimeline::new(entries);
+
         let net = Arc::new(VirtualNet::default());
-        let mut opts = opts;
         if let Some(f) = opts.configure_net.take() {
             f(&net);
         }
-        let n_shards = spec.datasets.len();
+        // data shards cover the union of every phase's datasets, so late
+        // joiners and not-yet-retired leavers both find theirs materialised
+        let n_shards = runtime_spec.datasets.len();
         let (shards, test) = make_federated(
             opts.data_seed,
             n_shards.max(1),
@@ -264,15 +440,16 @@ impl Controller {
             opts.noise_sigma,
         );
         let mut shard_map = HashMap::new();
-        for (d, s) in spec.datasets.iter().zip(shards) {
+        for (d, s) in runtime_spec.datasets.iter().zip(shards) {
             shard_map.insert(d.name.clone(), Arc::new(s));
         }
         let init_flat = Arc::new(
             opts.init_flat
+                .take()
                 .unwrap_or_else(|| vec![0f32; opts.compute.d_pad()]),
         );
         let job = Arc::new(JobRuntime {
-            spec,
+            spec: runtime_spec,
             chan_mgr: ChannelManager::new(net),
             compute: opts.compute,
             tcfg,
@@ -281,6 +458,7 @@ impl Controller {
             test_set: Arc::new(test),
             time_model: opts.time_model,
             init_flat,
+            timeline: timeline.clone(),
         });
 
         // (step 5/6) deploy-event -> deployers create pods
@@ -301,6 +479,11 @@ impl Controller {
             Executor::Cooperative { runners } => Arc::new(SimDeployer::new(runners)),
             Executor::ThreadPerWorker => Arc::new(ThreadDeployer::new(recv_timeout)),
         };
+        if timeline.is_elastic() {
+            // arm the incremental deploy path: scheduled Deploy actions
+            // spawn through this deployer while the fabric runs
+            timeline.bind(sim.clone(), self.notifier.clone());
+        }
         let mut pods = Vec::with_capacity(workers.len());
         let mut custom_orchestrators: Vec<String> = Vec::new();
         for w in &workers {
@@ -327,6 +510,9 @@ impl Controller {
             self.deployers.get(orch)?.start()?;
         }
         sim.start()?;
+        // pods deployed live by timeline events are terminal too once the
+        // fabric drains; fold them into monitoring
+        pods.extend(timeline.take_pods());
 
         // (monitoring) wait for completion; fail the job on any failed pod
         let mut failures = Vec::new();
@@ -353,7 +539,8 @@ impl Controller {
         let vtime_s = metrics.last("vtime_s").unwrap_or(0.0);
         Ok(JobReport {
             job: job_id,
-            workers: workers.len(),
+            // count every pod that ran, including live-extension joiners
+            workers: pods.len(),
             final_loss: metrics.last("loss"),
             final_acc: metrics.last("acc"),
             total_bytes: metrics.total_bytes(),

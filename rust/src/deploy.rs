@@ -22,12 +22,14 @@
 //!   preemptive isolation; it does not scale past a few thousand workers.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::agent::{self, WorkerTask};
-use crate::notify::Notifier;
+use crate::json::Json;
+use crate::net::VTime;
+use crate::notify::{EventKind, Notifier};
 use crate::roles::{JobRuntime, WorkerEnv};
 use crate::sched::{Scheduler, WorkerPark};
 use crate::tag::WorkerConfig;
@@ -123,23 +125,42 @@ pub trait Deployer: Send + Sync {
     fn start(&self) -> Result<()> {
         Ok(())
     }
+
+    /// Incremental deployment: prepare **and launch** one worker on the
+    /// *running* fabric at virtual time `at` (live topology extension).
+    /// The default delegates to [`deploy`](Self::deploy), which is only
+    /// correct before `start` — orchestrators that support mid-run spawns
+    /// (the cooperative [`SimDeployer`]) override this.
+    fn deploy_at(
+        &self,
+        cfg: WorkerConfig,
+        job: &Arc<JobRuntime>,
+        notifier: Arc<Notifier>,
+        at: VTime,
+    ) -> Result<PodHandle> {
+        let _ = at;
+        self.deploy(cfg, job, notifier)
+    }
 }
 
 // ------------------------------------------------- cooperative (default)
 
 /// Cooperative orchestrator: each pod is a task on the virtual-time
-/// scheduler; `start` runs the M:N pool to completion.
+/// scheduler; `start` runs the M:N pool to completion. The scheduler
+/// stays reachable while the pool runs, so [`Deployer::deploy_at`] can
+/// spawn *additional* pods mid-run — the incremental deploy path live
+/// topology extension rides on.
 pub struct SimDeployer {
     /// Runner threads; 0 = one per available CPU core.
     runners: usize,
-    sched: Mutex<Option<Scheduler>>,
+    sched: Scheduler,
 }
 
 impl SimDeployer {
     pub fn new(runners: usize) -> Self {
         Self {
             runners,
-            sched: Mutex::new(None),
+            sched: Scheduler::new(),
         }
     }
 }
@@ -161,16 +182,37 @@ impl Deployer for SimDeployer {
         job: &Arc<JobRuntime>,
         notifier: Arc<Notifier>,
     ) -> Result<PodHandle> {
+        self.deploy_at(cfg, job, notifier, 0)
+    }
+
+    /// Prepare a pod and make it runnable at virtual time `at`. Before
+    /// `start` this is ordinary two-phase deployment (`at` = 0); during a
+    /// run it is a **live join**: the worker's clock starts at the join
+    /// time, its task enters the ready heap at that virtual instant, and
+    /// an idle runner picks it up without any pause of the fabric.
+    fn deploy_at(
+        &self,
+        cfg: WorkerConfig,
+        job: &Arc<JobRuntime>,
+        notifier: Arc<Notifier>,
+        at: VTime,
+    ) -> Result<PodHandle> {
         let park = WorkerPark::cooperative();
         let env = WorkerEnv::with_park(cfg, job.clone(), park.clone())?;
+        if at > 0 {
+            env.clock.lock().unwrap().merge(at);
+        }
         let worker_id = env.cfg.id.clone();
         let compute = env.cfg.compute.clone();
         let status = StatusCell::new();
         let task = WorkerTask::new(env, notifier, status.clone());
-        let mut g = self.sched.lock().unwrap();
-        let sched = g.get_or_insert_with(Scheduler::new);
-        let id = sched.spawn(Box::new(task));
-        park.set_waker(sched.waker(id));
+        // parked spawn + explicit wake: the waker is bound before the task
+        // can ever be polled, closing the set_waker race a plain ready
+        // spawn would have on a live fabric
+        let id = self.sched.spawn_parked(Box::new(task));
+        let waker = self.sched.waker(id);
+        park.set_waker(waker.clone());
+        waker.wake(at);
         Ok(PodHandle {
             worker_id,
             compute,
@@ -179,18 +221,120 @@ impl Deployer for SimDeployer {
     }
 
     fn start(&self) -> Result<()> {
-        let sched = self.sched.lock().unwrap().take();
-        if let Some(sched) = sched {
-            let runners = if self.runners == 0 {
-                std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(4)
-            } else {
-                self.runners
-            };
-            sched.run(runners);
-        }
+        let runners = if self.runners == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            self.runners
+        };
+        self.sched.run(runners);
         Ok(())
+    }
+}
+
+// --------------------------------------------------- scheduled topology
+
+/// A resolved topology change scheduled on a running job. The controller
+/// turns every [`crate::tag::TopologyEvent`] into one of these at submit
+/// time (expanding TAG deltas into concrete [`WorkerConfig`] patches via
+/// [`crate::tag::delta`]), so the running fabric only ever executes
+/// precomputed work lists.
+#[derive(Debug, Clone)]
+pub enum ScheduledAction {
+    /// Spawn these workers on the running fabric.
+    Deploy(Vec<WorkerConfig>),
+    /// Retire these workers: revoke channel membership, cancel their
+    /// parked receives, wake affected peers.
+    Evict(Vec<String>),
+}
+
+/// One timeline entry: an action firing at virtual time `at`.
+#[derive(Debug, Clone)]
+pub struct TimelineEntry {
+    pub at: VTime,
+    pub action: ScheduledAction,
+}
+
+struct LiveBinding {
+    deployer: Arc<dyn Deployer>,
+    notifier: Arc<Notifier>,
+}
+
+/// The job's scripted topology timeline, shared through
+/// [`JobRuntime`](crate::roles::JobRuntime). The round-driving global
+/// aggregator drains due entries at round boundaries (see
+/// `roles::global::apply_events`), which keeps membership changes
+/// synchronous with the round structure — and therefore deterministic for
+/// a given event script.
+pub struct TopologyTimeline {
+    /// Ascending by `at`; drained from the front.
+    entries: Mutex<Vec<TimelineEntry>>,
+    /// Handles of live-deployed pods, collected by the controller after
+    /// the fabric drains.
+    pods: Mutex<Vec<PodHandle>>,
+    binding: OnceLock<LiveBinding>,
+    elastic: bool,
+}
+
+impl TopologyTimeline {
+    /// The empty timeline every static job carries.
+    pub fn empty() -> Arc<Self> {
+        Self::new(Vec::new())
+    }
+
+    pub fn new(mut entries: Vec<TimelineEntry>) -> Arc<Self> {
+        entries.sort_by_key(|e| e.at);
+        Arc::new(Self {
+            elastic: !entries.is_empty(),
+            entries: Mutex::new(entries),
+            pods: Mutex::new(Vec::new()),
+            binding: OnceLock::new(),
+        })
+    }
+
+    /// Does this job have scheduled topology changes at all? Roles use
+    /// this to enable their churn-safe paths.
+    pub fn is_elastic(&self) -> bool {
+        self.elastic
+    }
+
+    /// Bind the live-deploy capability (called by the controller once the
+    /// job's deployer exists; idempotent).
+    pub fn bind(&self, deployer: Arc<dyn Deployer>, notifier: Arc<Notifier>) {
+        let _ = self.binding.set(LiveBinding { deployer, notifier });
+    }
+
+    /// Drain every entry due at or before `now`, in schedule order.
+    pub fn due(&self, now: VTime) -> Vec<TimelineEntry> {
+        let mut g = self.entries.lock().unwrap();
+        let n = g.iter().take_while(|e| e.at <= now).count();
+        g.drain(..n).collect()
+    }
+
+    /// Entries not yet fired (events scheduled past the job's end simply
+    /// never fire).
+    pub fn remaining(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Deploy one worker onto the running fabric at virtual time `at`.
+    pub fn live_deploy(&self, cfg: WorkerConfig, job: &Arc<JobRuntime>, at: VTime) -> Result<()> {
+        let b = self
+            .binding
+            .get()
+            .context("topology timeline has no deployer binding")?;
+        b.notifier
+            .emit(EventKind::Deploy, &job.spec.name, Json::from(1usize));
+        let pod = b.deployer.deploy_at(cfg, job, b.notifier.clone(), at)?;
+        self.pods.lock().unwrap().push(pod);
+        Ok(())
+    }
+
+    /// Hand the live-deployed pod handles to the controller (for status
+    /// collection after the fabric drains).
+    pub fn take_pods(&self) -> Vec<PodHandle> {
+        std::mem::take(&mut *self.pods.lock().unwrap())
     }
 }
 

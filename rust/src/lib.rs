@@ -7,6 +7,12 @@
 //! * the **TAG** abstraction — roles, channels, `groupBy` /
 //!   `groupAssociation` / `replica` / `isDataConsumer` attributes — and the
 //!   paper's Algorithm 1 expansion ([`tag`]),
+//! * **live topology extension** — [`tag::delta`] TAG deltas resolved into
+//!   incremental worker patches, a scheduled event timeline
+//!   ([`deploy::TopologyTimeline`]) that deploys joiners and retires
+//!   leavers on the running fabric, and churn-safe quorum aggregation
+//!   (the title's *extension* claim, exercised by `sim::run_churn` /
+//!   `flame churn`),
 //! * the **management plane** — controller, notifier, deployer, agent,
 //!   journaling store, compute/dataset registries with realms
 //!   ([`control`], [`notify`], [`deploy`], [`agent`], [`store`],

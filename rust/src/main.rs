@@ -11,6 +11,8 @@
 //! flame fig11   [--rounds 20]                             # §6.2 scenario
 //! flame scale   [--trainers 10000 --groups 100 --rounds 3] \
 //!               [--executor coop|threads] [--runners N]   # 10k-worker fabric demo
+//! flame churn   [--trainers 20 --groups 2 --rounds 9] \
+//!               [--churn 0.2] [--quorum 1.0] [--runners N] # live topology extension
 //! flame spec    --topo hybrid --trainers 50 --groups 5    # print TAG JSON
 //! ```
 
@@ -242,12 +244,64 @@ fn cmd_scale(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Live topology extension demo: 2-tier job grows a middle aggregator
+/// tier mid-run while trainers churn (see `sim::run_churn`).
+fn cmd_churn(args: &Args) -> Result<()> {
+    let trainers = args.get_usize("trainers", 20)?;
+    let groups = args.get_usize("groups", 2)?;
+    let rounds = args.get_u64("rounds", 9)?;
+    let churn: f64 = args
+        .get("churn", "0.2")
+        .parse()
+        .context("--churn must be a fraction in [0, 1)")?;
+    let quorum: f64 = args
+        .get("quorum", "1.0")
+        .parse()
+        .context("--quorum must be a fraction in (0, 1]")?;
+    let mut o = sim::SimOptions::mock();
+    o.per_shard = args.get_usize("per-shard", 64)?;
+    o.test_n = args.get_usize("test-n", 128)?;
+    o.executor = flame::control::Executor::Cooperative {
+        runners: args.get_usize("runners", 0)?,
+    };
+    let t0 = std::time::Instant::now();
+    let report = sim::run_churn(trainers, groups, rounds, churn, quorum, &o)?;
+    println!(
+        "churn: workers={} (initial {}) rounds={rounds} churn={churn} quorum={quorum} \
+         wall={:.2}s vtime={:.2}s acc={:.3}",
+        report.workers,
+        trainers + 1,
+        t0.elapsed().as_secs_f64(),
+        report.vtime_s,
+        report.final_acc.unwrap_or(f64::NAN),
+    );
+    println!("round,acc,round_time_s,trainers_alive,aggregators_alive");
+    let acc = report.metrics.series("acc");
+    let rt = report.metrics.series("round_time_s");
+    let ta = report.metrics.series("trainers_alive");
+    let aa = report.metrics.series("aggregators_alive");
+    let f = |s: &[(u64, f64)], i: usize| {
+        s.get(i).map(|x| format!("{:.4}", x.1)).unwrap_or_default()
+    };
+    for i in 0..acc.len() {
+        println!(
+            "{},{},{},{},{}",
+            i,
+            f(&acc, i),
+            f(&rt, i),
+            f(&ta, i),
+            f(&aa, i)
+        );
+    }
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: flame <expand|spec|run|fig10|fig11|scale> [--flags]");
+            eprintln!("usage: flame <expand|spec|run|fig10|fig11|scale|churn> [--flags]");
             std::process::exit(2);
         }
     };
@@ -258,6 +312,7 @@ fn main() {
         "fig10" => cmd_fig10(&args),
         "fig11" => cmd_fig11(&args),
         "scale" => cmd_scale(&args),
+        "churn" => cmd_churn(&args),
         other => bail!("unknown command '{other}'"),
     });
     if let Err(e) = result {

@@ -9,6 +9,16 @@
 //! (per-round trainer set + active flag from the coordinator) and `report`
 //! after `upload` (upload-delay feedback that drives the coordinator's
 //! load-balancing scheme).
+//!
+//! **Churn safety** (live topology extension): the aggregator never
+//! freezes a peer list. Distribution and collection run against the
+//! *currently alive* intersection of its trainer set with channel
+//! membership, and `collect` is a quorum loop (`ceil(quorum * alive)`
+//! current-round updates, re-entrant across cooperative yields) rather
+//! than a `recv_fifo` barrier — so a trainer that departs mid-job can
+//! never deadlock a round. Aggregators deployed by a mid-run tier
+//! extension receive their trainer partition as an `assign` message from
+//! the global sequencer before their first weights.
 
 use std::sync::Arc;
 
@@ -16,6 +26,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::channel::{Message, Payload};
 use crate::json::Json;
+use crate::net::VTime;
 use crate::workflow::{Composer, Tasklet};
 
 use super::{program, Program, WorkerEnv};
@@ -35,11 +46,28 @@ pub struct AggregatorCtx {
     mean_loss: f64,
     /// Virtual send time of the last upload (for delay reporting).
     upload_sent_at: u64,
+    /// Current-round updates received so far (re-entrancy across
+    /// cooperative yields of the quorum collect).
+    pending_updates: Vec<(String, Message, VTime)>,
+    /// The trainer-side role on `param-channel` (the other endpoint).
+    data_role: String,
     pub done: bool,
 }
 
 impl AggregatorCtx {
     fn new(env: WorkerEnv) -> Self {
+        let data_role = env
+            .job
+            .spec
+            .channel("param-channel")
+            .map(|ch| {
+                if ch.pair.0 == env.cfg.role {
+                    ch.pair.1.clone()
+                } else {
+                    ch.pair.0.clone()
+                }
+            })
+            .unwrap_or_else(|| "trainer".to_string());
         Self {
             env,
             weights: Arc::new(Vec::new()),
@@ -50,6 +78,8 @@ impl AggregatorCtx {
             total_samples: 0.0,
             mean_loss: f64::NAN,
             upload_sent_at: 0,
+            pending_updates: Vec::new(),
+            data_role,
             done: false,
         }
     }
@@ -57,8 +87,18 @@ impl AggregatorCtx {
     fn trainers(&self) -> Result<Vec<String>> {
         match &self.assigned {
             Some(t) => Ok(t.clone()),
-            None => Ok(self.env.chan("param-channel")?.ends()),
+            // role-scoped, not ends(): after a live extension the default
+            // group also holds the legacy parent and sibling aggregators
+            None => Ok(self.env.chan("param-channel")?.ends_of_role(&self.data_role)),
         }
+    }
+
+    /// This aggregator's trainers that are still members of the channel —
+    /// the churn-safe view every distribute/collect runs against.
+    fn alive_trainers(&self) -> Result<Vec<String>> {
+        let mine = self.trainers()?;
+        let members = self.env.chan("param-channel")?.ends_of_role(&self.data_role);
+        Ok(mine.into_iter().filter(|t| members.contains(t)).collect())
     }
 
     fn global_parent(&self) -> Result<String> {
@@ -79,40 +119,57 @@ fn recv_global(c: &mut AggregatorCtx) -> Result<()> {
     }
     c.skip = false;
     let parent = c.global_parent()?;
-    let msg = c.env.chan("agg-channel")?.recv(&parent)?;
-    match msg.kind.as_str() {
-        "weights" => {
-            let Payload::Floats(w) = msg.payload else {
-                bail!("weights without floats");
-            };
-            c.weights = w;
-            c.round = msg.round;
-        }
-        "skip" => {
-            // not selected this round: idle, and idle our trainers too
-            c.skip = true;
-            c.round = msg.round;
-            let param = c.env.chan("param-channel")?;
-            for t in c.trainers()? {
-                param.send(&t, Message::control("skip", msg.round))?;
+    loop {
+        let msg = c.env.chan("agg-channel")?.recv(&parent)?;
+        match msg.kind.as_str() {
+            "assign" => {
+                // live extension: the sequencer's trainer partition for
+                // this aggregator; precedes the round's weights. Consuming
+                // it is idempotent across re-entries (set-and-continue).
+                c.assigned = msg.meta.get("trainers").as_arr().map(|a| {
+                    a.iter()
+                        .filter_map(|t| t.as_str().map(str::to_string))
+                        .collect()
+                });
+                continue;
             }
+            "weights" => {
+                let Payload::Floats(w) = msg.payload else {
+                    bail!("weights without floats");
+                };
+                c.weights = w;
+                c.round = msg.round;
+            }
+            "skip" => {
+                // not selected this round: idle, and idle our trainers too
+                c.skip = true;
+                c.round = msg.round;
+                let param = c.env.chan("param-channel")?;
+                for t in c.alive_trainers()? {
+                    param.send(&t, Message::control("skip", msg.round))?;
+                }
+            }
+            "done" => {
+                // H-FL: propagate termination downstream — to this
+                // aggregator's own (still-present) trainers, so a shared
+                // post-extension group never sees duplicate `done`s.
+                let param = c.env.chan("param-channel")?;
+                for t in c.alive_trainers()? {
+                    param.send(&t, Message::control("done", msg.round))?;
+                }
+                c.done = true;
+            }
+            other => bail!("aggregator got unexpected '{other}' from global"),
         }
-        "done" => {
-            // H-FL: propagate termination downstream.
-            let param = c.env.chan("param-channel")?;
-            param.broadcast(Message::control("done", msg.round))?;
-            c.done = true;
-        }
-        other => bail!("aggregator got unexpected '{other}' from global"),
+        return Ok(());
     }
-    Ok(())
 }
 
 fn distribute(c: &mut AggregatorCtx) -> Result<()> {
     if c.done || !c.active || c.skip {
         return Ok(());
     }
-    let trainers = c.trainers()?;
+    let trainers = c.alive_trainers()?;
     let param = c.env.chan("param-channel")?;
     let msg = Message::floats("weights", c.round, c.weights.clone());
     let mut items = Vec::with_capacity(trainers.len());
@@ -128,16 +185,40 @@ fn collect_and_aggregate(c: &mut AggregatorCtx) -> Result<()> {
     if c.done || !c.active || c.skip {
         return Ok(());
     }
-    let trainers = c.trainers()?;
-    if trainers.is_empty() {
+    let elastic = c.env.job.timeline.is_elastic();
+    // Quorum collect against *current* membership (not a frozen peer
+    // list): the target re-computes on every re-entry, so departures
+    // shrink it instead of blocking the round. Partial progress lives in
+    // `c.pending_updates` (re-entrant across cooperative yields).
+    let alive = c.alive_trainers()?;
+    if alive.is_empty() && !elastic {
         bail!("aggregator '{}' has no trainers", c.env.cfg.id);
     }
-    let param = c.env.chan("param-channel")?;
-    let got = param.recv_fifo(&trainers)?;
+    let target = super::quorum_target(alive.len(), c.env.job.tcfg.quorum);
+    c.pending_updates.retain(|(_, m, _)| m.round == c.round);
+    while c.pending_updates.len() < target {
+        let (from, msg, arrival) = c
+            .env
+            .chan("param-channel")?
+            .recv_any_kind_timed("update")?;
+        if msg.round != c.round {
+            continue; // straggler update from a past round: drop
+        }
+        c.pending_updates.push((from, msg, arrival));
+    }
+    let mut got = std::mem::take(&mut c.pending_updates);
+    if got.is_empty() {
+        // all trainers departed: keep the model, contribute zero weight
+        c.total_samples = 0.0;
+        c.mean_loss = 0.0;
+        return Ok(());
+    }
+    // deterministic aggregation order — same sort recv_fifo applied
+    got.sort_by(|a, b| (a.2, &a.0).cmp(&(b.2, &b.0)));
     let mut updates: Vec<Arc<Vec<f32>>> = Vec::with_capacity(got.len());
     let mut samples: Vec<f64> = Vec::with_capacity(got.len());
     let mut losses = 0.0;
-    for (_, msg) in &got {
+    for (_, msg, _) in &got {
         let Payload::Floats(w) = &msg.payload else {
             bail!("update without floats");
         };
@@ -147,10 +228,16 @@ fn collect_and_aggregate(c: &mut AggregatorCtx) -> Result<()> {
     }
     c.total_samples = samples.iter().sum();
     c.mean_loss = losses / got.len() as f64;
-    let weights: Vec<f32> = samples
-        .iter()
-        .map(|&s| (s / c.total_samples) as f32)
-        .collect();
+    // zero-sample updates can reach us under churn; degrade to a uniform
+    // mean rather than dividing by zero
+    let weights: Vec<f32> = if c.total_samples > 0.0 {
+        samples
+            .iter()
+            .map(|&s| (s / c.total_samples) as f32)
+            .collect()
+    } else {
+        vec![1.0 / samples.len() as f32; samples.len()]
+    };
     let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
     let t0 = std::time::Instant::now();
     let agg = crate::runtime::aggregate_any(c.env.job.compute.as_ref(), &refs, &weights)?;

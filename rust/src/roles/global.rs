@@ -15,6 +15,17 @@
 //! CO-FL variant (paper Fig 9, §6.1): `get_coord_ends` inserted before
 //! `distribute` (the coordinator decides which aggregators participate) and
 //! `end_of_train` **removed** — the coordinator owns termination.
+//!
+//! **Elastic variant** (live topology extension): when the job carries a
+//! [`crate::deploy::TopologyTimeline`], an `apply_events` tasklet is
+//! inserted at the top of the round loop. The global aggregator is the
+//! round sequencer, so draining due events there — deploying joiners,
+//! evicting leavers, joining freshly created channels, re-partitioning
+//! trainers across the (possibly new) middle tier — keeps every
+//! membership change aligned with a round boundary, which is what makes a
+//! scripted timeline deterministic. Collects run against *current*
+//! membership with the configured quorum fraction, so a departed worker
+//! can never block a round.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -53,6 +64,13 @@ pub struct GlobalCtx {
     /// collect tasklet is re-entrant: a cooperative yield mid-collection
     /// keeps what already arrived and resumes the receive loop.
     pending_updates: Vec<(String, Message, VTime)>,
+    /// Live topology extension enabled (the job carries a timeline).
+    elastic: bool,
+    /// Membership changed since the last trainer partition was sent to the
+    /// middle tier.
+    assign_dirty: bool,
+    /// The data-consumer role's name (trainer membership queries).
+    data_role: Option<String>,
     pub done: bool,
 }
 
@@ -79,6 +97,14 @@ impl GlobalCtx {
             .filter(|ch| ch.pair.0 != "global-aggregator" && ch.pair.1 != "global-aggregator")
             .filter(|_| env.job.spec.role("global-aggregator").is_some())
             .map(|ch| ch.group_by.len().max(1));
+        let elastic = env.job.timeline.is_elastic();
+        let data_role = env
+            .job
+            .spec
+            .roles
+            .iter()
+            .find(|r| r.is_data_consumer)
+            .map(|r| r.name.clone());
         Self {
             env,
             flat: Vec::new(),
@@ -93,18 +119,24 @@ impl GlobalCtx {
             ack_updates: coordinated,
             hybrid_clusters,
             pending_updates: Vec::new(),
+            elastic,
+            assign_dirty: false,
+            data_role,
             done: false,
         }
     }
 
     fn children_channel(&self) -> &'static str {
         // C-FL/Hybrid: trainers sit on param-channel; H-FL/CO-FL: the
-        // aggregator tier sits on agg-channel.
-        if self.env.chans.contains_key("agg-channel") {
-            "agg-channel"
-        } else {
-            "param-channel"
+        // aggregator tier sits on agg-channel. The tier channel only wins
+        // while it has peers, so an elastic job keeps talking to its
+        // trainers directly until the middle tier actually deploys.
+        if let Some(h) = self.env.chans.get("agg-channel") {
+            if !h.ends().is_empty() {
+                return "agg-channel";
+            }
         }
+        "param-channel"
     }
 
     fn children(&self) -> Result<Vec<String>> {
@@ -120,6 +152,85 @@ impl GlobalCtx {
 fn init(c: &mut GlobalCtx) -> Result<()> {
     c.flat = c.env.job.init_flat.as_ref().clone();
     assert_eq!(c.flat.len(), c.env.job.compute.d_pad());
+    Ok(())
+}
+
+/// Elastic only: drain the topology timeline at the round boundary. The
+/// global is the round sequencer, so applying joins/leaves/extensions
+/// here — before selection and distribution — keeps membership stable
+/// within a round and makes the scripted timeline deterministic.
+///
+/// Never receives, so it cannot yield: safe to re-enter trivially.
+fn apply_events(c: &mut GlobalCtx) -> Result<()> {
+    if c.done || !c.elastic {
+        return Ok(());
+    }
+    let now = c.env.now();
+    let due = c.env.job.timeline.due(now);
+    for entry in due {
+        match entry.action {
+            crate::deploy::ScheduledAction::Deploy(cfgs) => {
+                // join any channel the extended spec gives this role (the
+                // new tier's uplink) *before* spawning its members, so
+                // joiners observe the sequencer from their first poll
+                let missing: Vec<String> = c
+                    .env
+                    .job
+                    .spec
+                    .channels_of(&c.env.cfg.role)
+                    .iter()
+                    .filter(|ch| !c.env.chans.contains_key(&ch.name))
+                    .map(|ch| ch.name.clone())
+                    .collect();
+                for name in missing {
+                    c.env.join_channel(&name, "default")?;
+                }
+                let job = c.env.job.clone();
+                for cfg in cfgs {
+                    job.timeline.live_deploy(cfg, &job, entry.at)?;
+                }
+                c.assign_dirty = true;
+            }
+            crate::deploy::ScheduledAction::Evict(ids) => {
+                for id in &ids {
+                    c.env.job.chan_mgr.evict(id, entry.at);
+                }
+                c.assign_dirty = true;
+            }
+        }
+    }
+    // (re)partition trainers across the middle tier whenever membership
+    // moved: each aggregator gets a disjoint slice of the current trainer
+    // population, round-robin over the sorted lists (deterministic).
+    if c.assign_dirty {
+        if let Some(data_role) = c.data_role.clone() {
+            // re-partitioning needs both views: the tier (agg-channel) and
+            // the trainer population (param-channel). A topology where the
+            // sequencer cannot see the trainers (static H-FL groups) keeps
+            // per-group membership instead — alive_trainers() handles it.
+            if c.env.chans.contains_key("agg-channel") && c.env.chans.contains_key("param-channel")
+            {
+                let aggs = c.env.chan("agg-channel")?.ends();
+                if !aggs.is_empty() {
+                    let trainers = c.env.chan("param-channel")?.ends_of_role(&data_role);
+                    let mut parts: Vec<Vec<Json>> = vec![Vec::new(); aggs.len()];
+                    for (i, t) in trainers.iter().enumerate() {
+                        parts[i % aggs.len()].push(Json::Str(t.clone()));
+                    }
+                    let agg = c.env.chan("agg-channel")?;
+                    for (a, part) in aggs.iter().zip(parts) {
+                        let mut meta = Json::obj();
+                        meta.insert("trainers", Json::Arr(part));
+                        agg.send(
+                            a,
+                            Message::control("assign", c.round).with_meta(Json::Obj(meta)),
+                        )?;
+                    }
+                }
+            }
+        }
+        c.assign_dirty = false;
+    }
     Ok(())
 }
 
@@ -166,22 +277,46 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
     // Collect message-by-message; partial progress lives in
     // `c.pending_updates`, making this tasklet re-entrant across
     // cooperative yields (nothing is re-received, no ack is duplicated).
+    //
+    // The target is quorum- and membership-aware: `ceil(quorum * alive)`
+    // over the *currently joined* selected children, recomputed on every
+    // re-entry. A child that departs mid-round shrinks the target instead
+    // of blocking the round (eviction wakes this collect so it re-counts).
     let expected = match c.hybrid_clusters {
         // Hybrid: one update per cluster, from whichever delegate.
         Some(k) => k,
-        None => c.selected.len(),
+        None => {
+            let members = c.env.chan(chan_name)?.ends();
+            let alive = c.selected.iter().filter(|s| members.contains(*s)).count();
+            super::quorum_target(alive, c.env.job.tcfg.quorum)
+        }
     };
+    if c.hybrid_clusters.is_none() {
+        // quorum fractions leave slow updates of past rounds queued; they
+        // are stale by the time they arrive and must not count here
+        c.pending_updates.retain(|(_, m, _)| m.round == c.round);
+    }
     while c.pending_updates.len() < expected {
         let (from, msg, arrival) = {
             let chan = c.env.chan(chan_name)?;
             chan.recv_any_kind_timed("update")?
         };
+        if c.hybrid_clusters.is_none() && msg.round != c.round {
+            continue; // straggler update from a past round: drop
+        }
         if c.hybrid_clusters.is_none() && !c.selected.contains(&from) {
+            if c.elastic {
+                continue; // e.g. a retired child's in-flight update
+            }
             anyhow::bail!("unexpected update from unselected child '{from}'");
         }
         c.pending_updates.push((from, msg, arrival));
     }
     let mut got = std::mem::take(&mut c.pending_updates);
+    if got.is_empty() {
+        // every selected child departed this round: keep the model
+        return Ok(());
+    }
     // Aggregate in virtual-arrival order with a deterministic sender
     // tie-break, so threaded and cooperative execution produce
     // bit-identical weighted sums.
@@ -220,7 +355,13 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
         );
     }
     let total: f64 = samples.iter().sum();
-    let weights: Vec<f32> = samples.iter().map(|&s| (s / total) as f32).collect();
+    // all-zero samples (every contributor lost its trainers to churn and
+    // relayed its stale model) degrade to a uniform mean instead of 0/0
+    let weights: Vec<f32> = if total > 0.0 {
+        samples.iter().map(|&s| (s / total) as f32).collect()
+    } else {
+        vec![1.0 / samples.len() as f32; samples.len()]
+    };
     let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
     let t0 = Instant::now();
     let mean = crate::runtime::aggregate_any(c.env.job.compute.as_ref(), &refs, &weights)?;
@@ -249,6 +390,26 @@ fn eval(c: &mut GlobalCtx) -> Result<()> {
     m.record(&me, "round_time_s", c.round, round_time as f64 / 1e6);
     m.record(&me, "vtime_s", c.round, now as f64 / 1e6);
     m.record(&me, "bytes_total", c.round, m.total_bytes() as f64);
+    if c.elastic {
+        // live-extension observability: population per tier, per round
+        if let Some(data_role) = &c.data_role {
+            if let Ok(param) = c.env.chan("param-channel") {
+                m.record(
+                    &me,
+                    "trainers_alive",
+                    c.round,
+                    param.ends_of_role(data_role).len() as f64,
+                );
+            }
+        }
+        let aggs = c
+            .env
+            .chans
+            .get("agg-channel")
+            .map(|h| h.ends().len())
+            .unwrap_or(0);
+        m.record(&me, "aggregators_alive", c.round, aggs as f64);
+    }
     c.round += 1;
     if c.round >= c.env.job.rounds() {
         c.done = true;
@@ -386,11 +547,18 @@ pub fn build(env: WorkerEnv, coordinated: bool) -> Result<Box<dyn Program>> {
         env.job.tcfg.aggregation,
         AggregationPolicy::Asynchronous { .. }
     );
+    let elastic = env.job.timeline.is_elastic();
     let ctx = GlobalCtx::new(env, coordinated);
     let chain = if asynchronous {
         async_chain()
     } else {
         let mut chain = base_chain();
+        if elastic {
+            // live topology extension: the round sequencer drains the
+            // event timeline at each round boundary (chain surgery, same
+            // Table 1 mechanism as the CO-FL derivation)
+            chain.insert_before("select", Tasklet::new("apply_events", apply_events))?;
+        }
         if coordinated {
             // paper Fig 9: insert get_coord_ends ahead of the distribution
             // path (here: before selection, which feeds distribute), and
@@ -430,5 +598,24 @@ mod tests {
     #[test]
     fn async_chain_shape() {
         assert_eq!(async_chain().aliases(), vec!["init", "kickoff", "serve"]);
+    }
+
+    #[test]
+    fn elastic_surgery_inserts_event_sequencer() {
+        let mut c = base_chain();
+        c.insert_before("select", Tasklet::new("apply_events", apply_events))
+            .unwrap();
+        assert_eq!(
+            c.aliases(),
+            vec![
+                "init",
+                "apply_events",
+                "select",
+                "distribute",
+                "collect",
+                "eval",
+                "end_of_train"
+            ]
+        );
     }
 }

@@ -30,6 +30,7 @@ use anyhow::{bail, Context, Result};
 use crate::algos::TrainingConfig;
 use crate::channel::{ChannelHandle, ChannelManager, RECV_TIMEOUT};
 use crate::data::Dataset;
+use crate::deploy::TopologyTimeline;
 use crate::metrics::MetricsHub;
 use crate::net::{VClock, VTime};
 use crate::prng::Rng;
@@ -53,6 +54,9 @@ pub struct JobRuntime {
     /// Initial global model (He-init from the artifact spec, or zeros for
     /// the mock runtime).
     pub init_flat: Arc<Vec<f32>>,
+    /// Scripted live-extension timeline (empty for static jobs). The
+    /// round-driving global aggregator drains it at round boundaries.
+    pub timeline: Arc<TopologyTimeline>,
 }
 
 impl JobRuntime {
@@ -68,6 +72,10 @@ pub struct WorkerEnv {
     pub clock: Arc<Mutex<VClock>>,
     pub chans: BTreeMap<String, ChannelHandle>,
     pub rng: Rng,
+    /// Execution mode shared by this worker's channel handles — kept so
+    /// channels joined *after* startup ([`Self::join_channel`]) wait the
+    /// same way as the ones joined at build.
+    pub park: Arc<WorkerPark>,
 }
 
 impl WorkerEnv {
@@ -113,6 +121,7 @@ impl WorkerEnv {
             clock,
             chans,
             rng,
+            park,
         })
     }
 
@@ -120,6 +129,33 @@ impl WorkerEnv {
         self.chans
             .get(name)
             .with_context(|| format!("worker '{}' has no channel '{name}'", self.cfg.id))
+    }
+
+    /// Join an additional channel at runtime — live topology extension:
+    /// e.g. the global aggregator joining the freshly created
+    /// `agg-channel` when a middle tier grows in mid-job. No-op if the
+    /// channel is already joined; the new handle shares this worker's
+    /// clock and park.
+    pub fn join_channel(&mut self, name: &str, group: &str) -> Result<()> {
+        if self.chans.contains_key(name) {
+            return Ok(());
+        }
+        let chan = self
+            .job
+            .spec
+            .channel(name)
+            .with_context(|| format!("worker '{}' joining unknown channel '{name}'", self.cfg.id))?;
+        let handle = self.job.chan_mgr.join_with_park(
+            name,
+            group,
+            &self.cfg.id,
+            &self.cfg.role,
+            chan.backend,
+            self.clock.clone(),
+            self.park.clone(),
+        )?;
+        self.chans.insert(name.to_string(), handle);
+        Ok(())
     }
 
     pub fn now(&self) -> VTime {
@@ -199,6 +235,19 @@ pub(crate) fn program<C: Send + 'static>(
     })
 }
 
+/// How many of `alive` children an aggregation must hear from before it
+/// proceeds: `ceil(quorum * alive)`, clamped to `[1, alive]` (and `0`
+/// when nobody is left — the round then skips aggregation rather than
+/// blocking forever). Quorum 1.0 (the default) is the classic full
+/// barrier; fractions trade straggler latency for deterministic
+/// reproducibility (see DESIGN.md "Topology extension lifecycle").
+pub(crate) fn quorum_target(alive: usize, quorum: f64) -> usize {
+    if alive == 0 {
+        return 0;
+    }
+    ((alive as f64 * quorum).ceil() as usize).clamp(1, alive)
+}
+
 /// Build the program for a worker, dispatching on its role name and the
 /// job's topology flavour. This is the role/program binding of §4.1 ("the
 /// flexible binding between role and program").
@@ -253,6 +302,7 @@ pub mod tests_support {
             test_set: Arc::new(test),
             time_model: ComputeTimeModel::Free,
             init_flat,
+            timeline: TopologyTimeline::empty(),
         });
         (job, cfgs)
     }
@@ -288,6 +338,26 @@ mod tests {
             let env = WorkerEnv::new(cfg, job.clone()).unwrap();
             assert!(build_program(env).is_ok());
         }
+    }
+
+    #[test]
+    fn quorum_target_bounds() {
+        assert_eq!(quorum_target(0, 1.0), 0);
+        assert_eq!(quorum_target(4, 1.0), 4);
+        assert_eq!(quorum_target(4, 0.5), 2);
+        assert_eq!(quorum_target(3, 0.5), 2); // ceil, not floor
+        assert_eq!(quorum_target(5, 0.01), 1); // never waits on nobody
+    }
+
+    #[test]
+    fn join_channel_is_idempotent_and_validated() {
+        let (job, cfgs) = mini_job();
+        let trainer_cfg = cfgs.iter().find(|c| c.role == "trainer").unwrap().clone();
+        let mut env = WorkerEnv::new(trainer_cfg, job).unwrap();
+        // already joined: no-op
+        env.join_channel("param-channel", "default").unwrap();
+        // unknown channels are rejected
+        assert!(env.join_channel("ghost-channel", "default").is_err());
     }
 
     #[test]

@@ -35,8 +35,13 @@ pub struct TrainerCtx {
     plan: Vec<usize>,
     batch_pos: usize,
     balancer: Option<FedBalancer>,
-    /// Current upstream aggregator (fixed in H-FL, per-round in CO-FL).
+    /// Current upstream aggregator: learned from whoever distributed this
+    /// round's weights (so a live tier extension re-parents trainers
+    /// without re-deployment), or pinned by the CO-FL coordinator.
     pub parent: Option<String>,
+    /// CO-FL: the coordinator assigned `parent`; fetch must receive from
+    /// exactly that worker rather than from whoever sends first.
+    pinned: bool,
     pub round: u64,
     /// True when this round was a non-participation round ("skip").
     skip: bool,
@@ -57,6 +62,7 @@ impl TrainerCtx {
             batch_pos: 0,
             balancer: None,
             parent: None,
+            pinned: false,
             round: 0,
             skip: false,
             done: false,
@@ -116,15 +122,18 @@ fn fetch(c: &mut TrainerCtx) -> Result<()> {
         return Ok(());
     }
     let param = c.env.chan("param-channel")?;
-    if c.parent.is_none() {
-        let ends = param.ends();
-        if ends.len() == 1 {
-            c.parent = Some(ends[0].clone());
-        }
-    }
-    let (from, msg) = match &c.parent {
-        Some(p) => (p.clone(), param.recv(p)?),
-        None => param.recv_any()?,
+    // Unpinned trainers take the round's distribution from whoever sends
+    // it: in a static topology that is always the same parent, and after a
+    // live tier extension it is the trainer's new group aggregator — the
+    // re-parenting needs no control message at all.
+    let (from, msg) = if c.pinned {
+        let p = c
+            .parent
+            .clone()
+            .context("pinned trainer has no assigned parent")?;
+        (p.clone(), param.recv(&p)?)
+    } else {
+        param.recv_any()?
     };
     match msg.kind.as_str() {
         "weights" => {
@@ -244,6 +253,7 @@ fn get_assignment(c: &mut TrainerCtx) -> Result<()> {
     match msg.kind.as_str() {
         "assign" => {
             c.parent = msg.meta.get("parent").as_str().map(str::to_string);
+            c.pinned = c.parent.is_some();
         }
         "done" => c.done = true,
         other => bail!("unexpected coordinator message '{other}'"),

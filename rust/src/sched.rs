@@ -224,8 +224,20 @@ impl Waker {
 }
 
 /// The worker fabric: spawn tasks, then [`run`](Self::run) the pool.
+///
+/// Clones share the same fabric, which is what lets a *running* task
+/// trigger further spawns: live topology extension deploys new workers
+/// through a clone held by the deployer while the pool is mid-run.
 pub struct Scheduler {
     shared: Arc<SchedShared>,
+}
+
+impl Clone for Scheduler {
+    fn clone(&self) -> Self {
+        Self {
+            shared: self.shared.clone(),
+        }
+    }
 }
 
 impl Default for Scheduler {
@@ -260,6 +272,24 @@ impl Scheduler {
         });
         g.live += 1;
         g.ready.push(Reverse((0, id)));
+        id
+    }
+
+    /// Register a task in the parked (Waiting) state: it will not run
+    /// until its waker fires. This is the spawn used for **live** (mid-run)
+    /// deployment — bind the waker first, then wake at the worker's join
+    /// time — and it is safe while the runner pool is active: the wake's
+    /// notify hands the fresh task to an idle runner. The spawn must
+    /// originate from a running task (or happen before [`Self::run`]),
+    /// otherwise the deadlock detector could fire between spawn and wake.
+    pub fn spawn_parked(&self, task: Box<dyn RunnableTask>) -> TaskId {
+        let mut g = self.shared.state.lock().unwrap();
+        let id = g.tasks.len();
+        g.tasks.push(TaskSlot {
+            state: TaskState::Waiting,
+            task: Some(task),
+        });
+        g.live += 1;
         id
     }
 
@@ -483,6 +513,58 @@ mod tests {
         for polls in handles {
             assert_eq!(polls.load(Ordering::SeqCst), 3);
         }
+    }
+
+    #[test]
+    fn spawn_parked_waits_for_its_wake() {
+        let sched = Scheduler::new();
+        let (t, park, polls, _) = task("late", 0, false);
+        let id = sched.spawn_parked(Box::new(t));
+        park.set_waker(sched.waker(id));
+        sched.waker(id).wake(7);
+        sched.run(1);
+        assert_eq!(polls.load(Ordering::SeqCst), 1);
+        assert_eq!(sched.live(), 0);
+    }
+
+    #[test]
+    fn live_spawn_from_a_running_task() {
+        // a polled task deploys a new task onto the running fabric — the
+        // mechanism behind mid-job topology extension
+        struct Spawner {
+            sched: Scheduler,
+            child_polls: Arc<AtomicUsize>,
+        }
+        impl RunnableTask for Spawner {
+            fn name(&self) -> &str {
+                "spawner"
+            }
+            fn poll(&mut self) -> PollOutcome {
+                let park = WorkerPark::cooperative();
+                let child = YieldTask {
+                    name: "child".into(),
+                    yields: 0,
+                    park: park.clone(),
+                    polls: self.child_polls.clone(),
+                    failed: Arc::new(Mutex::new(None)),
+                    wake_self: false,
+                };
+                let id = self.sched.spawn_parked(Box::new(child));
+                park.set_waker(self.sched.waker(id));
+                self.sched.waker(id).wake(3);
+                PollOutcome::Done
+            }
+            fn fail(&mut self, _reason: &str) {}
+        }
+        let sched = Scheduler::new();
+        let child_polls = Arc::new(AtomicUsize::new(0));
+        sched.spawn(Box::new(Spawner {
+            sched: sched.clone(),
+            child_polls: child_polls.clone(),
+        }));
+        sched.run(2);
+        assert_eq!(child_polls.load(Ordering::SeqCst), 1);
+        assert_eq!(sched.live(), 0);
     }
 
     #[test]

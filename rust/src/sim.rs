@@ -14,6 +14,14 @@
 //!   seed's thread-per-worker execution capped out around 50 trainers;
 //!   the [`crate::sched`] fabric multiplexes all 10k workers over one
 //!   runner thread per CPU core.
+//! * [`run_churn`] — the live-topology-extension headline (the paper's
+//!   §6 extension stories, end to end): a job that *starts* 2-tier
+//!   (trainers ↔ global) and *finishes* 3-tier H-FL — a middle
+//!   aggregator tier deploys mid-run via a scheduled
+//!   [`crate::tag::TagDelta`] — while fresh trainers join and a
+//!   configurable fraction of the initial trainers churns out, with
+//!   quorum-collect keeping every round's aggregation from blocking on
+//!   departed workers.
 //!
 //! All use the virtual-time network (the `tc` stand-in — DESIGN.md
 //! substitutions) so runs are deterministic and fast, while training is
@@ -233,6 +241,91 @@ pub fn run_scale(
     ctl.submit(spec, o.job_options())
 }
 
+// ---------------------------------------------------------------- churn
+
+/// Live topology extension under churn. The job starts as a 2-tier
+/// classical deployment (`trainers` ↔ 1 global aggregator); one third
+/// into the run a scheduled [`crate::tag::TopologyEvent::Extend`] grows a
+/// middle tier of `groups` aggregators (plus ~10% fresh trainers — the
+/// "join" story), and `churn_frac` of the initial trainers depart at
+/// staggered virtual times over the remaining rounds. `quorum` is the
+/// aggregation quorum fraction (1.0 keeps the run bit-deterministic; see
+/// DESIGN.md).
+///
+/// Extension/departure timestamps are calibrated from a short unextended
+/// run, exactly like [`run_fig10`] calibrates its congestion onset.
+/// Reported series of interest beyond the usual `acc`/`round_time_s`:
+/// `trainers_alive` and `aggregators_alive`, the per-round population of
+/// each tier.
+pub fn run_churn(
+    trainers: usize,
+    groups: usize,
+    rounds: u64,
+    churn_frac: f64,
+    quorum: f64,
+    o: &SimOptions,
+) -> Result<JobReport> {
+    anyhow::ensure!(trainers >= 4, "run_churn needs at least 4 trainers");
+    anyhow::ensure!(groups >= 1, "run_churn needs at least 1 group");
+    anyhow::ensure!(rounds >= 3, "run_churn needs at least 3 rounds");
+    anyhow::ensure!(
+        (0.0..1.0).contains(&churn_frac),
+        "churn_frac must be in [0, 1)"
+    );
+    let base = |r: u64| {
+        topo::classical(trainers, Backend::P2p)
+            .name("churn")
+            .rounds(r)
+            .set("lr", Json::Num(o.lr))
+            .set("local_steps", o.local_steps)
+            .set("seed", o.seed)
+            .set("quorum", Json::Num(quorum))
+            .build()
+    };
+
+    // calibrate the per-round virtual duration on the unextended topology
+    let cal = {
+        let mut ctl = Controller::new(Arc::new(Store::in_memory()));
+        ctl.submit(base(2), o.job_options())?
+    };
+    let round_us = ((cal.vtime_s / 2.0) * 1e6).max(1.0) as u64 + 1;
+
+    // one third in: grow the middle tier + ~10% fresh trainers
+    let spec = base(rounds);
+    let extend_round = (rounds / 3).max(1);
+    let extend_at = round_us * extend_round + round_us / 2;
+    let join = (trainers / 10).max(1);
+    let mut delta = crate::tag::delta::add_tier_delta(&spec, groups)?;
+    for i in 0..join {
+        delta.add_datasets.push(crate::tag::DatasetRef {
+            name: format!("d{}", trainers + i),
+            group: "default".into(),
+            realm: "*".into(),
+            url: format!("synth://join/{i}"),
+        });
+    }
+    let mut events = vec![crate::tag::TopologyEvent::Extend {
+        at_us: extend_at,
+        delta,
+    }];
+
+    // churn: `churn_frac` of the initial trainers leave, spread across the
+    // post-extension rounds (victims strided across the population)
+    let departures = ((trainers as f64) * churn_frac).round() as usize;
+    let tail_rounds = (rounds - extend_round).max(1);
+    for i in 0..departures {
+        let victim = format!("churn-trainer-{}", i * trainers / departures.max(1));
+        let at = extend_at + round_us * (1 + i as u64 % tail_rounds);
+        events.push(crate::tag::TopologyEvent::Leave {
+            at_us: at,
+            workers: vec![victim],
+        });
+    }
+
+    let mut ctl = Controller::new(Arc::new(Store::in_memory()));
+    ctl.submit(spec, o.job_options().with_events(events))
+}
+
 /// Virtual time (seconds) at which a job's `acc` series first reaches
 /// `target`; `None` if it never does.
 pub fn time_to_accuracy(report: &JobReport, target: f64) -> Option<f64> {
@@ -351,6 +444,28 @@ mod tests {
             "10k-trainer run took {:?}",
             t0.elapsed()
         );
+    }
+
+    #[test]
+    fn run_churn_grows_tier_and_survives_departures() {
+        let mut o = small_opts();
+        o.per_shard = 24;
+        let r = run_churn(10, 2, 6, 0.2, 1.0, &o).unwrap();
+        assert_eq!(r.metrics.series("acc").len(), 6);
+        assert!(r.final_acc.is_some());
+        // the middle tier appears mid-run...
+        let aggs = r.metrics.series("aggregators_alive");
+        assert_eq!(aggs.first().map(|(_, v)| *v), Some(0.0), "{aggs:?}");
+        assert_eq!(aggs.last().map(|(_, v)| *v), Some(2.0), "{aggs:?}");
+        // ...the population grows by the joiner, then shrinks under churn
+        let t = r.metrics.series("trainers_alive");
+        assert_eq!(t.first().map(|(_, v)| *v), Some(10.0), "{t:?}");
+        let peak = t.iter().map(|(_, v)| *v).fold(0.0, f64::max);
+        assert_eq!(peak, 11.0, "join never materialised: {t:?}");
+        let last = t.last().unwrap().1;
+        assert!((8.0..=10.0).contains(&last), "churn never materialised: {t:?}");
+        // initial 10 + 1 joiner + 2 aggregators + 1 global = 14 pods ran
+        assert_eq!(r.workers, 14);
     }
 
     #[test]

@@ -1,0 +1,550 @@
+//! TAG deltas — live topology extension (the paper's title claim, §6).
+//!
+//! A static reproduction expands a TAG once and freezes the worker set;
+//! this module makes the *extension* part of "Simplifying Topology
+//! Extension" executable. Two layers:
+//!
+//! * [`TagDelta`] — a **spec-level** edit: roles/channels/datasets to add
+//!   or remove. `delta.apply(spec)` produces the extended [`JobSpec`]
+//!   (re-validated by `PreCheck`), and [`TagDelta::diff`] recovers the
+//!   delta between two specs. Deltas are what a [`TopologyEvent`] carries
+//!   through a job's event timeline.
+//! * [`WorkerDelta`] — a **worker-level** patch between two expansions:
+//!   `diff_workers(expand(a), expand(b))` lists exactly the
+//!   [`WorkerConfig`]s to deploy and the worker ids to retire, and
+//!   [`apply_workers`] reconstructs `expand(b)` from `expand(a)` plus the
+//!   patch (property-tested in `rust/tests/properties.rs`). The
+//!   controller resolves each timeline event into such a patch at submit
+//!   time, so mid-run extension never re-runs Algorithm 1 on the fabric's
+//!   critical path.
+//!
+//! The patch identity `expand(b) == apply_workers(expand(a), diff)` holds
+//! because Algorithm 1 is deterministic and role-major: workers common to
+//! both expansions (identical id, placement, channel groups, dataset)
+//! keep their relative order, so a positional insert/remove patch is
+//! exact.
+//!
+//! # Event timeline JSON
+//!
+//! Job specs may carry an `events` array (see [`TopologyEvent`]): each
+//! entry fires at a virtual timestamp `at_us` once the running job's
+//! clock passes it. Supported kinds:
+//!
+//! ```json
+//! {"kind": "extend", "at_us": 2000000, "delta": {
+//!     "addRoles": [...], "addChannels": [...], "addDatasets": [...],
+//!     "removeRoles": [...], "removeChannels": [...], "removeDatasets": [...]
+//! }}
+//! {"kind": "leave", "at_us": 3500000, "workers": ["job-trainer-3"]}
+//! ```
+//!
+//! A *join* (growing the trainer population) is an `extend` whose delta
+//! adds datasets: Algorithm 1 expands one data-consumer worker per
+//! dataset, so new datasets become new trainers.
+//!
+//! ```
+//! use flame::tag::delta::TopologyEvent;
+//! let ev = TopologyEvent::from_json(
+//!     &flame::json::Json::parse(
+//!         r#"{"kind": "leave", "at_us": 1500, "workers": ["j-trainer-0"]}"#,
+//!     )
+//!     .unwrap(),
+//! )
+//! .unwrap();
+//! assert_eq!(ev.at_us(), 1500);
+//! let back = TopologyEvent::from_json(&ev.to_json()).unwrap();
+//! assert_eq!(back.at_us(), 1500);
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+use crate::net::VTime;
+use crate::registry::Registry;
+
+use super::expand::{expand, WorkerConfig};
+use super::{
+    channel_to_json, dataset_to_json, parse_channel, parse_dataset, parse_role, role_to_json,
+    Channel, DatasetRef, JobSpec, Role,
+};
+
+// ----------------------------------------------------------- spec deltas
+
+/// A spec-level TAG edit: the difference between two [`JobSpec`]s, or a
+/// set of add/remove directives to apply to one. Removals are by name and
+/// run before additions, so replacing a role or channel is expressed as
+/// `remove_*` + `add_*` of the same name.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TagDelta {
+    pub add_roles: Vec<Role>,
+    pub add_channels: Vec<Channel>,
+    pub add_datasets: Vec<DatasetRef>,
+    pub remove_roles: Vec<String>,
+    pub remove_channels: Vec<String>,
+    pub remove_datasets: Vec<String>,
+}
+
+impl TagDelta {
+    pub fn is_empty(&self) -> bool {
+        self.add_roles.is_empty()
+            && self.add_channels.is_empty()
+            && self.add_datasets.is_empty()
+            && self.remove_roles.is_empty()
+            && self.remove_channels.is_empty()
+            && self.remove_datasets.is_empty()
+    }
+
+    /// Apply this delta to `spec`, producing the extended spec. The result
+    /// is re-validated with Algorithm 1's `PreCheck`; an edit that leaves
+    /// the TAG inconsistent (dangling endpoint, orphaned role) is an
+    /// error, not a deployable spec.
+    pub fn apply(&self, spec: &JobSpec) -> Result<JobSpec> {
+        let mut out = spec.clone();
+        out.roles.retain(|r| !self.remove_roles.contains(&r.name));
+        out.channels
+            .retain(|c| !self.remove_channels.contains(&c.name));
+        out.datasets
+            .retain(|d| !self.remove_datasets.contains(&d.name));
+        out.roles.extend(self.add_roles.iter().cloned());
+        out.channels.extend(self.add_channels.iter().cloned());
+        out.datasets.extend(self.add_datasets.iter().cloned());
+        // the derived spec is a plain TAG; it does not inherit the timeline
+        out.events.clear();
+        super::validate::pre_check(&out).context("delta produces an invalid TAG")?;
+        Ok(out)
+    }
+
+    /// The delta turning `a` into `b`: entries of `a` missing from (or
+    /// changed in) `b` are removals; entries of `b` not identically in `a`
+    /// are additions. `diff(a, b).apply(a)` reproduces `b` up to ordering
+    /// of replaced entries.
+    pub fn diff(a: &JobSpec, b: &JobSpec) -> TagDelta {
+        let mut d = TagDelta::default();
+        for r in &a.roles {
+            if b.role(&r.name) != Some(r) {
+                d.remove_roles.push(r.name.clone());
+            }
+        }
+        for r in &b.roles {
+            if a.role(&r.name) != Some(r) {
+                d.add_roles.push(r.clone());
+            }
+        }
+        for c in &a.channels {
+            if b.channel(&c.name) != Some(c) {
+                d.remove_channels.push(c.name.clone());
+            }
+        }
+        for c in &b.channels {
+            if a.channel(&c.name) != Some(c) {
+                d.add_channels.push(c.clone());
+            }
+        }
+        let find = |spec: &JobSpec, name: &str| -> Option<DatasetRef> {
+            spec.datasets.iter().find(|d| d.name == name).cloned()
+        };
+        for ds in &a.datasets {
+            if find(b, &ds.name).as_ref() != Some(ds) {
+                d.remove_datasets.push(ds.name.clone());
+            }
+        }
+        for ds in &b.datasets {
+            if find(a, &ds.name).as_ref() != Some(ds) {
+                d.add_datasets.push(ds.clone());
+            }
+        }
+        d
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        if !self.add_roles.is_empty() {
+            o.insert(
+                "addRoles",
+                Json::Arr(self.add_roles.iter().map(role_to_json).collect()),
+            );
+        }
+        if !self.add_channels.is_empty() {
+            o.insert(
+                "addChannels",
+                Json::Arr(self.add_channels.iter().map(channel_to_json).collect()),
+            );
+        }
+        if !self.add_datasets.is_empty() {
+            o.insert(
+                "addDatasets",
+                Json::Arr(self.add_datasets.iter().map(dataset_to_json).collect()),
+            );
+        }
+        let names = |xs: &[String]| Json::Arr(xs.iter().map(|n| Json::Str(n.clone())).collect());
+        if !self.remove_roles.is_empty() {
+            o.insert("removeRoles", names(&self.remove_roles));
+        }
+        if !self.remove_channels.is_empty() {
+            o.insert("removeChannels", names(&self.remove_channels));
+        }
+        if !self.remove_datasets.is_empty() {
+            o.insert("removeDatasets", names(&self.remove_datasets));
+        }
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut d = TagDelta::default();
+        if let Some(arr) = j.get("addRoles").as_arr() {
+            for (i, r) in arr.iter().enumerate() {
+                d.add_roles
+                    .push(parse_role(r).with_context(|| format!("delta addRoles[{i}]"))?);
+            }
+        }
+        if let Some(arr) = j.get("addChannels").as_arr() {
+            for (i, c) in arr.iter().enumerate() {
+                d.add_channels
+                    .push(parse_channel(c).with_context(|| format!("delta addChannels[{i}]"))?);
+            }
+        }
+        if let Some(arr) = j.get("addDatasets").as_arr() {
+            for (i, ds) in arr.iter().enumerate() {
+                d.add_datasets
+                    .push(parse_dataset(ds).with_context(|| format!("delta addDatasets[{i}]"))?);
+            }
+        }
+        let names = |key: &str| -> Vec<String> {
+            j.get(key)
+                .as_arr()
+                .map(|a| a.iter().filter_map(|n| n.as_str().map(str::to_string)).collect())
+                .unwrap_or_default()
+        };
+        d.remove_roles = names("removeRoles");
+        d.remove_channels = names("removeChannels");
+        d.remove_datasets = names("removeDatasets");
+        Ok(d)
+    }
+}
+
+// --------------------------------------------------------- event timeline
+
+/// One scheduled topology change on a running job, firing when the job's
+/// virtual clock reaches `at_us`. Events are applied at round boundaries
+/// by the round-driving aggregator (see `roles::global`), which keeps
+/// membership changes synchronous with the round structure and therefore
+/// deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TopologyEvent {
+    /// Extend (or shrink) the TAG by a delta: new roles/channels deploy as
+    /// fresh workers on the running fabric; removed entries retire theirs.
+    Extend { at_us: VTime, delta: TagDelta },
+    /// Named workers depart (device dropout / churn). The spec is
+    /// unchanged — this is physical-membership churn, not a TAG edit.
+    Leave { at_us: VTime, workers: Vec<String> },
+}
+
+impl TopologyEvent {
+    pub fn at_us(&self) -> VTime {
+        match self {
+            TopologyEvent::Extend { at_us, .. } | TopologyEvent::Leave { at_us, .. } => *at_us,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            TopologyEvent::Extend { at_us, delta } => {
+                o.insert("kind", "extend");
+                o.insert("at_us", *at_us);
+                o.insert("delta", delta.to_json());
+            }
+            TopologyEvent::Leave { at_us, workers } => {
+                o.insert("kind", "leave");
+                o.insert("at_us", *at_us);
+                o.insert(
+                    "workers",
+                    Json::Arr(workers.iter().map(|w| Json::Str(w.clone())).collect()),
+                );
+            }
+        }
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let at_us = j.get("at_us").as_i64().context("event missing 'at_us'")? as VTime;
+        match j.get("kind").as_str().context("event missing 'kind'")? {
+            "extend" => Ok(TopologyEvent::Extend {
+                at_us,
+                delta: TagDelta::from_json(j.get("delta")).context("extend event delta")?,
+            }),
+            "leave" => {
+                let workers: Vec<String> = j
+                    .get("workers")
+                    .as_arr()
+                    .context("leave event missing 'workers'")?
+                    .iter()
+                    .filter_map(|w| w.as_str().map(str::to_string))
+                    .collect();
+                if workers.is_empty() {
+                    bail!("leave event names no workers");
+                }
+                Ok(TopologyEvent::Leave { at_us, workers })
+            }
+            other => bail!("unknown event kind '{other}' (extend|leave)"),
+        }
+    }
+}
+
+// --------------------------------------------------------- worker deltas
+
+/// Worker-level patch between two expansions: configs to deploy (with
+/// their positions in the target expansion) and worker ids to retire.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerDelta {
+    /// `(position in the target expansion, config)`, ascending by position.
+    pub add: Vec<(usize, WorkerConfig)>,
+    /// Ids present in the source expansion but not (identically) in the
+    /// target.
+    pub remove: Vec<String>,
+}
+
+/// Patch turning worker list `a` into worker list `b`. Workers are
+/// matched by full config identity; a worker whose config changed appears
+/// in both `remove` (old id) and `add` (new config). Linear in
+/// `|a| + |b|` — ids are unique within an expansion, so an identical
+/// config can only sit under the same id, and the match indexes by id.
+pub fn diff_workers(a: &[WorkerConfig], b: &[WorkerConfig]) -> WorkerDelta {
+    let a_by_id: std::collections::HashMap<&str, &WorkerConfig> =
+        a.iter().map(|w| (w.id.as_str(), w)).collect();
+    let b_by_id: std::collections::HashMap<&str, &WorkerConfig> =
+        b.iter().map(|w| (w.id.as_str(), w)).collect();
+    let mut d = WorkerDelta::default();
+    for w in a {
+        if b_by_id.get(w.id.as_str()) != Some(&w) {
+            d.remove.push(w.id.clone());
+        }
+    }
+    for (i, w) in b.iter().enumerate() {
+        if a_by_id.get(w.id.as_str()) != Some(&w) {
+            d.add.push((i, w.clone()));
+        }
+    }
+    d
+}
+
+/// Apply a [`diff_workers`] patch: `apply_workers(a, &diff_workers(a, b))
+/// == b` whenever the common workers keep their relative order — which
+/// every [`TagDelta`]-induced pair does, because Algorithm 1 expands
+/// role-major in stable order.
+pub fn apply_workers(a: &[WorkerConfig], d: &WorkerDelta) -> Vec<WorkerConfig> {
+    let removed: std::collections::HashSet<&str> =
+        d.remove.iter().map(String::as_str).collect();
+    let mut out: Vec<WorkerConfig> = a
+        .iter()
+        .filter(|w| !removed.contains(w.id.as_str()))
+        .cloned()
+        .collect();
+    for (i, w) in &d.add {
+        out.insert((*i).min(out.len()), w.clone());
+    }
+    out
+}
+
+/// Expand both specs against `registry` and diff the expansions: the
+/// incremental-deploy work list for extending a running `before` job into
+/// `after`.
+pub fn delta_workers(
+    before: &JobSpec,
+    after: &JobSpec,
+    registry: &Registry,
+) -> Result<WorkerDelta> {
+    let a = expand(before, registry).context("expanding pre-extension spec")?;
+    let b = expand(after, registry).context("expanding post-extension spec")?;
+    Ok(diff_workers(&a, &b))
+}
+
+// ------------------------------------------------- canned extension moves
+
+/// The §6 "add a middle aggregator tier" story as a delta: turns a 2-tier
+/// `trainer ↔ global-aggregator` TAG (the [`crate::topo::classical`]
+/// shape) into a 3-tier H-FL TAG by inserting an `aggregator` role with
+/// `replica` copies between the tiers. The trainer-facing channel keeps
+/// its name and groups, so live trainers need no re-join — they pick up
+/// their new parent from the next round's weight distribution.
+pub fn add_tier_delta(spec: &JobSpec, n_aggregators: usize) -> Result<TagDelta> {
+    if n_aggregators == 0 {
+        bail!("add_tier_delta needs at least one aggregator");
+    }
+    if spec.role("aggregator").is_some() {
+        bail!("spec already has an 'aggregator' role");
+    }
+    let param = spec
+        .channel("param-channel")
+        .context("add_tier_delta expects a 'param-channel'")?;
+    let trainer = spec
+        .roles
+        .iter()
+        .find(|r| r.is_data_consumer)
+        .context("add_tier_delta expects a data-consumer role")?
+        .name
+        .clone();
+    let global = if param.pair.0 == trainer {
+        param.pair.1.clone()
+    } else {
+        param.pair.0.clone()
+    };
+    let mut ft = std::collections::BTreeMap::new();
+    ft.insert(trainer.clone(), vec!["fetch".to_string(), "upload".into()]);
+    ft.insert(
+        "aggregator".to_string(),
+        vec!["distribute".to_string(), "aggregate".into()],
+    );
+    let new_param = Channel {
+        name: "param-channel".into(),
+        pair: (trainer, "aggregator".into()),
+        group_by: param.group_by.clone(),
+        func_tags: ft,
+        backend: param.backend,
+    };
+    let mut ft = std::collections::BTreeMap::new();
+    ft.insert(
+        "aggregator".to_string(),
+        vec!["fetch".to_string(), "upload".into()],
+    );
+    ft.insert(
+        global.clone(),
+        vec!["distribute".to_string(), "aggregate".into()],
+    );
+    let agg_channel = Channel {
+        name: "agg-channel".into(),
+        pair: ("aggregator".into(), global.clone()),
+        group_by: vec!["default".to_string()],
+        func_tags: ft,
+        backend: param.backend,
+    };
+    let global_role = spec.role(&global).context("param-channel upper endpoint role")?;
+    let mut new_global = global_role.clone();
+    new_global.group_association = vec![[("agg-channel".to_string(), "default".to_string())]
+        .into_iter()
+        .collect()];
+    let agg_role = Role {
+        name: "aggregator".into(),
+        replica: n_aggregators,
+        is_data_consumer: false,
+        group_association: vec![[
+            ("param-channel".to_string(), "default".to_string()),
+            ("agg-channel".to_string(), "default".to_string()),
+        ]
+        .into_iter()
+        .collect()],
+    };
+    Ok(TagDelta {
+        add_roles: vec![new_global, agg_role],
+        add_channels: vec![new_param, agg_channel],
+        add_datasets: Vec::new(),
+        remove_roles: vec![global],
+        remove_channels: vec!["param-channel".into()],
+        remove_datasets: Vec::new(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Backend;
+    use crate::topo;
+
+    #[test]
+    fn diff_apply_roundtrips_spec() {
+        let a = topo::classical(4, Backend::P2p).build();
+        let b = {
+            let mut b = a.clone();
+            b.datasets.push(DatasetRef {
+                name: "extra".into(),
+                group: "default".into(),
+                realm: "*".into(),
+                url: "synth://extra".into(),
+            });
+            b
+        };
+        let d = TagDelta::diff(&a, &b);
+        assert_eq!(d.add_datasets.len(), 1);
+        assert!(d.remove_datasets.is_empty() && d.add_roles.is_empty());
+        let b2 = d.apply(&a).unwrap();
+        assert_eq!(b2.datasets.len(), b.datasets.len());
+        assert_eq!(TagDelta::diff(&b2, &b), TagDelta::default());
+    }
+
+    #[test]
+    fn add_tier_delta_builds_valid_three_tier_spec() {
+        let a = topo::classical(6, Backend::P2p).build();
+        let d = add_tier_delta(&a, 2).unwrap();
+        let b = d.apply(&a).unwrap();
+        assert!(b.role("aggregator").is_some());
+        assert!(b.channel("agg-channel").is_some());
+        assert_eq!(
+            b.channel("param-channel").unwrap().pair,
+            ("trainer".to_string(), "aggregator".to_string())
+        );
+        let reg = Registry::single_box();
+        let wa = expand(&a, &reg).unwrap();
+        let wb = expand(&b, &reg).unwrap();
+        // trainers are untouched; the tier shows up as new workers
+        assert_eq!(wb.iter().filter(|w| w.role == "aggregator").count(), 2);
+        let wd = diff_workers(&wa, &wb);
+        assert_eq!(apply_workers(&wa, &wd), wb);
+        // the global's config changes (its channel set moved to agg-channel)
+        assert!(wd.remove.iter().any(|id| id.contains("global-aggregator")));
+    }
+
+    #[test]
+    fn worker_patch_handles_removals() {
+        let reg = Registry::single_box();
+        let a = topo::classical(5, Backend::P2p).build();
+        let mut b = a.clone();
+        b.datasets.remove(1); // drop one trainer's dataset
+        let wa = expand(&a, &reg).unwrap();
+        let wb = expand(&b, &reg).unwrap();
+        let d = diff_workers(&wa, &wb);
+        assert_eq!(apply_workers(&wa, &d), wb);
+        assert!(!d.remove.is_empty());
+    }
+
+    #[test]
+    fn delta_json_roundtrip() {
+        let a = topo::classical(3, Backend::Broker).build();
+        let d = add_tier_delta(&a, 3).unwrap();
+        let back = TagDelta::from_json(&d.to_json()).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn event_json_roundtrip_and_validation() {
+        let a = topo::classical(3, Backend::P2p).build();
+        let ev = TopologyEvent::Extend {
+            at_us: 42,
+            delta: add_tier_delta(&a, 1).unwrap(),
+        };
+        assert_eq!(TopologyEvent::from_json(&ev.to_json()).unwrap(), ev);
+        let ev = TopologyEvent::Leave {
+            at_us: 7,
+            workers: vec!["cfl-trainer-0".into()],
+        };
+        assert_eq!(TopologyEvent::from_json(&ev.to_json()).unwrap(), ev);
+        assert!(TopologyEvent::from_json(
+            &Json::parse(r#"{"kind":"leave","at_us":1,"workers":[]}"#).unwrap()
+        )
+        .is_err());
+        assert!(TopologyEvent::from_json(
+            &Json::parse(r#"{"kind":"teleport","at_us":1}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn invalid_delta_rejected_by_precheck() {
+        let a = topo::classical(3, Backend::P2p).build();
+        // removing the only channel orphans both roles
+        let d = TagDelta {
+            remove_channels: vec!["param-channel".into()],
+            ..Default::default()
+        };
+        assert!(d.apply(&a).is_err());
+    }
+}

@@ -10,7 +10,69 @@
 //! Specs are JSON (the paper uses YAML; semantics are identical — see
 //! DESIGN.md substitutions). [`JobSpec::parse`] accepts the schema shown in
 //! `examples/specs/hfl.json`, which mirrors the paper's Figure 3a.
+//!
+//! # Spec JSON schema
+//!
+//! ```json
+//! {
+//!   "name":   "<job name>",            // required
+//!   "model":  "mlp",                   // optional, default "mlp"
+//!   "rounds": 10,                      // optional, default 10
+//!   "tag": {
+//!     "roles": [{
+//!       "name": "trainer",             // required
+//!       "replica": 1,                  // optional; workers per association entry
+//!       "isDataConsumer": true,        // optional; one worker per dataset
+//!       "groupAssociation": [          // optional; {channel -> group} entries
+//!         {"param-channel": "group0"}
+//!       ]
+//!     }],
+//!     "channels": [{
+//!       "name": "param-channel",       // required
+//!       "pair": ["trainer", "aggregator"],  // required, exactly 2 roles
+//!       "groupBy": ["group0", "group1"],    // optional; default single group
+//!       "funcTags": {"trainer": ["fetch", "upload"]},  // optional
+//!       "backend": "p2p"               // p2p | broker | inproc (+aliases)
+//!     }]
+//!   },
+//!   "datasets": [{
+//!     "name": "d0", "group": "group0", "realm": "*", "url": "synth://0"
+//!   }],
+//!   "hyper": {"lr": 0.1, "quorum": 0.8},   // forwarded to role programs
+//!   "events": [                        // optional live-extension timeline
+//!     {"kind": "extend", "at_us": 2000000, "delta": {"addRoles": [], "addChannels": [], "addDatasets": []}},
+//!     {"kind": "leave",  "at_us": 3000000, "workers": ["job-trainer-3"]}
+//!   ]
+//! }
+//! ```
+//!
+//! The `events` array is the **live topology extension timeline** (see
+//! [`delta`]): each entry fires once the running job's virtual clock
+//! passes `at_us`, growing or shrinking the deployed topology mid-run.
+//!
+//! ```
+//! let spec = flame::tag::JobSpec::parse(r#"{
+//!     "name": "tiny",
+//!     "tag": {
+//!         "roles": [
+//!             {"name": "trainer", "isDataConsumer": true},
+//!             {"name": "global-aggregator"}
+//!         ],
+//!         "channels": [{
+//!             "name": "param-channel",
+//!             "pair": ["trainer", "global-aggregator"],
+//!             "backend": "p2p"
+//!         }]
+//!     },
+//!     "datasets": [{"name": "d0"}],
+//!     "events": [{"kind": "leave", "at_us": 90, "workers": ["tiny-trainer-0"]}]
+//! }"#).unwrap();
+//! assert_eq!(spec.roles.len(), 2);
+//! assert_eq!(spec.events.len(), 1);
+//! assert_eq!(spec.events[0].at_us(), 90);
+//! ```
 
+pub mod delta;
 pub mod expand;
 pub mod validate;
 
@@ -21,10 +83,11 @@ use anyhow::{bail, Context, Result};
 use crate::channel::Backend;
 use crate::json::Json;
 
+pub use delta::{TagDelta, TopologyEvent, WorkerDelta};
 pub use expand::{expand, WorkerConfig};
 
 /// One vertex of the TAG: an executable worker unit bound to a program.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Role {
     pub name: String,
     /// Number of replicated workers per groupAssociation entry (§4.1); used
@@ -40,7 +103,7 @@ pub struct Role {
 }
 
 /// One edge of the TAG: links a pair of roles over a communication backend.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Channel {
     pub name: String,
     /// The two roles this channel links (may be the same role for
@@ -58,7 +121,7 @@ pub struct Channel {
 
 /// A dataset registration (metadata only — the system never holds raw data;
 /// §4.3). `group` realizes the paper's `datasetGroups` attribute.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DatasetRef {
     pub name: String,
     pub group: String,
@@ -77,6 +140,10 @@ pub struct JobSpec {
     pub datasets: Vec<DatasetRef>,
     /// Hyper-parameters forwarded verbatim to role programs.
     pub hyper: Json,
+    /// Live topology extension timeline (optional): scheduled mid-run
+    /// joins/leaves/tier extensions, fired once the job's virtual clock
+    /// passes each event's `at_us`. See [`delta::TopologyEvent`].
+    pub events: Vec<TopologyEvent>,
 }
 
 impl JobSpec {
@@ -128,6 +195,13 @@ impl JobSpec {
             }
         }
 
+        let mut events = Vec::new();
+        if let Some(arr) = j.get("events").as_arr() {
+            for (i, e) in arr.iter().enumerate() {
+                events.push(TopologyEvent::from_json(e).with_context(|| format!("event #{i}"))?);
+            }
+        }
+
         Ok(JobSpec {
             name,
             model,
@@ -136,6 +210,7 @@ impl JobSpec {
             channels,
             datasets,
             hyper: j.get("hyper").clone(),
+            events,
         })
     }
 
@@ -189,11 +264,17 @@ impl JobSpec {
         if !self.hyper.is_null() {
             o.insert("hyper", self.hyper.clone());
         }
+        if !self.events.is_empty() {
+            o.insert(
+                "events",
+                Json::Arr(self.events.iter().map(TopologyEvent::to_json).collect()),
+            );
+        }
         Json::Obj(o)
     }
 }
 
-fn parse_role(j: &Json) -> Result<Role> {
+pub(crate) fn parse_role(j: &Json) -> Result<Role> {
     let name = j
         .get("name")
         .as_str()
@@ -235,7 +316,7 @@ fn parse_role(j: &Json) -> Result<Role> {
     })
 }
 
-fn parse_channel(j: &Json) -> Result<Channel> {
+pub(crate) fn parse_channel(j: &Json) -> Result<Channel> {
     let name = j
         .get("name")
         .as_str()
@@ -280,7 +361,7 @@ fn parse_channel(j: &Json) -> Result<Channel> {
     })
 }
 
-fn parse_dataset(j: &Json) -> Result<DatasetRef> {
+pub(crate) fn parse_dataset(j: &Json) -> Result<DatasetRef> {
     Ok(DatasetRef {
         name: j
             .get("name")
@@ -293,7 +374,7 @@ fn parse_dataset(j: &Json) -> Result<DatasetRef> {
     })
 }
 
-fn role_to_json(r: &Role) -> Json {
+pub(crate) fn role_to_json(r: &Role) -> Json {
     let mut o = Json::obj();
     o.insert("name", r.name.as_str());
     if r.replica != 1 {
@@ -317,7 +398,7 @@ fn role_to_json(r: &Role) -> Json {
     Json::Obj(o)
 }
 
-fn channel_to_json(c: &Channel) -> Json {
+pub(crate) fn channel_to_json(c: &Channel) -> Json {
     let mut o = Json::obj();
     o.insert("name", c.name.as_str());
     o.insert(
@@ -347,7 +428,7 @@ fn channel_to_json(c: &Channel) -> Json {
     Json::Obj(o)
 }
 
-fn dataset_to_json(d: &DatasetRef) -> Json {
+pub(crate) fn dataset_to_json(d: &DatasetRef) -> Json {
     let mut o = Json::obj();
     o.insert("name", d.name.as_str());
     o.insert("group", d.group.as_str());

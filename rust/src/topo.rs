@@ -131,6 +131,7 @@ pub fn classical(n_trainers: usize, backend: Backend) -> TopoBuilder {
         )],
         datasets: datasets(n_trainers, |_| "default".into()),
         hyper: Json::Null,
+        events: Vec::new(),
     };
     TopoBuilder { spec }
 }
@@ -206,6 +207,7 @@ pub fn hierarchical(n_trainers: usize, n_groups: usize, backend: Backend) -> Top
         ],
         datasets: datasets(n_trainers, |i| format!("group{}", i % n_groups)),
         hyper: Json::Null,
+        events: Vec::new(),
     };
     TopoBuilder { spec }
 }
@@ -306,6 +308,7 @@ pub fn coordinated(n_trainers: usize, n_aggregators: usize, backend: Backend) ->
         ],
         datasets: datasets(n_trainers, |_| "default".into()),
         hyper: Json::Null,
+        events: Vec::new(),
     };
     TopoBuilder { spec }
 }
@@ -370,6 +373,7 @@ pub fn hybrid(
         ],
         datasets: datasets(n_trainers, |i| format!("group{}", i % n_groups)),
         hyper: Json::Null,
+        events: Vec::new(),
     };
     TopoBuilder { spec }
 }
@@ -396,6 +400,7 @@ pub fn distributed(n_trainers: usize, backend: Backend) -> TopoBuilder {
         )],
         datasets: datasets(n_trainers, |_| "default".into()),
         hyper: Json::Null,
+        events: Vec::new(),
     };
     TopoBuilder { spec }
 }

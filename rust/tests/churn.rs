@@ -1,0 +1,190 @@
+//! Live topology extension end to end: mid-job TAG deltas, churn-tolerant
+//! quorum aggregation, departure cancellation, and timeline determinism.
+
+use std::sync::Arc;
+
+use flame::channel::Backend;
+use flame::control::{Controller, Executor, JobOptions, JobReport};
+use flame::json::Json;
+use flame::net::LinkSpec;
+use flame::sim::{self, SimOptions};
+use flame::store::Store;
+use flame::tag::{self, TopologyEvent};
+use flame::topo;
+
+fn churn_opts(executor: Executor) -> SimOptions {
+    let mut o = SimOptions::mock();
+    o.per_shard = 24;
+    o.test_n = 64;
+    o.local_steps = 1;
+    o.executor = executor;
+    o
+}
+
+/// The acceptance scenario: a job that starts 2-tier finishes 3-tier with
+/// 20% trainer churn, deadlock-free, every round aggregating.
+#[test]
+fn two_tier_job_finishes_three_tier_under_churn() {
+    let o = churn_opts(Executor::Cooperative { runners: 0 });
+    let r = sim::run_churn(20, 2, 9, 0.2, 1.0, &o).unwrap();
+    // every round completed and evaluated — no stranded aggregation
+    assert_eq!(r.metrics.series("acc").len(), 9);
+    assert!(r.final_acc.is_some());
+    let aggs = r.metrics.series("aggregators_alive");
+    assert_eq!(aggs.first().map(|(_, v)| *v), Some(0.0), "{aggs:?}");
+    assert_eq!(aggs.last().map(|(_, v)| *v), Some(2.0), "{aggs:?}");
+    let t = r.metrics.series("trainers_alive");
+    let peak = t.iter().map(|(_, v)| *v).fold(0.0, f64::max);
+    let last = t.last().unwrap().1;
+    assert_eq!(peak, 22.0, "join never happened: {t:?}");
+    assert!(last <= 18.0, "20% churn never happened: {t:?}");
+    // 20 trainers + 1 global + 2 joiners + 2 aggregators = 25 pods ran
+    assert_eq!(r.workers, 25);
+}
+
+fn series_of(r: &JobReport, names: &[&str]) -> Vec<Vec<(u64, f64)>> {
+    names.iter().map(|n| r.metrics.series(n)).collect()
+}
+
+/// Same event timeline ⇒ bit-identical results, regardless of how many
+/// runner threads drive the fabric (virtual time, not OS scheduling,
+/// orders every membership change).
+#[test]
+fn churn_timeline_is_deterministic_across_runner_pools() {
+    let series = &["acc", "loss", "vtime_s", "round_time_s", "trainers_alive"];
+    let one = sim::run_churn(12, 2, 6, 0.25, 1.0, &churn_opts(Executor::Cooperative { runners: 1 }))
+        .unwrap();
+    let many =
+        sim::run_churn(12, 2, 6, 0.25, 1.0, &churn_opts(Executor::Cooperative { runners: 4 }))
+            .unwrap();
+    assert_eq!(
+        series_of(&one, series),
+        series_of(&many, series),
+        "churn run diverges across runner-pool sizes"
+    );
+    assert_eq!(one.workers, many.workers);
+    assert_eq!(one.total_bytes, many.total_bytes);
+}
+
+/// Quorum fractions tolerate stragglers on a *static* topology too: with
+/// quorum 0.75, a 1000x-slower trainer stops gating every round.
+#[test]
+fn quorum_collect_skips_the_straggler() {
+    let run = |quorum: f64| {
+        let spec = topo::classical(4, Backend::P2p)
+            .rounds(4)
+            .set("lr", Json::Num(0.5))
+            .set("local_steps", 1usize)
+            .set("quorum", Json::Num(quorum))
+            .build();
+        let opts = JobOptions::mock()
+            .with_data(32, 64, flame::data::Partition::Iid, 7)
+            .with_net(|net| {
+                net.set_uplink("cfl-trainer-3", LinkSpec::mbps(0.05, 0));
+            });
+        Controller::new(Arc::new(Store::in_memory()))
+            .submit(spec, opts)
+            .unwrap()
+    };
+    let full = run(1.0);
+    let partial = run(0.75);
+    assert_eq!(partial.metrics.series("acc").len(), 4);
+    assert!(
+        partial.vtime_s < 0.5 * full.vtime_s,
+        "quorum 0.75 ({:.2}s) should beat the full barrier ({:.2}s)",
+        partial.vtime_s,
+        full.vtime_s
+    );
+}
+
+/// The event timeline is cooperative-fabric machinery: thread-per-worker
+/// execution cannot spawn or retire pods mid-run and must say so.
+#[test]
+fn thread_executor_rejects_live_events() {
+    let spec = topo::classical(4, Backend::P2p).rounds(2).build();
+    let events = vec![TopologyEvent::Leave {
+        at_us: 1,
+        workers: vec!["cfl-trainer-0".into()],
+    }];
+    let err = Controller::new(Arc::new(Store::in_memory()))
+        .submit(
+            spec,
+            JobOptions::mock()
+                .with_events(events)
+                .with_executor(Executor::ThreadPerWorker),
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("cooperative"), "{err:#}");
+}
+
+/// Topologies with no round sequencer (or a frozen all-reduce ring) cannot
+/// drain a timeline — the submit must say so instead of silently ignoring
+/// the events.
+#[test]
+fn sequencerless_topologies_reject_live_events() {
+    let events = |w: &str| {
+        vec![TopologyEvent::Leave {
+            at_us: 1,
+            workers: vec![w.to_string()],
+        }]
+    };
+    let err = Controller::new(Arc::new(Store::in_memory()))
+        .submit(
+            topo::distributed(4, Backend::P2p).rounds(2).build(),
+            JobOptions::mock().with_events(events("distributed-trainer-0")),
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("sequencer"), "{err:#}");
+    let err = Controller::new(Arc::new(Store::in_memory()))
+        .submit(
+            topo::hybrid(8, 2, Backend::Broker, Backend::P2p).rounds(2).build(),
+            JobOptions::mock().with_events(events("hybrid-trainer-0")),
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("ring"), "{err:#}");
+}
+
+/// Leave events must name real workers — typos fail at submit, not mid-run.
+#[test]
+fn leave_event_with_unknown_worker_rejected_at_submit() {
+    let spec = topo::classical(4, Backend::P2p).rounds(2).build();
+    let events = vec![TopologyEvent::Leave {
+        at_us: 1,
+        workers: vec!["cfl-trainer-99".into()],
+    }];
+    let err = Controller::new(Arc::new(Store::in_memory()))
+        .submit(spec, JobOptions::mock().with_events(events))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("cfl-trainer-99"), "{err:#}");
+}
+
+/// A spec can carry its own timeline: the `events` JSON field drives the
+/// same machinery as `JobOptions::with_events`, and survives a roundtrip
+/// through the store format.
+#[test]
+fn spec_declared_events_run_the_timeline() {
+    let mut spec = topo::classical(6, Backend::P2p)
+        .name("evjob")
+        .rounds(5)
+        .set("lr", Json::Num(0.5))
+        .set("local_steps", 1usize)
+        .build();
+    spec.events = vec![
+        TopologyEvent::Leave {
+            // fires mid-run: the calibrated mock round is ~100ms+ of vtime
+            at_us: 1,
+            workers: vec!["evjob-trainer-0".into()],
+        },
+    ];
+    // events survive JSON (what the store journals)
+    let spec = tag::JobSpec::parse(&spec.to_json().pretty()).unwrap();
+    assert_eq!(spec.events.len(), 1);
+    let opts = JobOptions::mock().with_data(24, 48, flame::data::Partition::Iid, 3);
+    let r = Controller::new(Arc::new(Store::in_memory()))
+        .submit(spec, opts)
+        .unwrap();
+    // all rounds completed despite the departure
+    assert_eq!(r.metrics.series("acc").len(), 5);
+    let t = r.metrics.series("trainers_alive");
+    assert_eq!(t.last().map(|(_, v)| *v), Some(5.0), "{t:?}");
+}

@@ -69,6 +69,18 @@ fn run_all_topologies_small() {
 }
 
 #[test]
+fn churn_live_extension_smoke() {
+    let (ok, stdout, stderr) = flame(&[
+        "churn", "--trainers", "10", "--groups", "2", "--rounds", "6", "--churn", "0.2",
+        "--per-shard", "24", "--test-n", "48",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    // 10 initial trainers + 1 global + 1 joiner + 2 live aggregators
+    assert!(stdout.contains("churn: workers=14"), "{stdout}");
+    assert!(stdout.contains("trainers_alive,aggregators_alive"), "{stdout}");
+}
+
+#[test]
 fn scale_smoke_on_the_cooperative_fabric() {
     let (ok, stdout, stderr) = flame(&[
         "scale", "--trainers", "60", "--groups", "6", "--rounds", "2",

@@ -62,6 +62,7 @@ fn panicking_worker_is_contained_by_the_agent_sandbox() {
         test_set: Arc::new(test),
         time_model: flame::runtime::ComputeTimeModel::Free,
         init_flat: Arc::new(vec![0.0; compute.d_pad()]),
+        timeline: flame::deploy::TopologyTimeline::empty(),
     });
     let trainer_cfg = cfgs.iter().find(|c| c.role == "trainer").unwrap().clone();
     // env build fails at shard resolution inside the trainer program build

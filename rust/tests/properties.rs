@@ -75,6 +75,62 @@ fn expansion_worker_count_formula_holds_for_random_topologies() {
     );
 }
 
+/// The live-extension patch identity: for spec pairs `(a, b)` related by
+/// a [`flame::tag::TagDelta`] (grown datasets, dropped datasets, a new
+/// middle tier — alone or combined),
+/// `expand(b) == apply_workers(expand(a), diff_workers(expand(a), expand(b)))`.
+/// This is what lets the controller resolve mid-run topology events into
+/// exact incremental deploy/retire work lists.
+#[test]
+fn tag_delta_patch_reconstructs_target_expansion() {
+    use flame::tag::delta::{add_tier_delta, apply_workers, diff_workers};
+    use flame::tag::DatasetRef;
+    check(
+        "delta-patch-identity",
+        0xD317A,
+        80,
+        |r: &mut Rng| {
+            let trainers = 4 + r.below(20) as usize;
+            let grow = r.below(6) as usize;
+            let shrink = r.below(3) as usize; // strictly < initial trainers
+            let tier = r.below(3) as usize; // 0 = no new tier
+            (trainers, grow, shrink, tier)
+        },
+        |&(trainers, grow, shrink, tier)| {
+            let reg = Registry::single_box();
+            let a = topo::classical(trainers, Backend::P2p).build();
+            // build b by stacking delta edits on a
+            let mut delta = if tier > 0 {
+                add_tier_delta(&a, tier).map_err(|e| format!("{e:#}"))?
+            } else {
+                Default::default()
+            };
+            for i in 0..grow {
+                delta.add_datasets.push(DatasetRef {
+                    name: format!("d{}", trainers + i),
+                    group: "default".into(),
+                    realm: "*".into(),
+                    url: format!("synth://grown/{i}"),
+                });
+            }
+            for i in 0..shrink {
+                delta.remove_datasets.push(format!("d{i}"));
+            }
+            let b = delta.apply(&a).map_err(|e| format!("{e:#}"))?;
+            let wa = expand(&a, &reg).map_err(|e| format!("{e:#}"))?;
+            let wb = expand(&b, &reg).map_err(|e| format!("{e:#}"))?;
+            let patch = diff_workers(&wa, &wb);
+            ensure(
+                apply_workers(&wa, &patch) == wb,
+                format!(
+                    "patch failed to reconstruct target: {trainers} trainers, \
+                     +{grow}/-{shrink} datasets, tier {tier}"
+                ),
+            )
+        },
+    );
+}
+
 #[test]
 fn expansion_is_deterministic_property() {
     check(
