@@ -1,0 +1,97 @@
+//! Fleet throughput sweep: the multi-job control plane's
+//! jobs-completed-per-virtual-second (and rounds-per-virtual-second) as
+//! the number of concurrent heterogeneous jobs grows.
+//!
+//! Each cell submits `jobs` mixed jobs (2-tier C-FL, 3-tier H-FL,
+//! churn-with-events, async FedBuff — see `sim::build_fleet`) against a
+//! bounded 2x48-worker registry and drains them on one shared
+//! virtual-time fabric, so larger cells genuinely exercise admission
+//! queueing and fair-share multiplexing.
+//!
+//! ```bash
+//! cargo bench --bench fleet
+//! ```
+//!
+//! Prints the table and writes `BENCH_fleet.json` in the working
+//! directory.
+
+use std::time::Instant;
+
+use flame::sim::{run_fleet, SimOptions};
+
+struct Cell {
+    jobs: usize,
+    completed: usize,
+    waited: usize,
+    total_rounds: u64,
+    max_job_vs: f64,
+    jobs_per_vs: f64,
+    rounds_per_vs: f64,
+    wall_s: f64,
+}
+
+fn run_cell(jobs: usize) -> anyhow::Result<Cell> {
+    let mut o = SimOptions::mock();
+    // logistic-head mock (see `SimOptions::scale`): the bench measures
+    // control-plane throughput, not model numerics
+    o.compute = std::sync::Arc::new(flame::runtime::MockCompute::new(7_850, 8, 16));
+    o.per_shard = 16;
+    o.test_n = 32;
+    o.local_steps = 1;
+    let t0 = Instant::now();
+    let r = run_fleet(jobs, 0, &o)?;
+    Ok(Cell {
+        jobs,
+        completed: r.completed,
+        waited: r.waited,
+        total_rounds: r.total_rounds,
+        max_job_vs: r.max_job_vs,
+        jobs_per_vs: r.jobs_per_vs,
+        rounds_per_vs: r.rounds_per_vs,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+fn main() {
+    println!(
+        "{:>6} {:>10} {:>7} {:>7} {:>11} {:>11} {:>13} {:>9}",
+        "jobs", "completed", "waited", "rounds", "makespan_vs", "jobs_per_vs", "rounds_per_vs", "wall (s)"
+    );
+    let mut cells = Vec::new();
+    for &jobs in &[25usize, 50, 100, 200] {
+        let c = run_cell(jobs).expect("fleet cell");
+        println!(
+            "{:>6} {:>10} {:>7} {:>7} {:>11.3} {:>11.3} {:>13.3} {:>9.2}",
+            c.jobs,
+            c.completed,
+            c.waited,
+            c.total_rounds,
+            c.max_job_vs,
+            c.jobs_per_vs,
+            c.rounds_per_vs,
+            c.wall_s
+        );
+        cells.push(c);
+    }
+    let rows: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            format!(
+                "{{\"jobs\": {}, \"completed\": {}, \"waited\": {}, \"rounds\": {}, \
+                 \"makespan_vs\": {:.4}, \"jobs_per_vs\": {:.4}, \"rounds_per_vs\": {:.4}, \
+                 \"wall_s\": {:.3}}}",
+                c.jobs, c.completed, c.waited, c.total_rounds, c.max_job_vs, c.jobs_per_vs,
+                c.rounds_per_vs, c.wall_s
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"fleet\",\n  \"scenario\": \"multi-job control plane: mixed \
+         C-FL/H-FL/churn/FedBuff jobs, 2x48-worker capacity, one shared fabric, mock \
+         compute\",\n  \"status\": \"regenerate with `cargo bench --bench fleet` — this \
+         file is overwritten in place\",\n  \"sweep\": [\n    {}\n  ]\n}}\n",
+        rows.join(",\n    ")
+    );
+    std::fs::write("BENCH_fleet.json", json).expect("write BENCH_fleet.json");
+    println!("\nwrote BENCH_fleet.json");
+}

@@ -302,34 +302,90 @@ struct ChannelState {
     members: HashMap<String, Member>,
 }
 
-type ShardMap = HashMap<(String, String), ChannelState>;
+type ShardMap = HashMap<(String, String, String), ChannelState>;
 
-/// Shared channel fabric. One per deployment; handles are created per
-/// worker+channel by `join`.
-pub struct ChannelManager {
+/// The shared mailbox/membership substrate: membership shards, the global
+/// delivery sequence counter, and the virtual network. One fabric can be
+/// shared by **many jobs** (the multi-job control plane), each seeing it
+/// through its own scoped [`ChannelManager`] view.
+struct Fabric {
     net: Arc<VirtualNet>,
     shards: Vec<RwLock<ShardMap>>,
     seq: AtomicU64,
 }
 
+/// Channel fabric view. A standalone job owns an unscoped manager
+/// ([`ChannelManager::new`]); concurrent jobs on one shared fabric each
+/// hold a **scoped** view ([`ChannelManager::scoped`]) that namespaces
+/// every channel key by the job id — two jobs with identical worker and
+/// channel names (e.g. two `cfl` submissions) can never see each other's
+/// mailboxes or memberships. Handles are created per worker+channel by
+/// `join`.
+pub struct ChannelManager {
+    fabric: Arc<Fabric>,
+    /// This view's namespace: one component of the structured
+    /// `(scope, channel, group)` membership key. Empty for standalone
+    /// jobs.
+    scope: String,
+}
+
 impl ChannelManager {
     pub fn new(net: Arc<VirtualNet>) -> Arc<Self> {
         Arc::new(Self {
-            net,
-            shards: (0..N_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
-            seq: AtomicU64::new(0),
+            fabric: Arc::new(Fabric {
+                net,
+                shards: (0..N_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+                seq: AtomicU64::new(0),
+            }),
+            scope: String::new(),
         })
     }
 
+    /// A per-job view over this manager's shared fabric: same shards, same
+    /// sequence counter, same virtual network, but every membership key
+    /// carries `scope` as a distinct component (and broker hub nodes are
+    /// scope-prefixed), isolating the job's membership and mail from
+    /// every other scope.
+    pub fn scoped(self: &Arc<Self>, scope: &str) -> Arc<ChannelManager> {
+        Arc::new(Self {
+            fabric: self.fabric.clone(),
+            scope: scope.to_string(),
+        })
+    }
+
+    /// This view's namespace (empty for standalone jobs).
+    pub fn scope(&self) -> &str {
+        &self.scope
+    }
+
     pub fn net(&self) -> &Arc<VirtualNet> {
-        &self.net
+        &self.fabric.net
+    }
+
+    /// The scope-qualified broker hub node name for a channel — per-job
+    /// hubs on a shared fabric are distinct virtual-net nodes.
+    fn qualified(&self, channel: &str) -> String {
+        if self.scope.is_empty() {
+            channel.to_string()
+        } else {
+            format!("{}::{channel}", self.scope)
+        }
+    }
+
+    /// The fabric-level membership key: channel identity is the
+    /// structured triple `(scope, channel, group)` — no string-prefix
+    /// conventions, so channel names (or scopes) containing any
+    /// separator can never alias another scope's keys.
+    fn key(&self, channel: &str, group: &str) -> (String, String, String) {
+        (self.scope.clone(), channel.to_string(), group.to_string())
     }
 
     fn shard(&self, channel: &str, group: &str) -> &RwLock<ShardMap> {
         let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.scope.hash(&mut h);
         channel.hash(&mut h);
         group.hash(&mut h);
-        &self.shards[(h.finish() as usize) % self.shards.len()]
+        &self.fabric.shards[(h.finish() as usize) % self.fabric.shards.len()]
     }
 
     /// Join `(channel, group)` as `worker` acting as `role` in blocking
@@ -371,7 +427,7 @@ impl ChannelManager {
         clock: Arc<Mutex<VClock>>,
         park: Arc<WorkerPark>,
     ) -> Result<ChannelHandle> {
-        let key = (channel.to_string(), group.to_string());
+        let key = self.key(channel, group);
         let mut g = self.shard(channel, group).write().unwrap();
         let state = g.entry(key).or_insert_with(|| ChannelState {
             backend,
@@ -424,7 +480,7 @@ impl ChannelManager {
     fn leave(&self, channel: &str, group: &str, worker: &str, at: VTime) {
         let peers: Vec<Mailbox> = {
             let mut g = self.shard(channel, group).write().unwrap();
-            match g.get_mut(&(channel.to_string(), group.to_string())) {
+            match g.get_mut(&self.key(channel, group)) {
                 Some(state) if state.members.remove(worker).is_some() => {
                     state.members.values().map(|m| m.mailbox.clone()).collect()
                 }
@@ -444,12 +500,17 @@ impl ChannelManager {
     /// the number of memberships revoked.
     pub fn evict(&self, worker: &str, at: VTime) -> usize {
         let mut revoked = 0;
-        for shard in &self.shards {
+        for shard in &self.fabric.shards {
             let mut own: Vec<Mailbox> = Vec::new();
             let mut peers: Vec<Mailbox> = Vec::new();
             {
                 let mut g = shard.write().unwrap();
-                for state in g.values_mut() {
+                for ((scope, _, _), state) in g.iter_mut() {
+                    // scope isolation: an eviction through this view must
+                    // never touch another job's identically-named worker
+                    if scope != &self.scope {
+                        continue;
+                    }
                     if let Some(me) = state.members.remove(worker) {
                         revoked += 1;
                         own.push(me.mailbox);
@@ -505,7 +566,7 @@ impl ChannelManager {
     /// member shares one role (self-pair channel) — all other members.
     fn peers(&self, channel: &str, group: &str, me: &str, my_role: &str) -> Vec<String> {
         let g = self.shard(channel, group).read().unwrap();
-        let mut peers: Vec<String> = match g.get(&(channel.to_string(), group.to_string())) {
+        let mut peers: Vec<String> = match g.get(&self.key(channel, group)) {
             None => Vec::new(),
             Some(s) => {
                 let other_role: Vec<String> = s
@@ -538,7 +599,7 @@ impl ChannelManager {
     ) -> Vec<String> {
         let g = self.shard(channel, group).read().unwrap();
         let mut m: Vec<String> = g
-            .get(&(channel.to_string(), group.to_string()))
+            .get(&self.key(channel, group))
             .map(|s| {
                 s.members
                     .iter()
@@ -555,7 +616,7 @@ impl ChannelManager {
     pub fn members(&self, channel: &str, group: &str) -> Vec<String> {
         let g = self.shard(channel, group).read().unwrap();
         let mut m: Vec<String> = g
-            .get(&(channel.to_string(), group.to_string()))
+            .get(&self.key(channel, group))
             .map(|s| s.members.keys().cloned().collect())
             .unwrap_or_default();
         m.sort();
@@ -586,19 +647,24 @@ impl ChannelManager {
         let bytes = msg.size_bytes();
         let arrival = match backend {
             Backend::InProc => from_clock,
-            Backend::P2p => from_clock + self.net.transfer_at_us(from, to, bytes, from_clock),
+            Backend::P2p => {
+                from_clock + self.fabric.net.transfer_at_us(from, to, bytes, from_clock)
+            }
             Backend::Broker => {
-                let hub = format!("hub:{channel}");
+                let hub = format!("hub:{}", self.qualified(channel));
                 from_clock
                     + queue_delay
-                    + self.net.transfer_via_at_us(from, &hub, to, bytes, from_clock)
+                    + self
+                        .fabric
+                        .net
+                        .transfer_via_at_us(from, &hub, to, bytes, from_clock)
             }
         };
-        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let seq = self.fabric.seq.fetch_add(1, Ordering::Relaxed);
         let mailbox = {
             let g = self.shard(channel, group).read().unwrap();
             let state = g
-                .get(&(channel.to_string(), group.to_string()))
+                .get(&self.key(channel, group))
                 .with_context(|| format!("channel '{channel}' group '{group}' does not exist"))?;
             state
                 .members
@@ -720,12 +786,16 @@ impl ChannelHandle {
     pub fn send_fanout(&self, items: Vec<(String, Message)>) -> Result<usize> {
         let now = self.clock.lock().unwrap().now();
         let n = items.len();
-        let hub = format!("hub:{}", self.channel);
+        let hub = format!("hub:{}", self.mgr.qualified(&self.channel));
         let mut queued: VTime = 0;
         for (to, msg) in items {
             let extra = queued;
             if self.backend == Backend::Broker {
-                queued += self.mgr.net.transfer_at_us(&hub, &to, msg.size_bytes(), now);
+                queued += self
+                    .mgr
+                    .fabric
+                    .net
+                    .transfer_at_us(&hub, &to, msg.size_bytes(), now);
             }
             self.mgr.deliver(
                 &self.channel,
@@ -1464,5 +1534,140 @@ mod tests {
         let (from2, _) = agg.recv_any().unwrap();
         assert_eq!(from1, "a");
         assert_eq!(from2, "z");
+    }
+
+    #[test]
+    fn scoped_views_isolate_identical_names_on_one_fabric() {
+        // two jobs with byte-identical channel, group, worker and role
+        // names share one fabric — the multi-job control plane setup
+        let root = ChannelManager::new(Arc::new(VirtualNet::default()));
+        let j1 = root.scoped("cfl-1");
+        let j2 = root.scoped("cfl-2");
+        let mk = |mgr: &Arc<ChannelManager>, id: &str, role: &str| {
+            mgr.join(
+                "param-channel",
+                "default",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let a1 = mk(&j1, "agg", "aggregator");
+        let t1 = mk(&j1, "t0", "trainer");
+        let a2 = mk(&j2, "agg", "aggregator");
+        let t2 = mk(&j2, "t0", "trainer");
+        // membership is per scope, not per fabric
+        assert_eq!(a1.ends(), vec!["t0".to_string()]);
+        assert_eq!(j1.members("param-channel", "default").len(), 2);
+        assert_eq!(j2.members("param-channel", "default").len(), 2);
+        // mail never crosses scopes: each aggregator sees only its own
+        // trainer's message
+        t1.send("agg", Message::control("u", 1)).unwrap();
+        t2.send("agg", Message::control("u", 2)).unwrap();
+        assert_eq!(a1.recv("t0").unwrap().round, 1);
+        assert_eq!(a2.recv("t0").unwrap().round, 2);
+        assert!(a1.peek("t0").is_none());
+        assert!(a2.peek("t0").is_none());
+    }
+
+    #[test]
+    fn scoped_evict_never_touches_other_scopes() {
+        let root = ChannelManager::new(Arc::new(VirtualNet::default()));
+        let j1 = root.scoped("job-1");
+        let j2 = root.scoped("job-2");
+        let mk = |mgr: &Arc<ChannelManager>, id: &str, role: &str| {
+            mgr.join(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let _a1 = mk(&j1, "agg", "aggregator");
+        let _t1 = mk(&j1, "t0", "trainer");
+        let a2 = mk(&j2, "agg", "aggregator");
+        let t2 = mk(&j2, "t0", "trainer");
+        // evicting "t0" through job-1's view revokes exactly one membership
+        assert_eq!(j1.evict("t0", 1), 1);
+        assert!(j1.members("c", "g") == vec!["agg".to_string()]);
+        // job-2's identically named worker is untouched and still works
+        assert_eq!(a2.ends(), vec!["t0".to_string()]);
+        t2.send("agg", Message::control("alive", 3)).unwrap();
+        assert_eq!(a2.recv("t0").unwrap().round, 3);
+        // an unscoped view on the same fabric cannot evict scoped members
+        assert_eq!(root.evict("t0", 1), 0);
+    }
+
+    #[test]
+    fn separator_in_channel_or_scope_names_cannot_alias_scopes() {
+        // membership keys are structured triples, not joined strings: a
+        // channel literally named with the hub separator works in an
+        // unscoped manager (including evict)...
+        let root = ChannelManager::new(Arc::new(VirtualNet::default()));
+        let mk = |mgr: &Arc<ChannelManager>, ch: &str, id: &str, role: &str| {
+            mgr.join(
+                ch,
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let a = mk(&root, "fl::param", "agg", "aggregator");
+        let _t = mk(&root, "fl::param", "t0", "trainer");
+        assert_eq!(root.evict("t0", 1), 1, "unscoped evict must see '::' names");
+        assert!(a.empty());
+        // ...and a scope that happens to be a prefix+separator of another
+        // never matches the other's keys
+        let j1 = root.scoped("a-1");
+        let j2 = root.scoped("a-1::b-2");
+        let _w1 = mk(&j1, "c", "w", "trainer");
+        let _w2 = mk(&j2, "c", "w", "trainer");
+        assert_eq!(j1.evict("w", 1), 1);
+        assert_eq!(j2.members("c", "g"), vec!["w".to_string()]);
+    }
+
+    #[test]
+    fn scoped_broker_hubs_are_distinct_net_nodes() {
+        use crate::net::LinkSpec;
+        // shaping one job's hub must not slow the other job's broker path
+        let net = Arc::new(VirtualNet::new(LinkSpec::mbps(100.0, 0)));
+        net.set_pair("t0", "hub:slow::param", LinkSpec::mbps(0.1, 0));
+        let root = ChannelManager::new(net);
+        let slow = root.scoped("slow");
+        let fast = root.scoped("fast");
+        let mk = |mgr: &Arc<ChannelManager>, id: &str, role: &str| {
+            mgr.join(
+                "param",
+                "g",
+                id,
+                role,
+                Backend::Broker,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let sa = mk(&slow, "agg", "aggregator");
+        let st = mk(&slow, "t0", "trainer");
+        let fa = mk(&fast, "agg", "aggregator");
+        let ft = mk(&fast, "t0", "trainer");
+        let w = Arc::new(vec![0f32; 100_000]);
+        st.send("agg", Message::floats("u", 0, w.clone())).unwrap();
+        ft.send("agg", Message::floats("u", 0, w)).unwrap();
+        sa.recv("t0").unwrap();
+        fa.recv("t0").unwrap();
+        assert!(
+            sa.now() > 10 * fa.now(),
+            "slow hub {} vs fast hub {}",
+            sa.now(),
+            fa.now()
+        );
     }
 }

@@ -204,6 +204,256 @@ pub struct JobReport {
     pub db_write_s: f64,
 }
 
+/// Everything a deployer needs to run one prepared job: the shared
+/// runtime (channels joined lazily per worker), the initial worker set,
+/// the resolved live-extension timeline, and the submission-path timing.
+pub(crate) struct PreparedJob {
+    pub job: Arc<JobRuntime>,
+    pub workers: Vec<WorkerConfig>,
+    pub timeline: Arc<TopologyTimeline>,
+    pub recv_timeout: Duration,
+    pub expansion_s: f64,
+}
+
+/// The submission pipeline up to (but excluding) deployment: expand the
+/// TAG, validate the training configuration, resolve the live-extension
+/// timeline into precomputed work lists, materialise data shards, and
+/// build the shared [`JobRuntime`]. Shared by [`Controller::submit`]
+/// (one job, its own channel fabric) and the multi-job
+/// [`crate::controlplane::JobManager`] (many jobs, per-job scoped views
+/// over one shared fabric — `chan_mgr` carries the scope).
+pub(crate) fn prepare_job(
+    job_label: &str,
+    spec: JobSpec,
+    opts: JobOptions,
+    registry: &Registry,
+    chan_mgr: Arc<ChannelManager>,
+) -> Result<PreparedJob> {
+    let t_exp = Instant::now();
+    let workers = expand(&spec, registry).context("TAG expansion failed")?;
+    let expansion_s = t_exp.elapsed().as_secs_f64();
+    let mut prepared = prepare_expanded(job_label, spec, opts, registry, chan_mgr, workers)?;
+    prepared.expansion_s = expansion_s;
+    Ok(prepared)
+}
+
+/// [`prepare_job`] for a caller that already ran the expansion (the
+/// multi-job control plane expands at submit for admission accounting and
+/// must not pay Algorithm 1 twice). `workers` must be `expand(&spec,
+/// registry)`'s output for this exact spec; `expansion_s` is reported as
+/// zero.
+pub(crate) fn prepare_expanded(
+    job_label: &str,
+    spec: JobSpec,
+    mut opts: JobOptions,
+    registry: &Registry,
+    chan_mgr: Arc<ChannelManager>,
+    workers: Vec<WorkerConfig>,
+) -> Result<PreparedJob> {
+    let expansion_s = 0.0;
+    let tcfg = TrainingConfig::from_hyper(&spec.hyper)?;
+    if spec.role("coordinator").is_some()
+        && matches!(
+            tcfg.aggregation,
+            crate::algos::AggregationPolicy::Asynchronous { .. }
+        )
+    {
+        bail!(
+            "asynchronous aggregation with a coordinator role is not supported: \
+             the coordinator's per-round assignment protocol is synchronous \
+             (use async on C-FL/H-FL, or sync CO-FL)"
+        );
+    }
+    if spec.role("coordinator").is_some() && tcfg.quorum < 1.0 {
+        bail!(
+            "quorum fractions are not supported with a coordinator role: CO-FL's \
+             ack/report round-trip is a full barrier (an unacked straggler would \
+             strand in report); use quorum on C-FL/H-FL"
+        );
+    }
+
+    // Live topology extension: merge spec-declared and option-supplied
+    // events, then resolve each into a concrete worker patch *now* —
+    // the running fabric only executes precomputed work lists. The
+    // runtime spec becomes the final (union) TAG so late-joining
+    // channels and roles resolve, while the initial deployment stays
+    // the pre-extension expansion.
+    let mut events: Vec<TopologyEvent> = spec.events.clone();
+    events.append(&mut opts.events);
+    events.sort_by_key(|e| e.at_us());
+    // The runtime spec is the *union across phases*: every event folds
+    // its roles/channels/datasets in by name (latest definition wins,
+    // dropped names are retained), so both the initial expansion's
+    // workers and late joiners resolve their channels and shards.
+    let mut runtime_spec = spec.clone();
+    runtime_spec.events.clear();
+    let mut entries: Vec<TimelineEntry> = Vec::new();
+    if !events.is_empty() {
+        if spec.role("coordinator").is_some() {
+            bail!(
+                "live topology events are not supported with a coordinator role \
+                 (CO-FL runs its own membership protocol)"
+            );
+        }
+        if matches!(
+            tcfg.aggregation,
+            crate::algos::AggregationPolicy::Asynchronous { .. }
+        ) {
+            bail!("live topology events require synchronous aggregation");
+        }
+        if matches!(opts.executor, Executor::ThreadPerWorker) {
+            bail!(
+                "live topology events require the cooperative executor \
+                 (thread-per-worker cannot spawn or retire pods mid-run)"
+            );
+        }
+        if spec.role("global-aggregator").is_none() {
+            bail!(
+                "live topology events need a 'global-aggregator' round sequencer \
+                 to drain the timeline (distributed/all-reduce topologies have none)"
+            );
+        }
+        if spec.channels.iter().any(|c| c.pair.0 == c.pair.1) {
+            bail!(
+                "live topology events are not supported on ring/all-reduce \
+                 topologies (ring membership is frozen at build)"
+            );
+        }
+        let mut cur = spec.clone();
+        let mut cur_workers = workers.clone();
+        for ev in &events {
+            match ev {
+                TopologyEvent::Extend { at_us, delta } => {
+                    let next = delta.apply(&cur).context("applying topology delta")?;
+                    merge_spec_union(&mut runtime_spec, &next);
+                    let next_workers = expand(&next, registry)
+                        .context("expanding extended TAG")?;
+                    let wd = diff_workers(&cur_workers, &next_workers);
+                    // a worker re-expanded under the same id merely
+                    // *mutates* (e.g. the global gaining the new tier's
+                    // uplink): the live worker adapts by joining the
+                    // channel — it is neither evicted nor re-deployed.
+                    // Only the round sequencer knows how to adapt, so
+                    // mutations of any other worker are rejected here
+                    // rather than silently diverging from the spec.
+                    let mutated: Vec<&String> = wd
+                        .remove
+                        .iter()
+                        .filter(|id| wd.add.iter().any(|(_, w)| w.id == **id))
+                        .collect();
+                    for id in &mutated {
+                        let role = cur_workers
+                            .iter()
+                            .find(|w| w.id == ***id)
+                            .map(|w| w.role.as_str())
+                            .unwrap_or("");
+                        if role != "global-aggregator" {
+                            bail!(
+                                "extend event changes worker '{id}' ({role}) in \
+                                 place, which only the sequencer supports; express \
+                                 the change as distinct remove+add worker ids"
+                            );
+                        }
+                    }
+                    let deploys: Vec<WorkerConfig> = wd
+                        .add
+                        .iter()
+                        .filter(|(_, w)| !mutated.contains(&&w.id))
+                        .map(|(_, w)| w.clone())
+                        .collect();
+                    let evicts: Vec<String> = wd
+                        .remove
+                        .iter()
+                        .filter(|id| !mutated.contains(id))
+                        .cloned()
+                        .collect();
+                    if !evicts.is_empty() {
+                        entries.push(TimelineEntry {
+                            at: *at_us,
+                            action: ScheduledAction::Evict(evicts),
+                        });
+                    }
+                    if !deploys.is_empty() {
+                        entries.push(TimelineEntry {
+                            at: *at_us,
+                            action: ScheduledAction::Deploy(deploys),
+                        });
+                    }
+                    cur = next;
+                    cur_workers = next_workers;
+                }
+                TopologyEvent::Leave { at_us, workers: leavers } => {
+                    for id in leavers {
+                        if !cur_workers.iter().any(|w| w.id == *id) {
+                            bail!("leave event names unknown worker '{id}'");
+                        }
+                    }
+                    entries.push(TimelineEntry {
+                        at: *at_us,
+                        action: ScheduledAction::Evict(leavers.clone()),
+                    });
+                }
+            }
+        }
+    }
+    let timeline = TopologyTimeline::new(entries);
+
+    let net = chan_mgr.net().clone();
+    if let Some(f) = opts.configure_net.take() {
+        if !chan_mgr.scope().is_empty() {
+            bail!(
+                "per-job network shaping (JobOptions::with_net) is not supported \
+                 on a shared fleet fabric: worker node names are not namespaced, \
+                 so shaping one job's links would leak into identically-named \
+                 workers of concurrent jobs"
+            );
+        }
+        f(&net);
+    }
+    // data shards cover the union of every phase's datasets, so late
+    // joiners and not-yet-retired leavers both find theirs materialised
+    let n_shards = runtime_spec.datasets.len();
+    let (shards, test) = make_federated(
+        opts.data_seed,
+        n_shards.max(1),
+        opts.per_shard,
+        opts.test_n,
+        opts.partition,
+        opts.noise_sigma,
+    );
+    let mut shard_map = HashMap::new();
+    for (d, s) in runtime_spec.datasets.iter().zip(shards) {
+        shard_map.insert(d.name.clone(), Arc::new(s));
+    }
+    let init_flat = Arc::new(
+        opts.init_flat
+            .take()
+            .unwrap_or_else(|| vec![0f32; opts.compute.d_pad()]),
+    );
+    let job = Arc::new(JobRuntime {
+        spec: runtime_spec,
+        chan_mgr,
+        compute: opts.compute,
+        tcfg,
+        metrics: Arc::new(MetricsHub::for_job(job_label)),
+        shards: shard_map,
+        test_set: Arc::new(test),
+        time_model: opts.time_model,
+        init_flat,
+        timeline: timeline.clone(),
+    });
+    let recv_timeout = opts
+        .recv_timeout
+        .unwrap_or_else(|| auto_recv_timeout(workers.len()));
+    Ok(PreparedJob {
+        job,
+        workers,
+        timeline,
+        recv_timeout,
+        expansion_s,
+    })
+}
+
 /// The management-plane controller.
 pub struct Controller {
     store: Arc<Store>,
@@ -262,10 +512,16 @@ impl Controller {
         // (step 3/4) record the job configuration
         self.store.put("jobs", &job_id, spec.to_json())?;
 
-        // TAG expansion (+ Table 6 timings)
-        let t_exp = Instant::now();
-        let workers = expand(&spec, &self.registry).context("TAG expansion failed")?;
-        let expansion_s = t_exp.elapsed().as_secs_f64();
+        let executor = opts.executor;
+        let chan_mgr = ChannelManager::new(Arc::new(VirtualNet::default()));
+        let PreparedJob {
+            job,
+            workers,
+            timeline,
+            recv_timeout,
+            expansion_s,
+        } = prepare_job(&job_id, spec, opts, &self.registry, chan_mgr)?;
+
         let t_db = Instant::now();
         self.store.put_batch(
             "workers",
@@ -274,193 +530,6 @@ impl Controller {
                 .map(|w| (format!("{job_id}/{}", w.id), w.to_json())),
         )?;
         let db_write_s = t_db.elapsed().as_secs_f64();
-
-        // materialise the job runtime
-        let mut opts = opts;
-        let tcfg = TrainingConfig::from_hyper(&spec.hyper)?;
-        if spec.role("coordinator").is_some()
-            && matches!(
-                tcfg.aggregation,
-                crate::algos::AggregationPolicy::Asynchronous { .. }
-            )
-        {
-            bail!(
-                "asynchronous aggregation with a coordinator role is not supported: \
-                 the coordinator's per-round assignment protocol is synchronous \
-                 (use async on C-FL/H-FL, or sync CO-FL)"
-            );
-        }
-        if spec.role("coordinator").is_some() && tcfg.quorum < 1.0 {
-            bail!(
-                "quorum fractions are not supported with a coordinator role: CO-FL's \
-                 ack/report round-trip is a full barrier (an unacked straggler would \
-                 strand in report); use quorum on C-FL/H-FL"
-            );
-        }
-
-        // Live topology extension: merge spec-declared and option-supplied
-        // events, then resolve each into a concrete worker patch *now* —
-        // the running fabric only executes precomputed work lists. The
-        // runtime spec becomes the final (union) TAG so late-joining
-        // channels and roles resolve, while the initial deployment stays
-        // the pre-extension expansion.
-        let mut events: Vec<TopologyEvent> = spec.events.clone();
-        events.append(&mut opts.events);
-        events.sort_by_key(|e| e.at_us());
-        // The runtime spec is the *union across phases*: every event folds
-        // its roles/channels/datasets in by name (latest definition wins,
-        // dropped names are retained), so both the initial expansion's
-        // workers and late joiners resolve their channels and shards.
-        let mut runtime_spec = spec.clone();
-        runtime_spec.events.clear();
-        let mut entries: Vec<TimelineEntry> = Vec::new();
-        if !events.is_empty() {
-            if spec.role("coordinator").is_some() {
-                bail!(
-                    "live topology events are not supported with a coordinator role \
-                     (CO-FL runs its own membership protocol)"
-                );
-            }
-            if matches!(
-                tcfg.aggregation,
-                crate::algos::AggregationPolicy::Asynchronous { .. }
-            ) {
-                bail!("live topology events require synchronous aggregation");
-            }
-            if matches!(opts.executor, Executor::ThreadPerWorker) {
-                bail!(
-                    "live topology events require the cooperative executor \
-                     (thread-per-worker cannot spawn or retire pods mid-run)"
-                );
-            }
-            if spec.role("global-aggregator").is_none() {
-                bail!(
-                    "live topology events need a 'global-aggregator' round sequencer \
-                     to drain the timeline (distributed/all-reduce topologies have none)"
-                );
-            }
-            if spec.channels.iter().any(|c| c.pair.0 == c.pair.1) {
-                bail!(
-                    "live topology events are not supported on ring/all-reduce \
-                     topologies (ring membership is frozen at build)"
-                );
-            }
-            let mut cur = spec.clone();
-            let mut cur_workers = workers.clone();
-            for ev in &events {
-                match ev {
-                    TopologyEvent::Extend { at_us, delta } => {
-                        let next = delta.apply(&cur).context("applying topology delta")?;
-                        merge_spec_union(&mut runtime_spec, &next);
-                        let next_workers = expand(&next, &self.registry)
-                            .context("expanding extended TAG")?;
-                        let wd = diff_workers(&cur_workers, &next_workers);
-                        // a worker re-expanded under the same id merely
-                        // *mutates* (e.g. the global gaining the new tier's
-                        // uplink): the live worker adapts by joining the
-                        // channel — it is neither evicted nor re-deployed.
-                        // Only the round sequencer knows how to adapt, so
-                        // mutations of any other worker are rejected here
-                        // rather than silently diverging from the spec.
-                        let mutated: Vec<&String> = wd
-                            .remove
-                            .iter()
-                            .filter(|id| wd.add.iter().any(|(_, w)| w.id == **id))
-                            .collect();
-                        for id in &mutated {
-                            let role = cur_workers
-                                .iter()
-                                .find(|w| w.id == ***id)
-                                .map(|w| w.role.as_str())
-                                .unwrap_or("");
-                            if role != "global-aggregator" {
-                                bail!(
-                                    "extend event changes worker '{id}' ({role}) in \
-                                     place, which only the sequencer supports; express \
-                                     the change as distinct remove+add worker ids"
-                                );
-                            }
-                        }
-                        let deploys: Vec<WorkerConfig> = wd
-                            .add
-                            .iter()
-                            .filter(|(_, w)| !mutated.contains(&&w.id))
-                            .map(|(_, w)| w.clone())
-                            .collect();
-                        let evicts: Vec<String> = wd
-                            .remove
-                            .iter()
-                            .filter(|id| !mutated.contains(id))
-                            .cloned()
-                            .collect();
-                        if !evicts.is_empty() {
-                            entries.push(TimelineEntry {
-                                at: *at_us,
-                                action: ScheduledAction::Evict(evicts),
-                            });
-                        }
-                        if !deploys.is_empty() {
-                            entries.push(TimelineEntry {
-                                at: *at_us,
-                                action: ScheduledAction::Deploy(deploys),
-                            });
-                        }
-                        cur = next;
-                        cur_workers = next_workers;
-                    }
-                    TopologyEvent::Leave { at_us, workers: leavers } => {
-                        for id in leavers {
-                            if !cur_workers.iter().any(|w| w.id == *id) {
-                                bail!("leave event names unknown worker '{id}'");
-                            }
-                        }
-                        entries.push(TimelineEntry {
-                            at: *at_us,
-                            action: ScheduledAction::Evict(leavers.clone()),
-                        });
-                    }
-                }
-            }
-        }
-        let timeline = TopologyTimeline::new(entries);
-
-        let net = Arc::new(VirtualNet::default());
-        if let Some(f) = opts.configure_net.take() {
-            f(&net);
-        }
-        // data shards cover the union of every phase's datasets, so late
-        // joiners and not-yet-retired leavers both find theirs materialised
-        let n_shards = runtime_spec.datasets.len();
-        let (shards, test) = make_federated(
-            opts.data_seed,
-            n_shards.max(1),
-            opts.per_shard,
-            opts.test_n,
-            opts.partition,
-            opts.noise_sigma,
-        );
-        let mut shard_map = HashMap::new();
-        for (d, s) in runtime_spec.datasets.iter().zip(shards) {
-            shard_map.insert(d.name.clone(), Arc::new(s));
-        }
-        let init_flat = Arc::new(
-            opts.init_flat
-                .take()
-                .unwrap_or_else(|| vec![0f32; opts.compute.d_pad()]),
-        );
-        let job = Arc::new(JobRuntime {
-            spec: runtime_spec,
-            chan_mgr: ChannelManager::new(net),
-            compute: opts.compute,
-            tcfg,
-            metrics: Arc::new(MetricsHub::new()),
-            shards: shard_map,
-            test_set: Arc::new(test),
-            time_model: opts.time_model,
-            init_flat,
-            timeline: timeline.clone(),
-        });
-
         // (step 5/6) deploy-event -> deployers create pods
         self.notifier.emit(
             EventKind::Deploy,
@@ -472,10 +541,7 @@ impl Controller {
         // observe complete channel membership — the equivalent of the
         // paper's agents fetching full task configuration before starting
         // the worker process.
-        let recv_timeout = opts
-            .recv_timeout
-            .unwrap_or_else(|| auto_recv_timeout(workers.len()));
-        let sim: Arc<dyn Deployer> = match opts.executor {
+        let sim: Arc<dyn Deployer> = match executor {
             Executor::Cooperative { runners } => Arc::new(SimDeployer::new(runners)),
             Executor::ThreadPerWorker => Arc::new(ThreadDeployer::new(recv_timeout)),
         };

@@ -1,0 +1,180 @@
+//! Admission control: capacity accounting over registered computes.
+//!
+//! The [`crate::registry::Registry`] advertises an advisory worker
+//! capacity per compute cluster; the [`CapacityLedger`] turns that into a
+//! reservation book the [`super::JobManager`] admits against. A job's
+//! **demand** is its expanded worker count per compute (placement — realm
+//! matching and least-loaded spreading — already happened in
+//! [`crate::tag::expand`]); admission reserves the demand, job completion
+//! releases it, and a job whose demand cannot currently be reserved waits
+//! in the FIFO admission queue.
+
+use std::collections::BTreeMap;
+
+use crate::registry::Registry;
+use crate::tag::WorkerConfig;
+
+/// Per-compute demand of one job: `compute name -> workers placed there`.
+pub type Demand = BTreeMap<String, usize>;
+
+/// Reservation book over the registered computes' advisory capacities.
+pub struct CapacityLedger {
+    caps: BTreeMap<String, usize>,
+    in_use: BTreeMap<String, usize>,
+}
+
+impl CapacityLedger {
+    /// A ledger over `registry`'s computes, nothing reserved.
+    pub fn from_registry(registry: &Registry) -> Self {
+        Self {
+            caps: registry
+                .computes()
+                .iter()
+                .map(|c| (c.name.clone(), c.capacity))
+                .collect(),
+            in_use: BTreeMap::new(),
+        }
+    }
+
+    /// Register (or update) a compute's capacity after construction.
+    pub fn set_capacity(&mut self, compute: &str, capacity: usize) {
+        self.caps.insert(compute.to_string(), capacity);
+    }
+
+    /// A job's per-compute demand, read off its expanded worker list.
+    pub fn demand_of(workers: &[WorkerConfig]) -> Demand {
+        let mut d = Demand::new();
+        for w in workers {
+            *d.entry(w.compute.clone()).or_insert(0) += 1;
+        }
+        d
+    }
+
+    /// Can `demand` be reserved *right now* (per compute, free >= asked)?
+    pub fn fits(&self, demand: &Demand) -> bool {
+        demand.iter().all(|(c, n)| self.free(c) >= *n)
+    }
+
+    /// Could `demand` ever be reserved on an idle fleet? `false` means the
+    /// job is unschedulable and must be rejected at submit, not queued
+    /// forever.
+    pub fn can_ever_fit(&self, demand: &Demand) -> bool {
+        demand
+            .iter()
+            .all(|(c, n)| self.caps.get(c).copied().unwrap_or(0) >= *n)
+    }
+
+    /// Reserve `demand` (admission). Callers check [`Self::fits`] first;
+    /// over-reservation is allowed but leaves `free` at zero.
+    pub fn reserve(&mut self, demand: &Demand) {
+        for (c, n) in demand {
+            *self.in_use.entry(c.clone()).or_insert(0) += n;
+        }
+    }
+
+    /// Release `demand` (job finished).
+    pub fn release(&mut self, demand: &Demand) {
+        for (c, n) in demand {
+            let e = self.in_use.entry(c.clone()).or_insert(0);
+            *e = e.saturating_sub(*n);
+        }
+    }
+
+    /// Unreserved capacity on `compute` (0 for unknown computes).
+    pub fn free(&self, compute: &str) -> usize {
+        let cap = self.caps.get(compute).copied().unwrap_or(0);
+        cap.saturating_sub(self.used(compute))
+    }
+
+    /// Reserved capacity on `compute`.
+    pub fn used(&self, compute: &str) -> usize {
+        self.in_use.get(compute).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Backend;
+    use crate::registry::ComputeSpec;
+    use crate::tag::expand;
+    use crate::topo;
+
+    fn two_box_registry(cap: usize) -> Registry {
+        let mut r = Registry::new();
+        r.register_compute(ComputeSpec::new("a", "*", cap));
+        r.register_compute(ComputeSpec::new("b", "*", cap));
+        r
+    }
+
+    #[test]
+    fn demand_counts_workers_per_compute() {
+        let reg = two_box_registry(100);
+        let spec = topo::classical(4, Backend::P2p).build();
+        let workers = expand(&spec, &reg).unwrap();
+        let d = CapacityLedger::demand_of(&workers);
+        // 4 trainers least-loaded across a/b + 1 global round-robin
+        assert_eq!(d.values().sum::<usize>(), 5);
+        assert!(d.keys().all(|k| k == "a" || k == "b"));
+    }
+
+    #[test]
+    fn reserve_release_roundtrip_at_exact_capacity() {
+        let reg = two_box_registry(3);
+        let mut l = CapacityLedger::from_registry(&reg);
+        let d: Demand = [("a".to_string(), 3usize)].into_iter().collect();
+        assert!(l.fits(&d), "exact capacity must fit");
+        l.reserve(&d);
+        assert_eq!(l.free("a"), 0);
+        assert_eq!(l.free("b"), 3);
+        // the admission-queueing edge the JobManager relies on: a second
+        // identical job does NOT fit until the first releases
+        assert!(!l.fits(&d));
+        assert!(l.can_ever_fit(&d), "queued, not rejected");
+        l.release(&d);
+        assert!(l.fits(&d));
+        assert_eq!(l.used("a"), 0);
+    }
+
+    #[test]
+    fn oversized_demand_is_unschedulable_not_queued() {
+        let reg = two_box_registry(4);
+        let l = CapacityLedger::from_registry(&reg);
+        let d: Demand = [("a".to_string(), 5usize)].into_iter().collect();
+        assert!(!l.fits(&d));
+        assert!(!l.can_ever_fit(&d), "demand beyond capacity can never fit");
+        // spread across computes, each within its own cap, is fine
+        let spread: Demand = [("a".to_string(), 4usize), ("b".to_string(), 4usize)]
+            .into_iter()
+            .collect();
+        assert!(l.can_ever_fit(&spread));
+    }
+
+    #[test]
+    fn unknown_compute_has_zero_capacity() {
+        let reg = two_box_registry(4);
+        let l = CapacityLedger::from_registry(&reg);
+        let d: Demand = [("ghost".to_string(), 1usize)].into_iter().collect();
+        assert!(!l.fits(&d));
+        assert!(!l.can_ever_fit(&d));
+        assert_eq!(l.free("ghost"), 0);
+    }
+
+    #[test]
+    fn release_never_underflows() {
+        let reg = two_box_registry(4);
+        let mut l = CapacityLedger::from_registry(&reg);
+        let d: Demand = [("a".to_string(), 2usize)].into_iter().collect();
+        l.release(&d); // release without reserve
+        assert_eq!(l.used("a"), 0);
+        assert_eq!(l.free("a"), 4);
+    }
+
+    #[test]
+    fn single_box_infinite_capacity_always_fits() {
+        let l = CapacityLedger::from_registry(&Registry::single_box());
+        let d: Demand = [("box".to_string(), 1_000_000usize)].into_iter().collect();
+        assert!(l.fits(&d));
+        assert!(l.can_ever_fit(&d));
+    }
+}

@@ -1,0 +1,950 @@
+//! Multi-job control plane: concurrent job admission, placement, and
+//! fair-share execution on one shared worker fabric (paper §4/§5 —
+//! Flame's apiserver/controller manage *many* FL jobs over shared
+//! infrastructure; the single-job [`crate::control::Controller`] is the
+//! degenerate case).
+//!
+//! The [`JobManager`] accepts any number of [`JobSpec`] submissions and
+//! drives each through the lifecycle
+//!
+//! ```text
+//! submit ─▶ Queued ──admit──▶ Deploying ─▶ Running ─▶ Completed
+//!             │   (capacity)                   │
+//!             └───── FIFO wait ◀── release ────┴─────▶ Failed
+//! ```
+//!
+//! * **Admission** checks the job's expanded per-compute demand against a
+//!   [`CapacityLedger`] over the registry's advisory capacities. A job
+//!   that fits is deployed immediately; one that doesn't waits in a FIFO
+//!   queue (head-of-line order — deliberately simple and deterministic).
+//!   A job whose demand exceeds total capacity is rejected at submit.
+//! * **Execution** multiplexes every admitted job onto **one** shared
+//!   virtual-time [`Scheduler`]: each job gets its own fair-share group
+//!   (so a 10k-trainer job cannot starve a 5-worker job — see
+//!   [`crate::sched`]) and its own scoped [`ChannelManager`] view over
+//!   the shared channel fabric (so identically named workers/channels of
+//!   concurrent jobs can never collide — see [`crate::channel`]).
+//! * **Release** happens on the running fabric: a control-plane *pump*
+//!   task wakes whenever a job's last pod terminates, releases its
+//!   capacity, persists the terminal state, and admits whatever now fits
+//!   — jobs queue and drain without ever pausing the fabric.
+//!
+//! Every lifecycle transition is persisted to the [`Store`] (collection
+//! `job_state`) and streamed through the [`Notifier`] as
+//! [`EventKind::JobState`] events.
+//!
+//! Per-job results are **deterministic**: a job's virtual execution
+//! depends only on its own spec, options and seed — never on when the
+//! pump admitted it — so a fleet of seeded jobs yields byte-identical
+//! per-job reports across runs and runner-pool sizes
+//! (`rust/tests/fleet.rs`).
+
+pub mod admission;
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::channel::ChannelManager;
+use crate::control::{prepare_expanded, JobOptions, PreparedJob};
+use crate::deploy::{FleetDeployer, PodTracker};
+use crate::json::Json;
+use crate::net::{VTime, VirtualNet};
+use crate::notify::{EventKind, Notifier};
+use crate::registry::Registry;
+use crate::roles::JobRuntime;
+use crate::sched::{PollOutcome, RunnableTask, Scheduler, Waker};
+use crate::store::Store;
+use crate::tag::{expand, JobSpec, WorkerConfig};
+
+pub use admission::{CapacityLedger, Demand};
+
+/// Control-plane job identifier (`<spec name>-<submission counter>`).
+pub type JobId = String;
+
+/// Control-plane lifecycle states (persisted in the `job_state`
+/// collection and streamed as [`EventKind::JobState`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobPhase {
+    /// Accepted, waiting for capacity (FIFO).
+    Queued,
+    /// Admitted: capacity reserved, workers being staged on the fabric.
+    Deploying,
+    /// All workers launched.
+    Running,
+    /// Every pod completed cleanly.
+    Completed,
+    /// Rejected at admission, failed to deploy, or >= 1 pod failed.
+    Failed(String),
+}
+
+impl JobPhase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobPhase::Queued => "queued",
+            JobPhase::Deploying => "deploying",
+            JobPhase::Running => "running",
+            JobPhase::Completed => "completed",
+            JobPhase::Failed(_) => "failed",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobPhase::Completed | JobPhase::Failed(_))
+    }
+}
+
+/// Per-job bookkeeping inside the fleet.
+struct JobSlot {
+    id: JobId,
+    phase: JobPhase,
+    demand: Demand,
+    /// Spec + options + the submit-time expansion, parked until
+    /// admission (consumed by deploy — Algorithm 1 runs once per job).
+    pending: Option<(JobSpec, JobOptions, Vec<WorkerConfig>)>,
+    runtime: Option<Arc<JobRuntime>>,
+    /// Pods not yet terminal (includes live-extension joiners).
+    active_pods: usize,
+    /// Every pod ever staged for this job.
+    spawned_pods: usize,
+    failed_pods: usize,
+    /// Error recorded while staging workers (pods may still drain).
+    deploy_error: Option<String>,
+    /// Largest virtual time reached by any of the job's pods.
+    finish_at: VTime,
+    /// Pump cycle that admitted this job (1 = never waited for capacity).
+    admitted_cycle: Option<u64>,
+}
+
+impl JobSlot {
+    fn new(
+        id: JobId,
+        demand: Demand,
+        pending: Option<(JobSpec, JobOptions, Vec<WorkerConfig>)>,
+    ) -> Self {
+        Self {
+            id,
+            phase: JobPhase::Queued,
+            demand,
+            pending,
+            runtime: None,
+            active_pods: 0,
+            spawned_pods: 0,
+            failed_pods: 0,
+            deploy_error: None,
+            finish_at: 0,
+            admitted_cycle: None,
+        }
+    }
+}
+
+struct FleetState {
+    ledger: CapacityLedger,
+    slots: Vec<JobSlot>,
+    /// FIFO admission queue of slot indices.
+    queue: VecDeque<usize>,
+    /// Jobs whose last pod terminated, awaiting pump processing.
+    completions: Vec<usize>,
+    /// Jobs admitted and not yet processed as complete.
+    running_jobs: usize,
+    /// Pump cycles so far (cycle 1 is the initial admission pass).
+    cycle: u64,
+}
+
+/// State shared between the [`JobManager`] and the pump task running on
+/// the fleet fabric.
+struct FleetCore {
+    store: Arc<Store>,
+    notifier: Arc<Notifier>,
+    registry: RwLock<Registry>,
+    sched: Scheduler,
+    /// Root of the shared channel fabric; jobs get scoped views.
+    chan_root: Arc<ChannelManager>,
+    state: Mutex<FleetState>,
+    pump_waker: Mutex<Option<Waker>>,
+}
+
+impl FleetCore {
+    /// Record and broadcast a lifecycle transition.
+    fn set_phase(&self, idx: usize, phase: JobPhase) -> Result<()> {
+        let id = {
+            let mut g = self.state.lock().unwrap();
+            g.slots[idx].phase = phase.clone();
+            g.slots[idx].id.clone()
+        };
+        self.store.put("job_state", &id, Json::from(phase.as_str()))?;
+        self.notifier.emit(EventKind::JobState, &id, Json::from(phase.as_str()));
+        Ok(())
+    }
+
+    /// A job that never made it onto the fabric: release its reservation
+    /// and record the terminal failure.
+    fn release_and_fail(&self, idx: usize, msg: String) {
+        {
+            let mut g = self.state.lock().unwrap();
+            let demand = g.slots[idx].demand.clone();
+            g.ledger.release(&demand);
+            g.running_jobs -= 1;
+        }
+        let _ = self.set_phase(idx, JobPhase::Failed(msg));
+    }
+
+    /// Process one finished job: terminal phase + capacity release.
+    fn finish_job(&self, idx: usize) {
+        let phase = {
+            let mut g = self.state.lock().unwrap();
+            let demand = g.slots[idx].demand.clone();
+            g.ledger.release(&demand);
+            g.running_jobs -= 1;
+            let s = &g.slots[idx];
+            if let Some(e) = &s.deploy_error {
+                JobPhase::Failed(e.clone())
+            } else if s.failed_pods > 0 {
+                JobPhase::Failed(format!("{} worker pod(s) failed", s.failed_pods))
+            } else {
+                JobPhase::Completed
+            }
+        };
+        let _ = self.set_phase(idx, phase);
+    }
+
+    /// Admit and deploy one queued job onto the running (or about-to-run)
+    /// fabric. Capacity was already reserved by the caller.
+    fn deploy_job(self: &Arc<Self>, idx: usize) {
+        let (id, spec, opts, expanded) = {
+            let mut g = self.state.lock().unwrap();
+            let cycle = g.cycle;
+            let s = &mut g.slots[idx];
+            s.admitted_cycle = Some(cycle);
+            let (spec, opts, expanded) = s.pending.take().expect("queued job has pending spec");
+            (s.id.clone(), spec, opts, expanded)
+        };
+        let _ = self.set_phase(idx, JobPhase::Deploying);
+        let prepared = {
+            let reg = self.registry.read().unwrap();
+            prepare_expanded(&id, spec, opts, &reg, self.chan_root.scoped(&id), expanded)
+        };
+        let prepared = match prepared {
+            Ok(p) => p,
+            Err(e) => {
+                self.release_and_fail(idx, format!("deploy failed: {e:#}"));
+                return;
+            }
+        };
+        let PreparedJob {
+            job,
+            workers,
+            timeline,
+            ..
+        } = prepared;
+        let tracker: Arc<dyn PodTracker> = Arc::new(JobTracker {
+            core: self.clone(),
+            idx,
+        });
+        // fair-share group: job slot + 1 (group 0 is the pump's)
+        let deployer = Arc::new(FleetDeployer::new(self.sched.clone(), idx + 1, tracker));
+        if timeline.is_elastic() {
+            timeline.bind(deployer.clone(), self.notifier.clone());
+        }
+        {
+            let mut g = self.state.lock().unwrap();
+            g.slots[idx].runtime = Some(job.clone());
+        }
+        self.notifier
+            .emit(EventKind::Deploy, &id, Json::from(workers.len()));
+        let mut stage_error = None;
+        for w in &workers {
+            if let Err(e) = deployer.deploy(w.clone(), &job, self.notifier.clone()) {
+                stage_error = Some(format!("staging worker '{}': {e:#}", w.id));
+                break;
+            }
+        }
+        let staged_any = {
+            let g = self.state.lock().unwrap();
+            g.slots[idx].spawned_pods > 0
+        };
+        if let Some(msg) = stage_error {
+            if !staged_any {
+                // nothing on the fabric: fail and release right here
+                self.release_and_fail(idx, msg);
+                return;
+            }
+            // pods already staged must drain; the completion path turns
+            // the recorded error into the terminal Failed phase
+            self.state.lock().unwrap().slots[idx].deploy_error = Some(msg);
+        }
+        if !staged_any {
+            // a zero-worker job is trivially complete
+            self.finish_job(idx);
+            return;
+        }
+        // launch every staged pod (two-phase: all channels joined first)
+        let _ = deployer.start();
+        let _ = self.set_phase(idx, JobPhase::Running);
+    }
+
+    /// One control-plane pump cycle: process completions (in a canonical
+    /// order), then admit whatever now fits, FIFO.
+    fn pump_cycle(self: &Arc<Self>) -> PollOutcome {
+        let done: Vec<usize> = {
+            let mut g = self.state.lock().unwrap();
+            g.cycle += 1;
+            let mut d = std::mem::take(&mut g.completions);
+            let finish = |i: &usize| (g.slots[*i].finish_at, *i);
+            d.sort_by_key(finish);
+            d
+        };
+        for idx in done {
+            self.finish_job(idx);
+        }
+        loop {
+            let next = {
+                let mut g = self.state.lock().unwrap();
+                let head = g.queue.front().copied();
+                match head {
+                    Some(idx) if g.ledger.fits(&g.slots[idx].demand) => {
+                        g.queue.pop_front();
+                        let demand = g.slots[idx].demand.clone();
+                        g.ledger.reserve(&demand);
+                        g.running_jobs += 1;
+                        Some(idx)
+                    }
+                    _ => None,
+                }
+            };
+            match next {
+                Some(idx) => self.deploy_job(idx),
+                None => break,
+            }
+        }
+        let g = self.state.lock().unwrap();
+        if g.queue.is_empty() && g.running_jobs == 0 && g.completions.is_empty() {
+            PollOutcome::Done
+        } else {
+            PollOutcome::Parked
+        }
+    }
+
+    /// Wake the pump at virtual time 0: job clocks are mutually
+    /// incomparable, so waking at a finished job's (possibly huge) final
+    /// vtime would sort the pump behind every other job's pending work
+    /// and delay capacity release. Vtime 0 gives admission the earliest
+    /// possible poll; per-job results cannot depend on it (admitted jobs
+    /// start their own clocks at 0 regardless).
+    fn wake_pump(&self) {
+        if let Some(w) = self.pump_waker.lock().unwrap().as_ref() {
+            w.wake(0);
+        }
+    }
+}
+
+/// Observes one job's pods on the shared fabric.
+struct JobTracker {
+    core: Arc<FleetCore>,
+    idx: usize,
+}
+
+impl PodTracker for JobTracker {
+    fn pod_spawned(&self) {
+        let mut g = self.core.state.lock().unwrap();
+        let s = &mut g.slots[self.idx];
+        s.active_pods += 1;
+        s.spawned_pods += 1;
+    }
+
+    fn pod_done(&self, at: VTime, failed: bool) {
+        let job_finished = {
+            let mut g = self.core.state.lock().unwrap();
+            let idx = self.idx;
+            let s = &mut g.slots[idx];
+            s.active_pods -= 1;
+            if failed {
+                s.failed_pods += 1;
+            }
+            s.finish_at = s.finish_at.max(at);
+            let finished = s.active_pods == 0;
+            if finished {
+                g.completions.push(idx);
+            }
+            finished
+        };
+        if job_finished {
+            // the completing pod's poll is still counted as running, so
+            // this wake can never race the deadlock detector
+            self.core.wake_pump();
+        }
+    }
+}
+
+/// The control-plane pump: a tasklet on the fleet fabric that releases
+/// capacity and admits queued jobs the moment any job finishes.
+struct Pump {
+    core: Arc<FleetCore>,
+}
+
+impl RunnableTask for Pump {
+    fn name(&self) -> &str {
+        "control-plane-pump"
+    }
+
+    fn poll(&mut self) -> PollOutcome {
+        self.core.pump_cycle()
+    }
+
+    fn fail(&mut self, _reason: &str) {
+        // the fleet stalled with the pump parked (some job deadlocked and
+        // the detector culled every waiter); run_fleet's post-run pass
+        // marks the remaining jobs
+    }
+}
+
+// ------------------------------------------------------------- reports
+
+/// Terminal per-job summary. [`Self::line`] is a stable, fully-precise
+/// rendering used by the determinism tests (byte-identical across runs).
+#[derive(Debug, Clone)]
+pub struct FleetJobReport {
+    pub job: JobId,
+    pub phase: JobPhase,
+    /// Pods that ran (including live-extension joiners).
+    pub workers: usize,
+    /// Rounds (or async versions) that recorded an evaluation.
+    pub rounds: u64,
+    pub final_loss: Option<f64>,
+    pub final_acc: Option<f64>,
+    pub total_bytes: u64,
+    /// The job's own final virtual time, seconds.
+    pub vtime_s: f64,
+}
+
+impl FleetJobReport {
+    /// Canonical one-line rendering (full float precision — any
+    /// nondeterminism shows up as a byte diff).
+    pub fn line(&self) -> String {
+        format!(
+            "{} phase={} workers={} rounds={} loss={:?} acc={:?} bytes={} vtime_s={:?}",
+            self.job,
+            self.phase.as_str(),
+            self.workers,
+            self.rounds,
+            self.final_loss,
+            self.final_acc,
+            self.total_bytes,
+            self.vtime_s,
+        )
+    }
+}
+
+/// What a drained fleet returns.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub jobs: Vec<FleetJobReport>,
+    pub completed: usize,
+    pub failed: usize,
+    /// Jobs that waited in the admission queue (not admitted on the
+    /// initial pass).
+    pub waited: usize,
+    /// Largest single-job virtual time, seconds (fleet virtual makespan
+    /// under full concurrency).
+    pub max_job_vs: f64,
+    /// Sum of all jobs' virtual times, seconds (total virtual work).
+    pub total_job_vs: f64,
+    pub total_rounds: u64,
+    /// Fleet throughput: completed jobs per virtual second of makespan.
+    pub jobs_per_vs: f64,
+    /// Fleet throughput: evaluated rounds per virtual second of makespan.
+    pub rounds_per_vs: f64,
+    pub wall_s: f64,
+}
+
+impl FleetReport {
+    /// Stable summary line (excludes wall-clock, so it is deterministic).
+    pub fn summary(&self) -> String {
+        format!(
+            "fleet: jobs={} completed={} failed={} waited={} max_job_vs={:.4} \
+             total_job_vs={:.4} rounds={} jobs_per_vs={:.4} rounds_per_vs={:.4}",
+            self.jobs.len(),
+            self.completed,
+            self.failed,
+            self.waited,
+            self.max_job_vs,
+            self.total_job_vs,
+            self.total_rounds,
+            self.jobs_per_vs,
+            self.rounds_per_vs,
+        )
+    }
+}
+
+// ---------------------------------------------------------- JobManager
+
+/// The multi-job control plane (see module docs).
+pub struct JobManager {
+    core: Arc<FleetCore>,
+    counter: u64,
+}
+
+impl JobManager {
+    /// A manager over the fiab-style single-box registry (unbounded
+    /// capacity: every job admits immediately).
+    pub fn new(store: Arc<Store>) -> Self {
+        Self::with_registry(store, Registry::single_box())
+    }
+
+    /// A manager over an explicit registry — admission control enforces
+    /// the registered computes' capacities.
+    pub fn with_registry(store: Arc<Store>, registry: Registry) -> Self {
+        let ledger = CapacityLedger::from_registry(&registry);
+        Self {
+            core: Arc::new(FleetCore {
+                store,
+                notifier: Arc::new(Notifier::new()),
+                registry: RwLock::new(registry),
+                sched: Scheduler::new(),
+                chan_root: ChannelManager::new(Arc::new(VirtualNet::default())),
+                state: Mutex::new(FleetState {
+                    ledger,
+                    slots: Vec::new(),
+                    queue: VecDeque::new(),
+                    completions: Vec::new(),
+                    running_jobs: 0,
+                    cycle: 0,
+                }),
+                pump_waker: Mutex::new(None),
+            }),
+            counter: 0,
+        }
+    }
+
+    pub fn notifier(&self) -> Arc<Notifier> {
+        self.core.notifier.clone()
+    }
+
+    /// The journaling store the control plane persists through.
+    pub fn store(&self) -> Arc<Store> {
+        self.core.store.clone()
+    }
+
+    /// Ids of every submitted job, in submission order.
+    pub fn job_ids(&self) -> Vec<JobId> {
+        let g = self.core.state.lock().unwrap();
+        g.slots.iter().map(|s| s.id.clone()).collect()
+    }
+
+    /// Register a compute cluster (journaled, capacity fed to admission).
+    pub fn register_compute(&mut self, c: crate::registry::ComputeSpec) -> Result<()> {
+        self.core.store.put("computes", &c.name, c.to_json())?;
+        let mut g = self.core.state.lock().unwrap();
+        g.ledger.set_capacity(&c.name, c.capacity);
+        drop(g);
+        self.core.registry.write().unwrap().register_compute(c);
+        Ok(())
+    }
+
+    /// Current lifecycle phase of a submitted job.
+    pub fn job_phase(&self, id: &str) -> Option<JobPhase> {
+        let g = self.core.state.lock().unwrap();
+        g.slots.iter().find(|s| s.id == id).map(|s| s.phase.clone())
+    }
+
+    /// Accept a job: persist its spec and expansion, run admission
+    /// pre-checks, and queue it for the next [`Self::run_fleet`]. Returns
+    /// the job id; fails (with a persisted `Failed` state) when the spec
+    /// cannot expand or its demand exceeds total fleet capacity.
+    ///
+    /// Demand accounts the **peak** worker population across the job's
+    /// live-extension timeline, not just the initial expansion — a job
+    /// whose `Extend` event grows a tier mid-run reserves the grown
+    /// size up front, so live joiners can never overcommit the ledger.
+    pub fn submit(&mut self, spec: JobSpec, opts: JobOptions) -> Result<JobId> {
+        self.counter += 1;
+        let job_id: JobId = format!("{}-{}", spec.name, self.counter);
+        self.core.store.put("jobs", &job_id, spec.to_json())?;
+        let expanded = {
+            let reg = self.core.registry.read().unwrap();
+            expand(&spec, &reg)
+        };
+        let workers = match expanded {
+            Ok(w) => w,
+            Err(e) => {
+                let msg = format!("admission: TAG expansion failed: {e:#}");
+                return Err(self.reject(&job_id, Demand::new(), msg));
+            }
+        };
+        let demand = match self.peak_demand(&spec, &opts, &workers) {
+            Ok(d) => d,
+            Err(e) => {
+                let msg = format!("admission: resolving event timeline: {e:#}");
+                return Err(self.reject(&job_id, Demand::new(), msg));
+            }
+        };
+        let schedulable = {
+            let g = self.core.state.lock().unwrap();
+            g.ledger.can_ever_fit(&demand)
+        };
+        if !schedulable {
+            let msg = format!(
+                "admission: demand {demand:?} exceeds registered compute capacity \
+                 (job can never be placed)"
+            );
+            return Err(self.reject(&job_id, demand, msg));
+        }
+        self.core
+            .store
+            .put_batch(
+                "workers",
+                workers
+                    .iter()
+                    .map(|w| (format!("{job_id}/{}", w.id), w.to_json())),
+            )
+            .context("persisting expansion")?;
+        let idx = self.push_slot(JobSlot::new(
+            job_id.clone(),
+            demand,
+            Some((spec, opts, workers)),
+        ));
+        self.core.set_phase(idx, JobPhase::Queued)?;
+        self.core.state.lock().unwrap().queue.push_back(idx);
+        Ok(job_id)
+    }
+
+    /// Per-compute demand at the job's busiest phase: the maximum over
+    /// the initial expansion and every `Extend`ed topology in the event
+    /// timeline (evictions never release ledger capacity mid-job, so the
+    /// running maximum is exactly what the fabric can be asked to hold).
+    fn peak_demand(
+        &self,
+        spec: &JobSpec,
+        opts: &JobOptions,
+        workers: &[WorkerConfig],
+    ) -> Result<Demand> {
+        let mut demand = CapacityLedger::demand_of(workers);
+        let mut events: Vec<&crate::tag::TopologyEvent> =
+            spec.events.iter().chain(opts.events.iter()).collect();
+        if events.iter().all(|e| !matches!(e, crate::tag::TopologyEvent::Extend { .. })) {
+            return Ok(demand);
+        }
+        events.sort_by_key(|e| e.at_us());
+        let reg = self.core.registry.read().unwrap();
+        let mut cur = spec.clone();
+        cur.events.clear();
+        for ev in events {
+            if let crate::tag::TopologyEvent::Extend { delta, .. } = ev {
+                cur = delta.apply(&cur).context("applying topology delta")?;
+                let ws = expand(&cur, &reg).context("expanding extended TAG")?;
+                for (c, n) in CapacityLedger::demand_of(&ws) {
+                    let slot = demand.entry(c).or_insert(0);
+                    *slot = (*slot).max(n);
+                }
+            }
+        }
+        Ok(demand)
+    }
+
+    /// Record a submit-time rejection: a slot with a persisted terminal
+    /// `Failed` state, and the error to hand back to the caller.
+    fn reject(&self, job_id: &str, demand: Demand, msg: String) -> anyhow::Error {
+        let idx = self.push_slot(JobSlot::new(job_id.to_string(), demand, None));
+        let _ = self.core.set_phase(idx, JobPhase::Failed(msg.clone()));
+        anyhow::anyhow!("job {job_id}: {msg}")
+    }
+
+    fn push_slot(&self, slot: JobSlot) -> usize {
+        let mut g = self.core.state.lock().unwrap();
+        let idx = g.slots.len();
+        g.slots.push(slot);
+        idx
+    }
+
+    /// Drive every queued job to a terminal state on one shared fabric.
+    /// `runners` bounds the pool (0 = one per CPU core). Returns when the
+    /// fabric drains; every submitted job is then `Completed` or `Failed`
+    /// in the store.
+    pub fn run_fleet(&mut self, runners: usize) -> Result<FleetReport> {
+        let wall0 = Instant::now();
+        let core = self.core.clone();
+        let pump_id = core.sched.spawn_in(0, Box::new(Pump { core: core.clone() }));
+        *core.pump_waker.lock().unwrap() = Some(core.sched.waker(pump_id));
+        let n = if runners == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            runners
+        };
+        core.sched.run(n);
+        *core.pump_waker.lock().unwrap() = None;
+
+        // post-run: settle anything the pump could not (a stalled fleet)
+        let leftovers: Vec<usize> = {
+            let mut g = core.state.lock().unwrap();
+            let mut d = std::mem::take(&mut g.completions);
+            let finish = |i: &usize| (g.slots[*i].finish_at, *i);
+            d.sort_by_key(finish);
+            d
+        };
+        for idx in leftovers {
+            core.finish_job(idx);
+        }
+        let unsettled: Vec<(usize, JobPhase)> = {
+            let g = core.state.lock().unwrap();
+            g.slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| !s.phase.is_terminal())
+                .map(|(i, s)| {
+                    let why = match s.phase {
+                        JobPhase::Queued => "starved in the admission queue (fleet stalled)",
+                        _ => "fabric drained before the job finished (deadlocked pods)",
+                    };
+                    (i, JobPhase::Failed(why.to_string()))
+                })
+                .collect()
+        };
+        for (idx, phase) in unsettled {
+            let _ = core.set_phase(idx, phase);
+        }
+        self.core.store.flush()?;
+
+        // assemble the report
+        let g = core.state.lock().unwrap();
+        let mut jobs = Vec::with_capacity(g.slots.len());
+        let mut completed = 0;
+        let mut failed = 0;
+        let mut waited = 0;
+        let mut max_vs = 0f64;
+        let mut total_vs = 0f64;
+        let mut total_rounds = 0u64;
+        for s in &g.slots {
+            let (rounds, loss, acc, bytes, vtime_s) = match &s.runtime {
+                Some(rt) => (
+                    rt.metrics.series("acc").len() as u64,
+                    rt.metrics.last("loss"),
+                    rt.metrics.last("acc"),
+                    rt.metrics.total_bytes(),
+                    rt.metrics.last("vtime_s").unwrap_or(0.0),
+                ),
+                None => (0, None, None, 0, 0.0),
+            };
+            match s.phase {
+                JobPhase::Completed => completed += 1,
+                JobPhase::Failed(_) => failed += 1,
+                _ => {}
+            }
+            if s.admitted_cycle.map_or(false, |c| c > 1) {
+                waited += 1;
+            }
+            max_vs = max_vs.max(vtime_s);
+            total_vs += vtime_s;
+            total_rounds += rounds;
+            jobs.push(FleetJobReport {
+                job: s.id.clone(),
+                phase: s.phase.clone(),
+                workers: s.spawned_pods,
+                rounds,
+                final_loss: loss,
+                final_acc: acc,
+                total_bytes: bytes,
+                vtime_s,
+            });
+        }
+        let denom = if max_vs > 0.0 { max_vs } else { 1.0 };
+        Ok(FleetReport {
+            completed,
+            failed,
+            waited,
+            max_job_vs: max_vs,
+            total_job_vs: total_vs,
+            total_rounds,
+            jobs_per_vs: completed as f64 / denom,
+            rounds_per_vs: total_rounds as f64 / denom,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            jobs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Backend;
+    use crate::registry::ComputeSpec;
+    use crate::topo;
+
+    fn small_job(name: &str, trainers: usize) -> JobSpec {
+        topo::classical(trainers, Backend::P2p)
+            .name(name)
+            .rounds(2)
+            .set("lr", Json::Num(0.5))
+            .set("local_steps", 1usize)
+            .build()
+    }
+
+    fn small_opts() -> JobOptions {
+        JobOptions::mock().with_data(24, 48, crate::data::Partition::Iid, 7)
+    }
+
+    fn bounded_manager(cap_a: usize, cap_b: usize) -> JobManager {
+        let mut reg = Registry::new();
+        reg.register_compute(ComputeSpec::new("a", "*", cap_a));
+        reg.register_compute(ComputeSpec::new("b", "*", cap_b));
+        JobManager::with_registry(Arc::new(Store::in_memory()), reg)
+    }
+
+    #[test]
+    fn two_concurrent_jobs_complete_on_one_fabric() {
+        let mut m = JobManager::new(Arc::new(Store::in_memory()));
+        let a = m.submit(small_job("cfl", 3), small_opts()).unwrap();
+        let b = m.submit(small_job("cfl", 4), small_opts()).unwrap();
+        assert_ne!(a, b, "submission counter disambiguates equal names");
+        let report = m.run_fleet(2).unwrap();
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.failed, 0);
+        for j in &report.jobs {
+            assert_eq!(j.phase, JobPhase::Completed);
+            assert!(j.final_acc.is_some(), "{}", j.line());
+            assert!(j.vtime_s > 0.0);
+        }
+        assert_eq!(report.jobs[0].workers, 4);
+        assert_eq!(report.jobs[1].workers, 5);
+    }
+
+    #[test]
+    fn lifecycle_transitions_persist_and_stream() {
+        let store = Arc::new(Store::in_memory());
+        let mut m = JobManager::new(store.clone());
+        let rx = m.notifier().subscribe(Some(EventKind::JobState), None);
+        let id = m.submit(small_job("cfl", 2), small_opts()).unwrap();
+        assert_eq!(m.job_phase(&id), Some(JobPhase::Queued));
+        m.run_fleet(1).unwrap();
+        assert_eq!(m.job_phase(&id), Some(JobPhase::Completed));
+        assert_eq!(
+            store.get("job_state", &id).unwrap().as_str(),
+            Some("completed")
+        );
+        let states: Vec<String> = rx
+            .try_iter()
+            .map(|e| e.payload.as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(states, vec!["queued", "deploying", "running", "completed"]);
+    }
+
+    #[test]
+    fn capacity_exhaustion_queues_then_admits_fifo() {
+        // each cfl job expands to 4 workers placed a,b,a + global on a
+        // (least-loaded + round-robin), i.e. demand {a: 3, b: 1};
+        // capacity 4+2 holds exactly one job at a time
+        let mut m = bounded_manager(4, 2);
+        let a = m.submit(small_job("cfl", 3), small_opts()).unwrap();
+        let b = m.submit(small_job("cfl", 3), small_opts()).unwrap();
+        let c = m.submit(small_job("cfl", 3), small_opts()).unwrap();
+        let report = m.run_fleet(2).unwrap();
+        assert_eq!(report.completed, 3, "{}", report.summary());
+        // FIFO: first job never waited; the rest did
+        assert!(report.waited >= 2, "{}", report.summary());
+        for id in [&a, &b, &c] {
+            assert_eq!(m.job_phase(id), Some(JobPhase::Completed), "{id}");
+        }
+    }
+
+    #[test]
+    fn oversized_job_is_rejected_at_submit_with_persisted_failure() {
+        let store = Arc::new(Store::in_memory());
+        let mut reg = Registry::new();
+        reg.register_compute(ComputeSpec::new("tiny", "*", 2));
+        let mut m = JobManager::with_registry(store.clone(), reg);
+        let err = m.submit(small_job("cfl", 8), small_opts()).unwrap_err();
+        assert!(format!("{err:#}").contains("capacity"), "{err:#}");
+        assert_eq!(store.get("job_state", "cfl-1").unwrap().as_str(), Some("failed"));
+        // the fleet still runs (empty) and reports the rejection
+        let report = m.run_fleet(1).unwrap();
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.completed, 0);
+    }
+
+    #[test]
+    fn extend_events_reserve_peak_demand_at_submit() {
+        let extend_spec = |rounds: u64| {
+            topo::classical(2, Backend::P2p)
+                .name("ext")
+                .rounds(rounds)
+                .set("lr", Json::Num(0.5))
+                .set("local_steps", 1usize)
+                .build()
+        };
+        let mk_events = |spec: &JobSpec| {
+            let delta = crate::tag::delta::add_tier_delta(spec, 1).unwrap();
+            vec![crate::tag::TopologyEvent::Extend { at_us: 1, delta }]
+        };
+        // classical(2) = 3 initial workers; the extend grows a 1-aggregator
+        // middle tier -> peak 4. Capacity 3 must reject at submit rather
+        // than let the live joiner overcommit the ledger mid-run.
+        let mut reg = Registry::new();
+        reg.register_compute(ComputeSpec::new("solo", "*", 3));
+        let mut m = JobManager::with_registry(Arc::new(Store::in_memory()), reg);
+        let spec = extend_spec(3);
+        let events = mk_events(&spec);
+        let err = m
+            .submit(spec, small_opts().with_events(events))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("capacity"), "{err:#}");
+        // with room for the peak, the job admits AND its live extension
+        // deploys on the shared fabric
+        let mut reg = Registry::new();
+        reg.register_compute(ComputeSpec::new("solo", "*", 4));
+        let mut m = JobManager::with_registry(Arc::new(Store::in_memory()), reg);
+        let spec = extend_spec(3);
+        let events = mk_events(&spec);
+        let id = m.submit(spec, small_opts().with_events(events)).unwrap();
+        let report = m.run_fleet(2).unwrap();
+        assert_eq!(m.job_phase(&id), Some(JobPhase::Completed), "{}", report.summary());
+        // 3 initial pods + the live-deployed aggregator
+        assert_eq!(report.jobs[0].workers, 4);
+    }
+
+    #[test]
+    fn realm_mismatch_fails_admission_cleanly() {
+        let mut reg = Registry::new();
+        reg.register_compute(ComputeSpec::new("eu", "eu", 16));
+        let mut m = JobManager::with_registry(Arc::new(Store::in_memory()), reg);
+        let mut spec = small_job("cfl", 2);
+        spec.datasets[0].realm = "us/east".into();
+        assert!(m.submit(spec, small_opts()).is_err());
+    }
+
+    #[test]
+    fn empty_fleet_run_returns_immediately() {
+        let mut m = JobManager::new(Arc::new(Store::in_memory()));
+        let report = m.run_fleet(1).unwrap();
+        assert!(report.jobs.is_empty());
+        assert_eq!(report.completed, 0);
+    }
+
+    #[test]
+    fn failing_job_does_not_poison_its_neighbours() {
+        let mut m = JobManager::new(Arc::new(Store::in_memory()));
+        let good = m.submit(small_job("cfl", 3), small_opts()).unwrap();
+        // an unknown hyper algorithm fails at deploy (prepare), after
+        // admission — the slot must turn Failed without touching the
+        // healthy job
+        let mut bad = small_job("cfl", 2);
+        bad.hyper = {
+            let mut o = Json::obj();
+            o.insert("algorithm", "no-such-algo");
+            Json::Obj(o)
+        };
+        let bad_id = m.submit(bad, small_opts()).unwrap();
+        let report = m.run_fleet(2).unwrap();
+        assert_eq!(m.job_phase(&good), Some(JobPhase::Completed));
+        match m.job_phase(&bad_id) {
+            Some(JobPhase::Failed(msg)) => {
+                assert!(msg.contains("deploy failed"), "{msg}")
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.failed, 1);
+    }
+}

@@ -31,7 +31,7 @@ use crate::json::Json;
 use crate::net::VTime;
 use crate::notify::{EventKind, Notifier};
 use crate::roles::{JobRuntime, WorkerEnv};
-use crate::sched::{Scheduler, WorkerPark};
+use crate::sched::{PollOutcome, RunnableTask, Scheduler, TaskId, WorkerPark};
 use crate::tag::WorkerConfig;
 
 /// Pod lifecycle states.
@@ -230,6 +230,163 @@ impl Deployer for SimDeployer {
         };
         self.sched.run(runners);
         Ok(())
+    }
+}
+
+// ----------------------------------------------------- fleet (multi-job)
+
+/// Observer for pod lifecycle on a shared fleet fabric. The multi-job
+/// control plane tracks per-job pod counts through this: `pod_spawned`
+/// fires when a pod is staged (before it can run), `pod_done` when its
+/// task reaches a terminal state — `at` is the worker's final virtual
+/// time, `failed` whether it ended [`PodStatus::Failed`].
+pub trait PodTracker: Send + Sync {
+    fn pod_spawned(&self);
+    fn pod_done(&self, at: VTime, failed: bool);
+}
+
+/// Wraps a worker task so the fleet learns the moment it terminates —
+/// while the runner still counts it as running, so a completion-triggered
+/// control-plane wake can never race the deadlock detector.
+struct TrackedTask {
+    inner: WorkerTask,
+    clock: Arc<Mutex<crate::net::VClock>>,
+    status: Arc<StatusCell>,
+    tracker: Arc<dyn PodTracker>,
+}
+
+impl RunnableTask for TrackedTask {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn poll(&mut self) -> PollOutcome {
+        match self.inner.poll() {
+            PollOutcome::Done => {
+                let at = self.clock.lock().unwrap().now();
+                let failed = matches!(self.status.get(), PodStatus::Failed(_));
+                self.tracker.pod_done(at, failed);
+                PollOutcome::Done
+            }
+            other => other,
+        }
+    }
+
+    fn fail(&mut self, reason: &str) {
+        self.inner.fail(reason);
+        let at = self.clock.lock().unwrap().now();
+        self.tracker.pod_done(at, true);
+    }
+}
+
+/// Multi-job cooperative orchestrator: pods from *many* jobs share one
+/// [`Scheduler`] (the fleet fabric), each deployer instance stamping its
+/// job's pods into that job's **fair-share group**. Unlike
+/// [`SimDeployer`], `start` does not run the pool — the control plane
+/// runs it exactly once for the whole fleet — it only *launches* the
+/// pods staged so far (two-phase contract preserved: every staged
+/// worker's channels are joined before any of them is woken, which also
+/// holds when a whole job deploys mid-run inside one control-plane
+/// poll). [`Deployer::deploy_at`] stays the live-extension path: stage
+/// and wake immediately on the running fabric.
+pub struct FleetDeployer {
+    sched: Scheduler,
+    /// Fair-share group all of this deployer's pods run under.
+    group: usize,
+    tracker: Arc<dyn PodTracker>,
+    /// Staged-but-not-launched pods: `(task id, wake virtual time)`.
+    staged: Mutex<Vec<(TaskId, VTime)>>,
+}
+
+impl FleetDeployer {
+    pub fn new(sched: Scheduler, group: usize, tracker: Arc<dyn PodTracker>) -> Self {
+        Self {
+            sched,
+            group,
+            tracker,
+            staged: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Build the worker environment (joining its channels), spawn its
+    /// task parked in this job's share group, and bind the waker. The
+    /// task cannot run until its wake fires.
+    fn stage(
+        &self,
+        cfg: WorkerConfig,
+        job: &Arc<JobRuntime>,
+        notifier: Arc<Notifier>,
+        at: VTime,
+    ) -> Result<(PodHandle, TaskId)> {
+        let park = WorkerPark::cooperative();
+        let env = WorkerEnv::with_park(cfg, job.clone(), park.clone())?;
+        if at > 0 {
+            env.clock.lock().unwrap().merge(at);
+        }
+        let clock = env.clock.clone();
+        let worker_id = env.cfg.id.clone();
+        let compute = env.cfg.compute.clone();
+        let status = StatusCell::new();
+        let task = TrackedTask {
+            inner: WorkerTask::new(env, notifier, status.clone()),
+            clock,
+            status: status.clone(),
+            tracker: self.tracker.clone(),
+        };
+        self.tracker.pod_spawned();
+        let id = self.sched.spawn_parked_in(self.group, Box::new(task));
+        park.set_waker(self.sched.waker(id));
+        Ok((
+            PodHandle {
+                worker_id,
+                compute,
+                status,
+            },
+            id,
+        ))
+    }
+}
+
+impl Deployer for FleetDeployer {
+    fn orchestrator(&self) -> &str {
+        "sim-fleet"
+    }
+
+    fn deploy(
+        &self,
+        cfg: WorkerConfig,
+        job: &Arc<JobRuntime>,
+        notifier: Arc<Notifier>,
+    ) -> Result<PodHandle> {
+        let (pod, id) = self.stage(cfg, job, notifier, 0)?;
+        self.staged.lock().unwrap().push((id, 0));
+        Ok(pod)
+    }
+
+    /// Launch everything staged since the last `start`. Must be called
+    /// either before the fleet pool runs, or from a task already running
+    /// on it (the control-plane pump) — the same rule as
+    /// [`Scheduler::spawn_parked`].
+    fn start(&self) -> Result<()> {
+        let staged = std::mem::take(&mut *self.staged.lock().unwrap());
+        for (id, at) in staged {
+            self.sched.waker(id).wake(at);
+        }
+        Ok(())
+    }
+
+    /// Live join (topology extension): stage and wake in one step on the
+    /// running fleet fabric.
+    fn deploy_at(
+        &self,
+        cfg: WorkerConfig,
+        job: &Arc<JobRuntime>,
+        notifier: Arc<Notifier>,
+        at: VTime,
+    ) -> Result<PodHandle> {
+        let (pod, id) = self.stage(cfg, job, notifier, at)?;
+        self.sched.waker(id).wake(at);
+        Ok(pod)
     }
 }
 

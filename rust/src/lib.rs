@@ -17,6 +17,12 @@
 //!   journaling store, compute/dataset registries with realms
 //!   ([`control`], [`notify`], [`deploy`], [`agent`], [`store`],
 //!   [`registry`]),
+//! * the **multi-job control plane** — concurrent job admission against
+//!   registered compute capacity, FIFO queueing, persisted
+//!   `Queued → Deploying → Running → Completed/Failed` lifecycles, and
+//!   fair-share execution of every admitted job on **one** shared
+//!   virtual-time fabric with per-job channel namespacing
+//!   ([`controlplane`]; scenario: `sim::run_fleet` / `flame fleet`),
 //! * the **channel** primitive with the paper's Table-2 API and pluggable
 //!   communication backends over a virtual-time network model ([`channel`],
 //!   [`net`]),
@@ -43,6 +49,7 @@ pub mod agent;
 pub mod algos;
 pub mod channel;
 pub mod control;
+pub mod controlplane;
 pub mod data;
 pub mod deploy;
 pub mod json;

@@ -13,8 +13,12 @@
 //!               [--executor coop|threads] [--runners N]   # 10k-worker fabric demo
 //! flame churn   [--trainers 20 --groups 2 --rounds 9] \
 //!               [--churn 0.2] [--quorum 1.0] [--runners N] # live topology extension
+//! flame fleet   [--jobs 100 --runners N]                  # multi-job control plane
 //! flame spec    --topo hybrid --trainers 50 --groups 5    # print TAG JSON
 //! ```
+//!
+//! Unknown `--flags` are rejected with the command's valid option list —
+//! a typo can never be silently ignored.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -68,6 +72,52 @@ impl Args {
     fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         Ok(self.get_u64(key, default as u64)? as usize)
     }
+
+    /// Reject flags the command does not understand, listing what it does.
+    fn expect_flags(&self, cmd: &str, valid: &[&str]) -> Result<()> {
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(String::as_str)
+            .filter(|k| !valid.contains(k))
+            .collect();
+        unknown.sort_unstable();
+        if let Some(first) = unknown.first() {
+            let mut opts: Vec<String> = valid.iter().map(|v| format!("--{v}")).collect();
+            opts.sort();
+            bail!(
+                "unknown flag '--{first}' for '{cmd}' (valid options: {})",
+                opts.join(", ")
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Flags understood by `build_spec` (shared by expand/spec/run).
+const SPEC_FLAGS: &[&str] = &[
+    "topo",
+    "trainers",
+    "groups",
+    "rounds",
+    "backend",
+    "lr",
+    "local-steps",
+    "algorithm",
+    "server-opt",
+    "selection",
+    "seed",
+    "select-frac",
+    "aggregation",
+    "buffer-k",
+    "model",
+];
+
+/// `run`'s full flag set: spec + runtime + data shaping.
+fn run_flags() -> Vec<&'static str> {
+    let mut v = SPEC_FLAGS.to_vec();
+    v.extend_from_slice(&["runtime", "runtime-threads", "per-shard", "test-n", "dirichlet"]);
+    v
 }
 
 fn build_spec(args: &Args) -> Result<tag::JobSpec> {
@@ -121,6 +171,7 @@ fn make_compute(args: &Args) -> Result<(Arc<dyn Compute>, Option<Vec<f32>>)> {
 }
 
 fn cmd_expand(args: &Args) -> Result<()> {
+    args.expect_flags("expand", SPEC_FLAGS)?;
     let spec = build_spec(args)?;
     let workers = tag::expand(&spec, &Registry::single_box())?;
     println!("# {} workers", workers.len());
@@ -131,11 +182,13 @@ fn cmd_expand(args: &Args) -> Result<()> {
 }
 
 fn cmd_spec(args: &Args) -> Result<()> {
+    args.expect_flags("spec", SPEC_FLAGS)?;
     println!("{}", build_spec(args)?.to_json().pretty());
     Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    args.expect_flags("run", &run_flags())?;
     let spec = build_spec(args)?;
     let (compute, init) = make_compute(args)?;
     let mut opts = JobOptions::mock().with_compute(compute).with_data(
@@ -172,6 +225,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig10(args: &Args) -> Result<()> {
+    args.expect_flags("fig10", &["rounds"])?;
     let rounds = args.get_u64("rounds", 36)?;
     let o = sim::SimOptions::mock();
     let (hfl, cofl) = sim::run_fig10(rounds, &o)?;
@@ -192,6 +246,7 @@ fn cmd_fig10(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig11(args: &Args) -> Result<()> {
+    args.expect_flags("fig11", &["rounds"])?;
     let rounds = args.get_u64("rounds", 20)?;
     let o = sim::SimOptions::mock();
     let (cfl, hybrid) = sim::run_fig11(rounds, &o)?;
@@ -220,6 +275,7 @@ fn cmd_fig11(args: &Args) -> Result<()> {
 }
 
 fn cmd_scale(args: &Args) -> Result<()> {
+    args.expect_flags("scale", &["trainers", "groups", "rounds", "executor", "runners"])?;
     let trainers = args.get_usize("trainers", 10_000)?;
     let groups = args.get_usize("groups", 100)?;
     let rounds = args.get_u64("rounds", 3)?;
@@ -247,6 +303,10 @@ fn cmd_scale(args: &Args) -> Result<()> {
 /// Live topology extension demo: 2-tier job grows a middle aggregator
 /// tier mid-run while trainers churn (see `sim::run_churn`).
 fn cmd_churn(args: &Args) -> Result<()> {
+    args.expect_flags(
+        "churn",
+        &["trainers", "groups", "rounds", "churn", "quorum", "runners", "per-shard", "test-n"],
+    )?;
     let trainers = args.get_usize("trainers", 20)?;
     let groups = args.get_usize("groups", 2)?;
     let rounds = args.get_u64("rounds", 9)?;
@@ -296,12 +356,37 @@ fn cmd_churn(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Multi-job control plane demo: a heterogeneous fleet (C-FL, H-FL,
+/// churn-with-events, async FedBuff) admitted against bounded capacity
+/// and drained on one shared fabric (see `sim::run_fleet`).
+fn cmd_fleet(args: &Args) -> Result<()> {
+    args.expect_flags("fleet", &["jobs", "runners", "per-shard", "test-n", "seed"])?;
+    let jobs = args.get_usize("jobs", 100)?;
+    let runners = args.get_usize("runners", 0)?;
+    let mut o = sim::SimOptions::mock();
+    // logistic-head mock: the fleet demo exercises the control plane and
+    // the shared fabric, not large-model numerics
+    o.compute = Arc::new(MockCompute::new(7_850, 8, 16));
+    o.per_shard = args.get_usize("per-shard", 16)?;
+    o.test_n = args.get_usize("test-n", 32)?;
+    o.local_steps = 1;
+    o.seed = args.get_u64("seed", 7)?;
+    let t0 = std::time::Instant::now();
+    let report = sim::run_fleet(jobs, runners, &o)?;
+    println!("{}", report.summary());
+    println!("# wall: {:.2}s", t0.elapsed().as_secs_f64());
+    for j in &report.jobs {
+        println!("{}", j.line());
+    }
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: flame <expand|spec|run|fig10|fig11|scale|churn> [--flags]");
+            eprintln!("usage: flame <expand|spec|run|fig10|fig11|scale|churn|fleet> [--flags]");
             std::process::exit(2);
         }
     };
@@ -313,6 +398,7 @@ fn main() {
         "fig11" => cmd_fig11(&args),
         "scale" => cmd_scale(&args),
         "churn" => cmd_churn(&args),
+        "fleet" => cmd_fleet(&args),
         other => bail!("unknown command '{other}'"),
     });
     if let Err(e) = result {

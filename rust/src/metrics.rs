@@ -15,18 +15,25 @@ use anyhow::Result;
 
 use crate::net::VTime;
 
-/// One recorded sample: `(series, round, value)` plus the emitting worker.
+/// One recorded sample: `(series, round, value)` plus the emitting worker
+/// and the job it belongs to. The job id is what keeps concurrent jobs'
+/// series apart when a fleet run aggregates many hubs into one CSV.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Sample {
+    pub job: String,
     pub worker: String,
     pub series: String,
     pub round: u64,
     pub value: f64,
 }
 
-/// Thread-safe metrics sink shared by all workers of a job.
+/// Thread-safe metrics sink shared by all workers of a job. Every sample
+/// is stamped with the hub's job id ([`MetricsHub::for_job`]; standalone
+/// hubs use the empty id), so rows from concurrent jobs never collapse
+/// into one anonymous series.
 #[derive(Default, Debug)]
 pub struct MetricsHub {
+    job: String,
     samples: Mutex<Vec<Sample>>,
     bytes_sent: AtomicU64,
     messages: AtomicU64,
@@ -37,8 +44,23 @@ impl MetricsHub {
         Self::default()
     }
 
+    /// A hub whose samples carry `job` as their job id.
+    pub fn for_job(job: impl Into<String>) -> Self {
+        Self {
+            job: job.into(),
+            ..Self::default()
+        }
+    }
+
+    /// The job id stamped on this hub's samples (empty for standalone
+    /// hubs).
+    pub fn job_id(&self) -> &str {
+        &self.job
+    }
+
     pub fn record(&self, worker: &str, series: &str, round: u64, value: f64) {
         self.samples.lock().unwrap().push(Sample {
+            job: self.job.clone(),
             worker: worker.to_string(),
             series: series.to_string(),
             round,
@@ -117,6 +139,31 @@ impl MetricsHub {
         fs::write(path, self.to_csv(series))?;
         Ok(())
     }
+
+    /// Like [`Self::to_csv`] but with a leading `job` column, so rows from
+    /// many concurrent jobs' hubs can be concatenated into one fleet CSV
+    /// without interleaving into an anonymous series. `header` controls
+    /// whether the `job,round,<series...>` header line is emitted (pass
+    /// `true` for the first hub only when concatenating).
+    pub fn to_csv_with_job(&self, series: &[&str], header: bool) -> String {
+        let mut out = String::new();
+        if header {
+            out.push_str("job,round");
+            for name in series {
+                out.push(',');
+                out.push_str(name);
+            }
+            out.push('\n');
+        }
+        let body = self.to_csv(series);
+        for line in body.lines().skip(1) {
+            out.push_str(&self.job);
+            out.push(',');
+            out.push_str(line);
+            out.push('\n');
+        }
+        out
+    }
 }
 
 /// Format a virtual duration for logs.
@@ -165,6 +212,35 @@ mod tests {
         assert_eq!(lines[0], "round,loss,acc");
         assert_eq!(lines[1], "1,0.5,0.9");
         assert_eq!(lines[2], "2,0.25,");
+    }
+
+    #[test]
+    fn samples_carry_the_job_id() {
+        let m = MetricsHub::for_job("fleet-cfl-3");
+        m.record("w0", "loss", 1, 0.5);
+        let all = m.all();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].job, "fleet-cfl-3");
+        assert_eq!(m.job_id(), "fleet-cfl-3");
+        // standalone hubs stamp the empty id
+        let anon = MetricsHub::new();
+        anon.record("w0", "loss", 1, 0.5);
+        assert_eq!(anon.all()[0].job, "");
+    }
+
+    #[test]
+    fn job_csv_prefixes_every_row_and_concatenates() {
+        let a = MetricsHub::for_job("job-a");
+        a.record("g", "loss", 1, 0.5);
+        a.record("g", "acc", 1, 0.9);
+        let b = MetricsHub::for_job("job-b");
+        b.record("g", "loss", 1, 0.25);
+        let mut csv = a.to_csv_with_job(&["loss", "acc"], true);
+        csv.push_str(&b.to_csv_with_job(&["loss", "acc"], false));
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "job,round,loss,acc");
+        assert_eq!(lines[1], "job-a,1,0.5,0.9");
+        assert_eq!(lines[2], "job-b,1,0.25,");
     }
 
     #[test]

@@ -19,6 +19,10 @@ pub enum EventKind {
     Revoke,
     /// A worker reported a status change.
     WorkerStatus,
+    /// A job's control-plane lifecycle state changed (payload: the new
+    /// state string — `queued`, `deploying`, `running`, `completed`,
+    /// `failed`). Streamed by the multi-job [`crate::controlplane`].
+    JobState,
     /// Job finished (success or failure).
     JobDone,
 }
@@ -133,6 +137,21 @@ mod tests {
         assert_eq!(n.emit(EventKind::Deploy, "j", Json::Null), 0);
         // second publish confirms the dead sub was removed
         assert_eq!(n.emit(EventKind::Deploy, "j", Json::Null), 0);
+    }
+
+    #[test]
+    fn job_state_stream_preserves_transition_order() {
+        let n = Notifier::new();
+        let rx = n.subscribe(Some(EventKind::JobState), Some("cfl-1"));
+        for s in ["queued", "deploying", "running", "completed"] {
+            n.emit(EventKind::JobState, "cfl-1", Json::from(s));
+            n.emit(EventKind::JobState, "other-2", Json::from(s));
+        }
+        let states: Vec<String> = rx
+            .try_iter()
+            .map(|e| e.payload.as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(states, vec!["queued", "deploying", "running", "completed"]);
     }
 
     #[test]

@@ -102,6 +102,25 @@ impl Registry {
         &self.computes
     }
 
+    /// The registered compute named `name`.
+    pub fn compute(&self, name: &str) -> Option<&ComputeSpec> {
+        self.computes.iter().find(|c| c.name == name)
+    }
+
+    /// Advisory worker capacity of `name` (admission control reads this;
+    /// `None` for unknown computes).
+    pub fn capacity_of(&self, name: &str) -> Option<usize> {
+        self.compute(name).map(|c| c.capacity)
+    }
+
+    /// Total advisory capacity across every registered compute (saturating
+    /// — the single-box registry advertises `usize::MAX`).
+    pub fn total_capacity(&self) -> usize {
+        self.computes
+            .iter()
+            .fold(0usize, |acc, c| acc.saturating_add(c.capacity))
+    }
+
     pub fn datasets(&self) -> &[DatasetRef] {
         &self.datasets
     }
@@ -173,6 +192,33 @@ mod tests {
         assert!(!realm_compatible("us", "eu"));
         assert!(realm_compatible("*", "eu/west"));
         assert!(realm_compatible("eu/west", "*"));
+    }
+
+    #[test]
+    fn realm_tokens_are_whole_segments_not_string_prefixes() {
+        // "eu" must NOT contain "europe": containment is per `/`-segment
+        assert!(!realm_compatible("eu", "europe"));
+        assert!(!realm_compatible("europe/west", "eu/west"));
+        // deep nesting works in both directions
+        assert!(realm_compatible("a/b/c/d", "a/b"));
+        assert!(realm_compatible("a/b", "a/b/c/d"));
+        assert!(!realm_compatible("a/b/c", "a/x/c"));
+        // both wildcards
+        assert!(realm_compatible("*", "*"));
+    }
+
+    #[test]
+    fn capacity_lookups() {
+        let mut r = Registry::new();
+        r.register_compute(ComputeSpec::new("edge", "eu", 4));
+        r.register_compute(ComputeSpec::new("dc", "eu", 100));
+        assert_eq!(r.capacity_of("edge"), Some(4));
+        assert_eq!(r.capacity_of("dc"), Some(100));
+        assert_eq!(r.capacity_of("nope"), None);
+        assert_eq!(r.total_capacity(), 104);
+        assert_eq!(r.compute("edge").unwrap().realm, "eu");
+        // the single-box registry advertises effectively infinite capacity
+        assert_eq!(Registry::single_box().total_capacity(), usize::MAX);
     }
 
     #[test]

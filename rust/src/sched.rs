@@ -23,11 +23,28 @@
 //!   `cooperative` (yield to the scheduler).
 //! * [`Waker`] — handed to mailboxes; delivery calls `wake(arrival)` when
 //!   the parked worker's wait condition is satisfied.
-//! * [`Scheduler`] — the ready heap (ordered by `(virtual time, task id)`)
-//!   plus an M:N pool of runner threads ([`Scheduler::run`]). When no task
-//!   is ready and none is running but live tasks remain, the fabric has a
-//!   *virtual-time deadlock*; the scheduler fails the stuck workers
-//!   immediately instead of burning a wall-clock timeout.
+//! * [`Scheduler`] — per-group ready heaps (each ordered by
+//!   `(virtual time, task id)`) plus an M:N pool of runner threads
+//!   ([`Scheduler::run`]). When no task is ready and none is running but
+//!   live tasks remain, the fabric has a *virtual-time deadlock*; the
+//!   scheduler fails the stuck workers immediately instead of burning a
+//!   wall-clock timeout.
+//!
+//! ## Fair-share groups
+//!
+//! Tasks belong to a **share group** (default group 0; the multi-job
+//! control plane puts each job in its own group via
+//! [`Scheduler::spawn_in`] / [`Scheduler::spawn_parked_in`]). Runners pick
+//! the next task by `(head virtual time, group pass, group id)`: the
+//! earliest virtual time always wins — virtual-time semantics are
+//! untouched — but among groups whose heads are *tied* on virtual time,
+//! the group that has been polled least (lowest `pass` count) goes first.
+//! That is a stride scheduler with equal weights: a 10,000-task job and a
+//! 5-task job tied at the same virtual instant alternate polls instead of
+//! the big job draining first, so small jobs cannot be starved by large
+//! ones. Fairness only reorders polls, never results: message selection
+//! stays deterministic by `(arrival, sender, seq)` regardless of poll
+//! order (see [`crate::channel`]).
 //!
 //! Deadlock detection assumes every message producer for cooperative
 //! workers is itself a task on this scheduler. A job that mixes
@@ -167,16 +184,84 @@ enum TaskState {
 struct TaskSlot {
     state: TaskState,
     task: Option<Box<dyn RunnableTask>>,
+    /// Fair-share group this task is polled under.
+    group: usize,
+}
+
+/// One fair-share group's slice of the ready set.
+struct GroupQueue {
+    /// Min-heap of `(virtual wake time, task id)` — virtual-arrival order
+    /// within the group.
+    ready: BinaryHeap<Reverse<(VTime, TaskId)>>,
+    /// Polls charged to this group so far (the stride scheduler's pass).
+    pass: u64,
+}
+
+impl GroupQueue {
+    fn new() -> Self {
+        Self {
+            ready: BinaryHeap::new(),
+            pass: 0,
+        }
+    }
 }
 
 struct SchedState {
     tasks: Vec<TaskSlot>,
-    /// Min-heap of `(virtual wake time, task id)` — virtual-arrival order.
-    ready: BinaryHeap<Reverse<(VTime, TaskId)>>,
+    /// Ready tasks, sliced per fair-share group.
+    groups: Vec<GroupQueue>,
+    /// Groups whose ready heap is currently non-empty — the only ones a
+    /// pop must consider. Keeps selection proportional to *concurrent*
+    /// work, not to every group ever created (a fleet makes one group
+    /// per job and jobs outlive their tasks).
+    nonempty: std::collections::BTreeSet<usize>,
     /// Tasks not yet Done.
     live: usize,
     /// Tasks currently being polled by a runner.
     running: usize,
+}
+
+impl SchedState {
+    fn ensure_group(&mut self, group: usize) {
+        while self.groups.len() <= group {
+            self.groups.push(GroupQueue::new());
+        }
+    }
+
+    fn push_ready(&mut self, id: TaskId, at: VTime) {
+        let g = self.tasks[id].group;
+        self.groups[g].ready.push(Reverse((at, id)));
+        self.nonempty.insert(g);
+    }
+
+    /// Pop the next task to poll: earliest head virtual time wins; virtual
+    /// -time ties go to the group with the fewest polls so far (then the
+    /// lower group id — fully deterministic given the same ready set).
+    ///
+    /// The selection scans the heads of the *non-empty* groups only:
+    /// O(concurrent groups with ready work) per poll — drained groups
+    /// (completed jobs) cost nothing. A poll runs a whole tasklet step
+    /// (training, aggregation), so this scan is noise; if profiles ever
+    /// disagree, the fix is a secondary heap over groups keyed by
+    /// `(head vtime, pass, id)` with lazy invalidation.
+    fn pop_ready(&mut self) -> Option<TaskId> {
+        let mut best: Option<(VTime, u64, usize)> = None;
+        for &gi in &self.nonempty {
+            if let Some(Reverse((vt, _))) = self.groups[gi].ready.peek() {
+                let key = (*vt, self.groups[gi].pass, gi);
+                if best.map_or(true, |b| key < b) {
+                    best = Some(key);
+                }
+            }
+        }
+        let (_, _, gi) = best?;
+        let Reverse((_, id)) = self.groups[gi].ready.pop().expect("peeked non-empty");
+        self.groups[gi].pass += 1;
+        if self.groups[gi].ready.is_empty() {
+            self.nonempty.remove(&gi);
+        }
+        Some(id)
+    }
 }
 
 /// Shared scheduler core (referenced by [`Waker`]s inside mailboxes).
@@ -216,7 +301,7 @@ impl Waker {
             }
         };
         if push {
-            g.ready.push(Reverse((at, self.task)));
+            g.push_ready(self.task, at);
             drop(g);
             self.shared.cv.notify_all();
         }
@@ -252,7 +337,8 @@ impl Scheduler {
             shared: Arc::new(SchedShared {
                 state: Mutex::new(SchedState {
                     tasks: Vec::new(),
-                    ready: BinaryHeap::new(),
+                    groups: vec![GroupQueue::new()],
+                    nonempty: std::collections::BTreeSet::new(),
                     live: 0,
                     running: 0,
                 }),
@@ -261,17 +347,26 @@ impl Scheduler {
         }
     }
 
-    /// Register a task; it becomes ready at virtual time 0. Tasks do not
-    /// run until [`run`](Self::run).
+    /// Register a task in share group 0; it becomes ready at virtual
+    /// time 0. Tasks do not run until [`run`](Self::run).
     pub fn spawn(&self, task: Box<dyn RunnableTask>) -> TaskId {
+        self.spawn_in(0, task)
+    }
+
+    /// Register a task in the given fair-share group; it becomes ready at
+    /// virtual time 0. The multi-job control plane gives every job its own
+    /// group so no job can monopolise the runner pool.
+    pub fn spawn_in(&self, group: usize, task: Box<dyn RunnableTask>) -> TaskId {
         let mut g = self.shared.state.lock().unwrap();
+        g.ensure_group(group);
         let id = g.tasks.len();
         g.tasks.push(TaskSlot {
             state: TaskState::Ready,
             task: Some(task),
+            group,
         });
         g.live += 1;
-        g.ready.push(Reverse((0, id)));
+        g.push_ready(id, 0);
         id
     }
 
@@ -283,11 +378,18 @@ impl Scheduler {
     /// originate from a running task (or happen before [`Self::run`]),
     /// otherwise the deadlock detector could fire between spawn and wake.
     pub fn spawn_parked(&self, task: Box<dyn RunnableTask>) -> TaskId {
+        self.spawn_parked_in(0, task)
+    }
+
+    /// [`Self::spawn_parked`] into a specific fair-share group.
+    pub fn spawn_parked_in(&self, group: usize, task: Box<dyn RunnableTask>) -> TaskId {
         let mut g = self.shared.state.lock().unwrap();
+        g.ensure_group(group);
         let id = g.tasks.len();
         g.tasks.push(TaskSlot {
             state: TaskState::Waiting,
             task: Some(task),
+            group,
         });
         g.live += 1;
         id
@@ -325,30 +427,52 @@ impl Scheduler {
     }
 
     fn runner(shared: &SchedShared) {
+        enum Next {
+            Poll(TaskId, Box<dyn RunnableTask>),
+            /// Virtual-time deadlock: these tasks can never resume.
+            Stalled(Vec<Box<dyn RunnableTask>>, String),
+            Exit,
+        }
         loop {
-            let (id, mut task) = {
+            let next = {
                 let mut g = shared.state.lock().unwrap();
                 loop {
                     if g.live == 0 {
-                        drop(g);
-                        shared.cv.notify_all();
-                        return;
+                        break Next::Exit;
                     }
-                    if let Some(Reverse((_, id))) = g.ready.pop() {
+                    if let Some(id) = g.pop_ready() {
                         let slot = &mut g.tasks[id];
                         slot.state = TaskState::Running { wake_pending: None };
                         let task = slot.task.take().expect("ready task has a runnable");
                         g.running += 1;
-                        break (id, task);
+                        break Next::Poll(id, task);
                     }
                     if g.running == 0 {
                         // Nothing ready, nothing running, live tasks remain:
                         // no delivery can ever wake them again.
-                        Self::fail_stalled(&mut g);
-                        continue;
+                        let (tasks, reason) = Self::collect_stalled(&mut g);
+                        break Next::Stalled(tasks, reason);
                     }
                     g = shared.cv.wait(g).unwrap();
                 }
+            };
+            let (id, mut task) = match next {
+                Next::Exit => {
+                    shared.cv.notify_all();
+                    return;
+                }
+                Next::Stalled(tasks, reason) => {
+                    // fail() runs OUTSIDE the scheduler lock: a failing
+                    // task may fan out through observers that take this
+                    // lock again (e.g. the control plane's pod tracker
+                    // waking its pump)
+                    for mut t in tasks {
+                        t.fail(&reason);
+                    }
+                    shared.cv.notify_all();
+                    continue;
+                }
+                Next::Poll(id, task) => (id, task),
             };
 
             let outcome = task.poll();
@@ -372,7 +496,7 @@ impl Scheduler {
                     g.tasks[id].task = Some(task);
                     if let Some(at) = wake {
                         g.tasks[id].state = TaskState::Ready;
-                        g.ready.push(Reverse((at, id)));
+                        g.push_ready(id, at);
                     } else {
                         g.tasks[id].state = TaskState::Waiting;
                     }
@@ -383,7 +507,14 @@ impl Scheduler {
         }
     }
 
-    fn fail_stalled(g: &mut std::sync::MutexGuard<'_, SchedState>) {
+    /// Remove every Waiting task from the state (marking it Done and
+    /// adjusting `live`) and hand the runnables back with the deadlock
+    /// diagnostic. The caller invokes [`RunnableTask::fail`] on each
+    /// *after* releasing the state lock — failure observers are allowed
+    /// to take scheduler locks (wake other tasks) again.
+    fn collect_stalled(
+        g: &mut std::sync::MutexGuard<'_, SchedState>,
+    ) -> (Vec<Box<dyn RunnableTask>>, String) {
         let st: &mut SchedState = g;
         let names: Vec<String> = st
             .tasks
@@ -398,17 +529,17 @@ impl Scheduler {
             shown.join(", "),
             if names.len() > 5 { ", ..." } else { "" }
         );
-        let mut failed = 0usize;
+        let mut stalled = Vec::new();
         for slot in st.tasks.iter_mut() {
             if matches!(slot.state, TaskState::Waiting) {
-                if let Some(task) = slot.task.as_mut() {
-                    task.fail(&reason);
+                if let Some(task) = slot.task.take() {
+                    stalled.push(task);
                 }
                 slot.state = TaskState::Done;
-                failed += 1;
             }
         }
-        st.live -= failed;
+        st.live -= stalled.len();
+        (stalled, reason)
     }
 }
 
@@ -581,5 +712,84 @@ mod tests {
         let sched = Scheduler::new();
         sched.run(3);
         assert_eq!(sched.live(), 0);
+    }
+
+    /// One-shot task that appends its name to a shared poll log.
+    struct LogTask {
+        name: String,
+        log: Arc<Mutex<Vec<String>>>,
+    }
+
+    impl RunnableTask for LogTask {
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn poll(&mut self) -> PollOutcome {
+            self.log.lock().unwrap().push(self.name.clone());
+            PollOutcome::Done
+        }
+        fn fail(&mut self, _reason: &str) {}
+    }
+
+    #[test]
+    fn fair_share_interleaves_groups_at_equal_vtime() {
+        // a "big job" (group 1, spawned first) and a "small job" (group 2),
+        // all ready at virtual time 0 on one runner: the stride tie-break
+        // must alternate groups instead of draining the big job first
+        let sched = Scheduler::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..4 {
+            sched.spawn_in(
+                1,
+                Box::new(LogTask {
+                    name: format!("big-{i}"),
+                    log: log.clone(),
+                }),
+            );
+        }
+        for i in 0..2 {
+            sched.spawn_in(
+                2,
+                Box::new(LogTask {
+                    name: format!("small-{i}"),
+                    log: log.clone(),
+                }),
+            );
+        }
+        sched.run(1);
+        let order = log.lock().unwrap().clone();
+        assert_eq!(
+            order,
+            vec!["big-0", "small-0", "big-1", "small-1", "big-2", "big-3"],
+            "expected stride alternation between tied groups"
+        );
+    }
+
+    #[test]
+    fn earlier_vtime_beats_fair_share() {
+        // virtual time stays the primary key: a group-2 task ready at
+        // vtime 5 must NOT run before a group-1 task ready at vtime 3,
+        // whatever the pass counters say
+        let sched = Scheduler::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let early = sched.spawn_parked_in(
+            1,
+            Box::new(LogTask {
+                name: "early".into(),
+                log: log.clone(),
+            }),
+        );
+        let late = sched.spawn_parked_in(
+            2,
+            Box::new(LogTask {
+                name: "late".into(),
+                log: log.clone(),
+            }),
+        );
+        sched.waker(late).wake(5);
+        sched.waker(early).wake(3);
+        sched.run(1);
+        let order = log.lock().unwrap().clone();
+        assert_eq!(order, vec!["early", "late"]);
     }
 }

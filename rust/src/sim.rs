@@ -22,6 +22,13 @@
 //!   configurable fraction of the initial trainers churns out, with
 //!   quorum-collect keeping every round's aggregation from blocking on
 //!   departed workers.
+//! * [`run_fleet`] — the multi-job control plane headline: hundreds of
+//!   heterogeneous concurrent jobs (2-tier C-FL, 3-tier H-FL,
+//!   churn-with-events, async FedBuff) admitted against bounded compute
+//!   capacity and multiplexed onto **one** shared scheduler fabric by
+//!   the [`crate::controlplane::JobManager`], with fair-share groups
+//!   keeping big jobs from starving small ones. Per-job reports are
+//!   byte-deterministic for a fixed seed (`rust/tests/fleet.rs`).
 //!
 //! All use the virtual-time network (the `tc` stand-in — DESIGN.md
 //! substitutions) so runs are deterministic and fast, while training is
@@ -326,6 +333,87 @@ pub fn run_churn(
     ctl.submit(spec, o.job_options().with_events(events))
 }
 
+// ---------------------------------------------------------------- fleet
+
+/// Build the heterogeneous fleet scenario: `jobs` submissions, cycling a
+/// deterministic mix (by submission index modulo 4) of
+///
+/// 0. 2-tier classical FL (4 trainers, 3 rounds),
+/// 1. 3-tier hierarchical FL (6 trainers / 2 groups, 2 rounds),
+/// 2. churn-with-events: classical FL whose first trainer leaves at the
+///    first round boundary (the live-extension machinery, per job),
+/// 3. asynchronous FedBuff classical FL (3 trainers, 3 versions),
+///
+/// each with a per-job data/selection seed of `o.seed + index`. The
+/// registry bounds capacity (two computes of 48 workers each), so a
+/// large fleet genuinely exercises admission queueing: jobs wait FIFO
+/// and admit as running jobs release capacity. Returns the manager with
+/// everything submitted; call [`crate::controlplane::JobManager::run_fleet`]
+/// to drive it.
+pub fn build_fleet(jobs: usize, o: &SimOptions) -> Result<crate::controlplane::JobManager> {
+    use crate::registry::{ComputeSpec, Registry};
+    let mut reg = Registry::new();
+    reg.register_compute(ComputeSpec::new("fab-a", "*", 48));
+    reg.register_compute(ComputeSpec::new("fab-b", "*", 48));
+    let mut m = crate::controlplane::JobManager::with_registry(Arc::new(Store::in_memory()), reg);
+    for i in 0..jobs {
+        let seed = o.seed + i as u64;
+        let common = |b: crate::topo::TopoBuilder, rounds: u64| {
+            b.rounds(rounds)
+                .set("lr", Json::Num(o.lr))
+                .set("local_steps", o.local_steps)
+                .set("seed", seed)
+        };
+        let (spec, events) = match i % 4 {
+            0 => (
+                common(topo::classical(4, Backend::P2p).name("fcfl"), 3).build(),
+                Vec::new(),
+            ),
+            1 => (
+                common(topo::hierarchical(6, 2, Backend::P2p).name("fhfl"), 2).build(),
+                Vec::new(),
+            ),
+            2 => {
+                let spec = common(topo::classical(5, Backend::P2p).name("fchurn"), 3).build();
+                let events = vec![crate::tag::TopologyEvent::Leave {
+                    at_us: 1,
+                    workers: vec!["fchurn-trainer-0".into()],
+                }];
+                (spec, events)
+            }
+            _ => (
+                common(topo::classical(3, Backend::P2p).name("fasync"), 3)
+                    .set("aggregation", "fedbuff")
+                    .set("buffer_k", 2usize)
+                    .build(),
+                Vec::new(),
+            ),
+        };
+        let mut opts = o.job_options();
+        opts.data_seed = seed;
+        let opts = if events.is_empty() {
+            opts
+        } else {
+            opts.with_events(events)
+        };
+        m.submit(spec, opts)?;
+    }
+    Ok(m)
+}
+
+/// Build and drain the fleet scenario on `runners` threads (0 = one per
+/// core). Every job reaches a terminal state persisted in the manager's
+/// store; the report carries per-job outcomes and fleet throughput
+/// (jobs / rounds per virtual second of makespan).
+pub fn run_fleet(
+    jobs: usize,
+    runners: usize,
+    o: &SimOptions,
+) -> Result<crate::controlplane::FleetReport> {
+    let mut m = build_fleet(jobs, o)?;
+    m.run_fleet(runners)
+}
+
 /// Virtual time (seconds) at which a job's `acc` series first reaches
 /// `target`; `None` if it never does.
 pub fn time_to_accuracy(report: &JobReport, target: f64) -> Option<f64> {
@@ -466,6 +554,37 @@ mod tests {
         assert!((8.0..=10.0).contains(&last), "churn never materialised: {t:?}");
         // initial 10 + 1 joiner + 2 aggregators + 1 global = 14 pods ran
         assert_eq!(r.workers, 14);
+    }
+
+    #[test]
+    fn small_fleet_mixes_all_job_kinds_and_completes() {
+        let mut o = small_opts();
+        o.per_shard = 16;
+        o.test_n = 32;
+        let report = run_fleet(8, 2, &o).unwrap();
+        assert_eq!(report.jobs.len(), 8);
+        assert_eq!(report.completed, 8, "{}", report.summary());
+        assert_eq!(report.failed, 0);
+        // the deterministic mix: two of each kind
+        let count = |prefix: &str| {
+            report
+                .jobs
+                .iter()
+                .filter(|j| j.job.starts_with(prefix))
+                .count()
+        };
+        assert_eq!(count("fcfl-"), 2);
+        assert_eq!(count("fhfl-"), 2);
+        assert_eq!(count("fchurn-"), 2);
+        assert_eq!(count("fasync-"), 2);
+        // the churn jobs really churned: 5 trainers + 1 global ran, and
+        // every job made virtual progress
+        for j in &report.jobs {
+            assert!(j.vtime_s > 0.0, "{}", j.line());
+            assert!(j.rounds > 0, "{}", j.line());
+        }
+        assert!(report.max_job_vs > 0.0);
+        assert!(report.jobs_per_vs > 0.0);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -37,22 +37,69 @@ pub struct Store {
 impl Store {
     /// Open (or create) a journal-backed store at `path`, replaying any
     /// existing journal into the index.
+    ///
+    /// Crash tolerance: a process killed mid-append leaves a **torn final
+    /// line** — bytes with no terminating newline. If the torn bytes do
+    /// not parse, the record never committed: recovery drops them and
+    /// truncates them away so the next append starts on a clean boundary.
+    /// If they *do* parse (the crash landed exactly between the record
+    /// bytes and its newline), the record is kept and the missing newline
+    /// is written, so the next append cannot merge onto it. Corruption
+    /// anywhere else — including an unparseable line that *is*
+    /// newline-terminated — is real damage and stays a hard error.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         let mut index: HashMap<String, HashMap<String, Json>> = HashMap::new();
+        let mut truncate_to: Option<u64> = None;
+        let mut needs_newline = false;
         if path.exists() {
-            let f = File::open(&path).context("open journal")?;
-            for (lineno, line) in BufReader::new(f).lines().enumerate() {
-                let line = line?;
-                if line.trim().is_empty() {
+            // read BYTES, not a String: a tear can land mid-way through a
+            // multi-byte UTF-8 character, and the whole-file read must not
+            // reject the journal before the tail repair gets to run
+            let raw = std::fs::read(&path).context("open journal")?;
+            let complete = raw.ends_with(b"\n");
+            let mut lines: Vec<&[u8]> = raw.split(|b| *b == b'\n').collect();
+            if complete {
+                lines.pop(); // drop the empty chunk after the final newline
+            }
+            let n_lines = lines.len();
+            for (lineno, line) in lines.iter().enumerate() {
+                if line.iter().all(|b| b.is_ascii_whitespace()) {
                     continue;
                 }
-                let rec = Json::parse(&line)
-                    .with_context(|| format!("corrupt journal line {}", lineno + 1))?;
-                Self::apply(&mut index, &rec)?;
+                let replayed: Result<()> = match std::str::from_utf8(line) {
+                    Ok(text) => match Json::parse(text) {
+                        Ok(rec) => Self::apply(&mut index, &rec),
+                        Err(e) => Err(anyhow::Error::new(e)),
+                    },
+                    Err(e) => Err(anyhow::Error::new(e)),
+                };
+                if let Err(e) = replayed {
+                    let is_torn_tail = lineno + 1 == n_lines && !complete;
+                    if is_torn_tail {
+                        truncate_to = Some((raw.len() - line.len()) as u64);
+                        break;
+                    }
+                    return Err(e)
+                        .with_context(|| format!("corrupt journal line {}", lineno + 1));
+                }
             }
+            // a crash between the record bytes and their newline leaves a
+            // fully-parseable unterminated tail: keep it, terminate it
+            needs_newline = !complete && truncate_to.is_none() && !raw.is_empty();
+        }
+        if let Some(len) = truncate_to {
+            // repair: cut the torn bytes so appends don't merge into them
+            OpenOptions::new()
+                .write(true)
+                .open(&path)
+                .context("repair torn journal tail")?
+                .set_len(len)?;
         }
         let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        if needs_newline {
+            (&file).write_all(b"\n").context("repair unterminated journal tail")?;
+        }
         Ok(Self {
             inner: Mutex::new(Inner {
                 index,
@@ -326,6 +373,128 @@ mod tests {
         let p = tmp("corrupt");
         std::fs::write(&p, "{\"c\":\"x\",\"k\":\"k\",\"v\":1}\nnot-json\n").unwrap();
         assert!(Store::open(&p).is_err());
+    }
+
+    #[test]
+    fn corrupt_mid_journal_line_is_an_error_even_with_torn_tail() {
+        // a torn tail is forgivable; damage BEFORE it is not
+        let p = tmp("mid-corrupt");
+        std::fs::write(
+            &p,
+            "{\"c\":\"x\",\"k\":\"a\",\"v\":1}\nnot-json\n{\"c\":\"x\",\"k\":\"b\"",
+        )
+        .unwrap();
+        let err = Store::open(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("line 2"), "{err:#}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_and_repaired() {
+        // simulate a crash mid-append: committed records, then a partial
+        // line with no terminating newline
+        let p = tmp("torn");
+        {
+            let s = Store::open(&p).unwrap();
+            s.put("jobs", "a", Json::from(1i64)).unwrap();
+            s.put("jobs", "b", Json::from(2i64)).unwrap();
+            s.flush().unwrap();
+        }
+        {
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(b"{\"c\":\"jobs\",\"k\":\"c\",\"v\"").unwrap();
+        }
+        // recovery keeps every committed record and drops the torn one
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.count("jobs"), 2);
+        assert_eq!(s.get("jobs", "a").unwrap().as_i64(), Some(1));
+        assert!(s.get("jobs", "c").is_none());
+        // the torn bytes were truncated away: new appends land on a clean
+        // line boundary and survive the next recovery
+        s.put("jobs", "c", Json::from(3i64)).unwrap();
+        s.flush().unwrap();
+        drop(s);
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.count("jobs"), 3);
+        assert_eq!(s.get("jobs", "c").unwrap().as_i64(), Some(3));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn torn_tail_inside_a_multibyte_character_is_repaired() {
+        // the tear can split a UTF-8 sequence: recovery must still open
+        // the store (bytes, not read_to_string) and drop the torn line
+        let p = tmp("torn-utf8");
+        {
+            let s = Store::open(&p).unwrap();
+            s.put("jobs", "caf\u{e9}", Json::from(1i64)).unwrap();
+            s.flush().unwrap();
+        }
+        {
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            // "caf" + the FIRST byte of a two-byte 'é' only, no newline
+            f.write_all(b"{\"c\":\"jobs\",\"k\":\"caf\xc3").unwrap();
+        }
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.count("jobs"), 1);
+        assert_eq!(s.get("jobs", "caf\u{e9}").unwrap().as_i64(), Some(1));
+        s.put("jobs", "next", Json::from(2i64)).unwrap();
+        s.flush().unwrap();
+        drop(s);
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.count("jobs"), 2);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn complete_record_missing_only_its_newline_is_kept_and_repaired() {
+        // crash exactly between the record bytes and the b"\n" write: the
+        // record is committed, the line just lacks its terminator — it
+        // must be kept AND terminated so the next append cannot merge
+        let p = tmp("newline-torn");
+        {
+            let s = Store::open(&p).unwrap();
+            s.put("jobs", "a", Json::from(1i64)).unwrap();
+            s.flush().unwrap();
+        }
+        {
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(b"{\"c\":\"jobs\",\"k\":\"b\",\"v\":2}").unwrap(); // no \n
+        }
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.get("jobs", "b").unwrap().as_i64(), Some(2));
+        s.put("jobs", "c", Json::from(3i64)).unwrap();
+        s.flush().unwrap();
+        drop(s);
+        // the merge-corruption hazard: without the newline repair, record
+        // c would have been appended onto b's line
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.count("jobs"), 3);
+        assert_eq!(s.get("jobs", "b").unwrap().as_i64(), Some(2));
+        assert_eq!(s.get("jobs", "c").unwrap().as_i64(), Some(3));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn tombstones_delete_across_restart_despite_torn_tail() {
+        let p = tmp("tomb-torn");
+        {
+            let s = Store::open(&p).unwrap();
+            s.put("jobs", "keep", Json::from(1i64)).unwrap();
+            s.put("jobs", "gone", Json::from(2i64)).unwrap();
+            s.delete("jobs", "gone").unwrap();
+            s.flush().unwrap();
+        }
+        {
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            // torn resurrection attempt for the deleted key: must not apply
+            f.write_all(b"{\"c\":\"jobs\",\"k\":\"gone\",\"v\":9").unwrap();
+        }
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.get("jobs", "keep").unwrap().as_i64(), Some(1));
+        assert!(s.get("jobs", "gone").is_none(), "tombstone must survive");
+        assert_eq!(s.count("jobs"), 1);
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

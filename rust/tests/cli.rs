@@ -58,6 +58,37 @@ fn bad_flag_value_fails_cleanly() {
 }
 
 #[test]
+fn unknown_flag_is_rejected_with_valid_options() {
+    // a typo'd flag must error, not be silently ignored
+    let (ok, _, stderr) = flame(&["run", "--topoo", "cfl"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown flag '--topoo'"), "{stderr}");
+    assert!(stderr.contains("--topo"), "{stderr}");
+    assert!(stderr.contains("valid options"), "{stderr}");
+}
+
+#[test]
+fn flags_valid_elsewhere_are_rejected_per_command() {
+    // --trainers is a run/scale/churn flag, not a fig10 flag
+    let (ok, _, stderr) = flame(&["fig10", "--trainers", "5"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown flag '--trainers'"), "{stderr}");
+    assert!(stderr.contains("--rounds"), "{stderr}");
+}
+
+#[test]
+fn fleet_smoke_runs_the_multi_job_control_plane() {
+    let (ok, stdout, stderr) = flame(&[
+        "fleet", "--jobs", "8", "--per-shard", "16", "--test-n", "32",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("fleet: jobs=8 completed=8"), "{stdout}");
+    // one line per job, carrying its id and terminal phase
+    assert!(stdout.contains("fcfl-1 phase=completed"), "{stdout}");
+    assert!(stdout.contains("fasync-4 phase=completed"), "{stdout}");
+}
+
+#[test]
 fn run_all_topologies_small() {
     for topo in ["cfl", "hfl", "cofl", "hybrid", "distributed"] {
         let (ok, _, stderr) = flame(&[

@@ -1,0 +1,170 @@
+//! Multi-job control plane end to end: a hundred heterogeneous jobs
+//! (2-tier C-FL, 3-tier H-FL, churn-with-events, async FedBuff) admitted
+//! against bounded compute capacity and multiplexed concurrently onto
+//! one shared virtual-time fabric — deterministic, fully terminal, and
+//! fair-share scheduled.
+
+use std::sync::Arc;
+
+use flame::control::JobOptions;
+use flame::controlplane::{FleetReport, JobManager, JobPhase};
+use flame::json::Json;
+use flame::notify::EventKind;
+use flame::sim::{self, SimOptions};
+use flame::store::Store;
+use flame::topo;
+
+fn fleet_opts() -> SimOptions {
+    let mut o = SimOptions::mock();
+    // the logistic-head mock (as in `SimOptions::scale`): the fleet test
+    // measures the control plane, not the numerics, and 100 jobs x a
+    // 235k-parameter MLP would be all memory traffic
+    o.compute = Arc::new(flame::runtime::MockCompute::new(7_850, 8, 16));
+    o.per_shard = 16;
+    o.test_n = 32;
+    o.local_steps = 1;
+    o
+}
+
+fn job_lines(r: &FleetReport) -> String {
+    r.jobs
+        .iter()
+        .map(|j| j.line())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// The acceptance scenario: >= 100 concurrent heterogeneous jobs on one
+/// shared scheduler fabric; per-job reports byte-identical across two
+/// runs for a fixed seed; every job terminal in the store.
+///
+/// The byte-compare runs on a single-runner pool: asynchronous FedBuff
+/// jobs consume updates in whatever order they have *landed*, which on a
+/// multi-runner pool depends on OS scheduling (the same caveat DESIGN.md
+/// documents for quorum < 1). Cross-pool determinism of the synchronous
+/// job kinds is covered by `sync_jobs_are_identical_across_pool_sizes`.
+#[test]
+fn hundred_job_fleet_is_deterministic_and_fully_terminal() {
+    let run = || {
+        let mut m = sim::build_fleet(100, &fleet_opts()).unwrap();
+        let report = m.run_fleet(1).unwrap();
+        (m, report)
+    };
+    let (m1, r1) = run();
+    let (_m2, r2) = run();
+    assert_eq!(r1.jobs.len(), 100);
+    assert_eq!(r1.completed, 100, "{}", r1.summary());
+    assert_eq!(r1.failed, 0);
+    // bounded capacity (2 x 48 workers vs ~600 demanded) forced genuine
+    // admission queueing: most jobs waited for a release
+    assert!(r1.waited > 0, "{}", r1.summary());
+    // every submitted job reached a terminal status persisted in Store
+    let store = m1.store();
+    for id in m1.job_ids() {
+        let state = store.get("job_state", &id).expect("state persisted");
+        assert_eq!(state.as_str(), Some("completed"), "{id}");
+        assert_eq!(m1.job_phase(&id), Some(JobPhase::Completed), "{id}");
+    }
+    // byte-identical job reports across the two runs
+    assert_eq!(
+        job_lines(&r1),
+        job_lines(&r2),
+        "fleet job reports diverge across runs"
+    );
+    assert_eq!(r1.summary(), r2.summary());
+    // throughput numbers are present and sane
+    assert!(r1.max_job_vs > 0.0);
+    assert!(r1.jobs_per_vs > 0.0);
+    assert!(r1.rounds_per_vs > 0.0);
+    assert!(r1.total_rounds >= 200, "{}", r1.summary());
+}
+
+/// Synchronous jobs (full-barrier quorum 1.0 — C-FL, H-FL, churn) are
+/// byte-identical across runner-pool sizes too: virtual time, not OS
+/// scheduling, orders every message they aggregate.
+#[test]
+fn sync_jobs_are_identical_across_pool_sizes() {
+    let run = |runners: usize| {
+        let mut m = sim::build_fleet(24, &fleet_opts()).unwrap();
+        m.run_fleet(runners).unwrap()
+    };
+    let r1 = run(1);
+    let r4 = run(4);
+    assert_eq!(r1.completed, 24);
+    assert_eq!(r4.completed, 24);
+    let sync_lines = |r: &FleetReport| -> String {
+        r.jobs
+            .iter()
+            .filter(|j| !j.job.starts_with("fasync-"))
+            .map(|j| j.line())
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(
+        sync_lines(&r1),
+        sync_lines(&r4),
+        "synchronous fleet jobs diverge across runner-pool sizes"
+    );
+}
+
+/// The lifecycle stream for a queued job shows the full path:
+/// queued -> deploying -> running -> completed, with the deploying
+/// transition only after capacity was released by a predecessor.
+#[test]
+fn queued_job_streams_the_full_lifecycle() {
+    let mut reg = flame::registry::Registry::new();
+    reg.register_compute(flame::registry::ComputeSpec::new("solo", "*", 4));
+    let mut m = JobManager::with_registry(Arc::new(Store::in_memory()), reg);
+    let spec = |n: &str| {
+        topo::classical(3, flame::channel::Backend::P2p)
+            .name(n)
+            .rounds(2)
+            .set("lr", Json::Num(0.5))
+            .set("local_steps", 1usize)
+            .build()
+    };
+    let opts = || JobOptions::mock().with_data(16, 32, flame::data::Partition::Iid, 3);
+    let _first = m.submit(spec("head"), opts()).unwrap();
+    let second = m.submit(spec("tail"), opts()).unwrap();
+    let rx = m.notifier().subscribe(Some(EventKind::JobState), Some(&second));
+    m.run_fleet(2).unwrap();
+    let states: Vec<String> = rx
+        .try_iter()
+        .map(|e| e.payload.as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(
+        states,
+        vec!["deploying", "running", "completed"],
+        "the queued job must deploy only after the head job releases"
+    );
+    assert_eq!(m.job_phase(&second), Some(JobPhase::Completed));
+}
+
+/// A job bigger than the whole fleet can never be placed: rejected at
+/// submit, persisted Failed, and the rest of the fleet is unaffected.
+#[test]
+fn unplaceable_job_rejected_while_fleet_proceeds() {
+    let mut reg = flame::registry::Registry::new();
+    reg.register_compute(flame::registry::ComputeSpec::new("solo", "*", 6));
+    let store = Arc::new(Store::in_memory());
+    let mut m = JobManager::with_registry(store.clone(), reg);
+    let small = topo::classical(3, flame::channel::Backend::P2p)
+        .name("small")
+        .rounds(2)
+        .set("lr", Json::Num(0.5))
+        .set("local_steps", 1usize)
+        .build();
+    let huge = topo::classical(40, flame::channel::Backend::P2p)
+        .name("huge")
+        .rounds(2)
+        .build();
+    let opts = || JobOptions::mock().with_data(16, 32, flame::data::Partition::Iid, 3);
+    let ok_id = m.submit(small, opts()).unwrap();
+    let err = m.submit(huge, opts()).unwrap_err();
+    assert!(format!("{err:#}").contains("capacity"), "{err:#}");
+    assert_eq!(store.get("job_state", "huge-2").unwrap().as_str(), Some("failed"));
+    let report = m.run_fleet(2).unwrap();
+    assert_eq!(report.completed, 1);
+    assert_eq!(report.failed, 1);
+    assert_eq!(m.job_phase(&ok_id), Some(JobPhase::Completed));
+}
