@@ -25,7 +25,7 @@ use anyhow::{anyhow, Result};
 use crate::deploy::{PodStatus, StatusCell};
 use crate::json::Json;
 use crate::notify::{EventKind, Notifier};
-use crate::roles::{build_program, Program, WorkerEnv};
+use crate::roles::{Program, WorkerEnv};
 use crate::sched::{is_pending, PollOutcome, RunnableTask};
 use crate::workflow::StepStatus;
 
@@ -59,7 +59,10 @@ pub fn run_worker(env: WorkerEnv, notifier: Arc<Notifier>) -> Result<()> {
     status_event(&notifier, &job_name, &worker_id, "starting", "");
 
     let result: Result<()> = (|| {
-        let mut program = build_program(env)?;
+        // Role SDK dispatch: the job's registry resolves this worker's
+        // role↔program binding from spec data (no role-name matching).
+        let programs = env.job.programs.clone();
+        let mut program = programs.build(env)?;
         // sandbox: contain panics from role code
         match std::panic::catch_unwind(AssertUnwindSafe(|| program.run())) {
             Ok(r) => r,
@@ -135,7 +138,8 @@ impl RunnableTask for WorkerTask {
         if let Some(env) = self.env.take() {
             self.status.set(PodStatus::Running);
             status_event(&self.notifier, &self.job, &self.worker, "starting", "");
-            match std::panic::catch_unwind(AssertUnwindSafe(|| build_program(env))) {
+            let programs = env.job.programs.clone();
+            match std::panic::catch_unwind(AssertUnwindSafe(|| programs.build(env))) {
                 Ok(Ok(p)) => self.program = Some(p),
                 Ok(Err(e)) => return self.finish(Err(e)),
                 Err(panic) => {

@@ -27,11 +27,11 @@ use crate::metrics::MetricsHub;
 use crate::net::VirtualNet;
 use crate::notify::{EventKind, Notifier};
 use crate::registry::Registry;
-use crate::roles::JobRuntime;
+use crate::roles::{JobRuntime, ProgramFactory, RoleRegistry};
 use crate::runtime::{Compute, ComputeTimeModel};
 use crate::store::Store;
 use crate::tag::delta::diff_workers;
-use crate::tag::{expand, JobSpec, TopologyEvent, WorkerConfig};
+use crate::tag::{expand, validate, Flavor, JobSpec, TopologyEvent, WorkerConfig};
 
 /// How the sim orchestrator executes a job's workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -111,6 +111,11 @@ pub struct JobOptions {
     /// virtual timestamps), merged with any events the spec itself
     /// declares. Requires the cooperative executor.
     pub events: Vec<TopologyEvent>,
+    /// Role SDK: per-job program registrations, overlaid on the
+    /// controller's base [`RoleRegistry`] at prepare. This is how a
+    /// custom mechanism (e.g. `sim::run_fedprox`) binds spec-declared
+    /// `program:` names without touching global state.
+    pub programs: Vec<(String, ProgramFactory)>,
 }
 
 impl JobOptions {
@@ -129,7 +134,17 @@ impl JobOptions {
             executor: Executor::default(),
             recv_timeout: None,
             events: Vec::new(),
+            programs: Vec::new(),
         }
+    }
+
+    /// Register a program for this job only (Role SDK): the factory is
+    /// overlaid on the controller's base registry at prepare, so the
+    /// spec's `program:` fields (or custom `bind_default` rules) can
+    /// reach it.
+    pub fn with_program(mut self, name: impl Into<String>, factory: ProgramFactory) -> Self {
+        self.programs.push((name.into(), factory));
+        self
     }
 
     pub fn with_executor(mut self, e: Executor) -> Self {
@@ -227,12 +242,14 @@ pub(crate) fn prepare_job(
     spec: JobSpec,
     opts: JobOptions,
     registry: &Registry,
+    programs: &Arc<RoleRegistry>,
     chan_mgr: Arc<ChannelManager>,
 ) -> Result<PreparedJob> {
     let t_exp = Instant::now();
     let workers = expand(&spec, registry).context("TAG expansion failed")?;
     let expansion_s = t_exp.elapsed().as_secs_f64();
-    let mut prepared = prepare_expanded(job_label, spec, opts, registry, chan_mgr, workers)?;
+    let mut prepared =
+        prepare_expanded(job_label, spec, opts, registry, programs, chan_mgr, workers)?;
     prepared.expansion_s = expansion_s;
     Ok(prepared)
 }
@@ -247,12 +264,22 @@ pub(crate) fn prepare_expanded(
     spec: JobSpec,
     mut opts: JobOptions,
     registry: &Registry,
+    programs: &Arc<RoleRegistry>,
     chan_mgr: Arc<ChannelManager>,
     workers: Vec<WorkerConfig>,
 ) -> Result<PreparedJob> {
     let expansion_s = 0.0;
     let tcfg = TrainingConfig::from_hyper(&spec.hyper)?;
-    if spec.role("coordinator").is_some()
+
+    // Role SDK: fix the job's flavour (declared tag.flavor, or the
+    // validate-time inference) and the effective registry (base plus
+    // per-job `with_program` overlays). Bindings are resolved further
+    // down, once the runtime union spec exists — so roles introduced by
+    // live-extension deltas are covered too.
+    let flavor = spec.resolved_flavor();
+    let programs = RoleRegistry::overlaid(programs, &opts.programs);
+
+    if flavor == Flavor::Coordinated
         && matches!(
             tcfg.aggregation,
             crate::algos::AggregationPolicy::Asynchronous { .. }
@@ -264,7 +291,7 @@ pub(crate) fn prepare_expanded(
              (use async on C-FL/H-FL, or sync CO-FL)"
         );
     }
-    if spec.role("coordinator").is_some() && tcfg.quorum < 1.0 {
+    if flavor == Flavor::Coordinated && tcfg.quorum < 1.0 {
         bail!(
             "quorum fractions are not supported with a coordinator role: CO-FL's \
              ack/report round-trip is a full barrier (an unacked straggler would \
@@ -289,7 +316,7 @@ pub(crate) fn prepare_expanded(
     runtime_spec.events.clear();
     let mut entries: Vec<TimelineEntry> = Vec::new();
     if !events.is_empty() {
-        if spec.role("coordinator").is_some() {
+        if flavor == Flavor::Coordinated {
             bail!(
                 "live topology events are not supported with a coordinator role \
                  (CO-FL runs its own membership protocol)"
@@ -398,6 +425,11 @@ pub(crate) fn prepare_expanded(
     }
     let timeline = TopologyTimeline::new(entries);
 
+    // Resolve every role's program binding NOW, against the union spec —
+    // initial roles AND roles introduced by live-extension deltas — so an
+    // unknown program fails the submission, never a pod mid-run.
+    programs.resolve_all(&runtime_spec, flavor)?;
+
     let net = chan_mgr.net().clone();
     if let Some(f) = opts.configure_net.take() {
         if !chan_mgr.scope().is_empty() {
@@ -441,6 +473,8 @@ pub(crate) fn prepare_expanded(
         time_model: opts.time_model,
         init_flat,
         timeline: timeline.clone(),
+        programs,
+        flavor,
     });
     let recv_timeout = opts
         .recv_timeout
@@ -460,6 +494,10 @@ pub struct Controller {
     notifier: Arc<Notifier>,
     registry: Registry,
     deployers: DeployerSet,
+    /// Role SDK: the base program registry every submission binds
+    /// through (extended via [`Self::register_program`] or per job via
+    /// [`JobOptions::with_program`]).
+    programs: Arc<RoleRegistry>,
     job_counter: u64,
 }
 
@@ -470,6 +508,7 @@ impl Controller {
             notifier: Arc::new(Notifier::new()),
             registry: Registry::single_box(),
             deployers: DeployerSet::with_sim(),
+            programs: Arc::new(RoleRegistry::builtin()),
             job_counter: 0,
         }
     }
@@ -480,6 +519,28 @@ impl Controller {
 
     pub fn registry_mut(&mut self) -> &mut Registry {
         &mut self.registry
+    }
+
+    /// The controller's base program registry (Role SDK).
+    pub fn programs(&self) -> &Arc<RoleRegistry> {
+        &self.programs
+    }
+
+    /// Register a program for every subsequent submission (Role SDK).
+    /// Jobs already prepared keep the registry view they bound against.
+    pub fn register_program(&mut self, name: impl Into<String>, factory: ProgramFactory) {
+        Arc::make_mut(&mut self.programs).register(name, factory);
+    }
+
+    /// Install a default `(role, flavor)` binding on the base registry
+    /// (Role SDK); the program must already be registered.
+    pub fn bind_default_program(
+        &mut self,
+        role: &str,
+        flavor: Option<Flavor>,
+        program: &str,
+    ) -> Result<()> {
+        Arc::make_mut(&mut self.programs).bind_default(role, flavor, program)
     }
 
     /// Replace the default single-box registry (compute registration,
@@ -512,6 +573,13 @@ impl Controller {
         // (step 3/4) record the job configuration
         self.store.put("jobs", &job_id, spec.to_json())?;
 
+        // spec lints (e.g. missing tag.flavor → inferred binding) stream
+        // as events; they never fail the submission
+        for warning in validate::lint(&spec) {
+            self.notifier
+                .emit(EventKind::SpecLint, &job_id, Json::from(warning));
+        }
+
         let executor = opts.executor;
         let chan_mgr = ChannelManager::new(Arc::new(VirtualNet::default()));
         let PreparedJob {
@@ -520,7 +588,7 @@ impl Controller {
             timeline,
             recv_timeout,
             expansion_s,
-        } = prepare_job(&job_id, spec, opts, &self.registry, chan_mgr)?;
+        } = prepare_job(&job_id, spec, opts, &self.registry, &self.programs, chan_mgr)?;
 
         let t_db = Instant::now();
         self.store.put_batch(

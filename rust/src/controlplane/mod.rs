@@ -54,10 +54,10 @@ use crate::json::Json;
 use crate::net::{VTime, VirtualNet};
 use crate::notify::{EventKind, Notifier};
 use crate::registry::Registry;
-use crate::roles::JobRuntime;
+use crate::roles::{JobRuntime, ProgramFactory, RoleRegistry};
 use crate::sched::{PollOutcome, RunnableTask, Scheduler, Waker};
 use crate::store::Store;
-use crate::tag::{expand, JobSpec, WorkerConfig};
+use crate::tag::{expand, validate, JobSpec, WorkerConfig};
 
 pub use admission::{CapacityLedger, Demand};
 
@@ -159,6 +159,9 @@ struct FleetCore {
     store: Arc<Store>,
     notifier: Arc<Notifier>,
     registry: RwLock<Registry>,
+    /// Role SDK: the fleet's base program registry (per-job overlays
+    /// come from each submission's `JobOptions::with_program`).
+    programs: RwLock<Arc<RoleRegistry>>,
     sched: Scheduler,
     /// Root of the shared channel fabric; jobs get scoped views.
     chan_root: Arc<ChannelManager>,
@@ -224,7 +227,16 @@ impl FleetCore {
         let _ = self.set_phase(idx, JobPhase::Deploying);
         let prepared = {
             let reg = self.registry.read().unwrap();
-            prepare_expanded(&id, spec, opts, &reg, self.chan_root.scoped(&id), expanded)
+            let programs = self.programs.read().unwrap().clone();
+            prepare_expanded(
+                &id,
+                spec,
+                opts,
+                &reg,
+                &programs,
+                self.chan_root.scoped(&id),
+                expanded,
+            )
         };
         let prepared = match prepared {
             Ok(p) => p,
@@ -502,6 +514,7 @@ impl JobManager {
                 store,
                 notifier: Arc::new(Notifier::new()),
                 registry: RwLock::new(registry),
+                programs: RwLock::new(Arc::new(RoleRegistry::builtin())),
                 sched: Scheduler::new(),
                 chan_root: ChannelManager::new(Arc::new(VirtualNet::default())),
                 state: Mutex::new(FleetState {
@@ -533,6 +546,16 @@ impl JobManager {
         g.slots.iter().map(|s| s.id.clone()).collect()
     }
 
+    /// Register a role program for every subsequent submission (Role
+    /// SDK). Jobs already deployed keep the registry view they bound
+    /// against.
+    pub fn register_program(&mut self, name: impl Into<String>, factory: ProgramFactory) {
+        let mut g = self.core.programs.write().unwrap();
+        let mut next = (**g).clone();
+        next.register(name, factory);
+        *g = Arc::new(next);
+    }
+
     /// Register a compute cluster (journaled, capacity fed to admission).
     pub fn register_compute(&mut self, c: crate::registry::ComputeSpec) -> Result<()> {
         self.core.store.put("computes", &c.name, c.to_json())?;
@@ -562,6 +585,12 @@ impl JobManager {
         self.counter += 1;
         let job_id: JobId = format!("{}-{}", spec.name, self.counter);
         self.core.store.put("jobs", &job_id, spec.to_json())?;
+        // spec lints stream as events; they never fail the submission
+        for warning in validate::lint(&spec) {
+            self.core
+                .notifier
+                .emit(EventKind::SpecLint, &job_id, Json::from(warning));
+        }
         let expanded = {
             let reg = self.core.registry.read().unwrap();
             expand(&spec, &reg)
@@ -573,6 +602,16 @@ impl JobManager {
                 return Err(self.reject(&job_id, Demand::new(), msg));
             }
         };
+        // Role SDK: resolve the spec's bindings now (base registry plus
+        // this submission's `with_program` overlays), so an unknown
+        // program rejects the submission synchronously — matching
+        // `Controller::submit`. Roles introduced later by extend deltas
+        // are re-resolved against the union spec at deploy (a clean
+        // job-level failure; never a pod).
+        if let Err(e) = self.resolve_bindings(&spec, &opts) {
+            let msg = format!("admission: {e:#}");
+            return Err(self.reject(&job_id, Demand::new(), msg));
+        }
         let demand = match self.peak_demand(&spec, &opts, &workers) {
             Ok(d) => d,
             Err(e) => {
@@ -608,6 +647,32 @@ impl JobManager {
         self.core.set_phase(idx, JobPhase::Queued)?;
         self.core.state.lock().unwrap().queue.push_back(idx);
         Ok(job_id)
+    }
+
+    /// Submit-time binding resolution (see [`Self::submit`]): every role
+    /// of the spec — including roles introduced by `Extend` deltas, whose
+    /// workers the timeline deploys mid-run — must resolve against the
+    /// fleet registry overlaid with the submission's per-job programs.
+    /// Same [`RoleRegistry::overlaid`] + [`RoleRegistry::resolve_all`]
+    /// pair `prepare_expanded` applies at deploy, so acceptance and
+    /// deploy can never diverge.
+    fn resolve_bindings(&self, spec: &JobSpec, opts: &JobOptions) -> Result<()> {
+        let base = self.core.programs.read().unwrap().clone();
+        let effective = RoleRegistry::overlaid(&base, &opts.programs);
+        let flavor = spec.resolved_flavor();
+        effective.resolve_all(spec, flavor)?;
+        let mut events: Vec<&crate::tag::TopologyEvent> =
+            spec.events.iter().chain(opts.events.iter()).collect();
+        events.sort_by_key(|e| e.at_us());
+        let mut cur = spec.clone();
+        cur.events.clear();
+        for ev in events {
+            if let crate::tag::TopologyEvent::Extend { delta, .. } = ev {
+                cur = delta.apply(&cur).context("applying topology delta")?;
+                effective.resolve_all(&cur, flavor)?;
+            }
+        }
+        Ok(())
     }
 
     /// Per-compute demand at the job's busiest phase: the maximum over

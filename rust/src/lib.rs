@@ -33,6 +33,12 @@
 //!   scenario,
 //! * the **tasklet/composer** developer programming model (Table 1 surgery
 //!   API) and the built-in role workflows ([`workflow`], [`roles`]),
+//! * the **Role SDK** — the public, registry-based role↔program binding
+//!   of §4.1 ([`roles::registry`], [`roles::sdk`]): named
+//!   `ProgramFactory` closures, spec-declared `program:`/`flavor`
+//!   bindings (validate-time inference for legacy specs), exported base
+//!   chains so new mechanisms are derived by surgery without touching
+//!   `roles/` (proof: FedProx via `sim::run_fedprox` / `flame fedprox`),
 //! * FL **algorithms** and **selection** policies from the paper's feature
 //!   matrix (Table 7) ([`algos`], [`select`]),
 //! * the PJRT **runtime** that loads the AOT-lowered JAX/Pallas artifacts

@@ -14,6 +14,8 @@
 //! flame churn   [--trainers 20 --groups 2 --rounds 9] \
 //!               [--churn 0.2] [--quorum 1.0] [--runners N] # live topology extension
 //! flame fleet   [--jobs 100 --runners N]                  # multi-job control plane
+//! flame fedprox [--trainers 8 --rounds 6 --mu 0.1]        # Role-SDK custom program
+//! flame roles                                             # list registered programs
 //! flame spec    --topo hybrid --trainers 50 --groups 5    # print TAG JSON
 //! ```
 //!
@@ -381,12 +383,78 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Role-SDK catalog: every registered program with its default-binding
+/// role and flavour. Custom programs registered at runtime
+/// (`Controller::register_program` / `JobOptions::with_program`) appear
+/// the same way; from the CLI only the built-ins exist.
+fn cmd_roles(args: &Args) -> Result<()> {
+    args.expect_flags("roles", &[])?;
+    let reg = flame::roles::RoleRegistry::builtin();
+    println!("# {} registered programs", reg.names().len());
+    println!("program,role,flavor");
+    for info in reg.catalog() {
+        if info.bindings.is_empty() {
+            // reachable only via an explicit spec `program:` field
+            println!("{},-,-", info.name);
+        }
+        for (role, flavor) in &info.bindings {
+            println!(
+                "{},{},{}",
+                info.name,
+                role,
+                flavor.map(|f| f.name()).unwrap_or("any"),
+            );
+        }
+    }
+    Ok(())
+}
+
+/// FedProx via the Role SDK: the trainer role bound to a custom program
+/// derived from the exported base chain (see `sim::run_fedprox`).
+fn cmd_fedprox(args: &Args) -> Result<()> {
+    args.expect_flags(
+        "fedprox",
+        &["trainers", "rounds", "mu", "runners", "per-shard", "test-n", "seed"],
+    )?;
+    let trainers = args.get_usize("trainers", 8)?;
+    let rounds = args.get_u64("rounds", 6)?;
+    let mu: f64 = args
+        .get("mu", "0.1")
+        .parse()
+        .context("--mu must be a non-negative number")?;
+    let mut o = sim::SimOptions::mock();
+    o.per_shard = args.get_usize("per-shard", 64)?;
+    o.test_n = args.get_usize("test-n", 128)?;
+    o.seed = args.get_u64("seed", 7)?;
+    o.executor = flame::control::Executor::Cooperative {
+        runners: args.get_usize("runners", 0)?,
+    };
+    let report = sim::run_fedprox(trainers, rounds, mu, &o)?;
+    println!(
+        "fedprox: workers={} rounds={rounds} mu={mu} wall={:.2}s vtime={:.2}s acc={:.3}",
+        report.workers,
+        report.wall_s,
+        report.vtime_s,
+        report.final_acc.unwrap_or(f64::NAN),
+    );
+    for (series, label) in [("loss", "loss"), ("acc", "accuracy")] {
+        let s = report.metrics.series(series);
+        if !s.is_empty() {
+            let line: Vec<String> = s.iter().map(|(r, v)| format!("{r}:{v:.4}")).collect();
+            println!("{label}: {}", line.join(" "));
+        }
+    }
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: flame <expand|spec|run|fig10|fig11|scale|churn|fleet> [--flags]");
+            eprintln!(
+                "usage: flame <expand|spec|run|fig10|fig11|scale|churn|fleet|fedprox|roles> [--flags]"
+            );
             std::process::exit(2);
         }
     };
@@ -399,6 +467,8 @@ fn main() {
         "scale" => cmd_scale(&args),
         "churn" => cmd_churn(&args),
         "fleet" => cmd_fleet(&args),
+        "fedprox" => cmd_fedprox(&args),
+        "roles" => cmd_roles(&args),
         other => bail!("unknown command '{other}'"),
     });
     if let Err(e) = result {

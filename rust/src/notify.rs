@@ -23,6 +23,10 @@ pub enum EventKind {
     /// state string — `queued`, `deploying`, `running`, `completed`,
     /// `failed`). Streamed by the multi-job [`crate::controlplane`].
     JobState,
+    /// A non-fatal spec finding raised at submit (payload: the warning
+    /// string) — e.g. a spec that omits `tag.flavor` and relies on
+    /// validate-time inference for its role↔program binding.
+    SpecLint,
     /// Job finished (success or failure).
     JobDone,
 }

@@ -14,6 +14,20 @@ pub struct Rng {
     s: [u64; 4],
 }
 
+/// FNV-1a over raw bytes — the crate's string→tag mixer (worker ids to
+/// [`Rng::fork`] tags). Unlike a plain `h = h*131 + b` polynomial fold,
+/// every byte is XOR-folded *and* multiplied through the full 64-bit
+/// state, so short byte patterns cannot cancel each other out (the fold
+/// is linear: `[1, 0]` and `[0, 131]` collide under it).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
 fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;
@@ -266,6 +280,30 @@ mod tests {
         d.sort();
         d.dedup();
         assert_eq!(d.len(), 30);
+    }
+
+    #[test]
+    fn fnv_tag_separates_fold_collisions() {
+        // The legacy worker-tag derivation (h = h*131 + b) is linear, so
+        // distinct byte strings cancel: [1, 0] and [0, 131] both fold to
+        // 131 — two workers whose ids folded equal would share an RNG
+        // stream. FNV-1a keeps them apart.
+        let fold = |bs: &[u8]| {
+            bs.iter()
+                .fold(0u64, |a, &b| a.wrapping_mul(131).wrapping_add(b as u64))
+        };
+        let (a, b): (&[u8], &[u8]) = (&[1, 0], &[0, 131]);
+        assert_eq!(fold(a), fold(b), "legacy fold should collide here");
+        assert_ne!(fnv1a64(a), fnv1a64(b));
+        // realistic worker-id families yield pairwise-distinct tags (and
+        // therefore distinct forked streams)
+        let mut seen = std::collections::HashSet::new();
+        for role in ["trainer", "aggregator", "global-aggregator"] {
+            for i in 0..10_000 {
+                let tag = fnv1a64(format!("job-{role}-{i}").as_bytes());
+                assert!(seen.insert(tag), "tag collision for job-{role}-{i}");
+            }
+        }
     }
 
     #[test]

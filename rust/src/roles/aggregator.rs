@@ -29,7 +29,7 @@ use crate::json::Json;
 use crate::net::VTime;
 use crate::workflow::{Composer, Tasklet};
 
-use super::{program, Program, WorkerEnv};
+use super::{chain_program, Program, WorkerEnv};
 
 pub struct AggregatorCtx {
     pub env: WorkerEnv,
@@ -55,7 +55,9 @@ pub struct AggregatorCtx {
 }
 
 impl AggregatorCtx {
-    fn new(env: WorkerEnv) -> Self {
+    /// Build the context for an aggregator program over `env` (public for
+    /// Role-SDK derivations of [`base_chain`]).
+    pub fn new(env: WorkerEnv) -> Self {
         let data_role = env
             .job
             .spec
@@ -339,7 +341,7 @@ pub fn build(env: WorkerEnv, coordinated: bool) -> Result<Box<dyn Program>> {
         chain.insert_before("recv_global", Tasklet::new("get_assignment", get_assignment))?;
         chain.insert_after("upload", Tasklet::new("report", report))?;
     }
-    Ok(program(chain, ctx))
+    Ok(chain_program(chain, ctx))
 }
 
 #[cfg(test)]

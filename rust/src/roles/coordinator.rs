@@ -22,7 +22,7 @@ use crate::channel::Message;
 use crate::json::Json;
 use crate::workflow::Composer;
 
-use super::{program, Program, WorkerEnv};
+use super::{chain_program, Program, WorkerEnv};
 
 /// Straggler-tracking state per aggregator.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -144,11 +144,25 @@ impl Default for LoadBalancer {
 }
 
 pub struct CoordinatorCtx {
-    env: WorkerEnv,
+    pub env: WorkerEnv,
     lb: LoadBalancer,
     round: u64,
     active: Vec<String>,
     pub done: bool,
+}
+
+impl CoordinatorCtx {
+    /// Build the context for a coordinator program over `env` (public for
+    /// Role-SDK derivations of [`chain`]).
+    pub fn new(env: WorkerEnv) -> Self {
+        Self {
+            env,
+            lb: LoadBalancer::new(),
+            round: 0,
+            active: Vec::new(),
+            done: false,
+        }
+    }
 }
 
 // ------------------------------------------------------------- tasklets
@@ -259,14 +273,7 @@ pub fn chain() -> Composer<CoordinatorCtx> {
 }
 
 pub fn build(env: WorkerEnv) -> Result<Box<dyn Program>> {
-    let ctx = CoordinatorCtx {
-        env,
-        lb: LoadBalancer::new(),
-        round: 0,
-        active: Vec::new(),
-        done: false,
-    };
-    Ok(program(chain(), ctx))
+    Ok(chain_program(chain(), CoordinatorCtx::new(env)))
 }
 
 #[cfg(test)]

@@ -14,10 +14,10 @@ use anyhow::Result;
 use crate::workflow::Composer;
 
 use super::collective::{is_delegate, RingAllReduce};
-use super::{program, Program, WorkerEnv};
+use super::{chain_program, Program, WorkerEnv};
 
 pub struct DistributedCtx {
-    env: WorkerEnv,
+    pub env: WorkerEnv,
     data: Arc<crate::data::Dataset>,
     flat: Vec<f32>,
     batches: Vec<Vec<usize>>,
@@ -105,20 +105,27 @@ pub fn chain() -> Composer<DistributedCtx> {
         )
 }
 
+impl DistributedCtx {
+    /// Build the context for a distributed-trainer program over `env`
+    /// (public for Role-SDK derivations of [`chain`]).
+    pub fn new(env: WorkerEnv) -> Result<Self> {
+        Ok(Self {
+            data: env.shard()?,
+            env,
+            flat: Vec::new(),
+            batches: Vec::new(),
+            plan: Vec::new(),
+            batch_pos: 0,
+            round: 0,
+            last_loss: f64::NAN,
+            ring_op: None,
+            done: false,
+        })
+    }
+}
+
 pub fn build(env: WorkerEnv) -> Result<Box<dyn Program>> {
-    let ctx = DistributedCtx {
-        data: env.shard()?,
-        env,
-        flat: Vec::new(),
-        batches: Vec::new(),
-        plan: Vec::new(),
-        batch_pos: 0,
-        round: 0,
-        last_loss: f64::NAN,
-        ring_op: None,
-        done: false,
-    };
-    Ok(program(chain(), ctx))
+    Ok(chain_program(chain(), DistributedCtx::new(env)?))
 }
 
 #[cfg(test)]

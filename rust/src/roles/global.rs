@@ -40,7 +40,7 @@ use crate::net::VTime;
 use crate::select::{make_selector, ClientStats, Selector};
 use crate::workflow::{Composer, Tasklet};
 
-use super::{program, Program, WorkerEnv};
+use super::{chain_program, Program, WorkerEnv};
 
 pub struct GlobalCtx {
     pub env: WorkerEnv,
@@ -75,7 +75,10 @@ pub struct GlobalCtx {
 }
 
 impl GlobalCtx {
-    fn new(env: WorkerEnv, coordinated: bool) -> Self {
+    /// Build the context for a global-aggregator program over `env`
+    /// (public for Role-SDK derivations of [`base_chain`] /
+    /// [`async_chain`]). `coordinated` enables CO-FL ack reporting.
+    pub fn new(env: WorkerEnv, coordinated: bool) -> Self {
         let tcfg = &env.job.tcfg;
         let d = env.job.compute.d_pad();
         let opt = ServerOpt::new(tcfg.server, d)
@@ -568,7 +571,7 @@ pub fn build(env: WorkerEnv, coordinated: bool) -> Result<Box<dyn Program>> {
         }
         chain
     };
-    Ok(program(chain, ctx))
+    Ok(chain_program(chain, ctx))
 }
 
 #[cfg(test)]

@@ -22,10 +22,10 @@ use crate::json::Json;
 use crate::workflow::Composer;
 
 use super::collective::{is_delegate, RingAllReduce};
-use super::{program, Program, WorkerEnv};
+use super::{chain_program, Program, WorkerEnv};
 
 pub struct HybridCtx {
-    env: WorkerEnv,
+    pub env: WorkerEnv,
     data: Arc<crate::data::Dataset>,
     flat: Vec<f32>,
     global: Vec<f32>,
@@ -176,23 +176,30 @@ pub fn chain() -> Composer<HybridCtx> {
         )
 }
 
+impl HybridCtx {
+    /// Build the context for a hybrid-trainer program over `env` (public
+    /// for Role-SDK derivations of [`chain`]).
+    pub fn new(env: WorkerEnv) -> Result<Self> {
+        Ok(Self {
+            data: env.shard()?,
+            env,
+            flat: Vec::new(),
+            global: Vec::new(),
+            batches: Vec::new(),
+            plan: Vec::new(),
+            batch_pos: 0,
+            parent: None,
+            round: 0,
+            cluster_samples: 0.0,
+            last_loss: f64::NAN,
+            ring_op: None,
+            done: false,
+        })
+    }
+}
+
 pub fn build(env: WorkerEnv) -> Result<Box<dyn Program>> {
-    let ctx = HybridCtx {
-        data: env.shard()?,
-        env,
-        flat: Vec::new(),
-        global: Vec::new(),
-        batches: Vec::new(),
-        plan: Vec::new(),
-        batch_pos: 0,
-        parent: None,
-        round: 0,
-        cluster_samples: 0.0,
-        last_loss: f64::NAN,
-        ring_op: None,
-        done: false,
-    };
-    Ok(program(chain(), ctx))
+    Ok(chain_program(chain(), HybridCtx::new(env)?))
 }
 
 #[cfg(test)]

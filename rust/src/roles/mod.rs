@@ -8,10 +8,16 @@
 //! **chain surgery** on the base chains (Table 1 API), exactly like the
 //! paper's Fig 9 — not by re-implementation.
 //!
+//! Which program a worker runs is decided by the **Role SDK** ([`sdk`],
+//! [`registry`]): a [`RoleRegistry`] resolves each role's binding from
+//! spec data (the role's `program:` field, or the default binding for the
+//! job's `tag.flavor`) and invokes the registered factory. There is no
+//! role-name dispatch in this module.
+//!
 //! [`WorkerEnv`] is what the agent hands a role at start: the expanded
 //! worker config, joined channel handles (per the TAG), the shared job
-//! runtime (compute pool, datasets, metrics), and the worker's virtual
-//! clock.
+//! runtime (compute pool, datasets, metrics, program registry), and the
+//! worker's virtual clock.
 
 pub mod aggregator;
 pub mod collective;
@@ -19,6 +25,8 @@ pub mod coordinator;
 pub mod distributed;
 pub mod global;
 pub mod hybrid;
+pub mod registry;
+pub mod sdk;
 pub mod trainer;
 
 use std::collections::{BTreeMap, HashMap};
@@ -33,11 +41,13 @@ use crate::data::Dataset;
 use crate::deploy::TopologyTimeline;
 use crate::metrics::MetricsHub;
 use crate::net::{VClock, VTime};
-use crate::prng::Rng;
+use crate::prng::{fnv1a64, Rng};
 use crate::runtime::{Compute, ComputeTimeModel};
 use crate::sched::WorkerPark;
-use crate::tag::{JobSpec, WorkerConfig};
+use crate::tag::{Flavor, JobSpec, WorkerConfig};
 use crate::workflow::StepStatus;
+
+pub use registry::{ProgramFactory, RoleBinding, RoleRegistry};
 
 /// Everything shared by all workers of one job deployment.
 pub struct JobRuntime {
@@ -57,6 +67,13 @@ pub struct JobRuntime {
     /// Scripted live-extension timeline (empty for static jobs). The
     /// round-driving global aggregator drains it at round boundaries.
     pub timeline: Arc<TopologyTimeline>,
+    /// Role SDK: the program registry this job's workers bind through
+    /// (the controller's base registry plus any per-job
+    /// `JobOptions::with_program` overrides).
+    pub programs: Arc<RoleRegistry>,
+    /// The job's resolved topology flavour (declared `tag.flavor`, or the
+    /// validate-time inference) — drives default role↔program bindings.
+    pub flavor: Flavor,
 }
 
 impl JobRuntime {
@@ -112,9 +129,11 @@ impl WorkerEnv {
             )?;
             chans.insert(ch_name.clone(), handle);
         }
+        // FNV-1a id mixing: a plain 131-polynomial fold is linear, so
+        // distinct ids could fold to the same tag and share a stream (see
+        // prng::fnv1a64 and its collision regression test).
         let mut seed_rng = Rng::new(job.tcfg.seed ^ 0x5EED_CAFE);
-        let tag = cfg.id.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64));
-        let rng = seed_rng.fork(tag);
+        let rng = seed_rng.fork(fnv1a64(cfg.id.as_bytes()));
         Ok(Self {
             cfg,
             job,
@@ -224,7 +243,10 @@ impl<C: Send> Program for ChainProgram<C> {
     }
 }
 
-pub(crate) fn program<C: Send + 'static>(
+/// Bind a tasklet chain to its context as a runnable [`Program`] — the
+/// last step of assembling a role program, built-in or custom (the Role
+/// SDK's equivalent of instantiating a derived role class).
+pub fn chain_program<C: Send + 'static>(
     composer: crate::workflow::Composer<C>,
     ctx: C,
 ) -> Box<dyn Program> {
@@ -246,26 +268,6 @@ pub(crate) fn quorum_target(alive: usize, quorum: f64) -> usize {
         return 0;
     }
     ((alive as f64 * quorum).ceil() as usize).clamp(1, alive)
-}
-
-/// Build the program for a worker, dispatching on its role name and the
-/// job's topology flavour. This is the role/program binding of §4.1 ("the
-/// flexible binding between role and program").
-pub fn build_program(env: WorkerEnv) -> Result<Box<dyn Program>> {
-    let coordinated = env.job.spec.role("coordinator").is_some();
-    let hybrid = env.job.spec.channel("ring-channel").is_some()
-        && env.job.spec.role("global-aggregator").is_some();
-    match env.cfg.role.as_str() {
-        "trainer" if hybrid => hybrid::build(env),
-        "trainer" if env.job.spec.roles.len() == 1 => distributed::build(env),
-        "trainer" => trainer::build(env, coordinated),
-        "aggregator" => aggregator::build(env, coordinated),
-        "global-aggregator" => global::build(env, coordinated),
-        "coordinator" => coordinator::build(env),
-        other => bail!(
-            "no built-in program for role '{other}' (register a custom one)"
-        ),
-    }
 }
 
 /// Test fixtures shared by unit tests across modules.
@@ -292,6 +294,7 @@ pub mod tests_support {
         }
         let compute: Arc<dyn Compute> = Arc::new(MockCompute::default_mlp());
         let init_flat = Arc::new(vec![0f32; compute.d_pad()]);
+        let flavor = spec.resolved_flavor();
         let job = Arc::new(JobRuntime {
             spec,
             chan_mgr: ChannelManager::new(Arc::new(VirtualNet::default())),
@@ -303,6 +306,8 @@ pub mod tests_support {
             time_model: ComputeTimeModel::Free,
             init_flat,
             timeline: TopologyTimeline::empty(),
+            programs: Arc::new(RoleRegistry::builtin()),
+            flavor,
         });
         (job, cfgs)
     }
@@ -332,11 +337,11 @@ mod tests {
     }
 
     #[test]
-    fn build_program_dispatch() {
+    fn registry_builds_every_expanded_worker() {
         let (job, cfgs) = mini_job();
         for cfg in cfgs {
             let env = WorkerEnv::new(cfg, job.clone()).unwrap();
-            assert!(build_program(env).is_ok());
+            assert!(job.programs.build(env).is_ok());
         }
     }
 
@@ -366,7 +371,7 @@ mod tests {
         let mut cfg = cfgs[0].clone();
         cfg.role = "mystery".into();
         // need matching channels; reuse trainer's
-        let env = WorkerEnv::new(cfg, job).unwrap();
-        assert!(build_program(env).is_err());
+        let env = WorkerEnv::new(cfg, job.clone()).unwrap();
+        assert!(job.programs.build(env).is_err());
     }
 }

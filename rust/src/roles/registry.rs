@@ -1,0 +1,437 @@
+//! The Role SDK's registry: the public, data-driven role↔program binding
+//! (paper §4.1 — "the flexible binding between role and program").
+//!
+//! A [`RoleRegistry`] maps **program names** to [`ProgramFactory`]
+//! closures. Which program a worker runs is decided entirely by data the
+//! spec controls:
+//!
+//! 1. the role's explicit `program:` field, when declared, else
+//! 2. the registry's default binding for `(role name, flavor)`, where the
+//!    flavour is the spec's `tag.flavor` (or the validate-time inference,
+//!    [`crate::tag::validate::infer_flavor`]).
+//!
+//! All built-in programs are registered through the same public API any
+//! downstream mechanism uses ([`RoleRegistry::builtin`]), and each one is
+//! assembled from its role's **exported base chain** via the Table-1
+//! surgery API — a custom program does exactly what the built-ins do, from
+//! outside the crate. The old `build_program` role-name `match` (and its
+//! `"ring-channel"` magic-name sniffing) is gone; nothing in `roles/`
+//! needs editing to add a mechanism.
+//!
+//! # Registering a custom program end-to-end
+//!
+//! ```
+//! use std::sync::Arc;
+//!
+//! use flame::channel::Backend;
+//! use flame::control::{Controller, JobOptions};
+//! use flame::roles::sdk::{chain_program, trainer_chain, Tasklet, TrainerCtx};
+//! use flame::store::Store;
+//!
+//! // Derive a custom trainer from the exported base chain by Table-1
+//! // surgery (paper Fig 9 style): add a bookkeeping tasklet after train.
+//! let mut spec = flame::topo::classical(2, Backend::P2p).rounds(1).build();
+//! spec.flavor = Some(flame::tag::Flavor::Sync);
+//! spec.roles
+//!     .iter_mut()
+//!     .find(|r| r.name == "trainer")
+//!     .unwrap()
+//!     .program = Some("audited-trainer".into());
+//!
+//! let opts = JobOptions::mock().with_program(
+//!     "audited-trainer",
+//!     Arc::new(|env, _binding| {
+//!         let ctx = TrainerCtx::new(env)?;
+//!         let mut chain = trainer_chain();
+//!         chain.insert_after(
+//!             "train",
+//!             Tasklet::new("audit", |c: &mut TrainerCtx| {
+//!                 let _round = c.round; // custom logic goes here
+//!                 Ok(())
+//!             }),
+//!         )?;
+//!         Ok(chain_program(chain, ctx))
+//!     }),
+//! );
+//!
+//! let mut ctl = Controller::new(Arc::new(Store::in_memory()));
+//! let report = ctl.submit(spec, opts).unwrap();
+//! assert_eq!(report.workers, 3);
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tag::{Flavor, JobSpec};
+
+use super::{aggregator, coordinator, distributed, global, hybrid, trainer};
+use super::{Program, WorkerEnv};
+
+/// Builds one worker's program from its environment and resolved binding.
+///
+/// Factories are `Arc`-shared closures so a registry can be cloned per job
+/// (base registry + `JobOptions::with_program` overrides) without cloning
+/// any program logic.
+pub type ProgramFactory =
+    Arc<dyn Fn(WorkerEnv, &RoleBinding) -> Result<Box<dyn Program>> + Send + Sync>;
+
+/// The resolved role↔program binding handed to a [`ProgramFactory`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoleBinding {
+    /// The TAG role this worker instantiates.
+    pub role: String,
+    /// The registered program it runs.
+    pub program: String,
+    /// The job's topology flavour (declared or inferred).
+    pub flavor: Flavor,
+}
+
+/// One row of the program catalog (`flame roles`,
+/// [`RoleRegistry::catalog`]): a registered program plus the default
+/// rules binding it. Derived from the authoritative rule list at call
+/// time, so it can never desync from dispatch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProgramInfo {
+    pub name: String,
+    /// Default `(role, flavor)` rules binding this program (`None` =
+    /// the role's any-flavour fallback); empty for programs reachable
+    /// only via an explicit spec `program:` field.
+    pub bindings: Vec<(String, Option<Flavor>)>,
+}
+
+/// A default-binding rule: `(role, flavor)` → program name. `flavor:
+/// None` is the role's any-flavour fallback.
+#[derive(Debug, Clone)]
+struct BindingRule {
+    role: String,
+    flavor: Option<Flavor>,
+    program: String,
+}
+
+/// Registry of role programs (see module docs).
+#[derive(Clone, Default)]
+pub struct RoleRegistry {
+    programs: BTreeMap<String, ProgramFactory>,
+    defaults: Vec<BindingRule>,
+}
+
+impl RoleRegistry {
+    /// An empty registry (no programs, no default bindings).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The registry every controller starts from: the six built-in roles'
+    /// programs (plus their CO-FL variants), registered through the same
+    /// public API custom code uses, with the default `(role, flavor)`
+    /// bindings that reproduce the paper's §4.4 role set.
+    pub fn builtin() -> Self {
+        let mut r = Self::new();
+        r.register("trainer", Arc::new(|env, _b| trainer::build(env, false)));
+        r.register(
+            "coordinated-trainer",
+            Arc::new(|env, _b| trainer::build(env, true)),
+        );
+        r.register("hybrid-trainer", Arc::new(|env, _b| hybrid::build(env)));
+        r.register(
+            "distributed-trainer",
+            Arc::new(|env, _b| distributed::build(env)),
+        );
+        r.register("aggregator", Arc::new(|env, _b| aggregator::build(env, false)));
+        r.register(
+            "coordinated-aggregator",
+            Arc::new(|env, _b| aggregator::build(env, true)),
+        );
+        r.register(
+            "global-aggregator",
+            Arc::new(|env, _b| global::build(env, false)),
+        );
+        r.register(
+            "coordinated-global-aggregator",
+            Arc::new(|env, _b| global::build(env, true)),
+        );
+        r.register("coordinator", Arc::new(|env, _b| coordinator::build(env)));
+
+        // default bindings: (role, flavor) → program; None = any flavour
+        let rules = [
+            ("trainer", None, "trainer"),
+            ("trainer", Some(Flavor::Coordinated), "coordinated-trainer"),
+            ("trainer", Some(Flavor::Hybrid), "hybrid-trainer"),
+            ("trainer", Some(Flavor::Distributed), "distributed-trainer"),
+            ("aggregator", None, "aggregator"),
+            (
+                "aggregator",
+                Some(Flavor::Coordinated),
+                "coordinated-aggregator",
+            ),
+            ("global-aggregator", None, "global-aggregator"),
+            (
+                "global-aggregator",
+                Some(Flavor::Coordinated),
+                "coordinated-global-aggregator",
+            ),
+            ("coordinator", None, "coordinator"),
+        ];
+        for (role, flavor, program) in rules {
+            r.bind_default(role, flavor, program)
+                .expect("built-in binding must resolve");
+        }
+        r
+    }
+
+    /// Register (or replace) a program under `name`. The program carries
+    /// no default binding until [`Self::bind_default`] names it; specs
+    /// reach it through their `program:` field.
+    pub fn register(&mut self, name: impl Into<String>, factory: ProgramFactory) {
+        self.programs.insert(name.into(), factory);
+    }
+
+    /// Make `program` the default binding of `role` under `flavor`
+    /// (`None` = the role's any-flavour fallback). Replaces an existing
+    /// rule for the same `(role, flavor)`; fails if the program is not
+    /// registered.
+    pub fn bind_default(
+        &mut self,
+        role: &str,
+        flavor: Option<Flavor>,
+        program: &str,
+    ) -> Result<()> {
+        if !self.contains(program) {
+            bail!("cannot bind unregistered program '{program}'");
+        }
+        self.defaults
+            .retain(|d| !(d.role == role && d.flavor == flavor));
+        self.defaults.push(BindingRule {
+            role: role.to_string(),
+            flavor,
+            program: program.to_string(),
+        });
+        Ok(())
+    }
+
+    /// The effective registry for one job: `base` plus per-job factory
+    /// overlays (`JobOptions::with_program`). Returns `base` untouched
+    /// when there is nothing to overlay; factories are `Arc`s, so the
+    /// clone is cheap.
+    pub fn overlaid(base: &Arc<Self>, extra: &[(String, ProgramFactory)]) -> Arc<Self> {
+        if extra.is_empty() {
+            return base.clone();
+        }
+        let mut r = (**base).clone();
+        for (name, factory) in extra {
+            r.register(name.clone(), factory.clone());
+        }
+        Arc::new(r)
+    }
+
+    /// Resolve every role of `spec` under `flavor` — the shared
+    /// submission gate of `Controller::submit` and
+    /// `JobManager::submit`: an unknown program must fail the
+    /// submission, never a pod.
+    pub fn resolve_all(&self, spec: &JobSpec, flavor: Flavor) -> Result<()> {
+        for role in &spec.roles {
+            self.resolve(spec, flavor, &role.name)
+                .with_context(|| format!("binding role '{}'", role.name))?;
+        }
+        Ok(())
+    }
+
+    /// Is a program registered under `name`?
+    pub fn contains(&self, name: &str) -> bool {
+        self.programs.contains_key(name)
+    }
+
+    /// Registered program names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.programs.keys().cloned().collect()
+    }
+
+    /// The program catalog, sorted by name: every registered program with
+    /// the default rules binding it (the `flame roles` listing), derived
+    /// from the live rule list.
+    pub fn catalog(&self) -> Vec<ProgramInfo> {
+        self.programs
+            .keys()
+            .map(|name| ProgramInfo {
+                name: name.clone(),
+                bindings: self
+                    .defaults
+                    .iter()
+                    .filter(|d| &d.program == name)
+                    .map(|d| (d.role.clone(), d.flavor))
+                    .collect(),
+            })
+            .collect()
+    }
+
+    fn default_program(&self, role: &str, flavor: Flavor) -> Option<&str> {
+        self.defaults
+            .iter()
+            .find(|d| d.role == role && d.flavor == Some(flavor))
+            .or_else(|| {
+                self.defaults
+                    .iter()
+                    .find(|d| d.role == role && d.flavor.is_none())
+            })
+            .map(|d| d.program.as_str())
+    }
+
+    /// Resolve the binding for `role_name` under `flavor`: the role's
+    /// declared `program:` when present, else the registry's default for
+    /// `(role, flavor)` (falling back to the role's any-flavour rule).
+    /// Errors when the role is unknown, nothing binds it, or the bound
+    /// program is not registered.
+    pub fn resolve(&self, spec: &JobSpec, flavor: Flavor, role_name: &str) -> Result<RoleBinding> {
+        let role = spec
+            .role(role_name)
+            .with_context(|| format!("spec has no role '{role_name}'"))?;
+        let program = match &role.program {
+            Some(p) => p.clone(),
+            None => self
+                .default_program(role_name, flavor)
+                .map(str::to_string)
+                .with_context(|| {
+                    format!(
+                        "no program bound for role '{role_name}' (flavor '{}'): \
+                         declare `program:` in the spec or register a default binding",
+                        flavor.name()
+                    )
+                })?,
+        };
+        if !self.contains(&program) {
+            bail!(
+                "role '{role_name}' binds program '{program}', which is not registered \
+                 (registered: {})",
+                self.names().join(", ")
+            );
+        }
+        Ok(RoleBinding {
+            role: role_name.to_string(),
+            program,
+            flavor,
+        })
+    }
+
+    /// Build the program for one worker: resolve its binding against the
+    /// job's spec and flavour, then invoke the factory. This is the §4.1
+    /// role↔program binding — the replacement for the old hardcoded
+    /// `build_program` dispatch.
+    pub fn build(&self, env: WorkerEnv) -> Result<Box<dyn Program>> {
+        let binding = self.resolve(&env.job.spec, env.job.flavor, &env.cfg.role)?;
+        let factory = self
+            .programs
+            .get(&binding.program)
+            .expect("resolve checked registration")
+            .clone();
+        factory(env, &binding)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::channel::Backend;
+    use crate::topo;
+
+    #[test]
+    fn builtin_registry_lists_all_programs() {
+        let r = RoleRegistry::builtin();
+        for name in [
+            "trainer",
+            "coordinated-trainer",
+            "hybrid-trainer",
+            "distributed-trainer",
+            "aggregator",
+            "coordinated-aggregator",
+            "global-aggregator",
+            "coordinated-global-aggregator",
+            "coordinator",
+        ] {
+            assert!(r.contains(name), "missing '{name}'");
+        }
+        assert_eq!(r.names().len(), 9);
+        // every built-in appears in the catalog with >= 1 default rule
+        let catalog = r.catalog();
+        assert_eq!(catalog.len(), 9);
+        assert!(catalog.iter().all(|p| !p.bindings.is_empty()));
+        // the catalog is derived from the live rules, so a re-bind is
+        // reflected immediately (no desyncable labels)
+        let mut r = r;
+        r.bind_default("trainer", None, "coordinated-trainer").unwrap();
+        let info = |r: &RoleRegistry, name: &str| {
+            r.catalog().into_iter().find(|p| p.name == name).unwrap()
+        };
+        assert!(info(&r, "coordinated-trainer")
+            .bindings
+            .contains(&("trainer".to_string(), None)));
+        assert!(!info(&r, "trainer")
+            .bindings
+            .contains(&("trainer".to_string(), None)));
+    }
+
+    #[test]
+    fn default_bindings_follow_flavor() {
+        let r = RoleRegistry::builtin();
+        let spec = topo::hierarchical(4, 2, Backend::P2p).build();
+        for (flavor, role, program) in [
+            (Flavor::Sync, "trainer", "trainer"),
+            (Flavor::Async, "trainer", "trainer"), // any-flavour fallback
+            (Flavor::Coordinated, "trainer", "coordinated-trainer"),
+            (Flavor::Hybrid, "trainer", "hybrid-trainer"),
+            (Flavor::Distributed, "trainer", "distributed-trainer"),
+            (Flavor::Sync, "aggregator", "aggregator"),
+            (Flavor::Coordinated, "aggregator", "coordinated-aggregator"),
+            (Flavor::Sync, "global-aggregator", "global-aggregator"),
+            (
+                Flavor::Coordinated,
+                "global-aggregator",
+                "coordinated-global-aggregator",
+            ),
+        ] {
+            let b = r.resolve(&spec, flavor, role).unwrap();
+            assert_eq!(b.program, program, "({role}, {flavor:?})");
+            assert_eq!(b.flavor, flavor);
+        }
+    }
+
+    #[test]
+    fn explicit_program_field_wins_over_defaults() {
+        let mut r = RoleRegistry::builtin();
+        r.register("my-trainer", Arc::new(|env, _b| trainer::build(env, false)));
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.roles[0].program = Some("my-trainer".into());
+        let b = r.resolve(&spec, Flavor::Sync, "trainer").unwrap();
+        assert_eq!(b.program, "my-trainer");
+    }
+
+    #[test]
+    fn unknown_bindings_error_with_context() {
+        let r = RoleRegistry::builtin();
+        // an unregistered explicit program
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.roles[0].program = Some("ghost".into());
+        let err = r.resolve(&spec, Flavor::Sync, "trainer").unwrap_err();
+        assert!(format!("{err:#}").contains("not registered"), "{err:#}");
+        // a role nothing binds
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.roles[0].name = "mystery".into();
+        spec.channels[0].pair.0 = "mystery".into();
+        let err = r.resolve(&spec, Flavor::Sync, "mystery").unwrap_err();
+        assert!(format!("{err:#}").contains("no program bound"), "{err:#}");
+    }
+
+    #[test]
+    fn bind_default_requires_registered_program() {
+        let mut r = RoleRegistry::new();
+        assert!(r.bind_default("trainer", None, "nope").is_err());
+        r.register("p", Arc::new(|env, _b| trainer::build(env, false)));
+        r.bind_default("trainer", None, "p").unwrap();
+        let spec = topo::classical(2, Backend::P2p).build();
+        assert_eq!(
+            r.resolve(&spec, Flavor::Sync, "trainer").unwrap().program,
+            "p"
+        );
+    }
+}

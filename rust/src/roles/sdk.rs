@@ -1,0 +1,55 @@
+//! The public Role SDK surface — everything a downstream mechanism needs
+//! to implement and register a program *without touching `roles/`*.
+//!
+//! The paper's extension story (§4.4, Fig 9, Table 1) is: inherit a base
+//! role, perform chain surgery, run. This module is that story as one
+//! import:
+//!
+//! * the **exported base chains** of all six built-in roles
+//!   ([`trainer_chain`], [`aggregator_chain`], [`global_chain`] /
+//!   [`global_async_chain`], [`coordinator_chain`], [`hybrid_chain`],
+//!   [`distributed_chain`]) plus their public context types,
+//! * the **surgery API** ([`Composer`]: `insert_before` / `insert_after`
+//!   / `replace_with` / `remove` / `get_tasklet` — paper Table 1),
+//! * [`chain_program`] to bind a finished chain to its context as a
+//!   runnable [`Program`],
+//! * the **registry** types ([`RoleRegistry`], [`ProgramFactory`],
+//!   [`RoleBinding`], [`Flavor`]) that connect the program to a spec.
+//!
+//! A derived mechanism registers either globally
+//! (`Controller::register_program` / `JobManager::register_program`) or
+//! per job (`JobOptions::with_program`), and the spec names it via the
+//! role's `program:` field (or a `bind_default` rule). See
+//! `sim::run_fedprox` for a complete derivation: FedProx is the base
+//! trainer chain with `train` replaced by a proximal step — zero edits
+//! inside the built-in role builders.
+
+pub use super::registry::{ProgramFactory, ProgramInfo, RoleBinding, RoleRegistry};
+pub use super::{chain_program, JobRuntime, Program, WorkerEnv};
+pub use crate::tag::Flavor;
+pub use crate::workflow::{Composer, StepStatus, Tasklet};
+
+pub use super::aggregator::{base_chain as aggregator_chain, AggregatorCtx};
+pub use super::coordinator::{chain as coordinator_chain, CoordinatorCtx};
+pub use super::distributed::{chain as distributed_chain, DistributedCtx};
+pub use super::global::{async_chain as global_async_chain, base_chain as global_chain, GlobalCtx};
+pub use super::hybrid::{chain as hybrid_chain, HybridCtx};
+pub use super::trainer::{base_chain as trainer_chain, TrainerCtx};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exported_chains_expose_their_surgery_points() {
+        // every base chain is reachable and inspectable through the SDK —
+        // the aliases are the public surgery surface of paper Table 1
+        assert!(trainer_chain().get_tasklet("train"));
+        assert!(aggregator_chain().get_tasklet("collect"));
+        assert!(global_chain().get_tasklet("distribute"));
+        assert!(global_async_chain().get_tasklet("serve"));
+        assert!(coordinator_chain().get_tasklet("assign"));
+        assert!(hybrid_chain().get_tasklet("cluster_agg"));
+        assert!(distributed_chain().get_tasklet("allreduce"));
+    }
+}

@@ -18,7 +18,7 @@ use crate::json::Json;
 use crate::select::FedBalancer;
 use crate::workflow::{Composer, Tasklet};
 
-use super::{program, Program, WorkerEnv};
+use super::{chain_program, Program, WorkerEnv};
 
 /// Trainer state threaded through the tasklet chain.
 pub struct TrainerCtx {
@@ -50,7 +50,10 @@ pub struct TrainerCtx {
 }
 
 impl TrainerCtx {
-    fn new(env: WorkerEnv) -> Result<Self> {
+    /// Build the context for a trainer program over `env` (public so
+    /// custom programs derived from [`base_chain`] via the Role SDK can
+    /// instantiate it — see `sim::run_fedprox`).
+    pub fn new(env: WorkerEnv) -> Result<Self> {
         Ok(Self {
             data: env.shard()?,
             env,
@@ -70,7 +73,54 @@ impl TrainerCtx {
         })
     }
 
-    fn next_batch(&mut self) -> (usize, Vec<f32>, Vec<i32>) {
+    /// Whether the current round actually trains (not terminated, not a
+    /// non-participation "skip" round). Custom `train`-slot tasklets must
+    /// gate on this exactly like the base `train` does.
+    pub fn training_this_round(&self) -> bool {
+        !self.done && !self.skip
+    }
+
+    /// The local model (flat parameter vector).
+    pub fn model(&self) -> &[f32] {
+        &self.flat
+    }
+
+    /// The round's received global model — the FedProx/FedDyn proximal
+    /// anchor and the delta base for uploads.
+    pub fn anchor(&self) -> &[f32] {
+        &self.global
+    }
+
+    /// Replace the local model after a training step.
+    pub fn set_model(&mut self, flat: Vec<f32>) {
+        debug_assert_eq!(flat.len(), self.global.len());
+        self.flat = flat;
+    }
+
+    /// Feed one batch's observed loss back to the batch selector
+    /// (FedBalancer) when it is enabled; no-op otherwise. Custom
+    /// `train`-slot tasklets should call this per batch exactly like
+    /// the base `train` does, or loss-guided selection silently stalls
+    /// on its initial estimates.
+    pub fn record_batch_loss(&mut self, batch_idx: usize, loss: f64) {
+        if let Some(fb) = &mut self.balancer {
+            fb.record(batch_idx, loss);
+        }
+    }
+
+    /// Record the round's mean training loss: feeds the `trainer_loss`
+    /// series and the metadata `upload` attaches to the update message.
+    pub fn finish_train_step(&mut self, mean_loss: f64) {
+        self.last_loss = mean_loss;
+        self.env
+            .job
+            .metrics
+            .record(&self.env.cfg.id, "trainer_loss", self.round, mean_loss);
+    }
+
+    /// The next training batch under the epoch plan (balancer-driven when
+    /// FedBalancer is enabled): `(batch index, x, y)`.
+    pub fn next_batch(&mut self) -> (usize, Vec<f32>, Vec<i32>) {
         if self.plan.is_empty() || self.batch_pos >= self.plan.len() {
             // new epoch: balancer plan, or a fresh shuffle of all batches
             self.plan = match &mut self.balancer {
@@ -283,7 +333,7 @@ pub fn build(env: WorkerEnv, coordinated: bool) -> Result<Box<dyn Program>> {
     if coordinated {
         chain.insert_before("fetch", Tasklet::new("get_assignment", get_assignment))?;
     }
-    Ok(program(chain, ctx))
+    Ok(chain_program(chain, ctx))
 }
 
 #[cfg(test)]

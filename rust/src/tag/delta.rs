@@ -433,6 +433,7 @@ pub fn add_tier_delta(spec: &JobSpec, n_aggregators: usize) -> Result<TagDelta> 
         ]
         .into_iter()
         .collect()],
+        program: None,
     };
     Ok(TagDelta {
         add_roles: vec![new_global, agg_role],

@@ -19,13 +19,21 @@
 //!   "model":  "mlp",                   // optional, default "mlp"
 //!   "rounds": 10,                      // optional, default 10
 //!   "tag": {
+//!     "flavor": "sync",                // optional program-binding hint:
+//!                                      // sync|coordinated|hybrid|async|distributed
+//!                                      // (inferred from the TAG shape when absent,
+//!                                      // with a spec-lint warning)
 //!     "roles": [{
 //!       "name": "trainer",             // required
 //!       "replica": 1,                  // optional; workers per association entry
 //!       "isDataConsumer": true,        // optional; one worker per dataset
 //!       "groupAssociation": [          // optional; {channel -> group} entries
 //!         {"param-channel": "group0"}
-//!       ]
+//!       ],
+//!       "program": "fedprox-trainer"   // optional; binds the role to a program
+//!                                      // registered in the job's RoleRegistry
+//!                                      // (default: the registry's (role, flavor)
+//!                                      // binding)
 //!     }],
 //!     "channels": [{
 //!       "name": "param-channel",       // required
@@ -86,6 +94,53 @@ use crate::json::Json;
 pub use delta::{TagDelta, TopologyEvent, WorkerDelta};
 pub use expand::{expand, WorkerConfig};
 
+/// Topology flavour — the spec-level hint (`tag.flavor`) that drives the
+/// default role↔program binding in the
+/// [`RoleRegistry`](crate::roles::RoleRegistry).
+///
+/// A spec that omits it keeps working: the flavour is inferred from the
+/// TAG's shape at validate time ([`validate::infer_flavor`]) and surfaced
+/// as a spec-lint warning, so binding is always declared-or-derived in one
+/// place rather than sniffed from magic channel names at dispatch time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Flavor {
+    /// Plain synchronous FL (classical or hierarchical).
+    Sync,
+    /// CO-FL (§6.1): a coordinator assigns work and owns termination.
+    Coordinated,
+    /// Hybrid FL (§6.2): cluster rings plus delegate uploads.
+    Hybrid,
+    /// Asynchronous (FedBuff) aggregation.
+    Async,
+    /// Distributed all-reduce: one self-paired role, no aggregator.
+    Distributed,
+}
+
+impl Flavor {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sync" | "synchronous" => Flavor::Sync,
+            "coordinated" => Flavor::Coordinated,
+            "hybrid" => Flavor::Hybrid,
+            "async" | "asynchronous" => Flavor::Async,
+            "distributed" => Flavor::Distributed,
+            other => bail!(
+                "unknown flavor '{other}' (sync|coordinated|hybrid|async|distributed)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Flavor::Sync => "sync",
+            Flavor::Coordinated => "coordinated",
+            Flavor::Hybrid => "hybrid",
+            Flavor::Async => "async",
+            Flavor::Distributed => "distributed",
+        }
+    }
+}
+
 /// One vertex of the TAG: an executable worker unit bound to a program.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Role {
@@ -100,6 +155,11 @@ pub struct Role {
     /// created per entry for non-consumers, and entries are matched by
     /// dataset group for consumers.
     pub group_association: Vec<BTreeMap<String, String>>,
+    /// The §4.1 role↔program binding, declared in the spec: the name of a
+    /// program registered in the job's
+    /// [`RoleRegistry`](crate::roles::RoleRegistry). `None` selects the
+    /// registry's default binding for `(role name, flavor)`.
+    pub program: Option<String>,
 }
 
 /// One edge of the TAG: links a pair of roles over a communication backend.
@@ -144,6 +204,9 @@ pub struct JobSpec {
     /// joins/leaves/tier extensions, fired once the job's virtual clock
     /// passes each event's `at_us`. See [`delta::TopologyEvent`].
     pub events: Vec<TopologyEvent>,
+    /// Declared topology flavour (`tag.flavor`); `None` defers to
+    /// validate-time inference ([`validate::infer_flavor`]).
+    pub flavor: Option<Flavor>,
 }
 
 impl JobSpec {
@@ -167,6 +230,15 @@ impl JobSpec {
         let rounds = j.get("rounds").as_i64().unwrap_or(10) as u64;
 
         let tag = j.get("tag");
+        let flavor_j = tag.get("flavor");
+        let flavor = if flavor_j.is_null() {
+            None
+        } else {
+            // present but non-string must be a hard error, not a silent
+            // fall-through to inference
+            let s = flavor_j.as_str().context("tag.flavor must be a string")?;
+            Some(Flavor::parse(s)?)
+        };
         let mut roles = Vec::new();
         for (i, r) in tag
             .get("roles")
@@ -211,7 +283,15 @@ impl JobSpec {
             datasets,
             hyper: j.get("hyper").clone(),
             events,
+            flavor,
         })
+    }
+
+    /// The spec's topology flavour: the declared `tag.flavor`, or — when
+    /// the spec omits it — the shape-derived default
+    /// ([`validate::infer_flavor`]).
+    pub fn resolved_flavor(&self) -> Flavor {
+        self.flavor.unwrap_or_else(|| validate::infer_flavor(self))
     }
 
     pub fn role(&self, name: &str) -> Option<&Role> {
@@ -248,6 +328,9 @@ impl JobSpec {
         o.insert("model", self.model.as_str());
         o.insert("rounds", self.rounds);
         let mut tag = Json::obj();
+        if let Some(f) = self.flavor {
+            tag.insert("flavor", f.name());
+        }
         tag.insert(
             "roles",
             Json::Arr(self.roles.iter().map(role_to_json).collect()),
@@ -308,11 +391,25 @@ pub(crate) fn parse_role(j: &Json) -> Result<Role> {
         // the "default" group of each of its channels (resolved later).
         group_association.push(BTreeMap::new());
     }
+    let program_j = j.get("program");
+    let program = if program_j.is_null() {
+        None
+    } else {
+        let p = program_j
+            .as_str()
+            .with_context(|| format!("role '{name}': 'program' must be a string"))?
+            .to_string();
+        if p.is_empty() {
+            bail!("role '{name}': program name must be non-empty");
+        }
+        Some(p)
+    };
     Ok(Role {
         name,
         replica,
         is_data_consumer,
         group_association,
+        program,
     })
 }
 
@@ -395,6 +492,9 @@ pub(crate) fn role_to_json(r: &Role) -> Json {
         })
         .collect();
     o.insert("groupAssociation", Json::Arr(ga));
+    if let Some(p) = &r.program {
+        o.insert("program", p.as_str());
+    }
     Json::Obj(o)
 }
 
@@ -480,6 +580,44 @@ mod tests {
             r#"{"name":"x","tag":{"roles":[],"channels":[{"name":"c","pair":["a"]}]}}"#
         )
         .is_err()); // pair len 1
+    }
+
+    #[test]
+    fn flavor_and_program_roundtrip_via_json() {
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.flavor = Some(Flavor::Sync);
+        spec.roles[0].program = Some("fedprox-trainer".into());
+        let back = JobSpec::parse(&spec.to_json().pretty()).unwrap();
+        assert_eq!(back.flavor, Some(Flavor::Sync));
+        assert_eq!(back.roles[0].program.as_deref(), Some("fedprox-trainer"));
+        // absent fields stay absent
+        let plain = topo::classical(2, Backend::P2p).build();
+        let back = JobSpec::parse(&plain.to_json().pretty()).unwrap();
+        assert_eq!(back.flavor, None);
+        assert!(back.roles.iter().all(|r| r.program.is_none()));
+    }
+
+    #[test]
+    fn bad_flavor_and_empty_program_rejected() {
+        assert!(JobSpec::parse(
+            r#"{"name":"x","tag":{"flavor":"quantum","roles":[{"name":"r"}],"channels":[]}}"#
+        )
+        .is_err());
+        assert!(JobSpec::parse(
+            r#"{"name":"x","tag":{"roles":[{"name":"r","program":""}],"channels":[]}}"#
+        )
+        .is_err());
+        // present-but-wrong-typed values are hard errors, not silent skips
+        assert!(JobSpec::parse(
+            r#"{"name":"x","tag":{"flavor":5,"roles":[{"name":"r"}],"channels":[]}}"#
+        )
+        .is_err());
+        assert!(JobSpec::parse(
+            r#"{"name":"x","tag":{"roles":[{"name":"r","program":5}],"channels":[]}}"#
+        )
+        .is_err());
+        assert!(Flavor::parse("hybrid").is_ok());
+        assert_eq!(Flavor::parse("coordinated").unwrap().name(), "coordinated");
     }
 
     #[test]

@@ -1,15 +1,63 @@
-//! TAG validation: the `PreCheck` / `PostCheck` of Algorithm 1.
+//! TAG validation: the `PreCheck` / `PostCheck` of Algorithm 1, plus the
+//! flavour resolution that feeds the role↔program binding.
 //!
 //! `PreCheck` validates the logical graph before expansion (structural
-//! sanity of roles/channels/attributes); `PostCheck` validates the expanded
-//! physical deployment (connectivity of every channel group, id uniqueness,
-//! dataset binding).
+//! sanity of roles/channels/attributes, flavour consistency); `PostCheck`
+//! validates the expanded physical deployment (connectivity of every
+//! channel group, id uniqueness, dataset binding). [`infer_flavor`]
+//! derives a default [`Flavor`] for specs that do not declare one —
+//! binding decisions happen *here*, at validate time, never by sniffing
+//! channel names at dispatch time — and [`lint`] surfaces the non-fatal
+//! findings the control plane streams as
+//! [`EventKind::SpecLint`](crate::notify::EventKind::SpecLint) events.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
 
 use anyhow::{bail, Result};
 
-use super::{JobSpec, WorkerConfig};
+use super::{Flavor, JobSpec, WorkerConfig};
+
+/// Infer the topology flavour from the TAG's shape. These are exactly the
+/// legacy dispatch-time heuristics of the old `roles::build_program`,
+/// relocated to validate time so the spec's binding is fixed before any
+/// worker exists:
+///
+/// * a `coordinator` role ⇒ [`Flavor::Coordinated`] (CO-FL, §6.1),
+/// * a `ring-channel` next to a `global-aggregator` ⇒ [`Flavor::Hybrid`]
+///   (cluster rings + delegate uploads, §6.2),
+/// * a single (self-paired) role ⇒ [`Flavor::Distributed`],
+/// * `hyper.aggregation: fedbuff` ⇒ [`Flavor::Async`],
+/// * anything else ⇒ [`Flavor::Sync`].
+pub fn infer_flavor(spec: &JobSpec) -> Flavor {
+    let aggregation = spec.hyper.get("aggregation").as_str();
+    if spec.role("coordinator").is_some() {
+        Flavor::Coordinated
+    } else if spec.channel("ring-channel").is_some() && spec.role("global-aggregator").is_some() {
+        Flavor::Hybrid
+    } else if spec.roles.len() == 1 {
+        Flavor::Distributed
+    } else if matches!(aggregation, Some("fedbuff") | Some("async")) {
+        Flavor::Async
+    } else {
+        Flavor::Sync
+    }
+}
+
+/// Non-fatal spec findings. The control plane emits one
+/// [`EventKind::SpecLint`](crate::notify::EventKind::SpecLint) event per
+/// entry at submit.
+pub fn lint(spec: &JobSpec) -> Vec<String> {
+    let mut warnings = Vec::new();
+    if spec.flavor.is_none() {
+        warnings.push(format!(
+            "spec '{}' declares no tag.flavor; inferred '{}' from the TAG shape — \
+             declare it explicitly to pin the role\u{2194}program binding",
+            spec.name,
+            infer_flavor(spec).name()
+        ));
+    }
+    warnings
+}
 
 /// Structural validation of the logical TAG (Algorithm 1 line 3).
 pub fn pre_check(spec: &JobSpec) -> Result<()> {
@@ -76,6 +124,72 @@ pub fn pre_check(spec: &JobSpec) -> Result<()> {
                 r.name
             );
         }
+    }
+    // Flavour consistency. Declaration-vs-spec checks apply only when the
+    // spec declares a flavour; the program-precondition (shape) checks run
+    // on the *resolved* flavour — declared or inferred — so a binding
+    // whose channels can't exist fails here, at submit, never in pods.
+    if let Some(declared) = spec.flavor {
+        if declared == Flavor::Coordinated && spec.role("coordinator").is_none() {
+            bail!("flavor 'coordinated' requires a 'coordinator' role");
+        }
+        if declared != Flavor::Coordinated && spec.role("coordinator").is_some() {
+            bail!(
+                "TAG has a 'coordinator' role but declares flavor '{}'; \
+                 coordinated specs must declare (or infer) flavor 'coordinated'",
+                declared.name()
+            );
+        }
+        // the declared flavour must agree with the aggregation policy:
+        // execution keys off hyper.aggregation, so a contradiction would
+        // silently run the other protocol
+        let async_hyper = matches!(
+            spec.hyper.get("aggregation").as_str(),
+            Some("fedbuff") | Some("async")
+        );
+        if declared == Flavor::Async && !async_hyper {
+            bail!("flavor 'async' requires hyper.aggregation \"fedbuff\"");
+        }
+        if async_hyper && declared != Flavor::Async {
+            bail!(
+                "hyper.aggregation \"fedbuff\" contradicts declared flavor '{}'; \
+                 declare flavor 'async' (or omit it and let inference pick)",
+                declared.name()
+            );
+        }
+    }
+    let resolved = spec.resolved_flavor();
+    if matches!(resolved, Flavor::Hybrid | Flavor::Distributed) {
+        // the built-in ring programs join the channel by this exact
+        // name, so a looser check would pass submit and fail pods
+        let ring_ok = spec
+            .channel("ring-channel")
+            .map(|c| c.pair.0 == c.pair.1)
+            .unwrap_or(false);
+        if !ring_ok {
+            bail!(
+                "flavor '{}' requires a self-paired channel named 'ring-channel' \
+                 (the ring the built-in programs join)",
+                resolved.name()
+            );
+        }
+    }
+    if resolved == Flavor::Hybrid
+        && (spec.role("global-aggregator").is_none()
+            || spec.channel("param-channel").is_none())
+    {
+        // the hybrid trainer uploads to the global over this channel;
+        // without them every trainer pod would fail at its first fetch
+        bail!(
+            "flavor 'hybrid' requires a 'global-aggregator' role and a \
+             'param-channel' upload channel"
+        );
+    }
+    if resolved == Flavor::Distributed && spec.roles.len() != 1 {
+        bail!(
+            "flavor 'distributed' requires a single self-paired role \
+             (no aggregator tier; other roles would run unrelated protocols)"
+        );
     }
     // a data consumer must exist iff datasets are declared
     let has_consumer = spec.roles.iter().any(|r| r.is_data_consumer);
@@ -172,6 +286,133 @@ mod tests {
                 .unwrap_or_else(|e| panic!("{}: {e:#}", spec.name));
             assert!(!w.is_empty());
         }
+    }
+
+    #[test]
+    fn flavor_inference_matches_template_shapes() {
+        use crate::json::Json;
+        assert_eq!(
+            infer_flavor(&topo::classical(4, Backend::P2p).build()),
+            Flavor::Sync
+        );
+        assert_eq!(
+            infer_flavor(&topo::hierarchical(4, 2, Backend::P2p).build()),
+            Flavor::Sync
+        );
+        assert_eq!(
+            infer_flavor(&topo::coordinated(10, 2, Backend::P2p).build()),
+            Flavor::Coordinated
+        );
+        assert_eq!(
+            infer_flavor(&topo::hybrid(10, 5, Backend::Broker, Backend::P2p).build()),
+            Flavor::Hybrid
+        );
+        assert_eq!(
+            infer_flavor(&topo::distributed(4, Backend::P2p).build()),
+            Flavor::Distributed
+        );
+        let async_spec = topo::classical(3, Backend::P2p)
+            .set("aggregation", "fedbuff")
+            .set("buffer_k", Json::from(2usize))
+            .build();
+        assert_eq!(infer_flavor(&async_spec), Flavor::Async);
+    }
+
+    #[test]
+    fn declared_flavor_mismatches_rejected() {
+        // coordinated without a coordinator role
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.flavor = Some(Flavor::Coordinated);
+        assert!(pre_check(&spec).is_err());
+        // a coordinator role with a non-coordinated declaration
+        let mut spec = topo::coordinated(4, 2, Backend::P2p).build();
+        spec.flavor = Some(Flavor::Sync);
+        assert!(pre_check(&spec).is_err());
+        // hybrid/distributed need a ring
+        for f in [Flavor::Hybrid, Flavor::Distributed] {
+            let mut spec = topo::classical(2, Backend::P2p).build();
+            spec.flavor = Some(f);
+            assert!(pre_check(&spec).is_err(), "{f:?}");
+        }
+        // ...and specifically one NAMED 'ring-channel': the built-in ring
+        // programs join it by name, so a renamed ring must fail at submit
+        let mut spec = topo::hybrid(10, 5, Backend::Broker, Backend::P2p).build();
+        spec.flavor = Some(Flavor::Hybrid);
+        let ring = spec
+            .channels
+            .iter_mut()
+            .find(|c| c.name == "ring-channel")
+            .unwrap();
+        ring.name = "cluster-ring".into();
+        for r in &mut spec.roles {
+            for ga in &mut r.group_association {
+                if let Some(g) = ga.remove("ring-channel") {
+                    ga.insert("cluster-ring".into(), g);
+                }
+            }
+        }
+        assert!(pre_check(&spec).is_err());
+        // distributed on a multi-role TAG deploys workers the ring
+        // protocol never talks to — rejected
+        let mut spec = topo::hybrid(10, 5, Backend::Broker, Backend::P2p).build();
+        spec.flavor = Some(Flavor::Distributed);
+        assert!(pre_check(&spec).is_err());
+        // async must agree with hyper.aggregation, both ways
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.flavor = Some(Flavor::Async);
+        assert!(pre_check(&spec).is_err(), "async without fedbuff");
+        let mut spec = topo::classical(2, Backend::P2p)
+            .set("aggregation", "fedbuff")
+            .build();
+        spec.flavor = Some(Flavor::Sync);
+        assert!(pre_check(&spec).is_err(), "fedbuff declared sync");
+        // consistent declarations pass
+        let mut spec = topo::hybrid(10, 5, Backend::Broker, Backend::P2p).build();
+        spec.flavor = Some(Flavor::Hybrid);
+        pre_check(&spec).unwrap();
+        let mut spec = topo::distributed(4, Backend::P2p).build();
+        spec.flavor = Some(Flavor::Distributed);
+        pre_check(&spec).unwrap();
+        let mut spec = topo::classical(2, Backend::P2p)
+            .set("aggregation", "fedbuff")
+            .build();
+        spec.flavor = Some(Flavor::Async);
+        pre_check(&spec).unwrap();
+    }
+
+    #[test]
+    fn inferred_flavor_shape_checks_fail_at_submit_not_in_pods() {
+        // a single-role spec whose self-pair channel is NOT named
+        // 'ring-channel': inference still picks Distributed, and the
+        // distributed trainer would fail joining the missing ring in
+        // every pod — pre_check must reject it up front
+        let mut spec = topo::distributed(4, Backend::P2p).build();
+        for c in &mut spec.channels {
+            c.name = "mesh".into();
+        }
+        for r in &mut spec.roles {
+            for ga in &mut r.group_association {
+                if let Some(g) = ga.remove("ring-channel") {
+                    ga.insert("mesh".into(), g);
+                }
+            }
+        }
+        assert_eq!(infer_flavor(&spec), Flavor::Distributed);
+        assert!(pre_check(&spec).is_err());
+        // the properly-named template still passes
+        pre_check(&topo::distributed(4, Backend::P2p).build()).unwrap();
+    }
+
+    #[test]
+    fn lint_flags_missing_flavor_only() {
+        let spec = topo::classical(2, Backend::P2p).build();
+        let warnings = lint(&spec);
+        assert_eq!(warnings.len(), 1);
+        assert!(warnings[0].contains("tag.flavor"), "{warnings:?}");
+        assert!(warnings[0].contains("sync"), "{warnings:?}");
+        let mut spec = topo::classical(2, Backend::P2p).build();
+        spec.flavor = Some(Flavor::Sync);
+        assert!(lint(&spec).is_empty());
     }
 
     #[test]

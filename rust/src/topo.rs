@@ -111,12 +111,14 @@ pub fn classical(n_trainers: usize, backend: Backend) -> TopoBuilder {
                 replica: 1,
                 is_data_consumer: true,
                 group_association: ga(&[&[("param-channel", "default")]]),
+                program: None,
             },
             Role {
                 name: "global-aggregator".into(),
                 replica: 1,
                 is_data_consumer: false,
                 group_association: ga(&[&[("param-channel", "default")]]),
+                program: None,
             },
         ],
         channels: vec![channel(
@@ -132,6 +134,7 @@ pub fn classical(n_trainers: usize, backend: Backend) -> TopoBuilder {
         datasets: datasets(n_trainers, |_| "default".into()),
         hyper: Json::Null,
         events: Vec::new(),
+        flavor: None,
     };
     TopoBuilder { spec }
 }
@@ -169,18 +172,21 @@ pub fn hierarchical(n_trainers: usize, n_groups: usize, backend: Backend) -> Top
                 replica: 1,
                 is_data_consumer: true,
                 group_association: trainer_ga,
+                program: None,
             },
             Role {
                 name: "aggregator".into(),
                 replica: 1,
                 is_data_consumer: false,
                 group_association: agg_ga,
+                program: None,
             },
             Role {
                 name: "global-aggregator".into(),
                 replica: 1,
                 is_data_consumer: false,
                 group_association: ga(&[&[("agg-channel", "default")]]),
+                program: None,
             },
         ],
         channels: vec![
@@ -208,6 +214,7 @@ pub fn hierarchical(n_trainers: usize, n_groups: usize, backend: Backend) -> Top
         datasets: datasets(n_trainers, |i| format!("group{}", i % n_groups)),
         hyper: Json::Null,
         events: Vec::new(),
+        flavor: None,
     };
     TopoBuilder { spec }
 }
@@ -229,6 +236,7 @@ pub fn coordinated(n_trainers: usize, n_aggregators: usize, backend: Backend) ->
                     ("param-channel", "default"),
                     ("coord-t-channel", "default"),
                 ]]),
+                program: None,
             },
             Role {
                 name: "aggregator".into(),
@@ -239,6 +247,7 @@ pub fn coordinated(n_trainers: usize, n_aggregators: usize, backend: Backend) ->
                     ("agg-channel", "default"),
                     ("coord-a-channel", "default"),
                 ]]),
+                program: None,
             },
             Role {
                 name: "global-aggregator".into(),
@@ -248,6 +257,7 @@ pub fn coordinated(n_trainers: usize, n_aggregators: usize, backend: Backend) ->
                     ("agg-channel", "default"),
                     ("coord-g-channel", "default"),
                 ]]),
+                program: None,
             },
             Role {
                 name: "coordinator".into(),
@@ -258,6 +268,7 @@ pub fn coordinated(n_trainers: usize, n_aggregators: usize, backend: Backend) ->
                     ("coord-a-channel", "default"),
                     ("coord-g-channel", "default"),
                 ]]),
+                program: None,
             },
         ],
         channels: vec![
@@ -309,6 +320,7 @@ pub fn coordinated(n_trainers: usize, n_aggregators: usize, backend: Backend) ->
         datasets: datasets(n_trainers, |_| "default".into()),
         hyper: Json::Null,
         events: Vec::new(),
+        flavor: None,
     };
     TopoBuilder { spec }
 }
@@ -344,12 +356,14 @@ pub fn hybrid(
                 replica: 1,
                 is_data_consumer: true,
                 group_association: trainer_ga,
+                program: None,
             },
             Role {
                 name: "global-aggregator".into(),
                 replica: 1,
                 is_data_consumer: false,
                 group_association: ga(&[&[("param-channel", "default")]]),
+                program: None,
             },
         ],
         channels: vec![
@@ -374,6 +388,7 @@ pub fn hybrid(
         datasets: datasets(n_trainers, |i| format!("group{}", i % n_groups)),
         hyper: Json::Null,
         events: Vec::new(),
+        flavor: None,
     };
     TopoBuilder { spec }
 }
@@ -390,6 +405,7 @@ pub fn distributed(n_trainers: usize, backend: Backend) -> TopoBuilder {
             replica: 1,
             is_data_consumer: true,
             group_association: ga(&[&[("ring-channel", "default")]]),
+            program: None,
         }],
         channels: vec![channel(
             "ring-channel",
@@ -401,6 +417,7 @@ pub fn distributed(n_trainers: usize, backend: Backend) -> TopoBuilder {
         datasets: datasets(n_trainers, |_| "default".into()),
         hyper: Json::Null,
         events: Vec::new(),
+        flavor: None,
     };
     TopoBuilder { spec }
 }

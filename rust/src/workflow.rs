@@ -486,6 +486,118 @@ mod tests {
         assert_eq!(ch.aliases(), vec!["tick", "count"]);
     }
 
+    /// Epochs × batches — the nested-loop shape of a local-training body.
+    /// The target tasklet (`batch`) sits inside the INNER `Node::Loop`.
+    #[derive(Default)]
+    struct NestedCtx {
+        epochs: usize,
+        batches: usize,
+        log: Vec<&'static str>,
+    }
+
+    fn nested_chain() -> Composer<NestedCtx> {
+        Composer::new().loop_until(
+            |c: &NestedCtx| c.epochs >= 2,
+            Composer::new()
+                .task("reset", |c: &mut NestedCtx| {
+                    c.batches = 0;
+                    c.log.push("reset");
+                    Ok(())
+                })
+                .loop_until(
+                    |c: &NestedCtx| c.batches >= 2,
+                    Composer::new().task("batch", |c: &mut NestedCtx| {
+                        c.batches += 1;
+                        c.log.push("batch");
+                        Ok(())
+                    }),
+                )
+                .task("end_epoch", |c: &mut NestedCtx| {
+                    c.epochs += 1;
+                    c.log.push("end_epoch");
+                    Ok(())
+                }),
+        )
+    }
+
+    #[test]
+    fn insert_before_targets_tasklet_inside_nested_loop() {
+        let mut ch = nested_chain();
+        ch.insert_before("batch", Tasklet::new("pre", |c: &mut NestedCtx| {
+            c.log.push("pre");
+            Ok(())
+        }))
+        .unwrap();
+        assert_eq!(ch.aliases(), vec!["reset", "pre", "batch", "end_epoch"]);
+        let mut ctx = NestedCtx::default();
+        ch.run(&mut ctx).unwrap();
+        // 2 epochs x 2 batches: every batch is preceded by pre, in place
+        assert_eq!(
+            ctx.log,
+            vec![
+                "reset", "pre", "batch", "pre", "batch", "end_epoch", "reset", "pre",
+                "batch", "pre", "batch", "end_epoch"
+            ]
+        );
+    }
+
+    #[test]
+    fn replace_with_targets_tasklet_inside_nested_loop() {
+        let mut ch = nested_chain();
+        ch.replace_with("batch", Tasklet::new("batch2", |c: &mut NestedCtx| {
+            c.batches += 1;
+            c.log.push("batch2");
+            Ok(())
+        }))
+        .unwrap();
+        assert_eq!(ch.aliases(), vec!["reset", "batch2", "end_epoch"]);
+        let mut ctx = NestedCtx::default();
+        ch.run(&mut ctx).unwrap();
+        assert!(ctx.log.contains(&"batch2"));
+        assert!(!ctx.log.contains(&"batch"));
+        assert_eq!(ctx.epochs, 2);
+    }
+
+    #[test]
+    fn remove_targets_tasklet_inside_nested_loop() {
+        // the inner loop's body keeps a second tasklet (`tick`) so the
+        // loop still executes — and terminates — after `doomed` is
+        // removed, making the "never ran" assertion real coverage
+        #[derive(Default)]
+        struct C {
+            outer: usize,
+            inner_ticks: usize,
+            doomed_ran: bool,
+        }
+        let mut ch: Composer<C> = Composer::new().loop_until(
+            |c: &C| c.outer >= 2,
+            Composer::new()
+                .task("advance", |c: &mut C| {
+                    c.outer += 1;
+                    Ok(())
+                })
+                .loop_until(
+                    |c: &C| c.inner_ticks >= c.outer, // one pass per outer turn
+                    Composer::new()
+                        .task("doomed", |c: &mut C| {
+                            c.doomed_ran = true;
+                            Ok(())
+                        })
+                        .task("tick", |c: &mut C| {
+                            c.inner_ticks += 1;
+                            Ok(())
+                        }),
+                ),
+        );
+        assert_eq!(ch.aliases(), vec!["advance", "doomed", "tick"]);
+        ch.remove("doomed").unwrap();
+        assert_eq!(ch.aliases(), vec!["advance", "tick"]);
+        let mut ctx = C::default();
+        ch.run(&mut ctx).unwrap();
+        assert!(!ctx.doomed_ran, "removed tasklet still executed");
+        assert_eq!(ctx.inner_ticks, 2, "inner loop body really ran");
+    }
+
     #[test]
     fn step_from_resumes_at_yielding_tasklet_inside_loop() {
         // A "recv"-like tasklet that yields Pending twice per round before

@@ -112,6 +112,33 @@ fn churn_live_extension_smoke() {
 }
 
 #[test]
+fn roles_lists_builtin_programs_with_flavors() {
+    let (ok, stdout, stderr) = flame(&["roles"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("program,role,flavor"), "{stdout}");
+    assert!(stdout.contains("trainer,trainer,"), "{stdout}");
+    assert!(
+        stdout.contains("coordinated-trainer,trainer,coordinated"),
+        "{stdout}"
+    );
+    assert!(stdout.contains("hybrid-trainer,trainer,hybrid"), "{stdout}");
+    // expect_flags applies: roles takes no options
+    let (ok, _, stderr) = flame(&["roles", "--verbose", "yes"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown flag '--verbose'"), "{stderr}");
+}
+
+#[test]
+fn fedprox_smoke_runs_the_sdk_program() {
+    let (ok, stdout, stderr) = flame(&[
+        "fedprox", "--trainers", "3", "--rounds", "2", "--per-shard", "24", "--test-n", "48",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("fedprox: workers=4"), "{stdout}");
+    assert!(stdout.contains("accuracy:"), "{stdout}");
+}
+
+#[test]
 fn scale_smoke_on_the_cooperative_fabric() {
     let (ok, stdout, stderr) = flame(&[
         "scale", "--trainers", "60", "--groups", "6", "--rounds", "2",

@@ -50,6 +50,7 @@ fn panicking_worker_is_contained_by_the_agent_sandbox() {
     let compute: Arc<dyn flame::runtime::Compute> =
         Arc::new(flame::runtime::MockCompute::new(64, 8, 4));
     let (_, test) = flame::data::make_federated(0, 1, 16, 16, flame::data::Partition::Iid, 0.5);
+    let flavor = spec.resolved_flavor();
     let job = Arc::new(JobRuntime {
         spec,
         chan_mgr: flame::channel::ChannelManager::new(Arc::new(
@@ -63,6 +64,8 @@ fn panicking_worker_is_contained_by_the_agent_sandbox() {
         time_model: flame::runtime::ComputeTimeModel::Free,
         init_flat: Arc::new(vec![0.0; compute.d_pad()]),
         timeline: flame::deploy::TopologyTimeline::empty(),
+        programs: Arc::new(flame::roles::RoleRegistry::builtin()),
+        flavor,
     });
     let trainer_cfg = cfgs.iter().find(|c| c.role == "trainer").unwrap().clone();
     // env build fails at shard resolution inside the trainer program build

@@ -1,0 +1,323 @@
+//! Role SDK end to end: registry dispatch parity with the old hardcoded
+//! `build_program`, spec-declared bindings, lint events, and the FedProx
+//! custom program's determinism across runner pools.
+
+use std::sync::Arc;
+
+use flame::channel::Backend;
+use flame::control::{Controller, Executor, JobOptions, JobReport};
+use flame::json::Json;
+use flame::notify::EventKind;
+use flame::registry::Registry;
+use flame::roles::sdk::{chain_program, trainer_chain, Tasklet, TrainerCtx};
+use flame::roles::{ProgramFactory, RoleRegistry};
+use flame::sim::{self, SimOptions};
+use flame::store::Store;
+use flame::tag::{expand, JobSpec};
+use flame::topo;
+
+/// The retired `build_program` heuristic, reimplemented verbatim as the
+/// parity oracle: role-name match + magic-name topology sniffing.
+fn legacy_program(spec: &JobSpec, role: &str) -> &'static str {
+    let coordinated = spec.role("coordinator").is_some();
+    let hybrid =
+        spec.channel("ring-channel").is_some() && spec.role("global-aggregator").is_some();
+    match role {
+        "trainer" if hybrid => "hybrid-trainer",
+        "trainer" if spec.roles.len() == 1 => "distributed-trainer",
+        "trainer" if coordinated => "coordinated-trainer",
+        "trainer" => "trainer",
+        "aggregator" if coordinated => "coordinated-aggregator",
+        "aggregator" => "aggregator",
+        "global-aggregator" if coordinated => "coordinated-global-aggregator",
+        "global-aggregator" => "global-aggregator",
+        "coordinator" => "coordinator",
+        other => panic!("legacy dispatch had no program for role '{other}'"),
+    }
+}
+
+/// For every shipped spec, the registry must select exactly the program
+/// the old hardcoded dispatch would have built — via flavor inference for
+/// specs that don't declare bindings, and via the `program:` field for
+/// those that do (fedprox.json).
+#[test]
+fn registry_dispatch_matches_legacy_for_every_example_spec() {
+    let reg = RoleRegistry::builtin();
+    let mut checked_specs = 0;
+    let mut checked_overrides = 0;
+    for entry in std::fs::read_dir("examples/specs").unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let spec = JobSpec::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let flavor = spec.resolved_flavor();
+        let workers = expand(&spec, &Registry::single_box()).unwrap();
+        for w in &workers {
+            let binding = reg.resolve(&spec, flavor, &w.role);
+            let declared = spec.role(&w.role).unwrap().program.clone();
+            match declared {
+                Some(p) => {
+                    // spec-declared binding wins; resolution only needs the
+                    // program registered (fedprox.json's is job-local)
+                    checked_overrides += 1;
+                    match binding {
+                        Ok(b) => assert_eq!(b.program, p),
+                        Err(e) => assert!(
+                            format!("{e:#}").contains("not registered"),
+                            "{}: {e:#}",
+                            path.display()
+                        ),
+                    }
+                }
+                None => {
+                    let b = binding
+                        .unwrap_or_else(|e| panic!("{} / {}: {e:#}", path.display(), w.id));
+                    assert_eq!(
+                        b.program,
+                        legacy_program(&spec, &w.role),
+                        "{} / {}",
+                        path.display(),
+                        w.id
+                    );
+                }
+            }
+        }
+        checked_specs += 1;
+    }
+    assert!(checked_specs >= 6, "expected >=6 example specs");
+    assert!(checked_overrides >= 1, "fedprox.json must declare a binding");
+}
+
+/// Flavor inference also drives dispatch on the template builders — the
+/// same topologies the old heuristics were written for.
+#[test]
+fn template_builders_resolve_like_legacy() {
+    let reg = RoleRegistry::builtin();
+    for spec in [
+        topo::classical(4, Backend::P2p).build(),
+        topo::hierarchical(6, 2, Backend::Broker).build(),
+        topo::coordinated(6, 2, Backend::P2p).build(),
+        topo::hybrid(10, 2, Backend::Broker, Backend::P2p).build(),
+        topo::distributed(4, Backend::P2p).build(),
+    ] {
+        let flavor = spec.resolved_flavor();
+        for role in &spec.roles {
+            let b = reg.resolve(&spec, flavor, &role.name).unwrap();
+            assert_eq!(
+                b.program,
+                legacy_program(&spec, &role.name),
+                "{} / {}",
+                spec.name,
+                role.name
+            );
+        }
+    }
+}
+
+fn fedprox_opts(runners: usize) -> SimOptions {
+    let mut o = SimOptions::mock();
+    o.per_shard = 24;
+    o.test_n = 48;
+    o.local_steps = 1;
+    o.executor = Executor::Cooperative { runners };
+    o
+}
+
+/// Full-precision rendering of everything a FedProx report exposes; any
+/// nondeterminism across runner-pool sizes shows up as a byte diff.
+/// `trainer_loss` is recorded concurrently by every trainer, so only its
+/// per-round *multiset* is deterministic — sort it fully before
+/// rendering (the global-sequenced series are ordered already).
+fn render(r: &JobReport) -> String {
+    let mut trainer_loss = r.metrics.series("trainer_loss");
+    trainer_loss.sort_by(|a, b| (a.0, a.1.to_bits()).cmp(&(b.0, b.1.to_bits())));
+    format!(
+        "workers={} acc={:?} loss={:?} vtime={:?} trainer_loss={:?} bytes={} final={:?}/{:?}",
+        r.workers,
+        r.metrics.series("acc"),
+        r.metrics.series("loss"),
+        r.metrics.series("vtime_s"),
+        trainer_loss,
+        r.total_bytes,
+        r.final_acc,
+        r.final_loss,
+    )
+}
+
+/// Acceptance: the custom-program job is byte-deterministic across
+/// runner-pool sizes (1, 2, 4 runners drive identical virtual execution).
+#[test]
+fn fedprox_report_is_byte_deterministic_across_runner_pools() {
+    let base = render(&sim::run_fedprox(4, 3, 0.1, &fedprox_opts(1)).unwrap());
+    for runners in [2, 4] {
+        let other = render(&sim::run_fedprox(4, 3, 0.1, &fedprox_opts(runners)).unwrap());
+        assert_eq!(base, other, "fedprox diverges at {runners} runners");
+    }
+}
+
+/// A spec that names an unregistered program fails at submit (binding is
+/// resolved at prepare), with the registered set in the error.
+#[test]
+fn unregistered_program_fails_at_submit() {
+    let mut spec = topo::classical(2, Backend::P2p).rounds(1).build();
+    spec.roles[0].program = Some("no-such-program".into());
+    let err = Controller::new(Arc::new(Store::in_memory()))
+        .submit(spec, JobOptions::mock())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no-such-program"), "{msg}");
+    assert!(msg.contains("not registered"), "{msg}");
+}
+
+/// Binding resolution covers roles introduced by live-extension deltas
+/// too: an unbound program in an `Extend` event's delta must fail the
+/// submission, not a pod mid-run.
+#[test]
+fn unbound_program_in_extend_delta_fails_at_submit() {
+    let spec = topo::classical(4, Backend::P2p)
+        .rounds(4)
+        .set("lr", Json::Num(0.5))
+        .build();
+    let mut delta = flame::tag::delta::add_tier_delta(&spec, 1).unwrap();
+    delta
+        .add_roles
+        .iter_mut()
+        .find(|r| r.name == "aggregator")
+        .unwrap()
+        .program = Some("ghost-aggregator".into());
+    let events = vec![flame::tag::TopologyEvent::Extend { at_us: 1, delta }];
+    let err = Controller::new(Arc::new(Store::in_memory()))
+        .submit(spec, JobOptions::mock().with_events(events))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("ghost-aggregator"), "{msg}");
+    assert!(msg.contains("not registered"), "{msg}");
+}
+
+/// Missing `tag.flavor` streams a SpecLint event (inference still runs
+/// the job); a declared flavor stays silent.
+#[test]
+fn missing_flavor_lints_but_runs() {
+    let mut ctl = Controller::new(Arc::new(Store::in_memory()));
+    let rx = ctl.notifier().subscribe(Some(EventKind::SpecLint), None);
+    let spec = topo::classical(2, Backend::P2p)
+        .rounds(1)
+        .set("lr", Json::Num(0.5))
+        .build();
+    ctl.submit(spec, JobOptions::mock()).unwrap();
+    let lints: Vec<String> = rx
+        .try_iter()
+        .map(|e| e.payload.as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(lints.len(), 1, "{lints:?}");
+    assert!(lints[0].contains("tag.flavor"), "{lints:?}");
+
+    let mut spec = topo::classical(2, Backend::P2p).rounds(1).build();
+    spec.flavor = Some(flame::tag::Flavor::Sync);
+    ctl.submit(spec, JobOptions::mock()).unwrap();
+    assert_eq!(rx.try_iter().count(), 0, "declared flavor must not lint");
+}
+
+/// Controller-level registration: a program registered once serves many
+/// submissions, and `bind_default` can rebind a role without any spec
+/// `program:` field.
+#[test]
+fn controller_registered_program_and_default_binding() {
+    let mut ctl = Controller::new(Arc::new(Store::in_memory()));
+    let noop_extra: ProgramFactory = Arc::new(|env, _b| {
+        let ctx = TrainerCtx::new(env)?;
+        let mut chain = trainer_chain();
+        chain.insert_after(
+            "train",
+            Tasklet::new("extra", |_c: &mut TrainerCtx| Ok(())),
+        )?;
+        Ok(chain_program(chain, ctx))
+    });
+    ctl.register_program("extra-trainer", noop_extra);
+    ctl.bind_default_program("trainer", None, "extra-trainer")
+        .unwrap();
+    let spec = topo::classical(2, Backend::P2p)
+        .rounds(2)
+        .set("lr", Json::Num(0.5))
+        .build();
+    let report = ctl.submit(spec, JobOptions::mock()).unwrap();
+    assert_eq!(report.workers, 3);
+    assert!(report.final_acc.is_some());
+}
+
+/// The fleet path enforces the same submit-time contract as the
+/// controller: an unknown program rejects the submission synchronously
+/// (with a persisted Failed state), before any admission or deploy.
+#[test]
+fn fleet_rejects_unregistered_program_at_submit() {
+    let store = Arc::new(Store::in_memory());
+    let mut m = flame::controlplane::JobManager::new(store.clone());
+    let mut spec = topo::classical(2, Backend::P2p).name("ghostly").rounds(1).build();
+    spec.roles[0].program = Some("no-such-program".into());
+    let err = m.submit(spec, JobOptions::mock()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no-such-program"), "{msg}");
+    assert!(msg.contains("not registered"), "{msg}");
+    assert_eq!(
+        store.get("job_state", "ghostly-1").unwrap().as_str(),
+        Some("failed")
+    );
+}
+
+/// ...and the fleet submit gate covers roles introduced by extend
+/// deltas too, exactly like `Controller::submit`.
+#[test]
+fn fleet_rejects_unbound_delta_program_at_submit() {
+    let mut m = flame::controlplane::JobManager::new(Arc::new(Store::in_memory()));
+    let spec = topo::classical(4, Backend::P2p)
+        .name("gdelta")
+        .rounds(4)
+        .set("lr", Json::Num(0.5))
+        .build();
+    let mut delta = flame::tag::delta::add_tier_delta(&spec, 1).unwrap();
+    delta
+        .add_roles
+        .iter_mut()
+        .find(|r| r.name == "aggregator")
+        .unwrap()
+        .program = Some("ghost-aggregator".into());
+    let events = vec![flame::tag::TopologyEvent::Extend { at_us: 1, delta }];
+    let err = m
+        .submit(spec, JobOptions::mock().with_events(events))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("ghost-aggregator"), "{msg}");
+    assert!(msg.contains("not registered"), "{msg}");
+}
+
+/// The multi-job control plane carries the same SDK: a fleet-registered
+/// custom program runs a whole job on the shared fabric.
+#[test]
+fn jobmanager_runs_fleet_registered_program() {
+    let mut m = flame::controlplane::JobManager::new(Arc::new(Store::in_memory()));
+    m.register_program("fedprox-trainer", sim::fedprox_trainer_program());
+    let mut spec = topo::classical(3, Backend::P2p)
+        .name("fp")
+        .rounds(2)
+        .set("lr", Json::Num(0.5))
+        .set("local_steps", 1usize)
+        .set("mu", Json::Num(0.1))
+        .build();
+    spec.flavor = Some(flame::tag::Flavor::Sync);
+    spec.roles
+        .iter_mut()
+        .find(|r| r.name == "trainer")
+        .unwrap()
+        .program = Some("fedprox-trainer".into());
+    let id = m
+        .submit(spec, JobOptions::mock().with_data(24, 48, flame::data::Partition::Iid, 7))
+        .unwrap();
+    let report = m.run_fleet(2).unwrap();
+    assert_eq!(report.completed, 1, "{}", report.summary());
+    assert_eq!(
+        m.job_phase(&id),
+        Some(flame::controlplane::JobPhase::Completed)
+    );
+}
