@@ -21,6 +21,7 @@ use flame::json::Json;
 use flame::runtime::ComputeTimeModel;
 use flame::store::Store;
 use flame::topo;
+use flame::alloc_track::bench_smoke as smoke;
 
 fn run(hyper: &[(&str, Json)], rounds: u64) -> (f64, f64, Option<u64>) {
     let mut ctl = Controller::new(Arc::new(Store::in_memory()));
@@ -72,7 +73,7 @@ fn main() {
     println!("{:<34} {:>10} {:>10} {:>14}", "configuration", "final loss", "final acc", "rounds to 0.6");
 
     let lr = Json::Num(0.3);
-    let cases: Vec<(&str, Vec<(&str, Json)>)> = vec![
+    let mut cases: Vec<(&str, Vec<(&str, Json)>)> = vec![
         ("FedAvg", vec![("lr", lr.clone())]),
         ("FedProx (mu=0.05)", vec![("lr", lr.clone()), ("algorithm", Json::from("fedprox")), ("mu", Json::Num(0.05))]),
         ("FedDyn (alpha=0.1)", vec![("lr", lr.clone()), ("algorithm", Json::from("feddyn")), ("alpha", Json::Num(0.1))]),
@@ -85,6 +86,9 @@ fn main() {
         ("FedAvg + DP (clip 5, sigma 1e-3)", vec![("lr", lr.clone()), ("dp_clip", Json::Num(5.0)), ("dp_sigma", Json::Num(0.001))]),
         ("FedBuff async (K=3)", vec![("lr", lr.clone()), ("aggregation", Json::from("fedbuff")), ("buffer_k", Json::from(3i64)), ("eta", Json::Num(0.7))]),
     ];
+    if smoke() {
+        cases.truncate(1); // FedAvg baseline exercises the whole pipeline
+    }
     let mut baseline_acc = 0.0;
     for (name, hyper) in &cases {
         let (loss, acc, hit) = run(hyper, rounds);

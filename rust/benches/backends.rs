@@ -16,6 +16,7 @@ use flame::net::{LinkSpec, VClock, VirtualNet};
 use flame::runtime::ComputeTimeModel;
 use flame::store::Store;
 use flame::topo;
+use flame::alloc_track::bench_smoke as smoke;
 
 fn run_topology(backend: Backend, rounds: u64) -> (f64, f64) {
     let mut ctl = Controller::new(Arc::new(Store::in_memory()));
@@ -56,19 +57,20 @@ fn micro_bench_channel(backend: Backend, msgs: usize, floats: usize) -> (f64, f6
 }
 
 fn main() {
+    let (lat_msgs, thru_msgs, rounds) = if smoke() { (200, 10, 3) } else { (2_000, 100, 8) };
     println!("channel micro-bench (send+recv roundtrip, in-process):");
     println!("{:<8} {:>12} {:>14}", "backend", "us/message", "MB/s (1MB msg)");
     for backend in [Backend::InProc, Backend::P2p, Backend::Broker] {
-        let (lat_us, _) = micro_bench_channel(backend, 2_000, 16);
-        let (_, thru) = micro_bench_channel(backend, 100, 250_000);
+        let (lat_us, _) = micro_bench_channel(backend, lat_msgs, 16);
+        let (_, thru) = micro_bench_channel(backend, thru_msgs, 250_000);
         println!("{:<8} {:>12.2} {:>14.0}", backend.name(), lat_us, thru);
     }
 
-    println!("\nsame C-FL job (16 trainers, 8 rounds) per backend:");
+    println!("\nsame C-FL job (16 trainers, {rounds} rounds) per backend:");
     println!("{:<8} {:>16} {:>12}", "backend", "virtual time (s)", "wall (s)");
     let mut results = Vec::new();
     for backend in [Backend::InProc, Backend::P2p, Backend::Broker] {
-        let (vt, wall) = run_topology(backend, 8);
+        let (vt, wall) = run_topology(backend, rounds);
         println!("{:<8} {:>16.2} {:>12.2}", backend.name(), vt, wall);
         results.push((backend, vt));
     }

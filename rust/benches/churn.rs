@@ -17,6 +17,7 @@ use std::time::Instant;
 
 use flame::control::Executor;
 use flame::sim::{run_churn, SimOptions};
+use flame::alloc_track::bench_smoke as smoke;
 
 struct Cell {
     churn: f64,
@@ -51,13 +52,18 @@ fn run_cell(trainers: usize, churn: f64, quorum: f64) -> anyhow::Result<Cell> {
 
 fn main() {
     let trainers = 40;
+    let (churns, quorums): (&[f64], &[f64]) = if smoke() {
+        (&[0.2], &[1.0])
+    } else {
+        (&[0.0, 0.1, 0.2, 0.3], &[1.0, 0.8])
+    };
     println!(
         "{:>7} {:>7} {:>9} {:>16} {:>9} {:>9}",
         "churn", "quorum", "acc", "round (vtime s)", "workers", "wall (s)"
     );
     let mut cells = Vec::new();
-    for &churn in &[0.0, 0.1, 0.2, 0.3] {
-        for &quorum in &[1.0, 0.8] {
+    for &churn in churns {
+        for &quorum in quorums {
             let c = run_cell(trainers, churn, quorum).expect("churn cell");
             println!(
                 "{:>7.2} {:>7.2} {:>9.3} {:>16.3} {:>9} {:>9.2}",

@@ -12,9 +12,10 @@
 //! Writes `bench_out/fig10.csv`.
 
 use flame::sim::{run_fig10, SimOptions};
+use flame::alloc_track::bench_smoke as smoke;
 
 fn main() {
-    let rounds = 36;
+    let rounds = if smoke() { 20 } else { 36 };
     let o = SimOptions::mock();
     let t0 = std::time::Instant::now();
     let (hfl, cofl) = run_fig10(rounds, &o).expect("fig10 scenario failed");

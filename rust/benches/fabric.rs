@@ -1,0 +1,299 @@
+//! Fabric hot-path bench: messages/second through the Table-2 API and
+//! **allocations per steady-state round**, measured with a counting global
+//! allocator.
+//!
+//! Two fabrics run the same 2-tier round loop (1 aggregator, k trainers:
+//! broadcast weights → trainers upload → streaming fold):
+//!
+//! * **legacy** — an in-bench emulation of the pre-interning fabric's
+//!   per-op allocation pattern: a `(String, String, String)` membership
+//!   key built per call, `Vec<String>` peer lists cloned per fan-out,
+//!   deep message clones (`String` kind + serialized metadata), per-hop
+//!   `format!`-ed hub names, and collect-then-aggregate with a fresh
+//!   output vector per round;
+//! * **interned** — the real `ChannelManager`/`ChannelHandle` path with
+//!   packed routes, epoch-cached peers, `Arc<str>` atoms, the streaming
+//!   `runtime::Accumulator`, and `TensorPool` buffer recycling.
+//!
+//! ```bash
+//! cargo bench --bench fabric          # full sweep
+//! cargo bench --bench fabric -- --test  # CI smoke
+//! ```
+//!
+//! Prints the table and writes `BENCH_fabric.json` in the working
+//! directory. The acceptance bar: the interned path performs strictly
+//! fewer allocations per round than the legacy pattern (in steady state it
+//! is near zero; `rust/tests/alloc_regression.rs` pins that down).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use flame::alloc_track::{self, bench_smoke as smoke, CountingAlloc};
+use flame::channel::{Backend, ChannelManager, Message, Payload};
+use flame::model::weighted_sum;
+use flame::net::{VClock, VirtualNet};
+use flame::runtime::{Accumulator, Compute, MockCompute, TensorPool};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+// ----------------------------------------------------- legacy emulation
+
+/// The old message shape: owned kind, serialized meta, deep-cloned per
+/// fan-out copy.
+#[derive(Clone)]
+struct LegacyMessage {
+    kind: String,
+    round: u64,
+    payload: Arc<Vec<f32>>,
+    meta: String,
+}
+
+type LegacyMailboxes = HashMap<String, VecDeque<(String, LegacyMessage)>>;
+
+/// The old fabric's allocation pattern: string-tuple keys, per-call peer
+/// list clones, per-hop hub formatting. (Faithful to the costs, not a full
+/// reimplementation — no wakers or virtual time needed to count allocs.)
+#[derive(Default)]
+struct LegacyFabric {
+    channels: HashMap<(String, String, String), LegacyMailboxes>,
+}
+
+impl LegacyFabric {
+    fn key(&self, channel: &str, group: &str) -> (String, String, String) {
+        (String::new(), channel.to_string(), group.to_string())
+    }
+
+    fn join(&mut self, channel: &str, group: &str, worker: &str) {
+        let key = self.key(channel, group);
+        self.channels
+            .entry(key)
+            .or_default()
+            .insert(worker.to_string(), VecDeque::new());
+    }
+
+    fn peers(&self, channel: &str, group: &str, me: &str) -> Vec<String> {
+        let key = self.key(channel, group);
+        let mut p: Vec<String> = self.channels[&key]
+            .keys()
+            .filter(|k| k.as_str() != me)
+            .cloned()
+            .collect();
+        p.sort();
+        p
+    }
+
+    fn send(&mut self, channel: &str, group: &str, from: &str, to: &str, msg: LegacyMessage) {
+        // the old deliver: rebuild the key, format the hub node, own the
+        // sender name
+        let key = self.key(channel, group);
+        let _hub = format!("hub:{channel}");
+        let mailbox = self
+            .channels
+            .get_mut(&key)
+            .and_then(|m| m.get_mut(to))
+            .expect("legacy peer joined");
+        mailbox.push_back((from.to_string(), msg));
+    }
+
+    fn recv(&mut self, channel: &str, group: &str, me: &str) -> (String, LegacyMessage) {
+        let key = self.key(channel, group);
+        self.channels
+            .get_mut(&key)
+            .and_then(|m| m.get_mut(me))
+            .and_then(|q| q.pop_front())
+            .expect("legacy mail present")
+    }
+}
+
+/// One legacy round: broadcast with deep clones, uploads, collect into a
+/// buffer, aggregate into a fresh vector.
+fn legacy_round(fab: &mut LegacyFabric, trainers: &[String], weights: &Arc<Vec<f32>>, round: u64) {
+    let peers = fab.peers("param", "g", "agg");
+    let msg = LegacyMessage {
+        kind: "weights".to_string(),
+        round,
+        payload: weights.clone(),
+        meta: String::new(),
+    };
+    for p in &peers {
+        fab.send("param", "g", "agg", p, msg.clone());
+    }
+    for t in trainers {
+        let (_, m) = fab.recv("param", "g", t);
+        // the old upload: a freshly allocated update vector + meta dump
+        let update = Arc::new(m.payload.as_ref().clone());
+        let up = LegacyMessage {
+            kind: "update".to_string(),
+            round,
+            payload: update,
+            meta: format!("{{\"samples\": {}, \"worker\": \"{t}\"}}", 64),
+        };
+        fab.send("param", "g", t, "agg", up);
+    }
+    // collect-then-aggregate: every update retained, then one fresh output
+    let mut got = Vec::with_capacity(trainers.len());
+    for _ in trainers {
+        let (from, m) = fab.recv("param", "g", "agg");
+        got.push((from, m.payload));
+    }
+    got.sort_by(|a, b| a.0.cmp(&b.0));
+    let refs: Vec<&[f32]> = got.iter().map(|(_, u)| u.as_slice()).collect();
+    let w = vec![1.0 / refs.len() as f32; refs.len()];
+    let _mean = weighted_sum(&refs, &w);
+}
+
+// ----------------------------------------------------- interned fabric
+
+struct Interned {
+    agg: flame::channel::ChannelHandle,
+    trainers: Vec<(String, flame::channel::ChannelHandle)>,
+    pool: Arc<TensorPool>,
+    compute: Arc<dyn Compute>,
+    names: Vec<String>,
+}
+
+fn interned_setup(k: usize, d: usize) -> Interned {
+    let mgr = ChannelManager::new(Arc::new(VirtualNet::default()));
+    let mk = |id: &str, role: &str| {
+        mgr.join(
+            "param",
+            "g",
+            id,
+            role,
+            Backend::InProc,
+            Arc::new(Mutex::new(VClock::default())),
+        )
+        .unwrap()
+    };
+    let agg = mk("agg", "aggregator");
+    let trainers: Vec<(String, flame::channel::ChannelHandle)> = (0..k)
+        .map(|i| {
+            let id = format!("t{i:04}");
+            let h = mk(&id, "trainer");
+            (id, h)
+        })
+        .collect();
+    let names: Vec<String> = trainers.iter().map(|(n, _)| n.clone()).collect();
+    Interned {
+        agg,
+        trainers,
+        pool: TensorPool::new(d),
+        compute: Arc::new(MockCompute::new(d, 8, 16)),
+        names,
+    }
+}
+
+/// One real-fabric round: pooled broadcast, pooled uploads, streaming fold.
+fn interned_round(f: &mut Interned, flat: &[f32], round: u64) {
+    let w = f.pool.take_copy(flat);
+    f.agg.broadcast(Message::floats("weights", round, w)).unwrap();
+    for (_, t) in &f.trainers {
+        let msg = t.recv("agg").unwrap();
+        let Payload::Floats(got) = msg.payload else {
+            panic!("weights expected");
+        };
+        let up = f.pool.take_copy(&got);
+        f.pool.reclaim(got);
+        t.send("agg", Message::floats("update", round, up)).unwrap();
+    }
+    let mut acc = Accumulator::new(f.compute.clone(), f.pool.clone(), f.names.clone());
+    for _ in 0..f.trainers.len() {
+        let (from, msg, _) = f.agg.recv_any_kind_timed("update").unwrap();
+        let Payload::Floats(u) = msg.payload else {
+            panic!("update expected");
+        };
+        acc.push(&from, u, 1.0).unwrap();
+    }
+    let out = acc.finish().unwrap();
+    f.pool.reclaim(out.mean.expect("non-zero total"));
+}
+
+fn main() {
+    let (k, d, rounds, warmup) = if smoke() { (16, 256, 20, 4) } else { (64, 4_096, 200, 20) };
+    let flat = vec![0.125f32; d];
+    let weights = Arc::new(flat.clone());
+    let trainer_names: Vec<String> = (0..k).map(|i| format!("t{i:04}")).collect();
+
+    // ------------------------------------------------ legacy allocations
+    let mut legacy = LegacyFabric::default();
+    legacy.join("param", "g", "agg");
+    for t in &trainer_names {
+        legacy.join("param", "g", t);
+    }
+    for r in 0..warmup {
+        legacy_round(&mut legacy, &trainer_names, &weights, r as u64);
+    }
+    let before = alloc_track::snapshot();
+    let t0 = Instant::now();
+    for r in 0..rounds {
+        legacy_round(&mut legacy, &trainer_names, &weights, r as u64);
+    }
+    let legacy_wall = t0.elapsed().as_secs_f64();
+    let legacy_delta = alloc_track::delta(before, alloc_track::snapshot());
+    let legacy_allocs_round = legacy_delta.allocs as f64 / rounds as f64;
+    let legacy_bytes_round = legacy_delta.bytes as f64 / rounds as f64;
+
+    // ---------------------------------------------- interned allocations
+    let mut fab = interned_setup(k, d);
+    for r in 0..warmup {
+        interned_round(&mut fab, &flat, r as u64);
+    }
+    let before = alloc_track::snapshot();
+    let t0 = Instant::now();
+    for r in 0..rounds {
+        interned_round(&mut fab, &flat, (warmup + r) as u64);
+    }
+    let interned_wall = t0.elapsed().as_secs_f64();
+    let interned_delta = alloc_track::delta(before, alloc_track::snapshot());
+    let interned_allocs_round = interned_delta.allocs as f64 / rounds as f64;
+    let interned_bytes_round = interned_delta.bytes as f64 / rounds as f64;
+    let (hits, misses, recycled) = fab.pool.stats();
+
+    let msgs_per_round = (2 * k) as f64; // k weights + k updates
+    let legacy_msgs_s = msgs_per_round * rounds as f64 / legacy_wall.max(1e-9);
+    let interned_msgs_s = msgs_per_round * rounds as f64 / interned_wall.max(1e-9);
+
+    println!(
+        "fabric hot path — {k} trainers, d={d}, {rounds} rounds (after {warmup} warmup)\n"
+    );
+    println!(
+        "{:<10} {:>14} {:>16} {:>14}",
+        "path", "allocs/round", "alloc bytes/rnd", "msgs/sec"
+    );
+    println!(
+        "{:<10} {:>14.1} {:>16.0} {:>14.0}",
+        "legacy", legacy_allocs_round, legacy_bytes_round, legacy_msgs_s
+    );
+    println!(
+        "{:<10} {:>14.1} {:>16.0} {:>14.0}",
+        "interned", interned_allocs_round, interned_bytes_round, interned_msgs_s
+    );
+    println!(
+        "\npool: {hits} hits, {misses} misses, {recycled} recycled \
+         ({:.1}x fewer allocations/round than the legacy pattern)",
+        legacy_allocs_round / interned_allocs_round.max(1.0)
+    );
+
+    assert!(
+        interned_allocs_round < legacy_allocs_round,
+        "interned path must allocate strictly less per round \
+         ({interned_allocs_round} vs {legacy_allocs_round})"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"fabric\",\n  \"scenario\": \"2-tier round loop: {k} trainers, \
+         d={d}, {rounds} rounds after {warmup} warmup; legacy = string-keyed fabric \
+         emulation, interned = packed routes + epoch peer caches + streaming accumulator \
+         + tensor pool\",\n  \"status\": \"regenerate with `cargo bench --bench fabric` — \
+         this file is overwritten in place\",\n  \"legacy\": {{\"allocs_per_round\": \
+         {legacy_allocs_round:.1}, \"alloc_bytes_per_round\": {legacy_bytes_round:.0}, \
+         \"msgs_per_sec\": {legacy_msgs_s:.0}}},\n  \"interned\": {{\"allocs_per_round\": \
+         {interned_allocs_round:.1}, \"alloc_bytes_per_round\": {interned_bytes_round:.0}, \
+         \"msgs_per_sec\": {interned_msgs_s:.0}}},\n  \"pool\": {{\"hits\": {hits}, \
+         \"misses\": {misses}, \"recycled\": {recycled}}}\n}}\n"
+    );
+    std::fs::write("BENCH_fabric.json", json).expect("write BENCH_fabric.json");
+    println!("\nwrote BENCH_fabric.json");
+}

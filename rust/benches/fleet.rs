@@ -18,6 +18,7 @@
 use std::time::Instant;
 
 use flame::sim::{run_fleet, SimOptions};
+use flame::alloc_track::bench_smoke as smoke;
 
 struct Cell {
     jobs: usize,
@@ -57,8 +58,9 @@ fn main() {
         "{:>6} {:>10} {:>7} {:>7} {:>11} {:>11} {:>13} {:>9}",
         "jobs", "completed", "waited", "rounds", "makespan_vs", "jobs_per_vs", "rounds_per_vs", "wall (s)"
     );
+    let sweep: &[usize] = if smoke() { &[10] } else { &[25, 50, 100, 200] };
     let mut cells = Vec::new();
-    for &jobs in &[25usize, 50, 100, 200] {
+    for &jobs in sweep {
         let c = run_cell(jobs).expect("fleet cell");
         println!(
             "{:>6} {:>10} {:>7} {:>7} {:>11.3} {:>11.3} {:>13.3} {:>9.2}",

@@ -12,9 +12,10 @@
 //! Writes `bench_out/fig11.csv`.
 
 use flame::sim::{run_fig11, time_to_accuracy, upload_mb_per_round, SimOptions};
+use flame::alloc_track::bench_smoke as smoke;
 
 fn main() {
-    let rounds = 20;
+    let rounds = if smoke() { 6 } else { 20 };
     let o = SimOptions::mock();
     let t0 = std::time::Instant::now();
     let (cfl, hybrid) = run_fig11(rounds, &o).expect("fig11 scenario failed");

@@ -15,6 +15,7 @@ use std::time::Instant;
 use flame::data::{make_federated, Partition};
 use flame::model::weighted_sum;
 use flame::runtime::{ArtifactSpec, Compute, MockCompute, PjrtPool};
+use flame::alloc_track::bench_smoke as smoke;
 
 fn timeit<R>(n: usize, mut f: impl FnMut() -> R) -> f64 {
     let t0 = Instant::now();
@@ -25,7 +26,7 @@ fn timeit<R>(n: usize, mut f: impl FnMut() -> R) -> f64 {
 }
 
 fn bench_compute(name: &str, c: &dyn Compute, flat: &[f32], x: &[f32], y: &[i32]) {
-    let reps = 20;
+    let reps = if smoke() { 5 } else { 20 };
     let t_train = timeit(reps, || c.train_step(flat, x, y, 0.1).unwrap());
     let t_eval = timeit(reps, || c.eval_step(flat, x, y).unwrap());
     let t_grad = timeit(reps, || c.grad_step(flat, x, y).unwrap());
@@ -101,7 +102,7 @@ fn main() {
     let rows: Vec<Vec<f32>> = (0..k).map(|_| vec![0.5f32; d]).collect();
     let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
     let w = vec![1.0 / k as f32; k];
-    let t = timeit(50, || weighted_sum(&refs, &w));
+    let t = timeit(if smoke() { 10 } else { 50 }, || weighted_sum(&refs, &w));
     println!(
         "\nrust weighted_sum oracle: {:.2} ms, {:.2} GB/s (memory-bound reference)",
         t * 1e3,

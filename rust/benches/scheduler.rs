@@ -19,6 +19,7 @@ use std::time::Instant;
 
 use flame::control::Executor;
 use flame::sim::{run_scale, SimOptions};
+use flame::alloc_track::bench_smoke as smoke;
 
 fn run_once(trainers: usize, executor: Executor) -> anyhow::Result<(f64, f64, usize)> {
     let groups = (trainers / 100).max(1);
@@ -30,7 +31,11 @@ fn run_once(trainers: usize, executor: Executor) -> anyhow::Result<(f64, f64, us
 }
 
 fn main() {
-    let sweep = [100usize, 300, 1_000, 3_000, 10_000];
+    let sweep: &[usize] = if smoke() {
+        &[100]
+    } else {
+        &[100, 300, 1_000, 3_000, 10_000]
+    };
     // thread-per-worker is not attempted past this point: the sweep is
     // about the wall the cooperative fabric removes, not about finding the
     // exact OS thread limit of one machine.
@@ -41,7 +46,7 @@ fn main() {
         "trainers", "workers", "cooperative (s)", "threaded (s)", "speedup"
     );
     let mut rows = Vec::new();
-    for &trainers in &sweep {
+    for &trainers in sweep {
         let (coop_s, vtime_s, workers) =
             run_once(trainers, Executor::Cooperative { runners: 0 }).expect("cooperative run");
         let threaded = if trainers <= threaded_cap {

@@ -17,6 +17,7 @@ use flame::registry::Registry;
 use flame::store::Store;
 use flame::tag::expand;
 use flame::topo;
+use flame::alloc_track::bench_smoke as smoke;
 
 fn bench_once(
     spec: &flame::tag::JobSpec,
@@ -62,7 +63,8 @@ fn best_of(n: usize, mut f: impl FnMut() -> (f64, f64, usize)) -> (f64, f64, usi
 }
 
 fn main() {
-    let counts = [1usize, 10, 100, 1_000, 10_000, 100_000];
+    let all_counts = [1usize, 10, 100, 1_000, 10_000, 100_000];
+    let counts = if smoke() { &all_counts[..4] } else { &all_counts[..] };
     // paper Table 6 (seconds)
     let paper_cfl_exp = [0.005, 0.006, 0.036, 0.329, 3.183, 31.990];
     let paper_cfl_db = [0.007, 0.008, 0.037, 0.315, 2.781, 27.971];

@@ -1,0 +1,94 @@
+//! Counting wrapper around the system allocator (bench/test instrumentation).
+//!
+//! The zero-allocation fabric claim is only worth something if it is
+//! *measured*: `rust/benches/fabric.rs` reports allocations/round and
+//! `rust/tests/alloc_regression.rs` turns the steady-state bound into a
+//! regression test. Both install [`CountingAlloc`] as their binary's
+//! `#[global_allocator]`:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: flame::alloc_track::CountingAlloc = flame::alloc_track::CountingAlloc;
+//! ```
+//!
+//! The library itself never installs it — normal builds pay two relaxed
+//! atomic adds only in binaries that opt in.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Pass-through allocator that counts allocation events and bytes.
+/// Deallocations are not subtracted: the counters measure allocator
+/// *traffic*, which is what a recycling fabric must drive to zero.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// A point-in-time reading of the counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    pub allocs: u64,
+    pub bytes: u64,
+}
+
+/// Current counter values (zeros unless [`CountingAlloc`] is installed as
+/// the global allocator of the running binary).
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: ALLOCS.load(Ordering::Relaxed),
+        bytes: BYTES.load(Ordering::Relaxed),
+    }
+}
+
+/// Allocator traffic between two snapshots.
+pub fn delta(before: AllocSnapshot, after: AllocSnapshot) -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: after.allocs.saturating_sub(before.allocs),
+        bytes: after.bytes.saturating_sub(before.bytes),
+    }
+}
+
+/// Bench smoke mode — the single definition every `rust/benches/*` binary
+/// consults: `cargo bench --benches -- --test` (or `--smoke`, or
+/// `BENCH_SMOKE=1`; `BENCH_SMOKE=0`/empty means off) shrinks each bench's
+/// sweep to a seconds-long cell so CI keeps `benches/` green without
+/// paying full bench time.
+pub fn bench_smoke() -> bool {
+    std::env::args().any(|a| a == "--test" || a == "--smoke")
+        || std::env::var("BENCH_SMOKE")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_delta_arithmetic() {
+        let a = AllocSnapshot { allocs: 10, bytes: 100 };
+        let b = AllocSnapshot { allocs: 25, bytes: 180 };
+        assert_eq!(delta(a, b), AllocSnapshot { allocs: 15, bytes: 80 });
+        // saturating: never underflows if counters were reset between
+        assert_eq!(delta(b, a), AllocSnapshot { allocs: 0, bytes: 0 });
+    }
+}

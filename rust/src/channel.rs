@@ -4,7 +4,9 @@
 //! workers use the same API regardless of backend. This module provides:
 //!
 //! * [`Message`] / [`Payload`] — what roles exchange (model vectors ride as
-//!   shared `Arc<Vec<f32>>` so fan-out broadcasts don't copy weights),
+//!   shared `Arc<Vec<f32>>` so fan-out broadcasts don't copy weights;
+//!   kinds are interned `Arc<str>` atoms and metadata rides behind an
+//!   `Arc<Json>`, so *cloning a message is three pointer bumps*),
 //! * [`Backend`] — per-channel backend selection (the paper's headline
 //!   flexibility, §6.2): `P2p` direct links, `Broker` store-and-forward via
 //!   a hub (MQTT-like), `InProc` zero-cost local (tests),
@@ -14,6 +16,24 @@
 //!   touches only the target mailbox's own lock.
 //! * [`ChannelHandle`] — the worker-side **Table 2 API**: `join`, `leave`,
 //!   `send`, `recv`, `recv_fifo`, `peek`, `broadcast`, `ends`, `empty`.
+//!
+//! ## Hot-path memory discipline
+//!
+//! The steady-state round loop is allocation-free (measured by
+//! `rust/benches/fabric.rs`, pinned by `rust/tests/alloc_regression.rs`):
+//!
+//! * channel identity is a packed-`u64` [`crate::intern::Route`] — the old
+//!   per-call `(String, String, String)` key tuple is gone;
+//! * a handle resolves its route **once at `join`** and caches an `Arc`
+//!   to the channel state, so `send`/`recv`/`broadcast` never touch the
+//!   shard map again;
+//! * peer lists are cached per handle and stamped with the channel's
+//!   membership **epoch**; joins, leaves and evictions bump the epoch, so
+//!   live topology extension invalidates exactly the caches it must;
+//! * broker hub node names are precomputed at channel creation (the old
+//!   code `format!`-ed one per delivery);
+//! * sender names travel as interned `Arc<str>` atoms — enqueueing an
+//!   envelope clones pointers, never strings.
 //!
 //! Transfers account virtual time through [`crate::net::VirtualNet`]; each
 //! worker's [`VClock`] merges message arrival times on receive, so critical
@@ -54,13 +74,13 @@
 //!   conservatively so quorum-style collects re-evaluate membership.
 
 use std::collections::{HashMap, VecDeque};
-use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::intern::{atom, route, Route};
 use crate::json::Json;
 use crate::net::{VClock, VTime, VirtualNet};
 use crate::sched::{pending_err, Waker, WorkerPark};
@@ -71,7 +91,7 @@ use crate::sched::{pending_err, Waker, WorkerPark};
 /// detected instantly as virtual-time deadlocks.
 pub const RECV_TIMEOUT: Duration = Duration::from_secs(60);
 
-/// Membership shards: keyed by `(channel, group)` hash so join/lookup load
+/// Membership shards: keyed by the mixed route hash so join/lookup load
 /// spreads instead of serialising on a single map lock.
 const N_SHARDS: usize = 64;
 
@@ -151,78 +171,111 @@ impl Payload {
     }
 }
 
+/// The shared null-metadata value: control messages carry it without
+/// allocating.
+fn null_meta() -> Arc<Json> {
+    static NULL: OnceLock<Arc<Json>> = OnceLock::new();
+    NULL.get_or_init(|| Arc::new(Json::Null)).clone()
+}
+
 /// A typed message between roles. `kind` disambiguates the function the
-/// receiver dispatches to (the paper's `funcTags`).
+/// receiver dispatches to (the paper's `funcTags`); it is an interned
+/// atom, so constructing a message with a known kind allocates nothing
+/// and fan-out clones are pointer-sized.
 #[derive(Debug, Clone)]
 pub struct Message {
-    pub kind: String,
+    pub kind: Arc<str>,
     pub round: u64,
     pub payload: Payload,
-    pub meta: Json,
+    /// Private: set through [`Self::with_meta`] only, which also caches
+    /// the serialized size — a public field could silently desynchronize
+    /// the wire accounting.
+    meta: Arc<Json>,
+    /// Serialized metadata size, cached at construction so per-delivery
+    /// wire accounting never re-dumps the JSON.
+    meta_bytes: u64,
 }
 
 impl Message {
-    pub fn new(kind: impl Into<String>, round: u64, payload: Payload) -> Self {
+    pub fn new(kind: impl AsRef<str>, round: u64, payload: Payload) -> Self {
         Self {
-            kind: kind.into(),
+            kind: atom(kind.as_ref()),
             round,
             payload,
-            meta: Json::Null,
+            meta: null_meta(),
+            meta_bytes: 0,
         }
     }
 
     pub fn with_meta(mut self, meta: Json) -> Self {
-        self.meta = meta;
+        self.meta_bytes = if meta.is_null() { 0 } else { meta.dump().len() as u64 };
+        self.meta = Arc::new(meta);
         self
     }
 
-    pub fn floats(kind: impl Into<String>, round: u64, data: Arc<Vec<f32>>) -> Self {
+    /// The message metadata (shared; `Json::Null` when none was attached).
+    pub fn meta(&self) -> &Json {
+        &self.meta
+    }
+
+    pub fn floats(kind: impl AsRef<str>, round: u64, data: Arc<Vec<f32>>) -> Self {
         Self::new(kind, round, Payload::Floats(data))
     }
 
-    pub fn control(kind: impl Into<String>, round: u64) -> Self {
+    pub fn control(kind: impl AsRef<str>, round: u64) -> Self {
         Self::new(kind, round, Payload::Empty)
     }
 
     pub fn size_bytes(&self) -> u64 {
         // kind/round/meta overhead + payload
-        64 + self.payload.size_bytes() + if self.meta.is_null() { 0 } else { self.meta.dump().len() as u64 }
+        64 + self.payload.size_bytes() + self.meta_bytes
     }
 }
 
 #[derive(Debug)]
 struct Envelope {
-    from: String,
+    from: Arc<str>,
     msg: Message,
     arrival: VTime,
     seq: u64,
 }
 
-/// What a parked receive is waiting for.
+/// What a parked receive is waiting for. Sender/kind patterns are interned
+/// atoms — building a spec never copies string contents.
 #[derive(Debug, Clone)]
 enum MatchSpec {
     /// Any message from this sender.
-    From(String),
+    From(Arc<str>),
     /// A message from this sender with this kind.
-    FromKind(String, String),
+    FromKind(Arc<str>, Arc<str>),
     /// Any message at all.
     Any,
     /// Any message with this kind.
-    AnyKind(String),
+    AnyKind(Arc<str>),
 }
 
 impl MatchSpec {
     fn matches_parts(&self, from: &str, kind: &str) -> bool {
         match self {
-            MatchSpec::From(f) => f == from,
-            MatchSpec::FromKind(f, k) => f == from && k == kind,
+            MatchSpec::From(f) => &**f == from,
+            MatchSpec::FromKind(f, k) => &**f == from && &**k == kind,
             MatchSpec::Any => true,
-            MatchSpec::AnyKind(k) => k == kind,
+            MatchSpec::AnyKind(k) => &**k == kind,
         }
     }
 
     fn matches(&self, e: &Envelope) -> bool {
         self.matches_parts(&e.from, &e.msg.kind)
+    }
+
+    /// Does this wait depend on a specific sender? (`Any*` waits can be
+    /// satisfied by whoever remains, so a single departure never dooms
+    /// them.)
+    fn depends_on(&self, worker: &str) -> bool {
+        match self {
+            MatchSpec::From(f) | MatchSpec::FromKind(f, _) => &**f == worker,
+            MatchSpec::Any | MatchSpec::AnyKind(_) => false,
+        }
     }
 }
 
@@ -234,19 +287,7 @@ enum WaitSpec {
     /// Wake once mail from *every* listed sender is present (`recv_fifo`'s
     /// aggregation barrier). Delivery removes senders in place, so the
     /// check is O(1) per message instead of a queue scan.
-    AllOf(Vec<String>),
-}
-
-impl MatchSpec {
-    /// Does this wait depend on a specific sender? (`Any*` waits can be
-    /// satisfied by whoever remains, so a single departure never dooms
-    /// them.)
-    fn depends_on(&self, worker: &str) -> bool {
-        match self {
-            MatchSpec::From(f) | MatchSpec::FromKind(f, _) => f == worker,
-            MatchSpec::Any | MatchSpec::AnyKind(_) => false,
-        }
-    }
+    AllOf(Vec<Arc<str>>),
 }
 
 struct MailboxInner {
@@ -254,7 +295,7 @@ struct MailboxInner {
     waiting: Option<(WaitSpec, Waker)>,
     /// Peers that left this (channel, group) while we were a member —
     /// consulted by strict waits so a departure cannot strand us.
-    departed: Vec<String>,
+    departed: Vec<Arc<str>>,
     /// Set when this member itself was evicted: further receives raise
     /// [`Departed`].
     closed: bool,
@@ -294,15 +335,28 @@ fn best_index(q: &VecDeque<Envelope>, spec: &MatchSpec) -> Option<usize> {
 
 struct Member {
     mailbox: Mailbox,
-    role: String,
+    role: Arc<str>,
 }
 
-struct ChannelState {
+/// Membership of one `(scope, channel, group)` route. Lives behind an
+/// `Arc` in the shard map so handles resolve it once at join; the `epoch`
+/// counter versions membership for the handles' peer-list caches.
+struct ChannelShared {
     backend: Backend,
-    members: HashMap<String, Member>,
+    /// Precomputed broker hub node name (`hub:<scope::>channel`).
+    hub: Arc<str>,
+    members: RwLock<HashMap<Arc<str>, Member>>,
+    /// Bumped on every membership change (join / leave / evict).
+    epoch: AtomicU64,
 }
 
-type ShardMap = HashMap<(String, String, String), ChannelState>;
+impl ChannelShared {
+    fn bump(&self) {
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+type ShardMap = HashMap<Route, Arc<ChannelShared>>;
 
 /// The shared mailbox/membership substrate: membership shards, the global
 /// delivery sequence counter, and the virtual network. One fabric can be
@@ -314,6 +368,16 @@ struct Fabric {
     seq: AtomicU64,
 }
 
+impl Fabric {
+    fn shard(&self, r: Route) -> &RwLock<ShardMap> {
+        &self.shards[(r.mix() as usize) % self.shards.len()]
+    }
+
+    fn lookup(&self, r: Route) -> Option<Arc<ChannelShared>> {
+        self.shard(r).read().unwrap().get(&r).cloned()
+    }
+}
+
 /// Channel fabric view. A standalone job owns an unscoped manager
 /// ([`ChannelManager::new`]); concurrent jobs on one shared fabric each
 /// hold a **scoped** view ([`ChannelManager::scoped`]) that namespaces
@@ -323,10 +387,11 @@ struct Fabric {
 /// `join`.
 pub struct ChannelManager {
     fabric: Arc<Fabric>,
-    /// This view's namespace: one component of the structured
-    /// `(scope, channel, group)` membership key. Empty for standalone
-    /// jobs.
-    scope: String,
+    /// This view's namespace: one component of the packed
+    /// `(scope, channel, group)` route. Empty for standalone jobs.
+    scope: Arc<str>,
+    /// The scope's interned symbol — what `evict` filters routes by.
+    scope_sym: crate::intern::Symbol,
 }
 
 impl ChannelManager {
@@ -337,19 +402,21 @@ impl ChannelManager {
                 shards: (0..N_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
                 seq: AtomicU64::new(0),
             }),
-            scope: String::new(),
+            scope: atom(""),
+            scope_sym: crate::intern::sym(""),
         })
     }
 
     /// A per-job view over this manager's shared fabric: same shards, same
-    /// sequence counter, same virtual network, but every membership key
+    /// sequence counter, same virtual network, but every membership route
     /// carries `scope` as a distinct component (and broker hub nodes are
     /// scope-prefixed), isolating the job's membership and mail from
     /// every other scope.
     pub fn scoped(self: &Arc<Self>, scope: &str) -> Arc<ChannelManager> {
         Arc::new(Self {
             fabric: self.fabric.clone(),
-            scope: scope.to_string(),
+            scope: atom(scope),
+            scope_sym: crate::intern::sym(scope),
         })
     }
 
@@ -372,20 +439,13 @@ impl ChannelManager {
         }
     }
 
-    /// The fabric-level membership key: channel identity is the
-    /// structured triple `(scope, channel, group)` — no string-prefix
-    /// conventions, so channel names (or scopes) containing any
-    /// separator can never alias another scope's keys.
-    fn key(&self, channel: &str, group: &str) -> (String, String, String) {
-        (self.scope.clone(), channel.to_string(), group.to_string())
-    }
-
-    fn shard(&self, channel: &str, group: &str) -> &RwLock<ShardMap> {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        self.scope.hash(&mut h);
-        channel.hash(&mut h);
-        group.hash(&mut h);
-        &self.fabric.shards[(h.finish() as usize) % self.fabric.shards.len()]
+    /// The fabric-level membership route: channel identity is the packed
+    /// `(scope, channel, group)` symbol triple — no string-prefix
+    /// conventions, so channel names (or scopes) containing any separator
+    /// can never alias another scope's routes. `None` once the global
+    /// symbol space is exhausted (join surfaces it as a clean error).
+    fn route_of(&self, channel: &str, group: &str) -> Option<Route> {
+        route(&self.scope, channel, group)
     }
 
     /// Join `(channel, group)` as `worker` acting as `role` in blocking
@@ -413,9 +473,11 @@ impl ChannelManager {
 
     /// Join `(channel, group)` as `worker` acting as `role`, sharing the
     /// worker's virtual clock and execution mode across all its channels.
-    /// Returns the worker-side handle. `role` determines what `ends()`
-    /// yields: peers of the *other* endpoint role (or all other members on
-    /// self-pair channels like the distributed trainer ring).
+    /// Returns the worker-side handle — which has its route resolved once,
+    /// here: the handle's sends and receives never touch the shard map
+    /// again. `role` determines what `ends()` yields: peers of the *other*
+    /// endpoint role (or all other members on self-pair channels like the
+    /// distributed trainer ring).
     #[allow(clippy::too_many_arguments)]
     pub fn join_with_park(
         self: &Arc<Self>,
@@ -427,69 +489,75 @@ impl ChannelManager {
         clock: Arc<Mutex<VClock>>,
         park: Arc<WorkerPark>,
     ) -> Result<ChannelHandle> {
-        let key = self.key(channel, group);
-        let mut g = self.shard(channel, group).write().unwrap();
-        let state = g.entry(key).or_insert_with(|| ChannelState {
-            backend,
-            members: HashMap::new(),
-        });
-        if state.backend != backend {
+        let r = self.route_of(channel, group).ok_or_else(|| {
+            anyhow!(
+                "fabric symbol space exhausted (> 2^21 distinct names): \
+                 rejecting join of '{worker}' on '{channel}/{group}'"
+            )
+        })?;
+        let shared = {
+            let mut g = self.fabric.shard(r).write().unwrap();
+            g.entry(r)
+                .or_insert_with(|| {
+                    Arc::new(ChannelShared {
+                        backend,
+                        hub: atom(&format!("hub:{}", self.qualified(channel))),
+                        members: RwLock::new(HashMap::new()),
+                        epoch: AtomicU64::new(0),
+                    })
+                })
+                .clone()
+        };
+        if shared.backend != backend {
             bail!(
                 "channel '{channel}' group '{group}' already uses backend {:?}",
-                state.backend
+                shared.backend
             );
         }
-        let mailbox: Mailbox = match state.members.get(worker) {
-            Some(m) => m.mailbox.clone(), // re-join keeps pending mail
-            None => MailboxCore::new(),
-        };
-        state.members.insert(
-            worker.to_string(),
-            Member {
-                mailbox: mailbox.clone(),
-                role: role.to_string(),
-            },
-        );
-        // a (re)join supersedes any earlier departure: reopen the member's
-        // own mailbox and clear its name from peers' departure notices so
-        // strict receives on the returned worker work again
-        mailbox.inner.lock().unwrap().closed = false;
-        for (k, m) in state.members.iter() {
-            if k != worker {
-                m.mailbox.inner.lock().unwrap().departed.retain(|d| d != worker);
+        let me = atom(worker);
+        let mailbox: Mailbox = {
+            let mut members = shared.members.write().unwrap();
+            let mailbox = match members.get(worker) {
+                Some(m) => m.mailbox.clone(), // re-join keeps pending mail
+                None => MailboxCore::new(),
+            };
+            members.insert(
+                me.clone(),
+                Member {
+                    mailbox: mailbox.clone(),
+                    role: atom(role),
+                },
+            );
+            // a (re)join supersedes any earlier departure: reopen the
+            // member's own mailbox and clear its name from peers'
+            // departure notices so strict receives on the returned worker
+            // work again
+            mailbox.inner.lock().unwrap().closed = false;
+            for (k, m) in members.iter() {
+                if &**k != worker {
+                    m.mailbox.inner.lock().unwrap().departed.retain(|d| &**d != worker);
+                }
             }
-        }
+            mailbox
+        };
+        shared.bump();
         Ok(ChannelHandle {
             mgr: self.clone(),
-            channel: channel.to_string(),
-            group: group.to_string(),
-            me: worker.to_string(),
-            role: role.to_string(),
+            shared,
+            channel: atom(channel),
+            group: atom(group),
+            me,
+            role: atom(role),
             backend,
             mailbox,
             clock,
             park,
+            peers: Mutex::new(PeerCache {
+                epoch: u64::MAX,
+                ends: Arc::new(Vec::new()),
+                roles: HashMap::new(),
+            }),
         })
-    }
-
-    /// Remove `worker` from `(channel, group)` and post departure notices:
-    /// remaining members learn the name, and a parked wait that *depends*
-    /// on the leaver (a strict `recv` from it, or a `recv_fifo` barrier
-    /// still missing it) is woken at virtual time `at` so it can fail
-    /// promptly instead of stranding.
-    fn leave(&self, channel: &str, group: &str, worker: &str, at: VTime) {
-        let peers: Vec<Mailbox> = {
-            let mut g = self.shard(channel, group).write().unwrap();
-            match g.get_mut(&self.key(channel, group)) {
-                Some(state) if state.members.remove(worker).is_some() => {
-                    state.members.values().map(|m| m.mailbox.clone()).collect()
-                }
-                _ => return,
-            }
-        };
-        for mb in peers {
-            Self::post_departure(&mb, worker, at, false);
-        }
     }
 
     /// Retire `worker` from every channel group it joined (a `leave`
@@ -500,21 +568,24 @@ impl ChannelManager {
     /// the number of memberships revoked.
     pub fn evict(&self, worker: &str, at: VTime) -> usize {
         let mut revoked = 0;
+        let worker_a = atom(worker);
         for shard in &self.fabric.shards {
             let mut own: Vec<Mailbox> = Vec::new();
             let mut peers: Vec<Mailbox> = Vec::new();
             {
-                let mut g = shard.write().unwrap();
-                for ((scope, _, _), state) in g.iter_mut() {
+                let g = shard.read().unwrap();
+                for (r, shared) in g.iter() {
                     // scope isolation: an eviction through this view must
                     // never touch another job's identically-named worker
-                    if scope != &self.scope {
+                    if r.scope_sym() != self.scope_sym {
                         continue;
                     }
-                    if let Some(me) = state.members.remove(worker) {
+                    let mut members = shared.members.write().unwrap();
+                    if let Some(evictee) = members.remove(worker) {
                         revoked += 1;
-                        own.push(me.mailbox);
-                        peers.extend(state.members.values().map(|m| m.mailbox.clone()));
+                        own.push(evictee.mailbox);
+                        peers.extend(members.values().map(|m| m.mailbox.clone()));
+                        shared.bump();
                     }
                 }
             }
@@ -530,7 +601,7 @@ impl ChannelManager {
                 }
             }
             for mb in peers {
-                Self::post_departure(&mb, worker, at, true);
+                Self::post_departure(&mb, &worker_a, at, true);
             }
         }
         revoked
@@ -539,11 +610,11 @@ impl ChannelManager {
     /// Record `worker`'s departure on a peer mailbox; wake its parked wait
     /// if the wait depends on the leaver, or unconditionally when
     /// `conservative` (membership changed under a quorum collect).
-    fn post_departure(mb: &Mailbox, worker: &str, at: VTime, conservative: bool) {
+    fn post_departure(mb: &Mailbox, worker: &Arc<str>, at: VTime, conservative: bool) {
         let waker = {
             let mut mg = mb.inner.lock().unwrap();
             if !mg.departed.iter().any(|d| d == worker) {
-                mg.departed.push(worker.to_string());
+                mg.departed.push(worker.clone());
             }
             let depends = match &mg.waiting {
                 Some((WaitSpec::Match(spec), _)) => spec.depends_on(worker),
@@ -562,30 +633,6 @@ impl ChannelManager {
         }
     }
 
-    /// Peers at the other end: members of a different role, or — when every
-    /// member shares one role (self-pair channel) — all other members.
-    fn peers(&self, channel: &str, group: &str, me: &str, my_role: &str) -> Vec<String> {
-        let g = self.shard(channel, group).read().unwrap();
-        let mut peers: Vec<String> = match g.get(&self.key(channel, group)) {
-            None => Vec::new(),
-            Some(s) => {
-                let other_role: Vec<String> = s
-                    .members
-                    .iter()
-                    .filter(|(k, m)| *k != me && m.role != my_role)
-                    .map(|(k, _)| k.clone())
-                    .collect();
-                if other_role.is_empty() {
-                    s.members.keys().filter(|k| *k != me).cloned().collect()
-                } else {
-                    other_role
-                }
-            }
-        };
-        peers.sort();
-        peers
-    }
-
     /// Members of `(channel, group)` acting as `role`, excluding
     /// `exclude`, sorted. The membership view quorum-style collects use:
     /// "the trainers currently on this channel", robust to other roles
@@ -597,48 +644,50 @@ impl ChannelManager {
         exclude: &str,
         role: &str,
     ) -> Vec<String> {
-        let g = self.shard(channel, group).read().unwrap();
-        let mut m: Vec<String> = g
-            .get(&self.key(channel, group))
-            .map(|s| {
-                s.members
+        match self.route_of(channel, group).and_then(|r| self.fabric.lookup(r)) {
+            None => Vec::new(),
+            Some(shared) => {
+                let members = shared.members.read().unwrap();
+                let mut m: Vec<String> = members
                     .iter()
-                    .filter(|(k, mem)| *k != exclude && mem.role == role)
-                    .map(|(k, _)| k.clone())
-                    .collect()
-            })
-            .unwrap_or_default();
-        m.sort();
-        m
+                    .filter(|(k, mem)| &***k != exclude && &*mem.role == role)
+                    .map(|(k, _)| k.to_string())
+                    .collect();
+                m.sort();
+                m
+            }
+        }
     }
 
     /// All members of `(channel, group)` (sorted), regardless of role.
     pub fn members(&self, channel: &str, group: &str) -> Vec<String> {
-        let g = self.shard(channel, group).read().unwrap();
-        let mut m: Vec<String> = g
-            .get(&self.key(channel, group))
-            .map(|s| s.members.keys().cloned().collect())
-            .unwrap_or_default();
-        m.sort();
-        m
+        match self.route_of(channel, group).and_then(|r| self.fabric.lookup(r)) {
+            None => Vec::new(),
+            Some(shared) => {
+                let members = shared.members.read().unwrap();
+                let mut m: Vec<String> = members.keys().map(|k| k.to_string()).collect();
+                m.sort();
+                m
+            }
+        }
     }
 
-    /// Deliver `msg` from `from` to `to` on `(channel, group)`; computes the
-    /// virtual arrival time from the backend's route. `queue_delay` models
-    /// store-and-forward serialisation at the broker (fan-out copies leave
-    /// the hub one after another).
+    /// Deliver `msg` from `from` to `to` on the resolved channel; computes
+    /// the virtual arrival time from the backend's route. `queue_delay`
+    /// models store-and-forward serialisation at the broker (fan-out
+    /// copies leave the hub one after another).
     ///
-    /// Only the target mailbox's own lock is taken for the enqueue; the
-    /// membership shard is held read-only just long enough to resolve the
-    /// mailbox, so concurrent deliveries on different channels (or
-    /// different workers of one channel) do not serialise.
+    /// Only the membership read lock is held long enough to resolve the
+    /// target mailbox; the enqueue takes the mailbox's own lock, so
+    /// concurrent deliveries on different channels (or different workers
+    /// of one channel) do not serialise. Nothing here allocates.
     #[allow(clippy::too_many_arguments)]
     fn deliver(
         &self,
-        channel: &str,
-        group: &str,
+        shared: &ChannelShared,
+        diag: (&str, &str),
         backend: Backend,
-        from: &str,
+        from: &Arc<str>,
         from_clock: VTime,
         to: &str,
         msg: Message,
@@ -651,25 +700,22 @@ impl ChannelManager {
                 from_clock + self.fabric.net.transfer_at_us(from, to, bytes, from_clock)
             }
             Backend::Broker => {
-                let hub = format!("hub:{}", self.qualified(channel));
                 from_clock
                     + queue_delay
                     + self
                         .fabric
                         .net
-                        .transfer_via_at_us(from, &hub, to, bytes, from_clock)
+                        .transfer_via_at_us(from, &shared.hub, to, bytes, from_clock)
             }
         };
         let seq = self.fabric.seq.fetch_add(1, Ordering::Relaxed);
         let mailbox = {
-            let g = self.shard(channel, group).read().unwrap();
-            let state = g
-                .get(&self.key(channel, group))
-                .with_context(|| format!("channel '{channel}' group '{group}' does not exist"))?;
-            state
-                .members
+            let members = shared.members.read().unwrap();
+            members
                 .get(to)
-                .with_context(|| format!("peer '{to}' not joined on '{channel}/{group}'"))?
+                .with_context(|| {
+                    format!("peer '{to}' not joined on '{}/{}'", diag.0, diag.1)
+                })?
                 .mailbox
                 .clone()
         };
@@ -684,7 +730,7 @@ impl ChannelManager {
                 None => false,
             };
             g.queue.push_back(Envelope {
-                from: from.to_string(),
+                from: from.clone(),
                 msg,
                 arrival,
                 seq,
@@ -703,17 +749,30 @@ impl ChannelManager {
     }
 }
 
+/// Epoch-stamped peer-list cache (one per handle): `ends()` and
+/// `ends_of_role()` are O(1) pointer clones until membership actually
+/// changes.
+struct PeerCache {
+    epoch: u64,
+    ends: Arc<Vec<String>>,
+    roles: HashMap<String, Arc<Vec<String>>>,
+}
+
 /// Worker-side endpoint implementing the paper's Table 2 API.
 pub struct ChannelHandle {
     mgr: Arc<ChannelManager>,
-    channel: String,
-    group: String,
-    me: String,
-    role: String,
+    /// Route resolved once at join: the hot path never re-keys the shard
+    /// map.
+    shared: Arc<ChannelShared>,
+    channel: Arc<str>,
+    group: Arc<str>,
+    me: Arc<str>,
+    role: Arc<str>,
     backend: Backend,
     mailbox: Mailbox,
     clock: Arc<Mutex<VClock>>,
     park: Arc<WorkerPark>,
+    peers: Mutex<PeerCache>,
 }
 
 impl ChannelHandle {
@@ -744,15 +803,63 @@ impl ChannelHandle {
     /// instead of stranding until a timeout or the deadlock detector).
     pub fn leave(self) {
         let at = self.now();
-        self.mgr.leave(&self.channel, &self.group, &self.me, at);
+        let peers: Vec<Mailbox> = {
+            let mut members = self.shared.members.write().unwrap();
+            match members.remove(&*self.me) {
+                Some(_) => members.values().map(|m| m.mailbox.clone()).collect(),
+                None => return,
+            }
+        };
+        self.shared.bump();
+        for mb in peers {
+            ChannelManager::post_departure(&mb, &self.me, at, false);
+        }
+    }
+
+    /// Rebuild this handle's other-end peer list from current membership:
+    /// members of a different role, or — when every member shares one role
+    /// (self-pair channel) — all other members. Sorted for determinism.
+    fn compute_ends(&self) -> Vec<String> {
+        let members = self.shared.members.read().unwrap();
+        let other_role: Vec<String> = members
+            .iter()
+            .filter(|(k, m)| ***k != *self.me && m.role != self.role)
+            .map(|(k, _)| k.to_string())
+            .collect();
+        let mut peers = if other_role.is_empty() {
+            members
+                .keys()
+                .filter(|k| ***k != *self.me)
+                .map(|k| k.to_string())
+                .collect()
+        } else {
+            other_role
+        };
+        peers.sort();
+        peers
+    }
+
+    /// Lock the peer cache, refreshing it first if membership moved past
+    /// the stamped epoch — the single invalidation point for both `ends`
+    /// and `ends_of_role`.
+    fn refreshed_peers(&self) -> std::sync::MutexGuard<'_, PeerCache> {
+        let cur = self.shared.epoch.load(Ordering::Acquire);
+        let mut c = self.peers.lock().unwrap();
+        if c.epoch != cur {
+            c.ends = Arc::new(self.compute_ends());
+            c.roles.clear();
+            c.epoch = cur;
+        }
+        c
     }
 
     /// Peers at the other end of the channel (Table 2 `ends`), sorted for
     /// determinism. Group-scoped: only members of this worker's group, and
     /// role-scoped: only the *other* endpoint role (all other members on
-    /// self-pair channels).
-    pub fn ends(&self) -> Vec<String> {
-        self.mgr.peers(&self.channel, &self.group, &self.me, &self.role)
+    /// self-pair channels). Served from the epoch-stamped cache: steady
+    /// state costs one atomic load and an `Arc` clone.
+    pub fn ends(&self) -> Arc<Vec<String>> {
+        self.refreshed_peers().ends.clone()
     }
 
     /// Check if peers exist at the other end (Table 2 `empty`).
@@ -763,94 +870,134 @@ impl ChannelHandle {
     /// Current members of this worker's group acting as `role` (excluding
     /// this worker), sorted. Unlike [`Self::ends`], which yields *all*
     /// other-role peers, this scopes to one role — the membership view
-    /// churn-safe collects intersect their peer list against.
-    pub fn ends_of_role(&self, role: &str) -> Vec<String> {
-        self.mgr
-            .members_of_role(&self.channel, &self.group, &self.me, role)
+    /// churn-safe collects intersect their peer list against. Cached per
+    /// role under the same membership epoch as `ends`.
+    pub fn ends_of_role(&self, role: &str) -> Arc<Vec<String>> {
+        let mut c = self.refreshed_peers();
+        if let Some(v) = c.roles.get(role) {
+            return v.clone();
+        }
+        let v = Arc::new(self.compute_role_members(role));
+        c.roles.insert(role.to_string(), v.clone());
+        v
+    }
+
+    /// Rebuild one role's member list from the handle's cached channel
+    /// state — no shard-map or interner traffic (the route stays resolved
+    /// once, at join).
+    fn compute_role_members(&self, role: &str) -> Vec<String> {
+        let members = self.shared.members.read().unwrap();
+        let mut m: Vec<String> = members
+            .iter()
+            .filter(|(k, mem)| ***k != *self.me && &*mem.role == role)
+            .map(|(k, _)| k.to_string())
+            .collect();
+        m.sort();
+        m
     }
 
     /// Send `msg` to `end` (Table 2 `send`).
     pub fn send(&self, end: &str, msg: Message) -> Result<()> {
         let now = self.clock.lock().unwrap().now();
-        self.mgr
-            .deliver(&self.channel, &self.group, self.backend, &self.me, now, end, msg, 0)?;
+        self.mgr.deliver(
+            &self.shared,
+            (&*self.channel, &*self.group),
+            self.backend,
+            &self.me,
+            now,
+            end,
+            msg,
+            0,
+        )?;
         Ok(())
     }
 
-    /// Fan a batch of per-peer messages out in one shot.
-    ///
-    /// On broker channels the copies serialise through the hub
-    /// (store-and-forward): message `i` queues behind the hub legs of all
-    /// earlier ones — the broker contention that makes broadcast-heavy
-    /// rounds expensive in the paper's §6.2 MQTT setup.
-    pub fn send_fanout(&self, items: Vec<(String, Message)>) -> Result<usize> {
-        let now = self.clock.lock().unwrap().now();
-        let n = items.len();
-        let hub = format!("hub:{}", self.mgr.qualified(&self.channel));
+    /// The shared fan-out core: deliver one copy per `(peer, message)` at
+    /// send time `now`. On broker channels the copies serialise through
+    /// the hub (store-and-forward): message `i` queues behind the hub
+    /// legs of all earlier ones — the broker contention that makes
+    /// broadcast-heavy rounds expensive in the paper's §6.2 MQTT setup.
+    fn fanout_iter<S: AsRef<str>>(
+        &self,
+        now: VTime,
+        items: impl Iterator<Item = (S, Message)>,
+    ) -> Result<usize> {
         let mut queued: VTime = 0;
+        let mut n = 0;
         for (to, msg) in items {
+            let to = to.as_ref();
             let extra = queued;
             if self.backend == Backend::Broker {
                 queued += self
                     .mgr
                     .fabric
                     .net
-                    .transfer_at_us(&hub, &to, msg.size_bytes(), now);
+                    .transfer_at_us(&self.shared.hub, to, msg.size_bytes(), now);
             }
             self.mgr.deliver(
-                &self.channel,
-                &self.group,
+                &self.shared,
+                (&*self.channel, &*self.group),
                 self.backend,
                 &self.me,
                 now,
-                &to,
+                to,
                 msg,
                 extra,
             )?;
+            n += 1;
         }
         Ok(n)
     }
 
-    /// Broadcast `msg` to all peers (Table 2 `broadcast`). The payload is
-    /// `Arc`-shared, so this is O(peers) pointer pushes, not copies; broker
-    /// fan-out serialises at the hub (see [`Self::send_fanout`]).
+    /// Fan a batch of per-peer messages out in one shot (see
+    /// [`Self::fanout_iter`] for the broker serialisation model).
+    pub fn send_fanout(&self, items: Vec<(String, Message)>) -> Result<usize> {
+        let now = self.clock.lock().unwrap().now();
+        self.fanout_iter(now, items.into_iter())
+    }
+
+    /// Broadcast `msg` to all peers (Table 2 `broadcast`). Fan-out walks
+    /// the cached peer list and clones the message per peer — payload,
+    /// kind and metadata are all `Arc`-shared, so each copy is three
+    /// pointer bumps; broker fan-out serialises at the hub (see
+    /// [`Self::fanout_iter`]).
     pub fn broadcast(&self, msg: Message) -> Result<usize> {
-        let items: Vec<(String, Message)> =
-            self.ends().into_iter().map(|p| (p, msg.clone())).collect();
-        self.send_fanout(items)
+        let peers = self.ends();
+        let now = self.clock.lock().unwrap().now();
+        self.fanout_iter(now, peers.iter().map(|p| (p.as_str(), msg.clone())))
     }
 
     /// Receive the earliest message from `end` (Table 2 `recv`). Blocks in
     /// blocking mode; yields [`crate::sched::Pending`] in cooperative mode.
     /// Merges the worker clock with the message's virtual arrival time.
     pub fn recv(&self, end: &str) -> Result<Message> {
-        Ok(self.take_match(&MatchSpec::From(end.to_string()))?.msg)
+        Ok(self.take_match(&MatchSpec::From(atom(end)))?.msg)
     }
 
     /// Receive the earliest message from `end` with the given kind.
     pub fn recv_kind(&self, end: &str, kind: &str) -> Result<Message> {
         Ok(self
-            .take_match(&MatchSpec::FromKind(end.to_string(), kind.to_string()))?
+            .take_match(&MatchSpec::FromKind(atom(end), atom(kind)))?
             .msg)
     }
 
     /// Receive the earliest message from *any* peer; returns `(from, msg)`.
-    pub fn recv_any(&self) -> Result<(String, Message)> {
+    pub fn recv_any(&self) -> Result<(Arc<str>, Message)> {
         let e = self.take_match(&MatchSpec::Any)?;
         Ok((e.from, e.msg))
     }
 
     /// Receive the earliest message of `kind` from any peer.
-    pub fn recv_any_kind(&self, kind: &str) -> Result<(String, Message)> {
-        let e = self.take_match(&MatchSpec::AnyKind(kind.to_string()))?;
+    pub fn recv_any_kind(&self, kind: &str) -> Result<(Arc<str>, Message)> {
+        let e = self.take_match(&MatchSpec::AnyKind(atom(kind)))?;
         Ok((e.from, e.msg))
     }
 
     /// Like [`Self::recv_any_kind`] but also returns the message's virtual
     /// arrival time (needed when the receiver must attribute per-sender
     /// timing independent of its own merged clock, e.g. CO-FL acks).
-    pub fn recv_any_kind_timed(&self, kind: &str) -> Result<(String, Message, VTime)> {
-        let e = self.take_match(&MatchSpec::AnyKind(kind.to_string()))?;
+    pub fn recv_any_kind_timed(&self, kind: &str) -> Result<(Arc<str>, Message, VTime)> {
+        let e = self.take_match(&MatchSpec::AnyKind(atom(kind)))?;
         Ok((e.from, e.msg, e.arrival))
     }
 
@@ -873,7 +1020,7 @@ impl ChannelHandle {
             }
             // no mail, and the only peer that could send it has left:
             // fail promptly rather than strand
-            if let Some(gone) = g.departed.iter().find(|d| spec.depends_on(d.as_str())) {
+            if let Some(gone) = g.departed.iter().find(|d| spec.depends_on(d)) {
                 bail!(
                     "peer '{gone}' left channel '{}' group '{}' while '{}' was waiting for its mail",
                     self.channel,
@@ -922,10 +1069,10 @@ impl ChannelHandle {
             if g.closed {
                 return Err(departed_err());
             }
-            let missing: Vec<String> = unique
+            let missing: Vec<Arc<str>> = unique
                 .iter()
-                .filter(|end| !g.queue.iter().any(|e| e.from.as_str() == end.as_str()))
-                .map(|e| (*e).clone())
+                .filter(|end| !g.queue.iter().any(|e| &*e.from == end.as_str()))
+                .map(|e| atom(e.as_str()))
                 .collect();
             if missing.is_empty() {
                 break;
@@ -962,7 +1109,7 @@ impl ChannelHandle {
         }
         let mut got: Vec<Envelope> = Vec::with_capacity(unique.len());
         for end in &unique {
-            let spec = MatchSpec::From((*end).clone());
+            let spec = MatchSpec::From(atom(end));
             let i = best_index(&g.queue, &spec).expect("presence checked above");
             got.push(g.queue.remove(i).unwrap());
         }
@@ -974,14 +1121,14 @@ impl ChannelHandle {
             }
         }
         got.sort_by(|a, b| (a.arrival, &a.from).cmp(&(b.arrival, &b.from)));
-        Ok(got.into_iter().map(|e| (e.from, e.msg)).collect())
+        Ok(got.into_iter().map(|e| (e.from.to_string(), e.msg)).collect())
     }
 
     /// Peek (without consuming) the earliest message from `end`
     /// (Table 2 `peek`). Does not advance the clock.
     pub fn peek(&self, end: &str) -> Option<Message> {
         let g = self.mailbox.inner.lock().unwrap();
-        best_index(&g.queue, &MatchSpec::From(end.to_string())).map(|i| g.queue[i].msg.clone())
+        best_index(&g.queue, &MatchSpec::From(atom(end))).map(|i| g.queue[i].msg.clone())
     }
 
     /// Non-blocking: is any message from `end` available?
@@ -1015,7 +1162,7 @@ mod tests {
         let (_m, a, b) = setup(Backend::P2p);
         a.send("b", Message::control("hello", 1)).unwrap();
         let msg = b.recv("a").unwrap();
-        assert_eq!(msg.kind, "hello");
+        assert_eq!(&*msg.kind, "hello");
         assert_eq!(msg.round, 1);
     }
 
@@ -1077,8 +1224,56 @@ mod tests {
         assert!(a.empty());
         let _t1 = mk("t1", "trainer");
         let _t2 = mk("t2", "trainer");
-        assert_eq!(a.ends(), vec!["t1".to_string(), "t2".into()]);
+        assert_eq!(*a.ends(), vec!["t1".to_string(), "t2".into()]);
         assert!(!a.empty());
+    }
+
+    #[test]
+    fn ends_cache_tracks_membership_epoch() {
+        // the epoch-stamped cache must serve identical Arcs while
+        // membership is stable and refresh exactly when it changes
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let mk = |id: &str, role: &str| {
+            mgr.join(
+                "c",
+                "g",
+                id,
+                role,
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+            )
+            .unwrap()
+        };
+        let a = mk("agg", "aggregator");
+        let _t1 = mk("t1", "trainer");
+        let e1 = a.ends();
+        let e2 = a.ends();
+        assert!(Arc::ptr_eq(&e1, &e2), "stable membership must reuse the cache");
+        let t2 = mk("t2", "trainer");
+        assert_eq!(*a.ends(), vec!["t1".to_string(), "t2".into()]);
+        t2.leave();
+        assert_eq!(*a.ends(), vec!["t1".to_string()]);
+        mgr.evict("t1", 0);
+        assert!(a.ends().is_empty());
+    }
+
+    #[test]
+    fn message_clones_share_payload_kind_and_meta() {
+        let mut meta = Json::obj();
+        meta.insert("samples", 64usize);
+        let msg = Message::floats("update", 3, Arc::new(vec![1.0; 16])).with_meta(Json::Obj(meta));
+        let copy = msg.clone();
+        assert!(Arc::ptr_eq(&msg.kind, &copy.kind), "kind must be shared");
+        assert!(Arc::ptr_eq(&msg.meta, &copy.meta), "meta must be shared");
+        let (Payload::Floats(a), Payload::Floats(b)) = (&msg.payload, &copy.payload) else {
+            panic!("floats payload expected");
+        };
+        assert!(Arc::ptr_eq(a, b), "payload must be shared");
+        assert_eq!(msg.size_bytes(), copy.size_bytes());
+        // interning: two messages with the same kind share one atom
+        let other = Message::control("update", 9);
+        assert!(Arc::ptr_eq(&msg.kind, &other.kind));
     }
 
     #[test]
@@ -1099,7 +1294,7 @@ mod tests {
         let w = mk("west-agg", "west", "aggregator");
         let _w1 = mk("w1", "west", "trainer");
         let _e1 = mk("e1", "east", "trainer");
-        assert_eq!(w.ends(), vec!["w1".to_string()]);
+        assert_eq!(*w.ends(), vec!["w1".to_string()]);
     }
 
     #[test]
@@ -1198,7 +1393,7 @@ mod tests {
         let m = b.recv_kind("a", "weights").unwrap();
         assert_eq!(m.round, 2);
         let m = b.recv("a").unwrap();
-        assert_eq!(m.kind, "report");
+        assert_eq!(&*m.kind, "report");
     }
 
     #[test]
@@ -1294,7 +1489,7 @@ mod tests {
         let b2 = mgr
             .join("c", "g", "b", "aggregator", Backend::InProc, clock)
             .unwrap();
-        assert_eq!(b2.recv("a").unwrap().kind, "kept");
+        assert_eq!(&*b2.recv("a").unwrap().kind, "kept");
     }
 
     #[test]
@@ -1317,9 +1512,9 @@ mod tests {
         let t0 = mk("t0");
         let t1 = mk("t1");
         let t2 = mk("t2");
-        assert_eq!(t0.ends(), vec!["t1".to_string(), "t2".into()]);
-        assert_eq!(t1.ends(), vec!["t0".to_string(), "t2".into()]);
-        assert_eq!(t2.ends(), vec!["t0".to_string(), "t1".into()]);
+        assert_eq!(*t0.ends(), vec!["t1".to_string(), "t2".into()]);
+        assert_eq!(*t1.ends(), vec!["t0".to_string(), "t2".into()]);
+        assert_eq!(*t2.ends(), vec!["t0".to_string(), "t1".into()]);
         assert_eq!(mgr.members("ring", "g").len(), 3);
         // single member: no peers, still a valid (empty) channel end set
         let solo = mgr
@@ -1477,7 +1672,7 @@ mod tests {
         // peers see the departure and updated membership
         let err = a.recv("t1").unwrap_err();
         assert!(format!("{err:#}").contains("left channel"), "{err:#}");
-        assert_eq!(a.ends(), vec!["t2".to_string()]);
+        assert_eq!(*a.ends(), vec!["t2".to_string()]);
         // evicting an unknown worker is a no-op
         assert_eq!(mgr.evict("ghost", 5), 0);
     }
@@ -1503,9 +1698,15 @@ mod tests {
         let _g = mk("global", "global-aggregator");
         // ends() mixes every other role; ends_of_role scopes to one
         assert_eq!(agg.ends().len(), 3);
-        assert_eq!(agg.ends_of_role("trainer"), vec!["t1".to_string(), "t2".into()]);
-        assert_eq!(agg.ends_of_role("global-aggregator"), vec!["global".to_string()]);
+        assert_eq!(*agg.ends_of_role("trainer"), vec!["t1".to_string(), "t2".into()]);
+        assert_eq!(
+            *agg.ends_of_role("global-aggregator"),
+            vec!["global".to_string()]
+        );
         assert!(agg.ends_of_role("coordinator").is_empty());
+        // role caches refresh on membership change too
+        let _t3 = mk("t3", "trainer");
+        assert_eq!(agg.ends_of_role("trainer").len(), 3);
     }
 
     #[test]
@@ -1532,8 +1733,8 @@ mod tests {
         a.send("agg", Message::control("u", 0)).unwrap();
         let (from1, _) = agg.recv_any().unwrap();
         let (from2, _) = agg.recv_any().unwrap();
-        assert_eq!(from1, "a");
-        assert_eq!(from2, "z");
+        assert_eq!(&*from1, "a");
+        assert_eq!(&*from2, "z");
     }
 
     #[test]
@@ -1559,7 +1760,7 @@ mod tests {
         let a2 = mk(&j2, "agg", "aggregator");
         let t2 = mk(&j2, "t0", "trainer");
         // membership is per scope, not per fabric
-        assert_eq!(a1.ends(), vec!["t0".to_string()]);
+        assert_eq!(*a1.ends(), vec!["t0".to_string()]);
         assert_eq!(j1.members("param-channel", "default").len(), 2);
         assert_eq!(j2.members("param-channel", "default").len(), 2);
         // mail never crosses scopes: each aggregator sees only its own
@@ -1596,7 +1797,7 @@ mod tests {
         assert_eq!(j1.evict("t0", 1), 1);
         assert!(j1.members("c", "g") == vec!["agg".to_string()]);
         // job-2's identically named worker is untouched and still works
-        assert_eq!(a2.ends(), vec!["t0".to_string()]);
+        assert_eq!(*a2.ends(), vec!["t0".to_string()]);
         t2.send("agg", Message::control("alive", 3)).unwrap();
         assert_eq!(a2.recv("t0").unwrap().round, 3);
         // an unscoped view on the same fabric cannot evict scoped members
@@ -1605,8 +1806,8 @@ mod tests {
 
     #[test]
     fn separator_in_channel_or_scope_names_cannot_alias_scopes() {
-        // membership keys are structured triples, not joined strings: a
-        // channel literally named with the hub separator works in an
+        // membership routes are packed symbol triples, not joined strings:
+        // a channel literally named with the hub separator works in an
         // unscoped manager (including evict)...
         let root = ChannelManager::new(Arc::new(VirtualNet::default()));
         let mk = |mgr: &Arc<ChannelManager>, ch: &str, id: &str, role: &str| {

@@ -462,6 +462,7 @@ pub(crate) fn prepare_expanded(
             .take()
             .unwrap_or_else(|| vec![0f32; opts.compute.d_pad()]),
     );
+    let pool = crate::runtime::TensorPool::new(opts.compute.d_pad());
     let job = Arc::new(JobRuntime {
         spec: runtime_spec,
         chan_mgr,
@@ -472,6 +473,7 @@ pub(crate) fn prepare_expanded(
         test_set: Arc::new(test),
         time_model: opts.time_model,
         init_flat,
+        pool,
         timeline: timeline.clone(),
         programs,
         flavor,

@@ -1,0 +1,209 @@
+//! Global symbol interner — the fabric's answer to per-message string tax.
+//!
+//! Every name the channel fabric routes by (worker, channel, group, scope,
+//! message kind) is interned once into an `Arc<str>` **atom**; after the
+//! first sighting, handing the name around is a pointer clone, map lookups
+//! hash a `&str` borrow, and equality checks compare short strings that are
+//! usually pointer-equal. Channel identity — the `(scope, channel, group)`
+//! triple the old `ChannelManager::key` built as three fresh `String`s per
+//! call — packs into a single [`Route`]: each component resolves to a
+//! `u32` [`Symbol`] and the three symbols pack into one `u64`, so the
+//! membership shard map is keyed by a machine word instead of a
+//! heap-allocated tuple.
+//!
+//! The interner is process-global and append-only. That is deliberate:
+//! names are tiny, bounded by the deployment's vocabulary (worker ids,
+//! channel names, the closed set of message kinds), and a stable global id
+//! space means scoped views of one shared fabric agree on symbols without
+//! coordination. Nothing orders by symbol id — all user-visible ordering
+//! stays lexicographic on the underlying strings — so interning order
+//! (test interleaving, job admission order) can never leak into results.
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Interned name id. Dense, starting at 0, never recycled.
+pub type Symbol = u32;
+
+/// Bits per route component. 2^21 ≈ 2M distinct names — two orders of
+/// magnitude above the 10k-worker design point; exceeding it makes
+/// [`Route::pack`] return `None`, which the channel layer surfaces as a
+/// clean join error (a long-lived control plane rejects the job instead
+/// of aborting).
+const SYM_BITS: u32 = 21;
+const SYM_MASK: u64 = (1 << SYM_BITS) - 1;
+
+/// A channel's packed identity: `(scope, channel, group)` in one `u64`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Route(u64);
+
+impl Route {
+    /// Pack three symbols into one route word. `None` when any component
+    /// is past the 21-bit budget — callers (channel `join`) surface that
+    /// as a clean error instead of aborting a worker thread.
+    pub fn pack(scope: Symbol, channel: Symbol, group: Symbol) -> Option<Self> {
+        if [scope, channel, group].iter().any(|&s| (s as u64) > SYM_MASK) {
+            return None;
+        }
+        Some(Route(
+            ((scope as u64) << (2 * SYM_BITS)) | ((channel as u64) << SYM_BITS) | group as u64,
+        ))
+    }
+
+    pub fn scope_sym(&self) -> Symbol {
+        ((self.0 >> (2 * SYM_BITS)) & SYM_MASK) as Symbol
+    }
+
+    pub fn channel_sym(&self) -> Symbol {
+        ((self.0 >> SYM_BITS) & SYM_MASK) as Symbol
+    }
+
+    pub fn group_sym(&self) -> Symbol {
+        (self.0 & SYM_MASK) as Symbol
+    }
+
+    /// A well-mixed hash of the packed word (the raw packing is too
+    /// structured for direct modulo sharding: common groups share low
+    /// bits).
+    pub fn mix(&self) -> u64 {
+        // splitmix64 finalizer
+        let mut z = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+struct Interner {
+    map: HashMap<Arc<str>, Symbol>,
+    names: Vec<Arc<str>>,
+}
+
+fn table() -> &'static RwLock<Interner> {
+    static TABLE: OnceLock<RwLock<Interner>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        RwLock::new(Interner {
+            map: HashMap::new(),
+            names: Vec::new(),
+        })
+    })
+}
+
+/// Intern `s`, returning its dense id. Read-locked fast path; the write
+/// lock is only taken the first time a name is seen.
+pub fn sym(s: &str) -> Symbol {
+    if let Some(&id) = table().read().unwrap().map.get(s) {
+        return id;
+    }
+    let mut g = table().write().unwrap();
+    if let Some(&id) = g.map.get(s) {
+        return id;
+    }
+    let atom: Arc<str> = Arc::from(s);
+    let id = g.names.len() as Symbol;
+    g.names.push(atom.clone());
+    g.map.insert(atom, id);
+    id
+}
+
+/// Intern `s`, returning the shared atom. After the first call for a given
+/// name this allocates nothing: the stored `Arc<str>` is cloned.
+pub fn atom(s: &str) -> Arc<str> {
+    if let Some((k, _)) = table().read().unwrap().map.get_key_value(s) {
+        return k.clone();
+    }
+    let mut g = table().write().unwrap();
+    if let Some((k, _)) = g.map.get_key_value(s) {
+        return k.clone();
+    }
+    let atom: Arc<str> = Arc::from(s);
+    let id = g.names.len() as Symbol;
+    g.names.push(atom.clone());
+    g.map.insert(atom.clone(), id);
+    atom
+}
+
+/// The name behind a symbol (diagnostics; panics on a foreign id).
+pub fn name(id: Symbol) -> Arc<str> {
+    table().read().unwrap().names[id as usize].clone()
+}
+
+/// Pack a `(scope, channel, group)` channel identity into a [`Route`];
+/// `None` once the symbol space is exhausted (> 2^21 distinct names).
+pub fn route(scope: &str, channel: &str, group: &str) -> Option<Route> {
+    Route::pack(sym(scope), sym(channel), sym(group))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sym_is_stable_and_dense() {
+        let a = sym("intern-test-alpha");
+        let b = sym("intern-test-beta");
+        assert_ne!(a, b);
+        assert_eq!(a, sym("intern-test-alpha"));
+        assert_eq!(b, sym("intern-test-beta"));
+    }
+
+    #[test]
+    fn atom_returns_the_shared_allocation() {
+        let a1 = atom("intern-test-atom");
+        let a2 = atom("intern-test-atom");
+        assert!(Arc::ptr_eq(&a1, &a2), "atoms must share one allocation");
+        assert_eq!(&*a1, "intern-test-atom");
+        assert_eq!(&*name(sym("intern-test-atom")), "intern-test-atom");
+    }
+
+    #[test]
+    fn route_roundtrips_components() {
+        let r = route("intern-scope", "intern-chan", "intern-group").unwrap();
+        assert_eq!(r.scope_sym(), sym("intern-scope"));
+        assert_eq!(r.channel_sym(), sym("intern-chan"));
+        assert_eq!(r.group_sym(), sym("intern-group"));
+        // identical triple -> identical route; any differing component
+        // changes it
+        assert_eq!(r, route("intern-scope", "intern-chan", "intern-group").unwrap());
+        assert_ne!(r, route("intern-scope", "intern-chan", "intern-group2").unwrap());
+        assert_ne!(r, route("", "intern-chan", "intern-group").unwrap());
+    }
+
+    #[test]
+    fn separators_cannot_alias_routes() {
+        // structured packing, not string joining: a name containing the
+        // old separator cannot collide with a scoped triple
+        let a = route("a", "b::c", "g").unwrap();
+        let b = route("a::b", "c", "g").unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn mix_spreads_structured_routes() {
+        // many channels sharing one group must not collapse onto a few
+        // shards under the mixed hash
+        let mut shards = std::collections::HashSet::new();
+        for i in 0..64 {
+            let r = route("", &format!("intern-mix-{i}"), "default").unwrap();
+            shards.insert((r.mix() % 64) as u8);
+        }
+        assert!(shards.len() > 16, "only {} shards hit", shards.len());
+    }
+
+    #[test]
+    fn concurrent_interning_agrees() {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    (0..100)
+                        .map(|i| sym(&format!("intern-race-{i}")))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let results: Vec<Vec<Symbol>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for w in results.windows(2) {
+            assert_eq!(w[0], w[1]);
+        }
+    }
+}

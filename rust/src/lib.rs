@@ -53,11 +53,13 @@
 
 pub mod agent;
 pub mod algos;
+pub mod alloc_track;
 pub mod channel;
 pub mod control;
 pub mod controlplane;
 pub mod data;
 pub mod deploy;
+pub mod intern;
 pub mod json;
 pub mod metrics;
 pub mod model;

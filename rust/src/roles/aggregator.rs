@@ -10,6 +10,15 @@
 //! after `upload` (upload-delay feedback that drives the coordinator's
 //! load-balancing scheme).
 //!
+//! **Streaming aggregation**: the collect is a quorum loop that folds each
+//! update into a [`crate::runtime::Accumulator`] *as it arrives* — steady
+//! -state memory is one O(d) buffer plus transient staging (out-of-order
+//! arrivals stage as `Arc` clones until their fold slot is reached), and
+//! folded update buffers return to the job's `TensorPool` immediately.
+//! The fold order is the sorted expected-sender order (see the runtime
+//! module docs), so results stay byte-identical across executors and
+//! runner-pool sizes.
+//!
 //! **Churn safety** (live topology extension): the aggregator never
 //! freezes a peer list. Distribution and collection run against the
 //! *currently alive* intersection of its trainer set with channel
@@ -26,7 +35,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::channel::{Message, Payload};
 use crate::json::Json;
-use crate::net::VTime;
+use crate::runtime::Accumulator;
 use crate::workflow::{Composer, Tasklet};
 
 use super::{chain_program, Program, WorkerEnv};
@@ -46,9 +55,15 @@ pub struct AggregatorCtx {
     mean_loss: f64,
     /// Virtual send time of the last upload (for delay reporting).
     upload_sent_at: u64,
-    /// Current-round updates received so far (re-entrancy across
-    /// cooperative yields of the quorum collect).
-    pending_updates: Vec<(String, Message, VTime)>,
+    /// Trainers this round's weights were distributed to — the expected
+    /// upload universe the streaming collect folds over.
+    round_targets: Vec<String>,
+    /// In-flight streaming fold (re-entrancy across cooperative yields of
+    /// the quorum collect). O(d), not O(trainers·d).
+    acc: Option<Accumulator>,
+    /// Per-update losses collected this round (sender, loss) — summed in
+    /// sorted sender order at round end for a deterministic mean.
+    losses: Vec<(Arc<str>, f64)>,
     /// The trainer-side role on `param-channel` (the other endpoint).
     data_role: String,
     pub done: bool,
@@ -80,7 +95,9 @@ impl AggregatorCtx {
             total_samples: 0.0,
             mean_loss: f64::NAN,
             upload_sent_at: 0,
-            pending_updates: Vec::new(),
+            round_targets: Vec::new(),
+            acc: None,
+            losses: Vec::new(),
             data_role,
             done: false,
         }
@@ -91,7 +108,7 @@ impl AggregatorCtx {
             Some(t) => Ok(t.clone()),
             // role-scoped, not ends(): after a live extension the default
             // group also holds the legacy parent and sibling aggregators
-            None => Ok(self.env.chan("param-channel")?.ends_of_role(&self.data_role)),
+            None => Ok((*self.env.chan("param-channel")?.ends_of_role(&self.data_role)).clone()),
         }
     }
 
@@ -123,12 +140,12 @@ fn recv_global(c: &mut AggregatorCtx) -> Result<()> {
     let parent = c.global_parent()?;
     loop {
         let msg = c.env.chan("agg-channel")?.recv(&parent)?;
-        match msg.kind.as_str() {
+        match &*msg.kind {
             "assign" => {
                 // live extension: the sequencer's trainer partition for
                 // this aggregator; precedes the round's weights. Consuming
                 // it is idempotent across re-entries (set-and-continue).
-                c.assigned = msg.meta.get("trainers").as_arr().map(|a| {
+                c.assigned = msg.meta().get("trainers").as_arr().map(|a| {
                     a.iter()
                         .filter_map(|t| t.as_str().map(str::to_string))
                         .collect()
@@ -139,7 +156,11 @@ fn recv_global(c: &mut AggregatorCtx) -> Result<()> {
                 let Payload::Floats(w) = msg.payload else {
                     bail!("weights without floats");
                 };
-                c.weights = w;
+                // recycle the superseded model (the mean installed by last
+                // round's collect): by now every upstream/downstream
+                // reference has been consumed, so it returns to the pool
+                let old = std::mem::replace(&mut c.weights, w);
+                c.env.job.pool.reclaim(old);
                 c.round = msg.round;
             }
             "skip" => {
@@ -175,11 +196,14 @@ fn distribute(c: &mut AggregatorCtx) -> Result<()> {
     let param = c.env.chan("param-channel")?;
     let msg = Message::floats("weights", c.round, c.weights.clone());
     let mut items = Vec::with_capacity(trainers.len());
-    for t in trainers {
+    for t in &trainers {
         c.env.job.metrics.add_traffic(msg.size_bytes());
-        items.push((t, msg.clone()));
+        items.push((t.clone(), msg.clone()));
     }
     param.send_fanout(items)?;
+    // the streaming collect's expected upload universe: exactly the
+    // trainers that received this round's weights
+    c.round_targets = trainers;
     Ok(())
 }
 
@@ -191,60 +215,73 @@ fn collect_and_aggregate(c: &mut AggregatorCtx) -> Result<()> {
     // Quorum collect against *current* membership (not a frozen peer
     // list): the target re-computes on every re-entry, so departures
     // shrink it instead of blocking the round. Partial progress lives in
-    // `c.pending_updates` (re-entrant across cooperative yields).
+    // the streaming accumulator in `c.acc` (re-entrant across
+    // cooperative yields); each update is folded — and its buffer
+    // recycled — the moment its fold slot is reached.
+    // The quorum target is computed per tasklet (re-)entry, not per
+    // message: a mid-round departure wakes the parked collect, which
+    // yields and re-enters here to re-count — the fold path itself stays
+    // free of O(k) membership scans.
     let alive = c.alive_trainers()?;
     if alive.is_empty() && !elastic {
         bail!("aggregator '{}' has no trainers", c.env.cfg.id);
     }
     let target = super::quorum_target(alive.len(), c.env.job.tcfg.quorum);
-    c.pending_updates.retain(|(_, m, _)| m.round == c.round);
-    while c.pending_updates.len() < target {
-        let (from, msg, arrival) = c
+    if c.acc.is_none() {
+        c.acc = Some(Accumulator::new(
+            c.env.job.compute.clone(),
+            c.env.job.pool.clone(),
+            c.round_targets.clone(),
+        ));
+        c.losses.clear();
+    }
+    while c.acc.as_ref().map(|a| a.len()).unwrap_or(0) < target {
+        let (from, msg, _arrival) = c
             .env
             .chan("param-channel")?
             .recv_any_kind_timed("update")?;
         if msg.round != c.round {
-            continue; // straggler update from a past round: drop
+            // straggler update from a past round: drop (recycling its
+            // buffer if this was the last reference)
+            if let Payload::Floats(w) = msg.payload {
+                c.env.job.pool.reclaim(w);
+            }
+            continue;
         }
-        c.pending_updates.push((from, msg, arrival));
+        let samples = msg.meta().get("samples").as_f64().unwrap_or(1.0);
+        let loss = msg.meta().get("loss").as_f64().unwrap_or(0.0);
+        let Payload::Floats(w) = msg.payload else {
+            bail!("update without floats");
+        };
+        c.acc
+            .as_mut()
+            .expect("accumulator created above")
+            .push(&from, w, samples)?;
+        c.losses.push((from, loss));
     }
-    let mut got = std::mem::take(&mut c.pending_updates);
-    if got.is_empty() {
+    let acc = c.acc.take().expect("accumulator created above");
+    let mut losses = std::mem::take(&mut c.losses);
+    if losses.is_empty() {
         // all trainers departed: keep the model, contribute zero weight
+        let _ = acc.finish()?;
         c.total_samples = 0.0;
         c.mean_loss = 0.0;
         return Ok(());
     }
-    // deterministic aggregation order — same sort recv_fifo applied
-    got.sort_by(|a, b| (a.2, &a.0).cmp(&(b.2, &b.0)));
-    let mut updates: Vec<Arc<Vec<f32>>> = Vec::with_capacity(got.len());
-    let mut samples: Vec<f64> = Vec::with_capacity(got.len());
-    let mut losses = 0.0;
-    for (_, msg, _) in &got {
-        let Payload::Floats(w) = &msg.payload else {
-            bail!("update without floats");
-        };
-        updates.push(w.clone());
-        samples.push(msg.meta.get("samples").as_f64().unwrap_or(1.0));
-        losses += msg.meta.get("loss").as_f64().unwrap_or(0.0);
-    }
-    c.total_samples = samples.iter().sum();
-    c.mean_loss = losses / got.len() as f64;
-    // zero-sample updates can reach us under churn; degrade to a uniform
-    // mean rather than dividing by zero
-    let weights: Vec<f32> = if c.total_samples > 0.0 {
-        samples
-            .iter()
-            .map(|&s| (s / c.total_samples) as f32)
-            .collect()
-    } else {
-        vec![1.0 / samples.len() as f32; samples.len()]
-    };
-    let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+    // deterministic loss mean: sum in sorted sender order, independent of
+    // the (interleaving-dependent) consumption order
+    losses.sort_by(|a, b| a.0.cmp(&b.0));
+    c.mean_loss = losses.iter().map(|(_, l)| *l).sum::<f64>() / losses.len() as f64;
     let t0 = std::time::Instant::now();
-    let agg = crate::runtime::aggregate_any(c.env.job.compute.as_ref(), &refs, &weights)?;
+    let out = acc.finish()?;
+    c.total_samples = out.total_weight;
+    if let Some(mean) = out.mean {
+        let old = std::mem::replace(&mut c.weights, mean);
+        // the superseded model goes back to the pool once every sibling
+        // reference (global broadcast, in-flight mail) is gone
+        c.env.job.pool.reclaim(old);
+    }
     c.env.charge(t0);
-    c.weights = Arc::new(agg);
     Ok(())
 }
 
@@ -278,10 +315,10 @@ fn get_assignment(c: &mut AggregatorCtx) -> Result<()> {
         .cloned()
         .context("no coordinator on coord-a-channel")?;
     let msg = chan.recv(&coord)?;
-    match msg.kind.as_str() {
+    match &*msg.kind {
         "assign" => {
-            c.active = msg.meta.get("active").as_bool().unwrap_or(true);
-            c.assigned = msg.meta.get("trainers").as_arr().map(|a| {
+            c.active = msg.meta().get("active").as_bool().unwrap_or(true);
+            c.assigned = msg.meta().get("trainers").as_arr().map(|a| {
                 a.iter()
                     .filter_map(|t| t.as_str().map(str::to_string))
                     .collect()
@@ -304,7 +341,7 @@ fn report(c: &mut AggregatorCtx) -> Result<()> {
     let parent = c.global_parent()?;
     let ack = agg_chan.recv_kind(&parent, "ack")?;
     // delay = when the global saw OUR upload, minus when we sent it
-    let seen_at = ack.meta.get("arrival_us").as_f64().unwrap_or(0.0) as u64;
+    let seen_at = ack.meta().get("arrival_us").as_f64().unwrap_or(0.0) as u64;
     let delay = seen_at.saturating_sub(c.upload_sent_at);
     let coord_chan = c.env.chan("coord-a-channel")?;
     let coord = coord_chan

@@ -59,7 +59,7 @@ impl RingAllReduce {
 
     fn new(chan: &ChannelHandle, buf: Vec<f32>, mean: bool) -> Self {
         let me = chan.worker_id().to_string();
-        let mut members = chan.ends();
+        let mut members: Vec<String> = (*chan.ends()).clone();
         members.push(me.clone());
         members.sort();
         let k = members.len();
@@ -208,7 +208,7 @@ pub fn ring_allreduce_sum(chan: &ChannelHandle, buf: &mut [f32]) -> Result<()> {
 /// behalf of the cluster (Hybrid FL's "single copy of the cluster model").
 pub fn is_delegate(chan: &ChannelHandle) -> bool {
     let me = chan.worker_id().to_string();
-    let mut members = chan.ends();
+    let mut members: Vec<String> = (*chan.ends()).clone();
     members.push(me.clone());
     members.sort();
     members[0] == me

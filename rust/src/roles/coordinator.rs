@@ -192,7 +192,7 @@ fn assign(c: &mut CoordinatorCtx) -> Result<()> {
 
     // aggregators: trainer set + active flag
     let achan = c.env.chan("coord-a-channel")?;
-    for a in &aggs {
+    for a in aggs.iter() {
         let mut meta = Json::obj();
         let is_active = c.active.contains(a);
         meta.insert("active", is_active);
@@ -212,7 +212,7 @@ fn assign(c: &mut CoordinatorCtx) -> Result<()> {
         "aggregators",
         Json::Arr(c.active.iter().cloned().map(Json::Str).collect()),
     );
-    for g in &global {
+    for g in global.iter() {
         gchan.send(
             g,
             Message::control("assign", c.round).with_meta(Json::Obj(meta.clone())),
@@ -229,10 +229,10 @@ fn collect_reports(c: &mut CoordinatorCtx) -> Result<()> {
     let got = achan.recv_fifo(&c.active)?;
     let mut delays = HashMap::new();
     for (from, msg) in got {
-        if msg.kind != "report" {
+        if &*msg.kind != "report" {
             bail!("coordinator expected 'report', got '{}'", msg.kind);
         }
-        let delay = msg.meta.get("delay_us").as_f64().unwrap_or(0.0) as u64;
+        let delay = msg.meta().get("delay_us").as_f64().unwrap_or(0.0) as u64;
         c.env
             .job
             .metrics

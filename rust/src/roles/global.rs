@@ -12,6 +12,18 @@
 //!   asynchronous buffered path (one chain, different tasklets — the
 //!   composer makes the swap explicit and inspectable).
 //!
+//! **Streaming collect**: the synchronous path folds every child update
+//! into a [`crate::runtime::Accumulator`] as it is received — one O(d)
+//! fold buffer (plus transient staging for out-of-order arrivals)
+//! instead of unconditionally retaining all O(children·d) updates, with
+//! folded buffers recycled through the job's `TensorPool`. Fold order is
+//! the sorted expected-sender order, which is interleaving-independent,
+//! so executor parity stays byte-exact. Only per-update *metadata*
+//! (sender, loss, arrival) is kept to round end, for acks and selector
+//! feedback. The hybrid path (one update per cluster, senders unknown in
+//! advance) keeps the buffered collect — including its legacy
+//! uniform-mean fallback for zero-total-weight rounds.
+//!
 //! CO-FL variant (paper Fig 9, §6.1): `get_coord_ends` inserted before
 //! `distribute` (the coordinator decides which aggregators participate) and
 //! `end_of_train` **removed** — the coordinator owns termination.
@@ -37,6 +49,7 @@ use crate::algos::{AggregationPolicy, FedBuff, ServerOpt};
 use crate::channel::{Message, Payload};
 use crate::json::Json;
 use crate::net::VTime;
+use crate::runtime::Accumulator;
 use crate::select::{make_selector, ClientStats, Selector};
 use crate::workflow::{Composer, Tasklet};
 
@@ -60,10 +73,17 @@ pub struct GlobalCtx {
     /// Hybrid FL: number of clusters expected to upload (delegates only);
     /// None for non-hybrid topologies.
     hybrid_clusters: Option<usize>,
-    /// Updates received so far this round. Persisted in the context so the
-    /// collect tasklet is re-entrant: a cooperative yield mid-collection
-    /// keeps what already arrived and resumes the receive loop.
-    pending_updates: Vec<(String, Message, VTime)>,
+    /// In-flight streaming fold for the synchronous collect (re-entrant
+    /// across cooperative yields). O(d), not O(children·d).
+    acc: Option<Accumulator>,
+    /// Per-update metadata kept to round end: `(sender, loss, arrival)` —
+    /// pointer-sized, feeds acks and selector stats.
+    col: Vec<(Arc<str>, f64, VTime)>,
+    /// Hybrid-path updates received so far this round. Persisted in the
+    /// context so the collect tasklet is re-entrant: a cooperative yield
+    /// mid-collection keeps what already arrived and resumes the receive
+    /// loop.
+    pending_updates: Vec<(Arc<str>, Message, VTime)>,
     /// Live topology extension enabled (the job carries a timeline).
     elastic: bool,
     /// Membership changed since the last trainer partition was sent to the
@@ -121,6 +141,8 @@ impl GlobalCtx {
             round_start: 0,
             ack_updates: coordinated,
             hybrid_clusters,
+            acc: None,
+            col: Vec::new(),
             pending_updates: Vec::new(),
             elastic,
             assign_dirty: false,
@@ -145,7 +167,7 @@ impl GlobalCtx {
     fn children(&self) -> Result<Vec<String>> {
         match &self.active_children {
             Some(c) => Ok(c.clone()),
-            None => Ok(self.env.chan(self.children_channel())?.ends()),
+            None => Ok((*self.env.chan(self.children_channel())?.ends()).clone()),
         }
     }
 }
@@ -256,7 +278,9 @@ fn distribute(c: &mut GlobalCtx) -> Result<()> {
     let chan_name = c.children_channel();
     let chan = c.env.chan(chan_name)?;
     c.round_start = chan.now();
-    let w = Arc::new(c.flat.clone());
+    // the round's model snapshot comes from the pool — steady-state
+    // rounds reuse the buffer the previous round's receivers released
+    let w = c.env.job.pool.take_copy(&c.flat);
     let all = c.children()?;
     let mut items = Vec::with_capacity(all.len());
     for child in all {
@@ -272,58 +296,83 @@ fn distribute(c: &mut GlobalCtx) -> Result<()> {
     Ok(())
 }
 
+/// Synchronous collect: stream every update into the accumulator as it
+/// arrives, then apply the server optimizer once the quorum target is met.
 fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
     if c.done {
         return Ok(());
     }
+    if c.hybrid_clusters.is_some() {
+        return collect_hybrid(c);
+    }
     let chan_name = c.children_channel();
-    // Collect message-by-message; partial progress lives in
-    // `c.pending_updates`, making this tasklet re-entrant across
-    // cooperative yields (nothing is re-received, no ack is duplicated).
-    //
+    if c.acc.is_none() {
+        // the fold universe is this round's selected set; quorum decides
+        // how many of them we wait for
+        c.acc = Some(Accumulator::new(
+            c.env.job.compute.clone(),
+            c.env.job.pool.clone(),
+            c.selected.clone(),
+        ));
+        c.col.clear();
+    }
     // The target is quorum- and membership-aware: `ceil(quorum * alive)`
     // over the *currently joined* selected children, recomputed on every
-    // re-entry. A child that departs mid-round shrinks the target instead
-    // of blocking the round (eviction wakes this collect so it re-counts).
-    let expected = match c.hybrid_clusters {
-        // Hybrid: one update per cluster, from whichever delegate.
-        Some(k) => k,
-        None => {
-            let members = c.env.chan(chan_name)?.ends();
-            let alive = c.selected.iter().filter(|s| members.contains(*s)).count();
-            super::quorum_target(alive, c.env.job.tcfg.quorum)
-        }
+    // tasklet (re-)entry — a child that departs mid-round wakes this
+    // collect, which yields and re-enters to re-count, so departures
+    // shrink the target instead of blocking the round while the fold
+    // path itself stays free of O(k) membership scans.
+    let target = {
+        let members = c.env.chan(chan_name)?.ends();
+        let alive = c.selected.iter().filter(|s| members.contains(*s)).count();
+        super::quorum_target(alive, c.env.job.tcfg.quorum)
     };
-    if c.hybrid_clusters.is_none() {
-        // quorum fractions leave slow updates of past rounds queued; they
-        // are stale by the time they arrive and must not count here
-        c.pending_updates.retain(|(_, m, _)| m.round == c.round);
-    }
-    while c.pending_updates.len() < expected {
+    while c.acc.as_ref().map(|a| a.len()).unwrap_or(0) < target {
         let (from, msg, arrival) = {
             let chan = c.env.chan(chan_name)?;
             chan.recv_any_kind_timed("update")?
         };
-        if c.hybrid_clusters.is_none() && msg.round != c.round {
-            continue; // straggler update from a past round: drop
-        }
-        if c.hybrid_clusters.is_none() && !c.selected.contains(&from) {
-            if c.elastic {
-                continue; // e.g. a retired child's in-flight update
+        if msg.round != c.round {
+            // quorum fractions leave slow updates of past rounds queued;
+            // they are stale by the time they arrive and must not count
+            if let Payload::Floats(w) = msg.payload {
+                c.env.job.pool.reclaim(w);
             }
-            anyhow::bail!("unexpected update from unselected child '{from}'");
+            continue;
         }
-        c.pending_updates.push((from, msg, arrival));
+        if !c.selected.iter().any(|s| s.as_str() == &*from) {
+            if c.elastic {
+                // e.g. a retired child's in-flight update: drop it, but
+                // recycle its buffer like the stale-round path above
+                if let Payload::Floats(w) = msg.payload {
+                    c.env.job.pool.reclaim(w);
+                }
+                continue;
+            }
+            bail!("unexpected update from unselected child '{from}'");
+        }
+        let samples = msg.meta().get("samples").as_f64().unwrap_or(1.0);
+        let loss = msg.meta().get("loss").as_f64().unwrap_or(0.0);
+        let Payload::Floats(w) = msg.payload else {
+            bail!("update without floats");
+        };
+        c.acc
+            .as_mut()
+            .expect("accumulator created above")
+            .push(&from, w, samples)?;
+        c.col.push((from, loss, arrival));
     }
-    let mut got = std::mem::take(&mut c.pending_updates);
-    if got.is_empty() {
+    let acc = c.acc.take().expect("accumulator created above");
+    let mut col = std::mem::take(&mut c.col);
+    if col.is_empty() {
         // every selected child departed this round: keep the model
+        let _ = acc.finish()?;
         return Ok(());
     }
-    // Aggregate in virtual-arrival order with a deterministic sender
-    // tie-break, so threaded and cooperative execution produce
-    // bit-identical weighted sums.
-    got.sort_by(|a, b| (a.2, &a.0).cmp(&(b.2, &b.0)));
+    // Metadata in virtual-arrival order with a deterministic sender
+    // tie-break — the same order the buffered collect used, so ack send
+    // order and selector feedback stay bit-identical across executors.
+    col.sort_by(|a, b| (a.2, &a.0).cmp(&(b.2, &b.0)));
     if c.ack_updates {
         // Acks go out after the collection barrier (send time = the
         // round's merged clock, independent of consumption order — the
@@ -331,35 +380,84 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
         // virtual arrival time, so the sender's delay measurement is
         // independent of this node's (straggler-merged) clock.
         let chan = c.env.chan(chan_name)?;
+        for (from, _, arrival) in &col {
+            let mut meta = Json::obj();
+            meta.insert("arrival_us", *arrival);
+            chan.send(from, Message::control("ack", c.round).with_meta(Json::Obj(meta)))?;
+        }
+    }
+    let now = c.env.now();
+    for (from, loss, _) in &col {
+        c.child_stats.insert(
+            from.to_string(),
+            ClientStats {
+                loss: *loss,
+                round_time: now.saturating_sub(c.round_start),
+                participation: 0,
+            },
+        );
+    }
+    let t0 = Instant::now();
+    let out = acc.finish()?;
+    if let Some(mean) = out.mean {
+        c.opt.apply(&mut c.flat, &mean);
+        c.env.job.pool.reclaim(mean);
+    }
+    // zero total weight (every contributor lost its trainers to churn and
+    // relayed its stale model) keeps the model as-is
+    c.env.charge(t0);
+    for (client, stats) in c.child_stats.drain() {
+        c.selector.report(&client, stats);
+    }
+    Ok(())
+}
+
+/// Hybrid collect: one update per cluster from whichever delegate, so the
+/// sender set is unknown in advance — the buffered collect remains.
+fn collect_hybrid(c: &mut GlobalCtx) -> Result<()> {
+    let chan_name = c.children_channel();
+    let expected = c.hybrid_clusters.expect("hybrid path requires cluster count");
+    while c.pending_updates.len() < expected {
+        let (from, msg, arrival) = {
+            let chan = c.env.chan(chan_name)?;
+            chan.recv_any_kind_timed("update")?
+        };
+        c.pending_updates.push((from, msg, arrival));
+    }
+    let mut got = std::mem::take(&mut c.pending_updates);
+    // Aggregate in virtual-arrival order with a deterministic sender
+    // tie-break, so threaded and cooperative execution produce
+    // bit-identical weighted sums.
+    got.sort_by(|a, b| (a.2, &a.0).cmp(&(b.2, &b.0)));
+    if c.ack_updates {
+        let chan = c.env.chan(chan_name)?;
         for (from, _, arrival) in &got {
             let mut meta = Json::obj();
             meta.insert("arrival_us", *arrival);
             chan.send(from, Message::control("ack", c.round).with_meta(Json::Obj(meta)))?;
         }
     }
-    let got: Vec<(String, Message)> = got.into_iter().map(|(f, m, _)| (f, m)).collect();
     let mut updates = Vec::with_capacity(got.len());
     let mut samples = Vec::with_capacity(got.len());
-    for (from, msg) in &got {
+    for (from, msg, _) in &got {
         let Payload::Floats(w) = &msg.payload else {
             bail!("update without floats");
         };
         updates.push(w.clone());
-        samples.push(msg.meta.get("samples").as_f64().unwrap_or(1.0));
+        samples.push(msg.meta().get("samples").as_f64().unwrap_or(1.0));
         // stats for the selector
         let now = c.env.now();
         c.child_stats.insert(
-            from.clone(),
+            from.to_string(),
             ClientStats {
-                loss: msg.meta.get("loss").as_f64().unwrap_or(0.0),
+                loss: msg.meta().get("loss").as_f64().unwrap_or(0.0),
                 round_time: now.saturating_sub(c.round_start),
                 participation: 0,
             },
         );
     }
     let total: f64 = samples.iter().sum();
-    // all-zero samples (every contributor lost its trainers to churn and
-    // relayed its stale model) degrade to a uniform mean instead of 0/0
+    // all-zero samples degrade to a uniform mean instead of 0/0
     let weights: Vec<f32> = if total > 0.0 {
         samples.iter().map(|&s| (s / total) as f32).collect()
     } else {
@@ -439,9 +537,9 @@ fn get_coord_ends(c: &mut GlobalCtx) -> Result<()> {
         .cloned()
         .context("no coordinator on coord-g-channel")?;
     let msg = chan.recv(&coord)?;
-    match msg.kind.as_str() {
+    match &*msg.kind {
         "assign" => {
-            c.active_children = msg.meta.get("aggregators").as_arr().map(|a| {
+            c.active_children = msg.meta().get("aggregators").as_arr().map(|a| {
                 a.iter()
                     .filter_map(|x| x.as_str().map(str::to_string))
                     .collect()
@@ -473,14 +571,17 @@ fn async_serve(c: &mut GlobalCtx) -> Result<()> {
         let chan = c.env.chan(chan_name)?;
         chan.recv_any()?
     };
-    if msg.kind != "update" {
+    if &*msg.kind != "update" {
         bail!("async global expected 'update', got '{}'", msg.kind);
     }
     let Payload::Floats(delta) = msg.payload else {
         bail!("update without floats");
     };
     let fb = c.fedbuff.as_mut().expect("async path requires fedbuff");
-    if let Some(agg_delta) = fb.push(delta.as_ref().clone(), msg.round) {
+    let buffered = fb.push(delta.as_ref().clone(), msg.round);
+    // the wire buffer is consumed; recycle it for the client's next delta
+    c.env.job.pool.reclaim(delta);
+    if let Some(agg_delta) = buffered {
         crate::model::axpy(&mut c.flat, 1.0, &agg_delta);
         let version = fb.version();
         // evaluate on every version bump
@@ -504,7 +605,7 @@ fn async_serve(c: &mut GlobalCtx) -> Result<()> {
     // keep the client training on the freshest model
     let version = c.fedbuff.as_ref().unwrap().version();
     let chan = c.env.chan(chan_name)?;
-    let reply = Message::floats("weights", version, Arc::new(c.flat.clone()));
+    let reply = Message::floats("weights", version, c.env.job.pool.take_copy(&c.flat));
     c.env.job.metrics.add_traffic(reply.size_bytes());
     chan.send(&from, reply)?;
     Ok(())
@@ -513,7 +614,7 @@ fn async_serve(c: &mut GlobalCtx) -> Result<()> {
 fn async_kickoff(c: &mut GlobalCtx) -> Result<()> {
     // seed every client with version-0 weights
     let chan = c.env.chan(c.children_channel())?;
-    let msg = Message::floats("weights", 0, Arc::new(c.flat.clone()));
+    let msg = Message::floats("weights", 0, c.env.job.pool.take_copy(&c.flat));
     for _ in 0..chan.ends().len() {
         c.env.job.metrics.add_traffic(msg.size_bytes());
     }

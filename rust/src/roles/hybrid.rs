@@ -65,17 +65,21 @@ fn fetch(c: &mut HybridCtx) -> Result<()> {
     }
     let parent = c.parent.clone().context("no global aggregator visible")?;
     let msg = param.recv(&parent)?;
-    match msg.kind.as_str() {
+    match &*msg.kind {
         "weights" => {
-            let Payload::Floats(w) = msg.payload else {
+            let Payload::Floats(w) = &msg.payload else {
                 bail!("weights without floats");
             };
-            c.global.copy_from_slice(&w);
-            c.flat.copy_from_slice(&w);
+            c.global.copy_from_slice(w);
+            c.flat.copy_from_slice(w);
             c.round = msg.round;
         }
         "done" => c.done = true,
         other => bail!("hybrid trainer got '{other}'"),
+    }
+    // last consumer of the broadcast returns the buffer to the pool
+    if let Payload::Floats(w) = msg.payload {
+        c.env.job.pool.reclaim(w);
     }
     Ok(())
 }
@@ -150,7 +154,7 @@ fn upload(c: &mut HybridCtx) -> Result<()> {
     meta.insert("samples", Json::Num(c.cluster_samples as f64));
     meta.insert("loss", Json::Num(c.last_loss));
     meta.insert("cluster", ring.group());
-    let msg = Message::floats("update", c.round, Arc::new(c.flat.clone()))
+    let msg = Message::floats("update", c.round, c.env.job.pool.take_copy(&c.flat))
         .with_meta(Json::Obj(meta));
     let param = c.env.chan("param-channel")?;
     c.env.job.metrics.add_traffic(msg.size_bytes());

@@ -42,7 +42,7 @@ use crate::deploy::TopologyTimeline;
 use crate::metrics::MetricsHub;
 use crate::net::{VClock, VTime};
 use crate::prng::{fnv1a64, Rng};
-use crate::runtime::{Compute, ComputeTimeModel};
+use crate::runtime::{Compute, ComputeTimeModel, TensorPool};
 use crate::sched::WorkerPark;
 use crate::tag::{Flavor, JobSpec, WorkerConfig};
 use crate::workflow::StepStatus;
@@ -64,6 +64,10 @@ pub struct JobRuntime {
     /// Initial global model (He-init from the artifact spec, or zeros for
     /// the mock runtime).
     pub init_flat: Arc<Vec<f32>>,
+    /// Model-buffer pool: distributed weights, uploaded updates and
+    /// aggregation accumulators cycle through it instead of the global
+    /// allocator (see `runtime::pool`). One pool per job, sized `d_pad`.
+    pub pool: Arc<TensorPool>,
     /// Scripted live-extension timeline (empty for static jobs). The
     /// round-driving global aggregator drains it at round boundaries.
     pub timeline: Arc<TopologyTimeline>,
@@ -294,6 +298,7 @@ pub mod tests_support {
         }
         let compute: Arc<dyn Compute> = Arc::new(MockCompute::default_mlp());
         let init_flat = Arc::new(vec![0f32; compute.d_pad()]);
+        let pool = TensorPool::new(compute.d_pad());
         let flavor = spec.resolved_flavor();
         let job = Arc::new(JobRuntime {
             spec,
@@ -305,6 +310,7 @@ pub mod tests_support {
             test_set: Arc::new(test),
             time_model: ComputeTimeModel::Free,
             init_flat,
+            pool,
             timeline: TopologyTimeline::empty(),
             programs: Arc::new(RoleRegistry::builtin()),
             flavor,

@@ -37,8 +37,9 @@ pub struct TrainerCtx {
     balancer: Option<FedBalancer>,
     /// Current upstream aggregator: learned from whoever distributed this
     /// round's weights (so a live tier extension re-parents trainers
-    /// without re-deployment), or pinned by the CO-FL coordinator.
-    pub parent: Option<String>,
+    /// without re-deployment), or pinned by the CO-FL coordinator. An
+    /// interned atom — per-round re-parenting never copies the name.
+    pub parent: Option<Arc<str>>,
     /// CO-FL: the coordinator assigned `parent`; fetch must receive from
     /// exactly that worker rather than from whoever sends first.
     pinned: bool,
@@ -181,11 +182,12 @@ fn fetch(c: &mut TrainerCtx) -> Result<()> {
             .parent
             .clone()
             .context("pinned trainer has no assigned parent")?;
-        (p.clone(), param.recv(&p)?)
+        let m = param.recv(&p)?;
+        (p, m)
     } else {
         param.recv_any()?
     };
-    match msg.kind.as_str() {
+    match &*msg.kind {
         "weights" => {
             let crate::channel::Payload::Floats(w) = &msg.payload else {
                 bail!("weights message without float payload");
@@ -202,6 +204,11 @@ fn fetch(c: &mut TrainerCtx) -> Result<()> {
         }
         "done" => c.done = true,
         other => bail!("trainer got unexpected message kind '{other}'"),
+    }
+    // whoever consumes the broadcast last hands the weights buffer back to
+    // the pool for next round's distribution
+    if let crate::channel::Payload::Floats(w) = msg.payload {
+        c.env.job.pool.reclaim(w);
     }
     Ok(())
 }
@@ -264,18 +271,21 @@ fn upload(c: &mut TrainerCtx) -> Result<()> {
     if tcfg.dp_clip > 0.0 {
         crate::algos::dp_sanitize(&mut delta, tcfg.dp_clip, tcfg.dp_sigma, &mut c.env.rng);
     }
-    let payload: Vec<f32> = if asynchronous {
-        delta // FedBuff consumes deltas
+    let payload: Arc<Vec<f32>> = if asynchronous {
+        Arc::new(delta) // FedBuff consumes deltas
     } else {
-        let mut w = c.global.clone();
-        crate::model::axpy(&mut w, 1.0, &delta);
+        // pooled: the aggregator folds this buffer and recycles it, so
+        // steady-state uploads stop touching the allocator
+        let mut w = c.env.job.pool.take_copy(&c.global);
+        let wb = Arc::get_mut(&mut w).expect("pooled buffers are uniquely owned");
+        crate::model::axpy(wb, 1.0, &delta);
         w
     };
     let mut meta = Json::obj();
     meta.insert("samples", c.data.len());
     meta.insert("loss", Json::Num(c.last_loss));
     meta.insert("worker", c.env.cfg.id.as_str());
-    let msg = Message::floats("update", c.round, Arc::new(payload)).with_meta(Json::Obj(meta));
+    let msg = Message::floats("update", c.round, payload).with_meta(Json::Obj(meta));
     let parent = c.parent.clone().context("no parent to upload to")?;
     let param = c.env.chan("param-channel")?;
     c.env.job.metrics.add_traffic(msg.size_bytes());
@@ -300,9 +310,9 @@ fn get_assignment(c: &mut TrainerCtx) -> Result<()> {
         .cloned()
         .context("no coordinator on coord-t-channel")?;
     let msg = coord_chan.recv(&coord)?;
-    match msg.kind.as_str() {
+    match &*msg.kind {
         "assign" => {
-            c.parent = msg.meta.get("parent").as_str().map(str::to_string);
+            c.parent = msg.meta().get("parent").as_str().map(crate::intern::atom);
             c.pinned = c.parent.is_some();
         }
         "done" => c.done = true,

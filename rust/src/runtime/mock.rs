@@ -180,6 +180,20 @@ impl Compute for MockCompute {
         assert!(updates.len() <= self.agg_k);
         Ok(weighted_sum(updates, weights))
     }
+
+    /// Chunk-uniform override: fold rows sequentially, so the result is
+    /// bit-identical to `model::weighted_sum` over the concatenation of
+    /// all chunks — chunk boundaries cannot perturb rounding. This is what
+    /// makes the streaming `Accumulator` byte-stable across `agg_k`
+    /// configurations (`rust/tests/streaming_parity.rs`).
+    fn aggregate_into(&self, acc: &mut [f32], updates: &[&[f32]], weights: &[f32]) -> Result<()> {
+        assert!(updates.len() <= self.agg_k);
+        assert_eq!(updates.len(), weights.len());
+        for (u, &w) in updates.iter().zip(weights) {
+            crate::model::axpy(acc, w, u);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -16,15 +16,44 @@
 //!
 //! [`aggregate_any`] folds arbitrarily many client updates through the
 //! fixed-`K` Pallas aggregation entry point (weighted sums are associative).
+//!
+//! ## Streaming aggregation ([`Accumulator`])
+//!
+//! The collect-then-aggregate pattern retained every child's update until
+//! round end — unconditionally O(children · d) peak memory at the
+//! aggregation points. The [`Accumulator`] replaces it: updates fold into
+//! a single O(d) buffer *as they arrive* and their buffers return to the
+//! job's [`TensorPool`] immediately after folding. (Out-of-order arrivals
+//! stage as `Arc` clones until their fold slot is reached, so worst-case
+//! retention — a straggling lexicographically-early sender — matches the
+//! old buffered collect; the steady state folds eagerly.)
+//!
+//! Determinism is the hard part. Arrival *consumption* order depends on
+//! runner-pool interleaving, so folding in consumption order would break
+//! the byte-identical executor-parity guarantee. The accumulator therefore
+//! folds in **sorted expected-sender order** via a cursor: an update whose
+//! sender is next in sorted order folds (and frees its buffer) on arrival;
+//! out-of-order arrivals stage as pointer-sized `Arc` clones until the gap
+//! fills. The fold sequence — and the fold-order total weight — is thus a
+//! pure function of the round's update *set*, never of scheduling. The
+//! result equals `scale(model::weighted_sum(rows, raw_weights), 1/Σw)`
+//! bit-for-bit on any chunk-uniform [`Compute::aggregate_into`]
+//! implementation (the mock's sequential fold; verified in
+//! `rust/tests/streaming_parity.rs` against `model::weighted_sum` as the
+//! oracle).
 
 pub mod mock;
 pub mod pjrt;
+pub mod pool;
 pub mod spec;
 
-use anyhow::Result;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
 
 pub use mock::MockCompute;
 pub use pjrt::PjrtPool;
+pub use pool::TensorPool;
 pub use spec::ArtifactSpec;
 
 use crate::net::VTime;
@@ -74,26 +103,212 @@ pub trait Compute: Send + Sync {
 
     /// Weighted sum of up to `agg_k()` updates (the Pallas kernel).
     fn aggregate_k(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>>;
+
+    /// Fold up to `agg_k()` updates **into** `acc`: `acc += Σ wᵢ·uᵢ`.
+    ///
+    /// The default routes through [`Self::aggregate_k`] and adds the
+    /// partial (one temporary per chunk — what a fixed-K kernel can do).
+    /// Implementations that can fold row-sequentially (the mock) override
+    /// this so the result is bit-identical to [`crate::model::weighted_sum`]
+    /// regardless of chunk boundaries — the property the streaming
+    /// [`Accumulator`] parity tests pin down.
+    fn aggregate_into(&self, acc: &mut [f32], updates: &[&[f32]], weights: &[f32]) -> Result<()> {
+        let part = self.aggregate_k(updates, weights)?;
+        crate::model::axpy(acc, 1.0, &part);
+        Ok(())
+    }
 }
 
-/// Aggregate arbitrarily many updates by folding through `aggregate_k` in
-/// chunks (weighted sums are associative; callers pass final weights).
+/// Aggregate arbitrarily many updates by folding `agg_k`-sized chunks into
+/// one O(d) output buffer (weighted sums are associative; callers pass
+/// final weights). No per-chunk partial vector is allocated on
+/// chunk-uniform [`Compute::aggregate_into`] implementations.
 pub fn aggregate_any(c: &dyn Compute, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
     assert_eq!(updates.len(), weights.len());
     assert!(!updates.is_empty());
     let k = c.agg_k();
-    let mut total: Option<Vec<f32>> = None;
+    let mut total = vec![0f32; updates[0].len()];
     for (chunk_u, chunk_w) in updates.chunks(k).zip(weights.chunks(k)) {
-        let part = c.aggregate_k(chunk_u, chunk_w)?;
-        total = Some(match total {
-            None => part,
-            Some(mut acc) => {
-                crate::model::axpy(&mut acc, 1.0, &part);
-                acc
-            }
-        });
+        c.aggregate_into(&mut total, chunk_u, chunk_w)?;
     }
-    Ok(total.unwrap())
+    Ok(total)
+}
+
+// ------------------------------------------------------- streaming fold
+
+/// Result of draining an [`Accumulator`].
+pub struct Aggregate {
+    /// The weighted mean `Σ wᵢ·uᵢ / Σ wᵢ`, uniquely owned (taken from the
+    /// pool). `None` when nothing was folded or the total weight is zero —
+    /// the caller keeps its current model.
+    pub mean: Option<Arc<Vec<f32>>>,
+    /// Total weight, summed in deterministic fold order.
+    pub total_weight: f64,
+    /// Number of updates folded.
+    pub count: usize,
+}
+
+/// Streaming, order-deterministic weighted-mean accumulator (see the
+/// module docs for the design and its determinism argument).
+///
+/// Usage: create at round start with the round's expected sender set,
+/// [`push`](Self::push) each `(sender, update, weight)` as it is received
+/// (re-entrant across cooperative yields when held in the role context),
+/// then [`finish`](Self::finish) once the quorum target is met.
+pub struct Accumulator {
+    compute: Arc<dyn Compute>,
+    pool: Arc<TensorPool>,
+    /// The O(d) fold target, uniquely owned.
+    acc: Arc<Vec<f32>>,
+    /// Sorted, deduplicated expected senders; slot i belongs to
+    /// `expected[i]`.
+    expected: Vec<String>,
+    /// Out-of-order arrivals parked until the cursor reaches their slot.
+    staged: Vec<Option<(Arc<Vec<f32>>, f64)>>,
+    /// Next expected slot to fold.
+    cursor: usize,
+    /// Updates from senders outside the expected set (late churn races);
+    /// folded after the expected ones, in sorted sender order.
+    spill: Vec<(String, Arc<Vec<f32>>, f64)>,
+    /// Pending chunk for the next `aggregate_into` call (≤ agg_k rows).
+    chunk_u: Vec<Arc<Vec<f32>>>,
+    chunk_w: Vec<f32>,
+    /// Total weight in fold order (deterministic).
+    total: f64,
+    /// Updates accepted so far (staged + folded + spilled).
+    count: usize,
+}
+
+impl Accumulator {
+    pub fn new(
+        compute: Arc<dyn Compute>,
+        pool: Arc<TensorPool>,
+        mut expected: Vec<String>,
+    ) -> Self {
+        expected.sort();
+        expected.dedup();
+        let n = expected.len();
+        Self {
+            acc: pool.take_zeroed(),
+            compute,
+            pool,
+            expected,
+            staged: (0..n).map(|_| None).collect(),
+            cursor: 0,
+            spill: Vec::new(),
+            chunk_u: Vec::new(),
+            chunk_w: Vec::new(),
+            total: 0.0,
+            count: 0,
+        }
+    }
+
+    /// Updates accepted so far — the quorum-target comparand.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Accept one update. In-order arrivals fold immediately (their buffer
+    /// returns to the pool); out-of-order ones stage as `Arc` clones.
+    pub fn push(&mut self, sender: &str, update: Arc<Vec<f32>>, weight: f64) -> Result<()> {
+        if update.len() != self.acc.len() {
+            bail!(
+                "update from '{sender}' has {} parameters, accumulator holds {}",
+                update.len(),
+                self.acc.len()
+            );
+        }
+        match self.expected.binary_search_by(|e| e.as_str().cmp(sender)) {
+            Ok(i) => {
+                if self.staged[i].is_some() || i < self.cursor {
+                    bail!("duplicate update from '{sender}' within one round");
+                }
+                self.staged[i] = Some((update, weight));
+                self.advance()?;
+            }
+            Err(_) => self.spill.push((sender.to_string(), update, weight)),
+        }
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Fold the contiguous staged prefix at the cursor.
+    fn advance(&mut self) -> Result<()> {
+        while self.cursor < self.staged.len() {
+            match self.staged[self.cursor].take() {
+                Some(pair) => {
+                    self.cursor += 1;
+                    self.stage_fold(pair)?;
+                }
+                None => break,
+            }
+        }
+        Ok(())
+    }
+
+    fn stage_fold(&mut self, (update, weight): (Arc<Vec<f32>>, f64)) -> Result<()> {
+        self.total += weight;
+        self.chunk_u.push(update);
+        self.chunk_w.push(weight as f32);
+        if self.chunk_u.len() >= self.compute.agg_k() {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if self.chunk_u.is_empty() {
+            return Ok(());
+        }
+        let acc = Arc::get_mut(&mut self.acc).expect("accumulator buffer is uniquely owned");
+        {
+            let refs: Vec<&[f32]> = self.chunk_u.iter().map(|u| u.as_slice()).collect();
+            self.compute.aggregate_into(acc, &refs, &self.chunk_w)?;
+        }
+        for u in self.chunk_u.drain(..) {
+            self.pool.reclaim(u);
+        }
+        self.chunk_w.clear();
+        Ok(())
+    }
+
+    /// Fold whatever is still staged (gaps left by departed senders are
+    /// skipped), then the spillover in sorted sender order, scale by the
+    /// inverse total weight, and hand the mean back.
+    pub fn finish(mut self) -> Result<Aggregate> {
+        for i in self.cursor..self.staged.len() {
+            if let Some(pair) = self.staged[i].take() {
+                self.stage_fold(pair)?;
+            }
+        }
+        self.spill.sort_by(|a, b| a.0.cmp(&b.0));
+        for (_, u, w) in std::mem::take(&mut self.spill) {
+            self.stage_fold((u, w))?;
+        }
+        self.flush()?;
+        if self.count == 0 || self.total <= 0.0 {
+            self.pool.reclaim(self.acc);
+            return Ok(Aggregate {
+                mean: None,
+                total_weight: self.total,
+                count: self.count,
+            });
+        }
+        let inv = (1.0 / self.total) as f32;
+        crate::model::scale(
+            Arc::get_mut(&mut self.acc).expect("accumulator buffer is uniquely owned"),
+            inv,
+        );
+        Ok(Aggregate {
+            mean: Some(self.acc),
+            total_weight: self.total,
+            count: self.count,
+        })
+    }
 }
 
 /// Evaluate `flat` over a whole dataset (looping fixed-size batches);
@@ -144,6 +359,7 @@ impl ComputeTimeModel {
 mod tests {
     use super::*;
     use crate::data::{make_federated, Partition};
+    use crate::model::weighted_sum;
 
     #[test]
     fn aggregate_any_chunks_match_direct_sum() {
@@ -154,10 +370,116 @@ mod tests {
         let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
         let w: Vec<f32> = (0..10).map(|i| (i + 1) as f32 * 0.1).collect();
         let got = aggregate_any(&c, &refs, &w).unwrap();
-        let want = crate::model::weighted_sum(&refs, &w);
-        for (g, w_) in got.iter().zip(&want) {
-            assert!((g - w_).abs() < 1e-4);
+        let want = weighted_sum(&refs, &w);
+        // the mock's sequential fold makes chunking invisible: exact match
+        assert_eq!(got, want);
+    }
+
+    fn rows(k: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..k)
+            .map(|i| (0..d).map(|j| ((i * 31 + j * 7) % 13) as f32 * 0.125 - 0.75).collect())
+            .collect()
+    }
+
+    #[test]
+    fn accumulator_matches_oracle_any_push_order() {
+        let d = 48;
+        let k = 7;
+        let rows = rows(k, d);
+        let weights: Vec<f64> = (0..k).map(|i| (i + 1) as f64).collect();
+        let senders: Vec<String> = (0..k).map(|i| format!("t{i}")).collect();
+        // oracle: weighted_sum in sorted sender order, then scale
+        let order: Vec<usize> = {
+            let mut idx: Vec<usize> = (0..k).collect();
+            idx.sort_by(|&a, &b| senders[a].cmp(&senders[b]));
+            idx
+        };
+        let refs: Vec<&[f32]> = order.iter().map(|&i| rows[i].as_slice()).collect();
+        let ws: Vec<f32> = order.iter().map(|&i| weights[i] as f32).collect();
+        let total: f64 = order.iter().map(|&i| weights[i]).sum();
+        let mut want = weighted_sum(&refs, &ws);
+        crate::model::scale(&mut want, (1.0 / total) as f32);
+
+        let compute: Arc<dyn Compute> = Arc::new(MockCompute::new(d, 8, 3));
+        let pool = TensorPool::new(d);
+        // several adversarial push orders must all give the oracle, byte
+        // for byte
+        let orders: Vec<Vec<usize>> = vec![
+            (0..k).collect(),
+            (0..k).rev().collect(),
+            vec![3, 0, 6, 1, 5, 2, 4],
+        ];
+        for ord in orders {
+            let mut acc =
+                Accumulator::new(compute.clone(), pool.clone(), senders.clone());
+            for &i in &ord {
+                acc.push(&senders[i], Arc::new(rows[i].clone()), weights[i]).unwrap();
+            }
+            let out = acc.finish().unwrap();
+            assert_eq!(out.count, k);
+            assert_eq!(out.total_weight, total);
+            assert_eq!(**out.mean.unwrap(), want, "order {ord:?} diverged");
         }
+    }
+
+    #[test]
+    fn accumulator_handles_gaps_and_spill() {
+        let d = 16;
+        let compute: Arc<dyn Compute> = Arc::new(MockCompute::new(d, 8, 4));
+        let pool = TensorPool::new(d);
+        let expected = vec!["a".to_string(), "b".into(), "c".into()];
+        let mut acc = Accumulator::new(compute.clone(), pool.clone(), expected);
+        // "b" never arrives (departed); "z" is an unexpected late joiner
+        acc.push("c", Arc::new(vec![1.0; d]), 1.0).unwrap();
+        acc.push("z", Arc::new(vec![3.0; d]), 1.0).unwrap();
+        acc.push("a", Arc::new(vec![2.0; d]), 2.0).unwrap();
+        let out = acc.finish().unwrap();
+        assert_eq!(out.count, 3);
+        assert_eq!(out.total_weight, 4.0);
+        // (2*2 + 1*1 + 1*3) / 4 = 2.0 per coordinate
+        assert_eq!(**out.mean.unwrap(), vec![2.0; d]);
+    }
+
+    #[test]
+    fn accumulator_zero_weight_keeps_no_mean() {
+        let d = 8;
+        let compute: Arc<dyn Compute> = Arc::new(MockCompute::new(d, 8, 4));
+        let pool = TensorPool::new(d);
+        let empty = Accumulator::new(compute.clone(), pool.clone(), vec!["a".into()]);
+        let out = empty.finish().unwrap();
+        assert!(out.mean.is_none());
+        assert_eq!(out.count, 0);
+        let mut zero = Accumulator::new(compute, pool, vec!["a".into()]);
+        zero.push("a", Arc::new(vec![1.0; d]), 0.0).unwrap();
+        assert!(zero.finish().unwrap().mean.is_none());
+    }
+
+    #[test]
+    fn accumulator_rejects_duplicates_and_bad_dims() {
+        let d = 8;
+        let compute: Arc<dyn Compute> = Arc::new(MockCompute::new(d, 8, 4));
+        let pool = TensorPool::new(d);
+        let mut acc = Accumulator::new(compute, pool, vec!["a".into(), "b".into()]);
+        acc.push("a", Arc::new(vec![0.0; d]), 1.0).unwrap();
+        assert!(acc.push("a", Arc::new(vec![0.0; d]), 1.0).is_err());
+        assert!(acc.push("b", Arc::new(vec![0.0; d + 1]), 1.0).is_err());
+    }
+
+    #[test]
+    fn accumulator_recycles_buffers_through_the_pool() {
+        let d = 8;
+        let compute: Arc<dyn Compute> = Arc::new(MockCompute::new(d, 8, 2));
+        let pool = TensorPool::new(d);
+        let senders = vec!["a".to_string(), "b".into(), "c".into(), "d".into()];
+        let mut acc = Accumulator::new(compute, pool.clone(), senders.clone());
+        for s in &senders {
+            acc.push(s, Arc::new(vec![1.0; d]), 1.0).unwrap();
+        }
+        let out = acc.finish().unwrap();
+        pool.reclaim(out.mean.unwrap());
+        let (_, _, recycled) = pool.stats();
+        // 4 update buffers + the mean came back
+        assert_eq!(recycled, 5);
     }
 
     #[test]

@@ -1,0 +1,159 @@
+//! `TensorPool` — model-buffer recycling for the steady-state round loop.
+//!
+//! Every round the fabric moves O(workers) flat `f32` vectors of length
+//! `d_pad` (distributed weights, trainer updates, aggregated means). The
+//! collect-then-allocate style hit the global allocator once per buffer
+//! per round; at 10k trainers that is tens of thousands of ~1 MB
+//! allocations a round. The pool closes the cycle instead: buffers travel
+//! as `Arc<Vec<f32>>`, and whoever drops the **last** reference offers the
+//! buffer back via [`TensorPool::reclaim`] — uniqueness is checked with
+//! `Arc::get_mut`, so a buffer still shared (an in-flight broadcast, a
+//! retained model) is simply left to the normal `Drop` path. Takers
+//! receive a uniquely-owned `Arc` whose allocation (vector *and* Arc
+//! control block) is reused, which is what drives steady-state fabric
+//! allocations to zero (`rust/tests/alloc_regression.rs`).
+//!
+//! One pool per job (`JobRuntime::pool`), sized to the job's `d_pad`;
+//! buffers of any other length are rejected by `reclaim` so ring-allreduce
+//! chunks and other small payloads never pollute it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Upper bound on pooled buffers — a guard against pathological retention,
+/// not a tuning knob: a job's pool never outgrows the job's own peak
+/// concurrent buffer count.
+const POOL_CAP: usize = 1024;
+
+pub struct TensorPool {
+    d: usize,
+    bufs: Mutex<Vec<Arc<Vec<f32>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled: AtomicU64,
+}
+
+impl TensorPool {
+    pub fn new(d: usize) -> Arc<Self> {
+        Arc::new(Self {
+            d,
+            bufs: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        })
+    }
+
+    /// Buffer length this pool serves.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    fn pop(&self) -> Option<Arc<Vec<f32>>> {
+        let got = self.bufs.lock().unwrap().pop();
+        match &got {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    /// A uniquely-owned zeroed buffer of length `d`.
+    pub fn take_zeroed(&self) -> Arc<Vec<f32>> {
+        match self.pop() {
+            Some(mut a) => {
+                Arc::get_mut(&mut a)
+                    .expect("pooled buffers are uniquely owned")
+                    .fill(0.0);
+                a
+            }
+            None => Arc::new(vec![0f32; self.d]),
+        }
+    }
+
+    /// A uniquely-owned copy of `src`. Falls back to a plain allocation
+    /// when `src` is not pool-sized (callers need not special-case).
+    pub fn take_copy(&self, src: &[f32]) -> Arc<Vec<f32>> {
+        if src.len() != self.d {
+            return Arc::new(src.to_vec());
+        }
+        match self.pop() {
+            Some(mut a) => {
+                Arc::get_mut(&mut a)
+                    .expect("pooled buffers are uniquely owned")
+                    .copy_from_slice(src);
+                a
+            }
+            None => Arc::new(src.to_vec()),
+        }
+    }
+
+    /// Offer a buffer back. Kept only when it is the right length and this
+    /// was the last reference; otherwise the `Arc` drops normally. Returns
+    /// whether the buffer was pooled.
+    pub fn reclaim(&self, mut buf: Arc<Vec<f32>>) -> bool {
+        if buf.len() != self.d || Arc::get_mut(&mut buf).is_none() {
+            return false;
+        }
+        let mut g = self.bufs.lock().unwrap();
+        if g.len() >= POOL_CAP {
+            return false;
+        }
+        g.push(buf);
+        self.recycled.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// `(hits, misses, recycled)` counters — bench observability.
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.recycled.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_unique_buffers() {
+        let pool = TensorPool::new(8);
+        let a = pool.take_zeroed();
+        let ptr = a.as_ptr();
+        assert!(pool.reclaim(a));
+        let b = pool.take_copy(&[1.0; 8]);
+        assert_eq!(b.as_ptr(), ptr, "reused the same allocation");
+        assert_eq!(**b, vec![1.0; 8]);
+        let (hits, misses, recycled) = pool.stats();
+        assert_eq!((hits, misses, recycled), (1, 1, 1));
+    }
+
+    #[test]
+    fn shared_buffers_are_not_pooled() {
+        let pool = TensorPool::new(4);
+        let a = pool.take_zeroed();
+        let b = a.clone();
+        assert!(!pool.reclaim(a), "still referenced elsewhere");
+        drop(b);
+    }
+
+    #[test]
+    fn wrong_length_is_rejected() {
+        let pool = TensorPool::new(4);
+        assert!(!pool.reclaim(Arc::new(vec![0.0; 3])));
+        // take_copy of a foreign length still works, just unpooled
+        let c = pool.take_copy(&[1.0, 2.0]);
+        assert_eq!(**c, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn take_zeroed_clears_previous_contents() {
+        let pool = TensorPool::new(4);
+        let a = pool.take_copy(&[9.0; 4]);
+        pool.reclaim(a);
+        assert_eq!(**pool.take_zeroed(), vec![0.0; 4]);
+    }
+}

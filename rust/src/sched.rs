@@ -61,7 +61,7 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::fmt;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::net::VTime;
@@ -100,7 +100,10 @@ pub fn is_pending(err: &anyhow::Error) -> bool {
 pub struct WorkerPark {
     cooperative: bool,
     timeout: Duration,
-    waker: Mutex<Option<Waker>>,
+    /// Written once at spawn, read on every cooperative park: an RwLock
+    /// keeps the read path (one per yielding receive, across all of a
+    /// worker's channels) uncontended.
+    waker: RwLock<Option<Waker>>,
 }
 
 impl WorkerPark {
@@ -110,7 +113,7 @@ impl WorkerPark {
         Arc::new(Self {
             cooperative: false,
             timeout,
-            waker: Mutex::new(None),
+            waker: RwLock::new(None),
         })
     }
 
@@ -121,7 +124,7 @@ impl WorkerPark {
         Arc::new(Self {
             cooperative: true,
             timeout: Duration::ZERO,
-            waker: Mutex::new(None),
+            waker: RwLock::new(None),
         })
     }
 
@@ -136,11 +139,11 @@ impl WorkerPark {
 
     /// Bind the scheduler-side waker (after the task is spawned).
     pub fn set_waker(&self, w: Waker) {
-        *self.waker.lock().unwrap() = Some(w);
+        *self.waker.write().unwrap() = Some(w);
     }
 
     pub fn waker(&self) -> Option<Waker> {
-        self.waker.lock().unwrap().clone()
+        self.waker.read().unwrap().clone()
     }
 }
 

@@ -1,0 +1,220 @@
+//! Allocation-regression guard: the fabric hot path must stay
+//! (near-)allocation-free in steady state, so the zero-alloc property of
+//! the interned channel layer + tensor pool cannot silently rot.
+//!
+//! This binary installs a counting global allocator and drives a 2-tier
+//! round loop (1 aggregator, k trainers: broadcast → upload → streaming
+//! fold) directly on the `ChannelManager`, with model buffers cycling
+//! through a `TensorPool`. After a warmup that fills the pool, interns the
+//! names, and sizes the mailbox rings, a steady-state round must:
+//!
+//! * never allocate an O(d) model buffer (the pool serves every one), and
+//! * perform only a bounded handful of pointer-sized bookkeeping
+//!   allocations (the accumulator's per-round expected-sender list).
+
+use std::sync::{Arc, Mutex};
+
+use flame::alloc_track::{self, CountingAlloc};
+use flame::channel::{Backend, ChannelHandle, ChannelManager, Message, Payload};
+use flame::net::{VClock, VirtualNet};
+use flame::runtime::{Accumulator, Compute, MockCompute, TensorPool};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+struct Fabric {
+    agg: ChannelHandle,
+    trainers: Vec<(String, ChannelHandle)>,
+    names: Vec<String>,
+    pool: Arc<TensorPool>,
+    compute: Arc<dyn Compute>,
+    d: usize,
+}
+
+fn setup(k: usize, d: usize, agg_k: usize) -> Fabric {
+    let mgr = ChannelManager::new(Arc::new(VirtualNet::default()));
+    let mk = |id: &str, role: &str| {
+        mgr.join(
+            "param",
+            "g",
+            id,
+            role,
+            Backend::InProc,
+            Arc::new(Mutex::new(VClock::default())),
+        )
+        .unwrap()
+    };
+    let agg = mk("agg", "aggregator");
+    let trainers: Vec<(String, ChannelHandle)> = (0..k)
+        .map(|i| {
+            let id = format!("t{i:03}");
+            let h = mk(&id, "trainer");
+            (id, h)
+        })
+        .collect();
+    let names = trainers.iter().map(|(n, _)| n.clone()).collect();
+    Fabric {
+        agg,
+        trainers,
+        names,
+        pool: TensorPool::new(d),
+        compute: Arc::new(MockCompute::new(d, 8, agg_k)),
+        d,
+    }
+}
+
+fn round(f: &mut Fabric, flat: &[f32], r: u64) {
+    let w = f.pool.take_copy(flat);
+    f.agg.broadcast(Message::floats("weights", r, w)).unwrap();
+    for (_, t) in &f.trainers {
+        let msg = t.recv("agg").unwrap();
+        let Payload::Floats(got) = msg.payload else {
+            panic!("weights expected");
+        };
+        let up = f.pool.take_copy(&got);
+        f.pool.reclaim(got);
+        t.send("agg", Message::floats("update", r, up)).unwrap();
+    }
+    let mut acc = Accumulator::new(f.compute.clone(), f.pool.clone(), f.names.clone());
+    for _ in 0..f.trainers.len() {
+        let (from, msg, _) = f.agg.recv_any_kind_timed("update").unwrap();
+        let Payload::Floats(u) = msg.payload else {
+            panic!("update expected");
+        };
+        acc.push(&from, u, 1.0).unwrap();
+    }
+    let out = acc.finish().unwrap();
+    f.pool.reclaim(out.mean.expect("non-zero total weight"));
+}
+
+#[test]
+fn steady_state_round_is_bounded_and_buffer_free() {
+    let (k, d, rounds, warmup) = (8usize, 4_096usize, 16u64, 4u64);
+    let mut f = setup(k, d, 4);
+    let flat = vec![0.25f32; d];
+    for r in 0..warmup {
+        round(&mut f, &flat, r);
+    }
+    let before = alloc_track::snapshot();
+    for r in 0..rounds {
+        round(&mut f, &flat, warmup + r);
+    }
+    let delta = alloc_track::delta(before, alloc_track::snapshot());
+    let allocs_per_round = delta.allocs as f64 / rounds as f64;
+    let bytes_per_round = delta.bytes as f64 / rounds as f64;
+
+    // No O(d) buffer may be allocated in a steady-state round: the pool
+    // serves the broadcast snapshot, every upload, and the accumulator.
+    // One model buffer is d*4 bytes; we demand the whole round's allocator
+    // traffic stays below that.
+    let one_buffer = (d * 4) as f64;
+    assert!(
+        bytes_per_round < one_buffer,
+        "steady-state round allocates {bytes_per_round} bytes \
+         (>= one d-sized buffer of {one_buffer}); the pool is not recycling"
+    );
+    // Bookkeeping allocations are bounded by the per-round expected-sender
+    // list and chunk scratch — O(k) pointer-sized items, with margin.
+    let bound = (32 * k) as f64;
+    assert!(
+        allocs_per_round < bound,
+        "steady-state round performs {allocs_per_round} allocations (bound {bound})"
+    );
+
+    // and the pool really is cycling: misses only happen while it fills
+    let (hits, misses, recycled) = f.pool.stats();
+    assert!(recycled > 0, "nothing was ever recycled");
+    assert!(
+        misses <= 2 * (k as u64 + 2),
+        "pool misses kept happening in steady state: {misses} (hits {hits})"
+    );
+}
+
+#[test]
+fn control_message_roundtrip_allocates_nothing() {
+    // send+recv of a control message is the purest fabric op: after
+    // warmup (atom interning, mailbox ring capacity) it must not touch
+    // the allocator at all — a handful of stragglers are tolerated.
+    let mgr = ChannelManager::new(Arc::new(VirtualNet::default()));
+    let a = mgr
+        .join(
+            "c",
+            "g",
+            "a",
+            "x",
+            Backend::InProc,
+            Arc::new(Mutex::new(VClock::default())),
+        )
+        .unwrap();
+    let b = mgr
+        .join(
+            "c",
+            "g",
+            "b",
+            "y",
+            Backend::InProc,
+            Arc::new(Mutex::new(VClock::default())),
+        )
+        .unwrap();
+    for i in 0..64u64 {
+        a.send("b", Message::control("ping", i)).unwrap();
+        b.recv("a").unwrap();
+    }
+    let n = 2_000u64;
+    let before = alloc_track::snapshot();
+    for i in 0..n {
+        a.send("b", Message::control("ping", i)).unwrap();
+        b.recv("a").unwrap();
+    }
+    let delta = alloc_track::delta(before, alloc_track::snapshot());
+    assert!(
+        delta.allocs < n / 20,
+        "{} allocations for {n} control roundtrips — the zero-alloc \
+         fabric path regressed",
+        delta.allocs
+    );
+}
+
+#[test]
+fn broadcast_fanout_shares_not_copies() {
+    // broadcasting a d-sized payload to k peers must allocate nothing in
+    // steady state: the payload, kind and metadata are all Arc-shared.
+    let k = 16usize;
+    let d = 8_192usize;
+    let mgr = ChannelManager::new(Arc::new(VirtualNet::default()));
+    let mk = |id: &str, role: &str| {
+        mgr.join(
+            "c",
+            "g",
+            id,
+            role,
+            Backend::InProc,
+            Arc::new(Mutex::new(VClock::default())),
+        )
+        .unwrap()
+    };
+    let agg = mk("agg", "aggregator");
+    let peers: Vec<ChannelHandle> = (0..k).map(|i| mk(&format!("p{i:02}"), "trainer")).collect();
+    let payload = Arc::new(vec![0.5f32; d]);
+    let drain = |round: u64| {
+        agg.broadcast(Message::floats("weights", round, payload.clone())).unwrap();
+        for p in &peers {
+            p.recv("agg").unwrap();
+        }
+    };
+    for r in 0..8 {
+        drain(r);
+    }
+    let rounds = 64u64;
+    let before = alloc_track::snapshot();
+    for r in 0..rounds {
+        drain(8 + r);
+    }
+    let delta = alloc_track::delta(before, alloc_track::snapshot());
+    let per_fanout = delta.bytes as f64 / rounds as f64;
+    assert!(
+        per_fanout < (d * 4) as f64 / 8.0,
+        "broadcast fan-out allocates {per_fanout} bytes per round — \
+         payloads are being copied, not shared"
+    );
+}

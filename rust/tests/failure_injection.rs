@@ -63,6 +63,7 @@ fn panicking_worker_is_contained_by_the_agent_sandbox() {
         test_set: Arc::new(test),
         time_model: flame::runtime::ComputeTimeModel::Free,
         init_flat: Arc::new(vec![0.0; compute.d_pad()]),
+        pool: flame::runtime::TensorPool::new(compute.d_pad()),
         timeline: flame::deploy::TopologyTimeline::empty(),
         programs: Arc::new(flame::roles::RoleRegistry::builtin()),
         flavor,

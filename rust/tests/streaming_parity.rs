@@ -1,0 +1,200 @@
+//! Streaming-aggregation parity: the O(d) `runtime::Accumulator` must be
+//! numerically indistinguishable — *byte for byte* — from the
+//! collect-then-`weighted_sum` oracle, for every push order, every
+//! `agg_k` chunk size (mock and pjrt-shaped), and under churn/quorum
+//! partial collects; and round reports of jobs running the streaming
+//! collect must stay bit-identical across executors and runner pools.
+
+use std::sync::Arc;
+
+use flame::channel::Backend;
+use flame::control::{Controller, Executor, JobOptions, JobReport};
+use flame::json::Json;
+use flame::model::{scale, weighted_sum};
+use flame::net::LinkSpec;
+use flame::prng::Rng;
+use flame::runtime::{Accumulator, Compute, MockCompute, TensorPool};
+use flame::sim::{self, SimOptions};
+use flame::store::Store;
+use flame::topo;
+
+/// The oracle the streaming fold must reproduce exactly: fold the rows in
+/// sorted-sender order with their raw weights, then scale by the inverse
+/// total.
+fn oracle(rows: &[(String, Vec<f32>, f64)]) -> Vec<f32> {
+    let mut sorted: Vec<&(String, Vec<f32>, f64)> = rows.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0));
+    let refs: Vec<&[f32]> = sorted.iter().map(|r| r.1.as_slice()).collect();
+    let ws: Vec<f32> = sorted.iter().map(|r| r.2 as f32).collect();
+    let total: f64 = sorted.iter().map(|r| r.2).sum();
+    let mut out = weighted_sum(&refs, &ws);
+    scale(&mut out, (1.0 / total) as f32);
+    out
+}
+
+fn random_rows(seed: u64, k: usize, d: usize) -> Vec<(String, Vec<f32>, f64)> {
+    let mut rng = Rng::new(seed);
+    (0..k)
+        .map(|i| {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let w = 1.0 + rng.below(96) as f64;
+            (format!("w{i:03}"), row, w)
+        })
+        .collect()
+}
+
+fn stream(rows: &[(String, Vec<f32>, f64)], order: &[usize], agg_k: usize, d: usize) -> Vec<f32> {
+    let compute: Arc<dyn Compute> = Arc::new(MockCompute::new(d, 8, agg_k));
+    let pool = TensorPool::new(d);
+    let expected: Vec<String> = rows.iter().map(|r| r.0.clone()).collect();
+    let mut acc = Accumulator::new(compute, pool, expected);
+    for &i in order {
+        let (name, row, w) = &rows[i];
+        acc.push(name, Arc::new(row.clone()), *w).unwrap();
+    }
+    let out = acc.finish().unwrap();
+    (*out.mean.expect("non-zero total")).clone()
+}
+
+#[test]
+fn streaming_fold_matches_weighted_sum_oracle_bitwise() {
+    let (k, d) = (9usize, 257usize);
+    let rows = random_rows(11, k, d);
+    let want = oracle(&rows);
+    // adversarial push orders: sorted, reverse, interleaved, rotated
+    let orders: Vec<Vec<usize>> = vec![
+        (0..k).collect(),
+        (0..k).rev().collect(),
+        (0..k).map(|i| (i * 4) % k).collect(), // 4 coprime with 9
+        (0..k).map(|i| (i + 5) % k).collect(),
+    ];
+    for ord in orders {
+        let got = stream(&rows, &ord, 4, d);
+        assert_eq!(got, want, "push order {ord:?} changed the fold result");
+    }
+}
+
+#[test]
+fn chunk_size_does_not_change_results() {
+    // the mock's chunk-uniform aggregate_into makes agg_k invisible:
+    // 1 (degenerate), 4 (mock tests), 16 (the pjrt MLP artifact's K), 64
+    let (k, d) = (13usize, 130usize);
+    let rows = random_rows(23, k, d);
+    let want = oracle(&rows);
+    let order: Vec<usize> = (0..k).rev().collect();
+    for agg_k in [1usize, 4, 16, 64] {
+        let got = stream(&rows, &order, agg_k, d);
+        assert_eq!(got, want, "agg_k={agg_k} changed the fold result");
+    }
+}
+
+#[test]
+fn partial_collect_matches_oracle_over_the_subset() {
+    // churn/quorum: only a subset of the expected senders reports; the
+    // fold must equal the oracle over exactly that subset (gaps skipped)
+    let (k, d) = (10usize, 64usize);
+    let rows = random_rows(31, k, d);
+    let subset: Vec<usize> = vec![7, 2, 9, 0, 4]; // arrival order, with gaps
+    let sub_rows: Vec<(String, Vec<f32>, f64)> =
+        subset.iter().map(|&i| rows[i].clone()).collect();
+    let want = oracle(&sub_rows);
+    let compute: Arc<dyn Compute> = Arc::new(MockCompute::new(d, 8, 3));
+    let pool = TensorPool::new(d);
+    let expected: Vec<String> = rows.iter().map(|r| r.0.clone()).collect();
+    let mut acc = Accumulator::new(compute, pool, expected);
+    for &i in &subset {
+        let (name, row, w) = &rows[i];
+        acc.push(name, Arc::new(row.clone()), *w).unwrap();
+    }
+    let out = acc.finish().unwrap();
+    assert_eq!(out.count, subset.len());
+    assert_eq!(*out.mean.expect("non-zero total"), want);
+}
+
+// ------------------------------------------------------- job-level parity
+
+const SERIES: &[&str] = &["acc", "loss", "vtime_s", "round_time_s"];
+
+fn series_of(r: &JobReport) -> Vec<Vec<(u64, f64)>> {
+    SERIES.iter().map(|s| r.metrics.series(s)).collect()
+}
+
+fn run_job(tiers: bool, executor: Executor) -> JobReport {
+    let builder = if tiers {
+        topo::hierarchical(8, 2, Backend::P2p)
+    } else {
+        topo::classical(6, Backend::P2p)
+    };
+    let spec = builder
+        .rounds(3)
+        .set("lr", Json::Num(0.5))
+        .set("local_steps", 1usize)
+        .set("seed", 13u64)
+        .build();
+    let opts = JobOptions::mock()
+        .with_data(32, 64, flame::data::Partition::Dirichlet(0.3), 13)
+        .with_executor(executor);
+    Controller::new(Arc::new(Store::in_memory()))
+        .submit(spec, opts)
+        .expect("job failed")
+}
+
+#[test]
+fn streaming_rounds_are_identical_across_executors_and_pools() {
+    for tiers in [false, true] {
+        let threads = run_job(tiers, Executor::ThreadPerWorker);
+        let one = run_job(tiers, Executor::Cooperative { runners: 1 });
+        let many = run_job(tiers, Executor::Cooperative { runners: 4 });
+        assert_eq!(series_of(&threads), series_of(&one), "tiers={tiers}: threads vs 1 runner");
+        assert_eq!(series_of(&one), series_of(&many), "tiers={tiers}: 1 vs 4 runners");
+        assert_eq!(threads.total_bytes, many.total_bytes, "tiers={tiers}: traffic");
+    }
+}
+
+#[test]
+fn quorum_partial_collect_is_reproducible() {
+    // quorum < 1: the collected subset is decided by virtual time; the
+    // same submission must reproduce bit-identically run over run
+    let run = || {
+        let spec = topo::classical(5, Backend::P2p)
+            .rounds(3)
+            .set("lr", Json::Num(0.5))
+            .set("local_steps", 1usize)
+            .set("quorum", Json::Num(0.6))
+            .set("seed", 17u64)
+            .build();
+        let opts = JobOptions::mock()
+            .with_data(32, 64, flame::data::Partition::Iid, 17)
+            .with_executor(Executor::Cooperative { runners: 1 })
+            .with_net(|net| {
+                net.set_uplink("cfl-trainer-4", LinkSpec::mbps(0.05, 0));
+            });
+        Controller::new(Arc::new(Store::in_memory()))
+            .submit(spec, opts)
+            .expect("job failed")
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(series_of(&a), series_of(&b), "quorum collect not reproducible");
+    assert_eq!(a.metrics.series("acc").len(), 3);
+}
+
+#[test]
+fn churn_partial_collects_stay_deterministic_across_pools() {
+    // live extension + departures at full quorum: the streaming fold's
+    // per-round expected set changes mid-job, and results must still be
+    // independent of the runner pool
+    let mut o = SimOptions::mock();
+    o.per_shard = 24;
+    o.test_n = 64;
+    o.local_steps = 1;
+    let series = &["acc", "loss", "vtime_s", "trainers_alive"];
+    o.executor = Executor::Cooperative { runners: 1 };
+    let one = sim::run_churn(12, 2, 5, 0.25, 1.0, &o).unwrap();
+    o.executor = Executor::Cooperative { runners: 4 };
+    let many = sim::run_churn(12, 2, 5, 0.25, 1.0, &o).unwrap();
+    let pick = |r: &JobReport| -> Vec<Vec<(u64, f64)>> {
+        series.iter().map(|s| r.metrics.series(s)).collect()
+    };
+    assert_eq!(pick(&one), pick(&many), "churn streaming fold diverged across pools");
+}
