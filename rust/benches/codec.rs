@@ -1,0 +1,100 @@
+//! Update-codec bench: encode/decode throughput and wire compression for
+//! each codec at a headline model size, plus the error-feedback residual
+//! overhead of the lossy schemes.
+//!
+//! ```bash
+//! cargo bench --bench codec           # full sweep
+//! cargo bench --bench codec -- --test # CI smoke
+//! ```
+//!
+//! Prints the table and writes `BENCH_codec.json` in the working
+//! directory. Throughput is normalized to *raw* update bytes (4·d per
+//! encode/decode), so the columns compare fairly across codecs. Refuses
+//! to persist non-finite values — a broken measurement dies loudly
+//! instead of writing nulls.
+
+use std::time::Instant;
+
+use flame::alloc_track::bench_smoke as smoke;
+use flame::runtime::codec::build_codec;
+
+/// Guard a value headed for BENCH_codec.json: finite and positive or bust.
+fn checked(name: &str, v: f64) -> f64 {
+    assert!(
+        v.is_finite() && v > 0.0,
+        "bench value '{name}' is {v} — refusing to write a null/NaN result \
+         into BENCH_codec.json; fix the measurement instead"
+    );
+    v
+}
+
+fn main() {
+    let (d, reps) = if smoke() { (1_024, 50) } else { (65_536, 400) };
+    let topk_frac = 0.05;
+    // deterministic pseudo-gradient: dense, sign-mixed, varied magnitudes
+    let delta: Vec<f32> = (0..d)
+        .map(|j| ((j.wrapping_mul(2654435761)) % 1000) as f32 / 1000.0 - 0.5)
+        .collect();
+    let raw_bytes = (4 * d) as f64;
+
+    println!("update codecs — d={d}, {reps} reps, topk_frac={topk_frac}\n");
+    println!(
+        "{:<6} {:>12} {:>10} {:>12} {:>12}",
+        "codec", "wire bytes", "ratio", "enc GB/s", "dec GB/s"
+    );
+
+    let mut sections = Vec::new();
+    for name in ["f32", "int8", "topk"] {
+        let codec = build_codec(name, topk_frac).unwrap();
+
+        // wire size from a residual-free encode (what round 1 ships)
+        let mut residual = Vec::new();
+        let enc = codec.encode(&delta, &mut residual);
+        let wire = enc.wire_bytes() as f64;
+        let ratio = raw_bytes / wire;
+
+        // encode throughput: fresh residual so EF state stays realistic
+        // (it converges to a steady banked tail after the first rep)
+        let mut residual = Vec::new();
+        let mut sink = 0usize; // keeps the encode observable
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            sink = sink.wrapping_add(codec.encode(&delta, &mut residual).wire_bytes());
+        }
+        let enc_gbps = raw_bytes * reps as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e9;
+        assert!(sink > 0, "encode produced empty wire forms");
+
+        // decode throughput: decode_add into one accumulator
+        let mut out = vec![0f32; d];
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            codec.decode_add(&enc, &mut out).unwrap();
+        }
+        let dec_gbps = raw_bytes * reps as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e9;
+        assert!(out.iter().all(|v| v.is_finite()), "decode produced non-finite output");
+
+        println!(
+            "{name:<6} {wire:>12.0} {ratio:>9.1}x {enc:>12.2} {dec:>12.2}",
+            enc = enc_gbps,
+            dec = dec_gbps
+        );
+        sections.push(format!(
+            "  \"{name}\": {{\"wire_bytes\": {wire:.0}, \"compression_ratio\": {ratio:.2}, \
+             \"encode_gbps\": {enc:.3}, \"decode_gbps\": {dec:.3}}}",
+            wire = checked("wire_bytes", wire),
+            ratio = checked("compression_ratio", ratio),
+            enc = checked("encode_gbps", enc_gbps),
+            dec = checked("decode_gbps", dec_gbps),
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"codec\",\n  \"scenario\": \"encode/decode one d={d} update, \
+         {reps} reps, topk_frac={topk_frac}; throughput normalized to raw f32 bytes\",\n  \
+         \"status\": \"regenerate with `cargo bench --bench codec` — this file is \
+         overwritten in place\",\n{}\n}}\n",
+        sections.join(",\n")
+    );
+    std::fs::write("BENCH_codec.json", json).expect("write BENCH_codec.json");
+    println!("\nwrote BENCH_codec.json");
+}

@@ -33,6 +33,7 @@ use flame::alloc_track::{self, bench_smoke as smoke, CountingAlloc};
 use flame::channel::{Backend, ChannelManager, Message, Payload};
 use flame::model::weighted_sum;
 use flame::net::{VClock, VirtualNet};
+use flame::runtime::simd::{detect_kernel, fold_rows, SimdKernel};
 use flame::runtime::{Accumulator, Compute, MockCompute, TensorPool};
 
 #[global_allocator]
@@ -210,6 +211,37 @@ fn interned_round(f: &mut Interned, flat: &[f32], round: u64) {
     f.pool.reclaim(out.mean.expect("non-zero total"));
 }
 
+// ----------------------------------------------------- SIMD fold kernels
+
+/// Throughput of one `fold_rows` call (k rows × d params into one
+/// accumulator), repeated `reps` times. Returns folded GB/s.
+fn simd_fold_gbps(kernel: SimdKernel, rows: &[Vec<f32>], weights: &[f32], reps: usize) -> f64 {
+    let d = rows[0].len();
+    let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let mut acc = vec![0f32; d];
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        fold_rows(kernel, &mut acc, &refs, weights);
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    // keep the result observable so the fold is not optimized away
+    assert!(acc.iter().all(|v| v.is_finite()));
+    (rows.len() * d * 4 * reps) as f64 / secs / 1e9
+}
+
+/// A bench value that is about to be persisted: must be a real, finite
+/// measurement. Dies loudly rather than writing nulls/NaNs into the JSON.
+fn checked(name: &str, v: f64) -> f64 {
+    // allocs/round may legitimately be 0 in steady state; anything
+    // non-finite or negative means a broken measurement
+    assert!(
+        v.is_finite() && v >= 0.0,
+        "bench value '{name}' is {v} — refusing to write a null/NaN result \
+         into BENCH_fabric.json; fix the measurement instead"
+    );
+    v
+}
+
 fn main() {
     let (k, d, rounds, warmup) = if smoke() { (16, 256, 20, 4) } else { (64, 4_096, 200, 20) };
     let flat = vec![0.125f32; d];
@@ -282,17 +314,60 @@ fn main() {
          ({interned_allocs_round} vs {legacy_allocs_round})"
     );
 
+    // ---------------------------------------------------- SIMD fold row
+    // The aggregation inner loop in isolation: scalar sequential fold
+    // (the mock oracle's arithmetic) vs the best kernel the host
+    // supports (portable 8-lane blocking, AVX2+FMA where detected).
+    let fold_reps = if smoke() { 50 } else { 500 };
+    let fold_rows_data: Vec<Vec<f32>> = (0..k)
+        .map(|i| (0..d).map(|j| ((i * 31 + j * 7) % 13) as f32 * 0.125 - 0.75).collect())
+        .collect();
+    let fold_weights: Vec<f32> = (0..k).map(|i| 0.25 + (i % 5) as f32 * 0.125).collect();
+    let best = detect_kernel();
+    let scalar_gbps = simd_fold_gbps(SimdKernel::Scalar, &fold_rows_data, &fold_weights, fold_reps);
+    let simd_gbps = simd_fold_gbps(best, &fold_rows_data, &fold_weights, fold_reps);
+    let speedup = simd_gbps / scalar_gbps.max(1e-9);
+    println!(
+        "\nsimd fold — {k} rows x d={d}, {fold_reps} reps: scalar {scalar_gbps:.2} GB/s, \
+         {} {simd_gbps:.2} GB/s ({speedup:.2}x)",
+        best.name()
+    );
+    if !smoke() {
+        // acceptance bar (full mode only; the smoke run is too short to
+        // time): the vectorized fold must at least double the scalar one
+        // at the headline size
+        assert!(
+            speedup >= 2.0,
+            "SIMD fold speedup {speedup:.2}x < 2x over scalar at k={k}, d={d} \
+             (kernel {})",
+            best.name()
+        );
+    }
+
     let json = format!(
         "{{\n  \"bench\": \"fabric\",\n  \"scenario\": \"2-tier round loop: {k} trainers, \
          d={d}, {rounds} rounds after {warmup} warmup; legacy = string-keyed fabric \
          emulation, interned = packed routes + epoch peer caches + streaming accumulator \
-         + tensor pool\",\n  \"status\": \"regenerate with `cargo bench --bench fabric` — \
+         + tensor pool; simd_fold = {k}x{d} weighted fold, scalar vs best host kernel\",\n  \
+         \"status\": \"regenerate with `cargo bench --bench fabric` — \
          this file is overwritten in place\",\n  \"legacy\": {{\"allocs_per_round\": \
          {legacy_allocs_round:.1}, \"alloc_bytes_per_round\": {legacy_bytes_round:.0}, \
          \"msgs_per_sec\": {legacy_msgs_s:.0}}},\n  \"interned\": {{\"allocs_per_round\": \
          {interned_allocs_round:.1}, \"alloc_bytes_per_round\": {interned_bytes_round:.0}, \
          \"msgs_per_sec\": {interned_msgs_s:.0}}},\n  \"pool\": {{\"hits\": {hits}, \
-         \"misses\": {misses}, \"recycled\": {recycled}}}\n}}\n"
+         \"misses\": {misses}, \"recycled\": {recycled}}},\n  \"simd_fold\": {{\"kernel\": \
+         \"{kernel}\", \"scalar_gbps\": {scalar_gbps:.3}, \"simd_gbps\": {simd_gbps:.3}, \
+         \"speedup\": {speedup:.3}}}\n}}\n",
+        kernel = best.name(),
+        scalar_gbps = checked("scalar_gbps", scalar_gbps),
+        simd_gbps = checked("simd_gbps", simd_gbps),
+        speedup = checked("speedup", speedup),
+        legacy_allocs_round = checked("legacy_allocs_round", legacy_allocs_round),
+        legacy_bytes_round = checked("legacy_bytes_round", legacy_bytes_round),
+        legacy_msgs_s = checked("legacy_msgs_s", legacy_msgs_s),
+        interned_allocs_round = checked("interned_allocs_round", interned_allocs_round),
+        interned_bytes_round = checked("interned_bytes_round", interned_bytes_round),
+        interned_msgs_s = checked("interned_msgs_s", interned_msgs_s),
     );
     std::fs::write("BENCH_fabric.json", json).expect("write BENCH_fabric.json");
     println!("\nwrote BENCH_fabric.json");

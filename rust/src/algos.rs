@@ -128,11 +128,23 @@ impl ServerOpt {
 /// Buffered asynchronous aggregation (FedBuff). The global aggregator calls
 /// [`FedBuff::push`] per client arrival; every `k` arrivals it returns the
 /// staleness-weighted mean delta to apply.
+///
+/// The fold is **streaming**: each delta is weighted into one O(d)
+/// accumulator at push time and its buffer is free for the caller to
+/// recycle immediately — the old collect-then-drain kept `k` cloned
+/// vectors alive per release. The staleness weight is known at push
+/// (version only advances on release), and the drain folded in push order
+/// too, so the streaming fold is bit-identical to the buffered one.
 pub struct FedBuff {
     k: usize,
     /// Server learning rate for the buffered delta.
     pub eta: f32,
-    buffer: Vec<(Vec<f32>, u64)>,
+    /// Running weighted sum of the current window's deltas.
+    acc: Vec<f32>,
+    /// Total staleness weight folded into `acc`.
+    wsum: f32,
+    /// Deltas folded since the last release.
+    pending: usize,
     version: u64,
 }
 
@@ -142,7 +154,9 @@ impl FedBuff {
         Self {
             k,
             eta,
-            buffer: Vec::new(),
+            acc: Vec::new(),
+            wsum: 0.0,
+            pending: 0,
             version: 0,
         }
     }
@@ -152,7 +166,7 @@ impl FedBuff {
     }
 
     pub fn buffered(&self) -> usize {
-        self.buffer.len()
+        self.pending
     }
 
     /// Staleness weight `1/sqrt(1+s)` (the FedBuff paper's default).
@@ -160,24 +174,25 @@ impl FedBuff {
         1.0 / ((1.0 + staleness as f32).sqrt())
     }
 
-    /// Add one client delta computed against `base_version`. Returns the
-    /// aggregate to apply (and bumps the model version) once `k` deltas are
-    /// buffered.
-    pub fn push(&mut self, delta: Vec<f32>, base_version: u64) -> Option<Vec<f32>> {
+    /// Fold one client delta computed against `base_version` into the
+    /// window accumulator. Returns the aggregate to apply (and bumps the
+    /// model version) on every `k`-th delta.
+    pub fn push(&mut self, delta: &[f32], base_version: u64) -> Option<Vec<f32>> {
         let staleness = self.version.saturating_sub(base_version);
-        self.buffer.push((delta, staleness));
-        if self.buffer.len() < self.k {
+        let w = Self::staleness_weight(staleness);
+        if self.acc.is_empty() {
+            self.acc.resize(delta.len(), 0.0);
+        }
+        axpy(&mut self.acc, w, delta);
+        self.wsum += w;
+        self.pending += 1;
+        if self.pending < self.k {
             return None;
         }
-        let d = self.buffer[0].0.len();
-        let mut out = vec![0f32; d];
-        let mut wsum = 0f32;
-        for (delta, s) in self.buffer.drain(..) {
-            let w = Self::staleness_weight(s);
-            axpy(&mut out, w, &delta);
-            wsum += w;
-        }
-        crate::model::scale(&mut out, self.eta / wsum.max(1e-8));
+        let mut out = std::mem::take(&mut self.acc);
+        crate::model::scale(&mut out, self.eta / self.wsum.max(1e-8));
+        self.wsum = 0.0;
+        self.pending = 0;
         self.version += 1;
         Some(out)
     }
@@ -234,6 +249,14 @@ pub struct TrainingConfig {
     /// arrived, against *current* channel membership. 1.0 (default) is the
     /// classic full barrier; fractions tolerate stragglers and churn.
     pub quorum: f64,
+    /// Upload codec (`f32` passthrough, `int8` quantization, `topk`
+    /// sparsification with error feedback); `None` sends raw floats.
+    pub codec: Option<String>,
+    /// Kept-coordinate fraction for the `topk` codec, in `(0, 1]`.
+    pub topk_frac: f64,
+    /// SIMD fold policy: `off` (default), `auto`, `scalar`, `portable`,
+    /// `avx2` — see `runtime::simd::kernel_from_policy`.
+    pub simd: String,
     pub seed: u64,
 }
 
@@ -254,6 +277,9 @@ impl Default for TrainingConfig {
             select_frac: 1.0,
             fedbalancer: false,
             quorum: 1.0,
+            codec: None,
+            topk_frac: 0.05,
+            simd: "off".into(),
             seed: 0,
         }
     }
@@ -329,6 +355,27 @@ impl TrainingConfig {
             }
             cfg.quorum = v;
         }
+        if let Some(s) = hyper.get("codec").as_str() {
+            match s {
+                "none" | "" => cfg.codec = None,
+                "f32" | "int8" | "topk" => cfg.codec = Some(s.to_string()),
+                other => bail!("unknown codec '{other}' (expected f32 | int8 | topk)"),
+            }
+        }
+        if let Some(v) = hyper.get("topk_frac").as_f64() {
+            if !(v > 0.0 && v <= 1.0) {
+                bail!("topk_frac must be in (0, 1], got {v}");
+            }
+            cfg.topk_frac = v;
+        }
+        if let Some(s) = hyper.get("simd").as_str() {
+            match s {
+                "off" | "auto" | "scalar" | "portable" | "avx2" => cfg.simd = s.to_string(),
+                other => bail!(
+                    "unknown simd policy '{other}' (expected off | auto | scalar | portable | avx2)"
+                ),
+            }
+        }
         if let Some(v) = hyper.get("seed").as_i64() {
             cfg.seed = v as u64;
         }
@@ -393,9 +440,9 @@ mod tests {
     #[test]
     fn fedbuff_releases_every_k() {
         let mut fb = FedBuff::new(3, 1.0);
-        assert!(fb.push(vec![1.0, 0.0], 0).is_none());
-        assert!(fb.push(vec![0.0, 1.0], 0).is_none());
-        let agg = fb.push(vec![1.0, 1.0], 0).unwrap();
+        assert!(fb.push(&[1.0, 0.0], 0).is_none());
+        assert!(fb.push(&[0.0, 1.0], 0).is_none());
+        let agg = fb.push(&[1.0, 1.0], 0).unwrap();
         // all staleness 0 -> plain mean
         assert!((agg[0] - 2.0 / 3.0).abs() < 1e-6);
         assert!((agg[1] - 2.0 / 3.0).abs() < 1e-6);
@@ -406,15 +453,54 @@ mod tests {
     #[test]
     fn fedbuff_downweights_stale_updates() {
         let mut fb = FedBuff::new(2, 1.0);
-        fb.push(vec![0.0], 0);
-        fb.push(vec![0.0], 0); // version -> 1
-        fb.push(vec![1.0], 1); // fresh
-        let agg = fb.push(vec![1.0], 0).unwrap(); // staleness 1
+        fb.push(&[0.0], 0);
+        fb.push(&[0.0], 0); // version -> 1
+        fb.push(&[1.0], 1); // fresh
+        let agg = fb.push(&[1.0], 0).unwrap(); // staleness 1
         let w_fresh = FedBuff::staleness_weight(0);
         let w_stale = FedBuff::staleness_weight(1);
         let want = (w_fresh * 1.0 + w_stale * 1.0) / (w_fresh + w_stale);
         assert!((agg[0] - want).abs() < 1e-6);
         assert!(w_stale < w_fresh);
+    }
+
+    #[test]
+    fn fedbuff_streaming_fold_matches_buffered_drain() {
+        // oracle: the pre-streaming implementation (collect k, then drain
+        // in push order) — the in-place fold must reproduce it bit for bit
+        let deltas: Vec<(Vec<f32>, u64)> = (0..6)
+            .map(|i| {
+                let mut rng = Rng::new(40 + i);
+                ((0..33).map(|_| rng.normal() as f32).collect(), i % 3)
+            })
+            .collect();
+        let mut fb = FedBuff::new(3, 0.7);
+        let mut got = Vec::new();
+        for (d, base) in &deltas {
+            if let Some(a) = fb.push(d, *base) {
+                got.push(a);
+            }
+        }
+        // buffered oracle
+        let mut want = Vec::new();
+        let mut version = 0u64;
+        let mut window: Vec<(Vec<f32>, u64)> = Vec::new();
+        for (d, base) in &deltas {
+            window.push((d.clone(), version.saturating_sub(*base)));
+            if window.len() == 3 {
+                let mut out = vec![0f32; d.len()];
+                let mut wsum = 0f32;
+                for (delta, s) in window.drain(..) {
+                    let w = FedBuff::staleness_weight(s);
+                    axpy(&mut out, w, &delta);
+                    wsum += w;
+                }
+                crate::model::scale(&mut out, 0.7 / wsum.max(1e-8));
+                version += 1;
+                want.push(out);
+            }
+        }
+        assert_eq!(got, want);
     }
 
     #[test]
@@ -473,6 +559,30 @@ mod tests {
             r#"{"aggregation": "psychic"}"#,
         ] {
             assert!(TrainingConfig::from_hyper(&Json::parse(bad).unwrap()).is_err());
+        }
+    }
+
+    #[test]
+    fn codec_and_simd_parse_and_validate() {
+        let cfg = TrainingConfig::from_hyper(
+            &Json::parse(r#"{"codec": "topk", "topk_frac": 0.02, "simd": "auto"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.codec.as_deref(), Some("topk"));
+        assert_eq!(cfg.topk_frac, 0.02);
+        assert_eq!(cfg.simd, "auto");
+        let d = TrainingConfig::default();
+        assert_eq!(d.codec, None);
+        assert_eq!(d.simd, "off");
+        let off = TrainingConfig::from_hyper(&Json::parse(r#"{"codec": "none"}"#).unwrap());
+        assert_eq!(off.unwrap().codec, None);
+        for bad in [
+            r#"{"codec": "gzip"}"#,
+            r#"{"topk_frac": 0.0}"#,
+            r#"{"topk_frac": 2}"#,
+            r#"{"simd": "gpu"}"#,
+        ] {
+            assert!(TrainingConfig::from_hyper(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }
     }
 

@@ -158,6 +158,10 @@ pub enum Payload {
     Empty,
     Floats(Arc<Vec<f32>>),
     Json(Json),
+    /// A codec-compressed model update (see [`crate::runtime::codec`]).
+    /// Its wire size is the **encoded** byte count, so virtual-time
+    /// transfer charges reflect compression, not the dense f32 length.
+    Encoded(Arc<crate::runtime::EncodedUpdate>),
 }
 
 impl Payload {
@@ -167,6 +171,7 @@ impl Payload {
             Payload::Empty => 0,
             Payload::Floats(v) => (v.len() * 4) as u64,
             Payload::Json(j) => j.dump().len() as u64,
+            Payload::Encoded(e) => e.wire_bytes() as u64,
         }
     }
 }
@@ -224,6 +229,16 @@ impl Message {
 
     pub fn control(kind: impl AsRef<str>, round: u64) -> Self {
         Self::new(kind, round, Payload::Empty)
+    }
+
+    /// A codec-compressed update message; wire accounting uses the
+    /// encoded size (see [`Payload::Encoded`]).
+    pub fn encoded(
+        kind: impl AsRef<str>,
+        round: u64,
+        enc: Arc<crate::runtime::EncodedUpdate>,
+    ) -> Self {
+        Self::new(kind, round, Payload::Encoded(enc))
     }
 
     pub fn size_bytes(&self) -> u64 {

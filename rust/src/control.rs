@@ -457,16 +457,47 @@ pub(crate) fn prepare_expanded(
     for (d, s) in runtime_spec.datasets.iter().zip(shards) {
         shard_map.insert(d.name.clone(), Arc::new(s));
     }
+    // SIMD fold selection: `hyper.simd` picks the policy; the `FLAME_SIMD`
+    // env var overrides it (CI's force-scalar cell runs the dispatch path
+    // with the bit-exact scalar kernel under every job). "off" leaves the
+    // backend untouched.
+    let simd_policy = std::env::var("FLAME_SIMD")
+        .ok()
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| tcfg.simd.clone());
+    let compute: Arc<dyn Compute> = if simd_policy == "off" {
+        opts.compute
+    } else {
+        Arc::new(crate::runtime::SimdCompute::with_kernel(
+            opts.compute,
+            crate::runtime::simd::kernel_from_policy(&simd_policy),
+        ))
+    };
+    // Upload codec (`hyper.codec`): built once, shared via the runtime;
+    // uploading roles encode, aggregation points decode. Ring all-reduce
+    // topologies have no upload path to compress.
+    let codec = match tcfg.codec.as_deref() {
+        Some(name) => {
+            if flavor == Flavor::Distributed {
+                bail!(
+                    "update codecs are not supported on distributed (all-reduce) \
+                     topologies: there is no client upload to compress"
+                );
+            }
+            Some(crate::runtime::codec::build_codec(name, tcfg.topk_frac)?)
+        }
+        None => None,
+    };
     let init_flat = Arc::new(
         opts.init_flat
             .take()
-            .unwrap_or_else(|| vec![0f32; opts.compute.d_pad()]),
+            .unwrap_or_else(|| vec![0f32; compute.d_pad()]),
     );
-    let pool = crate::runtime::TensorPool::new(opts.compute.d_pad());
+    let pool = crate::runtime::TensorPool::new(compute.d_pad());
     let job = Arc::new(JobRuntime {
         spec: runtime_spec,
         chan_mgr,
-        compute: opts.compute,
+        compute,
         tcfg,
         metrics: Arc::new(MetricsHub::for_job(job_label)),
         shards: shard_map,
@@ -477,6 +508,7 @@ pub(crate) fn prepare_expanded(
         timeline: timeline.clone(),
         programs,
         flavor,
+        codec,
     });
     let recv_timeout = opts
         .recv_timeout

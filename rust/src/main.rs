@@ -15,6 +15,7 @@
 //!               [--churn 0.2] [--quorum 1.0] [--runners N] # live topology extension
 //! flame fleet   [--jobs 100 --runners N]                  # multi-job control plane
 //! flame fedprox [--trainers 8 --rounds 6 --mu 0.1]        # Role-SDK custom program
+//! flame codec-sweep [--trainers 8 --rounds 8 --topk-frac 0.05] # update-codec comparison
 //! flame roles                                             # list registered programs
 //! flame spec    --topo hybrid --trainers 50 --groups 5    # print TAG JSON
 //! ```
@@ -113,6 +114,9 @@ const SPEC_FLAGS: &[&str] = &[
     "aggregation",
     "buffer-k",
     "model",
+    "codec",
+    "topk-frac",
+    "simd",
 ];
 
 /// `run`'s full flag set: spec + runtime + data shaping.
@@ -153,6 +157,14 @@ fn build_spec(args: &Args) -> Result<tag::JobSpec> {
         builder = builder
             .set("aggregation", args.get("aggregation", "sync").as_str())
             .set("buffer_k", args.get_usize("buffer-k", 3)?);
+    }
+    if args.flags.contains_key("codec") {
+        builder = builder
+            .set("codec", args.get("codec", "f32").as_str())
+            .set("topk_frac", Json::Num(args.get("topk-frac", "0.05").parse()?));
+    }
+    if args.flags.contains_key("simd") {
+        builder = builder.set("simd", args.get("simd", "auto").as_str());
     }
     Ok(builder.model(&args.get("model", "mlp")).build())
 }
@@ -447,13 +459,45 @@ fn cmd_fedprox(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Update-codec comparison: the same WAN-shaped job per codec (f32
+/// baseline, int8 quantization, top-k + error feedback), reporting final
+/// accuracy, convergence delta, virtual completion time, and encoded
+/// upload volume (see `sim::run_codec_sweep`).
+fn cmd_codec_sweep(args: &Args) -> Result<()> {
+    args.expect_flags(
+        "codec-sweep",
+        &["trainers", "rounds", "topk-frac", "per-shard", "test-n", "seed", "runners"],
+    )?;
+    let trainers = args.get_usize("trainers", 8)?;
+    let rounds = args.get_u64("rounds", 8)?;
+    let topk_frac: f64 = args
+        .get("topk-frac", "0.05")
+        .parse()
+        .context("--topk-frac must be a fraction in (0, 1]")?;
+    let mut o = sim::SimOptions::mock();
+    o.per_shard = args.get_usize("per-shard", 64)?;
+    o.test_n = args.get_usize("test-n", 128)?;
+    o.seed = args.get_u64("seed", 7)?;
+    o.executor = flame::control::Executor::Cooperative {
+        runners: args.get_usize("runners", 0)?,
+    };
+    let t0 = std::time::Instant::now();
+    let sweep = sim::run_codec_sweep(trainers, rounds, topk_frac, &o)?;
+    println!(
+        "# codec sweep: {trainers} trainers, {rounds} rounds, topk_frac={topk_frac}, wall={:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+    print!("{}", sweep.summary());
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: flame <expand|spec|run|fig10|fig11|scale|churn|fleet|fedprox|roles> [--flags]"
+                "usage: flame <expand|spec|run|fig10|fig11|scale|churn|fleet|fedprox|codec-sweep|roles> [--flags]"
             );
             std::process::exit(2);
         }
@@ -468,6 +512,7 @@ fn main() {
         "churn" => cmd_churn(&args),
         "fleet" => cmd_fleet(&args),
         "fedprox" => cmd_fedprox(&args),
+        "codec-sweep" => cmd_codec_sweep(&args),
         "roles" => cmd_roles(&args),
         other => bail!("unknown command '{other}'"),
     });

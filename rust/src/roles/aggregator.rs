@@ -242,7 +242,9 @@ fn collect_and_aggregate(c: &mut AggregatorCtx) -> Result<()> {
             .recv_any_kind_timed("update")?;
         if msg.round != c.round {
             // straggler update from a past round: drop (recycling its
-            // buffer if this was the last reference)
+            // buffer if this was the last reference). Encoded payloads
+            // are plain heap allocations, not pool-sized tensors — they
+            // free on drop.
             if let Payload::Floats(w) = msg.payload {
                 c.env.job.pool.reclaim(w);
             }
@@ -250,8 +252,27 @@ fn collect_and_aggregate(c: &mut AggregatorCtx) -> Result<()> {
         }
         let samples = msg.meta().get("samples").as_f64().unwrap_or(1.0);
         let loss = msg.meta().get("loss").as_f64().unwrap_or(0.0);
-        let Payload::Floats(w) = msg.payload else {
-            bail!("update without floats");
+        let w = match msg.payload {
+            Payload::Floats(w) => w,
+            Payload::Encoded(enc) => {
+                // codec path: the trainer uploaded an encoded *delta*;
+                // reconstruct its model by decode-adding onto this round's
+                // distributed weights (`c.weights` still holds them during
+                // collect), so the fold below is codec-agnostic.
+                let codec = c
+                    .env
+                    .job
+                    .codec
+                    .clone()
+                    .context("encoded update received but no codec configured")?;
+                let mut buf = c.env.job.pool.take_copy(&c.weights);
+                codec.decode_add(
+                    &enc,
+                    Arc::get_mut(&mut buf).expect("pooled buffers are uniquely owned"),
+                )?;
+                buf
+            }
+            _ => bail!("update without floats"),
         };
         c.acc
             .as_mut()

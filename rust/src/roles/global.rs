@@ -21,8 +21,21 @@
 //! so executor parity stays byte-exact. Only per-update *metadata*
 //! (sender, loss, arrival) is kept to round end, for acks and selector
 //! feedback. The hybrid path (one update per cluster, senders unknown in
-//! advance) keeps the buffered collect — including its legacy
-//! uniform-mean fallback for zero-total-weight rounds.
+//! advance) streams too: its accumulator starts with an *empty* expected
+//! set, so every update takes the spill path and folds in sorted sender
+//! order at round end — interleaving-independent like the main path, one
+//! O(d) buffer instead of O(clusters·d). (This replaced the old buffered
+//! hybrid collect and its legacy uniform-mean fallback: a
+//! zero-total-weight hybrid round now keeps the model, like every other
+//! collect.)
+//!
+//! **Update codecs**: when the job carries a [`crate::runtime::Codec`],
+//! uploads arrive as [`Payload::Encoded`] *deltas*. The synchronous and
+//! hybrid collects reconstruct each sender's model by decode-adding onto
+//! this round's distributed base (`c.flat`, unchanged until the
+//! post-collect `optimize`), so the fold downstream is codec-agnostic;
+//! the async FedBuff path consumes deltas directly and decodes into a
+//! zeroed buffer with no base re-add.
 //!
 //! CO-FL variant (paper Fig 9, §6.1): `get_coord_ends` inserted before
 //! `distribute` (the coordinator decides which aggregators participate) and
@@ -77,13 +90,9 @@ pub struct GlobalCtx {
     /// across cooperative yields). O(d), not O(children·d).
     acc: Option<Accumulator>,
     /// Per-update metadata kept to round end: `(sender, loss, arrival)` —
-    /// pointer-sized, feeds acks and selector stats.
+    /// pointer-sized, feeds acks and selector stats (both the synchronous
+    /// and the hybrid collect use it; only one runs per job).
     col: Vec<(Arc<str>, f64, VTime)>,
-    /// Hybrid-path updates received so far this round. Persisted in the
-    /// context so the collect tasklet is re-entrant: a cooperative yield
-    /// mid-collection keeps what already arrived and resumes the receive
-    /// loop.
-    pending_updates: Vec<(Arc<str>, Message, VTime)>,
     /// Live topology extension enabled (the job carries a timeline).
     elastic: bool,
     /// Membership changed since the last trainer partition was sent to the
@@ -143,7 +152,6 @@ impl GlobalCtx {
             hybrid_clusters,
             acc: None,
             col: Vec::new(),
-            pending_updates: Vec::new(),
             elastic,
             assign_dirty: false,
             data_role,
@@ -296,6 +304,33 @@ fn distribute(c: &mut GlobalCtx) -> Result<()> {
     Ok(())
 }
 
+/// Reconstruct a full-model update from an upload payload: plain floats
+/// pass through untouched; an encoded *delta* decode-adds onto `base`
+/// (this round's distributed model) in a pooled buffer, so the fold
+/// downstream never sees the codec.
+fn decode_update(
+    job: &super::JobRuntime,
+    base: &[f32],
+    payload: Payload,
+) -> Result<Arc<Vec<f32>>> {
+    match payload {
+        Payload::Floats(w) => Ok(w),
+        Payload::Encoded(enc) => {
+            let codec = job
+                .codec
+                .clone()
+                .context("encoded update received but no codec configured")?;
+            let mut buf = job.pool.take_copy(base);
+            codec.decode_add(
+                &enc,
+                Arc::get_mut(&mut buf).expect("pooled buffers are uniquely owned"),
+            )?;
+            Ok(buf)
+        }
+        _ => bail!("update without floats"),
+    }
+}
+
 /// Synchronous collect: stream every update into the accumulator as it
 /// arrives, then apply the server optimizer once the quorum target is met.
 fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
@@ -353,9 +388,7 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
         }
         let samples = msg.meta().get("samples").as_f64().unwrap_or(1.0);
         let loss = msg.meta().get("loss").as_f64().unwrap_or(0.0);
-        let Payload::Floats(w) = msg.payload else {
-            bail!("update without floats");
-        };
+        let w = decode_update(&c.env.job, &c.flat, msg.payload)?;
         c.acc
             .as_mut()
             .expect("accumulator created above")
@@ -413,60 +446,69 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
 }
 
 /// Hybrid collect: one update per cluster from whichever delegate, so the
-/// sender set is unknown in advance — the buffered collect remains.
+/// sender set is unknown in advance. Streams through an [`Accumulator`]
+/// with an *empty* expected set — every update takes the spill path and
+/// folds in sorted sender order at round end, which is
+/// interleaving-independent like the main path while keeping one O(d)
+/// buffer instead of O(clusters·d).
 fn collect_hybrid(c: &mut GlobalCtx) -> Result<()> {
     let chan_name = c.children_channel();
     let expected = c.hybrid_clusters.expect("hybrid path requires cluster count");
-    while c.pending_updates.len() < expected {
+    if c.acc.is_none() {
+        c.acc = Some(Accumulator::new(
+            c.env.job.compute.clone(),
+            c.env.job.pool.clone(),
+            Vec::new(),
+        ));
+        c.col.clear();
+    }
+    while c.acc.as_ref().map(|a| a.len()).unwrap_or(0) < expected {
         let (from, msg, arrival) = {
             let chan = c.env.chan(chan_name)?;
             chan.recv_any_kind_timed("update")?
         };
-        c.pending_updates.push((from, msg, arrival));
+        let samples = msg.meta().get("samples").as_f64().unwrap_or(1.0);
+        let loss = msg.meta().get("loss").as_f64().unwrap_or(0.0);
+        let w = decode_update(&c.env.job, &c.flat, msg.payload)?;
+        c.acc
+            .as_mut()
+            .expect("accumulator created above")
+            .push(&from, w, samples)?;
+        c.col.push((from, loss, arrival));
     }
-    let mut got = std::mem::take(&mut c.pending_updates);
-    // Aggregate in virtual-arrival order with a deterministic sender
-    // tie-break, so threaded and cooperative execution produce
-    // bit-identical weighted sums.
-    got.sort_by(|a, b| (a.2, &a.0).cmp(&(b.2, &b.0)));
+    let acc = c.acc.take().expect("accumulator created above");
+    let mut col = std::mem::take(&mut c.col);
+    // Acks and selector feedback in virtual-arrival order with a
+    // deterministic sender tie-break — the same order the buffered
+    // collect used.
+    col.sort_by(|a, b| (a.2, &a.0).cmp(&(b.2, &b.0)));
     if c.ack_updates {
         let chan = c.env.chan(chan_name)?;
-        for (from, _, arrival) in &got {
+        for (from, _, arrival) in &col {
             let mut meta = Json::obj();
             meta.insert("arrival_us", *arrival);
             chan.send(from, Message::control("ack", c.round).with_meta(Json::Obj(meta)))?;
         }
     }
-    let mut updates = Vec::with_capacity(got.len());
-    let mut samples = Vec::with_capacity(got.len());
-    for (from, msg, _) in &got {
-        let Payload::Floats(w) = &msg.payload else {
-            bail!("update without floats");
-        };
-        updates.push(w.clone());
-        samples.push(msg.meta().get("samples").as_f64().unwrap_or(1.0));
-        // stats for the selector
-        let now = c.env.now();
+    let now = c.env.now();
+    for (from, loss, _) in &col {
         c.child_stats.insert(
             from.to_string(),
             ClientStats {
-                loss: msg.meta().get("loss").as_f64().unwrap_or(0.0),
+                loss: *loss,
                 round_time: now.saturating_sub(c.round_start),
                 participation: 0,
             },
         );
     }
-    let total: f64 = samples.iter().sum();
-    // all-zero samples degrade to a uniform mean instead of 0/0
-    let weights: Vec<f32> = if total > 0.0 {
-        samples.iter().map(|&s| (s / total) as f32).collect()
-    } else {
-        vec![1.0 / samples.len() as f32; samples.len()]
-    };
-    let refs: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
     let t0 = Instant::now();
-    let mean = crate::runtime::aggregate_any(c.env.job.compute.as_ref(), &refs, &weights)?;
-    c.opt.apply(&mut c.flat, &mean);
+    let out = acc.finish()?;
+    // zero total weight keeps the model as-is (the buffered collect's
+    // legacy uniform-mean fallback is gone — all collects agree now)
+    if let Some(mean) = out.mean {
+        c.opt.apply(&mut c.flat, &mean);
+        c.env.job.pool.reclaim(mean);
+    }
     c.env.charge(t0);
     for (client, stats) in c.child_stats.drain() {
         c.selector.report(&client, stats);
@@ -574,12 +616,31 @@ fn async_serve(c: &mut GlobalCtx) -> Result<()> {
     if &*msg.kind != "update" {
         bail!("async global expected 'update', got '{}'", msg.kind);
     }
-    let Payload::Floats(delta) = msg.payload else {
-        bail!("update without floats");
+    let delta: Arc<Vec<f32>> = match msg.payload {
+        Payload::Floats(d) => d,
+        Payload::Encoded(enc) => {
+            // async codec path: the encoding carries the *delta* itself,
+            // which is exactly what FedBuff folds — decode into a zeroed
+            // buffer, no base re-add
+            let codec = c
+                .env
+                .job
+                .codec
+                .clone()
+                .context("encoded update received but no codec configured")?;
+            let mut buf = c.env.job.pool.take_zeroed();
+            codec.decode_add(
+                &enc,
+                Arc::get_mut(&mut buf).expect("pooled buffers are uniquely owned"),
+            )?;
+            buf
+        }
+        _ => bail!("update without floats"),
     };
     let fb = c.fedbuff.as_mut().expect("async path requires fedbuff");
-    let buffered = fb.push(delta.as_ref().clone(), msg.round);
-    // the wire buffer is consumed; recycle it for the client's next delta
+    // streaming fold: the delta is folded into the buffer in place (no
+    // O(k·d) retention), so the wire buffer recycles immediately
+    let buffered = fb.push(delta.as_slice(), msg.round);
     c.env.job.pool.reclaim(delta);
     if let Some(agg_delta) = buffered {
         crate::model::axpy(&mut c.flat, 1.0, &agg_delta);

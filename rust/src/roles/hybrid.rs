@@ -19,7 +19,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::channel::{Message, Payload};
 use crate::json::Json;
-use crate::workflow::Composer;
+use crate::workflow::{Composer, Tasklet};
 
 use super::collective::{is_delegate, RingAllReduce};
 use super::{chain_program, Program, WorkerEnv};
@@ -39,6 +39,10 @@ pub struct HybridCtx {
     /// In-flight ring all-reduce; persisted so `cluster_agg` is re-entrant
     /// across cooperative yields.
     ring_op: Option<RingAllReduce>,
+    /// Codec error-feedback residual (lossy schemes bank what they drop
+    /// here and fold it into the next round's delta). Only the delegate
+    /// ever touches it.
+    residual: Vec<f32>,
     done: bool,
 }
 
@@ -166,6 +170,44 @@ fn upload(c: &mut HybridCtx) -> Result<()> {
     Ok(())
 }
 
+/// Codec variant of [`upload`] (same chain-surgery mechanism as the base
+/// trainer): the delegate encodes the cluster *delta* against this
+/// round's distributed model and ships the compressed form — the
+/// `VirtualNet` then charges encoded bytes, stacking the codec's saving
+/// on top of Hybrid's clusters×model reduction. The global's hybrid
+/// collect decode-adds onto its own copy of the round base.
+fn upload_encoded(c: &mut HybridCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let ring = c.env.chan("ring-channel")?;
+    if !is_delegate(ring) {
+        return Ok(());
+    }
+    let codec = c
+        .env
+        .job
+        .codec
+        .clone()
+        .context("upload_encoded requires a codec on the job")?;
+    let parent = c.parent.clone().context("no parent")?;
+    let delta = crate::model::sub(&c.flat, &c.global);
+    let enc = Arc::new(codec.encode(&delta, &mut c.residual));
+    let mut meta = Json::obj();
+    meta.insert("samples", Json::Num(c.cluster_samples as f64));
+    meta.insert("loss", Json::Num(c.last_loss));
+    meta.insert("cluster", ring.group());
+    let msg = Message::encoded("update", c.round, enc).with_meta(Json::Obj(meta));
+    let param = c.env.chan("param-channel")?;
+    c.env.job.metrics.add_traffic(msg.size_bytes());
+    c.env
+        .job
+        .metrics
+        .record(&c.env.cfg.id, "upload_bytes", c.round, msg.size_bytes() as f64);
+    param.send(&parent, msg)?;
+    Ok(())
+}
+
 pub fn chain() -> Composer<HybridCtx> {
     Composer::new()
         .task("load", load)
@@ -197,13 +239,20 @@ impl HybridCtx {
             cluster_samples: 0.0,
             last_loss: f64::NAN,
             ring_op: None,
+            residual: Vec::new(),
             done: false,
         })
     }
 }
 
 pub fn build(env: WorkerEnv) -> Result<Box<dyn Program>> {
-    Ok(chain_program(chain(), HybridCtx::new(env)?))
+    let mut chain = chain();
+    if env.job.codec.is_some() {
+        // codec-enabled jobs swap the upload tasklet for the encoding one
+        // — same Table 1 surgery mechanism as every other derivation
+        chain.replace_with("upload", Tasklet::new("upload_encoded", upload_encoded))?;
+    }
+    Ok(chain_program(chain, HybridCtx::new(env)?))
 }
 
 #[cfg(test)]
@@ -215,6 +264,17 @@ mod tests {
         assert_eq!(
             chain().aliases(),
             vec!["load", "init", "fetch", "train", "cluster_agg", "upload"]
+        );
+    }
+
+    #[test]
+    fn codec_surgery_takes_over_the_upload_slot() {
+        let mut c = chain();
+        c.replace_with("upload", Tasklet::new("upload_encoded", upload_encoded))
+            .unwrap();
+        assert_eq!(
+            c.aliases(),
+            vec!["load", "init", "fetch", "train", "cluster_agg", "upload_encoded"]
         );
     }
 }

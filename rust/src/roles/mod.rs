@@ -78,6 +78,11 @@ pub struct JobRuntime {
     /// The job's resolved topology flavour (declared `tag.flavor`, or the
     /// validate-time inference) — drives default role↔program bindings.
     pub flavor: Flavor,
+    /// Upload codec shared by every worker of the job (`hyper.codec`):
+    /// uploading roles encode their delta through it, aggregation points
+    /// decode. `None` = raw float uploads. Per-client error-feedback
+    /// residuals live in the uploading role's context, not here.
+    pub codec: Option<Arc<dyn crate::runtime::Codec>>,
 }
 
 impl JobRuntime {
@@ -314,6 +319,7 @@ pub mod tests_support {
             timeline: TopologyTimeline::empty(),
             programs: Arc::new(RoleRegistry::builtin()),
             flavor,
+            codec: None,
         });
         (job, cfgs)
     }

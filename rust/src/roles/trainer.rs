@@ -48,6 +48,11 @@ pub struct TrainerCtx {
     skip: bool,
     pub done: bool,
     last_loss: f64,
+    /// Error-feedback residual for lossy upload codecs (top-k): the mass
+    /// this client has not yet managed to send. Owned here — per client —
+    /// so encoding stays a pure function of `(delta, residual)` and the
+    /// job's codec object can be shared statelessly.
+    residual: Vec<f32>,
 }
 
 impl TrainerCtx {
@@ -71,6 +76,7 @@ impl TrainerCtx {
             skip: false,
             done: false,
             last_loss: f64::NAN,
+            residual: Vec::new(),
         })
     }
 
@@ -297,6 +303,47 @@ fn upload(c: &mut TrainerCtx) -> Result<()> {
     Ok(())
 }
 
+/// Codec variant of `upload`, swapped into the `upload` slot by [`build`]
+/// when the job configures `hyper.codec`: the (DP-sanitized) delta is
+/// encoded through the job codec and travels as `Payload::Encoded`, so
+/// virtual-time wire accounting charges the **compressed** bytes. The
+/// aggregation point decodes and — for synchronous collects — re-adds the
+/// round's distributed base, mirroring the raw path's `base + delta`
+/// arithmetic exactly (the `f32` codec is therefore bit-identical to no
+/// codec at all). Lossy codecs bank their unsent mass in the per-client
+/// error-feedback residual.
+fn upload_encoded(c: &mut TrainerCtx) -> Result<()> {
+    if c.done || c.skip {
+        return Ok(());
+    }
+    let codec = c
+        .env
+        .job
+        .codec
+        .clone()
+        .context("upload_encoded scheduled without a job codec")?;
+    let tcfg = &c.env.job.tcfg;
+    let mut delta = crate::model::sub(&c.flat, &c.global);
+    if tcfg.dp_clip > 0.0 {
+        crate::algos::dp_sanitize(&mut delta, tcfg.dp_clip, tcfg.dp_sigma, &mut c.env.rng);
+    }
+    let enc = Arc::new(codec.encode(&delta, &mut c.residual));
+    let mut meta = Json::obj();
+    meta.insert("samples", c.data.len());
+    meta.insert("loss", Json::Num(c.last_loss));
+    meta.insert("worker", c.env.cfg.id.as_str());
+    let msg = Message::encoded("update", c.round, enc).with_meta(Json::Obj(meta));
+    let parent = c.parent.clone().context("no parent to upload to")?;
+    let param = c.env.chan("param-channel")?;
+    c.env.job.metrics.add_traffic(msg.size_bytes());
+    c.env
+        .job
+        .metrics
+        .record(&c.env.cfg.id, "upload_bytes", c.round, msg.size_bytes() as f64);
+    param.send(&parent, msg)?;
+    Ok(())
+}
+
 /// CO-FL only (inserted by surgery): per-round assignment from the
 /// coordinator — which aggregator to work with, or end-of-training.
 fn get_assignment(c: &mut TrainerCtx) -> Result<()> {
@@ -343,6 +390,11 @@ pub fn build(env: WorkerEnv, coordinated: bool) -> Result<Box<dyn Program>> {
     if coordinated {
         chain.insert_before("fetch", Tasklet::new("get_assignment", get_assignment))?;
     }
+    // Update codec: the encode stage rides the composer chain by taking
+    // over the `upload` slot (same Table-1 surgery a custom program uses).
+    if ctx.env.job.codec.is_some() {
+        chain.replace_with("upload", Tasklet::new("upload_encoded", upload_encoded))?;
+    }
     Ok(chain_program(chain, ctx))
 }
 
@@ -367,6 +419,17 @@ mod tests {
         assert_eq!(
             c.aliases(),
             vec!["load", "init", "get_assignment", "fetch", "train", "upload"]
+        );
+    }
+
+    #[test]
+    fn codec_surgery_takes_over_the_upload_slot() {
+        let mut c = base_chain();
+        c.replace_with("upload", Tasklet::new("upload_encoded", upload_encoded))
+            .unwrap();
+        assert_eq!(
+            c.aliases(),
+            vec!["load", "init", "fetch", "train", "upload_encoded"]
         );
     }
 }

@@ -1,0 +1,379 @@
+//! Update codecs — communication-efficient encodings for the upload path.
+//!
+//! Trainers upload model *deltas* (update − distributed model). A codec
+//! compresses that delta on the uploading role's chain and is decoded at
+//! the aggregation point, where the carried delta is re-added onto the
+//! round's distributed base before entering the streaming fold. Because
+//! [`crate::channel::Payload::Encoded`] reports the **encoded** wire size
+//! through `Message::size_bytes`, `VirtualNet::transfer_us` charges the
+//! compressed bytes — compression visibly shortens virtual-time rounds,
+//! which `rust/tests/codecs.rs` asserts.
+//!
+//! Three schemes:
+//!
+//! * [`F32Codec`] (`"f32"`) — passthrough parity oracle. Carries the raw
+//!   delta; wire size equals the `Payload::Floats` size it replaces, so a
+//!   job with `codec: "f32"` is bit-identical (metrics *and* virtual
+//!   time) to one with no codec at all on the classical trainer path,
+//!   whose raw upload computes the same `base + delta` sum. (The hybrid
+//!   delegate's raw upload ships its model directly, so there f32 parity
+//!   is virtual-time-exact but numerically only f32-add-exact.)
+//! * [`Int8Codec`] (`"int8"`) — linear quantization: `scale = max|δ|/127`,
+//!   each coordinate rounds to a signed byte. ~4× fewer bytes, bounded
+//!   per-coordinate error `≤ scale/2`.
+//! * [`TopKCodec`] (`"topk"`) — magnitude sparsification with per-client
+//!   **error feedback**: the codec adds the client's residual to the
+//!   delta, keeps the `ceil(frac·d)` largest-magnitude coordinates
+//!   (deterministic tie-break: larger |value| first, then lower index),
+//!   and leaves everything it dropped in the residual for the next round.
+//!   `decode(encode(u)) + residual == u + residual_in` holds exactly —
+//!   the selected values are copied verbatim, never re-rounded.
+//!
+//! Codecs are stateless and shared per job (`JobRuntime::codec`); the
+//! error-feedback residual lives with the *client* (trainer/hybrid role
+//! context), which keeps encoding a pure function of `(delta, residual)`
+//! and therefore deterministic across executors and runner pools.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// One encoded update as it travels the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EncodedUpdate {
+    /// Raw delta — the passthrough oracle.
+    F32 { data: Vec<f32> },
+    /// Linear int8 quantization: `delta[i] ≈ q[i] · scale`.
+    Int8 { d: usize, scale: f32, q: Vec<i8> },
+    /// Sparse top-k coordinates of the (residual-corrected) delta.
+    TopK { d: usize, idx: Vec<u32>, val: Vec<f32> },
+}
+
+impl EncodedUpdate {
+    /// Bytes this update occupies on the wire — what `VirtualNet` charges.
+    /// `F32` matches `Payload::Floats` exactly (4 bytes per coordinate, no
+    /// extra header) so passthrough keeps virtual time unchanged; the
+    /// compressed forms carry their small side-channel (scale / length)
+    /// explicitly.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            EncodedUpdate::F32 { data } => 4 * data.len(),
+            EncodedUpdate::Int8 { q, .. } => 8 + q.len(),
+            EncodedUpdate::TopK { idx, .. } => 8 + 8 * idx.len(),
+        }
+    }
+
+    /// Decoded (dense) length.
+    pub fn d(&self) -> usize {
+        match self {
+            EncodedUpdate::F32 { data } => data.len(),
+            EncodedUpdate::Int8 { d, .. } | EncodedUpdate::TopK { d, .. } => *d,
+        }
+    }
+
+    pub fn scheme(&self) -> &'static str {
+        match self {
+            EncodedUpdate::F32 { .. } => "f32",
+            EncodedUpdate::Int8 { .. } => "int8",
+            EncodedUpdate::TopK { .. } => "topk",
+        }
+    }
+}
+
+/// An upload-path encode / aggregation-point decode pair.
+pub trait Codec: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Encode one delta. `residual` is the caller-owned per-client
+    /// error-feedback state — empty means "no residual yet"; codecs
+    /// without error feedback leave it untouched.
+    fn encode(&self, delta: &[f32], residual: &mut Vec<f32>) -> EncodedUpdate;
+
+    /// Decode the carried delta and **add** it into `out` (`out += δ`),
+    /// mirroring how the raw-float path axpy's the delta onto the base
+    /// model. `out` must have the encoded dense length.
+    fn decode_add(&self, enc: &EncodedUpdate, out: &mut [f32]) -> Result<()>;
+}
+
+fn check_len(enc: &EncodedUpdate, out: &[f32]) -> Result<()> {
+    if enc.d() != out.len() {
+        bail!(
+            "encoded update carries {} parameters, decode target holds {}",
+            enc.d(),
+            out.len()
+        );
+    }
+    Ok(())
+}
+
+/// Passthrough parity oracle: carries the raw delta.
+pub struct F32Codec;
+
+impl Codec for F32Codec {
+    fn name(&self) -> &'static str {
+        "f32"
+    }
+
+    fn encode(&self, delta: &[f32], _residual: &mut Vec<f32>) -> EncodedUpdate {
+        EncodedUpdate::F32 { data: delta.to_vec() }
+    }
+
+    fn decode_add(&self, enc: &EncodedUpdate, out: &mut [f32]) -> Result<()> {
+        check_len(enc, out)?;
+        match enc {
+            EncodedUpdate::F32 { data } => {
+                crate::model::axpy(out, 1.0, data);
+                Ok(())
+            }
+            other => bail!("f32 codec cannot decode a '{}' update", other.scheme()),
+        }
+    }
+}
+
+/// Linear int8 quantization: `scale = max|δ|/127`, symmetric range.
+pub struct Int8Codec;
+
+impl Codec for Int8Codec {
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+
+    fn encode(&self, delta: &[f32], _residual: &mut Vec<f32>) -> EncodedUpdate {
+        let max_abs = delta.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let scale = max_abs / 127.0;
+        let q = if scale == 0.0 {
+            vec![0i8; delta.len()]
+        } else {
+            delta
+                .iter()
+                .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+                .collect()
+        };
+        EncodedUpdate::Int8 { d: delta.len(), scale, q }
+    }
+
+    fn decode_add(&self, enc: &EncodedUpdate, out: &mut [f32]) -> Result<()> {
+        check_len(enc, out)?;
+        match enc {
+            EncodedUpdate::Int8 { scale, q, .. } => {
+                for (o, &qi) in out.iter_mut().zip(q) {
+                    *o += qi as f32 * scale;
+                }
+                Ok(())
+            }
+            other => bail!("int8 codec cannot decode a '{}' update", other.scheme()),
+        }
+    }
+}
+
+/// Top-k magnitude sparsification with error feedback.
+pub struct TopKCodec {
+    frac: f64,
+}
+
+impl TopKCodec {
+    /// `frac` is the kept fraction of coordinates, in `(0, 1]`.
+    pub fn new(frac: f64) -> Result<Self> {
+        if !(frac > 0.0 && frac <= 1.0) {
+            bail!("topk_frac must be in (0, 1], got {frac}");
+        }
+        Ok(Self { frac })
+    }
+
+    pub fn k_for(&self, d: usize) -> usize {
+        ((self.frac * d as f64).ceil() as usize).clamp(1, d.max(1))
+    }
+}
+
+impl Codec for TopKCodec {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn encode(&self, delta: &[f32], residual: &mut Vec<f32>) -> EncodedUpdate {
+        let d = delta.len();
+        if residual.len() != d {
+            residual.clear();
+            residual.resize(d, 0.0);
+        }
+        // error-feedback correction: compress (delta + residual)
+        let u: Vec<f32> = delta.iter().zip(residual.iter()).map(|(&a, &b)| a + b).collect();
+        let k = self.k_for(d);
+        let mut order: Vec<u32> = (0..d as u32).collect();
+        // deterministic selection: |value| descending, index ascending
+        order.sort_by(|&a, &b| {
+            u[b as usize]
+                .abs()
+                .total_cmp(&u[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        let mut idx: Vec<u32> = order[..k].to_vec();
+        idx.sort_unstable();
+        let val: Vec<f32> = idx.iter().map(|&i| u[i as usize]).collect();
+        // what was dropped carries over; what was sent leaves the residual
+        residual.copy_from_slice(&u);
+        for &i in &idx {
+            residual[i as usize] = 0.0;
+        }
+        EncodedUpdate::TopK { d, idx, val }
+    }
+
+    fn decode_add(&self, enc: &EncodedUpdate, out: &mut [f32]) -> Result<()> {
+        check_len(enc, out)?;
+        match enc {
+            EncodedUpdate::TopK { idx, val, .. } => {
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] += v;
+                }
+                Ok(())
+            }
+            other => bail!("topk codec cannot decode a '{}' update", other.scheme()),
+        }
+    }
+}
+
+/// Build a codec from its TAG spec name (`hyper.codec`). `topk_frac`
+/// parameterizes `"topk"` and is ignored otherwise.
+pub fn build_codec(name: &str, topk_frac: f64) -> Result<Arc<dyn Codec>> {
+    Ok(match name {
+        "f32" => Arc::new(F32Codec),
+        "int8" => Arc::new(Int8Codec),
+        "topk" => Arc::new(TopKCodec::new(topk_frac)?),
+        other => bail!("unknown codec '{other}' (expected f32 | int8 | topk)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::prng::Rng::new(seed);
+        (0..d).map(|_| rng.normal() as f32 * 0.1).collect()
+    }
+
+    #[test]
+    fn f32_roundtrip_is_exact_and_wire_matches_floats() {
+        let u = delta(97, 1);
+        let mut res = Vec::new();
+        let enc = F32Codec.encode(&u, &mut res);
+        assert!(res.is_empty(), "passthrough must not touch the residual");
+        assert_eq!(enc.wire_bytes(), 4 * 97);
+        let mut out = vec![0f32; 97];
+        F32Codec.decode_add(&enc, &mut out).unwrap();
+        assert_eq!(out, u);
+    }
+
+    #[test]
+    fn int8_error_bounded_by_half_scale() {
+        let u = delta(256, 2);
+        let mut res = Vec::new();
+        let enc = Int8Codec.encode(&u, &mut res);
+        let scale = match &enc {
+            EncodedUpdate::Int8 { scale, .. } => *scale,
+            _ => unreachable!(),
+        };
+        assert!(enc.wire_bytes() < 4 * 256 / 3, "int8 must compress ≥3×");
+        let mut out = vec![0f32; 256];
+        Int8Codec.decode_add(&enc, &mut out).unwrap();
+        for (a, b) in u.iter().zip(&out) {
+            assert!((a - b).abs() <= scale * 0.5 + 1e-7, "{a} vs {b} (scale {scale})");
+        }
+    }
+
+    #[test]
+    fn int8_zero_delta_encodes_cleanly() {
+        let u = vec![0f32; 16];
+        let enc = Int8Codec.encode(&u, &mut Vec::new());
+        let mut out = vec![0f32; 16];
+        Int8Codec.decode_add(&enc, &mut out).unwrap();
+        assert_eq!(out, u);
+    }
+
+    #[test]
+    fn topk_keeps_largest_and_banks_the_rest() {
+        let u = vec![0.1, -5.0, 0.2, 3.0, -0.05, 0.0];
+        let codec = TopKCodec::new(0.34).unwrap(); // k = ceil(2.04) = 3
+        let mut res = Vec::new();
+        let enc = codec.encode(&u, &mut res);
+        match &enc {
+            EncodedUpdate::TopK { idx, val, .. } => {
+                assert_eq!(idx, &[1, 2, 3], "sorted index layout");
+                assert_eq!(val, &[-5.0, 0.2, 3.0]);
+            }
+            _ => unreachable!(),
+        }
+        // residual holds exactly the dropped mass
+        assert_eq!(res, vec![0.1, 0.0, 0.0, 0.0, -0.05, 0.0]);
+        let mut out = vec![0f32; 6];
+        codec.decode_add(&enc, &mut out).unwrap();
+        for i in 0..6 {
+            assert_eq!(out[i] + res[i], u[i], "EF conservation at {i}");
+        }
+    }
+
+    #[test]
+    fn topk_error_feedback_flushes_over_rounds() {
+        // a coordinate too small to ever win a round on its own still gets
+        // through once its banked residual outgrows the competition
+        let codec = TopKCodec::new(0.25).unwrap(); // k=1 of d=4
+        let mut res = Vec::new();
+        let mut delivered = vec![0f32; 4];
+        for _ in 0..8 {
+            let u = vec![0.4, 0.3, 0.2, 0.1];
+            let enc = codec.encode(&u, &mut res);
+            codec.decode_add(&enc, &mut delivered).unwrap();
+        }
+        // total mass conservation: delivered + residual == Σ rounds
+        for i in 0..4 {
+            let sent = 8.0 * [0.4f32, 0.3, 0.2, 0.1][i];
+            assert!((delivered[i] + res[i] - sent).abs() < 1e-5);
+        }
+        // every coordinate was eventually delivered at least once
+        assert!(delivered.iter().all(|&v| v > 0.0), "{delivered:?}");
+    }
+
+    #[test]
+    fn topk_tie_break_is_deterministic() {
+        let u = vec![1.0f32, -1.0, 1.0, 0.5];
+        let codec = TopKCodec::new(0.5).unwrap(); // k=2
+        let enc = codec.encode(&u, &mut Vec::new());
+        match enc {
+            EncodedUpdate::TopK { idx, .. } => assert_eq!(idx, vec![0, 1]),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn build_codec_validates() {
+        assert!(build_codec("f32", 0.0).is_ok());
+        assert!(build_codec("int8", 0.0).is_ok());
+        assert!(build_codec("topk", 0.01).is_ok());
+        assert!(build_codec("topk", 0.0).is_err());
+        assert!(build_codec("topk", 1.5).is_err());
+        assert!(build_codec("gzip", 0.1).is_err());
+    }
+
+    #[test]
+    fn wire_bytes_reflect_compression() {
+        let d = 4096;
+        let u = delta(d, 3);
+        let f32b = F32Codec.encode(&u, &mut Vec::new()).wire_bytes();
+        let i8b = Int8Codec.encode(&u, &mut Vec::new()).wire_bytes();
+        let tkb = TopKCodec::new(0.01)
+            .unwrap()
+            .encode(&u, &mut Vec::new())
+            .wire_bytes();
+        assert_eq!(f32b, 4 * d);
+        assert!(i8b * 3 < f32b, "int8 {i8b} vs {f32b}");
+        assert!(tkb * 10 < f32b, "topk {tkb} vs {f32b}");
+    }
+
+    #[test]
+    fn cross_scheme_decode_is_rejected() {
+        let enc = Int8Codec.encode(&[1.0, 2.0], &mut Vec::new());
+        assert!(F32Codec.decode_add(&enc, &mut [0.0, 0.0]).is_err());
+        let mut short = [0f32; 1];
+        assert!(Int8Codec.decode_add(&enc, &mut short).is_err());
+    }
+}

@@ -42,18 +42,22 @@
 //! `rust/tests/streaming_parity.rs` against `model::weighted_sum` as the
 //! oracle).
 
+pub mod codec;
 pub mod mock;
 pub mod pjrt;
 pub mod pool;
+pub mod simd;
 pub mod spec;
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+pub use codec::{Codec, EncodedUpdate};
 pub use mock::MockCompute;
 pub use pjrt::PjrtPool;
 pub use pool::TensorPool;
+pub use simd::{SimdCompute, SimdKernel};
 pub use spec::ArtifactSpec;
 
 use crate::net::VTime;

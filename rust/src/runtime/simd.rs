@@ -1,0 +1,450 @@
+//! `SimdCompute` — explicitly vectorized aggregation folds.
+//!
+//! The aggregation fold is the fabric's arithmetic hot path: every round,
+//! every aggregation point folds O(children) flat `f32` rows into one
+//! O(d) accumulator. [`MockCompute`](super::MockCompute) folds row by row
+//! (`acc += w·u` as a full pass per row), which re-streams the
+//! accumulator from memory once per child. `SimdCompute` wraps any inner
+//! [`Compute`] and replaces only the fold entry points
+//! ([`Compute::aggregate_into`] / [`Compute::aggregate_k`]) with
+//! register-blocked kernels: each 8-lane block of the accumulator is
+//! loaded once, folded across *all* rows of the chunk, and stored once —
+//! O(d) accumulator traffic per chunk instead of O(rows·d).
+//!
+//! Three kernels, selected at construction ([`SimdKernel`]):
+//!
+//! * **Scalar** — row-sequential [`crate::model::axpy`], byte-identical
+//!   to the mock oracle. The CI force-scalar cell (`FLAME_SIMD=scalar`)
+//!   pins this path.
+//! * **Portable** — the blocked loop written over fixed 8-wide arrays so
+//!   LLVM auto-vectorizes it on any target. Per element it performs the
+//!   same `mul` then `add` sequence in the same order as Scalar, so it is
+//!   **bit-identical** to the oracle (blocking reorders memory traffic,
+//!   never arithmetic).
+//! * **Avx2Fma** — `std::arch` AVX2 intrinsics with `_mm256_fmadd_ps`,
+//!   runtime-dispatched via `is_x86_feature_detected!`. Fusing the
+//!   multiply-add skips one rounding per fold step, so results may differ
+//!   from the scalar oracle — see the ULP policy below.
+//!
+//! ## ULP-parity policy
+//!
+//! Each fused `fma(u, w, acc)` differs from the scalar
+//! `round(round(w·u) + acc)` by at most one unit in the last place of the
+//! running accumulator. A k-row fold therefore diverges from the scalar
+//! oracle by **at most k ULP** per element; in practice the error is far
+//! smaller because the two roundings usually agree. Tests here and in
+//! `rust/tests/codecs.rs` assert `ulp_distance ≤ rows` for every kernel
+//! (Scalar and Portable must be exactly 0). Chunk boundaries never
+//! perturb any kernel: the per-element fold order is row order regardless
+//! of how the `Accumulator` batches `agg_k`-sized calls, so streaming
+//! determinism across runner pools is preserved.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::Compute;
+
+/// Which fold kernel a [`SimdCompute`] runs. Fixed per instance (hence
+/// per job) so every fold in a run uses the same arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdKernel {
+    /// Row-sequential scalar fold — the `MockCompute` oracle.
+    Scalar,
+    /// Register-blocked 8-wide fold, auto-vectorized; bit-identical to
+    /// `Scalar`.
+    Portable,
+    /// AVX2 + FMA intrinsics; ULP-bounded divergence from `Scalar`.
+    Avx2Fma,
+}
+
+impl SimdKernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdKernel::Scalar => "scalar",
+            SimdKernel::Portable => "portable",
+            SimdKernel::Avx2Fma => "avx2",
+        }
+    }
+}
+
+/// Pick the fastest kernel the host supports.
+pub fn detect_kernel() -> SimdKernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return SimdKernel::Avx2Fma;
+        }
+    }
+    SimdKernel::Portable
+}
+
+/// Resolve a kernel from a policy string (TAG `hyper.simd`, `JobOptions`,
+/// or the `FLAME_SIMD` env override used by the CI force-scalar cell).
+/// `auto`/`on` detect; unknown or unsupported requests fall back to the
+/// best supported kernel rather than failing the job.
+pub fn kernel_from_policy(policy: &str) -> SimdKernel {
+    match policy {
+        "scalar" => SimdKernel::Scalar,
+        "portable" => SimdKernel::Portable,
+        "avx2" | "fma" => {
+            if detect_kernel() == SimdKernel::Avx2Fma {
+                SimdKernel::Avx2Fma
+            } else {
+                SimdKernel::Portable
+            }
+        }
+        _ => detect_kernel(),
+    }
+}
+
+/// The env-resolved kernel: `FLAME_SIMD` wins (CI's force-scalar cell),
+/// otherwise hardware detection.
+pub fn env_kernel() -> SimdKernel {
+    match std::env::var("FLAME_SIMD") {
+        Ok(v) if !v.is_empty() => kernel_from_policy(&v),
+        _ => detect_kernel(),
+    }
+}
+
+/// A [`Compute`] decorator that vectorizes the aggregation fold and
+/// forwards every other entry point to the wrapped backend.
+pub struct SimdCompute {
+    inner: Arc<dyn Compute>,
+    kernel: SimdKernel,
+}
+
+impl SimdCompute {
+    /// Wrap `inner` with the env/hardware-selected kernel.
+    pub fn wrap(inner: Arc<dyn Compute>) -> Self {
+        Self::with_kernel(inner, env_kernel())
+    }
+
+    /// Wrap `inner` with an explicit kernel (parity tests and benches).
+    pub fn with_kernel(inner: Arc<dyn Compute>, kernel: SimdKernel) -> Self {
+        Self { inner, kernel }
+    }
+
+    pub fn kernel(&self) -> SimdKernel {
+        self.kernel
+    }
+}
+
+/// Fold `acc += Σ wᵢ·uᵢ` with the given kernel. Public so the fabric
+/// bench can time kernels directly without a `Compute` round-trip.
+pub fn fold_rows(kernel: SimdKernel, acc: &mut [f32], updates: &[&[f32]], weights: &[f32]) {
+    assert_eq!(updates.len(), weights.len());
+    for u in updates {
+        assert_eq!(u.len(), acc.len(), "row length mismatch in fold");
+    }
+    match kernel {
+        SimdKernel::Scalar => {
+            for (u, &w) in updates.iter().zip(weights) {
+                crate::model::axpy(acc, w, u);
+            }
+        }
+        SimdKernel::Portable => fold_portable(acc, updates, weights),
+        SimdKernel::Avx2Fma => {
+            #[cfg(target_arch = "x86_64")]
+            // Safety: Avx2Fma is only ever selected when
+            // `is_x86_feature_detected!` confirmed avx2+fma (see
+            // `kernel_from_policy`/`detect_kernel`), or by tests that
+            // check support first.
+            unsafe {
+                fold_avx2(acc, updates, weights)
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            fold_portable(acc, updates, weights)
+        }
+    }
+}
+
+const LANES: usize = 8;
+
+/// Register-blocked portable fold: one pass over `acc`, all rows folded
+/// per 8-lane block. Per element this is the same mul-then-add sequence
+/// as the scalar row loop, so the result is bit-identical.
+fn fold_portable(acc: &mut [f32], updates: &[&[f32]], weights: &[f32]) {
+    let d = acc.len();
+    let blocks = d / LANES * LANES;
+    let mut i = 0;
+    while i < blocks {
+        let mut a = [0f32; LANES];
+        a.copy_from_slice(&acc[i..i + LANES]);
+        for (u, &w) in updates.iter().zip(weights) {
+            let row = &u[i..i + LANES];
+            for l in 0..LANES {
+                a[l] += w * row[l];
+            }
+        }
+        acc[i..i + LANES].copy_from_slice(&a);
+        i += LANES;
+    }
+    for j in blocks..d {
+        let mut a = acc[j];
+        for (u, &w) in updates.iter().zip(weights) {
+            a += w * u[j];
+        }
+        acc[j] = a;
+    }
+}
+
+/// AVX2/FMA fold. The scalar tail uses `mul_add` so the whole vector sees
+/// one arithmetic (fused) regardless of lane position.
+///
+/// # Safety
+/// Caller must ensure the host supports `avx2` and `fma`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn fold_avx2(acc: &mut [f32], updates: &[&[f32]], weights: &[f32]) {
+    use std::arch::x86_64::*;
+    let d = acc.len();
+    let blocks = d / LANES * LANES;
+    let mut i = 0;
+    while i < blocks {
+        let mut a = _mm256_loadu_ps(acc.as_ptr().add(i));
+        for (u, &w) in updates.iter().zip(weights) {
+            let wv = _mm256_set1_ps(w);
+            let row = _mm256_loadu_ps(u.as_ptr().add(i));
+            a = _mm256_fmadd_ps(row, wv, a);
+        }
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), a);
+        i += LANES;
+    }
+    for j in blocks..d {
+        let mut a = acc[j];
+        for (u, &w) in updates.iter().zip(weights) {
+            a = u[j].mul_add(w, a);
+        }
+        acc[j] = a;
+    }
+}
+
+/// ULP distance between two finite `f32`s: how many representable values
+/// lie between them. The parity tests' comparison metric.
+pub fn ulp_distance(a: f32, b: f32) -> u32 {
+    // map IEEE sign-magnitude onto a monotone integer line (±0 coincide)
+    fn ordered(x: f32) -> i64 {
+        let bits = x.to_bits();
+        if bits & 0x8000_0000 != 0 {
+            -((bits & 0x7fff_ffff) as i64)
+        } else {
+            bits as i64
+        }
+    }
+    debug_assert!(a.is_finite() && b.is_finite());
+    (ordered(a) - ordered(b)).unsigned_abs() as u32
+}
+
+/// Max ULP distance across two equal-length slices.
+pub fn max_ulp(a: &[f32], b: &[f32]) -> u32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| ulp_distance(x, y)).max().unwrap_or(0)
+}
+
+impl Compute for SimdCompute {
+    fn d_pad(&self) -> usize {
+        self.inner.d_pad()
+    }
+
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn agg_k(&self) -> usize {
+        self.inner.agg_k()
+    }
+
+    fn train_step(
+        &self,
+        flat: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        self.inner.train_step(flat, x, y, lr)
+    }
+
+    fn train_step_prox(
+        &self,
+        flat: &[f32],
+        gflat: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        self.inner.train_step_prox(flat, gflat, x, y, lr, mu)
+    }
+
+    fn train_step_dyn(
+        &self,
+        flat: &[f32],
+        gflat: &[f32],
+        h: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        alpha: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        self.inner.train_step_dyn(flat, gflat, h, x, y, lr, alpha)
+    }
+
+    fn grad_step(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<(Vec<f32>, f32)> {
+        self.inner.grad_step(flat, x, y)
+    }
+
+    fn eval_step(&self, flat: &[f32], x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        self.inner.eval_step(flat, x, y)
+    }
+
+    /// Vectorized weighted sum of one chunk: zeroed buffer + blocked fold.
+    fn aggregate_k(&self, updates: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        assert!(updates.len() <= self.agg_k());
+        let d = updates.first().map(|u| u.len()).unwrap_or(0);
+        let mut out = vec![0f32; d];
+        fold_rows(self.kernel, &mut out, updates, weights);
+        Ok(out)
+    }
+
+    /// Chunk-uniform like the mock: per-element fold order is row order,
+    /// so `agg_k` batching is invisible to the result for every kernel.
+    fn aggregate_into(&self, acc: &mut [f32], updates: &[&[f32]], weights: &[f32]) -> Result<()> {
+        assert!(updates.len() <= self.agg_k());
+        fold_rows(self.kernel, acc, updates, weights);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weighted_sum;
+    use crate::prng::Rng;
+    use crate::runtime::MockCompute;
+
+    fn rows(seed: u64, k: usize, d: usize) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let rows = (0..k)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let w = (0..k).map(|_| 0.25 + rng.below(40) as f32 * 0.125).collect();
+        (rows, w)
+    }
+
+    fn kernels() -> Vec<SimdKernel> {
+        let mut ks = vec![SimdKernel::Scalar, SimdKernel::Portable];
+        if detect_kernel() == SimdKernel::Avx2Fma {
+            ks.push(SimdKernel::Avx2Fma);
+        }
+        ks
+    }
+
+    #[test]
+    fn portable_is_bit_identical_to_scalar_oracle() {
+        for &(k, d) in &[(1usize, 7usize), (5, 64), (13, 257), (64, 1000)] {
+            let (rows, w) = rows(k as u64 * 31 + d as u64, k, d);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let want = weighted_sum(&refs, &w);
+            let mut got = vec![0f32; d];
+            fold_rows(SimdKernel::Portable, &mut got, &refs, &w);
+            assert_eq!(got, want, "portable diverged at k={k} d={d}");
+        }
+    }
+
+    #[test]
+    fn avx2_stays_within_documented_ulp_bound() {
+        if detect_kernel() != SimdKernel::Avx2Fma {
+            return; // host cannot run the fused kernel
+        }
+        for &(k, d) in &[(3usize, 61usize), (16, 512), (64, 4096)] {
+            let (rows, w) = rows(k as u64 * 7 + d as u64, k, d);
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let want = weighted_sum(&refs, &w);
+            let mut got = vec![0f32; d];
+            fold_rows(SimdKernel::Avx2Fma, &mut got, &refs, &w);
+            let ulp = max_ulp(&got, &want);
+            assert!(ulp <= k as u32, "k={k} d={d}: ulp {ulp} exceeds fold depth");
+        }
+    }
+
+    #[test]
+    fn chunk_boundaries_are_invisible_for_every_kernel() {
+        let (rows, w) = rows(99, 11, 130);
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        for kern in kernels() {
+            let mut whole = vec![0f32; 130];
+            fold_rows(kern, &mut whole, &refs, &w);
+            for chunk in [1usize, 2, 3, 5, 11] {
+                let mut acc = vec![0f32; 130];
+                for (cu, cw) in refs.chunks(chunk).zip(w.chunks(chunk)) {
+                    fold_rows(kern, &mut acc, cu, cw);
+                }
+                assert_eq!(acc, whole, "{kern:?} chunk={chunk} changed the fold");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_compute_matches_mock_fold_within_ulp_policy() {
+        let d = 200;
+        let mock = MockCompute::new(d, 8, 16);
+        let (rows, w) = rows(7, 9, d);
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut want = vec![0f32; d];
+        mock.aggregate_into(&mut want, &refs, &w).unwrap();
+        for kern in kernels() {
+            let sc = SimdCompute::with_kernel(Arc::new(MockCompute::new(d, 8, 16)), kern);
+            let mut got = vec![0f32; d];
+            sc.aggregate_into(&mut got, &refs, &w).unwrap();
+            let ulp = max_ulp(&got, &want);
+            match kern {
+                SimdKernel::Avx2Fma => {
+                    assert!(ulp <= refs.len() as u32, "{kern:?}: ulp {ulp}")
+                }
+                _ => assert_eq!(got, want, "{kern:?} must be bit-identical"),
+            }
+            // aggregate_k is the same fold over a zeroed buffer
+            let agg = sc.aggregate_k(&refs, &w).unwrap();
+            assert_eq!(agg, got);
+        }
+    }
+
+    #[test]
+    fn delegates_everything_but_the_fold() {
+        let inner: Arc<dyn Compute> = Arc::new(MockCompute::new(64, 4, 8));
+        let sc = SimdCompute::wrap(inner.clone());
+        assert_eq!(sc.d_pad(), 64);
+        assert_eq!(sc.batch(), 4);
+        assert_eq!(sc.agg_k(), 8);
+        let flat = vec![0.01f32; 64];
+        let x = vec![0.1f32; 4 * crate::data::INPUT_DIM];
+        let y = vec![1i32; 4];
+        let (a, la) = inner.train_step(&flat, &x, &y, 0.1).unwrap();
+        let (b, lb) = sc.train_step(&flat, &x, &y, 0.1).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn policy_resolution() {
+        assert_eq!(kernel_from_policy("scalar"), SimdKernel::Scalar);
+        assert_eq!(kernel_from_policy("portable"), SimdKernel::Portable);
+        // avx2 request degrades gracefully on hosts without it
+        let got = kernel_from_policy("avx2");
+        assert!(got == SimdKernel::Avx2Fma || got == SimdKernel::Portable);
+        assert_eq!(kernel_from_policy("auto"), detect_kernel());
+    }
+
+    #[test]
+    fn ulp_distance_metric() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_distance(-1.0, f32::from_bits((-1.0f32).to_bits() + 1)), 1);
+        // straddling zero counts the values between -0.0 and +0.0 as one step
+        assert_eq!(ulp_distance(f32::from_bits(1), -f32::from_bits(1)), 2);
+        assert!(ulp_distance(1.0, 2.0) > 1_000_000);
+    }
+}

@@ -414,6 +414,100 @@ pub fn run_fleet(
     m.run_fleet(runners)
 }
 
+// ---------------------------------------------------------- codec sweep
+
+/// One codec's outcome inside a [`run_codec_sweep`] report.
+pub struct CodecRun {
+    pub codec: &'static str,
+    pub report: JobReport,
+    /// Mean upload volume per round (MB) — encoded bytes, since
+    /// [`crate::channel::Message`] sizes `Payload::Encoded` by its wire
+    /// form and `upload_bytes` records message sizes.
+    pub upload_mb_round: f64,
+    /// Final accuracy minus the f32 baseline's — the convergence cost of
+    /// lossy compression (0 for the baseline by construction).
+    pub acc_delta: f64,
+}
+
+/// Result of [`run_codec_sweep`]: one run per codec over the same spec.
+pub struct CodecSweep {
+    pub rounds: u64,
+    pub runs: Vec<CodecRun>,
+}
+
+impl CodecSweep {
+    /// Human-readable table: accuracy, convergence delta vs f32, virtual
+    /// completion time, and encoded upload volume per codec.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{:<6} {:>9} {:>9} {:>10} {:>12}\n",
+            "codec", "final_acc", "d_acc", "vtime_s", "MB/round"
+        );
+        for r in &self.runs {
+            s.push_str(&format!(
+                "{:<6} {:>9.4} {:>+9.4} {:>10.3} {:>12.4}\n",
+                r.codec,
+                r.report.final_acc.unwrap_or(f64::NAN),
+                r.acc_delta,
+                r.report.vtime_s,
+                r.upload_mb_round
+            ));
+        }
+        s
+    }
+}
+
+/// Communication-efficiency sweep: the same WAN-shaped classical job run
+/// once per update codec — `f32` passthrough (the baseline; bit-identical
+/// to running without a codec, including virtual time), `int8` linear
+/// quantization (~4x upload compression), and `topk` sparsification with
+/// error feedback (~`1/topk_frac`x). Uplink bytes are charged in their
+/// *encoded* form, so the lossy codecs finish in strictly less virtual
+/// time; the `acc_delta` column reports what that compression costs in
+/// final accuracy.
+pub fn run_codec_sweep(
+    trainers: usize,
+    rounds: u64,
+    topk_frac: f64,
+    o: &SimOptions,
+) -> Result<CodecSweep> {
+    anyhow::ensure!(trainers >= 1, "run_codec_sweep needs at least 1 trainer");
+    let run_one = |codec: &'static str| -> Result<JobReport> {
+        let spec = topo::classical(trainers, Backend::Broker)
+            .name("codec")
+            .rounds(rounds)
+            .set("lr", Json::Num(o.lr))
+            .set("local_steps", o.local_steps)
+            .set("seed", o.seed)
+            .set("codec", codec)
+            .set("topk_frac", Json::Num(topk_frac))
+            .build();
+        // fig11-style WAN fabric: the uplink is the bottleneck the codecs
+        // attack, so byte savings show up as virtual-time savings
+        let opts = o
+            .job_options()
+            .with_net(|net| net.set_default(LinkSpec::mbps(100.0, 1_000)));
+        let mut ctl = Controller::new(Arc::new(Store::in_memory()));
+        ctl.submit(spec, opts)
+    };
+    let mut runs = Vec::new();
+    let mut base_acc = 0.0;
+    for codec in ["f32", "int8", "topk"] {
+        let report = run_one(codec)?;
+        let acc = report.final_acc.unwrap_or(0.0);
+        if codec == "f32" {
+            base_acc = acc;
+        }
+        runs.push(CodecRun {
+            codec,
+            upload_mb_round: upload_mb_per_round(&report, rounds),
+            acc_delta: acc - base_acc,
+            report,
+        });
+    }
+    Ok(CodecSweep { rounds, runs })
+}
+
 // -------------------------------------------------------------- fedprox
 
 /// The FedProx proximal training step, written as a Role-SDK tasklet: the
@@ -660,6 +754,29 @@ mod tests {
         }
         assert!(report.max_job_vs > 0.0);
         assert!(report.jobs_per_vs > 0.0);
+    }
+
+    #[test]
+    fn codec_sweep_saves_virtual_time_and_reports_convergence_cost() {
+        let mut o = small_opts();
+        o.per_shard = 48;
+        let sweep = run_codec_sweep(4, 4, 0.1, &o).unwrap();
+        assert_eq!(sweep.runs.len(), 3);
+        let by = |name: &str| sweep.runs.iter().find(|r| r.codec == name).unwrap();
+        let (f32r, int8, topk) = (by("f32"), by("int8"), by("topk"));
+        // the baseline's delta is zero by construction
+        assert_eq!(f32r.acc_delta, 0.0);
+        // encoded uploads are strictly smaller...
+        assert!(int8.upload_mb_round < f32r.upload_mb_round, "{}", sweep.summary());
+        assert!(topk.upload_mb_round < int8.upload_mb_round, "{}", sweep.summary());
+        // ...and the virtual clock sees it: compressed jobs finish sooner
+        assert!(int8.report.vtime_s < f32r.report.vtime_s, "{}", sweep.summary());
+        assert!(topk.report.vtime_s < f32r.report.vtime_s, "{}", sweep.summary());
+        // lossy compression still learns on this task
+        assert!(int8.report.final_acc.unwrap() > 0.4, "{}", sweep.summary());
+        assert!(topk.report.final_acc.unwrap() > 0.4, "{}", sweep.summary());
+        // the summary table carries one row per codec
+        assert_eq!(sweep.summary().lines().count(), 4);
     }
 
     #[test]

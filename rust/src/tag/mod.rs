@@ -46,7 +46,13 @@
 //!   "datasets": [{
 //!     "name": "d0", "group": "group0", "realm": "*", "url": "synth://0"
 //!   }],
-//!   "hyper": {"lr": 0.1, "quorum": 0.8},   // forwarded to role programs
+//!   "hyper": {"lr": 0.1, "quorum": 0.8},   // forwarded to role programs;
+//!                                      // also: "codec" (f32|int8|topk, upload
+//!                                      // compression + encoded-byte virtual-time
+//!                                      // accounting), "topk_frac" (top-k keep
+//!                                      // fraction), "simd" (off|auto|scalar|
+//!                                      // portable|avx2 aggregation kernels,
+//!                                      // FLAME_SIMD env overrides)
 //!   "events": [                        // optional live-extension timeline
 //!     {"kind": "extend", "at_us": 2000000, "delta": {"addRoles": [], "addChannels": [], "addDatasets": []}},
 //!     {"kind": "leave",  "at_us": 3000000, "workers": ["job-trainer-3"]}

@@ -1,0 +1,221 @@
+//! Update-codec integration: the `f32` passthrough codec must be
+//! bit-identical to running with no codec at all (metrics, traffic, and
+//! virtual time); the lossy codecs (`int8`, `topk`) must ship strictly
+//! fewer bytes and — under WAN-shaped links — finish in strictly less
+//! virtual time; and every codec path must stay deterministic across
+//! executors and runner pools. Numeric properties of the schemes
+//! themselves (quantization error bound, error-feedback conservation,
+//! encode determinism, wire accounting) are property-tested at the
+//! bottom.
+
+use std::sync::Arc;
+
+use flame::channel::{Backend, Message};
+use flame::control::{Controller, Executor, JobOptions, JobReport};
+use flame::json::Json;
+use flame::net::LinkSpec;
+use flame::prng::Rng;
+use flame::runtime::codec::build_codec;
+use flame::store::Store;
+use flame::topo;
+
+const SERIES: &[&str] = &["acc", "loss", "vtime_s", "round_time_s"];
+
+fn series_of(r: &JobReport) -> Vec<Vec<(u64, f64)>> {
+    SERIES.iter().map(|s| r.metrics.series(s)).collect()
+}
+
+/// One classical 5-trainer job, optionally with an update codec and
+/// optionally over WAN-shaped (100 Mbit/s) links so transfer time is a
+/// visible share of the round.
+fn run_codec_job(codec: Option<&str>, executor: Executor, shaped: bool) -> JobReport {
+    let mut builder = topo::classical(5, Backend::Broker)
+        .rounds(3)
+        .set("lr", Json::Num(0.5))
+        .set("local_steps", 1usize)
+        .set("seed", 19u64);
+    if let Some(c) = codec {
+        builder = builder.set("codec", c).set("topk_frac", Json::Num(0.1));
+    }
+    let spec = builder.build();
+    let opts = JobOptions::mock()
+        .with_data(32, 64, flame::data::Partition::Dirichlet(0.3), 19)
+        .with_executor(executor);
+    let opts = if shaped {
+        opts.with_net(|net| {
+            net.set_default(LinkSpec::mbps(100.0, 1_000));
+        })
+    } else {
+        opts
+    };
+    Controller::new(Arc::new(Store::in_memory()))
+        .submit(spec, opts)
+        .expect("job failed")
+}
+
+#[test]
+fn f32_passthrough_is_bit_identical_to_no_codec() {
+    // the parity oracle: encoded f32 wire bytes equal the Floats payload
+    // they replace, and decode(base, delta) mirrors the raw path's
+    // base + delta arithmetic exactly — so metrics AND virtual time match
+    for shaped in [false, true] {
+        let raw = run_codec_job(None, Executor::Cooperative { runners: 2 }, shaped);
+        let f32c = run_codec_job(Some("f32"), Executor::Cooperative { runners: 2 }, shaped);
+        assert_eq!(
+            series_of(&raw),
+            series_of(&f32c),
+            "shaped={shaped}: f32 codec changed round metrics"
+        );
+        assert_eq!(
+            raw.total_bytes, f32c.total_bytes,
+            "shaped={shaped}: f32 codec changed wire traffic"
+        );
+        assert_eq!(raw.vtime_s, f32c.vtime_s, "shaped={shaped}: virtual time");
+    }
+}
+
+#[test]
+fn lossy_codecs_cut_bytes_and_wan_virtual_time() {
+    // acceptance: with WAN-shaped links, a codec-enabled round finishes in
+    // strictly less virtual time than f32 passthrough, because VirtualNet
+    // charges the encoded (compressed) byte counts
+    let f32c = run_codec_job(Some("f32"), Executor::Cooperative { runners: 2 }, true);
+    let int8 = run_codec_job(Some("int8"), Executor::Cooperative { runners: 2 }, true);
+    let topk = run_codec_job(Some("topk"), Executor::Cooperative { runners: 2 }, true);
+
+    assert!(
+        int8.total_bytes < f32c.total_bytes,
+        "int8 must ship fewer bytes: {} vs {}",
+        int8.total_bytes,
+        f32c.total_bytes
+    );
+    assert!(
+        topk.total_bytes < int8.total_bytes,
+        "topk@0.1 must ship fewer bytes than int8: {} vs {}",
+        topk.total_bytes,
+        int8.total_bytes
+    );
+    assert!(
+        int8.vtime_s < f32c.vtime_s,
+        "int8 must finish earlier in virtual time: {} vs {}",
+        int8.vtime_s,
+        f32c.vtime_s
+    );
+    assert!(
+        topk.vtime_s < f32c.vtime_s,
+        "topk must finish earlier in virtual time: {} vs {}",
+        topk.vtime_s,
+        f32c.vtime_s
+    );
+    // lossy, not destroyed: training still converges on the mock task
+    for (name, r) in [("int8", &int8), ("topk", &topk)] {
+        let acc = r.final_acc.expect("job records accuracy");
+        assert!(acc > 0.4, "{name} accuracy collapsed: {acc}");
+    }
+}
+
+#[test]
+fn codec_rounds_are_identical_across_executors_and_pools() {
+    // error-feedback residuals live with the client context and encoding
+    // is a pure function of (delta, residual), so scheduling must not
+    // change anything — including the synchronous aggregator's fold
+    for codec in ["int8", "topk"] {
+        let threads = run_codec_job(Some(codec), Executor::ThreadPerWorker, true);
+        let one = run_codec_job(Some(codec), Executor::Cooperative { runners: 1 }, true);
+        let many = run_codec_job(Some(codec), Executor::Cooperative { runners: 4 }, true);
+        assert_eq!(
+            series_of(&threads),
+            series_of(&one),
+            "{codec}: threads vs 1 runner"
+        );
+        assert_eq!(series_of(&one), series_of(&many), "{codec}: 1 vs 4 runners");
+        assert_eq!(threads.total_bytes, many.total_bytes, "{codec}: traffic");
+    }
+}
+
+// ------------------------------------------------------ scheme properties
+
+fn random_delta(seed: u64, d: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..d).map(|_| rng.normal() as f32 * 0.2).collect()
+}
+
+#[test]
+fn int8_roundtrip_error_is_bounded_by_half_scale() {
+    let codec = build_codec("int8", 0.0).unwrap();
+    for seed in 1..=8u64 {
+        let d = 64 * seed as usize + 7;
+        let u = random_delta(seed, d);
+        let max_abs = u.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        let scale = max_abs / 127.0;
+        let enc = codec.encode(&u, &mut Vec::new());
+        let mut out = vec![0f32; d];
+        codec.decode_add(&enc, &mut out).unwrap();
+        for (j, (&a, &b)) in u.iter().zip(&out).enumerate() {
+            assert!(
+                (a - b).abs() <= scale * 0.5 + 1e-7,
+                "seed {seed} coord {j}: |{a} - {b}| > scale/2 ({scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn topk_error_feedback_conserves_mass_bitwise() {
+    // per round: decoded[j] + residual_after[j] == delta[j] + residual_before[j]
+    // exactly — selected values are copied verbatim, dropped values are
+    // banked verbatim, and a single f32 add is involved on either side
+    let codec = build_codec("topk", 0.07).unwrap();
+    let mut residual: Vec<f32> = Vec::new();
+    for round in 0..6u64 {
+        let d = 301;
+        let u = random_delta(100 + round, d);
+        let before: Vec<f32> = if residual.is_empty() {
+            vec![0.0; d]
+        } else {
+            residual.clone()
+        };
+        let enc = codec.encode(&u, &mut residual);
+        let mut decoded = vec![0f32; d];
+        codec.decode_add(&enc, &mut decoded).unwrap();
+        for j in 0..d {
+            assert_eq!(
+                decoded[j] + residual[j],
+                u[j] + before[j],
+                "round {round} coord {j}: EF mass not conserved"
+            );
+        }
+    }
+}
+
+#[test]
+fn encoding_is_deterministic() {
+    for name in ["f32", "int8", "topk"] {
+        let codec = build_codec(name, 0.05).unwrap();
+        let u = random_delta(42, 513);
+        let mut r1 = vec![0.01f32; 513];
+        let mut r2 = r1.clone();
+        let a = codec.encode(&u, &mut r1);
+        let b = codec.encode(&u, &mut r2);
+        assert_eq!(a, b, "{name}: same input, different wire form");
+        assert_eq!(r1, r2, "{name}: same input, different residual");
+    }
+}
+
+#[test]
+fn encoded_messages_charge_encoded_bytes() {
+    // Message::size_bytes = 64-byte envelope + payload wire bytes (+ meta);
+    // for Payload::Encoded the payload part is exactly wire_bytes()
+    let u = random_delta(7, 200);
+    for (name, frac) in [("f32", 0.0), ("int8", 0.0), ("topk", 0.1)] {
+        let codec = build_codec(name, frac).unwrap();
+        let enc = Arc::new(codec.encode(&u, &mut Vec::new()));
+        let wire = enc.wire_bytes() as u64;
+        let msg = Message::encoded("update", 0, enc);
+        assert_eq!(
+            msg.size_bytes(),
+            64 + wire,
+            "{name}: virtual-time accounting sees the wrong byte count"
+        );
+    }
+}

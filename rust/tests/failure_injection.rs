@@ -67,6 +67,7 @@ fn panicking_worker_is_contained_by_the_agent_sandbox() {
         timeline: flame::deploy::TopologyTimeline::empty(),
         programs: Arc::new(flame::roles::RoleRegistry::builtin()),
         flavor,
+        codec: None,
     });
     let trainer_cfg = cfgs.iter().find(|c| c.role == "trainer").unwrap().clone();
     // env build fails at shard resolution inside the trainer program build

@@ -152,6 +152,63 @@ fn streaming_rounds_are_identical_across_executors_and_pools() {
 }
 
 #[test]
+fn hybrid_streaming_collect_is_identical_across_executors_and_pools() {
+    // the delegate-upload collect at the global now streams through the
+    // Accumulator's spill path (empty expected set, sorted-sender fold);
+    // results must stay bit-identical across executors and runner pools
+    let run = |executor: Executor| -> JobReport {
+        let spec = topo::hybrid(8, 2, Backend::Broker, Backend::P2p)
+            .rounds(3)
+            .set("lr", Json::Num(0.5))
+            .set("local_steps", 1usize)
+            .set("seed", 29u64)
+            .build();
+        let opts = JobOptions::mock()
+            .with_data(32, 64, flame::data::Partition::Dirichlet(0.3), 29)
+            .with_executor(executor);
+        Controller::new(Arc::new(Store::in_memory()))
+            .submit(spec, opts)
+            .expect("hybrid job failed")
+    };
+    let threads = run(Executor::ThreadPerWorker);
+    let one = run(Executor::Cooperative { runners: 1 });
+    let many = run(Executor::Cooperative { runners: 4 });
+    assert_eq!(series_of(&threads), series_of(&one), "hybrid: threads vs 1 runner");
+    assert_eq!(series_of(&one), series_of(&many), "hybrid: 1 vs 4 runners");
+    assert_eq!(threads.total_bytes, many.total_bytes, "hybrid: traffic");
+}
+
+#[test]
+fn fedbuff_streaming_fold_is_reproducible_across_pools() {
+    // async aggregation folds each arriving delta in place (no buffered
+    // drain); arrival order is decided by virtual time, so runs must be
+    // bit-identical across cooperative pool sizes and run over run
+    let run = |runners: usize| -> JobReport {
+        let spec = topo::classical(4, Backend::P2p)
+            .rounds(6)
+            .set("lr", Json::Num(0.5))
+            .set("local_steps", 1usize)
+            .set("aggregation", "fedbuff")
+            .set("buffer_k", 2usize)
+            .set("eta", Json::Num(0.7))
+            .set("seed", 37u64)
+            .build();
+        let opts = JobOptions::mock()
+            .with_data(32, 64, flame::data::Partition::Dirichlet(0.3), 37)
+            .with_executor(Executor::Cooperative { runners });
+        Controller::new(Arc::new(Store::in_memory()))
+            .submit(spec, opts)
+            .expect("fedbuff job failed")
+    };
+    let one = run(1);
+    let again = run(1);
+    let many = run(4);
+    assert_eq!(series_of(&one), series_of(&again), "fedbuff: not reproducible");
+    assert_eq!(series_of(&one), series_of(&many), "fedbuff: 1 vs 4 runners");
+    assert!(one.metrics.series("acc").len() >= 6);
+}
+
+#[test]
 fn quorum_partial_collect_is_reproducible() {
     // quorum < 1: the collected subset is decided by virtual time; the
     // same submission must reproduce bit-identically run over run
