@@ -87,6 +87,20 @@ impl ServerOpt {
         self.kind
     }
 
+    /// Optimizer moment state `(m, v, h)` for round-boundary checkpoints.
+    /// Hyper-parameters (`eta`, betas, …) are reconstructed from the job
+    /// spec on restore, so only the mutable vectors travel.
+    pub fn state(&self) -> (&[f32], &[f32], &[f32]) {
+        (&self.m, &self.v, &self.h)
+    }
+
+    /// Restore the moment state captured by [`ServerOpt::state`].
+    pub fn restore_state(&mut self, m: Vec<f32>, v: Vec<f32>, h: Vec<f32>) {
+        self.m = m;
+        self.v = v;
+        self.h = h;
+    }
+
     /// One server step. `mean_model` is the weighted mean of client models;
     /// the pseudo-gradient is `delta = mean_model - global`.
     pub fn apply(&mut self, global: &mut [f32], mean_model: &[f32]) {
@@ -167,6 +181,21 @@ impl FedBuff {
 
     pub fn buffered(&self) -> usize {
         self.pending
+    }
+
+    /// Pending-fold window state `(acc, wsum, pending, version)` for
+    /// round-boundary checkpoints.
+    pub fn state(&self) -> (&[f32], f32, usize, u64) {
+        (&self.acc, self.wsum, self.pending, self.version)
+    }
+
+    /// Restore the window captured by [`FedBuff::state`] (mid-window
+    /// resume: partially folded deltas keep their weights).
+    pub fn restore_state(&mut self, acc: Vec<f32>, wsum: f32, pending: usize, version: u64) {
+        self.acc = acc;
+        self.wsum = wsum;
+        self.pending = pending;
+        self.version = version;
     }
 
     /// Staleness weight `1/sqrt(1+s)` (the FedBuff paper's default).

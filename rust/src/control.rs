@@ -17,6 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::algos::TrainingConfig;
 use crate::channel::{ChannelManager, RECV_TIMEOUT};
+use crate::controlplane::checkpoint::{CkptPolicy, CkptSink, JobCheckpoint};
 use crate::data::{make_federated, Partition};
 use crate::deploy::{
     Deployer, DeployerSet, PodStatus, ScheduledAction, SimDeployer, ThreadDeployer,
@@ -116,6 +117,13 @@ pub struct JobOptions {
     /// custom mechanism (e.g. `sim::run_fedprox`) binds spec-declared
     /// `program:` names without touching global state.
     pub programs: Vec<(String, ProgramFactory)>,
+    /// Crash-resilience policy: round-boundary checkpoints through the
+    /// store, injectable controller kills, aggregator failover. `None`
+    /// leaves resilience off (no sink is built).
+    pub ckpt: Option<CkptPolicy>,
+    /// Checkpoint to rehydrate from (set by `JobManager::resume`; role
+    /// contexts pull their saved state out at build time).
+    pub restore: Option<Arc<JobCheckpoint>>,
 }
 
 impl JobOptions {
@@ -135,7 +143,16 @@ impl JobOptions {
             recv_timeout: None,
             events: Vec::new(),
             programs: Vec::new(),
+            ckpt: None,
+            restore: None,
         }
+    }
+
+    /// Arm crash resilience for this job (round-boundary checkpoints,
+    /// injected kills, aggregator failover — see [`CkptPolicy`]).
+    pub fn with_ckpt(mut self, policy: CkptPolicy) -> Self {
+        self.ckpt = Some(policy);
+        self
     }
 
     /// Register a program for this job only (Role SDK): the factory is
@@ -228,6 +245,11 @@ pub(crate) struct PreparedJob {
     pub timeline: Arc<TopologyTimeline>,
     pub recv_timeout: Duration,
     pub expansion_s: f64,
+    /// Resume bookkeeping: pods the dead predecessor run spawned that
+    /// this deployment will never stage (evicted before the checkpoint
+    /// boundary) — the fleet report adds them back so a resumed job's
+    /// worker count matches the unkilled run's.
+    pub prior_pods: usize,
 }
 
 /// The submission pipeline up to (but excluding) deployment: expand the
@@ -315,6 +337,14 @@ pub(crate) fn prepare_expanded(
     let mut runtime_spec = spec.clone();
     runtime_spec.events.clear();
     let mut entries: Vec<TimelineEntry> = Vec::new();
+    // Per-event marks for checkpoint resume: after each event, how many
+    // timeline entries exist and what the live worker set looks like
+    // (including in-place sequencer mutations, which never appear as
+    // entries). A resumed job replays the first `cursor` entries by
+    // jumping to the matching mark — boundaries never split an event, so
+    // the cursor always aligns with one.
+    let mut phase_marks: Vec<(usize, Vec<WorkerConfig>)> = Vec::new();
+    let mut live_set: Vec<WorkerConfig> = workers.clone();
     if !events.is_empty() {
         if flavor == Flavor::Coordinated {
             bail!(
@@ -394,6 +424,16 @@ pub(crate) fn prepare_expanded(
                         .filter(|id| !mutated.contains(id))
                         .cloned()
                         .collect();
+                    live_set.retain(|w| !evicts.contains(&w.id));
+                    live_set.extend(deploys.iter().cloned());
+                    for id in &mutated {
+                        if let (Some(slot), Some(nw)) = (
+                            live_set.iter_mut().find(|w| w.id == ***id),
+                            next_workers.iter().find(|w| w.id == ***id),
+                        ) {
+                            *slot = nw.clone();
+                        }
+                    }
                     if !evicts.is_empty() {
                         entries.push(TimelineEntry {
                             at: *at_us,
@@ -415,15 +455,96 @@ pub(crate) fn prepare_expanded(
                             bail!("leave event names unknown worker '{id}'");
                         }
                     }
+                    live_set.retain(|w| !leavers.contains(&w.id));
                     entries.push(TimelineEntry {
                         at: *at_us,
                         action: ScheduledAction::Evict(leavers.clone()),
                     });
                 }
             }
+            phase_marks.push((entries.len(), live_set.clone()));
         }
     }
-    let timeline = TopologyTimeline::new(entries);
+
+    // ---- crash resilience: sink gating, failover arming, resume replay
+    let sync_agg = !matches!(
+        tcfg.aggregation,
+        crate::algos::AggregationPolicy::Asynchronous { .. }
+    );
+    let has_ring = spec.channels.iter().any(|c| c.pair.0 == c.pair.1);
+    let arm_failover = opts.ckpt.as_ref().is_some_and(|p| p.failover);
+    if arm_failover {
+        // failover rides the live-extension machinery (evict + deploy_at
+        // on the running fabric), so it needs the same substrate
+        if flavor == Flavor::Coordinated {
+            bail!("aggregator failover is not supported with a coordinator role");
+        }
+        if !sync_agg {
+            bail!("aggregator failover requires synchronous aggregation");
+        }
+        if matches!(opts.executor, Executor::ThreadPerWorker) {
+            bail!("aggregator failover requires the cooperative executor");
+        }
+        if spec.role("global-aggregator").is_none() {
+            bail!("aggregator failover needs a 'global-aggregator' round sequencer");
+        }
+        if has_ring {
+            bail!("aggregator failover is not supported on ring/all-reduce topologies");
+        }
+    }
+    // Live (durable) checkpointing needs the round boundary to be a true
+    // barrier: synchronous aggregation at full quorum under a round
+    // sequencer, with no coordinator membership protocol and no frozen
+    // ring groups. Other shapes keep the sink for failover seeding but
+    // resume by restarting from round 0 (byte-identical by per-job
+    // determinism).
+    let live_ckpt = sync_agg
+        && tcfg.quorum >= 1.0
+        && flavor != Flavor::Coordinated
+        && flavor != Flavor::Distributed
+        && spec.role("global-aggregator").is_some()
+        && !has_ring;
+    let ckpt_sink = opts
+        .ckpt
+        .as_ref()
+        .map(|policy| CkptSink::new(job_label, policy.clone(), live_ckpt));
+
+    // Resume: jump the worker set to the checkpoint boundary (replaying
+    // the first `cursor` timeline entries' deploys/evicts/mutations via
+    // the phase marks) and hand the rebuilt timeline only the remainder.
+    let elastic = !entries.is_empty() || arm_failover;
+    let mut workers = workers;
+    let mut prior_pods = 0usize;
+    if let Some(ck) = &opts.restore {
+        if ck.cursor > 0 {
+            let boundary = phase_marks
+                .iter()
+                .find(|(n, _)| *n as u64 == ck.cursor)
+                .map(|(_, ws)| ws.clone())
+                .with_context(|| {
+                    format!(
+                        "resume: checkpoint cursor {} does not align with the \
+                         event timeline",
+                        ck.cursor
+                    )
+                })?;
+            let spawned_before: usize = workers.len()
+                + entries[..ck.cursor as usize]
+                    .iter()
+                    .map(|e| match &e.action {
+                        ScheduledAction::Deploy(ws) => ws.len(),
+                        ScheduledAction::Evict(_) => 0,
+                    })
+                    .sum::<usize>();
+            workers = boundary;
+            prior_pods = spawned_before - workers.len();
+            entries.drain(..ck.cursor as usize);
+        }
+    }
+    let timeline = TopologyTimeline::with_elastic(entries, elastic);
+    if let Some(ck) = &opts.restore {
+        timeline.skip_cursor(ck.cursor);
+    }
 
     // Resolve every role's program binding NOW, against the union spec —
     // initial roles AND roles introduced by live-extension deltas — so an
@@ -509,7 +630,16 @@ pub(crate) fn prepare_expanded(
         programs,
         flavor,
         codec,
+        ckpt: ckpt_sink,
+        restore: opts.restore.clone(),
     });
+    // rounds recorded before the kill point come back verbatim, so the
+    // resumed run's report series continue where the dead run stopped
+    if let Some(ck) = &opts.restore {
+        if !matches!(ck.metrics, Json::Null) {
+            job.metrics.restore(&ck.metrics);
+        }
+    }
     let recv_timeout = opts
         .recv_timeout
         .unwrap_or_else(|| auto_recv_timeout(workers.len()));
@@ -519,6 +649,7 @@ pub(crate) fn prepare_expanded(
         timeline,
         recv_timeout,
         expansion_s,
+        prior_pods,
     })
 }
 
@@ -622,7 +753,12 @@ impl Controller {
             timeline,
             recv_timeout,
             expansion_s,
+            ..
         } = prepare_job(&job_id, spec, opts, &self.registry, &self.programs, chan_mgr)?;
+        // crash resilience: commits go through the controller's store
+        if let Some(sink) = &job.ckpt {
+            sink.bind_store(self.store.clone());
+        }
 
         let t_db = Instant::now();
         self.store.put_batch(

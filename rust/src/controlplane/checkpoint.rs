@@ -1,0 +1,405 @@
+//! Round-boundary job checkpoints — the crash-resilience substrate.
+//!
+//! Flame's control plane snapshots each job's runtime state at round
+//! boundaries into the [`Store`]'s `job_ckpt` collection, so a controller
+//! killed at *any* boundary can resume the job and produce a final report
+//! byte-identical to an unkilled run (see DESIGN.md "Crash resilience &
+//! failover").
+//!
+//! The moving parts:
+//!
+//! * [`CkptPolicy`] — per-job knobs carried on `JobOptions`: checkpoint
+//!   cadence, an injectable controller kill point, and whether mid-tier
+//!   aggregator failover is armed.
+//! * [`CkptSink`] — the per-job collection point shared through
+//!   [`crate::roles::JobRuntime`]. Uploading workers *publish* their
+//!   boundary snapshot into the sink's hub immediately **before** their
+//!   upload send; because a synchronous quorum-1.0 collect only returns
+//!   once every child's upload arrived, the send gives a happens-before
+//!   edge: when the global aggregator reaches the next round boundary,
+//!   every worker's published snapshot is current. The global's
+//!   checkpoint tasklet then *commits* hub + its own state as one atomic
+//!   `put_batch`.
+//! * [`JobCheckpoint`] — the decoded checkpoint a resumed job rehydrates
+//!   from ([`load_latest`]).
+//!
+//! Torn-write safety: each epoch's records go into one `put_batch` with
+//! the `<job>/head` pointer written **last in the batch** — the head is
+//! both commit marker and latest-epoch pointer. Old-epoch GC runs only
+//! *after* the new head is durable, as separate tombstones plus a
+//! [`Store::compact`]. A crash between the two batches therefore leaves
+//! either the previous head (its parts still intact — GC had not run) or
+//! the new head (its parts committed atomically): never a torn state.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Json};
+use crate::store::Store;
+use crate::tag::WorkerConfig;
+
+/// Store collection holding checkpoint records.
+pub const CKPT_COLLECTION: &str = "job_ckpt";
+
+/// Per-job crash-resilience policy (set through `JobOptions::with_ckpt`).
+#[derive(Clone, Debug, Default)]
+pub struct CkptPolicy {
+    /// Checkpoint every `every` round boundaries (1 = every boundary,
+    /// 0 = never write checkpoints).
+    pub every: u64,
+    /// Injected controller kill: the global's checkpoint tasklet fails its
+    /// pod immediately **after** committing the boundary-`round`
+    /// checkpoint, taking the whole job down (parked workers are culled by
+    /// the scheduler's stall detection). The store keeps the checkpoint;
+    /// `JobManager::resume` picks it up.
+    pub kill_at: Option<u64>,
+    /// Arm mid-tier aggregator failover: when an aggregator pod dies
+    /// mid-run, the control plane evicts it and schedules a replacement
+    /// pod under the same worker id (see `controlplane` JobTracker).
+    pub failover: bool,
+}
+
+impl CkptPolicy {
+    /// Checkpoint at every round boundary.
+    pub fn every_round() -> Self {
+        Self {
+            every: 1,
+            kill_at: None,
+            failover: false,
+        }
+    }
+
+    /// Checkpoint every boundary and kill the controller right after the
+    /// boundary-`round` commit.
+    pub fn kill_at(round: u64) -> Self {
+        Self {
+            every: 1,
+            kill_at: Some(round),
+            failover: false,
+        }
+    }
+
+    /// Arm aggregator failover (no checkpoint cadence needed).
+    pub fn with_failover(mut self) -> Self {
+        self.failover = true;
+        self
+    }
+}
+
+/// One decoded job checkpoint: everything a resumed job needs beyond its
+/// spec to restart at a round boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobCheckpoint {
+    /// The boundary this checkpoint captures: rounds `1..=round` are done.
+    pub round: u64,
+    /// Timeline entries the dead run had already drained — the resumed
+    /// job replays these against the initial expansion to rebuild its
+    /// boundary membership, and skips them in the rebuilt timeline.
+    pub cursor: u64,
+    /// Global-aggregator state (model, server optimizer, selector, rounds,
+    /// clock — encoded by `roles::global`).
+    pub global: Json,
+    /// Per-worker boundary snapshots keyed by worker id.
+    pub workers: BTreeMap<String, Json>,
+    /// Metrics-hub dump ([`crate::metrics::MetricsHub::snapshot`]).
+    pub metrics: Json,
+}
+
+fn epoch_prefix(job: &str, epoch: u64) -> String {
+    format!("{job}/{epoch:016x}")
+}
+
+fn head_key(job: &str) -> String {
+    format!("{job}/head")
+}
+
+/// Per-job checkpoint collection point, shared via `JobRuntime::ckpt`.
+pub struct CkptSink {
+    job: String,
+    policy: CkptPolicy,
+    /// Does this job actually write checkpoints? Live checkpointing is
+    /// gated by the controller to topologies where the boundary is a true
+    /// barrier (synchronous aggregation, quorum 1.0, no coordinator, no
+    /// ring channels); other jobs resume by restarting from round 0.
+    live: bool,
+    /// Latest published per-worker snapshots.
+    hub: Mutex<HashMap<String, Json>>,
+    /// Bound by the control plane once the job's store is known (the
+    /// role layer that builds sinks has no store access). Never bound →
+    /// commits are hub-only, which still seeds failover.
+    store: OnceLock<Arc<Store>>,
+    /// Worker configs by id, registered at env build — the failover desk
+    /// redeploys a dead aggregator from this.
+    cfgs: Mutex<HashMap<String, WorkerConfig>>,
+    /// Failover seeds: snapshots staged for a replacement pod to consume
+    /// at context build (keyed by worker id).
+    seeds: Mutex<HashMap<String, Json>>,
+    /// Pods recovered by failover; the fleet's finish path offsets its
+    /// failed-pod count by this so a failed-over job still completes.
+    recovered: AtomicU64,
+}
+
+impl CkptSink {
+    pub fn new(job: impl Into<String>, policy: CkptPolicy, live: bool) -> Arc<Self> {
+        Arc::new(Self {
+            job: job.into(),
+            policy,
+            live,
+            hub: Mutex::new(HashMap::new()),
+            store: OnceLock::new(),
+            cfgs: Mutex::new(HashMap::new()),
+            seeds: Mutex::new(HashMap::new()),
+            recovered: AtomicU64::new(0),
+        })
+    }
+
+    pub fn policy(&self) -> &CkptPolicy {
+        &self.policy
+    }
+
+    /// Does this sink write durable round-boundary checkpoints?
+    pub fn is_live(&self) -> bool {
+        self.live
+    }
+
+    /// Bind the job's store (idempotent; called by the control plane).
+    pub fn bind_store(&self, store: Arc<Store>) {
+        let _ = self.store.set(store);
+    }
+
+    /// Should the global's checkpoint tasklet commit at this boundary?
+    pub fn due(&self, round: u64) -> bool {
+        self.policy.every > 0 && round > 0 && round % self.policy.every == 0
+    }
+
+    /// A worker publishes its boundary snapshot (called immediately before
+    /// its upload send — see module docs for why the ordering matters).
+    pub fn publish(&self, worker: &str, snap: Json) {
+        self.hub.lock().unwrap().insert(worker.to_string(), snap);
+    }
+
+    /// Record a worker config for possible failover redeployment.
+    pub fn register_cfg(&self, cfg: WorkerConfig) {
+        self.cfgs.lock().unwrap().insert(cfg.id.clone(), cfg);
+    }
+
+    /// The registered config of a worker (failover redeploy source).
+    pub fn cfg_of(&self, worker: &str) -> Option<WorkerConfig> {
+        self.cfgs.lock().unwrap().get(worker).cloned()
+    }
+
+    /// Stage the last published snapshot of `worker` as a failover seed
+    /// for its replacement pod.
+    pub fn stage_seed(&self, worker: &str) {
+        if let Some(snap) = self.hub.lock().unwrap().get(worker).cloned() {
+            self.seeds.lock().unwrap().insert(worker.to_string(), snap);
+        }
+    }
+
+    /// Consume a staged failover seed at replacement-context build.
+    pub fn take_seed(&self, worker: &str) -> Option<Json> {
+        self.seeds.lock().unwrap().remove(worker)
+    }
+
+    /// Count one failover recovery.
+    pub fn note_recovered(&self) {
+        self.recovered.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn recovered(&self) -> u64 {
+        self.recovered.load(Ordering::SeqCst)
+    }
+
+    /// Commit the boundary-`round` checkpoint: hub snapshots + the
+    /// global's own state, one atomic `put_batch` with the head pointer
+    /// last, then GC of superseded epochs. No-op (hub retained) when the
+    /// sink is not live or no store is bound.
+    pub fn commit(&self, round: u64, cursor: u64, global: Json, metrics: Json) -> Result<()> {
+        if !self.live {
+            return Ok(());
+        }
+        let Some(store) = self.store.get() else {
+            return Ok(());
+        };
+        let epoch = round;
+        let prefix = epoch_prefix(&self.job, epoch);
+        // deterministic record order: meta, global, metrics, workers by id
+        let workers: BTreeMap<String, Json> = self
+            .hub
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        let mut meta = Json::obj();
+        meta.insert("round", json::from_u64_hex(round));
+        meta.insert("cursor", json::from_u64_hex(cursor));
+        meta.insert(
+            "workers",
+            Json::Arr(workers.keys().map(|k| Json::Str(k.clone())).collect()),
+        );
+        let mut batch: Vec<(String, Json)> = Vec::with_capacity(workers.len() + 4);
+        batch.push((format!("{prefix}/meta"), Json::Obj(meta)));
+        batch.push((format!("{prefix}/global"), global));
+        batch.push((format!("{prefix}/metrics"), metrics));
+        for (id, snap) in &workers {
+            batch.push((format!("{prefix}/w/{id}"), snap.clone()));
+        }
+        // the head record goes LAST: it is the commit marker — a torn
+        // batch leaves the previous head pointing at intact records
+        let mut head = Json::obj();
+        head.insert("epoch", json::from_u64_hex(epoch));
+        batch.push((head_key(&self.job), Json::Obj(head)));
+        store.put_batch(CKPT_COLLECTION, batch)?;
+        self.gc(store, epoch)?;
+        Ok(())
+    }
+
+    /// Drop every record of epochs other than `keep` (tombstones), then
+    /// compact the journal so superseded snapshots stop occupying disk.
+    /// Runs only after the new head is durable; a crash mid-GC leaves
+    /// stale-but-unreferenced records the next GC sweep removes.
+    fn gc(&self, store: &Arc<Store>, keep: u64) -> Result<()> {
+        let keep_prefix = format!("{}/", epoch_prefix(&self.job, keep));
+        let job_prefix = format!("{}/", self.job);
+        let head = head_key(&self.job);
+        let mut dropped = false;
+        for key in store.keys(CKPT_COLLECTION) {
+            if key.starts_with(&job_prefix) && !key.starts_with(&keep_prefix) && key != head {
+                store.delete(CKPT_COLLECTION, &key)?;
+                dropped = true;
+            }
+        }
+        if dropped {
+            store.compact()?;
+        }
+        Ok(())
+    }
+}
+
+/// Load the latest *committed* checkpoint of `job`, trusting only the
+/// epoch the head pointer names (torn tails past the head are invisible
+/// by construction). `Ok(None)` when the job never checkpointed.
+pub fn load_latest(store: &Arc<Store>, job: &str) -> Result<Option<JobCheckpoint>> {
+    let Some(head) = store.get(CKPT_COLLECTION, &head_key(job)) else {
+        return Ok(None);
+    };
+    let epoch = json::as_u64_hex(head.get("epoch"))
+        .with_context(|| format!("job '{job}': malformed checkpoint head"))?;
+    let prefix = epoch_prefix(job, epoch);
+    let meta = store
+        .get(CKPT_COLLECTION, &format!("{prefix}/meta"))
+        .with_context(|| format!("job '{job}': checkpoint epoch {epoch} missing meta"))?;
+    let round = json::as_u64_hex(meta.get("round")).context("checkpoint meta missing round")?;
+    let cursor = json::as_u64_hex(meta.get("cursor")).context("checkpoint meta missing cursor")?;
+    let global = store
+        .get(CKPT_COLLECTION, &format!("{prefix}/global"))
+        .with_context(|| format!("job '{job}': checkpoint epoch {epoch} missing global state"))?;
+    let metrics = store
+        .get(CKPT_COLLECTION, &format!("{prefix}/metrics"))
+        .unwrap_or(Json::Null);
+    let mut workers = BTreeMap::new();
+    let Some(ids) = meta.get("workers").as_arr() else {
+        bail!("job '{job}': checkpoint meta missing worker list");
+    };
+    for id in ids {
+        let Some(id) = id.as_str() else {
+            bail!("job '{job}': malformed checkpoint worker list");
+        };
+        let snap = store
+            .get(CKPT_COLLECTION, &format!("{prefix}/w/{id}"))
+            .with_context(|| {
+                format!("job '{job}': checkpoint epoch {epoch} missing worker '{id}'")
+            })?;
+        workers.insert(id.to_string(), snap);
+    }
+    Ok(Some(JobCheckpoint {
+        round,
+        cursor,
+        global,
+        workers,
+        metrics,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink_with_store() -> (Arc<CkptSink>, Arc<Store>) {
+        let store = Arc::new(Store::in_memory());
+        let sink = CkptSink::new("j0", CkptPolicy::every_round(), true);
+        sink.bind_store(store.clone());
+        (sink, store)
+    }
+
+    #[test]
+    fn commit_and_load_roundtrip() {
+        let (sink, store) = sink_with_store();
+        sink.publish("w0", Json::Str("s0".into()));
+        sink.publish("w1", Json::Str("s1".into()));
+        sink.commit(3, 2, Json::Str("g".into()), Json::Null).unwrap();
+        let ck = load_latest(&store, "j0").unwrap().unwrap();
+        assert_eq!(ck.round, 3);
+        assert_eq!(ck.cursor, 2);
+        assert_eq!(ck.global, Json::Str("g".into()));
+        assert_eq!(ck.workers.len(), 2);
+        assert_eq!(ck.workers["w1"], Json::Str("s1".into()));
+        assert!(load_latest(&store, "nope").unwrap().is_none());
+    }
+
+    #[test]
+    fn newer_epoch_supersedes_and_gcs_older() {
+        let (sink, store) = sink_with_store();
+        sink.publish("w0", Json::Str("r1".into()));
+        sink.commit(1, 0, Json::Str("g1".into()), Json::Null).unwrap();
+        sink.publish("w0", Json::Str("r2".into()));
+        sink.commit(2, 0, Json::Str("g2".into()), Json::Null).unwrap();
+        let ck = load_latest(&store, "j0").unwrap().unwrap();
+        assert_eq!(ck.round, 2);
+        assert_eq!(ck.workers["w0"], Json::Str("r2".into()));
+        // every epoch-1 record tombstoned
+        for key in store.keys(CKPT_COLLECTION) {
+            assert!(
+                !key.contains(&format!("{:016x}", 1u64)),
+                "stale epoch record survived GC: {key}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_live_sink_keeps_hub_but_writes_nothing() {
+        let store = Arc::new(Store::in_memory());
+        let sink = CkptSink::new("j0", CkptPolicy::every_round(), false);
+        sink.bind_store(store.clone());
+        sink.publish("agg", Json::Str("s".into()));
+        sink.commit(1, 0, Json::Null, Json::Null).unwrap();
+        assert!(store.get(CKPT_COLLECTION, "j0/head").is_none());
+        // hub still seeds failover
+        sink.stage_seed("agg");
+        assert_eq!(sink.take_seed("agg"), Some(Json::Str("s".into())));
+        assert_eq!(sink.take_seed("agg"), None);
+    }
+
+    #[test]
+    fn due_respects_cadence() {
+        let sink = CkptSink::new(
+            "j",
+            CkptPolicy {
+                every: 2,
+                kill_at: None,
+                failover: false,
+            },
+            true,
+        );
+        assert!(!sink.due(0));
+        assert!(!sink.due(1));
+        assert!(sink.due(2));
+        assert!(sink.due(4));
+        let off = CkptSink::new("j", CkptPolicy::default(), true);
+        assert!(!off.due(5));
+    }
+}

@@ -40,6 +40,7 @@
 //! (`rust/tests/fleet.rs`).
 
 pub mod admission;
+pub mod checkpoint;
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex, RwLock};
@@ -60,6 +61,7 @@ use crate::store::Store;
 use crate::tag::{expand, validate, JobSpec, WorkerConfig};
 
 pub use admission::{CapacityLedger, Demand};
+pub use checkpoint::{CkptPolicy, JobCheckpoint};
 
 /// Control-plane job identifier (`<spec name>-<submission counter>`).
 pub type JobId = String;
@@ -109,6 +111,11 @@ struct JobSlot {
     active_pods: usize,
     /// Every pod ever staged for this job.
     spawned_pods: usize,
+    /// Pods a dead predecessor run spawned before this (resumed) run took
+    /// over but that never reach this fabric — evicted-before-boundary
+    /// workers. Added to `spawned_pods` in the report so a resumed job's
+    /// worker count matches the unkilled run's.
+    prior_pods: usize,
     failed_pods: usize,
     /// Error recorded while staging workers (pods may still drain).
     deploy_error: Option<String>,
@@ -132,6 +139,7 @@ impl JobSlot {
             runtime: None,
             active_pods: 0,
             spawned_pods: 0,
+            prior_pods: 0,
             failed_pods: 0,
             deploy_error: None,
             finish_at: 0,
@@ -202,10 +210,20 @@ impl FleetCore {
             g.ledger.release(&demand);
             g.running_jobs -= 1;
             let s = &g.slots[idx];
+            // pods the failover desk replaced count as recovered, not
+            // failed: the job completed on its replacement topology
+            let recovered = s
+                .runtime
+                .as_ref()
+                .and_then(|rt| rt.ckpt.as_ref())
+                .map_or(0, |c| c.recovered() as usize);
             if let Some(e) = &s.deploy_error {
                 JobPhase::Failed(e.clone())
-            } else if s.failed_pods > 0 {
-                JobPhase::Failed(format!("{} worker pod(s) failed", s.failed_pods))
+            } else if s.failed_pods > recovered {
+                JobPhase::Failed(format!(
+                    "{} worker pod(s) failed",
+                    s.failed_pods - recovered
+                ))
             } else {
                 JobPhase::Completed
             }
@@ -249,8 +267,14 @@ impl FleetCore {
             job,
             workers,
             timeline,
+            prior_pods,
             ..
         } = prepared;
+        // crash resilience: give the job's checkpoint sink the fleet
+        // store so round-boundary commits are durable
+        if let Some(sink) = &job.ckpt {
+            sink.bind_store(self.store.clone());
+        }
         let tracker: Arc<dyn PodTracker> = Arc::new(JobTracker {
             core: self.clone(),
             idx,
@@ -263,6 +287,7 @@ impl FleetCore {
         {
             let mut g = self.state.lock().unwrap();
             g.slots[idx].runtime = Some(job.clone());
+            g.slots[idx].prior_pods = prior_pods;
         }
         self.notifier
             .emit(EventKind::Deploy, &id, Json::from(workers.len()));
@@ -339,6 +364,59 @@ impl FleetCore {
         }
     }
 
+    /// Mid-tier aggregator failover (armed by `CkptPolicy::failover`):
+    /// when an aggregator pod dies mid-run, evict it from the fabric —
+    /// which wakes the global's parked quorum collect so the round
+    /// completes over the survivors — and schedule a replacement pod
+    /// under the **same worker id** through the job's live-extension
+    /// timeline (the global drains it at the next round boundary, and
+    /// its `assign_dirty` re-partition plus the next weight broadcast
+    /// rehydrate the newcomer). The sink stages the dead pod's last
+    /// published snapshot as a seed for the replacement's context.
+    /// Returns whether a replacement was scheduled.
+    fn try_failover(&self, idx: usize, worker: &str, at: VTime) -> bool {
+        let (job_id, runtime, running) = {
+            let g = self.state.lock().unwrap();
+            let s = &g.slots[idx];
+            (
+                s.id.clone(),
+                s.runtime.clone(),
+                s.phase == JobPhase::Running,
+            )
+        };
+        let Some(rt) = runtime else { return false };
+        let Some(sink) = rt.ckpt.clone() else { return false };
+        if !running || !sink.policy().failover {
+            return false;
+        }
+        let Some(cfg) = sink.cfg_of(worker) else { return false };
+        // only mid-tier aggregators fail over: they sit on the global's
+        // collect path (their death would deadlock the round) yet hold no
+        // irreplaceable state (the next broadcast rehydrates them)
+        let mid_tier = cfg.role != "global-aggregator"
+            && cfg.dataset.is_none()
+            && cfg.channels.contains_key("agg-channel")
+            && cfg.channels.contains_key("param-channel");
+        if !mid_tier {
+            return false;
+        }
+        sink.stage_seed(worker);
+        // evict NOW: parked collects recompute their quorum target over
+        // the surviving membership instead of waiting forever
+        rt.chan_mgr.evict(worker, at);
+        // replacement rides the elastic timeline, due immediately at the
+        // global's next apply_events drain
+        rt.timeline
+            .push_entry(0, crate::deploy::ScheduledAction::Deploy(vec![cfg]));
+        sink.note_recovered();
+        self.notifier.emit(
+            EventKind::WorkerStatus,
+            &job_id,
+            Json::from(format!("failover:{worker}")),
+        );
+        true
+    }
+
     /// Wake the pump at virtual time 0: job clocks are mutually
     /// incomparable, so waking at a finished job's (possibly huge) final
     /// vtime would sort the pump behind every other job's pending work
@@ -366,7 +444,13 @@ impl PodTracker for JobTracker {
         s.spawned_pods += 1;
     }
 
-    fn pod_done(&self, at: VTime, failed: bool) {
+    fn pod_done(&self, worker: &str, at: VTime, failed: bool) {
+        if failed {
+            // a recovered (failed-over) pod still counts below;
+            // finish_job offsets the failed count by the sink's
+            // recovered tally
+            let _ = self.core.try_failover(self.idx, worker, at);
+        }
         let job_finished = {
             let mut g = self.core.state.lock().unwrap();
             let idx = self.idx;
@@ -585,6 +669,31 @@ impl JobManager {
         self.counter += 1;
         let job_id: JobId = format!("{}-{}", spec.name, self.counter);
         self.core.store.put("jobs", &job_id, spec.to_json())?;
+        self.enqueue(job_id, spec, opts)
+    }
+
+    /// Resume a job from its last round-boundary checkpoint (crash
+    /// recovery): the spec comes back from the `jobs` collection, the
+    /// latest committed [`JobCheckpoint`] (if any) rides in on the
+    /// options, and the job re-enters the admission queue **under its
+    /// original id** — per-job determinism then makes the resumed run's
+    /// report byte-identical to an unkilled one. A job that never
+    /// committed a checkpoint restarts from round 0, which reaches the
+    /// same bytes by the same determinism.
+    pub fn resume(&mut self, job_id: &str, mut opts: JobOptions) -> Result<JobId> {
+        let spec_json = self
+            .core
+            .store
+            .get("jobs", job_id)
+            .with_context(|| format!("resume: job '{job_id}' has no persisted spec"))?;
+        let spec = JobSpec::from_json(&spec_json).context("resume: decoding persisted spec")?;
+        opts.restore = checkpoint::load_latest(&self.core.store, job_id)?.map(Arc::new);
+        self.enqueue(job_id.to_string(), spec, opts)
+    }
+
+    /// Shared tail of [`Self::submit`] / [`Self::resume`]: admission
+    /// pre-checks, expansion persistence, slot + queue registration.
+    fn enqueue(&mut self, job_id: JobId, spec: JobSpec, opts: JobOptions) -> Result<JobId> {
         // spec lints stream as events; they never fail the submission
         for warning in validate::lint(&spec) {
             self.core
@@ -807,7 +916,7 @@ impl JobManager {
             jobs.push(FleetJobReport {
                 job: s.id.clone(),
                 phase: s.phase.clone(),
-                workers: s.spawned_pods,
+                workers: s.spawned_pods + s.prior_pods,
                 rounds,
                 final_loss: loss,
                 final_acc: acc,

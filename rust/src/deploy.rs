@@ -242,7 +242,7 @@ impl Deployer for SimDeployer {
 /// time, `failed` whether it ended [`PodStatus::Failed`].
 pub trait PodTracker: Send + Sync {
     fn pod_spawned(&self);
-    fn pod_done(&self, at: VTime, failed: bool);
+    fn pod_done(&self, worker: &str, at: VTime, failed: bool);
 }
 
 /// Wraps a worker task so the fleet learns the moment it terminates —
@@ -250,6 +250,7 @@ pub trait PodTracker: Send + Sync {
 /// control-plane wake can never race the deadlock detector.
 struct TrackedTask {
     inner: WorkerTask,
+    worker: String,
     clock: Arc<Mutex<crate::net::VClock>>,
     status: Arc<StatusCell>,
     tracker: Arc<dyn PodTracker>,
@@ -265,7 +266,7 @@ impl RunnableTask for TrackedTask {
             PollOutcome::Done => {
                 let at = self.clock.lock().unwrap().now();
                 let failed = matches!(self.status.get(), PodStatus::Failed(_));
-                self.tracker.pod_done(at, failed);
+                self.tracker.pod_done(&self.worker, at, failed);
                 PollOutcome::Done
             }
             other => other,
@@ -275,7 +276,7 @@ impl RunnableTask for TrackedTask {
     fn fail(&mut self, reason: &str) {
         self.inner.fail(reason);
         let at = self.clock.lock().unwrap().now();
-        self.tracker.pod_done(at, true);
+        self.tracker.pod_done(&self.worker, at, true);
     }
 }
 
@@ -329,6 +330,7 @@ impl FleetDeployer {
         let status = StatusCell::new();
         let task = TrackedTask {
             inner: WorkerTask::new(env, notifier, status.clone()),
+            worker: worker_id.clone(),
             clock,
             status: status.clone(),
             tracker: self.tracker.clone(),
@@ -427,6 +429,16 @@ struct LiveBinding {
 pub struct TopologyTimeline {
     /// Ascending by `at`; drained from the front.
     entries: Mutex<Vec<TimelineEntry>>,
+    /// Unscripted entries injected at runtime ([`Self::push_entry`] —
+    /// failover replacement deploys). Drained alongside the script but
+    /// **never counted into the checkpoint cursor**: the cursor replays
+    /// the original script on resume, and injected entries are not part
+    /// of it.
+    injected: Mutex<Vec<TimelineEntry>>,
+    /// How many entries have been drained over the timeline's lifetime —
+    /// the checkpoint cursor. A resumed job rebuilds its boundary
+    /// membership by replaying this many entries of the original script.
+    drained: std::sync::atomic::AtomicU64,
     /// Handles of live-deployed pods, collected by the controller after
     /// the fabric drains.
     pods: Mutex<Vec<PodHandle>>,
@@ -442,12 +454,48 @@ impl TopologyTimeline {
 
     pub fn new(mut entries: Vec<TimelineEntry>) -> Arc<Self> {
         entries.sort_by_key(|e| e.at);
+        let elastic = !entries.is_empty();
+        Self::with_elastic(entries, elastic)
+    }
+
+    /// Timeline with the elastic flag pinned explicitly. Resume uses this:
+    /// a job checkpointed after its last scripted event still ran its
+    /// churn-safe role paths, and the resumed half must too — even though
+    /// the remaining script is empty.
+    pub fn with_elastic(mut entries: Vec<TimelineEntry>, elastic: bool) -> Arc<Self> {
+        entries.sort_by_key(|e| e.at);
         Arc::new(Self {
-            elastic: !entries.is_empty(),
+            elastic,
             entries: Mutex::new(entries),
+            injected: Mutex::new(Vec::new()),
+            drained: std::sync::atomic::AtomicU64::new(0),
             pods: Mutex::new(Vec::new()),
             binding: OnceLock::new(),
         })
+    }
+
+    /// How many entries have fired so far (checkpoint cursor).
+    pub fn cursor(&self) -> u64 {
+        self.drained.load(std::sync::atomic::Ordering::SeqCst)
+    }
+
+    /// Pre-advance the cursor without firing anything: a resumed timeline
+    /// starts with the entries the dead run already consumed accounted
+    /// for, so its checkpoints keep absolute cursors.
+    pub fn skip_cursor(&self, n: u64) {
+        self.drained
+            .fetch_add(n, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    /// Schedule one more entry on the running job (failover replacement
+    /// deploys ride on this). Injected entries drain alongside the script
+    /// but are excluded from the checkpoint cursor; this does not mark a
+    /// static job elastic — callers use it only on jobs whose round loop
+    /// already drains the timeline.
+    pub fn push_entry(&self, at: VTime, action: ScheduledAction) {
+        let mut g = self.injected.lock().unwrap();
+        let pos = g.partition_point(|e| e.at <= at);
+        g.insert(pos, TimelineEntry { at, action });
     }
 
     /// Does this job have scheduled topology changes at all? Roles use
@@ -462,17 +510,27 @@ impl TopologyTimeline {
         let _ = self.binding.set(LiveBinding { deployer, notifier });
     }
 
-    /// Drain every entry due at or before `now`, in schedule order.
+    /// Drain every entry due at or before `now`: injected (unscripted)
+    /// entries first, then the script in schedule order. Only scripted
+    /// entries advance the checkpoint cursor.
     pub fn due(&self, now: VTime) -> Vec<TimelineEntry> {
+        let mut out: Vec<TimelineEntry> = {
+            let mut inj = self.injected.lock().unwrap();
+            let n = inj.iter().take_while(|e| e.at <= now).count();
+            inj.drain(..n).collect()
+        };
         let mut g = self.entries.lock().unwrap();
         let n = g.iter().take_while(|e| e.at <= now).count();
-        g.drain(..n).collect()
+        self.drained
+            .fetch_add(n as u64, std::sync::atomic::Ordering::SeqCst);
+        out.extend(g.drain(..n));
+        out
     }
 
     /// Entries not yet fired (events scheduled past the job's end simply
     /// never fire).
     pub fn remaining(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        self.entries.lock().unwrap().len() + self.injected.lock().unwrap().len()
     }
 
     /// Deploy one worker onto the running fabric at virtual time `at`.

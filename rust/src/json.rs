@@ -241,6 +241,18 @@ impl Json {
     }
 }
 
+/// Lossless `u64` -> JSON. `Json::Num` is an `f64`, so values above 2^53
+/// (RNG state words, hashes) cannot travel as numbers; 64-bit state is
+/// encoded as a fixed-width hex string instead.
+pub fn from_u64_hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+/// Decode a value written by [`from_u64_hex`].
+pub fn as_u64_hex(j: &Json) -> Option<u64> {
+    u64::from_str_radix(j.as_str()?, 16).ok()
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {

@@ -491,13 +491,44 @@ fn cmd_codec_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Crash-resilience demo: checkpoint every round boundary, kill the
+/// controller at --kill-at, resume from the journaled checkpoint under
+/// the original job id, and byte-compare the resumed report against an
+/// unkilled oracle run (see `sim::run_resume`).
+fn cmd_resume(args: &Args) -> Result<()> {
+    args.expect_flags(
+        "resume",
+        &["trainers", "rounds", "kill-at", "per-shard", "test-n", "seed", "runners"],
+    )?;
+    let trainers = args.get_usize("trainers", 8)?;
+    let rounds = args.get_u64("rounds", 6)?;
+    let kill_at = args.get_u64("kill-at", rounds / 2)?;
+    let mut o = sim::SimOptions::mock();
+    o.per_shard = args.get_usize("per-shard", 64)?;
+    o.test_n = args.get_usize("test-n", 128)?;
+    o.seed = args.get_u64("seed", 7)?;
+    let runners = args.get_usize("runners", 0)?;
+    let r = sim::run_resume(trainers, rounds, kill_at, runners, &o)?;
+    println!(
+        "killed '{}' at round boundary {} (checkpoint epoch {})",
+        r.job, r.kill_at, r.ckpt_round
+    );
+    println!("oracle:  {}", r.oracle_line);
+    println!("resumed: {}", r.resumed_line);
+    println!("byte-identical: {}", if r.matched() { "yes" } else { "NO" });
+    if !r.matched() {
+        bail!("resumed run diverged from the oracle");
+    }
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: flame <expand|spec|run|fig10|fig11|scale|churn|fleet|fedprox|codec-sweep|roles> [--flags]"
+                "usage: flame <expand|spec|run|fig10|fig11|scale|churn|fleet|fedprox|codec-sweep|resume|roles> [--flags]"
             );
             std::process::exit(2);
         }
@@ -513,6 +544,7 @@ fn main() {
         "fleet" => cmd_fleet(&args),
         "fedprox" => cmd_fedprox(&args),
         "codec-sweep" => cmd_codec_sweep(&args),
+        "resume" => cmd_resume(&args),
         "roles" => cmd_roles(&args),
         other => bail!("unknown command '{other}'"),
     });

@@ -13,6 +13,7 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
+use crate::json::{self, Json};
 use crate::net::VTime;
 
 /// One recorded sample: `(series, round, value)` plus the emitting worker
@@ -102,6 +103,56 @@ impl MetricsHub {
 
     pub fn all(&self) -> Vec<Sample> {
         self.samples.lock().unwrap().clone()
+    }
+
+    /// Checkpoint encoding of everything recorded so far: samples in
+    /// insertion order (series extraction is a stable sort, so order
+    /// within a round is observable) plus the traffic counters.
+    pub fn snapshot(&self) -> Json {
+        let mut o = Json::obj();
+        let samples: Vec<Json> = self
+            .samples
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| {
+                Json::Arr(vec![
+                    Json::Str(s.worker.clone()),
+                    Json::Str(s.series.clone()),
+                    Json::from(s.round),
+                    Json::Num(s.value),
+                ])
+            })
+            .collect();
+        o.insert("samples", Json::Arr(samples));
+        o.insert("bytes", json::from_u64_hex(self.bytes_sent.load(Ordering::Relaxed)));
+        o.insert("messages", json::from_u64_hex(self.messages.load(Ordering::Relaxed)));
+        Json::Obj(o)
+    }
+
+    /// Replace this hub's contents with a snapshot taken by
+    /// [`MetricsHub::snapshot`] (resume-from-checkpoint: rounds recorded
+    /// before the kill point come back verbatim, stamped with this hub's
+    /// job id).
+    pub fn restore(&self, snap: &Json) {
+        let mut samples = self.samples.lock().unwrap();
+        samples.clear();
+        if let Some(rows) = snap.get("samples").as_arr() {
+            for row in rows {
+                samples.push(Sample {
+                    job: self.job.clone(),
+                    worker: row.idx(0).as_str().unwrap_or("").to_string(),
+                    series: row.idx(1).as_str().unwrap_or("").to_string(),
+                    round: row.idx(2).as_f64().unwrap_or(0.0) as u64,
+                    value: row.idx(3).as_f64().unwrap_or(0.0),
+                });
+            }
+        }
+        drop(samples);
+        self.bytes_sent
+            .store(json::as_u64_hex(snap.get("bytes")).unwrap_or(0), Ordering::Relaxed);
+        self.messages
+            .store(json::as_u64_hex(snap.get("messages")).unwrap_or(0), Ordering::Relaxed);
     }
 
     /// Merge several series into one CSV: `round,<series...>` (missing cells

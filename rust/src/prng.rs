@@ -49,6 +49,41 @@ impl Rng {
         }
     }
 
+    /// The full generator state — everything needed to resume the stream
+    /// at exactly this point (round-boundary checkpoints).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator mid-stream from [`Rng::state`].
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
+    /// Overwrite this generator's stream position with a saved state.
+    pub fn set_state(&mut self, s: [u64; 4]) {
+        self.s = s;
+    }
+
+    /// Checkpoint encoding: the four state words as hex strings (a
+    /// `Json::Num` is an f64 and would truncate them).
+    pub fn to_json(&self) -> crate::json::Json {
+        crate::json::Json::Arr(self.s.iter().map(|w| crate::json::from_u64_hex(*w)).collect())
+    }
+
+    /// Decode a stream position written by [`Rng::to_json`].
+    pub fn from_json(j: &crate::json::Json) -> Option<Rng> {
+        let a = j.as_arr()?;
+        if a.len() != 4 {
+            return None;
+        }
+        let mut s = [0u64; 4];
+        for (i, w) in a.iter().enumerate() {
+            s[i] = crate::json::as_u64_hex(w)?;
+        }
+        Some(Rng::from_state(s))
+    }
+
     /// Derive an independent stream (e.g. per worker) from this seed space.
     pub fn fork(&mut self, tag: u64) -> Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))

@@ -34,7 +34,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::channel::{Message, Payload};
-use crate::json::Json;
+use crate::json::{self, Json};
 use crate::runtime::Accumulator;
 use crate::workflow::{Composer, Tasklet};
 
@@ -127,6 +127,42 @@ impl AggregatorCtx {
             .first()
             .cloned()
             .context("no global aggregator on agg-channel")
+    }
+
+    /// Completed rounds as seen by this aggregator (custom-program test
+    /// tasklets gate failure injection on it).
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Boundary snapshot: the assigned trainer partition plus the round
+    /// counter. Weights are deliberately absent — the next `recv_global`
+    /// replaces them wholesale, and per-round stats are recomputed.
+    pub fn snapshot_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("round", json::from_u64_hex(self.round));
+        if let Some(t) = &self.assigned {
+            o.insert(
+                "assigned",
+                Json::Arr(t.iter().map(|s| Json::Str(s.clone())).collect()),
+            );
+        }
+        Json::Obj(o)
+    }
+
+    /// Rehydrate from a [`Self::snapshot_json`] snapshot — used both on
+    /// resume-from-checkpoint and to seed a failover replacement pod.
+    pub fn restore_from(&mut self, snap: &Json) -> Result<()> {
+        if let Some(t) = snap.get("assigned").as_arr() {
+            self.assigned = Some(
+                t.iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect(),
+            );
+        }
+        self.round = json::as_u64_hex(snap.get("round"))
+            .context("aggregator checkpoint missing round")?;
+        Ok(())
     }
 }
 
@@ -320,6 +356,12 @@ fn upload(c: &mut AggregatorCtx) -> Result<()> {
         Message::floats("update", c.round, c.weights.clone()).with_meta(Json::Obj(meta));
     c.env.job.metrics.add_traffic(msg.size_bytes());
     c.upload_sent_at = chan.now();
+    // publish-before-send: by the time the sequencer's collect returns,
+    // this boundary snapshot is already in the checkpoint hub (it also
+    // seeds the replacement pod if this aggregator later fails over)
+    if let Some(sink) = &c.env.job.ckpt {
+        sink.publish(&c.env.cfg.id, c.snapshot_json());
+    }
     chan.send(&parent, msg)?;
     Ok(())
 }
@@ -393,7 +435,20 @@ pub fn base_chain() -> Composer<AggregatorCtx> {
 }
 
 pub fn build(env: WorkerEnv, coordinated: bool) -> Result<Box<dyn Program>> {
-    let ctx = AggregatorCtx::new(env);
+    let mut ctx = AggregatorCtx::new(env);
+    // Rehydrate before the chain starts (this chain has no init tasklet):
+    // from the job checkpoint on resume, or from the sink's staged seed
+    // when this pod is a failover replacement for a dead aggregator.
+    if let Some(ck) = ctx.env.job.restore.clone() {
+        if let Some(snap) = ck.workers.get(&ctx.env.cfg.id) {
+            ctx.restore_from(snap)?;
+        }
+    }
+    if let Some(sink) = ctx.env.job.ckpt.clone() {
+        if let Some(seed) = sink.take_seed(&ctx.env.cfg.id) {
+            ctx.restore_from(&seed)?;
+        }
+    }
     let mut chain = base_chain();
     if coordinated {
         chain.insert_before("recv_global", Tasklet::new("get_assignment", get_assignment))?;

@@ -60,7 +60,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::algos::{AggregationPolicy, FedBuff, ServerOpt};
 use crate::channel::{Message, Payload};
-use crate::json::Json;
+use crate::json::{self, Json};
 use crate::net::VTime;
 use crate::runtime::Accumulator;
 use crate::select::{make_selector, ClientStats, Selector};
@@ -100,6 +100,11 @@ pub struct GlobalCtx {
     assign_dirty: bool,
     /// The data-consumer role's name (trainer membership queries).
     data_role: Option<String>,
+    /// Boundary this deployment was rehydrated at (0 = fresh run). The
+    /// checkpoint tasklet skips boundaries `<=` this: at the resume
+    /// boundary the worker snapshot hub is still empty, so re-committing
+    /// there would overwrite the good epoch with a torn one.
+    resumed_at: u64,
     pub done: bool,
 }
 
@@ -155,8 +160,79 @@ impl GlobalCtx {
             elastic,
             assign_dirty: false,
             data_role,
+            resumed_at: 0,
             done: false,
         }
+    }
+
+    /// Round-boundary snapshot of everything the round sequencer needs to
+    /// resume: model, server-optimizer moments, selector stream, FedBuff
+    /// window, round counter and virtual clock. Field order is fixed and
+    /// floats dump shortest-roundtrip, so the encoding is deterministic.
+    pub fn snapshot_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("round", json::from_u64_hex(self.round));
+        o.insert("clock", json::from_u64_hex(self.env.now()));
+        o.insert("flat", super::floats_to_json(&self.flat));
+        let (m, v, h) = self.opt.state();
+        o.insert("opt_m", super::floats_to_json(m));
+        o.insert("opt_v", super::floats_to_json(v));
+        o.insert("opt_h", super::floats_to_json(h));
+        if let Some(sel) = self.selector.snapshot() {
+            o.insert("selector", sel);
+        }
+        if let Some(fb) = &self.fedbuff {
+            let (acc, wsum, pending, version) = fb.state();
+            let mut f = Json::obj();
+            f.insert("acc", super::floats_to_json(acc));
+            f.insert("wsum", Json::Num(wsum as f64));
+            f.insert("pending", Json::Num(pending as f64));
+            f.insert("version", json::from_u64_hex(version));
+            o.insert("fedbuff", Json::Obj(f));
+        }
+        Json::Obj(o)
+    }
+
+    /// Rehydrate from a [`Self::snapshot_json`] checkpoint: overwrite the
+    /// freshly initialised state and merge the saved boundary clock (the
+    /// `round_time_s`/`vtime_s` series must continue from the killed run's
+    /// virtual time, not restart at zero).
+    pub fn restore_from(&mut self, snap: &Json) -> Result<()> {
+        let flat = super::floats_from_json(snap.get("flat"));
+        if flat.len() != self.flat.len() {
+            bail!(
+                "checkpoint model has {} params, job expects {}",
+                flat.len(),
+                self.flat.len()
+            );
+        }
+        self.flat = flat;
+        self.opt.restore_state(
+            super::floats_from_json(snap.get("opt_m")),
+            super::floats_from_json(snap.get("opt_v")),
+            super::floats_from_json(snap.get("opt_h")),
+        );
+        let sel = snap.get("selector");
+        if !matches!(*sel, Json::Null) {
+            self.selector.restore(sel);
+        }
+        if let Some(fb) = self.fedbuff.as_mut() {
+            let fbj = snap.get("fedbuff");
+            if !matches!(*fbj, Json::Null) {
+                fb.restore_state(
+                    super::floats_from_json(fbj.get("acc")),
+                    fbj.get("wsum").as_f64().unwrap_or(0.0) as f32,
+                    fbj.get("pending").as_f64().unwrap_or(0.0) as usize,
+                    json::as_u64_hex(fbj.get("version")).unwrap_or(0),
+                );
+            }
+        }
+        self.round = json::as_u64_hex(snap.get("round")).context("checkpoint missing round")?;
+        self.resumed_at = self.round;
+        if let Some(t) = json::as_u64_hex(snap.get("clock")) {
+            self.env.clock.lock().unwrap().merge(t);
+        }
+        Ok(())
     }
 
     fn children_channel(&self) -> &'static str {
@@ -185,6 +261,38 @@ impl GlobalCtx {
 fn init(c: &mut GlobalCtx) -> Result<()> {
     c.flat = c.env.job.init_flat.as_ref().clone();
     assert_eq!(c.flat.len(), c.env.job.compute.d_pad());
+    if let Some(ck) = c.env.job.restore.clone() {
+        c.restore_from(&ck.global)?;
+    }
+    Ok(())
+}
+
+/// Crash resilience: commit a round-boundary checkpoint through the job's
+/// sink. Runs at the top of the round loop — by then `eval` has bumped
+/// `c.round` to the completed-round count, and every uploading worker's
+/// boundary snapshot is in the hub (publish happens-before the upload
+/// send, and the full-quorum collect consumed every upload). Committing
+/// *before* `apply_events` means the saved timeline cursor names the
+/// event-replay point exactly: this boundary's events are still pending.
+fn checkpoint(c: &mut GlobalCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let Some(sink) = c.env.job.ckpt.clone() else {
+        return Ok(());
+    };
+    if !sink.is_live() || c.round <= c.resumed_at || !sink.due(c.round) {
+        return Ok(());
+    }
+    sink.commit(
+        c.round,
+        c.env.job.timeline.cursor(),
+        c.snapshot_json(),
+        c.env.job.metrics.snapshot(),
+    )?;
+    if sink.policy().kill_at == Some(c.round) {
+        bail!("injected controller kill at round boundary {}", c.round);
+    }
     Ok(())
 }
 
@@ -713,11 +821,19 @@ pub fn build(env: WorkerEnv, coordinated: bool) -> Result<Box<dyn Program>> {
         AggregationPolicy::Asynchronous { .. }
     );
     let elastic = env.job.timeline.is_elastic();
+    let ckpt_live = env.job.ckpt.as_ref().is_some_and(|s| s.is_live());
     let ctx = GlobalCtx::new(env, coordinated);
     let chain = if asynchronous {
         async_chain()
     } else {
         let mut chain = base_chain();
+        if ckpt_live {
+            // crash resilience: commit the boundary checkpoint ahead of
+            // the event sequencer (inserted next, so it lands between
+            // checkpoint and select), keeping the saved cursor aligned
+            // with the not-yet-drained timeline
+            chain.insert_before("select", Tasklet::new("checkpoint", checkpoint))?;
+        }
         if elastic {
             // live topology extension: the round sequencer drains the
             // event timeline at each round boundary (chain surgery, same

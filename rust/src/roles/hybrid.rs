@@ -46,6 +46,52 @@ pub struct HybridCtx {
     done: bool,
 }
 
+impl HybridCtx {
+    /// Boundary snapshot of the resumable state (mirrors the trainer's).
+    /// Ring topologies are excluded from live checkpointing — this feeds
+    /// the round-trip property tests, keeping the encoding honest for the
+    /// day the gate widens.
+    pub fn snapshot_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("round", crate::json::from_u64_hex(self.round));
+        o.insert("rng", self.env.rng.to_json());
+        o.insert(
+            "plan",
+            Json::Arr(self.plan.iter().map(|i| Json::Num(*i as f64)).collect()),
+        );
+        o.insert("batch_pos", Json::Num(self.batch_pos as f64));
+        if !self.residual.is_empty() {
+            o.insert("residual", super::floats_to_json(&self.residual));
+        }
+        if let Some(p) = &self.parent {
+            o.insert("parent", Json::Str(p.clone()));
+        }
+        Json::Obj(o)
+    }
+
+    /// Rehydrate from a [`Self::snapshot_json`] snapshot.
+    pub fn restore_from(&mut self, snap: &Json) -> Result<()> {
+        self.env.rng = crate::prng::Rng::from_json(snap.get("rng"))
+            .context("hybrid checkpoint missing rng state")?;
+        self.plan = snap
+            .get("plan")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|v| v as usize).collect())
+            .unwrap_or_default();
+        self.batch_pos = snap.get("batch_pos").as_f64().unwrap_or(0.0) as usize;
+        let residual = super::floats_from_json(snap.get("residual"));
+        if !residual.is_empty() {
+            self.residual = residual;
+        }
+        if let Some(p) = snap.get("parent").as_str() {
+            self.parent = Some(p.to_string());
+        }
+        self.round = crate::json::as_u64_hex(snap.get("round"))
+            .context("hybrid checkpoint missing round")?;
+        Ok(())
+    }
+}
+
 fn load(c: &mut HybridCtx) -> Result<()> {
     let b = c.env.job.compute.batch();
     c.batches = crate::data::batch_plan(&mut c.env.rng, c.data.len(), b);

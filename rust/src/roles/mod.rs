@@ -83,6 +83,13 @@ pub struct JobRuntime {
     /// decode. `None` = raw float uploads. Per-client error-feedback
     /// residuals live in the uploading role's context, not here.
     pub codec: Option<Arc<dyn crate::runtime::Codec>>,
+    /// Round-boundary checkpoint sink (`None` = crash resilience off for
+    /// this job). Uploading workers publish boundary snapshots into it;
+    /// the global's checkpoint tasklet commits them through the store.
+    pub ckpt: Option<Arc<crate::controlplane::checkpoint::CkptSink>>,
+    /// Checkpoint this deployment rehydrates from (`None` = fresh run).
+    /// Role contexts pull their saved state out at build time.
+    pub restore: Option<Arc<crate::controlplane::checkpoint::JobCheckpoint>>,
 }
 
 impl JobRuntime {
@@ -143,6 +150,9 @@ impl WorkerEnv {
         // prng::fnv1a64 and its collision regression test).
         let mut seed_rng = Rng::new(job.tcfg.seed ^ 0x5EED_CAFE);
         let rng = seed_rng.fork(fnv1a64(cfg.id.as_bytes()));
+        if let Some(sink) = &job.ckpt {
+            sink.register_cfg(cfg.clone());
+        }
         Ok(Self {
             cfg,
             job,
@@ -279,6 +289,22 @@ pub(crate) fn quorum_target(alive: usize, quorum: f64) -> usize {
     ((alive as f64 * quorum).ceil() as usize).clamp(1, alive)
 }
 
+/// Checkpoint encoding for a float vector. `f32 → f64` widening is exact
+/// and the JSON dump prints shortest-roundtrip `f64`, so every value
+/// survives the store round-trip byte-exact.
+pub(crate) fn floats_to_json(v: &[f32]) -> crate::json::Json {
+    crate::json::Json::Arr(v.iter().map(|x| crate::json::Json::Num(*x as f64)).collect())
+}
+
+/// Inverse of [`floats_to_json`]; a missing/malformed value decodes empty,
+/// which restore paths reject via length checks.
+pub(crate) fn floats_from_json(j: &crate::json::Json) -> Vec<f32> {
+    match j.as_arr() {
+        Some(a) => a.iter().map(|x| x.as_f64().unwrap_or(0.0) as f32).collect(),
+        None => Vec::new(),
+    }
+}
+
 /// Test fixtures shared by unit tests across modules.
 #[cfg(test)]
 pub mod tests_support {
@@ -320,6 +346,8 @@ pub mod tests_support {
             programs: Arc::new(RoleRegistry::builtin()),
             flavor,
             codec: None,
+            ckpt: None,
+            restore: None,
         });
         (job, cfgs)
     }

@@ -14,7 +14,7 @@ use anyhow::{bail, Context, Result};
 use crate::channel::Message;
 use crate::algos::ClientAlgo;
 use crate::data::batch_plan;
-use crate::json::Json;
+use crate::json::{self, Json};
 use crate::select::FedBalancer;
 use crate::workflow::{Composer, Tasklet};
 
@@ -146,6 +146,78 @@ impl TrainerCtx {
         self.batch_pos += 1;
         (batch_idx, x, y)
     }
+
+    /// Boundary snapshot of the trainer's resumable state: RNG stream,
+    /// epoch plan position, FedDyn drift, codec residual, balancer stream
+    /// and current parent. The received model is *not* saved — the next
+    /// round's distribution refills it.
+    pub fn snapshot_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("round", json::from_u64_hex(self.round));
+        o.insert("rng", self.env.rng.to_json());
+        o.insert(
+            "plan",
+            Json::Arr(self.plan.iter().map(|i| Json::Num(*i as f64)).collect()),
+        );
+        o.insert("batch_pos", Json::Num(self.batch_pos as f64));
+        if let Some(fb) = &self.balancer {
+            o.insert("balancer", fb.snapshot());
+        }
+        if !self.h.is_empty() {
+            o.insert("h", super::floats_to_json(&self.h));
+        }
+        if !self.residual.is_empty() {
+            o.insert("residual", super::floats_to_json(&self.residual));
+        }
+        if let Some(p) = &self.parent {
+            o.insert("parent", Json::Str(p.to_string()));
+        }
+        Json::Obj(o)
+    }
+
+    /// Rehydrate from a [`Self::snapshot_json`] checkpoint (runs in `init`,
+    /// after `load` fresh-seeded the RNG — the restore overwrites it, so
+    /// the resumed stream continues exactly where the killed run stopped).
+    pub fn restore_from(&mut self, snap: &Json) -> Result<()> {
+        self.env.rng = crate::prng::Rng::from_json(snap.get("rng"))
+            .context("trainer checkpoint missing rng state")?;
+        self.plan = snap
+            .get("plan")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|v| v as usize).collect())
+            .unwrap_or_default();
+        self.batch_pos = snap.get("batch_pos").as_f64().unwrap_or(0.0) as usize;
+        if let Some(fb) = self.balancer.as_mut() {
+            let bj = snap.get("balancer");
+            if !matches!(*bj, Json::Null) {
+                fb.restore(bj);
+            }
+        }
+        let h = super::floats_from_json(snap.get("h"));
+        if !h.is_empty() {
+            self.h = h;
+        }
+        let residual = super::floats_from_json(snap.get("residual"));
+        if !residual.is_empty() {
+            self.residual = residual;
+        }
+        if let Some(p) = snap.get("parent").as_str() {
+            self.parent = Some(crate::intern::atom(p));
+        }
+        self.round = json::as_u64_hex(snap.get("round")).context("trainer checkpoint missing round")?;
+        Ok(())
+    }
+}
+
+/// Publish this trainer's boundary snapshot into the job's checkpoint
+/// sink. Called immediately *before* the upload send: the send is what
+/// wakes the aggregation path, so by the time the sequencer's full-quorum
+/// collect returns (and its checkpoint tasklet can run), every
+/// participating trainer's snapshot is already in the hub.
+fn publish_ckpt(c: &TrainerCtx) {
+    if let Some(sink) = &c.env.job.ckpt {
+        sink.publish(&c.env.cfg.id, c.snapshot_json());
+    }
 }
 
 // ------------------------------------------------------------- tasklets
@@ -171,6 +243,13 @@ fn init(c: &mut TrainerCtx) -> Result<()> {
     } else {
         Vec::new()
     };
+    if let Some(ck) = c.env.job.restore.clone() {
+        if let Some(snap) = ck.workers.get(&c.env.cfg.id) {
+            c.restore_from(snap)?;
+        }
+        // no snapshot: this trainer never participated before the kill
+        // point (or joined after it), so fresh-init state IS its state
+    }
     Ok(())
 }
 
@@ -299,6 +378,7 @@ fn upload(c: &mut TrainerCtx) -> Result<()> {
         .job
         .metrics
         .record(&c.env.cfg.id, "upload_bytes", c.round, msg.size_bytes() as f64);
+    publish_ckpt(c);
     param.send(&parent, msg)?;
     Ok(())
 }
@@ -340,6 +420,7 @@ fn upload_encoded(c: &mut TrainerCtx) -> Result<()> {
         .job
         .metrics
         .record(&c.env.cfg.id, "upload_bytes", c.round, msg.size_bytes() as f64);
+    publish_ckpt(c);
     param.send(&parent, msg)?;
     Ok(())
 }

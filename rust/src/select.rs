@@ -12,6 +12,7 @@
 
 use std::collections::HashMap;
 
+use crate::json::Json;
 use crate::net::VTime;
 use crate::prng::Rng;
 
@@ -35,6 +36,16 @@ pub trait Selector: Send {
 
     /// Feed back a client's round report.
     fn report(&mut self, client: &str, stats: ClientStats);
+
+    /// Internal state for round-boundary checkpoints (`None` = stateless).
+    /// The encoding must be deterministic: same state, same JSON.
+    fn snapshot(&self) -> Option<Json> {
+        None
+    }
+
+    /// Restore state captured by [`Selector::snapshot`]; stateless
+    /// selectors ignore it.
+    fn restore(&mut self, _snap: &Json) {}
 }
 
 /// Everyone participates every round.
@@ -80,6 +91,18 @@ impl Selector for RandomSelect {
     }
 
     fn report(&mut self, _client: &str, _stats: ClientStats) {}
+
+    fn snapshot(&self) -> Option<Json> {
+        let mut o = Json::obj();
+        o.insert("rng", self.rng.to_json());
+        Some(Json::Obj(o))
+    }
+
+    fn restore(&mut self, snap: &Json) {
+        if let Some(rng) = Rng::from_json(snap.get("rng")) {
+            self.rng = rng;
+        }
+    }
 }
 
 /// Oort-style utility selection.
@@ -180,6 +203,43 @@ impl Selector for OortSelect {
         e.round_time = stats.round_time;
         e.participation += 1;
     }
+
+    fn snapshot(&self) -> Option<Json> {
+        let mut o = Json::obj();
+        o.insert("rng", self.rng.to_json());
+        let mut stats = Json::obj();
+        let mut ids: Vec<&String> = self.stats.keys().collect();
+        ids.sort(); // HashMap order is not deterministic; the snapshot must be
+        for id in ids {
+            let s = &self.stats[id];
+            let mut e = Json::obj();
+            e.insert("loss", Json::Num(s.loss));
+            e.insert("round_time", s.round_time);
+            e.insert("participation", s.participation);
+            stats.insert(id.clone(), Json::Obj(e));
+        }
+        o.insert("stats", Json::Obj(stats));
+        Some(Json::Obj(o))
+    }
+
+    fn restore(&mut self, snap: &Json) {
+        if let Some(rng) = Rng::from_json(snap.get("rng")) {
+            self.rng = rng;
+        }
+        self.stats.clear();
+        if let Some(stats) = snap.get("stats").as_obj() {
+            for (id, e) in stats.iter() {
+                self.stats.insert(
+                    id.clone(),
+                    ClientStats {
+                        loss: e.get("loss").as_f64().unwrap_or(0.0),
+                        round_time: e.get("round_time").as_f64().unwrap_or(0.0) as VTime,
+                        participation: e.get("participation").as_f64().unwrap_or(0.0) as u64,
+                    },
+                );
+            }
+        }
+    }
 }
 
 /// Build a selector from the config string ("all" | "random" | "oort").
@@ -222,6 +282,33 @@ impl FedBalancer {
     pub fn record(&mut self, batch: usize, loss: f64) {
         let e = &mut self.ema[batch];
         *e = if *e == f64::MAX { loss } else { 0.7 * *e + 0.3 * loss };
+    }
+
+    /// Checkpoint state: the per-batch loss EMAs (`f64::MAX` "unseen"
+    /// sentinels travel as `null`) plus the exploration RNG position.
+    pub fn snapshot(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("rng", self.rng.to_json());
+        let ema: Vec<Json> = self
+            .ema
+            .iter()
+            .map(|e| if *e == f64::MAX { Json::Null } else { Json::Num(*e) })
+            .collect();
+        o.insert("ema", Json::Arr(ema));
+        Json::Obj(o)
+    }
+
+    /// Restore state captured by [`FedBalancer::snapshot`].
+    pub fn restore(&mut self, snap: &Json) {
+        if let Some(rng) = Rng::from_json(snap.get("rng")) {
+            self.rng = rng;
+        }
+        if let Some(ema) = snap.get("ema").as_arr() {
+            self.ema = ema
+                .iter()
+                .map(|e| e.as_f64().unwrap_or(f64::MAX))
+                .collect();
+        }
     }
 
     /// Batch indices to train on this epoch, highest-loss first.

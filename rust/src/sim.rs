@@ -401,6 +401,86 @@ pub fn build_fleet(jobs: usize, o: &SimOptions) -> Result<crate::controlplane::J
     Ok(m)
 }
 
+// --------------------------------------------------------------- resume
+
+/// Outcome of [`run_resume`]: the kill/resume pair plus the unkilled
+/// oracle, as canonical report lines for byte comparison.
+pub struct ResumeRun {
+    pub job: String,
+    pub kill_at: u64,
+    /// Round of the checkpoint found in the store after the kill.
+    pub ckpt_round: u64,
+    pub oracle_line: String,
+    pub resumed_line: String,
+}
+
+impl ResumeRun {
+    /// Resume determinism held: the resumed report is byte-identical to
+    /// the unkilled run's.
+    pub fn matched(&self) -> bool {
+        self.oracle_line == self.resumed_line
+    }
+}
+
+/// The crash-resilience headline (`flame resume`): run a C-FL job with
+/// round-boundary checkpointing and an injected controller kill at
+/// boundary `kill_at`, then resume it from the journaled checkpoint under
+/// its original id — and run the same job unkilled as the oracle. The
+/// two final reports must match byte for byte (`rust/tests/resume.rs`
+/// sweeps every boundary; this scenario is the demo-sized single kill).
+pub fn run_resume(
+    trainers: usize,
+    rounds: u64,
+    kill_at: u64,
+    runners: usize,
+    o: &SimOptions,
+) -> Result<ResumeRun> {
+    use crate::controlplane::{checkpoint, CkptPolicy, JobManager};
+    anyhow::ensure!(trainers >= 2, "run_resume needs at least 2 trainers");
+    anyhow::ensure!(rounds >= 2, "run_resume needs at least 2 rounds");
+    anyhow::ensure!(
+        (1..rounds).contains(&kill_at),
+        "kill_at must be a round boundary in 1..rounds"
+    );
+    let spec = || {
+        topo::classical(trainers, Backend::P2p)
+            .name("rsm")
+            .rounds(rounds)
+            .set("lr", Json::Num(o.lr))
+            .set("local_steps", o.local_steps)
+            .set("seed", o.seed)
+            .build()
+    };
+
+    // oracle: same job, checkpointing armed, never killed
+    let mut m = JobManager::new(Arc::new(Store::in_memory()));
+    m.submit(spec(), o.job_options().with_ckpt(CkptPolicy::every_round()))?;
+    let r = m.run_fleet(runners)?;
+    anyhow::ensure!(r.completed == 1, "oracle run failed: {}", r.summary());
+    let oracle_line = r.jobs[0].line();
+
+    // kill at the boundary, then resume over the same store
+    let store = Arc::new(Store::in_memory());
+    let mut m = JobManager::new(store.clone());
+    let id = m.submit(spec(), o.job_options().with_ckpt(CkptPolicy::kill_at(kill_at)))?;
+    let r = m.run_fleet(runners)?;
+    anyhow::ensure!(r.failed == 1, "injected kill did not fire: {}", r.summary());
+    let ck = checkpoint::load_latest(&store, &id)?
+        .ok_or_else(|| anyhow::anyhow!("no checkpoint survived the kill"))?;
+    let ckpt_round = ck.round;
+    let mut m = JobManager::new(store);
+    m.resume(&id, o.job_options().with_ckpt(CkptPolicy::every_round()))?;
+    let r = m.run_fleet(runners)?;
+    anyhow::ensure!(r.completed == 1, "resumed run failed: {}", r.summary());
+    Ok(ResumeRun {
+        job: id,
+        kill_at,
+        ckpt_round,
+        oracle_line,
+        resumed_line: r.jobs[0].line(),
+    })
+}
+
 /// Build and drain the fleet scenario on `runners` threads (0 = one per
 /// core). Every job reaches a terminal state persisted in the manager's
 /// store; the report carries per-job outcomes and fleet throughput

@@ -565,4 +565,75 @@ mod tests {
         }
         assert_eq!(s.count("c"), 800);
     }
+
+    #[test]
+    fn checkpoint_epochs_gc_through_compaction_across_reopen() {
+        use crate::controlplane::checkpoint::{
+            load_latest, CkptPolicy, CkptSink, CKPT_COLLECTION,
+        };
+        use std::sync::Arc;
+        let p = tmp("ckpt-gc");
+        {
+            let store = Arc::new(Store::open(&p).unwrap());
+            let sink = CkptSink::new("j", CkptPolicy::every_round(), true);
+            sink.bind_store(store.clone());
+            // cursor 0 throughout: a nonzero cursor's 16-hex encoding
+            // would collide with the stale-epoch substring probe below
+            for round in 1..=3u64 {
+                sink.publish("w0", Json::from(round as i64));
+                sink.commit(round, 0, Json::from("g"), Json::Null).unwrap();
+            }
+            // the sink's GC tombstoned epochs 1-2; compaction drops their
+            // journal records (and the tombstones) physically
+            store.compact().unwrap();
+        }
+        let raw = std::fs::read_to_string(&p).unwrap();
+        for stale in 1..=2u64 {
+            assert!(
+                !raw.contains(&format!("{stale:016x}")),
+                "stale epoch {stale} survived compaction on disk"
+            );
+        }
+        // restart over the compacted journal: the head epoch is intact
+        let store = Arc::new(Store::open(&p).unwrap());
+        let ck = load_latest(&store, "j").unwrap().unwrap();
+        assert_eq!((ck.round, ck.cursor), (3, 0));
+        assert_eq!(ck.workers["w0"], Json::from(3i64));
+        assert_eq!(store.keys(CKPT_COLLECTION).len(), 5); // head,meta,global,metrics,w/w0
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn put_batch_writes_in_order_so_a_head_last_commit_is_atomic() {
+        // the checkpoint protocol's crash-atomicity rests on two store
+        // facts: put_batch journals records in iteration order, and a
+        // restart that lost the tail loses a *suffix* only. So a batch
+        // whose final record is the head key either commits fully or not
+        // at all, as observed through the head.
+        let p = tmp("batch-head");
+        {
+            let s = Store::open(&p).unwrap();
+            s.put_batch(
+                "job_ckpt",
+                [
+                    ("e/meta".to_string(), Json::from(1i64)),
+                    ("e/global".to_string(), Json::from(2i64)),
+                    ("head".to_string(), Json::from("e")),
+                ],
+            )
+            .unwrap();
+            s.flush().unwrap();
+        }
+        let raw = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = raw.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[2].contains("\"head\""), "head record must journal last");
+        // crash before the head record reached disk: the epoch is
+        // invisible through the head pointer
+        std::fs::write(&p, format!("{}\n{}\n", lines[0], lines[1])).unwrap();
+        let s = Store::open(&p).unwrap();
+        assert!(s.get("job_ckpt", "head").is_none());
+        assert_eq!(s.get("job_ckpt", "e/meta").unwrap().as_i64(), Some(1));
+        let _ = std::fs::remove_file(&p);
+    }
 }

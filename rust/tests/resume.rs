@@ -1,0 +1,332 @@
+//! Crash resilience end to end: a job killed at *any* round boundary and
+//! resumed from its checkpoint must reproduce the unkilled run byte for
+//! byte — per-round metrics, byte counters, virtual time, worker census,
+//! everything in the report line. The suite drives the full path through
+//! the store: submit -> kill -> reopen -> resume under the original id.
+//!
+//! `FLAME_KILL_POINT=early|mid|late` narrows the boundary sweep to one
+//! kill point (the CI kill-matrix shards on it); unset runs them all.
+
+use std::sync::Arc;
+
+use flame::channel::Backend;
+use flame::control::{Controller, JobOptions};
+use flame::controlplane::checkpoint::load_latest;
+use flame::controlplane::{CkptPolicy, JobManager};
+use flame::data::Partition;
+use flame::json::Json;
+use flame::roles::sdk::{chain_program, trainer_chain, Tasklet, TrainerCtx};
+use flame::roles::ProgramFactory;
+use flame::runtime::{ComputeTimeModel, MockCompute};
+use flame::store::Store;
+use flame::tag::{delta::add_tier_delta, JobSpec, TopologyEvent};
+use flame::topo;
+
+/// The logistic-head mock (as in the fleet suite): resume correctness is
+/// control-plane behaviour, not numerics, and the sweep below runs the
+/// same job a dozen times.
+fn small_opts(seed: u64) -> JobOptions {
+    JobOptions::mock()
+        .with_compute(Arc::new(MockCompute::new(7_850, 8, 16)))
+        .with_time(ComputeTimeModel::FixedPerStep(1_000))
+        .with_data(16, 32, Partition::Dirichlet(0.15), seed)
+        .with_sigma(1.0)
+}
+
+/// A 2-tier job whose **spec-declared** timeline extends it to 3 tiers
+/// mid-run and then drops a trainer — the adversarial case for resume,
+/// because the checkpoint cursor must land the replay on the exact same
+/// membership the killed run had. Events live on the spec (not the
+/// options) so they survive the store round-trip that resume performs.
+fn churn_spec(name: &str, rounds: u64, seed: u64) -> JobSpec {
+    let base = |rounds: u64| {
+        topo::classical(6, Backend::P2p)
+            .name(name)
+            .rounds(rounds)
+            .set("lr", Json::Num(0.1))
+            .set("local_steps", 1usize)
+            .set("seed", seed)
+            .build()
+    };
+    // calibrate one round of virtual time with a throwaway 2-round run,
+    // then pin the events mid-round (the `run_churn` scenario's idiom)
+    let cal = Controller::new(Arc::new(Store::in_memory()))
+        .submit(base(2), small_opts(seed))
+        .unwrap();
+    let round_us = ((cal.vtime_s / 2.0) * 1e6).max(1.0) as u64 + 1;
+    let mut spec = base(rounds);
+    spec.events = vec![
+        TopologyEvent::Extend {
+            at_us: round_us + round_us / 2,
+            delta: add_tier_delta(&spec, 2).unwrap(),
+        },
+        TopologyEvent::Leave {
+            at_us: 3 * round_us + round_us / 2,
+            workers: vec![format!("{name}-trainer-1")],
+        },
+    ];
+    spec
+}
+
+fn kill_points(rounds: u64) -> Vec<u64> {
+    match std::env::var("FLAME_KILL_POINT").ok().as_deref() {
+        Some("early") => vec![1],
+        Some("mid") => vec![rounds / 2],
+        Some("late") => vec![rounds - 1],
+        _ => (1..rounds).collect(),
+    }
+}
+
+/// The acceptance sweep: kill at every round boundary, resume from the
+/// journaled checkpoint under the original job id, and byte-compare the
+/// final report line against the oracle (same job, never killed).
+#[test]
+fn resume_at_every_boundary_matches_the_unkilled_run() {
+    let rounds = 6u64;
+    // oracle 1: no checkpointing at all
+    let bare = {
+        let mut m = JobManager::new(Arc::new(Store::in_memory()));
+        m.submit(churn_spec("rz", rounds, 7), small_opts(7)).unwrap();
+        let r = m.run_fleet(2).unwrap();
+        assert_eq!(r.completed, 1, "{}", r.summary());
+        r.jobs[0].line()
+    };
+    // oracle 2: checkpointing armed but never killed. Checkpoints are
+    // pure observation — zero virtual-time, zero wire bytes — so the two
+    // oracles must already agree.
+    let oracle = {
+        let mut m = JobManager::new(Arc::new(Store::in_memory()));
+        m.submit(
+            churn_spec("rz", rounds, 7),
+            small_opts(7).with_ckpt(CkptPolicy::every_round()),
+        )
+        .unwrap();
+        let r = m.run_fleet(2).unwrap();
+        assert_eq!(r.completed, 1, "{}", r.summary());
+        r.jobs[0].line()
+    };
+    assert_eq!(oracle, bare, "checkpointing perturbed the run");
+
+    for k in kill_points(rounds) {
+        let store = Arc::new(Store::in_memory());
+        let mut m = JobManager::new(store.clone());
+        let id = m
+            .submit(
+                churn_spec("rz", rounds, 7),
+                small_opts(7).with_ckpt(CkptPolicy::kill_at(k)),
+            )
+            .unwrap();
+        let r = m.run_fleet(2).unwrap();
+        assert_eq!(r.failed, 1, "kill at {k} did not fail the job: {}", r.summary());
+        let ck = load_latest(&store, &id)
+            .unwrap()
+            .expect("checkpoint committed before the kill");
+        assert_eq!(ck.round, k, "head checkpoint is not the kill boundary");
+
+        // a fresh manager over the same store (the restart) resumes the
+        // job under its original id
+        let mut m2 = JobManager::new(store);
+        let rid = m2
+            .resume(&id, small_opts(7).with_ckpt(CkptPolicy::every_round()))
+            .unwrap();
+        assert_eq!(rid, id);
+        let r2 = m2.run_fleet(2).unwrap();
+        assert_eq!(r2.completed, 1, "resume from {k}: {}", r2.summary());
+        assert_eq!(
+            r2.jobs[0].line(),
+            oracle,
+            "resume from boundary {k} diverges from the unkilled run"
+        );
+    }
+}
+
+/// The resumed segment is fabric-deterministic too: identical report
+/// regardless of how many runner threads drive it (virtual time, not OS
+/// scheduling, orders every message a sync job aggregates).
+#[test]
+fn resumed_run_is_identical_across_runner_pool_sizes() {
+    let (rounds, k) = (4u64, 2u64);
+    let mut lines = Vec::new();
+    for runners in [1usize, 2, 8] {
+        let store = Arc::new(Store::in_memory());
+        let mut m = JobManager::new(store.clone());
+        let id = m
+            .submit(
+                churn_spec("rp", rounds, 11),
+                small_opts(11).with_ckpt(CkptPolicy::kill_at(k)),
+            )
+            .unwrap();
+        let r = m.run_fleet(runners).unwrap();
+        assert_eq!(r.failed, 1, "{}", r.summary());
+        let mut m2 = JobManager::new(store);
+        m2.resume(&id, small_opts(11).with_ckpt(CkptPolicy::every_round()))
+            .unwrap();
+        let r2 = m2.run_fleet(runners).unwrap();
+        assert_eq!(r2.completed, 1, "{}", r2.summary());
+        lines.push(r2.jobs[0].line());
+    }
+    assert_eq!(lines[0], lines[1], "resume diverges between 1 and 2 runners");
+    assert_eq!(lines[1], lines[2], "resume diverges between 2 and 8 runners");
+}
+
+/// Mid-fleet crash containment: one job out of a heterogeneous ten is
+/// killed at a boundary; the other nine complete untouched, and the
+/// victim — resumed after the fleet drains — still byte-matches the
+/// oracle fleet where it was never killed.
+#[test]
+fn fleet_survives_one_job_killed_and_resumed_mid_fleet() {
+    const VICTIM: usize = 5;
+    let submit_fleet = |m: &mut JobManager, kill: Option<u64>| -> String {
+        let mut vic_id = String::new();
+        for i in 0..10usize {
+            let seed = 7 + i as u64;
+            let common = |b: topo::TopoBuilder, rounds: u64| {
+                b.rounds(rounds)
+                    .set("lr", Json::Num(0.1))
+                    .set("local_steps", 1usize)
+                    .set("seed", seed)
+            };
+            let mut opts = small_opts(seed);
+            let spec = if i == VICTIM {
+                opts = opts.with_ckpt(match kill {
+                    Some(k) => CkptPolicy::kill_at(k),
+                    None => CkptPolicy::every_round(),
+                });
+                common(topo::hierarchical(6, 2, Backend::P2p).name("vic"), 4).build()
+            } else {
+                match i % 4 {
+                    0 => common(topo::classical(4, Backend::P2p).name("ra"), 3).build(),
+                    1 => common(topo::hierarchical(6, 2, Backend::P2p).name("rh"), 2).build(),
+                    2 => {
+                        opts = opts.with_events(vec![TopologyEvent::Leave {
+                            at_us: 1,
+                            workers: vec!["rc-trainer-0".into()],
+                        }]);
+                        common(topo::classical(5, Backend::P2p).name("rc"), 3).build()
+                    }
+                    _ => common(topo::classical(3, Backend::P2p).name("rs"), 3)
+                        .set("aggregation", "fedbuff")
+                        .set("buffer_k", 2usize)
+                        .build(),
+                }
+            };
+            let id = m.submit(spec, opts).unwrap();
+            if i == VICTIM {
+                vic_id = id;
+            }
+        }
+        vic_id
+    };
+    let vic_line = |r: &flame::controlplane::FleetReport, id: &str| -> String {
+        r.jobs.iter().find(|j| j.job == id).unwrap().line()
+    };
+
+    // oracle fleet: nothing killed
+    let oracle = {
+        let mut m = JobManager::new(Arc::new(Store::in_memory()));
+        let vic = submit_fleet(&mut m, None);
+        let r = m.run_fleet(2).unwrap();
+        assert_eq!(r.completed, 10, "{}", r.summary());
+        vic_line(&r, &vic)
+    };
+
+    // same fleet, victim killed at boundary 2: the other nine complete
+    let store = Arc::new(Store::in_memory());
+    let mut m = JobManager::new(store.clone());
+    let vic = submit_fleet(&mut m, Some(2));
+    let r = m.run_fleet(2).unwrap();
+    assert_eq!(
+        (r.completed, r.failed),
+        (9, 1),
+        "victim crash leaked into the fleet: {}",
+        r.summary()
+    );
+
+    // restart: resume only the victim, byte-compare against the oracle
+    let mut m2 = JobManager::new(store);
+    m2.resume(&vic, small_opts(7 + VICTIM as u64).with_ckpt(CkptPolicy::every_round()))
+        .unwrap();
+    let r2 = m2.run_fleet(2).unwrap();
+    assert_eq!(r2.completed, 1, "{}", r2.summary());
+    assert_eq!(
+        vic_line(&r2, &vic),
+        oracle,
+        "victim resumed mid-fleet diverges from the oracle fleet"
+    );
+}
+
+/// Asynchronous FedBuff has no full-barrier boundary, so the checkpoint
+/// gate stays closed — a crashed async job resumes *from scratch* under
+/// its original id and (on a single runner, where async arrival order is
+/// deterministic) reproduces the unkilled run byte for byte.
+#[test]
+fn async_job_restarts_from_scratch_after_a_crash() {
+    let benign: ProgramFactory =
+        Arc::new(|env, _b| Ok(chain_program(trainer_chain(), TrainerCtx::new(env)?)));
+    let spec = || {
+        let mut s = topo::classical(3, Backend::P2p)
+            .name("az")
+            .rounds(3)
+            .set("lr", Json::Num(0.1))
+            .set("local_steps", 1usize)
+            .set("seed", 5u64)
+            .set("aggregation", "fedbuff")
+            .set("buffer_k", 2usize)
+            .build();
+        // the binding lives on the spec so the resumed run (which reloads
+        // the spec from the store) resolves the same program name
+        s.roles.iter_mut().find(|r| r.name == "trainer").unwrap().program =
+            Some("mortal-trainer".into());
+        s
+    };
+
+    let oracle = {
+        let mut m = JobManager::new(Arc::new(Store::in_memory()));
+        m.submit(spec(), small_opts(5).with_program("mortal-trainer", benign.clone()))
+            .unwrap();
+        let r = m.run_fleet(1).unwrap();
+        assert_eq!(r.completed, 1, "{}", r.summary());
+        r.jobs[0].line()
+    };
+
+    // the same program name, but one trainer crashes on its second upload
+    let dying: ProgramFactory = Arc::new(|env, _b| {
+        let ctx = TrainerCtx::new(env)?;
+        let mut chain = trainer_chain();
+        let mut uploads = 0u32;
+        chain.insert_before(
+            "upload",
+            Tasklet::new("maybe_die", move |c: &mut TrainerCtx| {
+                if c.env.cfg.id == "az-trainer-0" {
+                    uploads += 1;
+                    if uploads == 2 {
+                        anyhow::bail!("injected async trainer crash");
+                    }
+                }
+                Ok(())
+            }),
+        )?;
+        Ok(chain_program(chain, ctx))
+    });
+    let store = Arc::new(Store::in_memory());
+    let mut m = JobManager::new(store.clone());
+    let id = m
+        .submit(
+            spec(),
+            small_opts(5)
+                .with_program("mortal-trainer", dying)
+                .with_ckpt(CkptPolicy::every_round()),
+        )
+        .unwrap();
+    let r = m.run_fleet(1).unwrap();
+    assert_eq!(r.failed, 1, "{}", r.summary());
+    // async flavor never passed the checkpoint gate: nothing committed
+    assert!(load_latest(&store, &id).unwrap().is_none());
+
+    let mut m2 = JobManager::new(store);
+    m2.resume(&id, small_opts(5).with_program("mortal-trainer", benign))
+        .unwrap();
+    let r2 = m2.run_fleet(1).unwrap();
+    assert_eq!(r2.completed, 1, "{}", r2.summary());
+    assert_eq!(r2.jobs[0].line(), oracle, "async restart-from-0 diverges");
+}
