@@ -18,25 +18,35 @@
 //!   completes or yields at a blocking receive.
 
 use std::panic::AssertUnwindSafe;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
 use crate::deploy::{PodStatus, StatusCell};
 use crate::json::Json;
+use crate::net::{VClock, VTime};
 use crate::notify::{EventKind, Notifier};
-use crate::roles::{Program, WorkerEnv};
+use crate::roles::{JobRuntime, Program, WorkerEnv};
 use crate::sched::{is_pending, PollOutcome, RunnableTask};
 use crate::workflow::StepStatus;
 
-fn status_event(notifier: &Notifier, job: &str, worker: &str, state: &str, detail: &str) {
+/// Emit a worker status transition, stamped with the worker's virtual
+/// time so the status stream is orderable against trace spans.
+fn status_event(
+    notifier: &Notifier,
+    job: &str,
+    worker: &str,
+    at: VTime,
+    state: &str,
+    detail: &str,
+) {
     let mut payload = Json::obj();
     payload.insert("worker", worker);
     payload.insert("state", state);
     if !detail.is_empty() {
         payload.insert("detail", detail);
     }
-    notifier.emit(EventKind::WorkerStatus, job, Json::Obj(payload));
+    notifier.emit_at(EventKind::WorkerStatus, job, at, Json::Obj(payload));
 }
 
 fn panic_msg(panic: Box<dyn std::any::Any + Send>) -> String {
@@ -56,7 +66,9 @@ fn panic_msg(panic: Box<dyn std::any::Any + Send>) -> String {
 pub fn run_worker(env: WorkerEnv, notifier: Arc<Notifier>) -> Result<()> {
     let job_name = env.job.spec.name.clone();
     let worker_id = env.cfg.id.clone();
-    status_event(&notifier, &job_name, &worker_id, "starting", "");
+    let clock = env.clock.clone();
+    let now = || clock.lock().unwrap().now();
+    status_event(&notifier, &job_name, &worker_id, now(), "starting", "");
 
     let result: Result<()> = (|| {
         // Role SDK dispatch: the job's registry resolves this worker's
@@ -73,15 +85,22 @@ pub fn run_worker(env: WorkerEnv, notifier: Arc<Notifier>) -> Result<()> {
     // as "departed" (then "completed"), exactly like the cooperative path
     let result = match result {
         Err(e) if crate::channel::is_departed(&e) => {
-            status_event(&notifier, &job_name, &worker_id, "departed", "");
+            status_event(&notifier, &job_name, &worker_id, now(), "departed", "");
             Ok(())
         }
         other => other,
     };
 
     match &result {
-        Ok(()) => status_event(&notifier, &job_name, &worker_id, "completed", ""),
-        Err(e) => status_event(&notifier, &job_name, &worker_id, "failed", &format!("{e:#}")),
+        Ok(()) => status_event(&notifier, &job_name, &worker_id, now(), "completed", ""),
+        Err(e) => status_event(
+            &notifier,
+            &job_name,
+            &worker_id,
+            now(),
+            "failed",
+            &format!("{e:#}"),
+        ),
     }
     result
 }
@@ -98,6 +117,11 @@ pub struct WorkerTask {
     program: Option<Box<dyn Program>>,
     notifier: Arc<Notifier>,
     status: Arc<StatusCell>,
+    /// Kept past the env→program handoff: the deadlock post-mortem
+    /// ([`RunnableTask::stall_context`]) queries the job's channel fabric
+    /// and trace hub after the program owns the env.
+    rt: Arc<JobRuntime>,
+    clock: Arc<Mutex<VClock>>,
 }
 
 impl WorkerTask {
@@ -105,6 +129,8 @@ impl WorkerTask {
         Self {
             job: env.job.spec.name.clone(),
             worker: env.cfg.id.clone(),
+            rt: env.job.clone(),
+            clock: env.clock.clone(),
             env: Some(env),
             program: None,
             notifier,
@@ -112,16 +138,34 @@ impl WorkerTask {
         }
     }
 
+    fn now(&self) -> VTime {
+        self.clock.lock().unwrap().now()
+    }
+
     fn finish(&mut self, result: Result<()>) -> PollOutcome {
         match result {
             Ok(()) => {
                 self.status.set(PodStatus::Completed);
-                status_event(&self.notifier, &self.job, &self.worker, "completed", "");
+                status_event(
+                    &self.notifier,
+                    &self.job,
+                    &self.worker,
+                    self.now(),
+                    "completed",
+                    "",
+                );
             }
             Err(e) => {
                 let detail = format!("{e:#}");
                 self.status.set(PodStatus::Failed(detail.clone()));
-                status_event(&self.notifier, &self.job, &self.worker, "failed", &detail);
+                status_event(
+                    &self.notifier,
+                    &self.job,
+                    &self.worker,
+                    self.now(),
+                    "failed",
+                    &detail,
+                );
             }
         }
         self.program = None; // release role state eagerly
@@ -137,7 +181,14 @@ impl RunnableTask for WorkerTask {
     fn poll(&mut self) -> PollOutcome {
         if let Some(env) = self.env.take() {
             self.status.set(PodStatus::Running);
-            status_event(&self.notifier, &self.job, &self.worker, "starting", "");
+            status_event(
+                &self.notifier,
+                &self.job,
+                &self.worker,
+                self.now(),
+                "starting",
+                "",
+            );
             let programs = env.job.programs.clone();
             match std::panic::catch_unwind(AssertUnwindSafe(|| programs.build(env))) {
                 Ok(Ok(p)) => self.program = Some(p),
@@ -160,7 +211,14 @@ impl RunnableTask for WorkerTask {
             // Retired by a `leave` event: the membership revocation is the
             // worker's termination signal, not a failure.
             Ok(Err(e)) if crate::channel::is_departed(&e) => {
-                status_event(&self.notifier, &self.job, &self.worker, "departed", "");
+                status_event(
+                    &self.notifier,
+                    &self.job,
+                    &self.worker,
+                    self.now(),
+                    "departed",
+                    "",
+                );
                 self.finish(Ok(()))
             }
             Ok(Err(e)) => self.finish(Err(e)),
@@ -170,8 +228,31 @@ impl RunnableTask for WorkerTask {
 
     fn fail(&mut self, reason: &str) {
         self.status.set(PodStatus::Failed(reason.to_string()));
-        status_event(&self.notifier, &self.job, &self.worker, "failed", reason);
+        status_event(
+            &self.notifier,
+            &self.job,
+            &self.worker,
+            self.now(),
+            "failed",
+            reason,
+        );
         self.program = None;
+    }
+
+    /// Deadlock post-mortem body: every cooperative wait this worker has
+    /// registered on the job's channels, plus the last trace span it
+    /// recorded (when tracing is on) — enough to see *what* it was waiting
+    /// for and *where* in the round it stalled.
+    fn stall_context(&self) -> Option<String> {
+        let mut parts = self.rt.chan_mgr.stall_notes(&self.worker);
+        if let Some(last) = self.rt.trace.last_span_of(&self.worker) {
+            parts.push(format!("last span {last}"));
+        }
+        if parts.is_empty() {
+            None
+        } else {
+            Some(parts.join("; "))
+        }
     }
 }
 

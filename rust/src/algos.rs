@@ -286,6 +286,11 @@ pub struct TrainingConfig {
     /// SIMD fold policy: `off` (default), `auto`, `scalar`, `portable`,
     /// `avx2` — see `runtime::simd::kernel_from_policy`.
     pub simd: String,
+    /// Virtual-time tracing: `off` (default) or `on`. When on, the job
+    /// carries an enabled [`crate::trace::TraceHub`] recording round-phase
+    /// spans, transfer spans and scheduler stats; `FLAME_TRACE` overrides
+    /// per process.
+    pub trace: String,
     pub seed: u64,
 }
 
@@ -309,6 +314,7 @@ impl Default for TrainingConfig {
             codec: None,
             topk_frac: 0.05,
             simd: "off".into(),
+            trace: "off".into(),
             seed: 0,
         }
     }
@@ -403,6 +409,12 @@ impl TrainingConfig {
                 other => bail!(
                     "unknown simd policy '{other}' (expected off | auto | scalar | portable | avx2)"
                 ),
+            }
+        }
+        if let Some(s) = hyper.get("trace").as_str() {
+            match s {
+                "off" | "on" => cfg.trace = s.to_string(),
+                other => bail!("unknown trace setting '{other}' (expected off | on)"),
             }
         }
         if let Some(v) = hyper.get("seed").as_i64() {
@@ -605,11 +617,16 @@ mod tests {
         assert_eq!(d.simd, "off");
         let off = TrainingConfig::from_hyper(&Json::parse(r#"{"codec": "none"}"#).unwrap());
         assert_eq!(off.unwrap().codec, None);
+        let traced =
+            TrainingConfig::from_hyper(&Json::parse(r#"{"trace": "on"}"#).unwrap()).unwrap();
+        assert_eq!(traced.trace, "on");
+        assert_eq!(d.trace, "off");
         for bad in [
             r#"{"codec": "gzip"}"#,
             r#"{"topk_frac": 0.0}"#,
             r#"{"topk_frac": 2}"#,
             r#"{"simd": "gpu"}"#,
+            r#"{"trace": "verbose"}"#,
         ] {
             assert!(TrainingConfig::from_hyper(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }

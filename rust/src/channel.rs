@@ -407,6 +407,11 @@ pub struct ChannelManager {
     scope: Arc<str>,
     /// The scope's interned symbol — what `evict` filters routes by.
     scope_sym: crate::intern::Symbol,
+    /// Per-job trace hub, bound only for jobs with tracing enabled
+    /// ([`Self::set_trace`]). Deliveries record one `upload-xfer` span per
+    /// message; unset (the default) costs a single atomic load on the
+    /// delivery hot path and nothing else.
+    trace: OnceLock<Arc<crate::trace::TraceHub>>,
 }
 
 impl ChannelManager {
@@ -419,7 +424,14 @@ impl ChannelManager {
             }),
             scope: atom(""),
             scope_sym: crate::intern::sym(""),
+            trace: OnceLock::new(),
         })
+    }
+
+    /// Bind this view's trace hub (idempotent). Only called for jobs with
+    /// tracing enabled; each scoped view binds its own job's hub.
+    pub fn set_trace(&self, hub: Arc<crate::trace::TraceHub>) {
+        let _ = self.trace.set(hub);
     }
 
     /// A per-job view over this manager's shared fabric: same shards, same
@@ -432,6 +444,7 @@ impl ChannelManager {
             fabric: self.fabric.clone(),
             scope: atom(scope),
             scope_sym: crate::intern::sym(scope),
+            trace: OnceLock::new(),
         })
     }
 
@@ -622,6 +635,59 @@ impl ChannelManager {
         revoked
     }
 
+    /// Every cooperative wait `worker` has registered across this scope's
+    /// channels — one line per parked receive, the wait-spec body of the
+    /// scheduler's deadlock post-mortem. Peer sets mirror
+    /// [`ChannelHandle::ends`] (other-role members, or all other members
+    /// on self-pair channels). Sorted for deterministic output.
+    pub fn stall_notes(&self, worker: &str) -> Vec<String> {
+        let mut notes = Vec::new();
+        for shard in &self.fabric.shards {
+            let g = shard.read().unwrap();
+            for (r, shared) in g.iter() {
+                if r.scope_sym() != self.scope_sym {
+                    continue;
+                }
+                let members = shared.members.read().unwrap();
+                let Some(me) = members.get(worker) else {
+                    continue;
+                };
+                // members-read → mailbox-inner matches the join path's
+                // nesting; the mailbox guard drops before formatting.
+                let desc = {
+                    let mb = me.mailbox.inner.lock().unwrap();
+                    match &mb.waiting {
+                        None => continue,
+                        Some((w, _)) => describe_wait(w),
+                    }
+                };
+                let mut peers: Vec<&str> = members
+                    .iter()
+                    .filter(|(k, m)| &***k != worker && m.role != me.role)
+                    .map(|(k, _)| &***k)
+                    .collect();
+                if peers.is_empty() {
+                    peers = members
+                        .keys()
+                        .filter(|k| &***k != worker)
+                        .map(|k| &***k)
+                        .collect();
+                }
+                peers.sort_unstable();
+                let shown: Vec<&str> = peers.iter().take(6).copied().collect();
+                notes.push(format!(
+                    "waiting on channel '{}' for {} (peers: [{}{}])",
+                    crate::intern::name(r.channel_sym()),
+                    desc,
+                    shown.join(", "),
+                    if peers.len() > 6 { ", ..." } else { "" }
+                ));
+            }
+        }
+        notes.sort_unstable();
+        notes
+    }
+
     /// Record `worker`'s departure on a peer mailbox; wake its parked wait
     /// if the wait depends on the leaver, or unconditionally when
     /// `conservative` (membership changed under a quorum collect).
@@ -723,6 +789,12 @@ impl ChannelManager {
                         .transfer_via_at_us(from, &shared.hub, to, bytes, from_clock)
             }
         };
+        // transfer span charged exactly as the net model charged the
+        // message: send clock -> computed arrival. No-op (one atomic
+        // load) for untraced jobs.
+        if let Some(t) = self.trace.get() {
+            t.transfer(from, to, msg.round, from_clock, arrival, bytes);
+        }
         let seq = self.fabric.seq.fetch_add(1, Ordering::Relaxed);
         let mailbox = {
             let members = shared.members.read().unwrap();
@@ -1155,6 +1227,55 @@ impl ChannelHandle {
     pub fn advance_clock(&self, dt: VTime) {
         self.clock.lock().unwrap().advance(dt);
     }
+
+    /// What this handle's worker is parked on, if anything — the wait-spec
+    /// and peer set line of the scheduler's deadlock post-mortem. `None`
+    /// when no cooperative wait is registered on the mailbox.
+    ///
+    /// The wait description is copied out under the mailbox lock and the
+    /// peer set is gathered *after* dropping it: the join path nests
+    /// mailbox locks inside the membership lock, so taking membership
+    /// locks while holding a mailbox lock could cycle.
+    pub fn stall_note(&self) -> Option<String> {
+        let desc = {
+            let g = self.mailbox.inner.lock().unwrap();
+            match &g.waiting {
+                None => return None,
+                Some((w, _)) => describe_wait(w),
+            }
+        };
+        let peers = self.ends();
+        let shown: Vec<&str> = peers.iter().take(6).map(|s| s.as_str()).collect();
+        Some(format!(
+            "waiting on channel '{}' for {} (peers: [{}{}])",
+            self.channel,
+            desc,
+            shown.join(", "),
+            if peers.len() > 6 { ", ..." } else { "" }
+        ))
+    }
+}
+
+/// Human-readable form of a registered cooperative wait — the wait-spec
+/// half of a deadlock post-mortem line.
+fn describe_wait(w: &WaitSpec) -> String {
+    match w {
+        WaitSpec::Match(spec) => match spec {
+            MatchSpec::From(f) => format!("a message from '{f}'"),
+            MatchSpec::FromKind(f, k) => format!("a '{k}' message from '{f}'"),
+            MatchSpec::Any => "any message".to_string(),
+            MatchSpec::AnyKind(k) => format!("any '{k}' message"),
+        },
+        WaitSpec::AllOf(missing) => {
+            let shown: Vec<&str> = missing.iter().take(4).map(|m| &**m).collect();
+            format!(
+                "a barrier with {} outstanding sender(s) [{}{}]",
+                missing.len(),
+                shown.join(", "),
+                if missing.len() > 4 { ", ..." } else { "" }
+            )
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1398,6 +1519,53 @@ mod tests {
         assert_eq!(b.now(), 0);
         assert_eq!(b.recv("a").unwrap().round, 7);
         assert!(b.peek("a").is_none());
+    }
+
+    #[test]
+    fn stall_note_reports_the_registered_wait() {
+        let net = Arc::new(VirtualNet::default());
+        let mgr = ChannelManager::new(net);
+        let sched = crate::sched::Scheduler::new();
+        let park = WorkerPark::cooperative();
+        let t = mgr
+            .join_with_park(
+                "param",
+                "default",
+                "t0",
+                "trainer",
+                Backend::InProc,
+                Arc::new(Mutex::new(VClock::default())),
+                park.clone(),
+            )
+            .unwrap();
+        let _agg = mgr.join(
+            "param",
+            "default",
+            "agg",
+            "aggregator",
+            Backend::InProc,
+            Arc::new(Mutex::new(VClock::default())),
+        );
+        assert!(t.stall_note().is_none(), "no wait registered yet");
+        // a cooperative receive with no mail registers its wait and yields
+        park.set_waker(sched.waker(sched.spawn_parked(Box::new(NoopTask))));
+        let err = t.recv("agg").unwrap_err();
+        assert!(crate::sched::is_pending(&err));
+        let note = t.stall_note().expect("wait must be registered");
+        assert!(note.contains("channel 'param'"), "{note}");
+        assert!(note.contains("a message from 'agg'"), "{note}");
+        assert!(note.contains("peers: [agg]"), "{note}");
+    }
+
+    struct NoopTask;
+    impl crate::sched::RunnableTask for NoopTask {
+        fn name(&self) -> &str {
+            "noop"
+        }
+        fn poll(&mut self) -> crate::sched::PollOutcome {
+            crate::sched::PollOutcome::Done
+        }
+        fn fail(&mut self, _reason: &str) {}
     }
 
     #[test]

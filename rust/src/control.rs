@@ -234,6 +234,9 @@ pub struct JobReport {
     /// Timing breakdown of the submission path (Table 6's measurements).
     pub expansion_s: f64,
     pub db_write_s: f64,
+    /// The job's trace hub (disabled for untraced jobs): spans, phase
+    /// tables and the Chrome trace-event export.
+    pub trace: Arc<crate::trace::TraceHub>,
 }
 
 /// Everything a deployer needs to run one prepared job: the shared
@@ -615,6 +618,23 @@ pub(crate) fn prepare_expanded(
             .unwrap_or_else(|| vec![0f32; compute.d_pad()]),
     );
     let pool = crate::runtime::TensorPool::new(compute.d_pad());
+    // Virtual-time tracing: `hyper.trace` turns the per-job span recorder
+    // on; the `FLAME_TRACE` env var overrides it either way (mirrors
+    // FLAME_SIMD). Untraced jobs carry the disabled hub — every record
+    // call is one branch — and the channel fabric's delivery hook is only
+    // installed for traced jobs, keeping that hot path allocation-free.
+    let trace_policy = std::env::var("FLAME_TRACE")
+        .ok()
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| tcfg.trace.clone());
+    let trace = if trace_policy == "on" {
+        crate::trace::TraceHub::for_job(job_label)
+    } else {
+        crate::trace::TraceHub::disabled()
+    };
+    if trace.enabled() {
+        chan_mgr.set_trace(trace.clone());
+    }
     let job = Arc::new(JobRuntime {
         spec: runtime_spec,
         chan_mgr,
@@ -632,13 +652,17 @@ pub(crate) fn prepare_expanded(
         codec,
         ckpt: ckpt_sink,
         restore: opts.restore.clone(),
+        trace,
     });
     // rounds recorded before the kill point come back verbatim, so the
-    // resumed run's report series continue where the dead run stopped
+    // resumed run's report series continue where the dead run stopped —
+    // and so do trace spans, making a resumed trace replay the dead run's
+    // prefix byte-for-byte
     if let Some(ck) = &opts.restore {
         if !matches!(ck.metrics, Json::Null) {
             job.metrics.restore(&ck.metrics);
         }
+        job.trace.restore(&ck.trace);
     }
     let recv_timeout = opts
         .recv_timeout
@@ -759,6 +783,8 @@ impl Controller {
         if let Some(sink) = &job.ckpt {
             sink.bind_store(self.store.clone());
         }
+        // traced jobs stream round-boundary Trace events on this notifier
+        job.trace.bind_notifier(self.notifier.clone());
 
         let t_db = Instant::now();
         self.store.put_batch(
@@ -853,6 +879,7 @@ impl Controller {
             expansion_s,
             db_write_s,
             metrics,
+            trace: job.trace.clone(),
         })
     }
 }

@@ -106,6 +106,9 @@ pub struct JobCheckpoint {
     pub workers: BTreeMap<String, Json>,
     /// Metrics-hub dump ([`crate::metrics::MetricsHub::snapshot`]).
     pub metrics: Json,
+    /// Trace-hub dump ([`crate::trace::TraceHub::snapshot`]); `Null` for
+    /// untraced jobs and checkpoints written before tracing existed.
+    pub trace: Json,
 }
 
 fn epoch_prefix(job: &str, epoch: u64) -> String {
@@ -217,7 +220,14 @@ impl CkptSink {
     /// global's own state, one atomic `put_batch` with the head pointer
     /// last, then GC of superseded epochs. No-op (hub retained) when the
     /// sink is not live or no store is bound.
-    pub fn commit(&self, round: u64, cursor: u64, global: Json, metrics: Json) -> Result<()> {
+    pub fn commit(
+        &self,
+        round: u64,
+        cursor: u64,
+        global: Json,
+        metrics: Json,
+        trace: Json,
+    ) -> Result<()> {
         if !self.live {
             return Ok(());
         }
@@ -226,7 +236,8 @@ impl CkptSink {
         };
         let epoch = round;
         let prefix = epoch_prefix(&self.job, epoch);
-        // deterministic record order: meta, global, metrics, workers by id
+        // deterministic record order: meta, global, metrics, trace,
+        // workers by id
         let workers: BTreeMap<String, Json> = self
             .hub
             .lock()
@@ -245,6 +256,9 @@ impl CkptSink {
         batch.push((format!("{prefix}/meta"), Json::Obj(meta)));
         batch.push((format!("{prefix}/global"), global));
         batch.push((format!("{prefix}/metrics"), metrics));
+        if !matches!(trace, Json::Null) {
+            batch.push((format!("{prefix}/trace"), trace));
+        }
         for (id, snap) in &workers {
             batch.push((format!("{prefix}/w/{id}"), snap.clone()));
         }
@@ -301,6 +315,9 @@ pub fn load_latest(store: &Arc<Store>, job: &str) -> Result<Option<JobCheckpoint
     let metrics = store
         .get(CKPT_COLLECTION, &format!("{prefix}/metrics"))
         .unwrap_or(Json::Null);
+    let trace = store
+        .get(CKPT_COLLECTION, &format!("{prefix}/trace"))
+        .unwrap_or(Json::Null);
     let mut workers = BTreeMap::new();
     let Some(ids) = meta.get("workers").as_arr() else {
         bail!("job '{job}': checkpoint meta missing worker list");
@@ -322,6 +339,7 @@ pub fn load_latest(store: &Arc<Store>, job: &str) -> Result<Option<JobCheckpoint
         global,
         workers,
         metrics,
+        trace,
     }))
 }
 
@@ -341,7 +359,7 @@ mod tests {
         let (sink, store) = sink_with_store();
         sink.publish("w0", Json::Str("s0".into()));
         sink.publish("w1", Json::Str("s1".into()));
-        sink.commit(3, 2, Json::Str("g".into()), Json::Null).unwrap();
+        sink.commit(3, 2, Json::Str("g".into()), Json::Null, Json::Null).unwrap();
         let ck = load_latest(&store, "j0").unwrap().unwrap();
         assert_eq!(ck.round, 3);
         assert_eq!(ck.cursor, 2);
@@ -355,9 +373,9 @@ mod tests {
     fn newer_epoch_supersedes_and_gcs_older() {
         let (sink, store) = sink_with_store();
         sink.publish("w0", Json::Str("r1".into()));
-        sink.commit(1, 0, Json::Str("g1".into()), Json::Null).unwrap();
+        sink.commit(1, 0, Json::Str("g1".into()), Json::Null, Json::Null).unwrap();
         sink.publish("w0", Json::Str("r2".into()));
-        sink.commit(2, 0, Json::Str("g2".into()), Json::Null).unwrap();
+        sink.commit(2, 0, Json::Str("g2".into()), Json::Null, Json::Null).unwrap();
         let ck = load_latest(&store, "j0").unwrap().unwrap();
         assert_eq!(ck.round, 2);
         assert_eq!(ck.workers["w0"], Json::Str("r2".into()));
@@ -376,7 +394,7 @@ mod tests {
         let sink = CkptSink::new("j0", CkptPolicy::every_round(), false);
         sink.bind_store(store.clone());
         sink.publish("agg", Json::Str("s".into()));
-        sink.commit(1, 0, Json::Null, Json::Null).unwrap();
+        sink.commit(1, 0, Json::Null, Json::Null, Json::Null).unwrap();
         assert!(store.get(CKPT_COLLECTION, "j0/head").is_none());
         // hub still seeds failover
         sink.stage_seed("agg");

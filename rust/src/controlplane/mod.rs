@@ -275,6 +275,8 @@ impl FleetCore {
         if let Some(sink) = &job.ckpt {
             sink.bind_store(self.store.clone());
         }
+        // traced jobs stream round-boundary Trace events on this notifier
+        job.trace.bind_notifier(self.notifier.clone());
         let tracker: Arc<dyn PodTracker> = Arc::new(JobTracker {
             core: self.clone(),
             idx,

@@ -202,6 +202,9 @@ impl Deployer for SimDeployer {
         if at > 0 {
             env.clock.lock().unwrap().merge(at);
         }
+        // traced jobs sample this scheduler's runtime stats at round
+        // boundaries; no-op (one branch) when the job's hub is disabled
+        job.trace.bind_sched(self.sched.stats());
         let worker_id = env.cfg.id.clone();
         let compute = env.cfg.compute.clone();
         let status = StatusCell::new();
@@ -278,6 +281,10 @@ impl RunnableTask for TrackedTask {
         let at = self.clock.lock().unwrap().now();
         self.tracker.pod_done(&self.worker, at, true);
     }
+
+    fn stall_context(&self) -> Option<String> {
+        self.inner.stall_context()
+    }
 }
 
 /// Multi-job cooperative orchestrator: pods from *many* jobs share one
@@ -324,6 +331,7 @@ impl FleetDeployer {
         if at > 0 {
             env.clock.lock().unwrap().merge(at);
         }
+        job.trace.bind_sched(self.sched.stats());
         let clock = env.clock.clone();
         let worker_id = env.cfg.id.clone();
         let compute = env.cfg.compute.clone();
@@ -540,7 +548,7 @@ impl TopologyTimeline {
             .get()
             .context("topology timeline has no deployer binding")?;
         b.notifier
-            .emit(EventKind::Deploy, &job.spec.name, Json::from(1usize));
+            .emit_at(EventKind::Deploy, &job.spec.name, at, Json::from(1usize));
         let pod = b.deployer.deploy_at(cfg, job, b.notifier.clone(), at)?;
         self.pods.lock().unwrap().push(pod);
         Ok(())

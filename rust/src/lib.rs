@@ -76,6 +76,7 @@ pub mod sim;
 pub mod store;
 pub mod tag;
 pub mod topo;
+pub mod trace;
 pub mod workflow;
 
 /// Crate-wide result type.

@@ -16,6 +16,7 @@
 //! flame fleet   [--jobs 100 --runners N]                  # multi-job control plane
 //! flame fedprox [--trainers 8 --rounds 6 --mu 0.1]        # Role-SDK custom program
 //! flame codec-sweep [--trainers 8 --rounds 8 --topk-frac 0.05] # update-codec comparison
+//! flame trace   [--trainers 6 --rounds 4 --out bench_out/trace.json] # virtual-time tracing
 //! flame roles                                             # list registered programs
 //! flame spec    --topo hybrid --trainers 50 --groups 5    # print TAG JSON
 //! ```
@@ -522,13 +523,72 @@ fn cmd_resume(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Virtual-time tracing demo: run the traced scenario (`hyper.trace =
+/// "on"`, one shaped uplink), print the per-round phase breakdown, and
+/// write the Chrome trace-event JSON plus a round-phase CSV (see
+/// `sim::run_trace` and the `trace` module docs).
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.expect_flags(
+        "trace",
+        &["trainers", "rounds", "out", "per-shard", "test-n", "seed", "runners"],
+    )?;
+    let trainers = args.get_usize("trainers", 6)?;
+    let rounds = args.get_u64("rounds", 4)?;
+    let out = args.get("out", "bench_out/trace.json");
+    let mut o = sim::SimOptions::mock();
+    o.per_shard = args.get_usize("per-shard", 64)?;
+    o.test_n = args.get_usize("test-n", 128)?;
+    o.seed = args.get_u64("seed", 7)?;
+    o.executor = flame::control::Executor::Cooperative {
+        runners: args.get_usize("runners", 0)?,
+    };
+    let report = sim::run_trace(trainers, rounds, &o)?;
+    println!(
+        "trace: job {} workers={} rounds={rounds} vtime={:.2}s spans={}",
+        report.job,
+        report.workers,
+        report.vtime_s,
+        report.trace.span_count()
+    );
+    print!("{}", report.trace.phase_table());
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, report.trace.chrome_json())?;
+    println!("# chrome trace: {out} (load in chrome://tracing or Perfetto)");
+    let csv = out.replace(".json", "_phases.csv");
+    let mut s = String::from(
+        "round,train_us,encode_us,xfer_us,wait_us,aggregate_us,distribute_us,eval_us,checkpoint_us,round_us\n",
+    );
+    for (round, row) in report.trace.phase_rounds() {
+        s.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{}\n",
+            round,
+            row.train_us,
+            row.encode_us,
+            row.xfer_us,
+            row.wait_us,
+            row.aggregate_us,
+            row.distribute_us,
+            row.eval_us,
+            row.checkpoint_us,
+            row.round_us()
+        ));
+    }
+    std::fs::write(&csv, s)?;
+    println!("# phase csv:    {csv}");
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, rest) = match argv.split_first() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: flame <expand|spec|run|fig10|fig11|scale|churn|fleet|fedprox|codec-sweep|resume|roles> [--flags]"
+                "usage: flame <expand|spec|run|fig10|fig11|scale|churn|fleet|fedprox|codec-sweep|resume|trace|roles> [--flags]"
             );
             std::process::exit(2);
         }
@@ -545,6 +605,7 @@ fn main() {
         "fedprox" => cmd_fedprox(&args),
         "codec-sweep" => cmd_codec_sweep(&args),
         "resume" => cmd_resume(&args),
+        "trace" => cmd_trace(&args),
         "roles" => cmd_roles(&args),
         other => bail!("unknown command '{other}'"),
     });

@@ -9,21 +9,27 @@ use std::collections::BTreeMap;
 use std::fs;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::intern::atom;
 use crate::json::{self, Json};
 use crate::net::VTime;
 
 /// One recorded sample: `(series, round, value)` plus the emitting worker
 /// and the job it belongs to. The job id is what keeps concurrent jobs'
 /// series apart when a fleet run aggregates many hubs into one CSV.
+///
+/// The string fields are interned [`Arc<str>`] atoms ([`crate::intern`]):
+/// recording a sample clones three pointers instead of three heap
+/// strings, which keeps per-round telemetry (including the `phase.*`
+/// trace series) off the steady-state allocation budget.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Sample {
-    pub job: String,
-    pub worker: String,
-    pub series: String,
+    pub job: Arc<str>,
+    pub worker: Arc<str>,
+    pub series: Arc<str>,
     pub round: u64,
     pub value: f64,
 }
@@ -32,12 +38,23 @@ pub struct Sample {
 /// is stamped with the hub's job id ([`MetricsHub::for_job`]; standalone
 /// hubs use the empty id), so rows from concurrent jobs never collapse
 /// into one anonymous series.
-#[derive(Default, Debug)]
+#[derive(Debug)]
 pub struct MetricsHub {
-    job: String,
+    job: Arc<str>,
     samples: Mutex<Vec<Sample>>,
     bytes_sent: AtomicU64,
     messages: AtomicU64,
+}
+
+impl Default for MetricsHub {
+    fn default() -> Self {
+        Self {
+            job: atom(""),
+            samples: Mutex::new(Vec::new()),
+            bytes_sent: AtomicU64::new(0),
+            messages: AtomicU64::new(0),
+        }
+    }
 }
 
 impl MetricsHub {
@@ -46,9 +63,9 @@ impl MetricsHub {
     }
 
     /// A hub whose samples carry `job` as their job id.
-    pub fn for_job(job: impl Into<String>) -> Self {
+    pub fn for_job(job: impl AsRef<str>) -> Self {
         Self {
-            job: job.into(),
+            job: atom(job.as_ref()),
             ..Self::default()
         }
     }
@@ -59,11 +76,14 @@ impl MetricsHub {
         &self.job
     }
 
+    /// Record one sample. Steady-state cost after the first sighting of a
+    /// `worker`/`series` name is three `Arc` clones and a `Vec::push` —
+    /// no string allocation.
     pub fn record(&self, worker: &str, series: &str, round: u64, value: f64) {
         self.samples.lock().unwrap().push(Sample {
             job: self.job.clone(),
-            worker: worker.to_string(),
-            series: series.to_string(),
+            worker: atom(worker),
+            series: atom(series),
             round,
             value,
         });
@@ -89,7 +109,7 @@ impl MetricsHub {
             .lock()
             .unwrap()
             .iter()
-            .filter(|s| s.series == name)
+            .filter(|s| &*s.series == name)
             .map(|s| (s.round, s.value))
             .collect();
         out.sort_by_key(|(r, _)| *r);
@@ -107,7 +127,9 @@ impl MetricsHub {
 
     /// Checkpoint encoding of everything recorded so far: samples in
     /// insertion order (series extraction is a stable sort, so order
-    /// within a round is observable) plus the traffic counters.
+    /// within a round is observable) plus the traffic counters. Each row
+    /// carries its own job id as the fifth element so a cross-hub restore
+    /// keeps sample provenance (empty = "stamp with the restoring hub").
     pub fn snapshot(&self) -> Json {
         let mut o = Json::obj();
         let samples: Vec<Json> = self
@@ -117,10 +139,11 @@ impl MetricsHub {
             .iter()
             .map(|s| {
                 Json::Arr(vec![
-                    Json::Str(s.worker.clone()),
-                    Json::Str(s.series.clone()),
+                    Json::Str(s.worker.to_string()),
+                    Json::Str(s.series.to_string()),
                     Json::from(s.round),
                     Json::Num(s.value),
+                    Json::Str(s.job.to_string()),
                 ])
             })
             .collect();
@@ -132,17 +155,23 @@ impl MetricsHub {
 
     /// Replace this hub's contents with a snapshot taken by
     /// [`MetricsHub::snapshot`] (resume-from-checkpoint: rounds recorded
-    /// before the kill point come back verbatim, stamped with this hub's
-    /// job id).
+    /// before the kill point come back verbatim). Rows that recorded a
+    /// job id keep it — a cross-hub restore no longer re-stamps foreign
+    /// samples with the restoring hub's id; only legacy four-element rows
+    /// (and rows from anonymous hubs) fall back to it.
     pub fn restore(&self, snap: &Json) {
         let mut samples = self.samples.lock().unwrap();
         samples.clear();
         if let Some(rows) = snap.get("samples").as_arr() {
             for row in rows {
+                let job = match row.idx(4).as_str() {
+                    Some(j) if !j.is_empty() => atom(j),
+                    _ => self.job.clone(),
+                };
                 samples.push(Sample {
-                    job: self.job.clone(),
-                    worker: row.idx(0).as_str().unwrap_or("").to_string(),
-                    series: row.idx(1).as_str().unwrap_or("").to_string(),
+                    job,
+                    worker: atom(row.idx(0).as_str().unwrap_or("")),
+                    series: atom(row.idx(1).as_str().unwrap_or("")),
                     round: row.idx(2).as_f64().unwrap_or(0.0) as u64,
                     value: row.idx(3).as_f64().unwrap_or(0.0),
                 });
@@ -271,12 +300,54 @@ mod tests {
         m.record("w0", "loss", 1, 0.5);
         let all = m.all();
         assert_eq!(all.len(), 1);
-        assert_eq!(all[0].job, "fleet-cfl-3");
+        assert_eq!(&*all[0].job, "fleet-cfl-3");
         assert_eq!(m.job_id(), "fleet-cfl-3");
         // standalone hubs stamp the empty id
         let anon = MetricsHub::new();
         anon.record("w0", "loss", 1, 0.5);
-        assert_eq!(anon.all()[0].job, "");
+        assert_eq!(&*anon.all()[0].job, "");
+    }
+
+    #[test]
+    fn record_interns_names() {
+        use std::sync::Arc;
+        let m = MetricsHub::for_job("intern-job");
+        m.record("w0", "loss", 1, 0.5);
+        m.record("w0", "loss", 2, 0.25);
+        let all = m.all();
+        // repeated names share one allocation — the recording fast path
+        // clones pointers, it does not re-allocate strings
+        assert!(Arc::ptr_eq(&all[0].worker, &all[1].worker));
+        assert!(Arc::ptr_eq(&all[0].series, &all[1].series));
+        assert!(Arc::ptr_eq(&all[0].job, &all[1].job));
+    }
+
+    #[test]
+    fn restore_preserves_recorded_job_ids() {
+        // a fleet aggregator hub holding samples from two jobs
+        let a = MetricsHub::for_job("job-a");
+        a.record("g", "loss", 1, 0.5);
+        let b = MetricsHub::for_job("job-b");
+        b.record("g", "loss", 1, 0.25);
+        let merged = MetricsHub::for_job("fleet");
+        for s in a.all().into_iter().chain(b.all()) {
+            merged.samples.lock().unwrap().push(s);
+        }
+        let snap = merged.snapshot();
+        // restoring into a differently-named hub must keep each row's
+        // recorded job id, not re-stamp everything with "other"
+        let other = MetricsHub::for_job("other");
+        other.restore(&snap);
+        let jobs: Vec<String> = other.all().iter().map(|s| s.job.to_string()).collect();
+        assert_eq!(jobs, vec!["job-a", "job-b"]);
+        // legacy four-element rows (no job column) fall back to the
+        // restoring hub's id
+        let legacy = Json::parse(
+            r#"{"samples":[["w0","loss",1,0.5]],"bytes":"0000000000000000","messages":"0000000000000000"}"#,
+        )
+        .unwrap();
+        other.restore(&legacy);
+        assert_eq!(&*other.all()[0].job, "other");
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Mutex;
 
 use crate::json::Json;
+use crate::net::VTime;
 
 /// Event kinds the management plane emits (§5.2 workflow).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,6 +30,10 @@ pub enum EventKind {
     SpecLint,
     /// Job finished (success or failure).
     JobDone,
+    /// A round boundary's trace summary (payload: the per-phase µs
+    /// breakdown object emitted by [`crate::trace::TraceHub`]). Only
+    /// emitted for jobs with tracing enabled.
+    Trace,
 }
 
 /// One event on the bus.
@@ -36,6 +41,11 @@ pub enum EventKind {
 pub struct Event {
     pub kind: EventKind,
     pub job: String,
+    /// Emitting virtual time (µs). Events published from inside a running
+    /// job carry the emitter's vclock so the stream is orderable against
+    /// trace spans; management-plane events outside any virtual timeline
+    /// (submit, revoke) carry 0.
+    pub at: VTime,
     pub payload: Json,
 }
 
@@ -89,10 +99,20 @@ impl Notifier {
         delivered
     }
 
+    /// Emit outside any virtual timeline (management-plane events): the
+    /// stamp is 0.
     pub fn emit(&self, kind: EventKind, job: &str, payload: Json) -> usize {
+        self.emit_at(kind, job, 0, payload)
+    }
+
+    /// Emit from inside a job at virtual time `at` (the emitter's vclock
+    /// or a message arrival time), so subscribers can order the event
+    /// against trace spans.
+    pub fn emit_at(&self, kind: EventKind, job: &str, at: VTime, payload: Json) -> usize {
         self.publish(Event {
             kind,
             job: job.to_string(),
+            at,
             payload,
         })
     }
@@ -156,6 +176,18 @@ mod tests {
             .map(|e| e.payload.as_str().unwrap().to_string())
             .collect();
         assert_eq!(states, vec!["queued", "deploying", "running", "completed"]);
+    }
+
+    #[test]
+    fn events_carry_the_emitting_virtual_time() {
+        let n = Notifier::new();
+        let rx = n.subscribe(None, None);
+        n.emit(EventKind::Deploy, "j1", Json::Null);
+        n.emit_at(EventKind::Trace, "j1", 42_000, Json::Null);
+        let events: Vec<Event> = rx.try_iter().collect();
+        assert_eq!(events[0].at, 0);
+        assert_eq!(events[1].at, 42_000);
+        assert_eq!(events[1].kind, EventKind::Trace);
     }
 
     #[test]

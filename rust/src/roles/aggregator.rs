@@ -61,6 +61,9 @@ pub struct AggregatorCtx {
     /// In-flight streaming fold (re-entrancy across cooperative yields of
     /// the quorum collect). O(d), not O(trainers·d).
     acc: Option<Accumulator>,
+    /// Virtual time the streaming collect opened (transient trace state —
+    /// never checkpointed; a resumed round restarts its wait span).
+    collect_t0: Option<u64>,
     /// Per-update losses collected this round (sender, loss) — summed in
     /// sorted sender order at round end for a deterministic mean.
     losses: Vec<(Arc<str>, f64)>,
@@ -97,6 +100,7 @@ impl AggregatorCtx {
             upload_sent_at: 0,
             round_targets: Vec::new(),
             acc: None,
+            collect_t0: None,
             losses: Vec::new(),
             data_role,
             done: false,
@@ -237,6 +241,12 @@ fn distribute(c: &mut AggregatorCtx) -> Result<()> {
         items.push((t.clone(), msg.clone()));
     }
     param.send_fanout(items)?;
+    // sends never advance the sender clock, so the span is zero-length
+    let v = c.env.now();
+    c.env
+        .job
+        .trace
+        .span(&c.env.cfg.id, crate::trace::phase::DISTRIBUTE, c.round, v, v);
     // the streaming collect's expected upload universe: exactly the
     // trainers that received this round's weights
     c.round_targets = trainers;
@@ -264,6 +274,7 @@ fn collect_and_aggregate(c: &mut AggregatorCtx) -> Result<()> {
     }
     let target = super::quorum_target(alive.len(), c.env.job.tcfg.quorum);
     if c.acc.is_none() {
+        c.collect_t0 = Some(c.env.now());
         c.acc = Some(Accumulator::new(
             c.env.job.compute.clone(),
             c.env.job.pool.clone(),
@@ -316,6 +327,14 @@ fn collect_and_aggregate(c: &mut AggregatorCtx) -> Result<()> {
             .push(&from, w, samples)?;
         c.losses.push((from, loss));
     }
+    let wait_t0 = c.collect_t0.take().unwrap_or_else(|| c.env.now());
+    c.env.job.trace.span(
+        &c.env.cfg.id,
+        crate::trace::phase::WAIT,
+        c.round,
+        wait_t0,
+        c.env.now(),
+    );
     let acc = c.acc.take().expect("accumulator created above");
     let mut losses = std::mem::take(&mut c.losses);
     if losses.is_empty() {
@@ -338,7 +357,15 @@ fn collect_and_aggregate(c: &mut AggregatorCtx) -> Result<()> {
         // reference (global broadcast, in-flight mail) is gone
         c.env.job.pool.reclaim(old);
     }
-    c.env.charge(t0);
+    let dv = c.env.charge(t0);
+    let v1 = c.env.now();
+    c.env.job.trace.span(
+        &c.env.cfg.id,
+        crate::trace::phase::AGGREGATE,
+        c.round,
+        v1 - dv,
+        v1,
+    );
     Ok(())
 }
 

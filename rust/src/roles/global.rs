@@ -89,6 +89,10 @@ pub struct GlobalCtx {
     /// In-flight streaming fold for the synchronous collect (re-entrant
     /// across cooperative yields). O(d), not O(children·d).
     acc: Option<Accumulator>,
+    /// Virtual time the in-flight collect entered its wait (set with
+    /// `acc`, consumed at quorum): the `collect-wait` span start. Purely
+    /// transient — never checkpointed.
+    collect_t0: Option<VTime>,
     /// Per-update metadata kept to round end: `(sender, loss, arrival)` —
     /// pointer-sized, feeds acks and selector stats (both the synchronous
     /// and the hybrid collect use it; only one runs per job).
@@ -156,6 +160,7 @@ impl GlobalCtx {
             ack_updates: coordinated,
             hybrid_clusters,
             acc: None,
+            collect_t0: None,
             col: Vec::new(),
             elastic,
             assign_dirty: false,
@@ -284,11 +289,22 @@ fn checkpoint(c: &mut GlobalCtx) -> Result<()> {
     if !sink.is_live() || c.round <= c.resumed_at || !sink.due(c.round) {
         return Ok(());
     }
+    // the span goes in BEFORE the commit so it rides its own snapshot: a
+    // resumed run skips re-committing this boundary (`resumed_at` guard),
+    // so a span recorded after the commit could never be replayed. The
+    // commit does not advance the virtual clock, so the span is
+    // zero-length either way.
+    let v0 = c.env.now();
+    c.env
+        .job
+        .trace
+        .span(&c.env.cfg.id, crate::trace::phase::CHECKPOINT, c.round, v0, v0);
     sink.commit(
         c.round,
         c.env.job.timeline.cursor(),
         c.snapshot_json(),
         c.env.job.metrics.snapshot(),
+        c.env.job.trace.snapshot(),
     )?;
     if sink.policy().kill_at == Some(c.round) {
         bail!("injected controller kill at round boundary {}", c.round);
@@ -409,6 +425,15 @@ fn distribute(c: &mut GlobalCtx) -> Result<()> {
         items.push((child, msg));
     }
     chan.send_fanout(items)?;
+    // sends never advance the sender's clock, so this span is zero-length
+    // at the round boundary — it marks where the round starts in the trace
+    c.env.job.trace.span(
+        &c.env.cfg.id,
+        crate::trace::phase::DISTRIBUTE,
+        c.round,
+        c.round_start,
+        chan.now(),
+    );
     Ok(())
 }
 
@@ -457,6 +482,7 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
             c.env.job.pool.clone(),
             c.selected.clone(),
         ));
+        c.collect_t0 = Some(c.env.now());
         c.col.clear();
     }
     // The target is quorum- and membership-aware: `ceil(quorum * alive)`
@@ -503,6 +529,14 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
             .push(&from, w, samples)?;
         c.col.push((from, loss, arrival));
     }
+    // quorum met: the clock now holds the last counted arrival — close
+    // the wait span (it started when the accumulator was created)
+    let wait_t0 = c.collect_t0.take().unwrap_or(c.round_start);
+    let wait_end = c.env.now();
+    let me = c.env.cfg.id.clone();
+    let t = &c.env.job.trace;
+    t.span(&me, crate::trace::phase::WAIT, c.round, wait_t0, wait_end);
+    t.counter(&me, "quorum", wait_end, c.col.len() as f64);
     let acc = c.acc.take().expect("accumulator created above");
     let mut col = std::mem::take(&mut c.col);
     if col.is_empty() {
@@ -546,7 +580,12 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
     }
     // zero total weight (every contributor lost its trainers to churn and
     // relayed its stale model) keeps the model as-is
-    c.env.charge(t0);
+    let dv = c.env.charge(t0);
+    let v1 = c.env.now();
+    c.env
+        .job
+        .trace
+        .span(&me, crate::trace::phase::AGGREGATE, c.round, v1 - dv, v1);
     for (client, stats) in c.child_stats.drain() {
         c.selector.report(&client, stats);
     }
@@ -568,6 +607,7 @@ fn collect_hybrid(c: &mut GlobalCtx) -> Result<()> {
             c.env.job.pool.clone(),
             Vec::new(),
         ));
+        c.collect_t0 = Some(c.env.now());
         c.col.clear();
     }
     while c.acc.as_ref().map(|a| a.len()).unwrap_or(0) < expected {
@@ -584,6 +624,12 @@ fn collect_hybrid(c: &mut GlobalCtx) -> Result<()> {
             .push(&from, w, samples)?;
         c.col.push((from, loss, arrival));
     }
+    let wait_t0 = c.collect_t0.take().unwrap_or(c.round_start);
+    let wait_end = c.env.now();
+    let me = c.env.cfg.id.clone();
+    let t = &c.env.job.trace;
+    t.span(&me, crate::trace::phase::WAIT, c.round, wait_t0, wait_end);
+    t.counter(&me, "quorum", wait_end, c.col.len() as f64);
     let acc = c.acc.take().expect("accumulator created above");
     let mut col = std::mem::take(&mut c.col);
     // Acks and selector feedback in virtual-arrival order with a
@@ -617,7 +663,12 @@ fn collect_hybrid(c: &mut GlobalCtx) -> Result<()> {
         c.opt.apply(&mut c.flat, &mean);
         c.env.job.pool.reclaim(mean);
     }
-    c.env.charge(t0);
+    let dv = c.env.charge(t0);
+    let v1 = c.env.now();
+    c.env
+        .job
+        .trace
+        .span(&me, crate::trace::phase::AGGREGATE, c.round, v1 - dv, v1);
     for (client, stats) in c.child_stats.drain() {
         c.selector.report(&client, stats);
     }
@@ -631,7 +682,7 @@ fn eval(c: &mut GlobalCtx) -> Result<()> {
     let t0 = Instant::now();
     let (loss, acc) =
         crate::runtime::evaluate(c.env.job.compute.as_ref(), &c.flat, &c.env.job.test_set)?;
-    c.env.charge(t0);
+    let dv = c.env.charge(t0);
     let me = c.env.cfg.id.clone();
     let now = c.env.now();
     let round_time = now.saturating_sub(c.round_start);
@@ -661,6 +712,11 @@ fn eval(c: &mut GlobalCtx) -> Result<()> {
             .unwrap_or(0);
         m.record(&me, "aggregators_alive", c.round, aggs as f64);
     }
+    let t = &c.env.job.trace;
+    t.span(&me, crate::trace::phase::EVAL, c.round, now - dv, now);
+    // round boundary: fold this round's spans into phase.*_us series,
+    // sample scheduler stats, emit the Trace event
+    t.round_boundary(m, &me, c.round, c.round_start, now);
     c.round += 1;
     if c.round >= c.env.job.rounds() {
         c.done = true;
@@ -717,6 +773,7 @@ fn async_serve(c: &mut GlobalCtx) -> Result<()> {
     }
     let chan_name = c.children_channel();
     let target_versions = c.env.job.rounds();
+    let serve_t0 = c.env.now();
     let (from, msg) = {
         let chan = c.env.chan(chan_name)?;
         chan.recv_any()?
@@ -724,6 +781,14 @@ fn async_serve(c: &mut GlobalCtx) -> Result<()> {
     if &*msg.kind != "update" {
         bail!("async global expected 'update', got '{}'", msg.kind);
     }
+    // the wait for this update, charged by the arrival merge
+    c.env.job.trace.span(
+        &c.env.cfg.id,
+        crate::trace::phase::WAIT,
+        msg.round,
+        serve_t0,
+        c.env.now(),
+    );
     let delta: Arc<Vec<f32>> = match msg.payload {
         Payload::Floats(d) => d,
         Payload::Encoded(enc) => {
@@ -757,13 +822,19 @@ fn async_serve(c: &mut GlobalCtx) -> Result<()> {
         let t0 = Instant::now();
         let (loss, acc) =
             crate::runtime::evaluate(c.env.job.compute.as_ref(), &c.flat, &c.env.job.test_set)?;
-        c.env.charge(t0);
+        let dv = c.env.charge(t0);
         let me = c.env.cfg.id.clone();
         let now = c.env.now();
         let m = &c.env.job.metrics;
         m.record(&me, "loss", version, loss);
         m.record(&me, "acc", version, acc);
         m.record(&me, "vtime_s", version, now as f64 / 1e6);
+        let t = &c.env.job.trace;
+        t.span(&me, crate::trace::phase::EVAL, version, now - dv, now);
+        // async "round" = buffer version: the boundary window runs from
+        // the previous version bump (kickoff for the first)
+        t.round_boundary(m, &me, version, c.round_start, now);
+        c.round_start = now;
         if version >= target_versions {
             c.done = true;
             let chan = c.env.chan(chan_name)?;
@@ -789,6 +860,13 @@ fn async_kickoff(c: &mut GlobalCtx) -> Result<()> {
     }
     chan.broadcast(msg)?;
     c.round_start = chan.now();
+    c.env.job.trace.span(
+        &c.env.cfg.id,
+        crate::trace::phase::DISTRIBUTE,
+        0,
+        c.round_start,
+        c.round_start,
+    );
     Ok(())
 }
 

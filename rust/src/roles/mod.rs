@@ -90,6 +90,11 @@ pub struct JobRuntime {
     /// Checkpoint this deployment rehydrates from (`None` = fresh run).
     /// Role contexts pull their saved state out at build time.
     pub restore: Option<Arc<crate::controlplane::checkpoint::JobCheckpoint>>,
+    /// Per-job virtual-time span recorder. Always present; jobs without
+    /// `hyper.trace = "on"` carry the disabled hub, whose recording
+    /// methods reject before touching a lock — the round loop stays
+    /// allocation-free.
+    pub trace: Arc<crate::trace::TraceHub>,
 }
 
 impl JobRuntime {
@@ -348,6 +353,7 @@ pub mod tests_support {
             codec: None,
             ckpt: None,
             restore: None,
+            trace: crate::trace::TraceHub::disabled(),
         });
         (job, cfgs)
     }

@@ -304,6 +304,7 @@ fn train(c: &mut TrainerCtx) -> Result<()> {
     }
     let tcfg = c.env.job.tcfg.clone();
     let compute = c.env.job.compute.clone();
+    let v0 = c.env.now();
     let mut loss_sum = 0.0;
     for _ in 0..tcfg.local_steps {
         let (batch_idx, x, y) = c.next_batch();
@@ -335,6 +336,13 @@ fn train(c: &mut TrainerCtx) -> Result<()> {
         loss_sum += loss as f64;
     }
     c.last_loss = loss_sum / tcfg.local_steps as f64;
+    c.env.job.trace.span(
+        &c.env.cfg.id,
+        crate::trace::phase::TRAIN,
+        c.round,
+        v0,
+        c.env.now(),
+    );
     c.env
         .job
         .metrics
@@ -408,6 +416,13 @@ fn upload_encoded(c: &mut TrainerCtx) -> Result<()> {
         crate::algos::dp_sanitize(&mut delta, tcfg.dp_clip, tcfg.dp_sigma, &mut c.env.rng);
     }
     let enc = Arc::new(codec.encode(&delta, &mut c.residual));
+    // encode is not charged to the virtual clock (it models codec choice,
+    // not compute cost), so the span is a zero-length marker
+    let v = c.env.now();
+    c.env
+        .job
+        .trace
+        .span(&c.env.cfg.id, crate::trace::phase::ENCODE, c.round, v, v);
     let mut meta = Json::obj();
     meta.insert("samples", c.data.len());
     meta.insert("loss", Json::Num(c.last_loss));

@@ -61,10 +61,65 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Duration;
 
 use crate::net::VTime;
+
+// ------------------------------------------------------------ runtime stats
+
+/// Always-on scheduler runtime counters (relaxed atomics — a handful of
+/// uncontended increments per poll, noise next to a tasklet step). The
+/// trace layer samples them at round boundaries into `sched.*` metrics
+/// series; they are *runtime* stats (executor- and pool-size-dependent),
+/// so they never enter the deterministic trace output itself.
+#[derive(Debug, Default)]
+pub struct SchedStats {
+    /// Tasks ever registered.
+    pub spawns: AtomicU64,
+    /// Task polls executed by runners.
+    pub polls: AtomicU64,
+    /// Polls that ended in a cooperative park.
+    pub parks: AtomicU64,
+    /// Wakes that moved a Waiting task to Ready.
+    pub wakes: AtomicU64,
+    /// Current ready-queue depth across all groups.
+    ready_now: AtomicU64,
+    /// High-water mark of the ready-queue depth.
+    pub ready_peak: AtomicU64,
+    /// High-water mark of concurrently running tasks (runner occupancy).
+    pub running_peak: AtomicU64,
+}
+
+impl SchedStats {
+    fn on_push_ready(&self) {
+        let now = self.ready_now.fetch_add(1, Ordering::Relaxed) + 1;
+        self.ready_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn on_pop_ready(&self) {
+        self.ready_now.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Current ready-queue depth.
+    pub fn ready_depth(&self) -> u64 {
+        self.ready_now.load(Ordering::Relaxed)
+    }
+
+    /// The cumulative counters as `(series, value)` pairs, named for
+    /// direct recording into a metrics hub.
+    pub fn samples(&self) -> [(&'static str, u64); 6] {
+        [
+            ("sched.spawns", self.spawns.load(Ordering::Relaxed)),
+            ("sched.polls", self.polls.load(Ordering::Relaxed)),
+            ("sched.parks", self.parks.load(Ordering::Relaxed)),
+            ("sched.wakes", self.wakes.load(Ordering::Relaxed)),
+            ("sched.ready_peak", self.ready_peak.load(Ordering::Relaxed)),
+            ("sched.runners_busy_peak", self.running_peak.load(Ordering::Relaxed)),
+        ]
+    }
+}
 
 // ------------------------------------------------------------ yield signal
 
@@ -170,6 +225,14 @@ pub trait RunnableTask: Send {
     /// Terminate a parked task that can never resume (virtual-time
     /// deadlock). The task records the failure as its terminal status.
     fn fail(&mut self, reason: &str);
+
+    /// What this parked task is waiting for — channel, wait-spec, peer
+    /// set, last trace span — for the deadlock post-mortem. Called only
+    /// on stalled tasks, *outside* the scheduler lock (implementations
+    /// may take channel locks). Default: no context.
+    fn stall_context(&self) -> Option<String> {
+        None
+    }
 }
 
 // --------------------------------------------------------------- scheduler
@@ -222,6 +285,8 @@ struct SchedState {
     live: usize,
     /// Tasks currently being polled by a runner.
     running: usize,
+    /// Runtime counters (shared out through [`Scheduler::stats`]).
+    stats: Arc<SchedStats>,
 }
 
 impl SchedState {
@@ -235,6 +300,7 @@ impl SchedState {
         let g = self.tasks[id].group;
         self.groups[g].ready.push(Reverse((at, id)));
         self.nonempty.insert(g);
+        self.stats.on_push_ready();
     }
 
     /// Pop the next task to poll: earliest head virtual time wins; virtual
@@ -263,6 +329,7 @@ impl SchedState {
         if self.groups[gi].ready.is_empty() {
             self.nonempty.remove(&gi);
         }
+        self.stats.on_pop_ready();
         Some(id)
     }
 }
@@ -304,6 +371,7 @@ impl Waker {
             }
         };
         if push {
+            g.stats.wakes.fetch_add(1, Ordering::Relaxed);
             g.push_ready(self.task, at);
             drop(g);
             self.shared.cv.notify_all();
@@ -344,6 +412,7 @@ impl Scheduler {
                     nonempty: std::collections::BTreeSet::new(),
                     live: 0,
                     running: 0,
+                    stats: Arc::new(SchedStats::default()),
                 }),
                 cv: Condvar::new(),
             }),
@@ -369,6 +438,7 @@ impl Scheduler {
             group,
         });
         g.live += 1;
+        g.stats.spawns.fetch_add(1, Ordering::Relaxed);
         g.push_ready(id, 0);
         id
     }
@@ -395,6 +465,7 @@ impl Scheduler {
             group,
         });
         g.live += 1;
+        g.stats.spawns.fetch_add(1, Ordering::Relaxed);
         id
     }
 
@@ -409,6 +480,11 @@ impl Scheduler {
     /// Tasks not yet finished.
     pub fn live(&self) -> usize {
         self.shared.state.lock().unwrap().live
+    }
+
+    /// This fabric's runtime counters (shared; clones see live updates).
+    pub fn stats(&self) -> Arc<SchedStats> {
+        self.shared.state.lock().unwrap().stats.clone()
     }
 
     /// Drive all tasks to completion on `runners` threads (the calling
@@ -448,6 +524,8 @@ impl Scheduler {
                         slot.state = TaskState::Running { wake_pending: None };
                         let task = slot.task.take().expect("ready task has a runnable");
                         g.running += 1;
+                        g.stats.polls.fetch_add(1, Ordering::Relaxed);
+                        g.stats.running_peak.fetch_max(g.running as u64, Ordering::Relaxed);
                         break Next::Poll(id, task);
                     }
                     if g.running == 0 {
@@ -465,10 +543,15 @@ impl Scheduler {
                     return;
                 }
                 Next::Stalled(tasks, reason) => {
-                    // fail() runs OUTSIDE the scheduler lock: a failing
-                    // task may fan out through observers that take this
-                    // lock again (e.g. the control plane's pod tracker
-                    // waking its pump)
+                    // fail() AND the post-mortem gathering run OUTSIDE the
+                    // scheduler lock: a failing task may fan out through
+                    // observers that take this lock again (e.g. the
+                    // control plane's pod tracker waking its pump), and
+                    // stall_context() takes channel locks whose ordering
+                    // puts the scheduler lock *after* them on the delivery
+                    // path.
+                    let reason = Self::post_mortem(reason, &tasks);
+                    eprintln!("{reason}");
                     for mut t in tasks {
                         t.fail(&reason);
                     }
@@ -492,6 +575,7 @@ impl Scheduler {
                     g.live -= 1;
                 }
                 PollOutcome::Parked => {
+                    g.stats.parks.fetch_add(1, Ordering::Relaxed);
                     let wake = match g.tasks[id].state {
                         TaskState::Running { wake_pending } => wake_pending,
                         _ => None,
@@ -543,6 +627,25 @@ impl Scheduler {
         }
         st.live -= stalled.len();
         (stalled, reason)
+    }
+
+    /// Append each stalled task's wait context to the deadlock diagnostic:
+    /// what it was parked on (channel, wait-spec, peers) and, when tracing
+    /// is on, the last span it recorded. Capped so a 10k-worker stall
+    /// stays one screen.
+    fn post_mortem(reason: String, tasks: &[Box<dyn RunnableTask>]) -> String {
+        const SHOWN: usize = 8;
+        let mut out = reason;
+        for t in tasks.iter().take(SHOWN) {
+            let ctx = t
+                .stall_context()
+                .unwrap_or_else(|| "no wait registered".to_string());
+            out.push_str(&format!("\n  - {}: {}", t.name(), ctx));
+        }
+        if tasks.len() > SHOWN {
+            out.push_str(&format!("\n  ... and {} more", tasks.len() - SHOWN));
+        }
+        out
     }
 }
 
@@ -631,6 +734,63 @@ mod tests {
         let msg = failed.lock().unwrap().clone().expect("task must be failed");
         assert!(msg.contains("deadlock"), "{msg}");
         assert!(msg.contains("stuck"), "{msg}");
+    }
+
+    #[test]
+    fn deadlock_post_mortem_includes_stall_context() {
+        struct StallTask {
+            failed: Arc<Mutex<Option<String>>>,
+        }
+        impl RunnableTask for StallTask {
+            fn name(&self) -> &str {
+                "ctx-task"
+            }
+            fn poll(&mut self) -> PollOutcome {
+                PollOutcome::Parked
+            }
+            fn fail(&mut self, reason: &str) {
+                *self.failed.lock().unwrap() = Some(reason.to_string());
+            }
+            fn stall_context(&self) -> Option<String> {
+                Some("waiting on channel 'param' for a message from 'agg' (peers: [agg])".into())
+            }
+        }
+        let sched = Scheduler::new();
+        let failed = Arc::new(Mutex::new(None));
+        sched.spawn(Box::new(StallTask {
+            failed: failed.clone(),
+        }));
+        sched.run(1);
+        let msg = failed.lock().unwrap().clone().expect("task must be failed");
+        assert!(msg.contains("deadlock"), "{msg}");
+        // the post-mortem names the task and dumps its wait context
+        assert!(msg.contains("ctx-task:"), "{msg}");
+        assert!(msg.contains("channel 'param'"), "{msg}");
+        assert!(msg.contains("peers: [agg]"), "{msg}");
+    }
+
+    #[test]
+    fn stats_count_polls_parks_and_wakes() {
+        let sched = Scheduler::new();
+        let (t, park, _, _) = task("w0", 3, true);
+        let id = sched.spawn(Box::new(t));
+        park.set_waker(sched.waker(id));
+        sched.run(2);
+        let st = sched.stats();
+        assert_eq!(st.spawns.load(Ordering::SeqCst), 1);
+        assert_eq!(st.polls.load(Ordering::SeqCst), 4);
+        assert_eq!(st.parks.load(Ordering::SeqCst), 3);
+        assert!(st.ready_peak.load(Ordering::SeqCst) >= 1);
+        assert_eq!(st.ready_depth(), 0);
+        assert!(st.samples().iter().any(|(n, v)| *n == "sched.polls" && *v == 4));
+        // a wake on a Waiting task is what counts as a wake
+        let (t2, park2, _, _) = task("w1", 0, false);
+        let id2 = sched.spawn_parked(Box::new(t2));
+        park2.set_waker(sched.waker(id2));
+        sched.waker(id2).wake(3);
+        sched.run(1);
+        assert_eq!(st.wakes.load(Ordering::SeqCst), 1);
+        assert_eq!(st.spawns.load(Ordering::SeqCst), 2);
     }
 
     #[test]

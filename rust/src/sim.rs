@@ -588,6 +588,40 @@ pub fn run_codec_sweep(
     Ok(CodecSweep { rounds, runs })
 }
 
+// ---------------------------------------------------------------- trace
+
+/// The observability scenario behind `flame trace`: a small classical FL
+/// job run with virtual-time tracing enabled (`hyper.trace = "on"`) and
+/// one deliberately slow uplink, so the sequencer's per-round phase
+/// breakdown shows a visible `collect-wait` component and the Chrome
+/// trace carries per-message `upload-xfer` spans of varying width.
+/// Returns the job report; its `trace` hub renders the phase table
+/// ([`crate::trace::TraceHub::phase_table`]) and the trace-event JSON
+/// ([`crate::trace::TraceHub::chrome_json`]). Both are byte-deterministic
+/// across runner-pool sizes and executors (`rust/tests/trace.rs`).
+pub fn run_trace(trainers: usize, rounds: u64, o: &SimOptions) -> Result<JobReport> {
+    anyhow::ensure!(trainers >= 2, "run_trace needs at least 2 trainers");
+    let spec = topo::classical(trainers, Backend::P2p)
+        .name("trace")
+        .rounds(rounds)
+        .set("lr", Json::Num(o.lr))
+        .set("local_steps", o.local_steps)
+        .set("seed", o.seed)
+        .set("trace", "on")
+        .build();
+    let straggler = format!("trace-trainer-{}", trainers - 1);
+    let opts = o.job_options().with_net(move |net| {
+        net.set_default(LinkSpec::mbps(100.0, 1_000));
+        net.set_pair(
+            &straggler,
+            "trace-global-aggregator-0",
+            LinkSpec::mbps(4.0, 5_000),
+        );
+    });
+    let mut ctl = Controller::new(Arc::new(Store::in_memory()));
+    ctl.submit(spec, opts)
+}
+
 // -------------------------------------------------------------- fedprox
 
 /// The FedProx proximal training step, written as a Role-SDK tasklet: the
@@ -683,7 +717,7 @@ pub fn upload_mb_per_round(report: &JobReport, rounds: u64) -> f64 {
         .metrics
         .all()
         .iter()
-        .filter(|s| s.series == "upload_bytes")
+        .filter(|s| &*s.series == "upload_bytes")
         .map(|s| s.value)
         .sum();
     total / 1e6 / rounds as f64
@@ -857,6 +891,29 @@ mod tests {
         assert!(topk.report.final_acc.unwrap() > 0.4, "{}", sweep.summary());
         // the summary table carries one row per codec
         assert_eq!(sweep.summary().lines().count(), 4);
+    }
+
+    #[test]
+    fn run_trace_phase_rows_tile_each_round() {
+        let o = small_opts();
+        let r = run_trace(3, 2, &o).unwrap();
+        assert!(r.trace.enabled());
+        assert!(r.trace.span_count() > 0);
+        let rows = r.trace.phase_rounds();
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        // the sequencer-lane sum IS the round's virtual duration (the
+        // phase.round_us series records now - round_start independently)
+        let round_us = r.metrics.series("phase.round_us");
+        assert_eq!(round_us.len(), 2);
+        for ((round, v), (r2, row)) in round_us.iter().zip(rows.iter()) {
+            assert_eq!(round, r2);
+            assert_eq!(*v as u64, row.round_us(), "round {round}: {row:?}");
+        }
+        // the straggler's shaped uplink dominates the wait
+        let row0 = rows[&0];
+        assert!(row0.wait_us > 0, "{row0:?}");
+        assert!(row0.train_us > 0, "{row0:?}");
+        assert!(row0.xfer_us > 0, "{row0:?}");
     }
 
     #[test]

@@ -1,0 +1,703 @@
+//! Virtual-time tracing & runtime telemetry — the observability layer.
+//!
+//! A [`TraceHub`] is a per-job span recorder stamped entirely in *virtual*
+//! time: role chains record round phases (`train`, `encode`,
+//! `collect-wait`, `aggregate`, `distribute`, `checkpoint`, `eval`), the
+//! channel fabric records one `upload-xfer` span per delivered message
+//! (charged by the net model), and the scheduler's runtime counters
+//! ([`crate::sched::SchedStats`]) are sampled at round boundaries into
+//! [`MetricsHub`] series. Because every span derives from worker vclocks
+//! and message arrival times — never the wall clock — the emitted trace is
+//! **byte-identical across runner-pool sizes and executors**: the spans
+//! exist in an interleaving-dependent insertion order, but emission sorts
+//! them canonically, and the values themselves are deterministic.
+//!
+//! Three surfaces:
+//!
+//! * [`TraceHub::chrome_json`] — Chrome trace-event JSON
+//!   (`chrome://tracing` / Perfetto loadable), one virtual thread per
+//!   worker (`flame trace` writes `bench_out/trace.json`).
+//! * [`TraceHub::round_boundary`] — per-round phase breakdown recorded as
+//!   `phase.*_us` metrics series (the round-phase CSV), plus cumulative
+//!   scheduler stats as `sched.*` series and a [`EventKind::Trace`]
+//!   notifier event for span-boundary subscribers.
+//! * [`TraceHub::phase_table`] — the human-readable per-round table the
+//!   CLI prints. The sequencer-lane phases (`distribute` + `collect-wait`
+//!   + `aggregate` + `eval` + `checkpoint`) tile the round exactly — the
+//!   sequencer's clock only advances inside those stages — so their sum
+//!   *is* the round's virtual duration.
+//!
+//! Gating: per job via `hyper.trace` (`"on"`/`"off"`, default off) with a
+//! `FLAME_TRACE` env override, mirroring `hyper.simd`/`FLAME_SIMD`. A
+//! disabled hub ([`TraceHub::disabled`]) rejects every record before
+//! touching a lock or the interner, so the PR-5 allocation-free hot path
+//! stays allocation-free (`rust/tests/alloc_regression.rs` pins this).
+//! Workers and phases are interned [`Arc<str>`] atoms, so an *enabled*
+//! hub's steady-state recording cost is one `Vec::push` per span.
+//!
+//! Checkpointing: [`TraceHub::snapshot`] / [`TraceHub::restore`] ride the
+//! round-boundary job checkpoints, so a killed-and-resumed job's final
+//! trace replays the pre-kill prefix verbatim (`rust/tests/trace.rs`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::intern::atom;
+use crate::json::{self, Json};
+use crate::metrics::MetricsHub;
+use crate::net::VTime;
+use crate::notify::{EventKind, Notifier};
+use crate::sched::SchedStats;
+
+/// Canonical round-phase names. Role chains record these; everything else
+/// (tables, CSV series, the Chrome trace) keys off them.
+pub mod phase {
+    pub const TRAIN: &str = "train";
+    pub const ENCODE: &str = "encode";
+    pub const XFER: &str = "upload-xfer";
+    pub const WAIT: &str = "collect-wait";
+    pub const AGGREGATE: &str = "aggregate";
+    pub const DISTRIBUTE: &str = "distribute";
+    pub const CHECKPOINT: &str = "checkpoint";
+    pub const EVAL: &str = "eval";
+}
+
+/// One virtual-time span: `worker` spent `[vstart, vend]` in `phase`
+/// during `round`. Transfer spans carry the receiving `peer` and the
+/// message's wire `bytes`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub worker: Arc<str>,
+    pub phase: Arc<str>,
+    pub peer: Option<Arc<str>>,
+    pub round: u64,
+    pub vstart: VTime,
+    pub vend: VTime,
+    pub bytes: u64,
+}
+
+impl Span {
+    fn dur(&self) -> u64 {
+        self.vend.saturating_sub(self.vstart)
+    }
+
+    /// Canonical ordering key: virtual-time first, then worker/phase —
+    /// independent of insertion (i.e. thread-interleaving) order.
+    fn key(&self) -> (VTime, &Arc<str>, VTime, &Arc<str>, u64, &Option<Arc<str>>, u64) {
+        (
+            self.vstart,
+            &self.worker,
+            self.vend,
+            &self.phase,
+            self.round,
+            &self.peer,
+            self.bytes,
+        )
+    }
+}
+
+/// One counter sample (`ph: "C"` in the Chrome trace): a named value at a
+/// virtual instant, e.g. the quorum fill of a collect.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterEvent {
+    pub worker: Arc<str>,
+    pub name: Arc<str>,
+    pub at: VTime,
+    pub value: f64,
+}
+
+/// Per-round phase durations (µs), summed over every worker's spans.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseRow {
+    pub train_us: u64,
+    pub encode_us: u64,
+    pub xfer_us: u64,
+    pub wait_us: u64,
+    pub aggregate_us: u64,
+    pub distribute_us: u64,
+    pub checkpoint_us: u64,
+    pub eval_us: u64,
+}
+
+impl PhaseRow {
+    /// The sequencer-lane sum — the round's virtual duration (see module
+    /// docs: these phases tile the sequencer's clock exactly).
+    pub fn round_us(&self) -> u64 {
+        self.distribute_us + self.wait_us + self.aggregate_us + self.eval_us + self.checkpoint_us
+    }
+}
+
+/// The per-job span recorder. Shared through
+/// [`crate::roles::JobRuntime::trace`]; a disabled hub is a zero-cost
+/// no-op on every recording path.
+pub struct TraceHub {
+    enabled: bool,
+    job: String,
+    spans: Mutex<Vec<Span>>,
+    counters: Mutex<Vec<CounterEvent>>,
+    /// Scheduler runtime counters, bound by the deployer that owns the
+    /// cooperative fabric (absent under thread-per-worker execution).
+    sched: OnceLock<Arc<SchedStats>>,
+    /// Bound by the controller so round boundaries can emit
+    /// [`EventKind::Trace`] events.
+    notifier: OnceLock<Arc<Notifier>>,
+}
+
+impl TraceHub {
+    /// An enabled hub recording for `job`.
+    pub fn for_job(job: impl Into<String>) -> Arc<Self> {
+        Arc::new(Self {
+            enabled: true,
+            job: job.into(),
+            spans: Mutex::new(Vec::new()),
+            counters: Mutex::new(Vec::new()),
+            sched: OnceLock::new(),
+            notifier: OnceLock::new(),
+        })
+    }
+
+    /// The disabled hub every untraced job carries: rejects all records
+    /// up front — no lock, no interning, no allocation.
+    pub fn disabled() -> Arc<Self> {
+        Arc::new(Self {
+            enabled: false,
+            job: String::new(),
+            spans: Mutex::new(Vec::new()),
+            counters: Mutex::new(Vec::new()),
+            sched: OnceLock::new(),
+            notifier: OnceLock::new(),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn job_id(&self) -> &str {
+        &self.job
+    }
+
+    /// Bind the scheduler's runtime counters (idempotent; cooperative
+    /// deployers call this at pod staging).
+    pub fn bind_sched(&self, stats: Arc<SchedStats>) {
+        if self.enabled {
+            let _ = self.sched.set(stats);
+        }
+    }
+
+    /// Bind the notifier for round-boundary [`EventKind::Trace`] events
+    /// (idempotent; the controller calls this at submit).
+    pub fn bind_notifier(&self, notifier: Arc<Notifier>) {
+        if self.enabled {
+            let _ = self.notifier.set(notifier);
+        }
+    }
+
+    /// Record a phase span for `worker`. No-op when disabled.
+    pub fn span(&self, worker: &str, phase: &str, round: u64, vstart: VTime, vend: VTime) {
+        if !self.enabled {
+            return;
+        }
+        self.spans.lock().unwrap().push(Span {
+            worker: atom(worker),
+            phase: atom(phase),
+            peer: None,
+            round,
+            vstart,
+            vend,
+            bytes: 0,
+        });
+    }
+
+    /// Record one message-transfer span, charged by the net model:
+    /// `from`'s send clock to the computed arrival at `to`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn transfer(
+        &self,
+        from: &str,
+        to: &str,
+        round: u64,
+        vstart: VTime,
+        vend: VTime,
+        bytes: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.spans.lock().unwrap().push(Span {
+            worker: atom(from),
+            phase: atom(phase::XFER),
+            peer: Some(atom(to)),
+            round,
+            vstart,
+            vend,
+            bytes,
+        });
+    }
+
+    /// Record a counter sample. No-op when disabled.
+    pub fn counter(&self, worker: &str, name: &str, at: VTime, value: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.counters.lock().unwrap().push(CounterEvent {
+            worker: atom(worker),
+            name: atom(name),
+            at,
+            value,
+        });
+    }
+
+    /// How many spans have been recorded.
+    pub fn span_count(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    /// The latest span (by virtual end time) of `worker`, formatted for
+    /// diagnostics — the "what was it doing last" line of a deadlock
+    /// post-mortem. `None` when disabled or the worker never recorded.
+    pub fn last_span_of(&self, worker: &str) -> Option<String> {
+        if !self.enabled {
+            return None;
+        }
+        let spans = self.spans.lock().unwrap();
+        spans
+            .iter()
+            .filter(|s| &*s.worker == worker)
+            .max_by_key(|s| (s.vend, s.vstart, s.round))
+            .map(|s| format!("{}@[{}..{}]us round {}", s.phase, s.vstart, s.vend, s.round))
+    }
+
+    // ------------------------------------------------- round boundaries
+
+    /// Round-boundary hook, called by the round sequencer's `eval`: fold
+    /// the round's spans into `phase.*_us` metrics series, sample the
+    /// scheduler's cumulative runtime counters into `sched.*` series, and
+    /// emit one [`EventKind::Trace`] event at virtual time `now`.
+    ///
+    /// The `phase.*` series are deterministic (pure functions of vclock
+    /// values); the `sched.*` series are *executor-dependent* runtime
+    /// stats and are deliberately kept out of [`Self::chrome_json`].
+    pub fn round_boundary(
+        &self,
+        metrics: &MetricsHub,
+        worker: &str,
+        round: u64,
+        round_start: VTime,
+        now: VTime,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let row = self.phase_row(round);
+        for (series, v) in [
+            ("phase.train_us", row.train_us),
+            ("phase.encode_us", row.encode_us),
+            ("phase.xfer_us", row.xfer_us),
+            ("phase.wait_us", row.wait_us),
+            ("phase.aggregate_us", row.aggregate_us),
+            ("phase.distribute_us", row.distribute_us),
+            ("phase.checkpoint_us", row.checkpoint_us),
+            ("phase.eval_us", row.eval_us),
+            ("phase.round_us", now.saturating_sub(round_start)),
+        ] {
+            metrics.record(worker, series, round, v as f64);
+        }
+        if let Some(st) = self.sched.get() {
+            for (series, v) in st.samples() {
+                metrics.record(worker, series, round, v as f64);
+            }
+        }
+        if let Some(n) = self.notifier.get() {
+            let mut p = Json::obj();
+            p.insert("round", Json::Num(round as f64));
+            p.insert("train_us", Json::Num(row.train_us as f64));
+            p.insert("xfer_us", Json::Num(row.xfer_us as f64));
+            p.insert("wait_us", Json::Num(row.wait_us as f64));
+            p.insert("aggregate_us", Json::Num(row.aggregate_us as f64));
+            p.insert("round_us", Json::Num(now.saturating_sub(round_start) as f64));
+            n.emit_at(EventKind::Trace, &self.job, now, Json::Obj(p));
+        }
+    }
+
+    /// Per-phase duration sums for one round.
+    pub fn phase_row(&self, round: u64) -> PhaseRow {
+        let mut row = PhaseRow::default();
+        for s in self.spans.lock().unwrap().iter() {
+            if s.round != round {
+                continue;
+            }
+            Self::fold_phase(&mut row, s);
+        }
+        row
+    }
+
+    /// Per-round phase rows for every round any span named.
+    pub fn phase_rounds(&self) -> BTreeMap<u64, PhaseRow> {
+        let mut out: BTreeMap<u64, PhaseRow> = BTreeMap::new();
+        for s in self.spans.lock().unwrap().iter() {
+            Self::fold_phase(out.entry(s.round).or_default(), s);
+        }
+        out
+    }
+
+    /// Whole-job per-phase totals (µs) — the cross-mechanism comparison
+    /// number (e.g. sync quorum vs FedBuff in EXPERIMENTS.md).
+    pub fn phase_totals(&self) -> BTreeMap<&'static str, u64> {
+        let mut out: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for s in self.spans.lock().unwrap().iter() {
+            let slot = match &*s.phase {
+                p if p == phase::TRAIN => phase::TRAIN,
+                p if p == phase::ENCODE => phase::ENCODE,
+                p if p == phase::XFER => phase::XFER,
+                p if p == phase::WAIT => phase::WAIT,
+                p if p == phase::AGGREGATE => phase::AGGREGATE,
+                p if p == phase::DISTRIBUTE => phase::DISTRIBUTE,
+                p if p == phase::CHECKPOINT => phase::CHECKPOINT,
+                p if p == phase::EVAL => phase::EVAL,
+                _ => continue,
+            };
+            *out.entry(slot).or_default() += s.dur();
+        }
+        out
+    }
+
+    fn fold_phase(row: &mut PhaseRow, s: &Span) {
+        let d = s.dur();
+        match &*s.phase {
+            p if p == phase::TRAIN => row.train_us += d,
+            p if p == phase::ENCODE => row.encode_us += d,
+            p if p == phase::XFER => row.xfer_us += d,
+            p if p == phase::WAIT => row.wait_us += d,
+            p if p == phase::AGGREGATE => row.aggregate_us += d,
+            p if p == phase::DISTRIBUTE => row.distribute_us += d,
+            p if p == phase::CHECKPOINT => row.checkpoint_us += d,
+            p if p == phase::EVAL => row.eval_us += d,
+            _ => {}
+        }
+    }
+
+    /// The per-round phase-breakdown table `flame trace` prints. The
+    /// `round_us` column is the sequencer-lane sum — the round's virtual
+    /// duration by construction.
+    pub fn phase_table(&self) -> String {
+        let mut s = format!(
+            "{:<6} {:>10} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9} {:>10}\n",
+            "round", "train_us", "xfer_us", "wait_us", "agg_us", "dist_us", "eval_us", "ckpt_us",
+            "round_us"
+        );
+        for (round, row) in self.phase_rounds() {
+            let _ = writeln!(
+                s,
+                "{:<6} {:>10} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9} {:>10}",
+                round,
+                row.train_us,
+                row.xfer_us,
+                row.wait_us,
+                row.aggregate_us,
+                row.distribute_us,
+                row.eval_us,
+                row.checkpoint_us,
+                row.round_us()
+            );
+        }
+        s
+    }
+
+    // ---------------------------------------------------- Chrome trace
+
+    /// Emit the Chrome trace-event JSON (`chrome://tracing` / Perfetto
+    /// loadable). Output is canonical: workers map to virtual thread ids
+    /// in sorted-name order, spans and counters sort by virtual time with
+    /// deterministic tie-breaks — so the bytes are identical across
+    /// runner-pool sizes and executors for the same job.
+    pub fn chrome_json(&self) -> String {
+        let mut spans = self.spans.lock().unwrap().clone();
+        spans.sort_by(|a, b| a.key().cmp(&b.key()));
+        let mut counters = self.counters.lock().unwrap().clone();
+        counters.sort_by(|a, b| {
+            (a.at, &a.worker, &a.name)
+                .cmp(&(b.at, &b.worker, &b.name))
+                .then(a.value.total_cmp(&b.value))
+        });
+
+        // virtual thread ids in sorted worker-name order
+        let mut workers: Vec<&str> = spans
+            .iter()
+            .map(|s| &*s.worker)
+            .chain(counters.iter().map(|c| &*c.worker))
+            .collect();
+        workers.sort_unstable();
+        workers.dedup();
+        let tid_of = |w: &str| workers.binary_search(&w).map(|i| i + 1).unwrap_or(0);
+
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |out: &mut String, first: &mut bool, ev: String| {
+            if !*first {
+                out.push(',');
+            }
+            *first = false;
+            out.push('\n');
+            out.push_str(&ev);
+        };
+        for w in &workers {
+            push(
+                &mut out,
+                &mut first,
+                format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\"args\":{{\"name\":{}}}}}",
+                    tid_of(w),
+                    esc(w)
+                ),
+            );
+        }
+        for s in &spans {
+            let peer = match &s.peer {
+                Some(p) => format!(",\"peer\":{}", esc(p)),
+                None => String::new(),
+            };
+            push(
+                &mut out,
+                &mut first,
+                format!(
+                    "{{\"name\":{},\"cat\":\"phase\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\
+                     \"tid\":{},\"args\":{{\"round\":{},\"bytes\":{}{}}}}}",
+                    esc(&s.phase),
+                    s.vstart,
+                    s.dur(),
+                    tid_of(&s.worker),
+                    s.round,
+                    s.bytes,
+                    peer
+                ),
+            );
+        }
+        for c in &counters {
+            push(
+                &mut out,
+                &mut first,
+                format!(
+                    "{{\"name\":{},\"ph\":\"C\",\"ts\":{},\"pid\":1,\"tid\":{},\"args\":{{\"value\":{}}}}}",
+                    esc(&c.name),
+                    c.at,
+                    tid_of(&c.worker),
+                    c.value
+                ),
+            );
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    // ----------------------------------------------------- checkpointing
+
+    /// Checkpoint encoding: spans and counters in canonical order, so the
+    /// snapshot bytes are interleaving-independent like the trace itself.
+    pub fn snapshot(&self) -> Json {
+        if !self.enabled {
+            return Json::Null;
+        }
+        let mut spans = self.spans.lock().unwrap().clone();
+        spans.sort_by(|a, b| a.key().cmp(&b.key()));
+        let rows: Vec<Json> = spans
+            .iter()
+            .map(|s| {
+                Json::Arr(vec![
+                    Json::Str(s.worker.to_string()),
+                    Json::Str(s.phase.to_string()),
+                    Json::Str(s.peer.as_deref().unwrap_or("").to_string()),
+                    json::from_u64_hex(s.round),
+                    json::from_u64_hex(s.vstart),
+                    json::from_u64_hex(s.vend),
+                    json::from_u64_hex(s.bytes),
+                ])
+            })
+            .collect();
+        let mut counters = self.counters.lock().unwrap().clone();
+        counters.sort_by(|a, b| {
+            (a.at, &a.worker, &a.name)
+                .cmp(&(b.at, &b.worker, &b.name))
+                .then(a.value.total_cmp(&b.value))
+        });
+        let crows: Vec<Json> = counters
+            .iter()
+            .map(|c| {
+                Json::Arr(vec![
+                    Json::Str(c.worker.to_string()),
+                    Json::Str(c.name.to_string()),
+                    json::from_u64_hex(c.at),
+                    Json::Num(c.value),
+                ])
+            })
+            .collect();
+        let mut o = Json::obj();
+        o.insert("spans", Json::Arr(rows));
+        o.insert("counters", Json::Arr(crows));
+        Json::Obj(o)
+    }
+
+    /// Replace this hub's contents with a [`Self::snapshot`] — resume
+    /// from checkpoint: the killed run's spans come back verbatim, and
+    /// the resumed half appends after them. No-op when disabled or the
+    /// snapshot is absent (pre-tracing checkpoints).
+    pub fn restore(&self, snap: &Json) {
+        if !self.enabled || matches!(snap, Json::Null) {
+            return;
+        }
+        let mut spans = self.spans.lock().unwrap();
+        spans.clear();
+        if let Some(rows) = snap.get("spans").as_arr() {
+            for row in rows {
+                let peer = row.idx(2).as_str().unwrap_or("");
+                spans.push(Span {
+                    worker: atom(row.idx(0).as_str().unwrap_or("")),
+                    phase: atom(row.idx(1).as_str().unwrap_or("")),
+                    peer: if peer.is_empty() { None } else { Some(atom(peer)) },
+                    round: json::as_u64_hex(row.idx(3)).unwrap_or(0),
+                    vstart: json::as_u64_hex(row.idx(4)).unwrap_or(0),
+                    vend: json::as_u64_hex(row.idx(5)).unwrap_or(0),
+                    bytes: json::as_u64_hex(row.idx(6)).unwrap_or(0),
+                });
+            }
+        }
+        drop(spans);
+        let mut counters = self.counters.lock().unwrap();
+        counters.clear();
+        if let Some(rows) = snap.get("counters").as_arr() {
+            for row in rows {
+                counters.push(CounterEvent {
+                    worker: atom(row.idx(0).as_str().unwrap_or("")),
+                    name: atom(row.idx(1).as_str().unwrap_or("")),
+                    at: json::as_u64_hex(row.idx(2)).unwrap_or(0),
+                    value: row.idx(3).as_f64().unwrap_or(0.0),
+                });
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for TraceHub {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceHub")
+            .field("enabled", &self.enabled)
+            .field("job", &self.job)
+            .field("spans", &self.span_count())
+            .finish()
+    }
+}
+
+/// Minimal JSON string escaping (worker/phase names are plain
+/// identifiers; this keeps the emitter safe for arbitrary ids anyway).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_hub_records_nothing() {
+        let t = TraceHub::disabled();
+        t.span("w0", phase::TRAIN, 0, 0, 100);
+        t.transfer("w0", "agg", 0, 100, 200, 64);
+        t.counter("w0", "x", 0, 1.0);
+        assert_eq!(t.span_count(), 0);
+        assert!(t.last_span_of("w0").is_none());
+        assert!(matches!(t.snapshot(), Json::Null));
+        assert_eq!(t.phase_row(0), PhaseRow::default());
+    }
+
+    #[test]
+    fn chrome_json_is_insertion_order_independent() {
+        let mk = |order_flip: bool| {
+            let t = TraceHub::for_job("j");
+            let a = || t.span("w0", phase::TRAIN, 0, 0, 100);
+            let b = || t.transfer("w1", "agg", 0, 100, 250, 64);
+            if order_flip {
+                b();
+                a();
+            } else {
+                a();
+                b();
+            }
+            t.counter("agg", "quorum", 250, 2.0);
+            t.chrome_json()
+        };
+        let x = mk(false);
+        let y = mk(true);
+        assert_eq!(x, y);
+        // well-formed trace-event JSON with one thread per worker
+        let parsed = Json::parse(&x).unwrap();
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        // 3 metadata + 2 spans + 1 counter
+        assert_eq!(events.len(), 6);
+        assert!(events.iter().any(|e| e.get("ph").as_str() == Some("X")));
+        assert!(events.iter().any(|e| e.get("ph").as_str() == Some("C")));
+    }
+
+    #[test]
+    fn phase_rows_sum_and_tile() {
+        let t = TraceHub::for_job("j");
+        t.span("agg", phase::DISTRIBUTE, 1, 1_000, 1_000);
+        t.span("agg", phase::WAIT, 1, 1_000, 5_000);
+        t.span("agg", phase::AGGREGATE, 1, 5_000, 6_000);
+        t.span("agg", phase::EVAL, 1, 6_000, 6_500);
+        t.span("t0", phase::TRAIN, 1, 1_200, 3_200);
+        t.transfer("t0", "agg", 1, 3_200, 4_900, 4096);
+        let row = t.phase_row(1);
+        assert_eq!(row.wait_us, 4_000);
+        assert_eq!(row.train_us, 2_000);
+        assert_eq!(row.xfer_us, 1_700);
+        assert_eq!(row.round_us(), 5_500);
+        let table = t.phase_table();
+        assert!(table.contains("round_us"), "{table}");
+        assert_eq!(table.lines().count(), 2);
+        assert_eq!(t.phase_totals()[phase::WAIT], 4_000);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let t = TraceHub::for_job("j");
+        t.span("w0", phase::TRAIN, 3, 10, 20);
+        t.transfer("w0", "agg", 3, 20, 45, 128);
+        t.counter("agg", "quorum", 45, 1.0);
+        let snap = t.snapshot();
+        let r = TraceHub::for_job("j");
+        r.restore(&snap);
+        assert_eq!(r.chrome_json(), t.chrome_json());
+        // restoring nothing is a no-op, not a clear
+        r.restore(&Json::Null);
+        assert_eq!(r.span_count(), 2);
+    }
+
+    #[test]
+    fn last_span_context_picks_latest_virtual_time() {
+        let t = TraceHub::for_job("j");
+        t.span("w0", phase::TRAIN, 0, 0, 100);
+        t.span("w0", phase::WAIT, 1, 100, 900);
+        t.span("w1", phase::TRAIN, 0, 0, 50);
+        let s = t.last_span_of("w0").unwrap();
+        assert!(s.contains("collect-wait"), "{s}");
+        assert!(s.contains("round 1"), "{s}");
+        assert!(t.last_span_of("nope").is_none());
+    }
+}

@@ -176,6 +176,53 @@ fn control_message_roundtrip_allocates_nothing() {
 }
 
 #[test]
+fn disabled_tracing_keeps_the_hot_path_allocation_free() {
+    // The observability layer must cost nothing when off (the default, and
+    // what `FLAME_TRACE=off` forces): a *bound but disabled* hub is the
+    // worst case — the delivery path takes the OnceLock hit and the
+    // enabled check on every message — and it still may not allocate.
+    let mgr = ChannelManager::new(Arc::new(VirtualNet::default()));
+    mgr.set_trace(flame::trace::TraceHub::disabled());
+    let a = mgr
+        .join(
+            "c",
+            "g",
+            "a",
+            "x",
+            Backend::InProc,
+            Arc::new(Mutex::new(VClock::default())),
+        )
+        .unwrap();
+    let b = mgr
+        .join(
+            "c",
+            "g",
+            "b",
+            "y",
+            Backend::InProc,
+            Arc::new(Mutex::new(VClock::default())),
+        )
+        .unwrap();
+    for i in 0..64u64 {
+        a.send("b", Message::control("ping", i)).unwrap();
+        b.recv("a").unwrap();
+    }
+    let n = 2_000u64;
+    let before = alloc_track::snapshot();
+    for i in 0..n {
+        a.send("b", Message::control("ping", i)).unwrap();
+        b.recv("a").unwrap();
+    }
+    let delta = alloc_track::delta(before, alloc_track::snapshot());
+    assert!(
+        delta.allocs < n / 20,
+        "{} allocations for {n} roundtrips with tracing disabled — the \
+         disabled-hub path is not free",
+        delta.allocs
+    );
+}
+
+#[test]
 fn broadcast_fanout_shares_not_copies() {
     // broadcasting a d-sized payload to k peers must allocate nothing in
     // steady state: the payload, kind and metadata are all Arc-shared.

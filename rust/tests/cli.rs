@@ -139,6 +139,29 @@ fn fedprox_smoke_runs_the_sdk_program() {
 }
 
 #[test]
+fn trace_smoke_emits_chrome_trace_json_and_phase_csv() {
+    let dir = std::env::temp_dir().join(format!("flame-trace-cli-{}", std::process::id()));
+    let out = dir.join("trace.json");
+    let (ok, stdout, stderr) = flame(&[
+        "trace", "--trainers", "3", "--rounds", "2", "--per-shard", "24", "--test-n", "48",
+        "--out", out.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    // the per-round phase table prints with its header row
+    assert!(stdout.contains("round_us"), "{stdout}");
+    // the trace file is valid trace-event JSON with real content
+    let raw = std::fs::read_to_string(&out).unwrap();
+    let parsed = flame::json::Json::parse(&raw).expect("trace-event JSON must parse");
+    let n = parsed.get("traceEvents").as_arr().map(|a| a.len()).unwrap_or(0);
+    assert!(n > 5, "only {n} trace events");
+    // and the phase CSV rides alongside it
+    let csv = std::fs::read_to_string(dir.join("trace_phases.csv")).unwrap();
+    assert!(csv.starts_with("round,train_us"), "{csv}");
+    assert_eq!(csv.lines().count(), 3, "{csv}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn scale_smoke_on_the_cooperative_fabric() {
     let (ok, stdout, stderr) = flame(&[
         "scale", "--trainers", "60", "--groups", "6", "--rounds", "2",

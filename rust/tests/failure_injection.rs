@@ -74,6 +74,7 @@ fn panicking_worker_is_contained_by_the_agent_sandbox() {
         codec: None,
         ckpt: None,
         restore: None,
+        trace: flame::trace::TraceHub::disabled(),
     });
     let trainer_cfg = cfgs.iter().find(|c| c.role == "trainer").unwrap().clone();
     // env build fails at shard resolution inside the trainer program build
@@ -213,7 +214,8 @@ fn torn_checkpoint_tail_restarts_from_the_previous_epoch() {
         let sink = CkptSink::new("tj", CkptPolicy::every_round(), true);
         sink.bind_store(store.clone());
         sink.publish("w0", Json::Str("r1".into()));
-        sink.commit(1, 0, Json::Str("g1".into()), Json::Null).unwrap();
+        sink.commit(1, 0, Json::Str("g1".into()), Json::Null, Json::Null)
+            .unwrap();
         store.flush().unwrap();
     }
     // crash mid-epoch-2: a partial record with no terminating newline
@@ -234,7 +236,8 @@ fn torn_checkpoint_tail_restarts_from_the_previous_epoch() {
     let sink = CkptSink::new("tj", CkptPolicy::every_round(), true);
     sink.bind_store(store.clone());
     sink.publish("w0", Json::Str("r2".into()));
-    sink.commit(2, 1, Json::Str("g2".into()), Json::Null).unwrap();
+    sink.commit(2, 1, Json::Str("g2".into()), Json::Null, Json::Null)
+        .unwrap();
     drop(store);
     let store = Arc::new(Store::open(&path).unwrap());
     let ck = load_latest(&store, "tj").unwrap().unwrap();

@@ -1,0 +1,184 @@
+//! Virtual-time trace determinism: the Chrome trace-event JSON a traced
+//! job emits must be **byte-identical** across runner-pool sizes and
+//! executors, and a killed-and-resumed job's trace must replay the
+//! pre-kill prefix verbatim (the span snapshot rides the round-boundary
+//! checkpoints).
+//!
+//! Spans are stamped entirely from worker vclocks and net-model arrival
+//! times, recorded in interleaving-dependent insertion order but emitted
+//! in canonical sort order — so any scheduler or executor leak into the
+//! trace shows up here as a byte diff.
+
+use std::sync::Arc;
+
+use flame::channel::Backend;
+use flame::control::{Controller, Executor, JobOptions, JobReport};
+use flame::controlplane::{checkpoint, CkptPolicy, JobManager};
+use flame::data::Partition;
+use flame::json::Json;
+use flame::runtime::ComputeTimeModel;
+use flame::store::Store;
+use flame::tag::{JobSpec, TopologyEvent};
+use flame::topo;
+
+fn traced_spec(name: &str, trainers: usize, rounds: u64) -> JobSpec {
+    topo::classical(trainers, Backend::P2p)
+        .name(name)
+        .rounds(rounds)
+        .set("lr", Json::Num(0.5))
+        .set("local_steps", 1usize)
+        .set("seed", 11u64)
+        .set("trace", "on")
+        .build()
+}
+
+fn opts(executor: Executor) -> JobOptions {
+    JobOptions::mock()
+        .with_time(ComputeTimeModel::FixedPerStep(2_000))
+        .with_data(32, 64, Partition::Dirichlet(0.3), 11)
+        .with_executor(executor)
+}
+
+/// A churn-scripted traced job: one trainer leaves at the first virtual
+/// instant, so the trace covers eviction alongside the steady rounds.
+fn churn_job(executor: Executor) -> JobReport {
+    let events = vec![TopologyEvent::Leave {
+        at_us: 1,
+        workers: vec!["trc-trainer-0".into()],
+    }];
+    Controller::new(Arc::new(Store::in_memory()))
+        .submit(traced_spec("trc", 5, 3), opts(executor).with_events(events))
+        .expect("traced churn job failed")
+}
+
+#[test]
+fn chrome_trace_is_byte_identical_across_runner_pools() {
+    let base = churn_job(Executor::Cooperative { runners: 1 });
+    let json = base.trace.chrome_json();
+    assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+    assert!(base.trace.span_count() > 0);
+    for runners in [2usize, 8] {
+        let r = churn_job(Executor::Cooperative { runners });
+        assert_eq!(
+            json,
+            r.trace.chrome_json(),
+            "trace diverges at runners={runners}"
+        );
+    }
+}
+
+#[test]
+fn chrome_trace_is_byte_identical_across_executors() {
+    // plain (event-free) job: thread-per-worker cannot run scripted
+    // topology events, so executor parity is checked on the steady shape
+    let run = |executor| {
+        Controller::new(Arc::new(Store::in_memory()))
+            .submit(traced_spec("trx", 4, 3), opts(executor))
+            .expect("traced job failed")
+    };
+    let coop = run(Executor::Cooperative { runners: 0 });
+    let threads = run(Executor::ThreadPerWorker);
+    assert_eq!(coop.trace.chrome_json(), threads.trace.chrome_json());
+    // the deterministic phase series match too (sched.* series are
+    // executor-dependent by design and excluded from this comparison)
+    for s in [
+        "phase.round_us",
+        "phase.train_us",
+        "phase.wait_us",
+        "phase.xfer_us",
+        "phase.aggregate_us",
+    ] {
+        assert_eq!(coop.metrics.series(s), threads.metrics.series(s), "{s}");
+    }
+}
+
+#[test]
+fn trace_json_parses_and_phases_tile_the_round() {
+    let r = churn_job(Executor::Cooperative { runners: 0 });
+    let parsed = Json::parse(&r.trace.chrome_json()).expect("trace must be valid JSON");
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(events.len() > 10, "suspiciously small trace: {}", events.len());
+    // every event carries the trace-event 'ph' discriminator
+    assert!(events.iter().all(|e| e.get("ph").as_str().is_some()));
+    // the sequencer-lane sum is the round's virtual duration
+    let round_us = r.metrics.series("phase.round_us");
+    assert_eq!(round_us.len(), 3);
+    for (round, v) in &round_us {
+        let row = r.trace.phase_row(*round);
+        assert_eq!(*v as u64, row.round_us(), "round {round}: {row:?}");
+    }
+}
+
+#[test]
+fn resumed_trace_replays_the_prekill_prefix() {
+    let fleet_opts = || {
+        JobOptions::mock()
+            .with_time(ComputeTimeModel::FixedPerStep(2_000))
+            .with_data(32, 64, Partition::Dirichlet(0.3), 11)
+    };
+    let spans_of = |snap: &Json| -> Vec<String> {
+        snap.get("spans")
+            .as_arr()
+            .map(|rows| rows.iter().map(|r| r.dump()).collect())
+            .unwrap_or_default()
+    };
+
+    // oracle: same traced job, checkpointing every round, never killed
+    let store_o = Arc::new(Store::in_memory());
+    let mut m = JobManager::new(store_o.clone());
+    let id_o = m
+        .submit(
+            traced_spec("trr", 4, 4),
+            fleet_opts().with_ckpt(CkptPolicy::every_round()),
+        )
+        .unwrap();
+    let r = m.run_fleet(2).unwrap();
+    assert_eq!(r.completed, 1, "{}", r.summary());
+    let oracle_ck = checkpoint::load_latest(&store_o, &id_o)
+        .unwrap()
+        .expect("oracle checkpointed");
+    assert!(!matches!(oracle_ck.trace, Json::Null), "oracle trace absent");
+
+    // kill at boundary 2, then resume over the same store
+    let store = Arc::new(Store::in_memory());
+    let mut m = JobManager::new(store.clone());
+    let id = m
+        .submit(
+            traced_spec("trr", 4, 4),
+            fleet_opts().with_ckpt(CkptPolicy::kill_at(2)),
+        )
+        .unwrap();
+    let r = m.run_fleet(2).unwrap();
+    assert_eq!(r.failed, 1, "kill did not fire: {}", r.summary());
+    let killed_ck = checkpoint::load_latest(&store, &id)
+        .unwrap()
+        .expect("checkpoint survived the kill");
+    let killed_spans = spans_of(&killed_ck.trace);
+    assert!(!killed_spans.is_empty(), "killed run recorded no spans");
+
+    let mut m = JobManager::new(store.clone());
+    m.resume(&id, fleet_opts().with_ckpt(CkptPolicy::every_round()))
+        .unwrap();
+    let r = m.run_fleet(2).unwrap();
+    assert_eq!(r.completed, 1, "resume failed: {}", r.summary());
+    let resumed_ck = checkpoint::load_latest(&store, &id)
+        .unwrap()
+        .expect("resumed run checkpointed");
+
+    // the resumed run's final trace is byte-identical to the oracle's...
+    assert_eq!(
+        resumed_ck.trace.dump(),
+        oracle_ck.trace.dump(),
+        "resumed trace diverged from the unkilled oracle"
+    );
+    // ...and the pre-kill prefix came back verbatim: every span the
+    // killed run checkpointed appears in the resumed trace
+    let resumed_spans = spans_of(&resumed_ck.trace);
+    for s in &killed_spans {
+        assert!(
+            resumed_spans.contains(s),
+            "pre-kill span lost across resume: {s}"
+        );
+    }
+    assert!(resumed_spans.len() > killed_spans.len());
+}
