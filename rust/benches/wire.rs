@@ -1,0 +1,173 @@
+//! Wire-format bench: frames/second and bytes/second through the binary
+//! encode/decode path, and what crossing a process boundary costs
+//! relative to an in-process fabric hop.
+//!
+//! Three measurements over a pooled d-float `weights` frame:
+//!
+//! * **encode** — `encode_into` onto recycled [`BufSlab`] pages (the
+//!   steady-state sender path; `rust/tests/alloc_regression.rs` pins it
+//!   allocation-free),
+//! * **decode** — checksum verify + full [`decode_from`] rebuild (the
+//!   receiver path),
+//! * **in-proc hop** — the same payload through a real
+//!   `ChannelManager` send/recv, the baseline the TCP substrate
+//!   replaces; the ratio is the serialization overhead a `backend:
+//!   "tcp"` deployment pays per message before the kernel ever sees a
+//!   byte.
+//!
+//! ```bash
+//! cargo bench --bench wire           # full sweep
+//! cargo bench --bench wire -- --test   # CI smoke
+//! ```
+//!
+//! Prints the table and writes `BENCH_wire.json` in the working
+//! directory.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use flame::alloc_track::bench_smoke as smoke;
+use flame::channel::{Backend, ChannelManager, Message, Payload};
+use flame::net::{VClock, VirtualNet};
+use flame::wire::{decode_from, encode_into, BufSlab};
+
+/// A bench value that is about to be persisted: must be a real, finite
+/// measurement. Dies loudly rather than writing nulls/NaNs into the JSON.
+fn checked(name: &str, v: f64) -> f64 {
+    assert!(
+        v.is_finite() && v >= 0.0,
+        "bench value '{name}' is {v} — refusing to write a null/NaN result \
+         into BENCH_wire.json; fix the measurement instead"
+    );
+    v
+}
+
+fn main() {
+    let (d, frames, warmup) = if smoke() {
+        (256usize, 2_000u64, 200u64)
+    } else {
+        (4_096usize, 50_000u64, 2_000u64)
+    };
+    let payload = Arc::new(vec![0.125f32; d]);
+    let msg = Message::floats("weights", 1, payload.clone());
+    let route = flame::intern::route("", "wirebench", "g").unwrap();
+    let slab = BufSlab::new();
+
+    // ------------------------------------------------------------ encode
+    let mut frame_bytes = 0usize;
+    for r in 0..warmup {
+        let mut page = slab.take();
+        encode_into(&mut page, route, "t0000", "agg", r, &msg).unwrap();
+        frame_bytes = page.len();
+        slab.recycle(page);
+    }
+    let t0 = Instant::now();
+    for r in 0..frames {
+        let mut page = slab.take();
+        encode_into(&mut page, route, "t0000", "agg", warmup + r, &msg).unwrap();
+        slab.recycle(page);
+    }
+    let encode_wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let encode_fps = frames as f64 / encode_wall;
+    let encode_gbps = (frames as usize * frame_bytes) as f64 / encode_wall / 1e9;
+    let stats = slab.stats();
+
+    // ------------------------------------------------------------ decode
+    let mut page = slab.take();
+    encode_into(&mut page, route, "t0000", "agg", 7, &msg).unwrap();
+    let wire = page.clone();
+    slab.recycle(page);
+    for _ in 0..warmup {
+        let f = decode_from(&wire).unwrap();
+        assert!(matches!(f.msg.payload, Payload::Floats(_)));
+    }
+    let t0 = Instant::now();
+    let mut decoded = 0u64;
+    for _ in 0..frames {
+        let f = decode_from(&wire).unwrap();
+        if let Payload::Floats(v) = &f.msg.payload {
+            decoded += v.len() as u64;
+        }
+    }
+    let decode_wall = t0.elapsed().as_secs_f64().max(1e-9);
+    assert_eq!(decoded, frames * d as u64, "decode dropped payload data");
+    let decode_fps = frames as f64 / decode_wall;
+    let decode_gbps = (frames as usize * frame_bytes) as f64 / decode_wall / 1e9;
+
+    // ----------------------------------------------------- in-proc hop
+    let mgr = ChannelManager::new(Arc::new(VirtualNet::default()));
+    let mk = |id: &str, role: &str| {
+        mgr.join(
+            "wirebench-hop",
+            "g",
+            id,
+            role,
+            Backend::InProc,
+            Arc::new(Mutex::new(VClock::default())),
+        )
+        .unwrap()
+    };
+    let a = mk("t0000", "trainer");
+    let b = mk("agg", "aggregator");
+    for r in 0..warmup {
+        a.send("agg", Message::floats("weights", r, payload.clone())).unwrap();
+        b.recv("t0000").unwrap();
+    }
+    let t0 = Instant::now();
+    for r in 0..frames {
+        a.send("agg", Message::floats("weights", warmup + r, payload.clone())).unwrap();
+        b.recv("t0000").unwrap();
+    }
+    let hop_wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let hop_mps = frames as f64 / hop_wall;
+    // encode+decode per frame vs one in-process hop: the serialization
+    // tax of leaving the process
+    let codec_ns = (encode_wall + decode_wall) / frames as f64 * 1e9;
+    let hop_ns = hop_wall / frames as f64 * 1e9;
+    let overhead = codec_ns / hop_ns.max(1e-9);
+
+    println!("wire codec — d={d} floats, {frame_bytes}-byte frames, {frames} frames\n");
+    println!("{:<14} {:>14} {:>12}", "path", "frames/sec", "GB/sec");
+    println!("{:<14} {:>14.0} {:>12.3}", "encode", encode_fps, encode_gbps);
+    println!("{:<14} {:>14.0} {:>12.3}", "decode", decode_fps, decode_gbps);
+    println!(
+        "\nin-proc hop: {hop_mps:.0} msgs/sec; encode+decode = {codec_ns:.0} ns/frame \
+         vs {hop_ns:.0} ns/hop ({overhead:.2}x the in-process fabric hop)"
+    );
+    println!(
+        "slab: {} fresh page(s), {} reuses across {} encodes",
+        stats.fresh,
+        stats.reused,
+        warmup + frames
+    );
+    assert!(
+        stats.fresh <= 2,
+        "steady-state encode kept allocating fresh pages ({} of them)",
+        stats.fresh
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"wire\",\n  \"scenario\": \"length-prefixed checksummed frame of a \
+         pooled {d}-float weights message, {frames} frames after {warmup} warmup on recycled \
+         BufSlab pages; in-proc hop = same payload through ChannelManager send/recv\",\n  \
+         \"status\": \"regenerate with `cargo bench --bench wire` — this file is overwritten \
+         in place\",\n  \"frame_bytes\": {frame_bytes},\n  \"encode\": {{\"frames_per_sec\": \
+         {encode_fps:.0}, \"gbytes_per_sec\": {encode_gbps:.3}}},\n  \"decode\": \
+         {{\"frames_per_sec\": {decode_fps:.0}, \"gbytes_per_sec\": {decode_gbps:.3}}},\n  \
+         \"inproc_hop\": {{\"msgs_per_sec\": {hop_mps:.0}}},\n  \"codec_vs_hop\": \
+         {{\"codec_ns_per_frame\": {codec_ns:.0}, \"hop_ns\": {hop_ns:.0}, \"overhead_x\": \
+         {overhead:.3}}},\n  \"slab\": {{\"fresh\": {fresh}, \"reused\": {reused}}}\n}}\n",
+        encode_fps = checked("encode_fps", encode_fps),
+        encode_gbps = checked("encode_gbps", encode_gbps),
+        decode_fps = checked("decode_fps", decode_fps),
+        decode_gbps = checked("decode_gbps", decode_gbps),
+        hop_mps = checked("hop_mps", hop_mps),
+        codec_ns = checked("codec_ns", codec_ns),
+        hop_ns = checked("hop_ns", hop_ns),
+        overhead = checked("overhead", overhead),
+        fresh = stats.fresh,
+        reused = stats.reused,
+    );
+    std::fs::write("BENCH_wire.json", json).expect("write BENCH_wire.json");
+    println!("\nwrote BENCH_wire.json");
+}

@@ -106,6 +106,12 @@ pub enum Backend {
     /// when peers can't reach each other directly (NAT/firewall), at the
     /// price of WAN traffic through the broker — exactly the §6.2 trade-off.
     Broker,
+    /// Real length-prefixed TCP streams between OS processes (see
+    /// [`crate::wire`]). Virtual-time cost is one direct hop, identical to
+    /// [`Backend::P2p`] — which is what makes the in-process run of a
+    /// `backend: "tcp"` job the byte-parity oracle for the multi-process
+    /// deployment.
+    Tcp,
 }
 
 /// Marker error: this worker was retired from the deployment (evicted by
@@ -133,13 +139,33 @@ pub fn is_departed(err: &anyhow::Error) -> bool {
 }
 
 impl Backend {
+    /// Every substrate name [`Self::parse`] accepts, with the transport it
+    /// maps onto. Aliases are real-world substrates whose delivery shape
+    /// matches an implemented transport (gRPC is a direct link; MQTT and
+    /// Kafka are store-and-forward hubs); the requested name is preserved
+    /// through the job spec as [`crate::tag::Channel::substrate`].
+    pub const SUBSTRATES: &'static [(&'static str, Backend)] = &[
+        ("broker", Backend::Broker),
+        ("grpc", Backend::P2p),
+        ("inproc", Backend::InProc),
+        ("kafka", Backend::Broker),
+        ("local", Backend::InProc),
+        ("mqtt", Backend::Broker),
+        ("p2p", Backend::P2p),
+        ("tcp", Backend::Tcp),
+    ];
+
     pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s {
-            "inproc" | "local" => Backend::InProc,
-            "p2p" | "grpc" => Backend::P2p,
-            "broker" | "mqtt" | "kafka" => Backend::Broker,
-            other => bail!("unknown backend '{other}'"),
-        })
+        match Self::SUBSTRATES.iter().find(|(n, _)| *n == s) {
+            Some((_, b)) => Ok(*b),
+            None => {
+                let valid: Vec<&str> = Self::SUBSTRATES.iter().map(|(n, _)| *n).collect();
+                bail!(
+                    "unknown backend '{s}' (valid backends: {})",
+                    valid.join(", ")
+                )
+            }
+        }
     }
 
     pub fn name(&self) -> &'static str {
@@ -147,6 +173,7 @@ impl Backend {
             Backend::InProc => "inproc",
             Backend::P2p => "p2p",
             Backend::Broker => "broker",
+            Backend::Tcp => "tcp",
         }
     }
 }
@@ -351,6 +378,11 @@ fn best_index(q: &VecDeque<Envelope>, spec: &MatchSpec) -> Option<usize> {
 struct Member {
     mailbox: Mailbox,
     role: Arc<str>,
+    /// A shadow member hosted on another OS process ([`ChannelManager::
+    /// join_remote`]): counted by `ends()`/quorum exactly like a local
+    /// member, but deliveries to it ship through the bound [`Transport`]
+    /// instead of its (unused) local mailbox.
+    remote: bool,
 }
 
 /// Membership of one `(scope, channel, group)` route. Lives behind an
@@ -358,6 +390,9 @@ struct Member {
 /// counter versions membership for the handles' peer-list caches.
 struct ChannelShared {
     backend: Backend,
+    /// The packed route this membership lives under — what remote
+    /// deliveries carry as their wire key.
+    route: Route,
     /// Precomputed broker hub node name (`hub:<scope::>channel`).
     hub: Arc<str>,
     members: RwLock<HashMap<Arc<str>, Member>>,
@@ -373,6 +408,34 @@ impl ChannelShared {
 
 type ShardMap = HashMap<Route, Arc<ChannelShared>>;
 
+/// A real inter-process message carrier bound behind the [`Backend`]
+/// abstraction (implemented by [`crate::wire::TcpBackend`]). The channel
+/// layer computes the virtual arrival time exactly as it does for local
+/// members — the transfer functions are pure, so sender and receiver
+/// agree on it — then hands the framed message to the transport; the
+/// receiving process re-enqueues it through
+/// [`ChannelManager::deliver_remote`].
+pub trait Transport: Send + Sync {
+    /// Ship `msg` to the process hosting `to`. Implementations must
+    /// preserve per-sender FIFO order (message selection breaks exact
+    /// `(arrival, sender)` ties by sequence number, which on the receiver
+    /// reflects reception order — FIFO streams keep that equal to the
+    /// sender's program order, preserving byte-determinism). Delivery to a
+    /// dead peer is not an error: peer death surfaces through the
+    /// [`Departed`]/evict machinery, not through send failures.
+    fn ship(
+        &self,
+        route: Route,
+        from: &Arc<str>,
+        to: &str,
+        arrival: VTime,
+        msg: &Message,
+    ) -> Result<()>;
+
+    /// Substrate name for diagnostics.
+    fn name(&self) -> &'static str;
+}
+
 /// The shared mailbox/membership substrate: membership shards, the global
 /// delivery sequence counter, and the virtual network. One fabric can be
 /// shared by **many jobs** (the multi-job control plane), each seeing it
@@ -381,6 +444,10 @@ struct Fabric {
     net: Arc<VirtualNet>,
     shards: Vec<RwLock<ShardMap>>,
     seq: AtomicU64,
+    /// Bound once by a multi-process deployment; local-only fabrics never
+    /// set it and pay one `OnceLock` load per delivery to a remote member
+    /// (i.e. never — remote members only exist once a transport is bound).
+    transport: OnceLock<Arc<dyn Transport>>,
 }
 
 impl Fabric {
@@ -421,6 +488,7 @@ impl ChannelManager {
                 net,
                 shards: (0..N_SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
                 seq: AtomicU64::new(0),
+                transport: OnceLock::new(),
             }),
             scope: atom(""),
             scope_sym: crate::intern::sym(""),
@@ -523,25 +591,7 @@ impl ChannelManager {
                  rejecting join of '{worker}' on '{channel}/{group}'"
             )
         })?;
-        let shared = {
-            let mut g = self.fabric.shard(r).write().unwrap();
-            g.entry(r)
-                .or_insert_with(|| {
-                    Arc::new(ChannelShared {
-                        backend,
-                        hub: atom(&format!("hub:{}", self.qualified(channel))),
-                        members: RwLock::new(HashMap::new()),
-                        epoch: AtomicU64::new(0),
-                    })
-                })
-                .clone()
-        };
-        if shared.backend != backend {
-            bail!(
-                "channel '{channel}' group '{group}' already uses backend {:?}",
-                shared.backend
-            );
-        }
+        let shared = self.shared_for(r, channel, backend)?;
         let me = atom(worker);
         let mailbox: Mailbox = {
             let mut members = shared.members.write().unwrap();
@@ -554,6 +604,7 @@ impl ChannelManager {
                 Member {
                     mailbox: mailbox.clone(),
                     role: atom(role),
+                    remote: false,
                 },
             );
             // a (re)join supersedes any earlier departure: reopen the
@@ -586,6 +637,122 @@ impl ChannelManager {
                 roles: HashMap::new(),
             }),
         })
+    }
+
+    /// Resolve (or create) the membership record of route `r`, checking
+    /// backend consistency — shared by local joins and remote shadow
+    /// joins.
+    fn shared_for(&self, r: Route, channel: &str, backend: Backend) -> Result<Arc<ChannelShared>> {
+        let shared = {
+            let mut g = self.fabric.shard(r).write().unwrap();
+            g.entry(r)
+                .or_insert_with(|| {
+                    Arc::new(ChannelShared {
+                        backend,
+                        route: r,
+                        hub: atom(&format!("hub:{}", self.qualified(channel))),
+                        members: RwLock::new(HashMap::new()),
+                        epoch: AtomicU64::new(0),
+                    })
+                })
+                .clone()
+        };
+        if shared.backend != backend {
+            bail!(
+                "channel '{channel}' already uses backend {:?}",
+                shared.backend
+            );
+        }
+        Ok(shared)
+    }
+
+    /// Bind the inter-process transport (idempotent; first bind wins).
+    /// Deliveries addressed to members registered via
+    /// [`Self::join_remote`] ship through it instead of a local mailbox.
+    pub fn bind_transport(&self, t: Arc<dyn Transport>) {
+        let _ = self.fabric.transport.set(t);
+    }
+
+    /// Register `worker` as a **shadow member** of `(channel, group)`: a
+    /// worker hosted on another OS process. It counts toward `ends()`,
+    /// role membership and quorum targets exactly like a local member —
+    /// which is what keeps every process's membership view (and therefore
+    /// collect barriers and broadcast fan-outs) identical — but mail
+    /// addressed to it is handed to the bound [`Transport`]. The
+    /// multi-process deployer registers every non-local worker of the
+    /// expanded job before any worker starts, mirroring the two-phase
+    /// deploy ordering.
+    pub fn join_remote(
+        &self,
+        channel: &str,
+        group: &str,
+        worker: &str,
+        role: &str,
+        backend: Backend,
+    ) -> Result<()> {
+        let r = self.route_of(channel, group).ok_or_else(|| {
+            anyhow!(
+                "fabric symbol space exhausted (> 2^21 distinct names): \
+                 rejecting remote join of '{worker}' on '{channel}/{group}'"
+            )
+        })?;
+        let shared = self.shared_for(r, channel, backend)?;
+        {
+            let mut members = shared.members.write().unwrap();
+            if let Some(m) = members.get(worker) {
+                if !m.remote {
+                    bail!(
+                        "worker '{worker}' is already a local member of '{channel}/{group}' \
+                         — it cannot also be remote"
+                    );
+                }
+                return Ok(()); // idempotent remote re-join
+            }
+            members.insert(
+                atom(worker),
+                Member {
+                    mailbox: MailboxCore::new(),
+                    role: atom(role),
+                    remote: true,
+                },
+            );
+        }
+        shared.bump();
+        Ok(())
+    }
+
+    /// Enqueue a message that arrived over the wire from another process
+    /// into the local target's mailbox — the receiving half of
+    /// [`Transport::ship`]. The arrival time was computed on the sender
+    /// (the virtual-net transfer functions are pure, so both sides agree);
+    /// the sequence number is assigned here, in reception order, which a
+    /// FIFO per-sender stream keeps equal to the sender's program order —
+    /// the only property `(arrival, sender, seq)` selection needs.
+    pub fn deliver_remote(
+        &self,
+        route: Route,
+        from: &Arc<str>,
+        to: &str,
+        arrival: VTime,
+        msg: Message,
+    ) -> Result<()> {
+        let shared = self
+            .fabric
+            .lookup(route)
+            .with_context(|| format!("wire delivery on unknown route {route:?}"))?;
+        let seq = self.fabric.seq.fetch_add(1, Ordering::Relaxed);
+        let mailbox = {
+            let members = shared.members.read().unwrap();
+            let member = members.get(to).with_context(|| {
+                format!("wire delivery for '{to}', which is not joined on this process")
+            })?;
+            if member.remote {
+                bail!("wire delivery for '{to}', which is remote here too (bad roster)");
+            }
+            member.mailbox.clone()
+        };
+        Self::enqueue(&mailbox, from, msg, arrival, seq);
+        Ok(())
     }
 
     /// Retire `worker` from every channel group it joined (a `leave`
@@ -777,7 +944,10 @@ impl ChannelManager {
         let bytes = msg.size_bytes();
         let arrival = match backend {
             Backend::InProc => from_clock,
-            Backend::P2p => {
+            // Tcp charges exactly one direct hop, same as P2p: identical
+            // virtual-time arithmetic is what makes the in-process run of
+            // a `backend: "tcp"` job the multi-process byte-parity oracle.
+            Backend::P2p | Backend::Tcp => {
                 from_clock + self.fabric.net.transfer_at_us(from, to, bytes, from_clock)
             }
             Backend::Broker => {
@@ -795,17 +965,36 @@ impl ChannelManager {
         if let Some(t) = self.trace.get() {
             t.transfer(from, to, msg.round, from_clock, arrival, bytes);
         }
-        let seq = self.fabric.seq.fetch_add(1, Ordering::Relaxed);
-        let mailbox = {
+        let (mailbox, remote) = {
             let members = shared.members.read().unwrap();
-            members
-                .get(to)
-                .with_context(|| {
-                    format!("peer '{to}' not joined on '{}/{}'", diag.0, diag.1)
-                })?
-                .mailbox
-                .clone()
+            let member = members.get(to).with_context(|| {
+                format!("peer '{to}' not joined on '{}/{}'", diag.0, diag.1)
+            })?;
+            (member.mailbox.clone(), member.remote)
         };
+        if remote {
+            // the target lives on another OS process: hand the framed
+            // message (with its already-computed arrival) to the wire.
+            // Best-effort: a dead peer surfaces through evict/Departed,
+            // not through send failures.
+            self.fabric
+                .transport
+                .get()
+                .with_context(|| {
+                    format!("remote member '{to}' on '{}/{}' but no transport bound", diag.0, diag.1)
+                })?
+                .ship(shared.route, from, to, arrival, &msg)?;
+            return Ok(arrival);
+        }
+        let seq = self.fabric.seq.fetch_add(1, Ordering::Relaxed);
+        Self::enqueue(&mailbox, from, msg, arrival, seq);
+        Ok(arrival)
+    }
+
+    /// The delivery tail shared by local sends and wire receptions: check
+    /// the parked wait-spec, push the envelope, wake. Only the target
+    /// mailbox's own lock is taken; nothing here allocates.
+    fn enqueue(mailbox: &Mailbox, from: &Arc<str>, msg: Message, arrival: VTime, seq: u64) {
         let waker = {
             let mut g = mailbox.inner.lock().unwrap();
             let satisfied = match &mut g.waiting {
@@ -832,7 +1021,6 @@ impl ChannelManager {
         if let Some(w) = waker {
             w.wake(arrival);
         }
-        Ok(arrival)
     }
 }
 
@@ -1646,14 +1834,18 @@ mod tests {
 
     #[test]
     fn backend_parse_roundtrips_and_aliases() {
-        for b in [Backend::InProc, Backend::P2p, Backend::Broker] {
+        for b in [Backend::InProc, Backend::P2p, Backend::Broker, Backend::Tcp] {
             assert_eq!(Backend::parse(b.name()).unwrap(), b);
         }
         assert_eq!(Backend::parse("local").unwrap(), Backend::InProc);
         assert_eq!(Backend::parse("grpc").unwrap(), Backend::P2p);
         assert_eq!(Backend::parse("mqtt").unwrap(), Backend::Broker);
         assert_eq!(Backend::parse("kafka").unwrap(), Backend::Broker);
-        assert!(Backend::parse("carrier-pigeon").is_err());
+        let err = Backend::parse("carrier-pigeon").unwrap_err().to_string();
+        // unknown substrates must name the full valid list
+        for (n, _) in Backend::SUBSTRATES {
+            assert!(err.contains(n), "error '{err}' missing substrate '{n}'");
+        }
     }
 
     #[test]

@@ -794,12 +794,18 @@ impl Controller {
                 .map(|w| (format!("{job_id}/{}", w.id), w.to_json())),
         )?;
         let db_write_s = t_db.elapsed().as_secs_f64();
-        // (step 5/6) deploy-event -> deployers create pods
-        self.notifier.emit(
-            EventKind::Deploy,
-            &job_id,
-            Json::from(workers.len()),
-        );
+        // (step 5/6) deploy-event -> deployers create pods. The payload
+        // reports each channel's *requested* substrate (which may alias
+        // onto an implemented transport, e.g. "mqtt" on the broker).
+        let mut substrates = Json::obj();
+        for c in &job.spec.channels {
+            substrates.insert(c.name.as_str(), c.substrate.as_str());
+        }
+        let mut deploy_payload = Json::obj();
+        deploy_payload.insert("workers", workers.len());
+        deploy_payload.insert("substrates", substrates);
+        self.notifier
+            .emit(EventKind::Deploy, &job_id, Json::Obj(deploy_payload));
         // Two-phase deployment: `deploy` builds every worker environment
         // (joining channels) BEFORE `start` launches anything, so roles
         // observe complete channel membership — the equivalent of the

@@ -291,8 +291,17 @@ impl FleetCore {
             g.slots[idx].runtime = Some(job.clone());
             g.slots[idx].prior_pods = prior_pods;
         }
+        // deploy payload names each channel's requested substrate, same
+        // shape as the single-job controller's deploy event
+        let mut substrates = Json::obj();
+        for c in &job.spec.channels {
+            substrates.insert(c.name.as_str(), c.substrate.as_str());
+        }
+        let mut deploy_payload = Json::obj();
+        deploy_payload.insert("workers", workers.len());
+        deploy_payload.insert("substrates", substrates);
         self.notifier
-            .emit(EventKind::Deploy, &id, Json::from(workers.len()));
+            .emit(EventKind::Deploy, &id, Json::Obj(deploy_payload));
         let mut stage_error = None;
         for w in &workers {
             if let Err(e) = deployer.deploy(w.clone(), &job, self.notifier.clone()) {

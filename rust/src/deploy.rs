@@ -163,6 +163,13 @@ impl SimDeployer {
             sched: Scheduler::new(),
         }
     }
+
+    /// The underlying scheduler (shared; clones see the same fabric). The
+    /// multi-process worker host uses this to declare the wire transport
+    /// as an external wake source before running the pool.
+    pub fn sched(&self) -> Scheduler {
+        self.sched.clone()
+    }
 }
 
 impl Default for SimDeployer {

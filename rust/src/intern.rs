@@ -62,6 +62,20 @@ impl Route {
         (self.0 & SYM_MASK) as Symbol
     }
 
+    /// The packed word itself — the wire key of a framed message. Only
+    /// meaningful to a process that replayed the same name table
+    /// ([`apply_names`]); everyone else must treat it as opaque.
+    pub fn raw(&self) -> u64 {
+        self.0
+    }
+
+    /// Rebuild a route from a wire key. No validation happens here — a
+    /// key from a process with a diverged name table simply fails the
+    /// receiver's membership lookup.
+    pub fn from_raw(raw: u64) -> Self {
+        Route(raw)
+    }
+
     /// A well-mixed hash of the packed word (the raw packing is too
     /// structured for direct modulo sharding: common groups share low
     /// bits).
@@ -134,6 +148,33 @@ pub fn route(scope: &str, channel: &str, group: &str) -> Option<Route> {
     Route::pack(sym(scope), sym(channel), sym(group))
 }
 
+/// The full name table in symbol order — the cross-process interning
+/// handshake payload. A multi-process deployment ships this to every
+/// joining worker process, which replays it via [`apply_names`] before
+/// interning anything else, so a packed `u64` [`Route`] means the same
+/// `(scope, channel, group)` triple on every process.
+pub fn export_names() -> Vec<String> {
+    table().read().unwrap().names.iter().map(|n| n.to_string()).collect()
+}
+
+/// Replay a peer's exported name table ([`export_names`]) into this
+/// process's interner. Must run before this process interns any name of
+/// its own: each replayed name must land on the symbol equal to its
+/// position, otherwise the two processes' route words have already
+/// diverged and the join is rejected.
+pub fn apply_names(names: &[String]) -> anyhow::Result<()> {
+    for (i, n) in names.iter().enumerate() {
+        let got = sym(n);
+        if got as usize != i {
+            anyhow::bail!(
+                "interning handshake diverged: '{n}' resolved to symbol {got}, \
+                 expected {i} (this process interned names before the handshake)"
+            );
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +229,17 @@ mod tests {
             shards.insert((r.mix() % 64) as u8);
         }
         assert!(shards.len() > 16, "only {} shards hit", shards.len());
+    }
+
+    #[test]
+    fn export_apply_replays_to_identical_symbols() {
+        // replaying a table this process already agrees with is the
+        // fixed-point case: every name lands on its own index
+        sym("intern-export-probe");
+        let names = export_names();
+        assert!(names.iter().any(|n| n == "intern-export-probe"));
+        apply_names(&names).unwrap();
+        assert_eq!(names, export_names(), "replay must not grow the table");
     }
 
     #[test]

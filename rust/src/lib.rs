@@ -77,6 +77,7 @@ pub mod store;
 pub mod tag;
 pub mod topo;
 pub mod trace;
+pub mod wire;
 pub mod workflow;
 
 /// Crate-wide result type.

@@ -419,7 +419,22 @@ fn cmd_roles(args: &Args) -> Result<()> {
             );
         }
     }
+    println!();
+    println!("# {} communication substrates", Backend::SUBSTRATES.len());
+    println!("substrate,transport");
+    for (name, backend) in Backend::SUBSTRATES {
+        println!("{name},{}", backend.name());
+    }
     Ok(())
+}
+
+/// Host one process's worker partition of a multi-process job. Not meant
+/// for interactive use: a [`flame::wire::ProcDeployer`] parent drives it
+/// over stdin/stdout (see the wire protocol in `flame::wire::proc`).
+fn cmd_worker(args: &Args) -> Result<()> {
+    args.expect_flags("worker", &["listen"])?;
+    let listen = args.get("listen", "127.0.0.1:0");
+    flame::wire::worker_main(&listen)
 }
 
 /// FedProx via the Role SDK: the trainer role bound to a custom program
@@ -588,7 +603,7 @@ fn main() {
         Some((c, r)) => (c.clone(), r.to_vec()),
         None => {
             eprintln!(
-                "usage: flame <expand|spec|run|fig10|fig11|scale|churn|fleet|fedprox|codec-sweep|resume|trace|roles> [--flags]"
+                "usage: flame <expand|spec|run|fig10|fig11|scale|churn|fleet|fedprox|codec-sweep|resume|trace|roles|worker> [--flags]"
             );
             std::process::exit(2);
         }
@@ -607,6 +622,7 @@ fn main() {
         "resume" => cmd_resume(&args),
         "trace" => cmd_trace(&args),
         "roles" => cmd_roles(&args),
+        "worker" => cmd_worker(&args),
         other => bail!("unknown command '{other}'"),
     });
     if let Err(e) = result {

@@ -285,6 +285,11 @@ struct SchedState {
     live: usize,
     /// Tasks currently being polled by a runner.
     running: usize,
+    /// Wakes can arrive from *outside* the runner pool (another OS
+    /// process delivering over a wire transport). While set, an idle pool
+    /// with parked tasks is not a virtual-time deadlock — it waits for
+    /// external mail instead of failing the tasks.
+    external: bool,
     /// Runtime counters (shared out through [`Scheduler::stats`]).
     stats: Arc<SchedStats>,
 }
@@ -412,6 +417,7 @@ impl Scheduler {
                     nonempty: std::collections::BTreeSet::new(),
                     live: 0,
                     running: 0,
+                    external: false,
                     stats: Arc::new(SchedStats::default()),
                 }),
                 cv: Condvar::new(),
@@ -482,6 +488,21 @@ impl Scheduler {
         self.shared.state.lock().unwrap().live
     }
 
+    /// Declare (or retract) an external wake source: deliveries arriving
+    /// from outside the runner pool, e.g. a wire transport fed by another
+    /// OS process. While on, an idle pool with parked tasks waits instead
+    /// of declaring a virtual-time deadlock — a multi-process worker host
+    /// is routinely quiescent between remote messages. The pool still
+    /// exits normally once every task is Done.
+    pub fn set_external_source(&self, on: bool) {
+        let mut g = self.shared.state.lock().unwrap();
+        g.external = on;
+        drop(g);
+        // retracting the source can re-arm the deadlock check on an
+        // already-idle pool
+        self.shared.cv.notify_all();
+    }
+
     /// This fabric's runtime counters (shared; clones see live updates).
     pub fn stats(&self) -> Arc<SchedStats> {
         self.shared.state.lock().unwrap().stats.clone()
@@ -528,9 +549,12 @@ impl Scheduler {
                         g.stats.running_peak.fetch_max(g.running as u64, Ordering::Relaxed);
                         break Next::Poll(id, task);
                     }
-                    if g.running == 0 {
+                    if g.running == 0 && !g.external {
                         // Nothing ready, nothing running, live tasks remain:
-                        // no delivery can ever wake them again.
+                        // no delivery can ever wake them again. (With an
+                        // external wake source — a wire transport fed by
+                        // another OS process — this is just quiescence
+                        // between remote deliveries, so wait instead.)
                         let (tasks, reason) = Self::collect_stalled(&mut g);
                         break Next::Stalled(tasks, reason);
                     }

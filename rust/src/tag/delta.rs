@@ -401,6 +401,7 @@ pub fn add_tier_delta(spec: &JobSpec, n_aggregators: usize) -> Result<TagDelta> 
         group_by: param.group_by.clone(),
         func_tags: ft,
         backend: param.backend,
+        substrate: param.substrate.clone(),
     };
     let mut ft = std::collections::BTreeMap::new();
     ft.insert(
@@ -417,6 +418,7 @@ pub fn add_tier_delta(spec: &JobSpec, n_aggregators: usize) -> Result<TagDelta> 
         group_by: vec!["default".to_string()],
         func_tags: ft,
         backend: param.backend,
+        substrate: param.substrate.clone(),
     };
     let global_role = spec.role(&global).context("param-channel upper endpoint role")?;
     let mut new_global = global_role.clone();

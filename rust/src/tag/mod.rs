@@ -183,6 +183,10 @@ pub struct Channel {
     pub func_tags: BTreeMap<String, Vec<String>>,
     /// Per-channel communication backend (§6.2 flexibility).
     pub backend: Backend,
+    /// The substrate name the spec actually requested (`"mqtt"`,
+    /// `"grpc"`, ...), preserved verbatim even when it aliases onto an
+    /// implemented transport — what `flame roles` and job events report.
+    pub substrate: String,
 }
 
 /// A dataset registration (metadata only — the system never holds raw data;
@@ -454,13 +458,16 @@ pub(crate) fn parse_channel(j: &Json) -> Result<Channel> {
             func_tags.insert(role.clone(), tags);
         }
     }
-    let backend = Backend::parse(j.get("backend").as_str().unwrap_or("p2p"))?;
+    let substrate = j.get("backend").as_str().unwrap_or("p2p").to_string();
+    let backend =
+        Backend::parse(&substrate).with_context(|| format!("channel '{name}'"))?;
     Ok(Channel {
         name,
         pair,
         group_by,
         func_tags,
         backend,
+        substrate,
     })
 }
 
@@ -530,7 +537,9 @@ pub(crate) fn channel_to_json(c: &Channel) -> Json {
         }
         o.insert("funcTags", ft);
     }
-    o.insert("backend", c.backend.name());
+    // the requested substrate round-trips verbatim (it may be an alias of
+    // the implementing transport, e.g. "mqtt" riding the broker)
+    o.insert("backend", c.substrate.as_str());
     Json::Obj(o)
 }
 

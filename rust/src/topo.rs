@@ -92,6 +92,7 @@ fn channel(
             .map(|(r, ts)| (r.to_string(), ts.iter().map(|t| t.to_string()).collect()))
             .collect(),
         backend,
+        substrate: backend.name().to_string(),
     }
 }
 

@@ -1,0 +1,311 @@
+//! Length-delimited binary frame format for [`Message`].
+//!
+//! One frame carries one channel delivery between OS processes:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  "FLMW" (little-endian u32)
+//!      4     1  version (currently 1)
+//!      5     1  payload tag (0 empty, 1 floats, 2 json,
+//!               3 enc-f32, 4 enc-int8, 5 enc-topk)
+//!      6     2  reserved (zero)
+//!      8     8  route    — the interner's packed u64 (scope,channel,group)
+//!     16     8  arrival  — virtual arrival time, computed on the sender
+//!     24     8  round
+//!     32     2  len(from)   + that many UTF-8 bytes
+//!      .     2  len(to)     + that many UTF-8 bytes
+//!      .     2  len(kind)   + that many UTF-8 bytes
+//!      .     4  len(meta)   + compact-JSON bytes (0 = null metadata)
+//!      .     4  len(body)   + payload bytes (see below)
+//!      .     8  checksum — FNV-1a 64 over every preceding byte
+//! ```
+//!
+//! Payload bodies: `Floats` and `Encoded::F32` are raw little-endian f32
+//! slabs (bit-exact round-trip — model updates must not change across the
+//! wire); `Json` is the compact dump; `Int8` is `u64 d · f32 scale · d
+//! quantized bytes`; `TopK` is `u64 d · u32 k · k u32 indices · k f32
+//! values`.
+//!
+//! The route rides as the raw packed word, which is only meaningful
+//! because every process in a deployment replays the same interning table
+//! at join ([`crate::intern::apply_names`]); the sender and kind names
+//! ride as strings since nothing orders by their symbols.
+//!
+//! [`encode_into`] writes into a caller-supplied buffer (recycled through
+//! a [`super::BufSlab`]), so steady-state encodes of pooled float
+//! payloads allocate nothing — pinned by the `alloc_regression` suite.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::channel::{Message, Payload};
+use crate::intern::{atom, Route};
+use crate::json::Json;
+use crate::net::VTime;
+use crate::prng::fnv1a64;
+use crate::runtime::EncodedUpdate;
+
+/// `"FLMW"` as a little-endian word.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"FLMW");
+/// Current frame format version.
+pub const VERSION: u8 = 1;
+
+const TAG_EMPTY: u8 = 0;
+const TAG_FLOATS: u8 = 1;
+const TAG_JSON: u8 = 2;
+const TAG_ENC_F32: u8 = 3;
+const TAG_ENC_INT8: u8 = 4;
+const TAG_ENC_TOPK: u8 = 5;
+
+/// Smallest well-formed frame: fixed header + four zero-length fields +
+/// checksum.
+const MIN_FRAME: usize = 4 + 1 + 1 + 2 + 8 + 8 + 8 + 2 + 2 + 4 + 4 + 8;
+
+/// A decoded frame: everything the channel manager's remote-delivery
+/// entry point needs to re-enqueue the message locally.
+pub struct WireFrame {
+    pub route: Route,
+    pub from: Arc<str>,
+    pub to: Arc<str>,
+    pub arrival: VTime,
+    pub msg: Message,
+}
+
+/// Serialize one delivery into `buf` (cleared first). The buffer keeps
+/// its capacity across calls, so encoding into a recycled page allocates
+/// nothing once the page has grown to the working frame size — except
+/// for non-null metadata, whose compact-JSON dump builds a `String`.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_into(
+    buf: &mut Vec<u8>,
+    route: Route,
+    from: &str,
+    to: &str,
+    arrival: VTime,
+    msg: &Message,
+) -> Result<()> {
+    buf.clear();
+    let tag = match &msg.payload {
+        Payload::Empty => TAG_EMPTY,
+        Payload::Floats(_) => TAG_FLOATS,
+        Payload::Json(_) => TAG_JSON,
+        Payload::Encoded(e) => match &**e {
+            EncodedUpdate::F32 { .. } => TAG_ENC_F32,
+            EncodedUpdate::Int8 { .. } => TAG_ENC_INT8,
+            EncodedUpdate::TopK { .. } => TAG_ENC_TOPK,
+        },
+    };
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.push(VERSION);
+    buf.push(tag);
+    buf.extend_from_slice(&0u16.to_le_bytes());
+    buf.extend_from_slice(&route.raw().to_le_bytes());
+    buf.extend_from_slice(&arrival.to_le_bytes());
+    buf.extend_from_slice(&msg.round.to_le_bytes());
+    put_str16(buf, from)?;
+    put_str16(buf, to)?;
+    put_str16(buf, &msg.kind)?;
+    if msg.meta().is_null() {
+        buf.extend_from_slice(&0u32.to_le_bytes());
+    } else {
+        let dumped = msg.meta().dump();
+        buf.extend_from_slice(&(dumped.len() as u32).to_le_bytes());
+        buf.extend_from_slice(dumped.as_bytes());
+    }
+    let body_len_at = buf.len();
+    buf.extend_from_slice(&0u32.to_le_bytes());
+    match &msg.payload {
+        Payload::Empty => {}
+        Payload::Floats(v) => put_f32s(buf, v),
+        Payload::Json(j) => buf.extend_from_slice(j.dump().as_bytes()),
+        Payload::Encoded(e) => match &**e {
+            EncodedUpdate::F32 { data } => put_f32s(buf, data),
+            EncodedUpdate::Int8 { d, scale, q } => {
+                buf.extend_from_slice(&(*d as u64).to_le_bytes());
+                buf.extend_from_slice(&scale.to_le_bytes());
+                buf.extend(q.iter().map(|&v| v as u8));
+            }
+            EncodedUpdate::TopK { d, idx, val } => {
+                buf.extend_from_slice(&(*d as u64).to_le_bytes());
+                buf.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for i in idx {
+                    buf.extend_from_slice(&i.to_le_bytes());
+                }
+                put_f32s(buf, val);
+            }
+        },
+    }
+    let body_len = (buf.len() - body_len_at - 4) as u32;
+    buf[body_len_at..body_len_at + 4].copy_from_slice(&body_len.to_le_bytes());
+    let sum = fnv1a64(buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    Ok(())
+}
+
+/// Deserialize a frame previously produced by [`encode_into`]. Verifies
+/// magic, version and the trailing checksum, and bounds-checks every
+/// length field — truncated or corrupted frames are rejected with an
+/// error, never a panic.
+pub fn decode_from(bytes: &[u8]) -> Result<WireFrame> {
+    if bytes.len() < MIN_FRAME {
+        bail!("wire frame too short: {} bytes (min {MIN_FRAME})", bytes.len());
+    }
+    let (head, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(sum_bytes.try_into().expect("split at 8"));
+    let got = fnv1a64(head);
+    if want != got {
+        bail!("wire frame checksum mismatch (corrupt or truncated frame)");
+    }
+    let mut rd = Rd { b: head, pos: 0 };
+    let magic = rd.u32()?;
+    if magic != MAGIC {
+        bail!("bad wire magic {magic:#010x} (expected {MAGIC:#010x})");
+    }
+    let version = rd.u8()?;
+    if version != VERSION {
+        bail!("unsupported wire version {version} (speak version {VERSION})");
+    }
+    let tag = rd.u8()?;
+    let _reserved = rd.u16()?;
+    let route = Route::from_raw(rd.u64()?);
+    let arrival = rd.u64()?;
+    let round = rd.u64()?;
+    let from = atom(rd.str16()?);
+    let to = atom(rd.str16()?);
+    let kind = rd.str16()?.to_string();
+    let meta_len = rd.u32()? as usize;
+    let meta = if meta_len == 0 {
+        None
+    } else {
+        let raw = std::str::from_utf8(rd.take(meta_len)?)
+            .map_err(|e| anyhow::anyhow!("frame metadata is not UTF-8: {e}"))?;
+        Some(Json::parse(raw)?)
+    };
+    let body_len = rd.u32()? as usize;
+    let body = rd.take(body_len)?;
+    if rd.pos != head.len() {
+        bail!(
+            "wire frame has {} trailing byte(s) after the payload body",
+            head.len() - rd.pos
+        );
+    }
+    let payload = match tag {
+        TAG_EMPTY => {
+            if !body.is_empty() {
+                bail!("empty-payload frame carries {} body bytes", body.len());
+            }
+            Payload::Empty
+        }
+        TAG_FLOATS => Payload::Floats(Arc::new(get_f32s(body)?)),
+        TAG_JSON => {
+            let raw = std::str::from_utf8(body)
+                .map_err(|e| anyhow::anyhow!("json payload is not UTF-8: {e}"))?;
+            Payload::Json(Json::parse(raw)?)
+        }
+        TAG_ENC_F32 => Payload::Encoded(Arc::new(EncodedUpdate::F32 {
+            data: get_f32s(body)?,
+        })),
+        TAG_ENC_INT8 => {
+            let mut rd = Rd { b: body, pos: 0 };
+            let d = rd.u64()? as usize;
+            let scale = f32::from_le_bytes(rd.take(4)?.try_into().expect("4 bytes"));
+            let q: Vec<i8> = rd.take(body.len() - rd.pos)?.iter().map(|&b| b as i8).collect();
+            Payload::Encoded(Arc::new(EncodedUpdate::Int8 { d, scale, q }))
+        }
+        TAG_ENC_TOPK => {
+            let mut rd = Rd { b: body, pos: 0 };
+            let d = rd.u64()? as usize;
+            let k = rd.u32()? as usize;
+            let mut idx = Vec::with_capacity(k);
+            for _ in 0..k {
+                idx.push(rd.u32()?);
+            }
+            let val = get_f32s(rd.take(body.len() - rd.pos)?)?;
+            if val.len() != k {
+                bail!("top-k frame: {k} indices but {} values", val.len());
+            }
+            Payload::Encoded(Arc::new(EncodedUpdate::TopK { d, idx, val }))
+        }
+        other => bail!("unknown wire payload tag {other}"),
+    };
+    let mut msg = Message::new(kind, round, payload);
+    if let Some(m) = meta {
+        msg = msg.with_meta(m);
+    }
+    Ok(WireFrame {
+        route,
+        from,
+        to,
+        arrival,
+        msg,
+    })
+}
+
+fn put_str16(buf: &mut Vec<u8>, s: &str) -> Result<()> {
+    if s.len() > u16::MAX as usize {
+        bail!("wire string field of {} bytes exceeds the u16 length prefix", s.len());
+    }
+    buf.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn put_f32s(buf: &mut Vec<u8>, v: &[f32]) {
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_f32s(body: &[u8]) -> Result<Vec<f32>> {
+    if body.len() % 4 != 0 {
+        bail!("float slab of {} bytes is not a multiple of 4", body.len());
+    }
+    Ok(body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("chunks_exact(4)")))
+        .collect())
+}
+
+/// Bounds-checked little-endian reader over one frame.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!(
+                "wire frame truncated: need {n} byte(s) at offset {}, have {}",
+                self.pos,
+                self.b.len() - self.pos
+            );
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn str16(&mut self) -> Result<&'a str> {
+        let n = self.u16()? as usize;
+        std::str::from_utf8(self.take(n)?)
+            .map_err(|e| anyhow::anyhow!("wire string field is not UTF-8: {e}"))
+    }
+}

@@ -1,0 +1,31 @@
+//! Real multi-process transport: binary wire format, TCP substrate, and
+//! the process-spanning deployer.
+//!
+//! Everything below this module exists to make one sentence true: *a job
+//! running `backend: "tcp"` across several OS processes produces a
+//! byte-identical final report to the same job on the in-process virtual
+//! fabric.* The pieces:
+//!
+//! * [`frame`] — the length-prefixed, checksummed binary encoding of a
+//!   channel delivery ([`encode_into`] / [`decode_from`]),
+//! * [`slab`] — recycled encode buffers ([`BufSlab`]), keeping the
+//!   steady-state encode path allocation-free for pooled float payloads,
+//! * [`tcp`] — [`TcpBackend`], the [`crate::channel::Transport`]
+//!   implementation: per-peer connection registry, stream reassembly,
+//!   peer-death → `Departed` mapping,
+//! * [`proc`] — [`ProcDeployer`] (parent) and [`worker_main`] (the
+//!   `flame worker` child host): worker partitioning, the interning
+//!   handshake, and the merged job report.
+//!
+//! See DESIGN.md §"Wire transport & multi-process deploy" for the frame
+//! layout diagram and the determinism argument.
+
+pub mod frame;
+pub mod proc;
+pub mod slab;
+pub mod tcp;
+
+pub use frame::{decode_from, encode_into, WireFrame};
+pub use proc::{worker_main, ProcDeployer, ProcOpts, ProcReport};
+pub use slab::{BufSlab, SlabStats};
+pub use tcp::TcpBackend;

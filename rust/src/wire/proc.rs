@@ -1,0 +1,640 @@
+//! Multi-process deployment: partition one job's expanded workers across
+//! OS child processes and drive them over the TCP substrate.
+//!
+//! The parent ([`ProcDeployer`]) expands the TAG, round-robins the
+//! workers over `flame worker --listen` child processes, and coordinates
+//! them over a line-oriented stdin/stdout control protocol (`WIRE `-
+//! prefixed JSON lines from the child; bare JSON command lines from the
+//! parent):
+//!
+//! 1. every child binds its listener and reports its port,
+//! 2. the parent ships one **hello** to each child: its process index,
+//!    every process's address and worker roster, the full interning
+//!    table, the job spec, and the data/time recipe ([`ProcOpts`]),
+//! 3. each child replays the name table **before interning anything
+//!    else** ([`crate::intern::apply_names`]), prepares the job, shadow-
+//!    joins every non-local worker ([`ChannelManager::join_remote`]),
+//!    opens its outbound mesh connections, deploys its local workers, and
+//!    reports **ready**,
+//! 4. on **start** every child runs its cooperative pool to completion
+//!    and reports **done** with its metrics snapshot,
+//! 5. the parent merges the snapshots and reaps every child.
+//!
+//! ## Why the merged report is byte-identical to an in-process run
+//!
+//! Virtual arrival times are computed on the sender with the same pure
+//! transfer functions and the same default network model an in-process
+//! `backend: "tcp"` run uses, message selection breaks exact ties in
+//! per-sender FIFO order (which one TCP stream per ordered process pair
+//! preserves), every compared series is written by a single worker (the
+//! global aggregator), and traffic counters are incremented on the
+//! sending side — so per-process sums add to the in-process totals.
+//! Concatenating the children's metrics snapshots therefore reproduces
+//! the oracle's series exactly; `tests/tcp_parity.rs` pins this.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::channel::ChannelManager;
+use crate::control::{prepare_job, JobOptions};
+use crate::data::Partition;
+use crate::deploy::{Deployer, PodStatus, SimDeployer};
+use crate::intern::{apply_names, export_names, sym};
+use crate::json::{self, Json};
+use crate::metrics::MetricsHub;
+use crate::net::{VTime, VirtualNet};
+use crate::notify::Notifier;
+use crate::registry::Registry;
+use crate::roles::RoleRegistry;
+use crate::runtime::ComputeTimeModel;
+use crate::tag::{expand, JobSpec};
+
+use super::tcp::TcpBackend;
+
+/// Per-step control-protocol timeout (and the child-side job watchdog).
+/// `FLAME_WIRE_TIMEOUT_S` overrides the 120 s default — CI sets it so a
+/// wedged deployment fails the suite instead of hanging it.
+pub fn wire_timeout() -> Duration {
+    let secs = std::env::var("FLAME_WIRE_TIMEOUT_S")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(120);
+    Duration::from_secs(secs.max(1))
+}
+
+/// The serializable slice of [`JobOptions`] a worker process rebuilds —
+/// the full options carry closures and trait objects, so the hello ships
+/// this recipe instead and both sides call [`ProcOpts::build`]. The
+/// parity oracle must run with the **same** recipe-built options.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcOpts {
+    pub per_shard: usize,
+    pub test_n: usize,
+    /// `Some(alpha)` = Dirichlet label skew, `None` = IID.
+    pub dirichlet: Option<f64>,
+    /// Data-generation seed.
+    pub seed: u64,
+    /// Fixed virtual cost per training step; `None` keeps the mock
+    /// default.
+    pub fixed_per_step: Option<VTime>,
+}
+
+impl Default for ProcOpts {
+    fn default() -> Self {
+        Self {
+            per_shard: 48,
+            test_n: 96,
+            dirichlet: None,
+            seed: 11,
+            fixed_per_step: Some(2_000),
+        }
+    }
+}
+
+impl ProcOpts {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("per_shard", self.per_shard);
+        o.insert("test_n", self.test_n);
+        match self.dirichlet {
+            Some(a) => o.insert("dirichlet", Json::Num(a)),
+            None => o.insert("dirichlet", Json::Null),
+        }
+        o.insert("seed", json::from_u64_hex(self.seed));
+        match self.fixed_per_step {
+            Some(c) => o.insert("fixed_per_step", json::from_u64_hex(c)),
+            None => o.insert("fixed_per_step", Json::Null),
+        }
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            per_shard: j.get("per_shard").as_usize().context("opts recipe missing per_shard")?,
+            test_n: j.get("test_n").as_usize().context("opts recipe missing test_n")?,
+            dirichlet: j.get("dirichlet").as_f64(),
+            seed: json::as_u64_hex(j.get("seed")).context("opts recipe missing seed")?,
+            fixed_per_step: json::as_u64_hex(j.get("fixed_per_step")),
+        })
+    }
+
+    /// Materialise the recipe. Deterministic: two processes building from
+    /// equal recipes run byte-identical jobs.
+    pub fn build(&self) -> JobOptions {
+        let partition = match self.dirichlet {
+            Some(a) => Partition::Dirichlet(a),
+            None => Partition::Iid,
+        };
+        let mut opts =
+            JobOptions::mock().with_data(self.per_shard, self.test_n, partition, self.seed);
+        if let Some(cost) = self.fixed_per_step {
+            opts = opts.with_time(ComputeTimeModel::FixedPerStep(cost));
+        }
+        opts
+    }
+}
+
+/// What a multi-process run returns: the merged metrics and the
+/// [`crate::control::JobReport`] fields the parity test byte-compares.
+pub struct ProcReport {
+    /// Workers in the expansion (across all processes).
+    pub workers: usize,
+    /// All processes' samples merged (traffic counters summed).
+    pub metrics: Arc<MetricsHub>,
+    pub total_bytes: u64,
+    pub vtime_s: f64,
+    /// Process indices killed mid-run (the fault-injection path).
+    pub killed: Vec<usize>,
+}
+
+/// Deploys one job across OS child processes running `flame worker`.
+pub struct ProcDeployer {
+    /// Path to the `flame` binary (tests use `env!("CARGO_BIN_EXE_flame")`).
+    pub bin: PathBuf,
+    /// Child process count (each hosts a worker partition).
+    pub procs: usize,
+    /// Runner threads per child's cooperative pool.
+    pub runners: usize,
+}
+
+/// Child processes with kill-on-drop: an early error in the parent can
+/// never leak children past the deployer call.
+struct Brood {
+    children: Vec<Child>,
+}
+
+impl Drop for Brood {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+impl ProcDeployer {
+    /// Run `spec` to completion across the child processes and merge
+    /// their reports. Fails if any worker fails on any process.
+    pub fn run(&self, label: &str, spec: JobSpec, opts: &ProcOpts) -> Result<ProcReport> {
+        self.run_inner(label, spec, opts, None)
+    }
+
+    /// [`Self::run`] with fault injection: one process whose workers are
+    /// all of `victim_role` is `SIGKILL`ed at run start (after the mesh
+    /// and memberships are fully established, before its pods execute).
+    /// Survivors see its stream break, evict its roster through the
+    /// `Departed` path, and finish on quorum — the spec must therefore
+    /// set a quorum the survivors can meet.
+    pub fn run_killing(
+        &self,
+        label: &str,
+        spec: JobSpec,
+        opts: &ProcOpts,
+        victim_role: &str,
+    ) -> Result<ProcReport> {
+        self.run_inner(label, spec, opts, Some(victim_role))
+    }
+
+    fn run_inner(
+        &self,
+        label: &str,
+        spec: JobSpec,
+        opts: &ProcOpts,
+        victim_role: Option<&str>,
+    ) -> Result<ProcReport> {
+        if self.procs < 2 {
+            bail!("multi-process deploy needs at least 2 processes, got {}", self.procs);
+        }
+        let registry = Registry::single_box();
+        let workers = expand(&spec, &registry).context("TAG expansion failed")?;
+        if workers.len() < self.procs {
+            bail!(
+                "cannot partition {} workers across {} processes",
+                workers.len(),
+                self.procs
+            );
+        }
+        // Placement: round-robin in expansion order. Determinism does not
+        // care where a worker runs (arrival arithmetic is placement-
+        // independent); round-robin just spreads load.
+        let mut roster: Vec<Vec<String>> = vec![Vec::new(); self.procs];
+        for (i, w) in workers.iter().enumerate() {
+            roster[i % self.procs].push(w.id.clone());
+        }
+        let victim = match victim_role {
+            None => None,
+            Some(role) => Some(
+                roster
+                    .iter()
+                    .position(|ws| {
+                        !ws.is_empty()
+                            && ws.iter().all(|id| {
+                                workers.iter().any(|w| w.id == *id && w.role == role)
+                            })
+                    })
+                    .with_context(|| {
+                        format!("no process hosts only '{role}' workers; cannot inject its death")
+                    })?,
+            ),
+        };
+
+        // Interning handshake: make sure every route component any child
+        // will pack — scope "", channel names, group names — is in the
+        // table, in an order fixed by the spec and the expansion, then
+        // export. Children replay this table first, so route words agree
+        // across the whole deployment.
+        sym("");
+        for c in &spec.channels {
+            sym(&c.name);
+        }
+        for w in &workers {
+            for (ch, group) in &w.channels {
+                sym(ch);
+                sym(group);
+            }
+        }
+        let names = export_names();
+
+        // Spawn the worker hosts and pump their stdout lines into one
+        // event queue.
+        let mut brood = Brood {
+            children: Vec::with_capacity(self.procs),
+        };
+        for p in 0..self.procs {
+            let child = Command::new(&self.bin)
+                .args(["worker", "--listen", "127.0.0.1:0"])
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .with_context(|| format!("spawning worker process {p} ({})", self.bin.display()))?;
+            brood.children.push(child);
+        }
+        let (tx, rx) = mpsc::channel::<(usize, Json)>();
+        for (p, child) in brood.children.iter_mut().enumerate() {
+            let stdout = child.stdout.take().context("child stdout was piped")?;
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                for line in BufReader::new(stdout).lines() {
+                    let Ok(line) = line else { break };
+                    if let Some(rest) = line.trim().strip_prefix("WIRE ") {
+                        if let Ok(j) = Json::parse(rest) {
+                            let _ = tx.send((p, j));
+                        }
+                    }
+                }
+                let mut o = Json::obj();
+                o.insert("ev", "eof");
+                let _ = tx.send((p, Json::Obj(o)));
+            });
+        }
+        drop(tx);
+        let step = wire_timeout();
+
+        // 1. ports
+        let mut ports = vec![0u16; self.procs];
+        let mut seen = 0usize;
+        while seen < self.procs {
+            let (p, ev) = recv_event(&rx, step, "listener ports")?;
+            match ev.get("ev").as_str() {
+                Some("port") => {
+                    ports[p] = ev.get("port").as_usize().context("port event missing port")? as u16;
+                    seen += 1;
+                }
+                Some("eof") => bail!("worker process {p} exited during startup"),
+                other => bail!("unexpected event {other:?} from process {p} awaiting ports"),
+            }
+        }
+
+        // 2. hello
+        for p in 0..self.procs {
+            let mut procs_j: Vec<Json> = Vec::with_capacity(self.procs);
+            for (q, ws) in roster.iter().enumerate() {
+                let mut e = Json::obj();
+                e.insert("addr", format!("127.0.0.1:{}", ports[q]).as_str());
+                e.insert("workers", Json::Arr(ws.iter().map(|w| Json::Str(w.clone())).collect()));
+                procs_j.push(Json::Obj(e));
+            }
+            let mut hello = Json::obj();
+            hello.insert("cmd", "hello");
+            hello.insert("proc", p);
+            hello.insert("runners", self.runners);
+            hello.insert("label", label);
+            hello.insert("names", Json::Arr(names.iter().map(|n| Json::Str(n.clone())).collect()));
+            hello.insert("spec", spec.to_json());
+            hello.insert("opts", opts.to_json());
+            hello.insert("procs", Json::Arr(procs_j));
+            send_line(&mut brood.children[p], &Json::Obj(hello));
+        }
+
+        // 3. ready
+        let mut ready = 0usize;
+        while ready < self.procs {
+            let (p, ev) = recv_event(&rx, step, "readiness")?;
+            match ev.get("ev").as_str() {
+                Some("ready") => ready += 1,
+                Some("eof") => bail!("worker process {p} exited before becoming ready"),
+                other => bail!("unexpected event {other:?} from process {p} awaiting readiness"),
+            }
+        }
+
+        // 4. start (and, for the fault-injection path, kill the victim
+        // before it can run a single pod: every surviving process sees a
+        // fully-joined peer die at run start, the worst case for the
+        // Departed/quorum machinery)
+        let start = {
+            let mut o = Json::obj();
+            o.insert("cmd", "start");
+            Json::Obj(o)
+        };
+        if let Some(v) = victim {
+            let _ = brood.children[v].kill();
+            let _ = brood.children[v].wait();
+        }
+        for p in 0..self.procs {
+            if Some(p) != victim {
+                send_line(&mut brood.children[p], &start);
+            }
+        }
+
+        // 5. done
+        let mut done: Vec<Option<Json>> = (0..self.procs).map(|_| None).collect();
+        let want = self.procs - victim.map_or(0, |_| 1);
+        let mut have = 0usize;
+        while have < want {
+            let (p, ev) = recv_event(&rx, step, "job completion")?;
+            let kind = ev.get("ev").as_str().unwrap_or("").to_string();
+            match kind.as_str() {
+                "done" => {
+                    if done[p].replace(ev).is_none() {
+                        have += 1;
+                    }
+                }
+                "eof" if Some(p) == victim => {}
+                "eof" => bail!("worker process {p} died before reporting completion"),
+                other => bail!("unexpected event '{other}' from process {p} awaiting completion"),
+            }
+        }
+
+        // 6. graceful teardown: exit + reap (Brood's drop is then a no-op)
+        let exit = {
+            let mut o = Json::obj();
+            o.insert("cmd", "exit");
+            Json::Obj(o)
+        };
+        for child in &mut brood.children {
+            send_line(child, &exit);
+        }
+        for (p, child) in brood.children.iter_mut().enumerate() {
+            let status = child.wait().with_context(|| format!("reaping worker process {p}"))?;
+            if Some(p) != victim && !status.success() {
+                bail!("worker process {p} exited with {status}");
+            }
+        }
+
+        // Merge: concatenate samples in process order (each compared
+        // series has a single writer, so per-series order is untouched),
+        // sum the traffic counters, and restore into one hub.
+        let mut failures: Vec<String> = Vec::new();
+        let mut samples: Vec<Json> = Vec::new();
+        let mut bytes = 0u64;
+        let mut messages = 0u64;
+        for d in done.iter().flatten() {
+            if d.get("ok").as_bool() != Some(true) {
+                if let Some(fs) = d.get("failures").as_arr() {
+                    failures.extend(fs.iter().filter_map(|f| f.as_str().map(String::from)));
+                }
+            }
+            let m = d.get("metrics");
+            if let Some(rows) = m.get("samples").as_arr() {
+                samples.extend(rows.iter().cloned());
+            }
+            bytes += json::as_u64_hex(m.get("bytes")).unwrap_or(0);
+            messages += json::as_u64_hex(m.get("messages")).unwrap_or(0);
+        }
+        if !failures.is_empty() {
+            bail!("multi-process job failed:\n  {}", failures.join("\n  "));
+        }
+        let merged = {
+            let mut o = Json::obj();
+            o.insert("samples", Json::Arr(samples));
+            o.insert("bytes", json::from_u64_hex(bytes));
+            o.insert("messages", json::from_u64_hex(messages));
+            Json::Obj(o)
+        };
+        let hub = Arc::new(MetricsHub::for_job(label));
+        hub.restore(&merged);
+        Ok(ProcReport {
+            workers: workers.len(),
+            total_bytes: hub.total_bytes(),
+            vtime_s: hub.last("vtime_s").unwrap_or(0.0),
+            metrics: hub,
+            killed: victim.into_iter().collect(),
+        })
+    }
+}
+
+fn recv_event(
+    rx: &mpsc::Receiver<(usize, Json)>,
+    step: Duration,
+    awaiting: &str,
+) -> Result<(usize, Json)> {
+    rx.recv_timeout(step)
+        .map_err(|_| anyhow!("timed out after {step:?} awaiting {awaiting} from worker processes"))
+}
+
+fn send_line(child: &mut Child, j: &Json) {
+    if let Some(stdin) = child.stdin.as_mut() {
+        let _ = writeln!(stdin, "{}", j.dump());
+        let _ = stdin.flush();
+    }
+}
+
+/// Emit one `WIRE `-prefixed protocol line on stdout (flushed — the
+/// parent blocks on these).
+fn emit(j: &Json) {
+    let mut out = std::io::stdout().lock();
+    let _ = writeln!(out, "WIRE {}", j.dump());
+    let _ = out.flush();
+}
+
+fn emit_ev(ev: &str) {
+    let mut o = Json::obj();
+    o.insert("ev", ev);
+    emit(&Json::Obj(o));
+}
+
+/// Read control lines until `want` arrives. Any *other* command is a
+/// protocol error — the parent drives a strict sequence.
+fn next_cmd(lines: &mut impl Iterator<Item = std::io::Result<String>>, want: &str) -> Result<Json> {
+    for line in lines.by_ref() {
+        let line = line.context("worker host: reading control stdin")?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let j = Json::parse(trimmed)
+            .map_err(|e| anyhow!("worker host: unparseable control line: {e}"))?;
+        let cmd = j.get("cmd").as_str().unwrap_or("").to_string();
+        if cmd == want {
+            return Ok(j);
+        }
+        bail!("worker host: expected control command '{want}', got '{cmd}'");
+    }
+    bail!("worker host: control stream closed while awaiting '{want}'");
+}
+
+/// The `flame worker --listen <addr>` entry point: host one process's
+/// partition of a multi-process job, driven by a [`ProcDeployer`] parent
+/// over stdin/stdout.
+pub fn worker_main(listen: &str) -> Result<()> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("binding wire listener on {listen}"))?;
+    let port = listener.local_addr().context("reading listener address")?.port();
+    {
+        let mut o = Json::obj();
+        o.insert("ev", "port");
+        o.insert("port", port as usize);
+        emit(&Json::Obj(o));
+    }
+
+    let stdin = std::io::stdin();
+    let mut lines = stdin.lock().lines();
+    let hello = next_cmd(&mut lines, "hello")?;
+
+    // The interning handshake MUST precede every other interning in this
+    // process (ChannelManager::new interns the empty scope, prepare_job
+    // interns worker and channel names), otherwise the route words
+    // diverge and apply_names rejects the join.
+    let names: Vec<String> = hello
+        .get("names")
+        .as_arr()
+        .context("hello missing interning table")?
+        .iter()
+        .map(|n| n.as_str().unwrap_or("").to_string())
+        .collect();
+    apply_names(&names)?;
+
+    let self_proc = hello.get("proc").as_usize().context("hello missing proc index")?;
+    let runners = hello.get("runners").as_usize().unwrap_or(1);
+    let label = hello.get("label").as_str().unwrap_or("wire-job").to_string();
+    let spec = JobSpec::from_json(hello.get("spec")).context("worker host: parsing job spec")?;
+    let opts = ProcOpts::from_json(hello.get("opts")).context("worker host: parsing opts recipe")?;
+    let mut addrs: Vec<String> = Vec::new();
+    let mut roster: Vec<Vec<String>> = Vec::new();
+    for pj in hello.get("procs").as_arr().context("hello missing process list")? {
+        addrs.push(pj.get("addr").as_str().context("process entry missing addr")?.to_string());
+        roster.push(
+            pj.get("workers")
+                .as_arr()
+                .context("process entry missing workers")?
+                .iter()
+                .map(|w| w.as_str().unwrap_or("").to_string())
+                .collect(),
+        );
+    }
+    if self_proc >= roster.len() {
+        bail!("hello names process {self_proc}, deployment has {}", roster.len());
+    }
+
+    let chan_mgr = ChannelManager::new(Arc::new(VirtualNet::default()));
+    let prepared = prepare_job(
+        &label,
+        spec,
+        opts.build(),
+        &Registry::single_box(),
+        &Arc::new(RoleRegistry::builtin()),
+        chan_mgr.clone(),
+    )?;
+    if prepared.timeline.is_elastic() {
+        bail!("multi-process deploy does not support live topology events yet");
+    }
+
+    // Shadow-join every worker hosted elsewhere BEFORE deploying local
+    // pods: all processes then observe the complete membership (the same
+    // two-phase ordering the in-process deployers guarantee).
+    let mine: HashSet<&str> = roster[self_proc].iter().map(|s| s.as_str()).collect();
+    for w in &prepared.workers {
+        if mine.contains(w.id.as_str()) {
+            continue;
+        }
+        for (ch, group) in &w.channels {
+            let backend = prepared
+                .job
+                .spec
+                .channel(ch)
+                .with_context(|| format!("worker '{}' references unknown channel '{ch}'", w.id))?
+                .backend;
+            chan_mgr.join_remote(ch, group, &w.id, &w.role, backend)?;
+        }
+    }
+
+    let proc_of: HashMap<String, usize> = roster
+        .iter()
+        .enumerate()
+        .flat_map(|(p, ws)| ws.iter().map(move |w| (w.clone(), p)))
+        .collect();
+    let backend = TcpBackend::new(self_proc, roster.len(), proc_of);
+    chan_mgr.bind_transport(backend.clone());
+    backend.serve(listener, chan_mgr.clone(), Arc::new(roster.clone()));
+    // every peer is already listening (the parent collected all ports
+    // before any hello went out), so the outbound mesh connects now
+    backend.connect_peers(&addrs)?;
+
+    let sim = SimDeployer::new(runners);
+    // remote deliveries arrive from reader threads outside the runner
+    // pool: a quiescent pool is waiting for mail, not deadlocked
+    sim.sched().set_external_source(true);
+    let notifier = Arc::new(Notifier::new());
+    let mut pods = Vec::new();
+    for w in &prepared.workers {
+        if mine.contains(w.id.as_str()) {
+            pods.push(sim.deploy(w.clone(), &prepared.job, notifier.clone())?);
+        }
+    }
+    emit_ev("ready");
+    next_cmd(&mut lines, "start")?;
+
+    // Watchdog: a deployment wedged on a dead-but-undetected peer exits
+    // instead of hanging forever (the parent would block on our done).
+    let finished = Arc::new(AtomicBool::new(false));
+    {
+        let finished = finished.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(wire_timeout());
+            if !finished.load(Ordering::SeqCst) {
+                eprintln!("wire: worker host watchdog fired; aborting");
+                std::process::exit(3);
+            }
+        });
+    }
+    sim.start()?;
+    finished.store(true, Ordering::SeqCst);
+    backend.begin_shutdown();
+
+    let mut failures: Vec<String> = Vec::new();
+    for pod in &pods {
+        if let PodStatus::Failed(e) = pod.wait() {
+            failures.push(format!("{}: {e}", pod.worker_id));
+        }
+    }
+    let mut done = Json::obj();
+    done.insert("ev", "done");
+    done.insert("ok", failures.is_empty());
+    done.insert("failures", Json::Arr(failures.into_iter().map(Json::Str).collect()));
+    done.insert("metrics", prepared.job.metrics.snapshot());
+    emit(&Json::Obj(done));
+
+    // Hold the fabric (and our inbound streams) open until every process
+    // is done: the parent's exit is the whole-deployment barrier.
+    let _ = next_cmd(&mut lines, "exit");
+    Ok(())
+}

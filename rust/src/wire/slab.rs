@@ -1,0 +1,103 @@
+//! Recycled encode buffers — the wire path's answer to per-frame
+//! allocation tax.
+//!
+//! Serializing a message needs a scratch buffer; allocating one per frame
+//! would reintroduce exactly the per-message allocation churn PR 5
+//! removed from the in-process fabric. A [`BufSlab`] keeps a small pool
+//! of retired pages (in the style of timely-dataflow's `bytes` crate):
+//! `take` hands out a cleared page with its old capacity intact, so once
+//! a page has grown to the deployment's largest frame size, steady-state
+//! encodes allocate nothing — pinned by the `alloc_regression` suite.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Pages retained beyond this are dropped instead of pooled: a burst of
+/// concurrent encodes must not turn into a permanent high-water mark.
+const MAX_POOLED: usize = 64;
+
+/// Counters for slab behaviour (observable from benches and tests).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SlabStats {
+    /// `take` calls served from the pool (no allocation).
+    pub reused: u64,
+    /// `take` calls that had to allocate a fresh page.
+    pub fresh: u64,
+}
+
+/// A pool of recycled byte pages for frame encoding.
+#[derive(Debug, Default)]
+pub struct BufSlab {
+    pages: Mutex<Vec<Vec<u8>>>,
+    reused: AtomicU64,
+    fresh: AtomicU64,
+}
+
+impl BufSlab {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An empty page, recycled when possible. The returned page keeps
+    /// whatever capacity it grew to in earlier lives — the warm-up frames
+    /// pay the growth, the steady state rides it.
+    pub fn take(&self) -> Vec<u8> {
+        if let Some(page) = self.pages.lock().unwrap().pop() {
+            self.reused.fetch_add(1, Ordering::Relaxed);
+            return page;
+        }
+        self.fresh.fetch_add(1, Ordering::Relaxed);
+        Vec::new()
+    }
+
+    /// Return a page to the pool. Contents are cleared; capacity is kept.
+    /// Pages past the pool cap are dropped (burst protection).
+    pub fn recycle(&self, mut page: Vec<u8>) {
+        page.clear();
+        let mut g = self.pages.lock().unwrap();
+        if g.len() < MAX_POOLED {
+            g.push(page);
+        }
+    }
+
+    /// Pool behaviour so far.
+    pub fn stats(&self) -> SlabStats {
+        SlabStats {
+            reused: self.reused.load(Ordering::Relaxed),
+            fresh: self.fresh.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Pages currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.pages.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycled_pages_keep_capacity() {
+        let slab = BufSlab::new();
+        let mut p = slab.take();
+        p.extend_from_slice(&[0u8; 4096]);
+        let cap = p.capacity();
+        slab.recycle(p);
+        let p2 = slab.take();
+        assert!(p2.is_empty());
+        assert_eq!(p2.capacity(), cap, "capacity must survive recycling");
+        assert_eq!(slab.stats(), SlabStats { reused: 1, fresh: 1 });
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let slab = BufSlab::new();
+        let pages: Vec<Vec<u8>> = (0..2 * MAX_POOLED).map(|_| slab.take()).collect();
+        for p in pages {
+            slab.recycle(p);
+        }
+        assert_eq!(slab.pooled(), MAX_POOLED, "burst must not pin pages forever");
+    }
+}

@@ -1,0 +1,238 @@
+//! TCP substrate: per-peer connection registry, length-prefixed stream
+//! reassembly, and delivery into the receiving process's channel fabric.
+//!
+//! Topology is a directed mesh over the deployment's OS processes: for
+//! every ordered pair `(i, j)` process `i` owns exactly one outbound
+//! stream to `j`, opened at startup with a small hello identifying the
+//! sender. One stream per ordered pair is what makes determinism cheap:
+//! TCP preserves order within a stream, so frames from one sender reach
+//! the receiving fabric in the sender's program order — per-sender FIFO,
+//! the only property the `(arrival, sender, seq)` message selection needs
+//! (see [`Transport::ship`]).
+//!
+//! Virtual arrival times are computed on the **sending** process (the
+//! transfer functions are pure, both sides hold the same network model)
+//! and ride inside the frame, so a multi-process run charges exactly the
+//! virtual-time arithmetic an in-process `backend: "tcp"` run charges —
+//! which is what lets the in-process run serve as the byte-parity oracle.
+//!
+//! Peer death is not a send error. Shipping to a dead peer silently
+//! drops (the frame could equally have died in flight); the **receiving
+//! side** of a broken stream maps the disconnect onto the existing
+//! [`ChannelManager::evict`] path, so every surviving process sees the
+//! dead process's workers leave through the same `Departed`/quorum
+//! machinery a graceful leave uses.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::channel::{ChannelManager, Message, Transport};
+use crate::intern::Route;
+use crate::net::VTime;
+
+use super::frame::{decode_from, encode_into};
+use super::slab::{BufSlab, SlabStats};
+
+/// First word of the per-connection hello (`"FLHI"` little-endian).
+const HELLO_MAGIC: u32 = u32::from_le_bytes(*b"FLHI");
+
+/// Upper bound on a single frame's length prefix. Anything larger is a
+/// corrupt or hostile stream, not a model update (256 MiB ≈ a 64M-param
+/// f32 payload with room to spare).
+const MAX_FRAME: usize = 256 << 20;
+
+/// The TCP transport: one outbound stream per peer process, a shared
+/// encode-buffer slab, and the worker→process placement map.
+pub struct TcpBackend {
+    self_proc: usize,
+    /// Outbound stream per process index; `None` for self and for peers
+    /// that died (or were never connected).
+    peers: Vec<Mutex<Option<TcpStream>>>,
+    /// Worker id → hosting process index, identical on every process.
+    proc_of: HashMap<String, usize>,
+    slab: BufSlab,
+    /// Set on graceful teardown so reader threads stop mapping stream
+    /// EOFs onto evictions.
+    shutdown: AtomicBool,
+}
+
+impl TcpBackend {
+    /// A backend for process `self_proc` of `n_procs`, with the shared
+    /// placement map. No connections yet — call [`Self::connect_peers`].
+    pub fn new(self_proc: usize, n_procs: usize, proc_of: HashMap<String, usize>) -> Arc<Self> {
+        Arc::new(Self {
+            self_proc,
+            peers: (0..n_procs).map(|_| Mutex::new(None)).collect(),
+            proc_of,
+            slab: BufSlab::new(),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    /// Open the outbound half of the mesh: one connection to every other
+    /// process, each greeted with `HELLO_MAGIC` + this process's index.
+    pub fn connect_peers(&self, addrs: &[String]) -> Result<()> {
+        if addrs.len() != self.peers.len() {
+            bail!(
+                "peer address list has {} entries for {} processes",
+                addrs.len(),
+                self.peers.len()
+            );
+        }
+        for (p, addr) in addrs.iter().enumerate() {
+            if p == self.self_proc {
+                continue;
+            }
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("connecting to peer process {p} at {addr}"))?;
+            stream.set_nodelay(true).ok();
+            let mut hello = [0u8; 8];
+            hello[..4].copy_from_slice(&HELLO_MAGIC.to_le_bytes());
+            hello[4..].copy_from_slice(&(self.self_proc as u32).to_le_bytes());
+            let mut s = stream;
+            s.write_all(&hello)
+                .with_context(|| format!("greeting peer process {p}"))?;
+            *self.peers[p].lock().unwrap() = Some(s);
+        }
+        Ok(())
+    }
+
+    /// Stop mapping stream teardown onto evictions: the deployment is
+    /// exiting on purpose.
+    pub fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Encode-buffer pool counters (benches assert steady-state reuse).
+    pub fn slab_stats(&self) -> SlabStats {
+        self.slab.stats()
+    }
+
+    /// Accept inbound streams and pump each into `mgr` on its own
+    /// thread. `roster[p]` lists the workers hosted by process `p`; when
+    /// a peer's stream breaks before shutdown, its whole roster is
+    /// evicted so collects re-quorum and waiters see `Departed`.
+    pub fn serve(
+        self: &Arc<Self>,
+        listener: TcpListener,
+        mgr: Arc<ChannelManager>,
+        roster: Arc<Vec<Vec<String>>>,
+    ) {
+        let backend = Arc::clone(self);
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { break };
+                stream.set_nodelay(true).ok();
+                let backend = Arc::clone(&backend);
+                let mgr = Arc::clone(&mgr);
+                let roster = Arc::clone(&roster);
+                std::thread::spawn(move || {
+                    if let Err(e) = backend.pump(stream, &mgr, &roster) {
+                        if !backend.shutdown.load(Ordering::SeqCst) {
+                            eprintln!("wire: inbound stream ended: {e:#}");
+                        }
+                    }
+                });
+                if backend.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+        });
+    }
+
+    /// Reassemble frames off one inbound stream until it breaks, then
+    /// (unless shutting down) evict the dead peer's workers.
+    fn pump(
+        &self,
+        mut stream: TcpStream,
+        mgr: &Arc<ChannelManager>,
+        roster: &Arc<Vec<Vec<String>>>,
+    ) -> Result<()> {
+        let mut hello = [0u8; 8];
+        stream.read_exact(&mut hello).context("reading connection hello")?;
+        let magic = u32::from_le_bytes(hello[..4].try_into().expect("4 bytes"));
+        if magic != HELLO_MAGIC {
+            bail!("inbound stream opened with bad hello magic {magic:#010x}");
+        }
+        let peer = u32::from_le_bytes(hello[4..].try_into().expect("4 bytes")) as usize;
+        if peer >= roster.len() {
+            bail!("inbound hello names process {peer}, deployment has {}", roster.len());
+        }
+        let mut frame: Vec<u8> = Vec::new();
+        let result = loop {
+            let mut len_bytes = [0u8; 4];
+            if let Err(e) = stream.read_exact(&mut len_bytes) {
+                break Err(anyhow::Error::from(e).context(format!("stream from process {peer}")));
+            }
+            let len = u32::from_le_bytes(len_bytes) as usize;
+            if len > MAX_FRAME {
+                break Err(anyhow::anyhow!(
+                    "process {peer} sent a {len}-byte frame (cap {MAX_FRAME})"
+                ));
+            }
+            frame.clear();
+            frame.resize(len, 0);
+            if let Err(e) = stream.read_exact(&mut frame) {
+                break Err(anyhow::Error::from(e).context(format!("stream from process {peer}")));
+            }
+            match decode_from(&frame) {
+                Ok(f) => {
+                    if let Err(e) = mgr.deliver_remote(f.route, &f.from, &f.to, f.arrival, f.msg) {
+                        eprintln!("wire: dropping undeliverable frame from process {peer}: {e:#}");
+                    }
+                }
+                Err(e) => break Err(e.context(format!("decoding frame from process {peer}"))),
+            }
+        };
+        if !self.shutdown.load(Ordering::SeqCst) {
+            for w in &roster[peer] {
+                mgr.evict(w, 0);
+            }
+        }
+        result
+    }
+}
+
+impl Transport for TcpBackend {
+    fn ship(
+        &self,
+        route: Route,
+        from: &Arc<str>,
+        to: &str,
+        arrival: VTime,
+        msg: &Message,
+    ) -> Result<()> {
+        let &proc = self
+            .proc_of
+            .get(to)
+            .with_context(|| format!("wire ship to '{to}', which is in no process's roster"))?;
+        if proc == self.self_proc {
+            bail!("wire ship to '{to}', which this process hosts locally");
+        }
+        let mut page = self.slab.take();
+        encode_into(&mut page, route, from, to, arrival, msg)?;
+        {
+            let mut slot = self.peers[proc].lock().unwrap();
+            if let Some(stream) = slot.as_mut() {
+                let len = (page.len() as u32).to_le_bytes();
+                // Dead peers surface through the receive-side evict path,
+                // never through send errors (the frame could equally have
+                // died in flight after a successful write).
+                if stream.write_all(&len).and_then(|()| stream.write_all(&page)).is_err() {
+                    *slot = None;
+                }
+            }
+        }
+        self.slab.recycle(page);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+}

@@ -223,6 +223,45 @@ fn disabled_tracing_keeps_the_hot_path_allocation_free() {
 }
 
 #[test]
+fn steady_state_wire_encode_allocates_nothing() {
+    // Encoding a pooled `Floats` payload into a recycled wire page is the
+    // multi-process hot path: after one warmup frame sizes the page, every
+    // further encode of the same-shaped payload must reuse it — no O(d)
+    // buffer, and (up to straggler noise) no allocator traffic at all.
+    let d = 4_096usize;
+    let slab = flame::wire::BufSlab::new();
+    let payload = Arc::new(vec![0.5f32; d]);
+    let msg = Message::floats("weights", 3, payload);
+    let route = flame::intern::route("", "wirealloc", "g").unwrap();
+    let mut page = slab.take();
+    flame::wire::encode_into(&mut page, route, "t000", "agg", 1, &msg).unwrap();
+    slab.recycle(page);
+    let n = 2_000u64;
+    let before = alloc_track::snapshot();
+    for i in 0..n {
+        let mut page = slab.take();
+        flame::wire::encode_into(&mut page, route, "t000", "agg", 1 + i, &msg).unwrap();
+        slab.recycle(page);
+    }
+    let delta = alloc_track::delta(before, alloc_track::snapshot());
+    assert!(
+        delta.allocs < n / 20,
+        "{} allocations for {n} steady-state wire encodes — the recycled \
+         encode path regressed",
+        delta.allocs
+    );
+    assert!(
+        (delta.bytes as f64) < (d * 4) as f64,
+        "{} bytes allocated across {n} encodes (>= one d-sized buffer) — \
+         pages are not being recycled",
+        delta.bytes
+    );
+    let stats = slab.stats();
+    assert_eq!(stats.fresh, 1, "steady state must reuse the one warm page");
+    assert_eq!(stats.reused, n, "every encode must ride a recycled page");
+}
+
+#[test]
 fn broadcast_fanout_shares_not_copies() {
     // broadcasting a d-sized payload to k peers must allocate nothing in
     // steady state: the payload, kind and metadata are all Arc-shared.

@@ -129,6 +129,18 @@ fn roles_lists_builtin_programs_with_flavors() {
 }
 
 #[test]
+fn roles_lists_communication_substrates() {
+    let (ok, stdout, stderr) = flame(&["roles"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("substrate,transport"), "{stdout}");
+    // real transports map to themselves, aliases to their delivery shape
+    assert!(stdout.contains("tcp,tcp"), "{stdout}");
+    assert!(stdout.contains("grpc,p2p"), "{stdout}");
+    assert!(stdout.contains("mqtt,broker"), "{stdout}");
+    assert!(stdout.contains("local,inproc"), "{stdout}");
+}
+
+#[test]
 fn fedprox_smoke_runs_the_sdk_program() {
     let (ok, stdout, stderr) = flame(&[
         "fedprox", "--trainers", "3", "--rounds", "2", "--per-shard", "24", "--test-n", "48",

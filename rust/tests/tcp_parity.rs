@@ -1,0 +1,110 @@
+//! Multi-process parity: a `backend: "tcp"` job partitioned across 3 OS
+//! processes by [`ProcDeployer`] must produce a byte-identical report to
+//! the same job run in-process — and a process killed mid-deployment
+//! must map onto the `Departed`/quorum path, not a hang.
+//!
+//! Child processes are `flame worker --listen` hosts of this crate's own
+//! binary (`CARGO_BIN_EXE_flame`); the deployer's drop-guard kills and
+//! reaps them on every exit path, so a passing *or failing* run leaks no
+//! children.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use flame::channel::Backend;
+use flame::control::Controller;
+use flame::json::Json;
+use flame::store::Store;
+use flame::tag::JobSpec;
+use flame::wire::{ProcDeployer, ProcOpts};
+
+/// The byte-compared report series (same set the executor-parity suite
+/// pins).
+const SERIES: &[&str] = &["acc", "loss", "vtime_s", "round_time_s"];
+
+/// The 2-tier job under test: 6 trainers, one global aggregator, every
+/// channel on the TCP substrate.
+fn tcp_spec(rounds: u64, quorum: Option<f64>) -> JobSpec {
+    let mut builder = flame::topo::classical(6, Backend::Tcp)
+        .rounds(rounds)
+        .set("lr", Json::Num(0.5))
+        .set("local_steps", 2usize)
+        .set("seed", 11u64);
+    if let Some(q) = quorum {
+        builder = builder.set("quorum", Json::Num(q));
+    }
+    builder.build()
+}
+
+fn deployer() -> ProcDeployer {
+    ProcDeployer {
+        bin: PathBuf::from(env!("CARGO_BIN_EXE_flame")),
+        procs: 3,
+        runners: 2,
+    }
+}
+
+fn opts() -> ProcOpts {
+    ProcOpts {
+        per_shard: 48,
+        test_n: 96,
+        dirichlet: Some(0.3),
+        seed: 11,
+        fixed_per_step: Some(2_000),
+    }
+}
+
+/// The acceptance criterion: three OS processes, one job, and a final
+/// report byte-identical to the in-process oracle.
+#[test]
+fn three_process_tcp_job_matches_in_process_oracle() {
+    let recipe = opts();
+    let dist = deployer()
+        .run("cfl-1", tcp_spec(3, None), &recipe)
+        .expect("multi-process run failed");
+    assert!(dist.killed.is_empty());
+
+    // Oracle: the same spec and the same recipe-built options, one
+    // process. `Backend::Tcp` costs one direct hop in-process too, so
+    // this is the byte-parity reference, not an approximation of it.
+    let oracle = Controller::new(Arc::new(Store::in_memory()))
+        .submit(tcp_spec(3, None), recipe.build())
+        .expect("in-process oracle failed");
+
+    assert_eq!(dist.workers, oracle.workers, "worker count diverges");
+    for s in SERIES {
+        assert_eq!(
+            dist.metrics.series(s),
+            oracle.metrics.series(s),
+            "series '{s}' diverges across the process boundary"
+        );
+    }
+    assert_eq!(
+        dist.total_bytes, oracle.total_bytes,
+        "traffic accounting diverges across the process boundary"
+    );
+    assert!(dist.vtime_s > 0.0, "merged report lost its virtual clock");
+}
+
+/// Fault injection: SIGKILL one all-trainer process after the mesh and
+/// memberships are fully established. Survivors must observe the broken
+/// streams, evict its roster through `Departed`, and finish on quorum —
+/// within the wire watchdog, never hanging.
+#[test]
+fn killed_trainer_process_maps_to_departed_and_quorum() {
+    let report = deployer()
+        .run_killing("cfl-kill", tcp_spec(3, Some(0.5)), &opts(), "trainer")
+        .expect("survivors failed to finish after trainer-process death");
+    assert_eq!(report.killed.len(), 1, "exactly one process is killed");
+    assert!(
+        !report.metrics.series("acc").is_empty(),
+        "survivors produced no rounds after the kill"
+    );
+    assert!(report.vtime_s > 0.0);
+    // The dead process hosted trainers only, so the merged report still
+    // carries the single-writer aggregator series end to end.
+    assert!(
+        !report.metrics.series("round_time_s").is_empty(),
+        "aggregator series lost in the merge"
+    );
+}

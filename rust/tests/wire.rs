@@ -1,0 +1,233 @@
+//! Wire-format properties: every payload variant survives a round trip
+//! bit-exactly, and corrupt or truncated frames are rejected — never
+//! mis-decoded, never a panic.
+
+use std::sync::Arc;
+
+use flame::channel::{Message, Payload};
+use flame::json::Json;
+use flame::prng::fnv1a64;
+use flame::runtime::EncodedUpdate;
+use flame::wire::{decode_from, encode_into, BufSlab, WireFrame};
+
+const SENDER: &str = "wiretest-sender";
+const DEST: &str = "wiretest-dest";
+const ARRIVAL: u64 = 777_001;
+
+fn encode(msg: &Message) -> Vec<u8> {
+    let route = flame::intern::route("", "wiretest-ch", "wiretest-grp").unwrap();
+    let mut buf = Vec::new();
+    encode_into(&mut buf, route, SENDER, DEST, ARRIVAL, msg).unwrap();
+    buf
+}
+
+/// Round-trip plus the header invariants every frame must preserve.
+fn roundtrip(msg: &Message) -> WireFrame {
+    let route = flame::intern::route("", "wiretest-ch", "wiretest-grp").unwrap();
+    let buf = encode(msg);
+    let f = decode_from(&buf).expect("well-formed frame must decode");
+    assert_eq!(f.route, route, "route word diverged");
+    assert_eq!(&*f.from, SENDER);
+    assert_eq!(&*f.to, DEST);
+    assert_eq!(f.arrival, ARRIVAL, "virtual-clock stamp diverged");
+    assert_eq!(&*f.msg.kind, &*msg.kind);
+    assert_eq!(f.msg.round, msg.round);
+    assert_eq!(f.msg.meta().dump(), msg.meta().dump(), "metadata diverged");
+    f
+}
+
+/// Recompute the trailing checksum after deliberately corrupting a header
+/// field, so the decoder's *structural* checks are reached (a stale
+/// checksum would mask them).
+fn refinalize(frame: &mut [u8]) {
+    let n = frame.len();
+    let sum = fnv1a64(&frame[..n - 8]);
+    frame[n - 8..].copy_from_slice(&sum.to_le_bytes());
+}
+
+#[test]
+fn floats_roundtrip_bit_exact() {
+    // bit patterns, not numeric equality: -0.0, denormals, infinities and
+    // NaN must cross the wire unchanged — model updates are not "close
+    // enough" data
+    let tricky = vec![
+        0.0f32,
+        -0.0,
+        1.5,
+        -3.25e-7,
+        f32::MIN_POSITIVE,
+        f32::from_bits(1), // smallest denormal
+        f32::MAX,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::NAN,
+    ];
+    let msg = Message::new("weights", 3, Payload::Floats(Arc::new(tricky.clone())));
+    let f = roundtrip(&msg);
+    match &f.msg.payload {
+        Payload::Floats(v) => {
+            assert_eq!(v.len(), tricky.len());
+            for (a, b) in v.iter().zip(&tricky) {
+                assert_eq!(a.to_bits(), b.to_bits(), "float bits changed in flight");
+            }
+        }
+        other => panic!("decoded wrong payload variant: {other:?}"),
+    }
+}
+
+#[test]
+fn empty_payload_and_meta_roundtrip() {
+    let mut meta = Json::obj();
+    meta.insert("weight", Json::Num(48.0));
+    meta.insert("departed", true);
+    meta.insert("tag", "quorum/evict");
+    let msg = Message::new("departed", 9, Payload::Empty).with_meta(Json::Obj(meta));
+    let f = roundtrip(&msg);
+    assert!(matches!(f.msg.payload, Payload::Empty));
+    assert_eq!(f.msg.meta().get("weight").as_f64(), Some(48.0));
+    // a meta-less message must decode back to null metadata (zero-length
+    // field), not an empty object
+    let bare = Message::new("ack", 1, Payload::Empty);
+    let f = roundtrip(&bare);
+    assert!(f.msg.meta().is_null());
+}
+
+#[test]
+fn json_payload_roundtrip() {
+    let mut o = Json::obj();
+    o.insert("round", 4usize);
+    o.insert("assign", Json::Arr(vec![Json::Str("t-1".into()), Json::Str("t-2".into())]));
+    let msg = Message::new("assign", 4, Payload::Json(Json::Obj(o)));
+    let f = roundtrip(&msg);
+    match &f.msg.payload {
+        Payload::Json(j) => {
+            assert_eq!(j.get("round").as_usize(), Some(4));
+            assert_eq!(j.get("assign").as_arr().map(<[Json]>::len), Some(2));
+        }
+        other => panic!("decoded wrong payload variant: {other:?}"),
+    }
+}
+
+#[test]
+fn encoded_variants_roundtrip() {
+    let f32_up = EncodedUpdate::F32 {
+        data: vec![1.0, -2.5, f32::MIN_POSITIVE],
+    };
+    let int8_up = EncodedUpdate::Int8 {
+        d: 5,
+        scale: 0.031_25,
+        q: vec![-128, -1, 0, 1, 127],
+    };
+    let topk_up = EncodedUpdate::TopK {
+        d: 1000,
+        idx: vec![0, 17, 999],
+        val: vec![0.5, -0.25, 3.0],
+    };
+    for up in [f32_up, int8_up, topk_up] {
+        let msg = Message::new("update", 2, Payload::Encoded(Arc::new(up.clone())));
+        let f = roundtrip(&msg);
+        match (&f.msg.payload, &up) {
+            (Payload::Encoded(got), want) => match (&**got, want) {
+                (EncodedUpdate::F32 { data: a }, EncodedUpdate::F32 { data: b }) => {
+                    assert_eq!(a, b)
+                }
+                (
+                    EncodedUpdate::Int8 { d: da, scale: sa, q: qa },
+                    EncodedUpdate::Int8 { d: db, scale: sb, q: qb },
+                ) => {
+                    assert_eq!(da, db);
+                    assert_eq!(sa.to_bits(), sb.to_bits());
+                    assert_eq!(qa, qb);
+                }
+                (
+                    EncodedUpdate::TopK { d: da, idx: ia, val: va },
+                    EncodedUpdate::TopK { d: db, idx: ib, val: vb },
+                ) => {
+                    assert_eq!(da, db);
+                    assert_eq!(ia, ib);
+                    assert_eq!(va, vb);
+                }
+                (got, want) => panic!("variant changed in flight: {want:?} -> {got:?}"),
+            },
+            (other, _) => panic!("decoded wrong payload variant: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn every_single_byte_corruption_is_rejected() {
+    let msg = Message::new("weights", 3, Payload::Floats(Arc::new(vec![1.0, 2.0, 3.0])))
+        .with_meta(Json::from(true));
+    let frame = encode(&msg);
+    for i in 0..frame.len() {
+        let mut bad = frame.clone();
+        bad[i] ^= 0x40;
+        assert!(
+            decode_from(&bad).is_err(),
+            "flipping byte {i}/{} went undetected",
+            frame.len()
+        );
+    }
+}
+
+#[test]
+fn every_truncation_is_rejected() {
+    let msg = Message::new("weights", 5, Payload::Floats(Arc::new(vec![0.25; 16])))
+        .with_meta(Json::from(7.5));
+    let frame = encode(&msg);
+    for len in 0..frame.len() {
+        assert!(
+            decode_from(&frame[..len]).is_err(),
+            "truncation to {len}/{} bytes went undetected",
+            frame.len()
+        );
+    }
+}
+
+#[test]
+fn structural_header_checks_fire_behind_a_valid_checksum() {
+    let msg = Message::new("weights", 1, Payload::Floats(Arc::new(vec![1.0])));
+    // bad magic
+    let mut bad = encode(&msg);
+    bad[0] ^= 0xff;
+    refinalize(&mut bad);
+    let err = decode_from(&bad).unwrap_err().to_string();
+    assert!(err.contains("magic"), "unexpected error: {err}");
+    // unsupported version
+    let mut bad = encode(&msg);
+    bad[4] = 99;
+    refinalize(&mut bad);
+    let err = decode_from(&bad).unwrap_err().to_string();
+    assert!(err.contains("version"), "unexpected error: {err}");
+    // unknown payload tag
+    let mut bad = encode(&msg);
+    bad[5] = 42;
+    refinalize(&mut bad);
+    let err = decode_from(&bad).unwrap_err().to_string();
+    assert!(err.contains("tag"), "unexpected error: {err}");
+}
+
+#[test]
+fn recycled_pages_converge_to_zero_growth() {
+    // behavioural twin of the alloc_regression pin: after a warm-up
+    // frame, re-encoding the same-shaped payload into a recycled page
+    // must never grow it
+    let slab = BufSlab::new();
+    let payload = Arc::new(vec![0.125f32; 256]);
+    let msg = Message::new("weights", 1, Payload::Floats(payload));
+    let route = flame::intern::route("", "wiretest-slab-ch", "g").unwrap();
+    let mut page = slab.take();
+    encode_into(&mut page, route, SENDER, DEST, 1, &msg).unwrap();
+    let cap = page.capacity();
+    slab.recycle(page);
+    for i in 0..100 {
+        let mut page = slab.take();
+        assert_eq!(page.capacity(), cap, "iteration {i}: page was not recycled");
+        encode_into(&mut page, route, SENDER, DEST, 1 + i, &msg).unwrap();
+        assert_eq!(page.capacity(), cap, "iteration {i}: encode grew the page");
+        slab.recycle(page);
+    }
+    let stats = slab.stats();
+    assert_eq!(stats.fresh, 1, "steady state must reuse the one warm page");
+    assert_eq!(stats.reused, 100);
+}
