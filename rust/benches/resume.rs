@@ -1,0 +1,118 @@
+//! Checkpoint-commit bench: journal bytes/round and commit latency for
+//! full-snapshot-every-epoch vs incremental (delta-chain) encoding, at a
+//! boundary payload shaped like a real job's — a drifting global model,
+//! per-worker snapshots that mostly repeat, a landed-sender census.
+//!
+//! ```bash
+//! cargo bench --bench resume           # full sweep
+//! cargo bench --bench resume -- --test # CI smoke
+//! ```
+//!
+//! Prints the table and writes `BENCH_resume.json` in the working
+//! directory. The drift pattern moves ~5% of the model per round, so the
+//! incremental column shows what the XOR/run-length delta encoder buys on
+//! the steady-state rounds between chain-resetting full snapshots.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use flame::alloc_track::bench_smoke as smoke;
+use flame::controlplane::checkpoint::{CkptPolicy, CkptSink};
+use flame::json::Json;
+use flame::store::Store;
+
+/// Guard a value headed for BENCH_resume.json: finite and positive or bust.
+fn checked(name: &str, v: f64) -> f64 {
+    assert!(
+        v.is_finite() && v > 0.0,
+        "bench value '{name}' is {v} — refusing to write a null/NaN result \
+         into BENCH_resume.json; fix the measurement instead"
+    );
+    v
+}
+
+/// Commit `epochs` boundaries under the given incremental-chain bound and
+/// report (journal bytes per round, mean commit latency in ms).
+fn run(full_every: u64, d: usize, workers: usize, epochs: u64) -> (f64, f64) {
+    let store = Arc::new(Store::in_memory());
+    let sink = CkptSink::new(
+        "bench",
+        CkptPolicy::every_round().with_full_every(full_every),
+        true,
+    );
+    sink.bind_store(store);
+    sink.set_flavor("sync");
+    let ids: Vec<String> = (0..workers).map(|w| format!("bench-trainer-{w}")).collect();
+    let mut state: Vec<f32> = (0..d).map(|j| (j as f32 * 0.001).sin()).collect();
+    let t0 = Instant::now();
+    for round in 1..=epochs {
+        // sparse drift: every 20th coordinate moves, offset walks per round
+        let mut j = (round as usize * 7) % 20;
+        while j < d {
+            state[j] += 0.01 * round as f32;
+            j += 20;
+        }
+        let global = Json::Arr(state.iter().map(|v| Json::Num(*v as f64)).collect());
+        for (w, id) in ids.iter().enumerate() {
+            // one slot per snapshot changes each round (rng cursor, clock)
+            let snap = Json::Arr(
+                (0..32)
+                    .map(|i| {
+                        Json::Num(if i == (round as usize + w) % 32 {
+                            round as f64
+                        } else {
+                            i as f64
+                        })
+                    })
+                    .collect(),
+            );
+            sink.publish(id, snap);
+        }
+        sink.commit(round, round - 1, global, Json::Null, Json::Null, &ids)
+            .expect("commit");
+    }
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / epochs as f64;
+    let bytes_per_round = sink.bytes_written() as f64 / epochs as f64;
+    (bytes_per_round, ms)
+}
+
+fn main() {
+    let (d, workers, epochs) = if smoke() { (512, 4, 12) } else { (16_384, 8, 48) };
+
+    println!("checkpoint commits — d={d}, {workers} workers, {epochs} epochs\n");
+    println!(
+        "{:<12} {:>14} {:>12}",
+        "encoding", "bytes/round", "commit ms"
+    );
+
+    let (full_bpr, full_ms) = run(0, d, workers, epochs);
+    println!("{:<12} {full_bpr:>14.0} {full_ms:>12.3}", "full");
+    let (inc_bpr, inc_ms) = run(8, d, workers, epochs);
+    println!("{:<12} {inc_bpr:>14.0} {inc_ms:>12.3}", "incremental");
+
+    let savings = full_bpr / inc_bpr;
+    println!("\nincremental journal savings: {savings:.1}x");
+    assert!(
+        savings > 1.0,
+        "incremental encoding wrote MORE bytes/round ({inc_bpr:.0}) than full \
+         snapshots ({full_bpr:.0}) — the delta chain is not paying for itself"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"resume\",\n  \"scenario\": \"commit {epochs} round boundaries, \
+         d={d} global + {workers} worker snapshots, ~5% model drift/round; full = snapshot \
+         every epoch, incremental = delta chain with a full snapshot every 8th\",\n  \
+         \"status\": \"regenerate with `cargo bench --bench resume` — this file is \
+         overwritten in place\",\n  \
+         \"full\": {{\"bytes_per_round\": {fb:.0}, \"commit_ms\": {fm:.4}}},\n  \
+         \"incremental\": {{\"bytes_per_round\": {ib:.0}, \"commit_ms\": {im:.4}}},\n  \
+         \"journal_savings_ratio\": {sv:.2}\n}}\n",
+        fb = checked("full.bytes_per_round", full_bpr),
+        fm = checked("full.commit_ms", full_ms),
+        ib = checked("incremental.bytes_per_round", inc_bpr),
+        im = checked("incremental.commit_ms", inc_ms),
+        sv = checked("journal_savings_ratio", savings),
+    );
+    std::fs::write("BENCH_resume.json", json).expect("write BENCH_resume.json");
+    println!("\nwrote BENCH_resume.json");
+}

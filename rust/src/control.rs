@@ -495,22 +495,33 @@ pub(crate) fn prepare_expanded(
             bail!("aggregator failover is not supported on ring/all-reduce topologies");
         }
     }
-    // Live (durable) checkpointing needs the round boundary to be a true
-    // barrier: synchronous aggregation at full quorum under a round
-    // sequencer, with no coordinator membership protocol and no frozen
-    // ring groups. Other shapes keep the sink for failover seeding but
-    // resume by restarting from round 0 (byte-identical by per-job
-    // determinism).
-    let live_ckpt = sync_agg
-        && tcfg.quorum >= 1.0
-        && flavor != Flavor::Coordinated
-        && flavor != Flavor::Distributed
-        && spec.role("global-aggregator").is_some()
-        && !has_ring;
+    // Live (durable) checkpointing needs the boundary the committing
+    // worker snapshots at to be a true barrier. Every flavor now
+    // establishes one: full-quorum sync collects block until all uploads
+    // land; partial-quorum sync drains its stragglers at the boundary;
+    // async/FedBuff holds a version-boundary barrier (replies withheld
+    // until every outstanding update lands); ring and hybrid topologies
+    // emit collective-op epoch markers to the committing delegate. Only
+    // coordinated jobs stay excluded — the coordinator owns its own
+    // membership/termination protocol, and its jobs resume by restarting
+    // from round 0 (byte-identical by per-job determinism).
+    let live_ckpt = flavor != Flavor::Coordinated
+        && (flavor == Flavor::Distributed || spec.role("global-aggregator").is_some());
     let ckpt_sink = opts
         .ckpt
         .as_ref()
         .map(|policy| CkptSink::new(job_label, policy.clone(), live_ckpt));
+    if let Some(sink) = &ckpt_sink {
+        sink.set_flavor(if has_ring && flavor != Flavor::Distributed {
+            "hybrid"
+        } else if !sync_agg {
+            "async"
+        } else if flavor == Flavor::Distributed {
+            "ring"
+        } else {
+            flavor.name()
+        });
+    }
 
     // Resume: jump the worker set to the checkpoint boundary (replaying
     // the first `cursor` timeline entries' deploys/evicts/mutations via

@@ -1,25 +1,27 @@
 //! Round-boundary job checkpoints — the crash-resilience substrate.
 //!
-//! Flame's control plane snapshots each job's runtime state at round
-//! boundaries into the [`Store`]'s `job_ckpt` collection, so a controller
-//! killed at *any* boundary can resume the job and produce a final report
-//! byte-identical to an unkilled run (see DESIGN.md "Crash resilience &
-//! failover").
+//! Flame's control plane snapshots each job's runtime state at round (or,
+//! for asynchronous jobs, version) boundaries into the [`Store`]'s
+//! `job_ckpt` collection, so a controller killed at *any* boundary can
+//! resume the job and produce a final report byte-identical to an unkilled
+//! run (see DESIGN.md "Crash resilience & failover").
 //!
 //! The moving parts:
 //!
 //! * [`CkptPolicy`] — per-job knobs carried on `JobOptions`: checkpoint
-//!   cadence, an injectable controller kill point, and whether mid-tier
-//!   aggregator failover is armed.
+//!   cadence, a scriptable [`FaultPlan`], whether mid-tier aggregator
+//!   failover is armed, and the incremental-chain bound (`full_every`).
 //! * [`CkptSink`] — the per-job collection point shared through
 //!   [`crate::roles::JobRuntime`]. Uploading workers *publish* their
 //!   boundary snapshot into the sink's hub immediately **before** their
-//!   upload send; because a synchronous quorum-1.0 collect only returns
-//!   once every child's upload arrived, the send gives a happens-before
-//!   edge: when the global aggregator reaches the next round boundary,
-//!   every worker's published snapshot is current. The global's
-//!   checkpoint tasklet then *commits* hub + its own state as one atomic
-//!   `put_batch`.
+//!   upload send; the committing worker (global aggregator or ring
+//!   delegate) only commits once every peer's boundary message has
+//!   arrived, so the send gives a happens-before edge: at commit time
+//!   every worker's published snapshot is current. How each flavor
+//!   establishes that barrier differs — synchronous quorum < 1.0 collects
+//!   drain stragglers at the boundary, async/FedBuff holds a
+//!   version-boundary barrier, ring members emit collective-op epoch
+//!   markers — but the commit contract is the same.
 //! * [`JobCheckpoint`] — the decoded checkpoint a resumed job rehydrates
 //!   from ([`load_latest`]).
 //!
@@ -30,6 +32,17 @@
 //! [`Store::compact`]. A crash between the two batches therefore leaves
 //! either the previous head (its parts still intact — GC had not run) or
 //! the new head (its parts committed atomically): never a torn state.
+//!
+//! Incremental epochs: model state is O(d), so journaling a full snapshot
+//! every round dominates checkpoint cost at `flame scale` sizes. Commits
+//! therefore delta-encode each record against the *previous* epoch
+//! (`meta.base` names it): float arrays become XOR-of-f32-bits token
+//! strings with zero runs run-length collapsed, grown arrays (metric
+//! series) store only their appended tail, unchanged subtrees collapse to
+//! a same marker. Every `full_every`-th commit writes a full epoch to
+//! bound the chain, and GC never collects an epoch that a live chain's
+//! head still reaches through base pointers — [`load_latest`] rebuilds
+//! state by replaying the chain from its full root forward.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -37,29 +50,160 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
-use crate::json::{self, Json};
+use crate::json::{self, Json, Obj};
 use crate::store::Store;
 use crate::tag::WorkerConfig;
 
 /// Store collection holding checkpoint records.
 pub const CKPT_COLLECTION: &str = "job_ckpt";
 
+/// Wrapper key marking a record as delta-encoded against its base epoch.
+const DELTA_KEY: &str = "__delta";
+
+/// Default incremental-chain bound: every 8th commit is a full snapshot.
+const DEFAULT_FULL_EVERY: u64 = 8;
+
+// ------------------------------------------------------------ fault plans
+
+/// Who a scripted fault takes down.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultVictim {
+    /// The job's committing worker (global aggregator / ring delegate):
+    /// its pod bails right **after** the boundary commit, taking the whole
+    /// job down (parked peers are culled by stall detection). The store
+    /// keeps the checkpoint; `JobManager::resume` picks it up.
+    Controller,
+    /// A named worker pod: it bails at its own boundary upload. With
+    /// failover armed the control plane redeploys it; otherwise the job
+    /// fails and resumes from the last committed epoch.
+    Worker(String),
+}
+
+/// One scripted fault: kill `victim` at round/version boundary `boundary`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub boundary: u64,
+    pub victim: FaultVictim,
+}
+
+/// A deterministic, per-job fault script — the generalization of the old
+/// single `kill_at` knob. Faults are data on the job's [`CkptPolicy`]
+/// (like topology events on the spec), so a kill matrix is a set of plans,
+/// not env-var plumbing; `FLAME_KILL_POINT` survives only as a CI filter
+/// choosing which plans a test shard runs.
+///
+/// The text form round-trips through [`FaultPlan::parse`] /
+/// [`FaultPlan::dump`]: comma- or space-separated `victim@boundary`
+/// entries where the victim is `controller` or a worker id, e.g.
+/// `"controller@3"` or `"rsm-trainer-1@2,controller@4"`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Plan with a single controller kill after the boundary-`round` commit.
+    pub fn kill_controller_at(boundary: u64) -> Self {
+        Self {
+            events: vec![FaultEvent {
+                boundary,
+                victim: FaultVictim::Controller,
+            }],
+        }
+    }
+
+    /// Add a worker kill at `boundary` (builder).
+    pub fn and_kill_worker(mut self, worker: impl Into<String>, boundary: u64) -> Self {
+        self.events.push(FaultEvent {
+            boundary,
+            victim: FaultVictim::Worker(worker.into()),
+        });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Does the plan kill the controller at this boundary?
+    pub fn kills_controller_at(&self, boundary: u64) -> bool {
+        self.events
+            .iter()
+            .any(|e| e.boundary == boundary && e.victim == FaultVictim::Controller)
+    }
+
+    /// Does a scripted controller kill land in `(prev, boundary]`? Commits
+    /// don't visit every integer boundary (cadence > 1; async versions can
+    /// skip when the drain buffers past the due version), so the kill
+    /// check fires at the first *committed* boundary at or after the
+    /// scripted one.
+    pub fn controller_kill_between(&self, prev: u64, boundary: u64) -> bool {
+        self.events.iter().any(|e| {
+            e.victim == FaultVictim::Controller && e.boundary > prev && e.boundary <= boundary
+        })
+    }
+
+    /// Does the plan kill worker `id` at this boundary?
+    pub fn kills_worker_at(&self, id: &str, boundary: u64) -> bool {
+        self.events
+            .iter()
+            .any(|e| e.boundary == boundary && matches!(&e.victim, FaultVictim::Worker(w) if w == id))
+    }
+
+    /// Parse the `victim@boundary[,victim@boundary...]` text form.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        for part in s.split([',', ' ']).filter(|p| !p.is_empty()) {
+            let (victim, boundary) = part
+                .rsplit_once('@')
+                .with_context(|| format!("fault '{part}': expected victim@boundary"))?;
+            let boundary: u64 = boundary
+                .parse()
+                .with_context(|| format!("fault '{part}': boundary must be a round/version"))?;
+            let victim = if victim == "controller" {
+                FaultVictim::Controller
+            } else if victim.is_empty() {
+                bail!("fault '{part}': empty victim");
+            } else {
+                FaultVictim::Worker(victim.to_string())
+            };
+            events.push(FaultEvent { boundary, victim });
+        }
+        Ok(Self { events })
+    }
+
+    /// Inverse of [`FaultPlan::parse`].
+    pub fn dump(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| match &e.victim {
+                FaultVictim::Controller => format!("controller@{}", e.boundary),
+                FaultVictim::Worker(w) => format!("{w}@{}", e.boundary),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+// ---------------------------------------------------------------- policy
+
 /// Per-job crash-resilience policy (set through `JobOptions::with_ckpt`).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CkptPolicy {
     /// Checkpoint every `every` round boundaries (1 = every boundary,
     /// 0 = never write checkpoints).
     pub every: u64,
-    /// Injected controller kill: the global's checkpoint tasklet fails its
-    /// pod immediately **after** committing the boundary-`round`
-    /// checkpoint, taking the whole job down (parked workers are culled by
-    /// the scheduler's stall detection). The store keeps the checkpoint;
-    /// `JobManager::resume` picks it up.
-    pub kill_at: Option<u64>,
+    /// Scripted deterministic faults (controller/worker kills at chosen
+    /// boundaries) — see [`FaultPlan`].
+    pub faults: FaultPlan,
     /// Arm mid-tier aggregator failover: when an aggregator pod dies
     /// mid-run, the control plane evicts it and schedules a replacement
     /// pod under the same worker id (see `controlplane` JobTracker).
     pub failover: bool,
+    /// Incremental-chain bound: every `full_every`-th commit writes a full
+    /// snapshot; the ones between are deltas against their predecessor.
+    /// 0 disables incremental encoding (every epoch full).
+    pub full_every: u64,
 }
 
 impl CkptPolicy {
@@ -67,19 +211,25 @@ impl CkptPolicy {
     pub fn every_round() -> Self {
         Self {
             every: 1,
-            kill_at: None,
+            faults: FaultPlan::default(),
             failover: false,
+            full_every: DEFAULT_FULL_EVERY,
         }
     }
 
     /// Checkpoint every boundary and kill the controller right after the
-    /// boundary-`round` commit.
+    /// boundary-`round` commit (shorthand for a one-event [`FaultPlan`]).
     pub fn kill_at(round: u64) -> Self {
         Self {
-            every: 1,
-            kill_at: Some(round),
-            failover: false,
+            faults: FaultPlan::kill_controller_at(round),
+            ..Self::every_round()
         }
+    }
+
+    /// Checkpoint every boundary and run the given fault script.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
     }
 
     /// Arm aggregator failover (no checkpoint cadence needed).
@@ -87,18 +237,34 @@ impl CkptPolicy {
         self.failover = true;
         self
     }
+
+    /// Override the incremental-chain bound (0 = always full snapshots).
+    pub fn with_full_every(mut self, n: u64) -> Self {
+        self.full_every = n;
+        self
+    }
 }
+
+// ------------------------------------------------------------ checkpoint
 
 /// One decoded job checkpoint: everything a resumed job needs beyond its
 /// spec to restart at a round boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobCheckpoint {
-    /// The boundary this checkpoint captures: rounds `1..=round` are done.
+    /// The boundary this checkpoint captures: rounds `1..=round` are done
+    /// (for async jobs, versions `1..=round`).
     pub round: u64,
     /// Timeline entries the dead run had already drained — the resumed
     /// job replays these against the initial expansion to rebuild its
     /// boundary membership, and skips them in the rebuilt timeline.
     pub cursor: u64,
+    /// Mechanism flavor that wrote the checkpoint (`sync`, `async`,
+    /// `ring`, ... — reported by `flame resume --list`).
+    pub flavor: String,
+    /// Senders whose updates landed in the committed boundary window —
+    /// the quorum < 1.0 census (every selected trainer for full-quorum
+    /// sync, the drained membership for async versions). Sorted.
+    pub landed: Vec<String>,
     /// Global-aggregator state (model, server optimizer, selector, rounds,
     /// clock — encoded by `roles::global`).
     pub global: Json,
@@ -119,15 +285,27 @@ fn head_key(job: &str) -> String {
     format!("{job}/head")
 }
 
+/// Previous committed epoch, cached so the next commit can delta against
+/// it without a store read: plain (decoded) records by suffix plus the
+/// base-first list of epochs in the live delta chain.
+struct PrevEpoch {
+    epoch: u64,
+    records: BTreeMap<String, Json>,
+    chain: Vec<u64>,
+}
+
 /// Per-job checkpoint collection point, shared via `JobRuntime::ckpt`.
 pub struct CkptSink {
     job: String,
     policy: CkptPolicy,
     /// Does this job actually write checkpoints? Live checkpointing is
-    /// gated by the controller to topologies where the boundary is a true
-    /// barrier (synchronous aggregation, quorum 1.0, no coordinator, no
-    /// ring channels); other jobs resume by restarting from round 0.
+    /// gated by the controller to the flavors whose boundary barrier is
+    /// implemented (sync at any quorum, async/FedBuff, ring/hybrid);
+    /// coordinated jobs resume by restarting from round 0.
     live: bool,
+    /// Mechanism flavor recorded in every epoch's meta (set by the
+    /// control plane at sink construction; defaults to `sync`).
+    flavor: OnceLock<String>,
     /// Latest published per-worker snapshots.
     hub: Mutex<HashMap<String, Json>>,
     /// Bound by the control plane once the job's store is known (the
@@ -143,6 +321,12 @@ pub struct CkptSink {
     /// Pods recovered by failover; the fleet's finish path offsets its
     /// failed-pod count by this so a failed-over job still completes.
     recovered: AtomicU64,
+    /// Cache of the previous committed epoch (incremental encoding).
+    prev: Mutex<Option<PrevEpoch>>,
+    /// Journal bytes written by commits (keys + serialized values) — the
+    /// store-level measure `rust/benches/resume.rs` compares full vs
+    /// incremental encoding with.
+    written: AtomicU64,
 }
 
 impl CkptSink {
@@ -151,11 +335,14 @@ impl CkptSink {
             job: job.into(),
             policy,
             live,
+            flavor: OnceLock::new(),
             hub: Mutex::new(HashMap::new()),
             store: OnceLock::new(),
             cfgs: Mutex::new(HashMap::new()),
             seeds: Mutex::new(HashMap::new()),
             recovered: AtomicU64::new(0),
+            prev: Mutex::new(None),
+            written: AtomicU64::new(0),
         })
     }
 
@@ -168,12 +355,22 @@ impl CkptSink {
         self.live
     }
 
+    /// Record the job's mechanism flavor (idempotent).
+    pub fn set_flavor(&self, flavor: &str) {
+        let _ = self.flavor.set(flavor.to_string());
+    }
+
+    pub fn flavor(&self) -> &str {
+        self.flavor.get().map(|s| s.as_str()).unwrap_or("sync")
+    }
+
     /// Bind the job's store (idempotent; called by the control plane).
     pub fn bind_store(&self, store: Arc<Store>) {
         let _ = self.store.set(store);
     }
 
-    /// Should the global's checkpoint tasklet commit at this boundary?
+    /// Should the committing worker's checkpoint tasklet commit at this
+    /// boundary?
     pub fn due(&self, round: u64) -> bool {
         self.policy.every > 0 && round > 0 && round % self.policy.every == 0
     }
@@ -216,10 +413,17 @@ impl CkptSink {
         self.recovered.load(Ordering::SeqCst)
     }
 
+    /// Total journal bytes commits have written (keys + values).
+    pub fn bytes_written(&self) -> u64 {
+        self.written.load(Ordering::SeqCst)
+    }
+
     /// Commit the boundary-`round` checkpoint: hub snapshots + the
-    /// global's own state, one atomic `put_batch` with the head pointer
-    /// last, then GC of superseded epochs. No-op (hub retained) when the
-    /// sink is not live or no store is bound.
+    /// committing worker's own state, one atomic `put_batch` with the head
+    /// pointer last, then GC of epochs no live chain reaches. `landed` is
+    /// the boundary's landed-sender census (see [`JobCheckpoint::landed`]).
+    /// No-op (hub retained) when the sink is not live or no store is
+    /// bound.
     pub fn commit(
         &self,
         round: u64,
@@ -227,6 +431,7 @@ impl CkptSink {
         global: Json,
         metrics: Json,
         trace: Json,
+        landed: &[String],
     ) -> Result<()> {
         if !self.live {
             return Ok(());
@@ -245,44 +450,99 @@ impl CkptSink {
             .iter()
             .map(|(k, v)| (k.clone(), v.clone()))
             .collect();
+        let mut records: Vec<(String, Json)> =
+            vec![("global".into(), global), ("metrics".into(), metrics)];
+        if !matches!(trace, Json::Null) {
+            records.push(("trace".into(), trace));
+        }
+        for (id, snap) in &workers {
+            records.push((format!("w/{id}"), snap.clone()));
+        }
+
+        let mut prev = self.prev.lock().unwrap();
+        let full = self.policy.full_every == 0
+            || prev
+                .as_ref()
+                .map_or(true, |p| p.chain.len() as u64 >= self.policy.full_every);
+        let base = if full { None } else { prev.as_ref().map(|p| p.epoch) };
+
         let mut meta = Json::obj();
         meta.insert("round", json::from_u64_hex(round));
         meta.insert("cursor", json::from_u64_hex(cursor));
+        meta.insert("flavor", self.flavor());
+        if let Some(b) = base {
+            meta.insert("base", json::from_u64_hex(b));
+        }
+        if !landed.is_empty() {
+            let mut census: Vec<&String> = landed.iter().collect();
+            census.sort();
+            meta.insert(
+                "landed",
+                Json::Arr(census.into_iter().map(|s| Json::Str(s.clone())).collect()),
+            );
+        }
         meta.insert(
             "workers",
             Json::Arr(workers.keys().map(|k| Json::Str(k.clone())).collect()),
         );
-        let mut batch: Vec<(String, Json)> = Vec::with_capacity(workers.len() + 4);
+
+        let mut batch: Vec<(String, Json)> = Vec::with_capacity(records.len() + 2);
         batch.push((format!("{prefix}/meta"), Json::Obj(meta)));
-        batch.push((format!("{prefix}/global"), global));
-        batch.push((format!("{prefix}/metrics"), metrics));
-        if !matches!(trace, Json::Null) {
-            batch.push((format!("{prefix}/trace"), trace));
-        }
-        for (id, snap) in &workers {
-            batch.push((format!("{prefix}/w/{id}"), snap.clone()));
+        for (suffix, value) in &records {
+            let stored = match (base, prev.as_ref().and_then(|p| p.records.get(suffix))) {
+                (Some(_), Some(prev_v)) => delta_record(prev_v, value),
+                _ => value.clone(),
+            };
+            batch.push((format!("{prefix}/{suffix}"), stored));
         }
         // the head record goes LAST: it is the commit marker — a torn
         // batch leaves the previous head pointing at intact records
         let mut head = Json::obj();
         head.insert("epoch", json::from_u64_hex(epoch));
         batch.push((head_key(&self.job), Json::Obj(head)));
+        let bytes: u64 = batch
+            .iter()
+            .map(|(k, v)| (k.len() + v.dump().len()) as u64)
+            .sum();
         store.put_batch(CKPT_COLLECTION, batch)?;
-        self.gc(store, epoch)?;
+        self.written.fetch_add(bytes, Ordering::SeqCst);
+
+        let mut chain = if full {
+            Vec::new()
+        } else {
+            prev.take().map(|p| p.chain).unwrap_or_default()
+        };
+        chain.push(epoch);
+        let keep = chain.clone();
+        *prev = Some(PrevEpoch {
+            epoch,
+            records: records.into_iter().collect(),
+            chain,
+        });
+        drop(prev);
+        self.gc(store, &keep)?;
         Ok(())
     }
 
-    /// Drop every record of epochs other than `keep` (tombstones), then
-    /// compact the journal so superseded snapshots stop occupying disk.
-    /// Runs only after the new head is durable; a crash mid-GC leaves
-    /// stale-but-unreferenced records the next GC sweep removes.
-    fn gc(&self, store: &Arc<Store>, keep: u64) -> Result<()> {
-        let keep_prefix = format!("{}/", epoch_prefix(&self.job, keep));
+    /// Drop every record of epochs outside the live chain `keep`
+    /// (tombstones), then compact the journal so superseded snapshots stop
+    /// occupying disk. Runs only after the new head is durable; a crash
+    /// mid-GC leaves stale-but-unreferenced records the next GC sweep
+    /// removes. An epoch that is the base of a live delta chain is in
+    /// `keep` by construction and therefore never collected.
+    fn gc(&self, store: &Arc<Store>, keep: &[u64]) -> Result<()> {
+        let keep_prefixes: Vec<String> = keep
+            .iter()
+            .map(|e| format!("{}/", epoch_prefix(&self.job, *e)))
+            .collect();
         let job_prefix = format!("{}/", self.job);
         let head = head_key(&self.job);
         let mut dropped = false;
         for key in store.keys(CKPT_COLLECTION) {
-            if key.starts_with(&job_prefix) && !key.starts_with(&keep_prefix) && key != head {
+            if key.starts_with(&job_prefix)
+                && key != head
+                && !keep_prefixes.iter().any(|p| key.starts_with(p))
+            {
                 store.delete(CKPT_COLLECTION, &key)?;
                 dropped = true;
             }
@@ -294,53 +554,286 @@ impl CkptSink {
     }
 }
 
+// ------------------------------------------------------------------ load
+
 /// Load the latest *committed* checkpoint of `job`, trusting only the
 /// epoch the head pointer names (torn tails past the head are invisible
-/// by construction). `Ok(None)` when the job never checkpointed.
+/// by construction). Delta epochs are rebuilt by walking `meta.base`
+/// pointers down to the chain's full root and replaying the deltas
+/// forward. `Ok(None)` when the job never checkpointed.
 pub fn load_latest(store: &Arc<Store>, job: &str) -> Result<Option<JobCheckpoint>> {
     let Some(head) = store.get(CKPT_COLLECTION, &head_key(job)) else {
         return Ok(None);
     };
     let epoch = json::as_u64_hex(head.get("epoch"))
         .with_context(|| format!("job '{job}': malformed checkpoint head"))?;
-    let prefix = epoch_prefix(job, epoch);
-    let meta = store
-        .get(CKPT_COLLECTION, &format!("{prefix}/meta"))
-        .with_context(|| format!("job '{job}': checkpoint epoch {epoch} missing meta"))?;
+    // walk base pointers to the full root (base epochs strictly decrease,
+    // so a malformed pointer cannot loop)
+    let mut chain: Vec<(u64, Json)> = Vec::new();
+    let mut at = epoch;
+    loop {
+        let meta = store
+            .get(CKPT_COLLECTION, &format!("{}/meta", epoch_prefix(job, at)))
+            .with_context(|| format!("job '{job}': checkpoint epoch {at} missing meta"))?;
+        let base = json::as_u64_hex(meta.get("base"));
+        chain.push((at, meta));
+        match base {
+            Some(b) if b < at => at = b,
+            Some(b) => bail!("job '{job}': epoch {at} has non-decreasing base {b}"),
+            None => break,
+        }
+    }
+    chain.reverse();
+
+    // replay the chain forward, decoding deltas against accumulated state
+    let mut records: BTreeMap<String, Json> = BTreeMap::new();
+    for (e, meta) in &chain {
+        let prefix = epoch_prefix(job, *e);
+        let mut suffixes: Vec<(String, bool)> =
+            vec![("global".into(), true), ("metrics".into(), false), ("trace".into(), false)];
+        let Some(ids) = meta.get("workers").as_arr() else {
+            bail!("job '{job}': checkpoint meta missing worker list");
+        };
+        for id in ids {
+            let Some(id) = id.as_str() else {
+                bail!("job '{job}': malformed checkpoint worker list");
+            };
+            suffixes.push((format!("w/{id}"), true));
+        }
+        for (suffix, required) in suffixes {
+            let raw = store.get(CKPT_COLLECTION, &format!("{prefix}/{suffix}"));
+            let Some(raw) = raw else {
+                if required {
+                    bail!("job '{job}': checkpoint epoch {e} missing record '{suffix}'");
+                }
+                continue;
+            };
+            let decoded = decode_record(records.get(&suffix), raw).with_context(|| {
+                format!("job '{job}': checkpoint epoch {e} record '{suffix}'")
+            })?;
+            records.insert(suffix, decoded);
+        }
+    }
+
+    let (_, meta) = chain.last().expect("chain has the head epoch");
     let round = json::as_u64_hex(meta.get("round")).context("checkpoint meta missing round")?;
     let cursor = json::as_u64_hex(meta.get("cursor")).context("checkpoint meta missing cursor")?;
-    let global = store
-        .get(CKPT_COLLECTION, &format!("{prefix}/global"))
+    let flavor = meta.get("flavor").as_str().unwrap_or("sync").to_string();
+    let landed = meta
+        .get("landed")
+        .as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|s| s.as_str().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default();
+    let global = records
+        .remove("global")
         .with_context(|| format!("job '{job}': checkpoint epoch {epoch} missing global state"))?;
-    let metrics = store
-        .get(CKPT_COLLECTION, &format!("{prefix}/metrics"))
-        .unwrap_or(Json::Null);
-    let trace = store
-        .get(CKPT_COLLECTION, &format!("{prefix}/trace"))
-        .unwrap_or(Json::Null);
+    let metrics = records.remove("metrics").unwrap_or(Json::Null);
+    let trace = records.remove("trace").unwrap_or(Json::Null);
     let mut workers = BTreeMap::new();
     let Some(ids) = meta.get("workers").as_arr() else {
         bail!("job '{job}': checkpoint meta missing worker list");
     };
     for id in ids {
-        let Some(id) = id.as_str() else {
-            bail!("job '{job}': malformed checkpoint worker list");
-        };
-        let snap = store
-            .get(CKPT_COLLECTION, &format!("{prefix}/w/{id}"))
-            .with_context(|| {
-                format!("job '{job}': checkpoint epoch {epoch} missing worker '{id}'")
-            })?;
+        let id = id.as_str().unwrap_or_default();
+        let snap = records.remove(&format!("w/{id}")).with_context(|| {
+            format!("job '{job}': checkpoint epoch {epoch} missing worker '{id}'")
+        })?;
         workers.insert(id.to_string(), snap);
     }
     Ok(Some(JobCheckpoint {
         round,
         cursor,
+        flavor,
+        landed,
         global,
         workers,
         metrics,
         trace,
     }))
+}
+
+// -------------------------------------------------------- delta encoding
+
+/// Wrap `cur` as a delta record against `prev` (its decoded predecessor).
+fn delta_record(prev: &Json, cur: &Json) -> Json {
+    let mut w = Json::obj();
+    w.insert(DELTA_KEY, Json::Obj(delta_value(prev, cur)));
+    Json::Obj(w)
+}
+
+/// Decode a stored record: plain values pass through, delta wrappers are
+/// applied against the accumulated predecessor state.
+fn decode_record(prev: Option<&Json>, raw: Json) -> Result<Json> {
+    let is_delta = raw
+        .as_obj()
+        .map(|o| o.len() == 1 && o.contains(DELTA_KEY))
+        .unwrap_or(false);
+    if !is_delta {
+        return Ok(raw);
+    }
+    let prev = prev.context("delta record without a base predecessor")?;
+    let tag = raw
+        .get(DELTA_KEY)
+        .as_obj()
+        .context("malformed delta wrapper")?;
+    apply_delta(prev, tag)
+}
+
+/// Encode `cur` against `prev` as a one-of tag object:
+/// `s` same · `x` XOR float tokens · `a` appended array tail ·
+/// `o` per-key object delta · `f` full replacement.
+fn delta_value(prev: &Json, cur: &Json) -> Obj {
+    let mut t = Obj::new();
+    if prev == cur {
+        t.insert("s", true);
+        return t;
+    }
+    if let (Json::Arr(p), Json::Arr(c)) = (prev, cur) {
+        if p.len() == c.len() {
+            if let (Some(pb), Some(cb)) = (f32_bits(p), f32_bits(c)) {
+                t.insert("x", xor_tokens(&pb, &cb));
+                return t;
+            }
+        }
+        if c.len() > p.len() && c[..p.len()] == p[..] {
+            t.insert("a", Json::Arr(c[p.len()..].to_vec()));
+            return t;
+        }
+    }
+    if let (Json::Obj(po), Json::Obj(co)) = (prev, cur) {
+        // the current key set is authoritative: keys absent here are
+        // dropped on decode, keys without a predecessor store full
+        let mut d = Obj::new();
+        for (k, cv) in co.iter() {
+            let enc = match po.get(k) {
+                Some(pv) => delta_value(pv, cv),
+                None => {
+                    let mut f = Obj::new();
+                    f.insert("f", cv.clone());
+                    f
+                }
+            };
+            d.insert(k.clone(), Json::Obj(enc));
+        }
+        t.insert("o", Json::Obj(d));
+        return t;
+    }
+    t.insert("f", cur.clone());
+    t
+}
+
+/// Invert [`delta_value`].
+fn apply_delta(prev: &Json, tag: &Obj) -> Result<Json> {
+    if tag.contains("s") {
+        return Ok(prev.clone());
+    }
+    if let Some(tokens) = tag.get("x") {
+        let tokens = tokens.as_str().context("delta 'x' must be a string")?;
+        let base = prev.as_arr().context("delta 'x' against a non-array")?;
+        let bits = f32_bits(base).context("delta 'x' against non-f32 floats")?;
+        return xor_apply(&bits, tokens);
+    }
+    if let Some(tail) = tag.get("a") {
+        let tail = tail.as_arr().context("delta 'a' must be an array")?;
+        let mut out = prev.as_arr().context("delta 'a' against a non-array")?.to_vec();
+        out.extend(tail.iter().cloned());
+        return Ok(Json::Arr(out));
+    }
+    if let Some(inner) = tag.get("o") {
+        let inner = inner.as_obj().context("delta 'o' must be an object")?;
+        let po = prev.as_obj().context("delta 'o' against a non-object")?;
+        let mut out = Obj::new();
+        for (k, enc) in inner.iter() {
+            let enc = enc.as_obj().context("malformed nested delta")?;
+            let decoded = if enc.contains("f") {
+                enc.get("f").cloned().unwrap()
+            } else {
+                let pv = po
+                    .get(k)
+                    .with_context(|| format!("delta key '{k}' has no predecessor"))?;
+                apply_delta(pv, enc)?
+            };
+            out.insert(k.clone(), decoded);
+        }
+        return Ok(Json::Obj(out));
+    }
+    if let Some(full) = tag.get("f") {
+        return Ok(full.clone());
+    }
+    bail!("unknown delta tag: {:?}", tag.iter().map(|(k, _)| k.clone()).collect::<Vec<_>>())
+}
+
+/// All-numeric array whose every element is exactly representable as f32
+/// (model/optimizer state written by `floats_to_json` qualifies; native
+/// f64 series and NaNs do not, and fall back to full encoding).
+fn f32_bits(arr: &[Json]) -> Option<Vec<u32>> {
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        let n = v.as_f64()?;
+        let f = n as f32;
+        if f as f64 != n {
+            return None;
+        }
+        out.push(f.to_bits());
+    }
+    Some(out)
+}
+
+/// XOR token string: per-element XOR of f32 bit patterns, zero runs
+/// collapsed to `z<count>` tokens, non-zero words as bare lowercase hex
+/// (≤ 8 chars each vs ~10–19 for a shortest-roundtrip f64 decimal).
+fn xor_tokens(prev: &[u32], cur: &[u32]) -> String {
+    let mut out = String::new();
+    let mut zrun = 0usize;
+    let mut push = |s: &str, out: &mut String| {
+        if !out.is_empty() {
+            out.push(',');
+        }
+        out.push_str(s);
+    };
+    for (p, c) in prev.iter().zip(cur) {
+        let x = p ^ c;
+        if x == 0 {
+            zrun += 1;
+            continue;
+        }
+        if zrun > 0 {
+            push(&format!("z{zrun}"), &mut out);
+            zrun = 0;
+        }
+        push(&format!("{x:x}"), &mut out);
+    }
+    if zrun > 0 {
+        push(&format!("z{zrun}"), &mut out);
+    }
+    out
+}
+
+/// Invert [`xor_tokens`] against the predecessor bits.
+fn xor_apply(prev: &[u32], tokens: &str) -> Result<Json> {
+    let mut out = Vec::with_capacity(prev.len());
+    let mut i = 0usize;
+    for tok in tokens.split(',').filter(|t| !t.is_empty()) {
+        if let Some(n) = tok.strip_prefix('z') {
+            let n: usize = n.parse().context("bad zero-run token")?;
+            for _ in 0..n {
+                let p = *prev.get(i).context("zero run past array end")?;
+                out.push(Json::Num(f32::from_bits(p) as f64));
+                i += 1;
+            }
+        } else {
+            let x = u32::from_str_radix(tok, 16).context("bad xor token")?;
+            let p = *prev.get(i).context("xor token past array end")?;
+            out.push(Json::Num(f32::from_bits(p ^ x) as f64));
+            i += 1;
+        }
+    }
+    anyhow::ensure!(i == prev.len(), "xor tokens cover {i} of {} elements", prev.len());
+    Ok(Json::Arr(out))
 }
 
 #[cfg(test)]
@@ -354,15 +847,32 @@ mod tests {
         (sink, store)
     }
 
+    /// Sink writing full snapshots only (the pre-incremental behavior).
+    fn full_sink_with_store() -> (Arc<CkptSink>, Arc<Store>) {
+        let store = Arc::new(Store::in_memory());
+        let sink = CkptSink::new("j0", CkptPolicy::every_round().with_full_every(0), true);
+        sink.bind_store(store.clone());
+        (sink, store)
+    }
+
+    fn floats(vals: &[f32]) -> Json {
+        Json::Arr(vals.iter().map(|v| Json::Num(*v as f64)).collect())
+    }
+
     #[test]
     fn commit_and_load_roundtrip() {
         let (sink, store) = sink_with_store();
+        sink.set_flavor("sync");
         sink.publish("w0", Json::Str("s0".into()));
         sink.publish("w1", Json::Str("s1".into()));
-        sink.commit(3, 2, Json::Str("g".into()), Json::Null, Json::Null).unwrap();
+        let landed = vec!["w1".to_string(), "w0".to_string()];
+        sink.commit(3, 2, Json::Str("g".into()), Json::Null, Json::Null, &landed)
+            .unwrap();
         let ck = load_latest(&store, "j0").unwrap().unwrap();
         assert_eq!(ck.round, 3);
         assert_eq!(ck.cursor, 2);
+        assert_eq!(ck.flavor, "sync");
+        assert_eq!(ck.landed, vec!["w0".to_string(), "w1".to_string()]);
         assert_eq!(ck.global, Json::Str("g".into()));
         assert_eq!(ck.workers.len(), 2);
         assert_eq!(ck.workers["w1"], Json::Str("s1".into()));
@@ -371,15 +881,18 @@ mod tests {
 
     #[test]
     fn newer_epoch_supersedes_and_gcs_older() {
-        let (sink, store) = sink_with_store();
+        let (sink, store) = full_sink_with_store();
         sink.publish("w0", Json::Str("r1".into()));
-        sink.commit(1, 0, Json::Str("g1".into()), Json::Null, Json::Null).unwrap();
+        sink.commit(1, 0, Json::Str("g1".into()), Json::Null, Json::Null, &[])
+            .unwrap();
         sink.publish("w0", Json::Str("r2".into()));
-        sink.commit(2, 0, Json::Str("g2".into()), Json::Null, Json::Null).unwrap();
+        sink.commit(2, 0, Json::Str("g2".into()), Json::Null, Json::Null, &[])
+            .unwrap();
         let ck = load_latest(&store, "j0").unwrap().unwrap();
         assert_eq!(ck.round, 2);
         assert_eq!(ck.workers["w0"], Json::Str("r2".into()));
-        // every epoch-1 record tombstoned
+        // every epoch-1 record tombstoned (full snapshots → no live chain
+        // reaches epoch 1)
         for key in store.keys(CKPT_COLLECTION) {
             assert!(
                 !key.contains(&format!("{:016x}", 1u64)),
@@ -394,7 +907,7 @@ mod tests {
         let sink = CkptSink::new("j0", CkptPolicy::every_round(), false);
         sink.bind_store(store.clone());
         sink.publish("agg", Json::Str("s".into()));
-        sink.commit(1, 0, Json::Null, Json::Null, Json::Null).unwrap();
+        sink.commit(1, 0, Json::Null, Json::Null, Json::Null, &[]).unwrap();
         assert!(store.get(CKPT_COLLECTION, "j0/head").is_none());
         // hub still seeds failover
         sink.stage_seed("agg");
@@ -408,8 +921,7 @@ mod tests {
             "j",
             CkptPolicy {
                 every: 2,
-                kill_at: None,
-                failover: false,
+                ..CkptPolicy::every_round()
             },
             true,
         );
@@ -419,5 +931,160 @@ mod tests {
         assert!(sink.due(4));
         let off = CkptSink::new("j", CkptPolicy::default(), true);
         assert!(!off.due(5));
+    }
+
+    /// A worker snapshot shaped like the real ones: a model array that
+    /// drifts a little each epoch plus scalar round state.
+    fn worker_snap(round: u64, model: &[f32]) -> Json {
+        let mut o = Json::obj();
+        o.insert("round", json::from_u64_hex(round));
+        o.insert("flat", floats(model));
+        Json::Obj(o)
+    }
+
+    #[test]
+    fn delta_chain_roundtrips_and_keeps_its_base() {
+        let (sink, store) = sink_with_store();
+        let mut model: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        for round in 1..=5u64 {
+            model[3] += 0.25 * round as f32;
+            model[40] -= 1.0;
+            sink.publish("w0", worker_snap(round, &model));
+            let mut g = Json::obj();
+            g.insert("round", json::from_u64_hex(round));
+            g.insert("flat", floats(&model));
+            sink.commit(round, 0, Json::Obj(g), Json::Null, Json::Null, &[])
+                .unwrap();
+        }
+        // epochs 2..=5 are deltas: their global record carries the wrapper
+        let raw = store
+            .get(CKPT_COLLECTION, &format!("{}/global", epoch_prefix("j0", 4)))
+            .unwrap();
+        assert!(raw.get(DELTA_KEY).as_obj().is_some(), "epoch 4 not delta-encoded");
+        // the chain's full root (epoch 1) must survive GC
+        assert!(
+            store
+                .get(CKPT_COLLECTION, &format!("{}/meta", epoch_prefix("j0", 1)))
+                .is_some(),
+            "live chain base collected"
+        );
+        // decoded state equals the newest plain state
+        let ck = load_latest(&store, "j0").unwrap().unwrap();
+        assert_eq!(ck.round, 5);
+        assert_eq!(ck.global.get("flat"), &floats(&model));
+        assert_eq!(ck.workers["w0"], worker_snap(5, &model));
+    }
+
+    #[test]
+    fn full_epoch_resets_the_chain_and_gc_collects_the_old_one() {
+        let store = Arc::new(Store::in_memory());
+        let sink = CkptSink::new("j0", CkptPolicy::every_round().with_full_every(2), true);
+        sink.bind_store(store.clone());
+        for round in 1..=3u64 {
+            sink.publish("w0", worker_snap(round, &[round as f32]));
+            sink.commit(round, 0, Json::Str(format!("g{round}")), Json::Null, Json::Null, &[])
+                .unwrap();
+        }
+        // epoch 3 started a fresh full chain → epochs 1 and 2 collected
+        for old in [1u64, 2] {
+            assert!(
+                store
+                    .get(CKPT_COLLECTION, &format!("{}/meta", epoch_prefix("j0", old)))
+                    .is_none(),
+                "superseded epoch {old} survived GC"
+            );
+        }
+        let ck = load_latest(&store, "j0").unwrap().unwrap();
+        assert_eq!(ck.round, 3);
+        assert_eq!(ck.global, Json::Str("g3".into()));
+    }
+
+    #[test]
+    fn incremental_chain_shrinks_journal_bytes() {
+        // same commit sequence, once all-full and once incremental: a
+        // model where most elements hold still between boundaries (opt
+        // state, converged coordinates) plus a growing metrics series
+        let run = |full_every: u64| -> u64 {
+            let store = Arc::new(Store::in_memory());
+            let sink = CkptSink::new(
+                "j0",
+                CkptPolicy::every_round().with_full_every(full_every),
+                true,
+            );
+            sink.bind_store(store);
+            let mut model: Vec<f32> = (0..512).map(|i| (i as f32).sin()).collect();
+            let mut series: Vec<Json> = Vec::new();
+            for round in 1..=6u64 {
+                for i in (0..512).step_by(16) {
+                    model[i] += 1e-3 * round as f32;
+                }
+                series.push(Json::Num(round as f64));
+                sink.publish("w0", worker_snap(round, &model));
+                let mut g = Json::obj();
+                g.insert("round", json::from_u64_hex(round));
+                g.insert("flat", floats(&model));
+                let mut m = Json::obj();
+                m.insert("loss", Json::Arr(series.clone()));
+                sink.commit(round, 0, Json::Obj(g), Json::Obj(m), Json::Null, &[])
+                    .unwrap();
+            }
+            sink.bytes_written()
+        };
+        let full = run(0);
+        let incremental = run(8);
+        assert!(
+            incremental * 2 < full,
+            "incremental chain did not shrink journal bytes: {incremental} vs {full}"
+        );
+    }
+
+    #[test]
+    fn xor_tokens_roundtrip_exactly() {
+        let prev: Vec<f32> = vec![0.0, 1.5, -2.25, 1e-8, 3.0, 3.0, f32::MAX];
+        let cur: Vec<f32> = vec![0.0, 1.5000001, -2.25, 2e-8, 3.0, 3.0, f32::MIN_POSITIVE];
+        let pb: Vec<u32> = prev.iter().map(|f| f.to_bits()).collect();
+        let cb: Vec<u32> = cur.iter().map(|f| f.to_bits()).collect();
+        let toks = xor_tokens(&pb, &cb);
+        let out = xor_apply(&pb, &toks).unwrap();
+        let want = Json::Arr(cur.iter().map(|f| Json::Num(*f as f64)).collect());
+        assert_eq!(out, want);
+        // unchanged tail collapses into a zero-run token
+        let same = xor_tokens(&pb, &pb);
+        assert_eq!(same, format!("z{}", prev.len()));
+    }
+
+    #[test]
+    fn delta_value_handles_append_drop_and_nan() {
+        // append: a grown series stores only its tail
+        let p = Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]);
+        let c = Json::Arr(vec![Json::Num(1.0), Json::Num(2.0), Json::Num(3.0)]);
+        let enc = delta_value(&p, &c);
+        assert_eq!(enc.get("a").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(apply_delta(&p, &enc).unwrap(), c);
+        // dropped keys vanish on decode; new keys land full
+        let p = Json::Obj(Obj::from([("old", Json::Num(1.0)), ("keep", Json::Num(2.0))]));
+        let c = Json::Obj(Obj::from([("keep", Json::Num(2.0)), ("new", Json::Str("x".into()))]));
+        let enc = delta_value(&p, &c);
+        assert_eq!(apply_delta(&p, &enc).unwrap(), c);
+        // NaN never matches the f32-exact fast path and falls back to full
+        let p = Json::Arr(vec![Json::Num(1.0)]);
+        let c = Json::Arr(vec![Json::Num(f64::NAN)]);
+        let enc = delta_value(&p, &c);
+        assert!(enc.contains("f"));
+    }
+
+    #[test]
+    fn fault_plan_parses_and_dumps() {
+        let plan = FaultPlan::parse("controller@3,rsm-trainer-1@2").unwrap();
+        assert!(plan.kills_controller_at(3));
+        assert!(!plan.kills_controller_at(2));
+        assert!(plan.kills_worker_at("rsm-trainer-1", 2));
+        assert!(!plan.kills_worker_at("rsm-trainer-1", 3));
+        assert!(plan.controller_kill_between(2, 4));
+        assert!(!plan.controller_kill_between(3, 5));
+        assert_eq!(FaultPlan::parse(&plan.dump()).unwrap(), plan);
+        assert!(FaultPlan::parse("nope").is_err());
+        assert!(FaultPlan::parse("w@x").is_err());
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
     }
 }

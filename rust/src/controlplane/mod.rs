@@ -585,6 +585,29 @@ impl FleetReport {
     }
 }
 
+/// One orphaned job in a [`JobManager::resumable`] listing: persisted id
+/// and last journaled phase, plus the flavor tag and round (async: buffer
+/// version) of its latest committed checkpoint epoch, when one exists.
+#[derive(Debug, Clone)]
+pub struct ResumableJob {
+    pub id: JobId,
+    pub phase: String,
+    pub flavor: Option<String>,
+    pub round: Option<u64>,
+}
+
+impl ResumableJob {
+    /// Stable one-line rendering for `flame resume --list`.
+    pub fn line(&self) -> String {
+        match (&self.flavor, self.round) {
+            (Some(f), Some(r)) => {
+                format!("{} phase={} flavor={f} epoch={r}", self.id, self.phase)
+            }
+            _ => format!("{} phase={} (no checkpoint: restarts at round 0)", self.id, self.phase),
+        }
+    }
+}
+
 // ---------------------------------------------------------- JobManager
 
 /// The multi-job control plane (see module docs).
@@ -700,6 +723,68 @@ impl JobManager {
         let spec = JobSpec::from_json(&spec_json).context("resume: decoding persisted spec")?;
         opts.restore = checkpoint::load_latest(&self.core.store, job_id)?.map(Arc::new);
         self.enqueue(job_id.to_string(), spec, opts)
+    }
+
+    /// The jobs a restarted manager can pick back up: every persisted job
+    /// whose last journaled phase is non-terminal (queued / deploying /
+    /// running at the crash), annotated with the flavor and round (buffer
+    /// version for async jobs) of its latest committed checkpoint epoch —
+    /// `None` round means the job never reached a commit and restarts
+    /// from round 0. Sorted by job id so listings and [`Self::resume_all`]
+    /// admission order are deterministic. Jobs already slotted in *this*
+    /// manager instance are excluded (they are live, not orphaned).
+    pub fn resumable(&self) -> Result<Vec<ResumableJob>> {
+        let live = self.job_ids();
+        let mut ids = self.core.store.keys("job_state");
+        ids.sort();
+        let mut out = Vec::new();
+        for id in ids {
+            if live.contains(&id) {
+                continue;
+            }
+            let phase = self
+                .core
+                .store
+                .get("job_state", &id)
+                .and_then(|v| v.as_str().map(str::to_string))
+                .unwrap_or_default();
+            if matches!(phase.as_str(), "completed" | "failed") {
+                continue;
+            }
+            // no persisted spec -> nothing to re-admit (reject() journals
+            // a phase even for specs that never stored)
+            if self.core.store.get("jobs", &id).is_none() {
+                continue;
+            }
+            let ck = checkpoint::load_latest(&self.core.store, &id)?;
+            out.push(ResumableJob {
+                flavor: ck.as_ref().map(|c| c.flavor.clone()),
+                round: ck.as_ref().map(|c| c.round),
+                id,
+                phase,
+            });
+        }
+        Ok(out)
+    }
+
+    /// Fleet-wide crash recovery: re-admit every [`Self::resumable`] job
+    /// through [`Self::resume`] — original ids, latest checkpoints, the
+    /// normal admission/capacity path — in deterministic (sorted-id)
+    /// order. `opts_for` supplies each job's runtime options (options are
+    /// not journaled: they carry live objects — programs, compute, data
+    /// plans). Returns the re-admitted ids; the next
+    /// [`Self::run_fleet`] drives them to completion.
+    pub fn resume_all<F>(&mut self, mut opts_for: F) -> Result<Vec<JobId>>
+    where
+        F: FnMut(&ResumableJob) -> JobOptions,
+    {
+        let jobs = self.resumable()?;
+        let mut ids = Vec::with_capacity(jobs.len());
+        for job in &jobs {
+            let opts = opts_for(job);
+            ids.push(self.resume(&job.id, opts)?);
+        }
+        Ok(ids)
     }
 
     /// Shared tail of [`Self::submit`] / [`Self::resume`]: admission

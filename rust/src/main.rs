@@ -16,6 +16,8 @@
 //! flame fleet   [--jobs 100 --runners N]                  # multi-job control plane
 //! flame fedprox [--trainers 8 --rounds 6 --mu 0.1]        # Role-SDK custom program
 //! flame codec-sweep [--trainers 8 --rounds 8 --topk-frac 0.05] # update-codec comparison
+//! flame resume  [--flavor sync|quorum|async|ring --kill-at N]  # kill/resume vs oracle
+//! flame resume  --list | --all [--jobs 10]                     # fleet-wide crash recovery
 //! flame trace   [--trainers 6 --rounds 4 --out bench_out/trace.json] # virtual-time tracing
 //! flame roles                                             # list registered programs
 //! flame spec    --topo hybrid --trainers 50 --groups 5    # print TAG JSON
@@ -510,11 +512,23 @@ fn cmd_codec_sweep(args: &Args) -> Result<()> {
 /// Crash-resilience demo: checkpoint every round boundary, kill the
 /// controller at --kill-at, resume from the journaled checkpoint under
 /// the original job id, and byte-compare the resumed report against an
-/// unkilled oracle run (see `sim::run_resume`).
+/// unkilled oracle run (see `sim::run_resume`). `--flavor` picks what
+/// gets checkpointed: `sync` (full quorum), `quorum` (0.75 — stragglers
+/// in flight at every boundary), `async` (FedBuff version barriers) or
+/// `ring` (delegate-committed distributed trainers).
+///
+/// `--list` / `--all` switch to the fleet-wide variant
+/// (`sim::run_resume_fleet`): a mixed-flavor fleet dies wholesale, a
+/// restarted manager scans the journal and either lists every orphaned
+/// job (`--list`) or re-admits the lot via `resume_all` and
+/// byte-compares the drained fleet against its oracle (`--all`).
 fn cmd_resume(args: &Args) -> Result<()> {
     args.expect_flags(
         "resume",
-        &["trainers", "rounds", "kill-at", "per-shard", "test-n", "seed", "runners"],
+        &[
+            "trainers", "rounds", "kill-at", "flavor", "list", "all", "jobs", "per-shard",
+            "test-n", "seed", "runners",
+        ],
     )?;
     let trainers = args.get_usize("trainers", 8)?;
     let rounds = args.get_u64("rounds", 6)?;
@@ -524,10 +538,31 @@ fn cmd_resume(args: &Args) -> Result<()> {
     o.test_n = args.get_usize("test-n", 128)?;
     o.seed = args.get_u64("seed", 7)?;
     let runners = args.get_usize("runners", 0)?;
-    let r = sim::run_resume(trainers, rounds, kill_at, runners, &o)?;
+    if args.get("list", "false") == "true" || args.get("all", "false") == "true" {
+        let jobs = args.get_usize("jobs", 10)?;
+        let f = sim::run_resume_fleet(jobs, runners, &o)?;
+        println!("# {} resumable jobs after the outage", f.listing.len());
+        for line in &f.listing {
+            println!("{line}");
+        }
+        if args.get("all", "false") == "true" {
+            println!("# resumed {} jobs via resume_all", f.resumed_ids.len());
+            for (oracle, resumed) in f.oracle_lines.iter().zip(&f.resumed_lines) {
+                println!("oracle:  {oracle}");
+                println!("resumed: {resumed}");
+            }
+            println!("byte-identical: {}", if f.matched() { "yes" } else { "NO" });
+            if !f.matched() {
+                bail!("resumed fleet diverged from the oracle");
+            }
+        }
+        return Ok(());
+    }
+    let flavor = args.get("flavor", "sync");
+    let r = sim::run_resume(&flavor, trainers, rounds, kill_at, runners, &o)?;
     println!(
-        "killed '{}' at round boundary {} (checkpoint epoch {})",
-        r.job, r.kill_at, r.ckpt_round
+        "killed '{}' at round boundary {} (flavor {}, checkpoint epoch {})",
+        r.job, r.kill_at, r.flavor, r.ckpt_round
     );
     println!("oracle:  {}", r.oracle_line);
     println!("resumed: {}", r.resumed_line);

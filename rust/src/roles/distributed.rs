@@ -5,13 +5,25 @@
 //! spectrum, used by the C-FL→Distributed transformation of Table 4.
 //! From the user's perspective this is the base-class swap the paper
 //! describes: same `load/init/train` core functions, different chain.
+//!
+//! **Crash resilience** (checkpoint-armed jobs): there is no aggregator to
+//! act as the committing worker, so the ring's *delegate* (lexically-first
+//! member) plays controller. At each due boundary every member publishes
+//! its snapshot; non-delegates then send a collective-op `"epoch"` marker
+//! to the delegate. A member only reaches the marker send after its
+//! all-reduce completed, and the full collective completing means every
+//! chunk was consumed — so once the delegate has drained one marker per
+//! peer, no ring message is in flight anywhere and every published
+//! snapshot is ordered before the commit ([`checkpoint`]).
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
-use crate::workflow::Composer;
+use crate::channel::Message;
+use crate::json::Json;
+use crate::workflow::{Composer, Tasklet};
 
 use super::collective::{is_delegate, RingAllReduce};
 use super::{chain_program, Program, WorkerEnv};
@@ -28,7 +40,60 @@ pub struct DistributedCtx {
     /// In-flight ring all-reduce; persisted so `allreduce` is re-entrant
     /// across cooperative yields.
     ring_op: Option<RingAllReduce>,
+    /// Boundary this member was rehydrated at (0 = fresh run); the
+    /// checkpoint tasklet skips boundaries `<=` this.
+    resumed_at: u64,
+    /// Delegate only: epoch markers drained so far at the in-progress
+    /// boundary (re-entrant across cooperative yields).
+    epoch_seen: usize,
     done: bool,
+}
+
+impl DistributedCtx {
+    /// Boundary snapshot of a ring member's resumable state: model, RNG
+    /// stream, epoch plan position, round counter and virtual clock.
+    pub fn snapshot_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("round", crate::json::from_u64_hex(self.round));
+        o.insert("clock", crate::json::from_u64_hex(self.env.now()));
+        o.insert("rng", self.env.rng.to_json());
+        o.insert("flat", super::floats_to_json(&self.flat));
+        o.insert(
+            "plan",
+            Json::Arr(self.plan.iter().map(|i| Json::Num(*i as f64)).collect()),
+        );
+        o.insert("batch_pos", Json::Num(self.batch_pos as f64));
+        Json::Obj(o)
+    }
+
+    /// Rehydrate from a [`Self::snapshot_json`] checkpoint and merge the
+    /// saved boundary clock so virtual time continues from the kill point.
+    pub fn restore_from(&mut self, snap: &Json) -> Result<()> {
+        self.env.rng = crate::prng::Rng::from_json(snap.get("rng"))
+            .context("ring checkpoint missing rng state")?;
+        let flat = super::floats_from_json(snap.get("flat"));
+        if flat.len() != self.flat.len() {
+            bail!(
+                "ring checkpoint model has {} params, job expects {}",
+                flat.len(),
+                self.flat.len()
+            );
+        }
+        self.flat = flat;
+        self.plan = snap
+            .get("plan")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|v| v as usize).collect())
+            .unwrap_or_default();
+        self.batch_pos = snap.get("batch_pos").as_f64().unwrap_or(0.0) as usize;
+        self.round =
+            crate::json::as_u64_hex(snap.get("round")).context("ring checkpoint missing round")?;
+        self.resumed_at = self.round;
+        if let Some(t) = crate::json::as_u64_hex(snap.get("clock")) {
+            self.env.clock.lock().unwrap().merge(t);
+        }
+        Ok(())
+    }
 }
 
 fn load(c: &mut DistributedCtx) -> Result<()> {
@@ -40,6 +105,65 @@ fn load(c: &mut DistributedCtx) -> Result<()> {
 fn init(c: &mut DistributedCtx) -> Result<()> {
     // All members start from the shared init (same seed via job runtime).
     c.flat = c.env.job.init_flat.as_ref().clone();
+    if let Some(ck) = c.env.job.restore.clone() {
+        if let Some(snap) = ck.workers.get(&c.env.cfg.id) {
+            c.restore_from(snap)?;
+        }
+    }
+    Ok(())
+}
+
+/// Ring crash resilience (see module docs): runs at the top of the round
+/// loop, where `c.round` counts completed rounds. Non-delegates publish
+/// and send their epoch marker in one pass (sends never yield); the
+/// delegate drains one marker per peer — re-entrant via `epoch_seen` —
+/// publishes its own snapshot *after* the drain (the marker merges advance
+/// its clock), then commits the epoch and runs the fault script.
+fn checkpoint(c: &mut DistributedCtx) -> Result<()> {
+    if c.done {
+        return Ok(());
+    }
+    let Some(sink) = c.env.job.ckpt.clone() else {
+        return Ok(());
+    };
+    if !sink.is_live() || c.round <= c.resumed_at || !sink.due(c.round) {
+        return Ok(());
+    }
+    let (peers, delegate, members) = {
+        let ring = c.env.chan("ring-channel")?;
+        let mut members: Vec<String> = (*ring.ends()).clone();
+        members.push(ring.worker_id().to_string());
+        members.sort();
+        (ring.ends().len(), is_delegate(ring), members)
+    };
+    if !delegate {
+        sink.publish(&c.env.cfg.id, c.snapshot_json());
+        let to = members.first().cloned().context("empty ring membership")?;
+        let ring = c.env.chan("ring-channel")?;
+        ring.send(&to, Message::control("epoch", c.round))?;
+        return Ok(());
+    }
+    while c.epoch_seen < peers {
+        {
+            let ring = c.env.chan("ring-channel")?;
+            let _ = ring.recv_any_kind_timed("epoch")?;
+        }
+        c.epoch_seen += 1;
+    }
+    c.epoch_seen = 0;
+    sink.publish(&c.env.cfg.id, c.snapshot_json());
+    sink.commit(
+        c.round,
+        c.env.job.timeline.cursor(),
+        c.snapshot_json(),
+        c.env.job.metrics.snapshot(),
+        c.env.job.trace.snapshot(),
+        &members,
+    )?;
+    let prev_due = c.round.saturating_sub(sink.policy().every.max(1));
+    if sink.policy().faults.controller_kill_between(prev_due, c.round) {
+        bail!("injected controller kill at round boundary {}", c.round);
+    }
     Ok(())
 }
 
@@ -119,13 +243,22 @@ impl DistributedCtx {
             round: 0,
             last_loss: f64::NAN,
             ring_op: None,
+            resumed_at: 0,
+            epoch_seen: 0,
             done: false,
         })
     }
 }
 
 pub fn build(env: WorkerEnv) -> Result<Box<dyn Program>> {
-    Ok(chain_program(chain(), DistributedCtx::new(env)?))
+    let armed = env.job.ckpt.as_ref().is_some_and(|s| s.is_live());
+    let mut chain = chain();
+    if armed {
+        // crash resilience: the boundary protocol runs at the top of the
+        // round loop, mirroring the global aggregator's chain surgery
+        chain.insert_before("train", Tasklet::new("checkpoint", checkpoint))?;
+    }
+    Ok(chain_program(chain, DistributedCtx::new(env)?))
 }
 
 #[cfg(test)]
@@ -137,6 +270,17 @@ mod tests {
         assert_eq!(
             chain().aliases(),
             vec!["load", "init", "train", "allreduce"]
+        );
+    }
+
+    #[test]
+    fn ckpt_surgery_inserts_boundary_protocol() {
+        let mut c = chain();
+        c.insert_before("train", Tasklet::new("checkpoint", checkpoint))
+            .unwrap();
+        assert_eq!(
+            c.aliases(),
+            vec!["load", "init", "checkpoint", "train", "allreduce"]
         );
     }
 }

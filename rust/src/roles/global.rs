@@ -52,7 +52,7 @@
 //! membership with the configured quorum fraction, so a departed worker
 //! can never block a round.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -109,6 +109,26 @@ pub struct GlobalCtx {
     /// boundary the worker snapshot hub is still empty, so re-committing
     /// there would overwrite the good epoch with a torn one.
     resumed_at: u64,
+    /// Outstanding-upload census for partial quorum: selected sender →
+    /// expected in-flight uploads not yet consumed (counted *or* stale).
+    /// The boundary drain in [`checkpoint`] blocks on these, so a commit
+    /// never races an in-flight upload and every published worker snapshot
+    /// is ordered before the epoch that references it. Full-quorum rounds
+    /// leave this empty and the drain is a no-op.
+    outstanding: BTreeMap<String, usize>,
+    /// Senders whose updates were counted in the last completed collect —
+    /// the landed census committed with the boundary's head record.
+    landed: Vec<String>,
+    /// Hybrid: epoch markers drained so far at the in-progress boundary
+    /// (re-entrant across cooperative yields in the drain loop).
+    epoch_seen: usize,
+    /// Async barrier: members we sent weights to whose next update has not
+    /// arrived yet. A due version boundary withholds replies until this
+    /// drains empty — a true barrier with no update in flight anywhere.
+    async_outstanding: BTreeSet<String>,
+    /// Async: highest version whose barrier commit already happened
+    /// (restored to the checkpoint version on resume).
+    last_barrier: u64,
     pub done: bool,
 }
 
@@ -166,6 +186,11 @@ impl GlobalCtx {
             assign_dirty: false,
             data_role,
             resumed_at: 0,
+            outstanding: BTreeMap::new(),
+            landed: Vec::new(),
+            epoch_seen: 0,
+            async_outstanding: BTreeSet::new(),
+            last_barrier: 0,
             done: false,
         }
     }
@@ -234,6 +259,9 @@ impl GlobalCtx {
         }
         self.round = json::as_u64_hex(snap.get("round")).context("checkpoint missing round")?;
         self.resumed_at = self.round;
+        // async: the resume boundary's barrier already committed — don't
+        // re-trigger it at the restored version
+        self.last_barrier = self.round;
         if let Some(t) = json::as_u64_hex(snap.get("clock")) {
             self.env.clock.lock().unwrap().merge(t);
         }
@@ -276,9 +304,11 @@ fn init(c: &mut GlobalCtx) -> Result<()> {
 /// sink. Runs at the top of the round loop — by then `eval` has bumped
 /// `c.round` to the completed-round count, and every uploading worker's
 /// boundary snapshot is in the hub (publish happens-before the upload
-/// send, and the full-quorum collect consumed every upload). Committing
-/// *before* `apply_events` means the saved timeline cursor names the
-/// event-replay point exactly: this boundary's events are still pending.
+/// send, and the boundary *drain* below consumes every upload a partial
+/// quorum left in flight — so consumption, not luck, orders each publish
+/// before the commit that references it). Committing *before*
+/// `apply_events` means the saved timeline cursor names the event-replay
+/// point exactly: this boundary's events are still pending.
 fn checkpoint(c: &mut GlobalCtx) -> Result<()> {
     if c.done {
         return Ok(());
@@ -288,6 +318,58 @@ fn checkpoint(c: &mut GlobalCtx) -> Result<()> {
     };
     if !sink.is_live() || c.round <= c.resumed_at || !sink.due(c.round) {
         return Ok(());
+    }
+    let chan_name = c.children_channel();
+    if let Some(clusters) = c.hybrid_clusters {
+        // Hybrid barrier: only delegates upload, so non-delegate cluster
+        // members send an "epoch" marker after publishing their boundary
+        // snapshot. Draining one marker per non-delegate closes the
+        // happens-before gap the delegate uploads leave open. Kind-selective
+        // recv keeps markers and next-round updates from crossing.
+        let expected = {
+            let members = c.env.chan(chan_name)?.ends();
+            members.len().saturating_sub(clusters)
+        };
+        while c.epoch_seen < expected {
+            let chan = c.env.chan(chan_name)?;
+            let _ = chan.recv_any_kind_timed("epoch")?;
+            c.epoch_seen += 1;
+        }
+        c.epoch_seen = 0;
+    } else if c.env.job.tcfg.quorum < 1.0 {
+        // Partial-quorum boundary drain: consume the stale uploads the
+        // quorum cut loose before committing. Re-entrant — the census
+        // lives in the ctx, so a yield inside recv resumes the drain.
+        // Full-quorum jobs skip it: every counted round consumed every
+        // member's upload already, and draining a departed straggler's
+        // in-flight bytes here would merge its arrival clock one round
+        // earlier than an unarmed run does — checkpointing must stay
+        // pure observation.
+        loop {
+            let members = c.env.chan(chan_name)?.ends();
+            let pending: usize = c
+                .outstanding
+                .iter()
+                .filter(|(s, _)| members.contains(s))
+                .map(|(_, n)| *n)
+                .sum();
+            if pending == 0 {
+                break;
+            }
+            let (from, msg, _arrival) = {
+                let chan = c.env.chan(chan_name)?;
+                chan.recv_any_kind_timed("update")?
+            };
+            if let Payload::Floats(w) = msg.payload {
+                c.env.job.pool.reclaim(w);
+            }
+            if let Some(n) = c.outstanding.get_mut(&*from) {
+                *n -= 1;
+                if *n == 0 {
+                    c.outstanding.remove(&*from);
+                }
+            }
+        }
     }
     // the span goes in BEFORE the commit so it rides its own snapshot: a
     // resumed run skips re-committing this boundary (`resumed_at` guard),
@@ -305,8 +387,10 @@ fn checkpoint(c: &mut GlobalCtx) -> Result<()> {
         c.snapshot_json(),
         c.env.job.metrics.snapshot(),
         c.env.job.trace.snapshot(),
+        &c.landed,
     )?;
-    if sink.policy().kill_at == Some(c.round) {
+    let prev_due = c.round.saturating_sub(sink.policy().every.max(1));
+    if sink.policy().faults.controller_kill_between(prev_due, c.round) {
         bail!("injected controller kill at round boundary {}", c.round);
     }
     Ok(())
@@ -417,6 +501,12 @@ fn distribute(c: &mut GlobalCtx) -> Result<()> {
     let mut items = Vec::with_capacity(all.len());
     for child in all {
         let msg = if c.selected.contains(&child) {
+            // census: one upload expected back from every selected child
+            // (hybrid excepted — there only delegates upload, and the
+            // collect barrier is full over clusters already)
+            if c.hybrid_clusters.is_none() {
+                *c.outstanding.entry(child.clone()).or_insert(0) += 1;
+            }
             Message::floats("weights", c.round, w.clone())
         } else {
             Message::control("skip", c.round)
@@ -501,6 +591,13 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
             let chan = c.env.chan(chan_name)?;
             chan.recv_any_kind_timed("update")?
         };
+        // census: consumed, whether it counts below or not
+        if let Some(n) = c.outstanding.get_mut(&*from) {
+            *n -= 1;
+            if *n == 0 {
+                c.outstanding.remove(&*from);
+            }
+        }
         if msg.round != c.round {
             // quorum fractions leave slow updates of past rounds queued;
             // they are stale by the time they arrive and must not count
@@ -541,6 +638,7 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
     let mut col = std::mem::take(&mut c.col);
     if col.is_empty() {
         // every selected child departed this round: keep the model
+        c.landed.clear();
         let _ = acc.finish()?;
         return Ok(());
     }
@@ -548,6 +646,7 @@ fn collect_and_optimize(c: &mut GlobalCtx) -> Result<()> {
     // tie-break — the same order the buffered collect used, so ack send
     // order and selector feedback stay bit-identical across executors.
     col.sort_by(|a, b| (a.2, &a.0).cmp(&(b.2, &b.0)));
+    c.landed = col.iter().map(|(f, _, _)| f.to_string()).collect();
     if c.ack_updates {
         // Acks go out after the collection barrier (send time = the
         // round's merged clock, independent of consumption order — the
@@ -636,6 +735,7 @@ fn collect_hybrid(c: &mut GlobalCtx) -> Result<()> {
     // deterministic sender tie-break — the same order the buffered
     // collect used.
     col.sort_by(|a, b| (a.2, &a.0).cmp(&(b.2, &b.0)));
+    c.landed = col.iter().map(|(f, _, _)| f.to_string()).collect();
     if c.ack_updates {
         let chan = c.env.chan(chan_name)?;
         for (from, _, arrival) in &col {
@@ -815,6 +915,7 @@ fn async_serve(c: &mut GlobalCtx) -> Result<()> {
     // O(k·d) retention), so the wire buffer recycles immediately
     let buffered = fb.push(delta.as_slice(), msg.round);
     c.env.job.pool.reclaim(delta);
+    c.async_outstanding.remove(&*from);
     if let Some(agg_delta) = buffered {
         crate::model::axpy(&mut c.flat, 1.0, &agg_delta);
         let version = fb.version();
@@ -842,28 +943,92 @@ fn async_serve(c: &mut GlobalCtx) -> Result<()> {
             return Ok(());
         }
     }
-    // keep the client training on the freshest model
+    // Version-boundary barrier (armed jobs only): at a due version, stop
+    // replying and drain every outstanding update — when none is in
+    // flight anywhere, every client's boundary snapshot is published
+    // (publish happens-before each consumed upload) and the commit is
+    // safe. The barrier broadcast below is everyone's reply, so a
+    // resumed run's kickoff (same weights, same clock) is byte-identical
+    // to the oracle continuing past the barrier.
     let version = c.fedbuff.as_ref().unwrap().version();
+    if let Some(sink) = c.env.job.ckpt.clone() {
+        if sink.is_live() && version > c.last_barrier && sink.due(version) {
+            let members = c.env.chan(chan_name)?.ends();
+            if c.async_outstanding.iter().any(|s| members.contains(s)) {
+                // drain in progress: the sender waits for the barrier
+                // broadcast like everyone else
+                return Ok(());
+            }
+            let landed: Vec<String> = (*members).clone();
+            let v0 = c.env.now();
+            c.env
+                .job
+                .trace
+                .span(&c.env.cfg.id, crate::trace::phase::CHECKPOINT, version, v0, v0);
+            sink.commit(
+                version,
+                c.env.job.timeline.cursor(),
+                c.snapshot_json(),
+                c.env.job.metrics.snapshot(),
+                c.env.job.trace.snapshot(),
+                &landed,
+            )?;
+            if sink
+                .policy()
+                .faults
+                .controller_kill_between(c.last_barrier, version)
+            {
+                bail!("injected controller kill at version boundary {version}");
+            }
+            c.last_barrier = version;
+            let chan = c.env.chan(chan_name)?;
+            let msg = Message::floats("weights", version, c.env.job.pool.take_copy(&c.flat));
+            for _ in 0..chan.ends().len() {
+                c.env.job.metrics.add_traffic(msg.size_bytes());
+            }
+            let now = chan.now();
+            c.env.job.trace.span(
+                &c.env.cfg.id,
+                crate::trace::phase::DISTRIBUTE,
+                version,
+                now,
+                now,
+            );
+            chan.broadcast(msg)?;
+            c.async_outstanding = chan.ends().iter().cloned().collect();
+            // the next version window starts at the barrier, exactly where
+            // a resumed run's kickoff would start it
+            c.round_start = now;
+            return Ok(());
+        }
+    }
+    // keep the client training on the freshest model
     let chan = c.env.chan(chan_name)?;
     let reply = Message::floats("weights", version, c.env.job.pool.take_copy(&c.flat));
     c.env.job.metrics.add_traffic(reply.size_bytes());
     chan.send(&from, reply)?;
+    c.async_outstanding.insert(from.to_string());
     Ok(())
 }
 
 fn async_kickoff(c: &mut GlobalCtx) -> Result<()> {
-    // seed every client with version-0 weights
+    // seed every client with current-version weights: version 0 on a
+    // fresh run, the checkpoint version on resume — where it replays the
+    // killed run's barrier broadcast byte-for-byte (same payload, same
+    // restored clock)
+    let version = c.fedbuff.as_ref().map(|f| f.version()).unwrap_or(0);
     let chan = c.env.chan(c.children_channel())?;
-    let msg = Message::floats("weights", 0, c.env.job.pool.take_copy(&c.flat));
+    let msg = Message::floats("weights", version, c.env.job.pool.take_copy(&c.flat));
     for _ in 0..chan.ends().len() {
         c.env.job.metrics.add_traffic(msg.size_bytes());
     }
+    c.async_outstanding = chan.ends().iter().cloned().collect();
     chan.broadcast(msg)?;
     c.round_start = chan.now();
     c.env.job.trace.span(
         &c.env.cfg.id,
         crate::trace::phase::DISTRIBUTE,
-        0,
+        version,
         c.round_start,
         c.round_start,
     );

@@ -48,9 +48,10 @@ pub struct HybridCtx {
 
 impl HybridCtx {
     /// Boundary snapshot of the resumable state (mirrors the trainer's).
-    /// Ring topologies are excluded from live checkpointing — this feeds
-    /// the round-trip property tests, keeping the encoding honest for the
-    /// day the gate widens.
+    /// Published before the delegate's upload send — and, for
+    /// non-delegates, before their "epoch" marker send — so the global's
+    /// boundary drain orders every cluster member's snapshot ahead of the
+    /// commit that references it.
     pub fn snapshot_json(&self) -> Json {
         let mut o = Json::obj();
         o.insert("round", crate::json::from_u64_hex(self.round));
@@ -102,6 +103,34 @@ fn init(c: &mut HybridCtx) -> Result<()> {
     let d = c.env.job.compute.d_pad();
     c.flat = vec![0.0; d];
     c.global = vec![0.0; d];
+    if let Some(ck) = c.env.job.restore.clone() {
+        if let Some(snap) = ck.workers.get(&c.env.cfg.id) {
+            c.restore_from(snap)?;
+        }
+    }
+    Ok(())
+}
+
+/// Boundary bookkeeping shared by both upload variants: publish this
+/// member's snapshot, then — non-delegates only, at due boundaries — send
+/// the collective-op "epoch" marker the global's checkpoint drain counts.
+/// Delegates need no marker: their update send is the happens-before edge.
+/// A scripted [`crate::controlplane::FaultPlan`] worker kill fires here,
+/// after the publish (failover seed) and before any send.
+fn boundary_ckpt(c: &HybridCtx, delegate: bool) -> Result<()> {
+    let Some(sink) = c.env.job.ckpt.clone() else {
+        return Ok(());
+    };
+    sink.publish(&c.env.cfg.id, c.snapshot_json());
+    let boundary = c.round + 1;
+    if sink.policy().faults.kills_worker_at(&c.env.cfg.id, boundary) {
+        bail!("injected worker kill at round boundary {boundary}");
+    }
+    if !delegate && sink.is_live() && sink.due(boundary) {
+        let parent = c.parent.clone().context("no parent for epoch marker")?;
+        let param = c.env.chan("param-channel")?;
+        param.send(&parent, Message::control("epoch", c.round))?;
+    }
     Ok(())
 }
 
@@ -197,7 +226,7 @@ fn upload(c: &mut HybridCtx) -> Result<()> {
     }
     let ring = c.env.chan("ring-channel")?;
     if !is_delegate(ring) {
-        return Ok(());
+        return boundary_ckpt(c, false);
     }
     let parent = c.parent.clone().context("no parent")?;
     let mut meta = Json::obj();
@@ -212,6 +241,7 @@ fn upload(c: &mut HybridCtx) -> Result<()> {
         .job
         .metrics
         .record(&c.env.cfg.id, "upload_bytes", c.round, msg.size_bytes() as f64);
+    boundary_ckpt(c, true)?;
     param.send(&parent, msg)?;
     Ok(())
 }
@@ -228,7 +258,7 @@ fn upload_encoded(c: &mut HybridCtx) -> Result<()> {
     }
     let ring = c.env.chan("ring-channel")?;
     if !is_delegate(ring) {
-        return Ok(());
+        return boundary_ckpt(c, false);
     }
     let codec = c
         .env
@@ -250,6 +280,7 @@ fn upload_encoded(c: &mut HybridCtx) -> Result<()> {
         .job
         .metrics
         .record(&c.env.cfg.id, "upload_bytes", c.round, msg.size_bytes() as f64);
+    boundary_ckpt(c, true)?;
     param.send(&parent, msg)?;
     Ok(())
 }

@@ -220,6 +220,20 @@ fn publish_ckpt(c: &TrainerCtx) {
     }
 }
 
+/// Scripted worker kill ([`crate::controlplane::FaultPlan`]): a plan naming
+/// this worker takes its pod down at its own boundary upload — after the
+/// snapshot publish (so a failover seed exists) but before the send (the
+/// kill models a client dying mid-round, not a half-delivered update).
+fn fault_check(c: &TrainerCtx) -> Result<()> {
+    if let Some(sink) = &c.env.job.ckpt {
+        let boundary = c.round + 1;
+        if sink.policy().faults.kills_worker_at(&c.env.cfg.id, boundary) {
+            bail!("injected worker kill at round boundary {boundary}");
+        }
+    }
+    Ok(())
+}
+
 // ------------------------------------------------------------- tasklets
 
 fn load(c: &mut TrainerCtx) -> Result<()> {
@@ -387,6 +401,7 @@ fn upload(c: &mut TrainerCtx) -> Result<()> {
         .metrics
         .record(&c.env.cfg.id, "upload_bytes", c.round, msg.size_bytes() as f64);
     publish_ckpt(c);
+    fault_check(c)?;
     param.send(&parent, msg)?;
     Ok(())
 }
@@ -436,6 +451,7 @@ fn upload_encoded(c: &mut TrainerCtx) -> Result<()> {
         .metrics
         .record(&c.env.cfg.id, "upload_bytes", c.round, msg.size_bytes() as f64);
     publish_ckpt(c);
+    fault_check(c)?;
     param.send(&parent, msg)?;
     Ok(())
 }

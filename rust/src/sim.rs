@@ -407,8 +407,12 @@ pub fn build_fleet(jobs: usize, o: &SimOptions) -> Result<crate::controlplane::J
 /// oracle, as canonical report lines for byte comparison.
 pub struct ResumeRun {
     pub job: String,
+    /// Flavor tag the committing worker stamped on the resumed epoch
+    /// (`sync`, `async`, `ring`, ...).
+    pub flavor: String,
     pub kill_at: u64,
-    /// Round of the checkpoint found in the store after the kill.
+    /// Round of the checkpoint found in the store after the kill (for
+    /// async jobs: the FedBuff buffer version of the barrier).
     pub ckpt_round: u64,
     pub oracle_line: String,
     pub resumed_line: String,
@@ -422,13 +426,49 @@ impl ResumeRun {
     }
 }
 
-/// The crash-resilience headline (`flame resume`): run a C-FL job with
-/// round-boundary checkpointing and an injected controller kill at
-/// boundary `kill_at`, then resume it from the journaled checkpoint under
-/// its original id — and run the same job unkilled as the oracle. The
-/// two final reports must match byte for byte (`rust/tests/resume.rs`
-/// sweeps every boundary; this scenario is the demo-sized single kill).
+/// Spec for one [`run_resume`] flavor:
+///
+/// * `sync` — full-quorum classical FL (the original scenario),
+/// * `quorum` — classical FL at quorum 0.75, so every round closes with a
+///   straggler's update still in flight (the boundary drain's hard case),
+/// * `async` / `fedbuff` — asynchronous FedBuff, where checkpoint
+///   boundaries are buffer *versions*, not rounds,
+/// * `ring` — aggregator-less distributed trainers, where the ring
+///   delegate is the committing worker.
+fn resume_spec(
+    flavor: &str,
+    trainers: usize,
+    rounds: u64,
+    o: &SimOptions,
+) -> Result<crate::tag::JobSpec> {
+    let builder = match flavor {
+        "ring" => topo::distributed(trainers, Backend::P2p),
+        _ => topo::classical(trainers, Backend::P2p),
+    };
+    let mut b = builder
+        .name("rsm")
+        .rounds(rounds)
+        .set("lr", Json::Num(o.lr))
+        .set("local_steps", o.local_steps)
+        .set("seed", o.seed);
+    match flavor {
+        "sync" | "ring" => {}
+        "quorum" => b = b.set("quorum", Json::Num(0.75)),
+        "async" | "fedbuff" => b = b.set("aggregation", "fedbuff").set("buffer_k", 2usize),
+        other => anyhow::bail!("unknown resume flavor '{other}' (sync|quorum|async|ring)"),
+    }
+    Ok(b.build())
+}
+
+/// The crash-resilience headline (`flame resume`): run a job of the given
+/// `flavor` (see [`resume_spec`]) with round-boundary checkpointing and a
+/// scripted controller kill at boundary `kill_at`, then resume it from
+/// the journaled checkpoint under its original id — and run the same job
+/// unkilled as the oracle. The two final reports must match byte for
+/// byte (`rust/tests/resume.rs` sweeps every boundary and flavor; this
+/// scenario is the demo-sized single kill).
 pub fn run_resume(
+    flavor: &str,
     trainers: usize,
     rounds: u64,
     kill_at: u64,
@@ -442,19 +482,11 @@ pub fn run_resume(
         (1..rounds).contains(&kill_at),
         "kill_at must be a round boundary in 1..rounds"
     );
-    let spec = || {
-        topo::classical(trainers, Backend::P2p)
-            .name("rsm")
-            .rounds(rounds)
-            .set("lr", Json::Num(o.lr))
-            .set("local_steps", o.local_steps)
-            .set("seed", o.seed)
-            .build()
-    };
+    let spec = || resume_spec(flavor, trainers, rounds, o);
 
     // oracle: same job, checkpointing armed, never killed
     let mut m = JobManager::new(Arc::new(Store::in_memory()));
-    m.submit(spec(), o.job_options().with_ckpt(CkptPolicy::every_round()))?;
+    m.submit(spec()?, o.job_options().with_ckpt(CkptPolicy::every_round()))?;
     let r = m.run_fleet(runners)?;
     anyhow::ensure!(r.completed == 1, "oracle run failed: {}", r.summary());
     let oracle_line = r.jobs[0].line();
@@ -462,22 +494,152 @@ pub fn run_resume(
     // kill at the boundary, then resume over the same store
     let store = Arc::new(Store::in_memory());
     let mut m = JobManager::new(store.clone());
-    let id = m.submit(spec(), o.job_options().with_ckpt(CkptPolicy::kill_at(kill_at)))?;
+    let id = m.submit(spec()?, o.job_options().with_ckpt(CkptPolicy::kill_at(kill_at)))?;
     let r = m.run_fleet(runners)?;
     anyhow::ensure!(r.failed == 1, "injected kill did not fire: {}", r.summary());
     let ck = checkpoint::load_latest(&store, &id)?
         .ok_or_else(|| anyhow::anyhow!("no checkpoint survived the kill"))?;
     let ckpt_round = ck.round;
+    let ckpt_flavor = ck.flavor.clone();
     let mut m = JobManager::new(store);
     m.resume(&id, o.job_options().with_ckpt(CkptPolicy::every_round()))?;
     let r = m.run_fleet(runners)?;
     anyhow::ensure!(r.completed == 1, "resumed run failed: {}", r.summary());
     Ok(ResumeRun {
         job: id,
+        flavor: ckpt_flavor,
         kill_at,
         ckpt_round,
         oracle_line,
         resumed_line: r.jobs[0].line(),
+    })
+}
+
+/// Outcome of [`run_resume_fleet`]: the restarted manager's resumable
+/// listing plus oracle / resumed per-job report lines (sorted by job id)
+/// for byte comparison.
+pub struct ResumeFleet {
+    /// `flame resume --list` view of the orphaned fleet
+    /// ([`crate::controlplane::ResumableJob::line`] per job).
+    pub listing: Vec<String>,
+    pub resumed_ids: Vec<String>,
+    pub oracle_lines: Vec<String>,
+    pub resumed_lines: Vec<String>,
+}
+
+impl ResumeFleet {
+    /// Fleet-wide resume determinism held: every resumed job's report is
+    /// byte-identical to its oracle.
+    pub fn matched(&self) -> bool {
+        !self.oracle_lines.is_empty() && self.oracle_lines == self.resumed_lines
+    }
+}
+
+/// Fleet-wide crash recovery (`flame resume --all`): a mixed-flavor fleet
+/// — classical sync, 3-tier hierarchical, partial-quorum, async FedBuff
+/// and ring jobs, cycling by submission index modulo 5 — dies wholesale
+/// (every job's controller killed at its first committed boundary), a
+/// fresh manager scans the journal and re-admits everything through
+/// [`crate::controlplane::JobManager::resume_all`], and the drained fleet
+/// must byte-match the never-killed oracle fleet job for job.
+///
+/// The synchronous harness journals each scripted kill as a terminal
+/// failure; a real manager outage dies *with* its workers, leaving the
+/// last journaled phase at `running` — so after the kill run this
+/// scenario rewrites the victims' `job_state` to model the outage before
+/// handing the store to the restarted manager.
+pub fn run_resume_fleet(
+    jobs: usize,
+    runners: usize,
+    o: &SimOptions,
+) -> Result<ResumeFleet> {
+    use crate::controlplane::{CkptPolicy, JobManager};
+    anyhow::ensure!(jobs >= 1, "run_resume_fleet needs at least 1 job");
+    let spec_for = |i: usize| -> (crate::tag::JobSpec, u64) {
+        let seed = o.seed + i as u64;
+        let common = |b: crate::topo::TopoBuilder, rounds: u64| {
+            b.rounds(rounds)
+                .set("lr", Json::Num(o.lr))
+                .set("local_steps", o.local_steps)
+                .set("seed", seed)
+        };
+        let spec = match i % 5 {
+            0 => common(topo::classical(4, Backend::P2p).name("rfs"), 3).build(),
+            1 => common(topo::hierarchical(6, 2, Backend::P2p).name("rfh"), 2).build(),
+            2 => common(topo::classical(4, Backend::P2p).name("rfq"), 3)
+                .set("quorum", Json::Num(0.75))
+                .build(),
+            3 => common(topo::classical(3, Backend::P2p).name("rfa"), 3)
+                .set("aggregation", "fedbuff")
+                .set("buffer_k", 2usize)
+                .build(),
+            _ => common(topo::distributed(3, Backend::P2p).name("rfr"), 3).build(),
+        };
+        (spec, seed)
+    };
+    let opts_for = |seed: u64| {
+        let mut opts = o.job_options();
+        opts.data_seed = seed;
+        opts
+    };
+    // job ids are "{name}-{counter}" with a 1-based submission counter, so
+    // the per-job seed is recoverable from the id alone — which is all the
+    // restarted manager has (options are live objects, never journaled)
+    let seed_of = |id: &str| -> u64 {
+        id.rsplit_once('-')
+            .and_then(|(_, n)| n.parse::<u64>().ok())
+            .map(|c| o.seed + c.saturating_sub(1))
+            .unwrap_or(o.seed)
+    };
+    let lines_by_id = |r: &crate::controlplane::FleetReport| -> Vec<String> {
+        let mut v: Vec<(String, String)> =
+            r.jobs.iter().map(|j| (j.job.clone(), j.line())).collect();
+        v.sort();
+        v.into_iter().map(|(_, line)| line).collect()
+    };
+
+    // oracle fleet: checkpointing armed, nothing killed
+    let mut m = JobManager::new(Arc::new(Store::in_memory()));
+    for i in 0..jobs {
+        let (spec, seed) = spec_for(i);
+        m.submit(spec, opts_for(seed).with_ckpt(CkptPolicy::every_round()))?;
+    }
+    let r = m.run_fleet(runners)?;
+    anyhow::ensure!(r.completed == jobs, "oracle fleet failed: {}", r.summary());
+    let oracle_lines = lines_by_id(&r);
+
+    // the outage: every job's controller dies at its first committed
+    // boundary (async jobs: first committed buffer version)
+    let store = Arc::new(Store::in_memory());
+    let mut m = JobManager::new(store.clone());
+    let mut ids = Vec::with_capacity(jobs);
+    for i in 0..jobs {
+        let (spec, seed) = spec_for(i);
+        ids.push(m.submit(spec, opts_for(seed).with_ckpt(CkptPolicy::kill_at(1)))?);
+    }
+    let r = m.run_fleet(runners)?;
+    anyhow::ensure!(r.failed == jobs, "fleet-wide kill did not fire: {}", r.summary());
+    for id in &ids {
+        store.put("job_state", id, Json::from("running"))?;
+    }
+
+    // restart: list, re-admit everything, drain, compare
+    let mut m = JobManager::new(store);
+    let listing: Vec<String> = m.resumable()?.iter().map(|j| j.line()).collect();
+    let resumed_ids =
+        m.resume_all(|j| opts_for(seed_of(&j.id)).with_ckpt(CkptPolicy::every_round()))?;
+    anyhow::ensure!(
+        resumed_ids.len() == jobs,
+        "resume_all re-admitted {} of {jobs} jobs",
+        resumed_ids.len()
+    );
+    let r = m.run_fleet(runners)?;
+    anyhow::ensure!(r.completed == jobs, "resumed fleet failed: {}", r.summary());
+    Ok(ResumeFleet {
+        listing,
+        resumed_ids,
+        oracle_lines,
+        resumed_lines: lines_by_id(&r),
     })
 }
 

@@ -581,7 +581,7 @@ mod tests {
             // would collide with the stale-epoch substring probe below
             for round in 1..=3u64 {
                 sink.publish("w0", Json::from(round as i64));
-                sink.commit(round, 0, Json::from("g"), Json::Null, Json::Null)
+                sink.commit(round, 0, Json::from("g"), Json::Null, Json::Null, &[])
                     .unwrap();
             }
             // the sink's GC tombstoned epochs 1-2; compaction drops their

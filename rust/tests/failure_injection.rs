@@ -214,7 +214,7 @@ fn torn_checkpoint_tail_restarts_from_the_previous_epoch() {
         let sink = CkptSink::new("tj", CkptPolicy::every_round(), true);
         sink.bind_store(store.clone());
         sink.publish("w0", Json::Str("r1".into()));
-        sink.commit(1, 0, Json::Str("g1".into()), Json::Null, Json::Null)
+        sink.commit(1, 0, Json::Str("g1".into()), Json::Null, Json::Null, &[])
             .unwrap();
         store.flush().unwrap();
     }
@@ -236,11 +236,69 @@ fn torn_checkpoint_tail_restarts_from_the_previous_epoch() {
     let sink = CkptSink::new("tj", CkptPolicy::every_round(), true);
     sink.bind_store(store.clone());
     sink.publish("w0", Json::Str("r2".into()));
-    sink.commit(2, 1, Json::Str("g2".into()), Json::Null, Json::Null)
+    sink.commit(2, 1, Json::Str("g2".into()), Json::Null, Json::Null, &[])
         .unwrap();
     drop(store);
     let store = Arc::new(Store::open(&path).unwrap());
     let ck = load_latest(&store, "tj").unwrap().unwrap();
     assert_eq!((ck.round, ck.cursor), (2, 1));
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Harsher variant of the torn-tail test: the crash lands *inside* the
+/// commit batch, after the epoch's data records hit the journal as
+/// complete, parseable lines but before the head record. The epoch-2
+/// records are individually intact — only head-last ordering makes them
+/// invisible. Restart must resume from epoch 1, and a fresh commit must
+/// cleanly overwrite the orphaned records.
+#[test]
+fn tear_inside_commit_batch_discards_the_partial_epoch() {
+    let path =
+        std::env::temp_dir().join(format!("flame-batch-tear-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    {
+        let store = Arc::new(Store::open(&path).unwrap());
+        let sink = CkptSink::new("tj", CkptPolicy::every_round(), true);
+        sink.bind_store(store.clone());
+        sink.publish("w0", Json::Str("r1".into()));
+        sink.commit(1, 0, Json::Str("g1".into()), Json::Null, Json::Null, &[])
+            .unwrap();
+        store.flush().unwrap();
+    }
+    // crash mid-batch: epoch 2's meta, worker and global records are all
+    // fully written lines; the head record — last in the batch — is torn
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(
+            concat!(
+                "{\"c\":\"job_ckpt\",\"k\":\"tj/0000000000000002/meta\",",
+                "\"v\":{\"epoch\":\"0000000000000002\",\"round\":\"0000000000000002\",",
+                "\"cursor\":\"0000000000000001\",\"flavor\":\"sync\",\"workers\":[\"w0\"],",
+                "\"landed\":[]}}\n",
+                "{\"c\":\"job_ckpt\",\"k\":\"tj/0000000000000002/w/w0\",\"v\":\"r2\"}\n",
+                "{\"c\":\"job_ckpt\",\"k\":\"tj/0000000000000002/global\",\"v\":\"g2\"}\n",
+                "{\"c\":\"job_ckpt\",\"k\":\"tj/head\",\"v\":{\"ep"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    }
+    let store = Arc::new(Store::open(&path).unwrap());
+    let ck = load_latest(&store, "tj").unwrap().unwrap();
+    assert_eq!(ck.round, 1, "orphaned epoch-2 records leaked into the head");
+    assert_eq!(ck.workers["w0"], Json::Str("r1".into()));
+    // the next commit overwrites the orphan keys and moves the head
+    let sink = CkptSink::new("tj", CkptPolicy::every_round(), true);
+    sink.bind_store(store.clone());
+    sink.publish("w0", Json::Str("r2'".into()));
+    sink.commit(2, 1, Json::Str("g2'".into()), Json::Null, Json::Null, &["w0".to_string()])
+        .unwrap();
+    drop(store);
+    let store = Arc::new(Store::open(&path).unwrap());
+    let ck = load_latest(&store, "tj").unwrap().unwrap();
+    assert_eq!((ck.round, ck.cursor), (2, 1));
+    assert_eq!(ck.workers["w0"], Json::Str("r2'".into()));
+    assert_eq!(ck.landed, vec!["w0".to_string()]);
     let _ = std::fs::remove_file(&path);
 }

@@ -482,6 +482,138 @@ fn selector_checkpoint_resumes_the_selection_stream() {
 }
 
 #[test]
+fn fault_plan_text_form_roundtrips_and_queries_agree() {
+    use flame::controlplane::checkpoint::{FaultEvent, FaultPlan, FaultVictim};
+    check(
+        "fault-plan-roundtrip",
+        239,
+        200,
+        |r: &mut Rng| {
+            let n = r.below(5) as usize;
+            let events: Vec<FaultEvent> = (0..n)
+                .map(|_| FaultEvent {
+                    boundary: r.below(9),
+                    victim: if r.f64() < 0.4 {
+                        FaultVictim::Controller
+                    } else {
+                        FaultVictim::Worker(format!("job-trainer-{}", r.below(4)))
+                    },
+                })
+                .collect();
+            (FaultPlan { events }, r.below(9), r.below(9))
+        },
+        |(plan, a, b)| {
+            // text-form identity, including the empty plan ("" ⇄ no events)
+            let text = plan.dump();
+            let back = FaultPlan::parse(&text).map_err(|e| format!("{e:#}"))?;
+            ensure(&back == plan, format!("'{text}' did not round-trip"))?;
+            // the CLI accepts spaces as separators too
+            let spaced = FaultPlan::parse(&text.replace(',', " ")).map_err(|e| format!("{e:#}"))?;
+            ensure(&spaced == plan, "space-separated form diverged")?;
+            // point queries agree with the raw event list
+            for e in &plan.events {
+                let hit = match &e.victim {
+                    FaultVictim::Controller => plan.kills_controller_at(e.boundary),
+                    FaultVictim::Worker(w) => plan.kills_worker_at(w, e.boundary),
+                };
+                ensure(hit, format!("event {e:?} invisible to its point query"))?;
+            }
+            // the range query is the point query widened to skipped
+            // boundaries: a width-1 window is exactly the point query
+            ensure(
+                plan.controller_kill_between(*b, *b + 1) == plan.kills_controller_at(*b + 1),
+                "width-1 range query disagrees with point query",
+            )?;
+            let (lo, hi) = (*a.min(b), *a.max(b) + 1);
+            let want = plan.events.iter().any(|e| {
+                e.victim == FaultVictim::Controller && e.boundary > lo && e.boundary <= hi
+            });
+            ensure(
+                plan.controller_kill_between(lo, hi) == want,
+                format!("range ({lo}, {hi}] query wrong for '{text}'"),
+            )
+        },
+    );
+}
+
+#[test]
+fn checkpoint_epoch_chain_roundtrips_through_the_journal() {
+    // The universal-resume contract at the store layer: whatever mix of
+    // flavor, commit stride (async versions skip boundaries), landed
+    // census, and incremental-chain bound a job commits with, load_latest
+    // must hand back exactly the last committed boundary — workers,
+    // global, census and all — after delta replay and GC.
+    use flame::controlplane::checkpoint::{load_latest, CkptPolicy, CkptSink};
+    use flame::store::Store;
+    use std::sync::Arc;
+    check(
+        "ckpt-chain-roundtrip",
+        241,
+        60,
+        |r: &mut Rng| {
+            let flavor = ["sync", "async", "ring"][r.below(3) as usize];
+            (flavor, r.below(4), 1 + r.below(4) as usize, 1 + r.below(10), r.next_u64())
+        },
+        |&(flavor, full_every, n_workers, n_epochs, seed)| {
+            let mut r = Rng::new(seed);
+            let store = Arc::new(Store::in_memory());
+            let policy = CkptPolicy::every_round().with_full_every(full_every);
+            let sink = CkptSink::new("pj", policy, true);
+            sink.bind_store(store.clone());
+            sink.set_flavor(flavor);
+            let ids: Vec<String> = (0..n_workers).map(|i| format!("pj-trainer-{i}")).collect();
+            let mut round = 0u64;
+            let mut last = None;
+            for cursor in 0..n_epochs {
+                // async versions jump boundaries when the drain buffers
+                // past the due version; sync/ring advance one at a time
+                round += if flavor == "async" { 1 + r.below(3) } else { 1 };
+                for (i, id) in ids.iter().enumerate() {
+                    // worker 0 never changes — the delta encoder's
+                    // same-tag path must survive replay too
+                    let snap = if i == 0 {
+                        Json::from("steady")
+                    } else {
+                        Json::from(format!("{id}@{round}"))
+                    };
+                    sink.publish(id, snap);
+                }
+                let global = Json::Arr(
+                    (0..6).map(|i| Json::Num(round as f64 + i as f64 * 0.5)).collect(),
+                );
+                let mut landed: Vec<String> =
+                    ids.iter().filter(|_| r.f64() < 0.7).cloned().collect();
+                sink.commit(round, cursor, global.clone(), Json::Null, Json::Null, &landed)
+                    .map_err(|e| format!("{e:#}"))?;
+                landed.sort();
+                last = Some((round, cursor, global, landed));
+            }
+            let (round, cursor, global, landed) = last.expect("at least one epoch");
+            let ck = load_latest(&store, "pj")
+                .map_err(|e| format!("{e:#}"))?
+                .ok_or_else(|| "no checkpoint after commits".to_string())?;
+            ensure(ck.round == round, format!("round {} != {round}", ck.round))?;
+            ensure(ck.cursor == cursor, format!("cursor {} != {cursor}", ck.cursor))?;
+            ensure(ck.flavor == flavor, format!("flavor '{}' != '{flavor}'", ck.flavor))?;
+            ensure(ck.landed == landed, format!("census {:?} != {landed:?}", ck.landed))?;
+            ensure(ck.global == global, "global state diverged through delta replay")?;
+            for (i, id) in ids.iter().enumerate() {
+                let want = if i == 0 {
+                    Json::from("steady")
+                } else {
+                    Json::from(format!("{id}@{round}"))
+                };
+                ensure(
+                    ck.workers.get(id) == Some(&want),
+                    format!("worker '{id}' snapshot diverged"),
+                )?;
+            }
+            ensure(ck.workers.len() == ids.len(), "phantom worker snapshots")
+        },
+    );
+}
+
+#[test]
 fn fedbalancer_checkpoint_resumes_the_plan_stream() {
     use flame::select::FedBalancer;
     check(

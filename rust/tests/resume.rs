@@ -2,22 +2,27 @@
 //! resumed from its checkpoint must reproduce the unkilled run byte for
 //! byte — per-round metrics, byte counters, virtual time, worker census,
 //! everything in the report line. The suite drives the full path through
-//! the store: submit -> kill -> reopen -> resume under the original id.
+//! the store: submit -> kill -> reopen -> resume under the original id —
+//! across every checkpointed flavor (full-quorum sync, partial-quorum
+//! sync, async FedBuff version barriers, delegate-committed rings), for
+//! scripted worker kills as well as controller kills, and fleet-wide
+//! through `JobManager::resume_all`.
 //!
 //! `FLAME_KILL_POINT=early|mid|late` narrows the boundary sweep to one
-//! kill point (the CI kill-matrix shards on it); unset runs them all.
+//! kill point and `FLAME_RESUME_FLAVOR=sync|sync-partial-quorum|fedbuff|
+//! ring` narrows the flavor matrix (the CI kill-matrix shards on both);
+//! unset runs everything.
 
 use std::sync::Arc;
 
 use flame::channel::Backend;
 use flame::control::{Controller, JobOptions};
-use flame::controlplane::checkpoint::load_latest;
+use flame::controlplane::checkpoint::{load_latest, FaultPlan};
 use flame::controlplane::{CkptPolicy, JobManager};
 use flame::data::Partition;
 use flame::json::Json;
-use flame::roles::sdk::{chain_program, trainer_chain, Tasklet, TrainerCtx};
-use flame::roles::ProgramFactory;
 use flame::runtime::{ComputeTimeModel, MockCompute};
+use flame::sim::{self, SimOptions};
 use flame::store::Store;
 use flame::tag::{delta::add_tier_delta, JobSpec, TopologyEvent};
 use flame::topo;
@@ -75,6 +80,133 @@ fn kill_points(rounds: u64) -> Vec<u64> {
         Some("late") => vec![rounds - 1],
         _ => (1..rounds).collect(),
     }
+}
+
+/// The flavor axis of the kill matrix (`sim::resume_spec` names):
+/// `FLAME_RESUME_FLAVOR` narrows to one for CI sharding.
+fn resume_flavors() -> Vec<&'static str> {
+    match std::env::var("FLAME_RESUME_FLAVOR").ok().as_deref() {
+        Some("sync") => vec!["sync"],
+        Some("sync-partial-quorum") | Some("quorum") => vec!["quorum"],
+        Some("fedbuff") | Some("async") => vec!["async"],
+        Some("ring") => vec!["ring"],
+        _ => vec!["sync", "quorum", "async", "ring"],
+    }
+}
+
+/// Scenario options sized for a matrix of dozens of runs: the logistic
+/// head, tiny shards.
+fn sim_opts() -> SimOptions {
+    let mut o = SimOptions::mock();
+    o.compute = Arc::new(MockCompute::new(7_850, 8, 16));
+    o.per_shard = 16;
+    o.test_n = 32;
+    o.local_steps = 1;
+    o.sigma = 1.0;
+    o
+}
+
+/// The universal-recovery acceptance matrix: every checkpointed flavor ×
+/// every kill point, each resumed run byte-compared against its
+/// armed-but-unkilled oracle. Partial-quorum jobs exercise the boundary
+/// drain (a straggler's upload is in flight at every boundary), async
+/// jobs the FedBuff version barrier, ring jobs the delegate-committed
+/// epoch protocol.
+#[test]
+fn every_flavor_resumes_byte_identical_at_every_kill_point() {
+    let rounds = 4u64;
+    let o = sim_opts();
+    for flavor in resume_flavors() {
+        for k in kill_points(rounds) {
+            let r = sim::run_resume(flavor, 4, rounds, k, 2, &o)
+                .unwrap_or_else(|e| panic!("{flavor} kill at {k}: {e:#}"));
+            let want_tag = match flavor {
+                "async" => "async",
+                "ring" => "ring",
+                _ => "sync",
+            };
+            assert_eq!(r.flavor, want_tag, "{flavor} kill at {k}: wrong epoch tag");
+            assert!(
+                r.ckpt_round >= k,
+                "{flavor} kill at {k}: checkpoint stuck at {}",
+                r.ckpt_round
+            );
+            assert!(
+                r.matched(),
+                "{flavor} kill at {k} diverges:\n oracle  {}\n resumed {}",
+                r.oracle_line,
+                r.resumed_line
+            );
+        }
+    }
+}
+
+/// Fault plans script *worker* deaths too: a plan naming one trainer
+/// takes it down at its round-2 boundary upload — after its snapshot
+/// publish, before its send — with no custom program involved. The job
+/// fails, the boundary-1 checkpoint survives, and the resumed run
+/// byte-matches the armed oracle.
+#[test]
+fn fault_plan_worker_kill_fails_the_job_and_resume_recovers() {
+    let spec = || {
+        topo::classical(4, Backend::P2p)
+            .name("wk")
+            .rounds(4)
+            .set("lr", Json::Num(0.1))
+            .set("local_steps", 1usize)
+            .set("seed", 9u64)
+            .build()
+    };
+    let oracle = {
+        let mut m = JobManager::new(Arc::new(Store::in_memory()));
+        m.submit(spec(), small_opts(9).with_ckpt(CkptPolicy::every_round())).unwrap();
+        let r = m.run_fleet(2).unwrap();
+        assert_eq!(r.completed, 1, "{}", r.summary());
+        r.jobs[0].line()
+    };
+
+    let store = Arc::new(Store::in_memory());
+    let mut m = JobManager::new(store.clone());
+    let plan = FaultPlan::parse("wk-trainer-1@2").unwrap();
+    let id = m
+        .submit(spec(), small_opts(9).with_ckpt(CkptPolicy::every_round().with_faults(plan)))
+        .unwrap();
+    let r = m.run_fleet(2).unwrap();
+    assert_eq!(r.failed, 1, "worker kill did not fire: {}", r.summary());
+    let ck = load_latest(&store, &id)
+        .unwrap()
+        .expect("boundary-1 checkpoint committed before the worker died");
+    assert_eq!(ck.round, 1);
+
+    let mut m2 = JobManager::new(store);
+    m2.resume(&id, small_opts(9).with_ckpt(CkptPolicy::every_round())).unwrap();
+    let r2 = m2.run_fleet(2).unwrap();
+    assert_eq!(r2.completed, 1, "{}", r2.summary());
+    assert_eq!(r2.jobs[0].line(), oracle, "worker-kill resume diverges");
+}
+
+/// Fleet-wide outage and recovery: a 10-job mixed-flavor fleet dies
+/// wholesale, a fresh manager lists every orphan (with flavor + last
+/// epoch) and `resume_all` re-admits the lot through the normal
+/// admission path — and the drained fleet byte-matches the never-killed
+/// oracle fleet, job for job.
+#[test]
+fn fleet_outage_resume_all_readmits_everything_byte_identical() {
+    let o = sim_opts();
+    let f = sim::run_resume_fleet(10, 2, &o).unwrap();
+    assert_eq!(f.listing.len(), 10, "listing: {:?}", f.listing);
+    assert_eq!(f.resumed_ids.len(), 10);
+    // the listing names every flavor in the mix with a committed epoch
+    let all = f.listing.join("\n");
+    for tag in ["flavor=sync", "flavor=async", "flavor=ring", "epoch="] {
+        assert!(all.contains(tag), "missing {tag} in listing:\n{all}");
+    }
+    assert!(
+        f.matched(),
+        "resumed fleet diverges:\n oracle  {:#?}\n resumed {:#?}",
+        f.oracle_lines,
+        f.resumed_lines
+    );
 }
 
 /// The acceptance sweep: kill at every round boundary, resume from the
@@ -255,16 +387,15 @@ fn fleet_survives_one_job_killed_and_resumed_mid_fleet() {
     );
 }
 
-/// Asynchronous FedBuff has no full-barrier boundary, so the checkpoint
-/// gate stays closed — a crashed async job resumes *from scratch* under
-/// its original id and (on a single runner, where async arrival order is
-/// deterministic) reproduces the unkilled run byte for byte.
+/// Asynchronous FedBuff checkpoints at buffer-version boundaries now: the
+/// aggregator withholds replies while it drains in-flight uploads, commits
+/// the epoch tagged `async`, then replays the boundary broadcast on
+/// resume. A controller killed mid-job leaves a version-barrier epoch
+/// behind, and the resumed run byte-matches the armed oracle.
 #[test]
-fn async_job_restarts_from_scratch_after_a_crash() {
-    let benign: ProgramFactory =
-        Arc::new(|env, _b| Ok(chain_program(trainer_chain(), TrainerCtx::new(env)?)));
+fn async_job_resumes_from_a_version_barrier_after_a_crash() {
     let spec = || {
-        let mut s = topo::classical(3, Backend::P2p)
+        topo::classical(3, Backend::P2p)
             .name("az")
             .rounds(3)
             .set("lr", Json::Num(0.1))
@@ -272,61 +403,32 @@ fn async_job_restarts_from_scratch_after_a_crash() {
             .set("seed", 5u64)
             .set("aggregation", "fedbuff")
             .set("buffer_k", 2usize)
-            .build();
-        // the binding lives on the spec so the resumed run (which reloads
-        // the spec from the store) resolves the same program name
-        s.roles.iter_mut().find(|r| r.name == "trainer").unwrap().program =
-            Some("mortal-trainer".into());
-        s
+            .build()
     };
 
     let oracle = {
         let mut m = JobManager::new(Arc::new(Store::in_memory()));
-        m.submit(spec(), small_opts(5).with_program("mortal-trainer", benign.clone()))
-            .unwrap();
+        m.submit(spec(), small_opts(5).with_ckpt(CkptPolicy::every_round())).unwrap();
         let r = m.run_fleet(1).unwrap();
         assert_eq!(r.completed, 1, "{}", r.summary());
         r.jobs[0].line()
     };
 
-    // the same program name, but one trainer crashes on its second upload
-    let dying: ProgramFactory = Arc::new(|env, _b| {
-        let ctx = TrainerCtx::new(env)?;
-        let mut chain = trainer_chain();
-        let mut uploads = 0u32;
-        chain.insert_before(
-            "upload",
-            Tasklet::new("maybe_die", move |c: &mut TrainerCtx| {
-                if c.env.cfg.id == "az-trainer-0" {
-                    uploads += 1;
-                    if uploads == 2 {
-                        anyhow::bail!("injected async trainer crash");
-                    }
-                }
-                Ok(())
-            }),
-        )?;
-        Ok(chain_program(chain, ctx))
-    });
     let store = Arc::new(Store::in_memory());
     let mut m = JobManager::new(store.clone());
     let id = m
-        .submit(
-            spec(),
-            small_opts(5)
-                .with_program("mortal-trainer", dying)
-                .with_ckpt(CkptPolicy::every_round()),
-        )
+        .submit(spec(), small_opts(5).with_ckpt(CkptPolicy::kill_at(1)))
         .unwrap();
     let r = m.run_fleet(1).unwrap();
     assert_eq!(r.failed, 1, "{}", r.summary());
-    // async flavor never passed the checkpoint gate: nothing committed
-    assert!(load_latest(&store, &id).unwrap().is_none());
+    // the version barrier committed before the kill fired
+    let ck = load_latest(&store, &id).unwrap().expect("async epoch committed");
+    assert_eq!(ck.flavor, "async");
+    assert!(ck.round >= 1, "barrier version: {}", ck.round);
 
     let mut m2 = JobManager::new(store);
-    m2.resume(&id, small_opts(5).with_program("mortal-trainer", benign))
-        .unwrap();
+    m2.resume(&id, small_opts(5).with_ckpt(CkptPolicy::every_round())).unwrap();
     let r2 = m2.run_fleet(1).unwrap();
     assert_eq!(r2.completed, 1, "{}", r2.summary());
-    assert_eq!(r2.jobs[0].line(), oracle, "async restart-from-0 diverges");
+    assert_eq!(r2.jobs[0].line(), oracle, "async version-barrier resume diverges");
 }
